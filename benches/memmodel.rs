@@ -1,0 +1,38 @@
+//! Memory-model benches: the capacity queries Auto-Tempo runs in its
+//! inner search loop must be cheap (they are pure arithmetic).
+
+use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
+use tempo::memmodel::{layer_activation_bytes, max_batch, ModelFootprint};
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let large512 = ModelConfig::bert_large().with_seq_len(512);
+
+    h.bench("layer_inventory/bert-large-s512", || {
+        std::hint::black_box(layer_activation_bytes(&large512, 8, OptimizationSet::full()));
+    });
+
+    h.bench("breakdown/bert-large-s512", || {
+        let fp = ModelFootprint::new(large512.clone(), Technique::Tempo);
+        std::hint::black_box(fp.breakdown(8));
+    });
+
+    h.bench("max_batch_search/bert-large-s512-2080ti", || {
+        std::hint::black_box(max_batch(&large512, Technique::Tempo, Gpu::Rtx2080Ti));
+    });
+
+    h.bench("max_batch_search/all-techniques-all-gpus", || {
+        for tech in Technique::all() {
+            for gpu in Gpu::all() {
+                std::hint::black_box(max_batch(&large512, tech, gpu));
+            }
+        }
+    });
+
+    h.bench("table2/full-regeneration", || {
+        std::hint::black_box(tempo::memmodel::table2());
+    });
+
+    h.write_csv("bench_results/bench_memmodel.csv").unwrap();
+}

@@ -1,0 +1,23 @@
+//! Regenerate EVERY paper table/figure (the `cargo bench` entry point
+//! for the reproduction harness) and time each generator.
+//!
+//! Output CSVs land in bench_results/<id>.csv; the rendered tables go
+//! to stdout so `cargo bench | tee bench_output.txt` captures the whole
+//! reproduction in one artifact.
+
+use tempo::report::{run_experiment, ALL_EXPERIMENTS};
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    for e in ALL_EXPERIMENTS {
+        let table = run_experiment(e.id).unwrap();
+        println!("\n[{} — {}]", e.paper_ref, e.description);
+        println!("{}", table.render());
+        table.write_csv(e.id).unwrap();
+        h.bench(&format!("generate/{}", e.id), || {
+            std::hint::black_box(run_experiment(e.id).unwrap());
+        });
+    }
+    h.write_csv("bench_results/bench_paper_tables.csv").unwrap();
+}

@@ -1,0 +1,41 @@
+//! Perf-model benches: roofline evaluation and full figure sweeps.
+
+use tempo::config::{Gpu, ModelConfig, Technique};
+use tempo::perfmodel::{step_time, throughput_at_max_batch};
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let large = ModelConfig::bert_large().with_seq_len(512);
+
+    h.bench("step_time/single-eval", || {
+        std::hint::black_box(step_time(&large, Technique::Tempo, &Gpu::V100.spec(), 4));
+    });
+
+    h.bench("throughput_at_max_batch/one-point", || {
+        std::hint::black_box(throughput_at_max_batch(&large, Technique::Tempo, Gpu::V100));
+    });
+
+    h.bench("fig5/full-sweep", || {
+        for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
+            for s in [128usize, 512] {
+                let cfg = ModelConfig::bert_large().with_seq_len(s);
+                for tech in Technique::all() {
+                    std::hint::black_box(throughput_at_max_batch(&cfg, tech, gpu));
+                }
+            }
+        }
+    });
+
+    h.bench("fig8/seq-sweep", || {
+        let cfg12 = ModelConfig::bert_large().with_layers(12);
+        for s in [512usize, 1024, 1536, 2048, 2560, 3072] {
+            let cfg = cfg12.with_seq_len(s);
+            for tech in Technique::all() {
+                std::hint::black_box(throughput_at_max_batch(&cfg, tech, Gpu::A100));
+            }
+        }
+    });
+
+    h.write_csv("bench_results/bench_perfmodel.csv").unwrap();
+}

@@ -1,0 +1,55 @@
+//! End-to-end L3 hot-path bench: real PJRT training-step latency per
+//! artifact variant, plus the data pipeline and the host↔device
+//! conversion costs in isolation. This is the profile the §Perf pass
+//! iterates on (see EXPERIMENTS.md §Perf).
+
+use tempo::config::TrainingConfig;
+use tempo::coordinator::{Trainer, TrainerOptions};
+use tempo::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
+use tempo::runtime::{ArtifactIndex, Runtime};
+use tempo::util::BenchHarness;
+
+fn main() {
+    let Ok(index) = ArtifactIndex::load("artifacts") else {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping runtime bench");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut h = BenchHarness::heavy();
+
+    // data pipeline alone
+    let corpus = Corpus::new(CorpusConfig::default(), 1);
+    let mut batcher = MlmBatcher::new(corpus, MlmConfig::default(), 8, 64, 2);
+    h.bench("data/mlm-batch-8x64", || {
+        std::hint::black_box(batcher.next_batch().unwrap());
+    });
+
+    // full train step per variant (compile once via Trainer construction)
+    for name in ["bert_tiny_baseline", "bert_tiny_checkpoint", "bert_tiny_tempo"] {
+        let artifact = index.open(name).unwrap();
+        let cfg = TrainingConfig { artifact: name.into(), steps: 1, ..Default::default() };
+        let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions::default()).unwrap();
+        h.bench(&format!("train_step/{name}"), || {
+            trainer.step().unwrap();
+        });
+    }
+
+    // the bigger e2e model
+    if let Ok(artifact) = index.open("bert_mini_tempo") {
+        let cfg = TrainingConfig { artifact: "bert_mini_tempo".into(), steps: 1, ..Default::default() };
+        let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions::default()).unwrap();
+        h.bench("train_step/bert_mini_tempo", || {
+            trainer.step().unwrap();
+        });
+    }
+
+    // eval step (params only, no optimizer)
+    let artifact = index.open("bert_tiny_tempo").unwrap();
+    let cfg = TrainingConfig { artifact: "bert_tiny_tempo".into(), steps: 1, ..Default::default() };
+    let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions::default()).unwrap();
+    h.bench("eval_step/bert_tiny_tempo", || {
+        trainer.evaluate().unwrap();
+    });
+
+    h.write_csv("bench_results/bench_runtime_step.csv").unwrap();
+}

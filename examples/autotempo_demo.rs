@@ -1,0 +1,38 @@
+//! Auto-Tempo (§5.2) demo: the coarse profile-then-apply pass and the
+//! fine-grained minimal-subset search, across a scenario matrix.
+//!
+//! Run: `cargo run --release --example autotempo_demo`
+
+use tempo::autotempo::{coarse_pass, fine_search};
+use tempo::config::{Gpu, ModelConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== coarse pass (apply-everywhere vs leave-alone) ===");
+    let scenarios = [
+        ("bert-large S=512 on 2080Ti (memory-starved)", ModelConfig::bert_large().with_seq_len(512), Gpu::Rtx2080Ti),
+        ("bert-large S=128 on A100 (memory-rich)", ModelConfig::bert_large().with_seq_len(128), Gpu::A100),
+        ("bert-tiny on A100 (trivially fits)", ModelConfig::bert_tiny(), Gpu::A100),
+        ("gpt2 S=512 on 2080Ti", ModelConfig::gpt2(), Gpu::Rtx2080Ti),
+    ];
+    for (label, cfg, gpu) in &scenarios {
+        let d = coarse_pass(cfg, *gpu);
+        println!("\n{label}");
+        println!("  decision : tempo on {}/{} layers", d.plan.applied_layers(), cfg.layers);
+        println!("  rationale: {}", d.rationale);
+        println!("  outcome  : batch {}, {:.2} seq/s", d.max_batch, d.throughput);
+    }
+
+    println!("\n=== fine-grained search (smallest sufficient layer set) ===");
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    for target in [2usize, 3, 4, 6] {
+        let d = fine_search(&cfg, Gpu::Rtx2080Ti, target);
+        println!(
+            "target batch {target}: tempo on {:>2}/{} layers → max batch {:>2}   ({})",
+            d.plan.applied_layers(),
+            cfg.layers,
+            d.max_batch,
+            d.rationale
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Interactive-ish capacity explorer: sweep models × GPUs × sequence
+//! lengths and print the max-batch table plus the Tempo memory win —
+//! the tool a practitioner would use before launching a training job.
+//!
+//! Run: `cargo run --release --example max_batch_explorer [-- --model bert-large]`
+
+use tempo::config::{Gpu, ModelConfig, Technique};
+use tempo::memmodel::{max_batch, ModelFootprint};
+use tempo::report::Table;
+use tempo::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let models: Vec<ModelConfig> = match args.get("model") {
+        Some(name) => vec![ModelConfig::preset(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?],
+        None => vec![
+            ModelConfig::bert_base(),
+            ModelConfig::bert_large(),
+            ModelConfig::gpt2(),
+            ModelConfig::roberta_large(),
+        ],
+    };
+
+    let mut t = Table::new(
+        "max batch per (model, GPU, S, technique) — analytical capacity model",
+        &["model", "gpu", "seq", "Baseline", "Checkpoint", "Tempo", "Tempo vs Baseline"],
+    );
+    for cfg in &models {
+        for gpu in Gpu::all() {
+            for s in [128usize, 512] {
+                let c = cfg.with_seq_len(s);
+                let b: Vec<usize> = Technique::all()
+                    .iter()
+                    .map(|&tech| max_batch(&c, tech, gpu).max_batch)
+                    .collect();
+                let ratio = if b[0] > 0 {
+                    format!("{:.1}×", b[2] as f64 / b[0] as f64)
+                } else if b[2] > 0 {
+                    "fits (baseline OOM)".into()
+                } else {
+                    "—".into()
+                };
+                t.row(vec![
+                    cfg.name.clone(),
+                    gpu.name().into(),
+                    s.to_string(),
+                    b[0].to_string(),
+                    b[1].to_string(),
+                    b[2].to_string(),
+                    ratio,
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // per-component breakdown for one interesting point
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    println!("breakdown: bert-large S=512 B=2 (2080Ti scale)");
+    for tech in Technique::all() {
+        let bd = ModelFootprint::new(cfg.clone(), tech).breakdown(2);
+        println!(
+            "  {:<11} total {:>6.2} GB  (acts {:>5.2} GB, states {:>5.2} GB, transient {:>5.2} GB)",
+            tech.name(),
+            bd.total() as f64 / 1e9,
+            bd.activations() as f64 / 1e9,
+            (bd.params + bd.grads + bd.optimizer) as f64 / 1e9,
+            bd.transient as f64 / 1e9,
+        );
+    }
+    t.write_csv("max_batch_explorer")?;
+    println!("CSV → bench_results/max_batch_explorer.csv");
+    Ok(())
+}

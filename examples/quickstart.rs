@@ -1,0 +1,51 @@
+//! Quickstart: the whole three-layer stack in ~40 lines.
+//!
+//! Loads the AOT-compiled Tempo BERT-tiny training step (lowered once by
+//! `make artifacts`; python never runs here), initializes parameters on
+//! the PJRT CPU client, and takes a few optimizer steps on the synthetic
+//! corpus.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tempo::config::TrainingConfig;
+use tempo::coordinator::{Trainer, TrainerOptions};
+use tempo::runtime::{ArtifactIndex, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let index = ArtifactIndex::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("available artifacts: {:?}", index.names());
+
+    let cfg = TrainingConfig {
+        artifact: "bert_tiny_tempo".into(),
+        steps: 20,
+        warmup_steps: 5,
+        peak_lr: 1e-3,
+        seed: 42,
+        eval_every: 10,
+        log_every: 5,
+    };
+    let artifact = index.open(&cfg.artifact)?;
+    println!(
+        "training {} — {} ({} layers, H={}, S={}, B={})",
+        artifact.manifest.name,
+        artifact.manifest.config.name,
+        artifact.manifest.config.layers,
+        artifact.manifest.config.hidden,
+        artifact.manifest.config.seq_len,
+        artifact.manifest.batch_size,
+    );
+
+    let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions { verbose: true, ..Default::default() })?;
+    trainer.run()?;
+
+    let m = trainer.metrics();
+    println!(
+        "\nfirst loss {:.4} → last loss {:.4} @ {:.1} seq/s",
+        m.records().first().map(|r| r.loss).unwrap_or(f64::NAN),
+        m.last_loss().unwrap_or(f64::NAN),
+        m.throughput()
+    );
+    Ok(())
+}

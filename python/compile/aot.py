@@ -1,0 +1,209 @@
+"""AOT export: lower (init / train_step / eval) to HLO *text* + manifest.
+
+HLO text — NOT ``lowered.compiler_ir().serialize()`` — is the interchange
+format: the image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+ABI (mirrored by rust/src/runtime/artifact.rs):
+
+    init : (seed:i32) → (params…, m…, v…)                 3n leaves
+    step : (params…, m…, v…, input_ids, token_type_ids,
+            attention_mask, labels, step:i32, seed:i32,
+            lr:f32) → (params…, m…, v…, loss:f32)
+    eval : (params…, input_ids, token_type_ids,
+            attention_mask, labels, seed:i32) → (loss, metric)
+
+Leaf order is jax's tree-flatten order over the nested param dict
+(sorted keys), recorded explicitly in ``manifest.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "name", p))))
+    return ".".join(parts)
+
+
+def param_spec(cfg: M.ModelConfig):
+    """(names, shapes, dtypes, treedef) in flatten order."""
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    names = [_leaf_name(p) for p, _ in flat]
+    specs = [l for _, l in flat]
+    return names, specs, treedef
+
+
+def _dtype_str(dt) -> str:
+    return jnp.dtype(dt).name
+
+
+def export_artifact(cfg: M.ModelConfig, task: str, batch_size: int,
+                    outdir: pathlib.Path, name: str) -> dict:
+    """Lower init/step/eval for one (config, task, batch) and write files."""
+    adir = outdir / name
+    adir.mkdir(parents=True, exist_ok=True)
+    names, specs, treedef = param_spec(cfg)
+    n = len(specs)
+    i32 = jnp.int32
+    scalar_i32 = jax.ShapeDtypeStruct((), i32)
+    scalar_f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    batch_struct = T.make_batch_struct(cfg, batch_size)
+    batch_order = ["input_ids", "token_type_ids", "attention_mask", "labels"]
+    batch_specs = [batch_struct[k] for k in batch_order]
+
+    def unflatten(leaves):
+        return jax.tree_util.tree_unflatten(treedef, list(leaves))
+
+    # ---- init ------------------------------------------------------------
+    init_fn = T.make_init_fn(cfg)
+
+    def init_flat(seed):
+        params, m, v = init_fn(seed)
+        return tuple(
+            jax.tree_util.tree_leaves(params)
+            + jax.tree_util.tree_leaves(m)
+            + jax.tree_util.tree_leaves(v)
+        )
+
+    init_lowered = jax.jit(init_flat, keep_unused=True).lower(scalar_i32)
+    (adir / "init.hlo.txt").write_text(to_hlo_text(init_lowered))
+
+    # ---- step ------------------------------------------------------------
+    step_fn = T.make_train_step_fn(cfg, task)
+
+    def step_flat(*args):
+        p = unflatten(args[0:n])
+        m = unflatten(args[n : 2 * n])
+        v = unflatten(args[2 * n : 3 * n])
+        ii, tt, am, lb = args[3 * n : 3 * n + 4]
+        step, seed, lr = args[3 * n + 4 :]
+        np_, nm, nv, loss = step_fn(p, m, v, ii, tt, am, lb, step, seed, lr)
+        return tuple(
+            jax.tree_util.tree_leaves(np_)
+            + jax.tree_util.tree_leaves(nm)
+            + jax.tree_util.tree_leaves(nv)
+            + [loss]
+        )
+
+    step_args = list(specs) * 3 + batch_specs + [scalar_i32, scalar_i32, scalar_f32]
+    step_lowered = jax.jit(step_flat, keep_unused=True).lower(*step_args)
+    (adir / "step.hlo.txt").write_text(to_hlo_text(step_lowered))
+
+    # ---- eval ------------------------------------------------------------
+    eval_fn = T.make_eval_fn(cfg, task)
+
+    def eval_flat(*args):
+        p = unflatten(args[0:n])
+        ii, tt, am, lb = args[n : n + 4]
+        seed = args[n + 4]
+        loss, metric = eval_fn(p, ii, tt, am, lb, seed)
+        return (loss, metric)
+
+    eval_args = list(specs) + batch_specs + [scalar_i32]
+    eval_lowered = jax.jit(eval_flat, keep_unused=True).lower(*eval_args)
+    (adir / "eval.hlo.txt").write_text(to_hlo_text(eval_lowered))
+
+    manifest = {
+        "name": name,
+        "task": task,
+        "variant": cfg.variant,
+        "impl": cfg.impl,
+        "batch_size": batch_size,
+        "config": {
+            "name": cfg.name,
+            "vocab_size": cfg.vocab_size,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq_len": cfg.seq_len,
+            "intermediate": cfg.intermediate,
+            "dropout_p": cfg.dropout_p,
+            "num_classes": cfg.num_classes,
+        },
+        "n_param_leaves": n,
+        "params": [
+            {"name": nm, "shape": list(s.shape), "dtype": _dtype_str(s.dtype)}
+            for nm, s in zip(names, specs)
+        ],
+        "batch_inputs": [
+            {"name": k, "shape": list(batch_struct[k].shape), "dtype": "int32"}
+            for k in batch_order
+        ],
+        "scalar_inputs": {
+            "step": [{"name": "step", "dtype": "int32"},
+                      {"name": "seed", "dtype": "int32"},
+                      {"name": "lr", "dtype": "float32"}],
+            "eval": [{"name": "seed", "dtype": "int32"}],
+        },
+        "files": {"init": "init.hlo.txt", "step": "step.hlo.txt",
+                  "eval": "eval.hlo.txt"},
+    }
+    (adir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+# Artifact matrix. `mini` at B=8 is the e2e example; `tiny` powers the fast
+# tests and Fig 6a/6b analogues; pallas_smoke proves the L1 kernel path
+# lowers/loads end-to-end.
+ARTIFACTS = [
+    ("bert_tiny_baseline", "tiny", "baseline", "jnp", "mlm", 8),
+    ("bert_tiny_checkpoint", "tiny", "checkpoint", "jnp", "mlm", 8),
+    ("bert_tiny_tempo", "tiny", "tempo", "jnp", "mlm", 8),
+    ("bert_mini_baseline", "mini", "baseline", "jnp", "mlm", 8),
+    ("bert_mini_tempo", "mini", "tempo", "jnp", "mlm", 8),
+    ("cls_tiny_baseline", "tiny", "baseline", "jnp", "cls", 16),
+    ("cls_tiny_tempo", "tiny", "tempo", "jnp", "cls", 16),
+    ("pallas_smoke", "tiny", "tempo", "pallas", "mlm", 2),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.outdir)
+    only = set(args.only.split(",")) if args.only else None
+    # Merge with an existing index so --only exports don't clobber it.
+    index_path = outdir / "index.json"
+    index = json.loads(index_path.read_text()) if index_path.exists() else []
+    by_name = {e["name"]: e for e in index}
+    for name, cfg_key, variant, impl, task, bs in ARTIFACTS:
+        if only and name not in only:
+            continue
+        cfg = M.CONFIGS[cfg_key].with_variant(variant, impl)
+        print(f"[aot] lowering {name} ({cfg_key}, {variant}, {impl}, {task}, B={bs})")
+        manifest = export_artifact(cfg, task, bs, outdir, name)
+        by_name[name] = {"name": name, "dir": name,
+                         "n_param_leaves": manifest["n_param_leaves"]}
+    ordered = [by_name[n] for n, *_ in ARTIFACTS if n in by_name]
+    index_path.write_text(json.dumps(ordered, indent=2))
+    print(f"[aot] index now lists {len(ordered)} artifacts in {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Fused multi-head attention core (Fig 1 ① — the O(S²) hot spot).
+
+Forward (one kernel per (batch·head) grid cell):
+
+    scores = q·kᵀ/√d + bias → probs = softmax(scores)
+    dropped = probs · mask/(1-p) → ctx = dropped · v
+
+Tempo residuals: ``probs`` (the softmax *output* — required by the
+output-only softmax backward anyway) and the int8 ``mask``. The baseline
+would additionally retain ``scores`` (softmax input) and ``dropped``
+(dropout output) — two more O(B·A·S²) float maps; Tempo's softmax
+optimization and Sub-Layer Dropout Recomputation discard both.
+
+Backward recomputes ``dropped = probs·mask/(1-p)`` (one multiply) where
+the dV matmul needs it, then applies the output-only softmax backward.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import dropout as drp
+from . import softmax as sm
+
+
+# --------------------------------------------------------------------------
+# jnp fast path. q,k,v: [B, A, S, D]; bias broadcastable to [B, A, S, S].
+# --------------------------------------------------------------------------
+
+
+def attention_fwd_jnp(q, k, v, bias, mask, p: float):
+    """Returns (ctx, probs) — probs is the only float residual retained."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (1.0 / jnp.sqrt(float(d)))
+    scores = scores + bias
+    probs = sm.softmax_fwd_jnp(scores)
+    dropped = drp.dropout_apply_jnp(probs, mask, p)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", dropped, v)
+    return ctx, probs
+
+
+def attention_bwd_jnp(dctx, q, k, v, probs, mask, p: float):
+    """Backward from Tempo residuals only. Returns (dq, dk, dv)."""
+    d = q.shape[-1]
+    # Sub-layer dropout recomputation: rebuild `dropped` for the dV matmul.
+    dropped = drp.dropout_apply_jnp(probs, mask, p)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", dropped, dctx)
+    ddropped = jnp.einsum("bhqd,bhkd->bhqk", dctx, v)
+    dprobs = drp.dropout_bwd_jnp(ddropped, mask, p)
+    dscores = sm.softmax_bwd_jnp(dprobs, probs)  # output-only softmax bwd
+    scale = 1.0 / jnp.sqrt(float(d))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", dscores, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", dscores, q) * scale
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------------------
+# Pallas fused forward: grid over B·A, whole-S tiles in VMEM. On real TPU
+# this would be further blocked over S (flash-style); interpret mode keeps
+# the structure while staying runnable on CPU PJRT.
+# --------------------------------------------------------------------------
+
+
+def attention_fwd_pallas(q, k, v, bias, mask, p: float):
+    b, h, sq, d = q.shape
+    bias_full = jnp.broadcast_to(bias, (b, h, sq, sq)).astype(q.dtype)
+    scale = 1.0 / math.sqrt(float(d))
+    inv_keep = 1.0 / (1.0 - p) if p > 0.0 else 1.0
+
+    def kernel(q_ref, k_ref, v_ref, b_ref, m_ref, ctx_ref, probs_ref):
+        qv = q_ref[0, 0]
+        kv = k_ref[0, 0]
+        vv = v_ref[0, 0]
+        scores = jnp.dot(qv, kv.T) * scale + b_ref[0, 0]
+        mx = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - mx)
+        probs = e / jnp.sum(e, axis=-1, keepdims=True)
+        dropped = probs * m_ref[0, 0].astype(probs.dtype) * inv_keep
+        ctx_ref[0, 0] = jnp.dot(dropped, vv)
+        probs_ref[0, 0] = probs
+
+    grid = (b, h)
+    qspec = pl.BlockSpec((1, 1, sq, d), lambda i, j: (i, j, 0, 0))
+    sspec = pl.BlockSpec((1, 1, sq, sq), lambda i, j: (i, j, 0, 0))
+    ctx, probs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, sspec, sspec],
+        out_specs=[qspec, sspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq, sq), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, bias_full, mask.astype(jnp.int8))
+    return ctx, probs
+
+
+def attention_bwd_pallas(dctx, q, k, v, probs, mask, p: float):
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(float(d))
+    inv_keep = 1.0 / (1.0 - p) if p > 0.0 else 1.0
+
+    def kernel(dc_ref, q_ref, k_ref, v_ref, p_ref, m_ref, dq_ref, dk_ref, dv_ref):
+        dc = dc_ref[0, 0]
+        qv, kv, vv = q_ref[0, 0], k_ref[0, 0], v_ref[0, 0]
+        probs_v = p_ref[0, 0]
+        mk = m_ref[0, 0].astype(probs_v.dtype) * inv_keep
+        dropped = probs_v * mk  # sub-layer recomputation
+        dv_ref[0, 0] = jnp.dot(dropped.T, dc)
+        ddropped = jnp.dot(dc, vv.T)
+        dprobs = ddropped * mk
+        ssum = jnp.sum(dprobs * probs_v, axis=-1, keepdims=True)
+        dscores = (dprobs - ssum) * probs_v
+        dq_ref[0, 0] = jnp.dot(dscores, kv) * scale
+        dk_ref[0, 0] = jnp.dot(dscores.T, qv) * scale
+
+    qspec = pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0))
+    sspec = pl.BlockSpec((1, 1, s, s), lambda i, j: (i, j, 0, 0))
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[qspec, qspec, qspec, qspec, sspec, sspec],
+        out_specs=[qspec, qspec, qspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        ],
+        interpret=True,
+    )(dctx, q, k, v, probs, mask.astype(jnp.int8))
+    return dq, dk, dv

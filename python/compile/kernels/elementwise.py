@@ -1,0 +1,233 @@
+"""Generic in-place elementwise layers (paper §5.1 / Appendix E.5).
+
+The paper generalizes In-place GELU to *any* elementwise activation
+``y = f(x)`` whose output is retained by the next layer anyway:
+
+1. if ``f`` is bijective, recover ``x = f⁻¹(y)`` — no extra storage;
+2. otherwise split the domain at the extrema, store a small indicator
+   ``m`` of the branch, and recover ``x = g_m(y)`` per branch;
+3. approximate ``g`` (or directly ``f' ∘ g``, Eq. 2) with piecewise
+   polynomials when no closed form exists;
+4. fold the computation of ``m`` into the forward kernel and the
+   composite ``f' ∘ g`` into the backward kernel.
+
+This module is the *factory* form of that recipe: given ``f`` (as a
+float→float callable usable on numpy arrays) and its derivative, it
+finds the interior extrema numerically, fits per-branch polynomials in
+the √-stretched variable (analytic across each extremum — the same
+trick gelu.py uses), and returns a ``jax.custom_vjp`` layer that stores
+only ``(y, branch_id:int8)``.
+
+Instantiated below for:
+* ``inplace_silu`` — SiLU/Swish, one interior minimum (≈ -1.2784),
+  structurally identical to GELU;
+* ``inplace_gelu_generic`` — GELU via the generic path (cross-checked
+  against the hand-tuned kernels/gelu.py in tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# numerics: extrema + per-branch fits (float64 numpy, build time only)
+# --------------------------------------------------------------------------
+
+
+def _find_extrema(df, lo: float, hi: float, n: int = 200001) -> list:
+    """Interior sign changes of f' located by bisection."""
+    xs = np.linspace(lo, hi, n)
+    ds = df(xs)
+    roots = []
+    for i in range(n - 1):
+        if ds[i] == 0.0:
+            roots.append(float(xs[i]))
+        elif ds[i] * ds[i + 1] < 0:
+            a, b = xs[i], xs[i + 1]
+            for _ in range(100):
+                mid = 0.5 * (a + b)
+                if df(np.asarray(mid)) * df(np.asarray(a)) <= 0:
+                    b = mid
+                else:
+                    a = mid
+            roots.append(0.5 * (a + b))
+    return roots
+
+
+@dataclass(frozen=True)
+class Branch:
+    """One monotone piece of f: polynomials in u = sqrt(|y - y_anchor|)."""
+
+    x_lo: float
+    x_hi: float
+    y_anchor: float  # f at the extremum bounding this branch
+    sign: float  # sign of (y - anchor) on this branch
+    bounds: tuple  # segment right-edges in u
+    coeffs: tuple  # [n_seg][degree+1], Horner order
+    degree: int
+
+
+@dataclass(frozen=True)
+class InplaceSpec:
+    """Everything the fwd/bwd kernels need, baked as constants."""
+
+    name: str
+    extrema: tuple  # interior extrema x*₁ < x*₂ < …
+    branches: tuple  # len(extrema) + 1 Branch objects
+    max_fit_err: float
+
+
+def build_spec(name: str, f, df, lo: float = -10.0, hi: float = 10.0,
+               degree: int = 11, n_seg: int = 6) -> InplaceSpec:
+    """Run the §5.1 recipe for one activation; deterministic, <100 ms."""
+    extrema = _find_extrema(df, lo, hi)
+    edges = [lo] + list(extrema) + [hi]
+    branches = []
+    max_err = 0.0
+    for b in range(len(edges) - 1):
+        x_lo, x_hi = edges[b], edges[b + 1]
+        # anchor at the bounding extremum (or the far edge for the outermost
+        # branches, where f is monotone away from any extremum)
+        anchor_x = x_hi if b == 0 else x_lo
+        y_anchor = float(f(np.asarray(anchor_x)))
+        xs = np.linspace(x_lo, x_hi, 20001)
+        ys = f(xs)
+        us = np.sqrt(np.maximum(np.abs(ys - y_anchor), 0.0))
+        sign = 1.0 if float(np.mean(ys - y_anchor)) >= 0 else -1.0
+        gs = df(xs)
+        u_max = float(us.max())
+        seg_edges = u_max * (np.linspace(0, 1, n_seg + 1) ** 1.3)
+        bounds, coeffs = [], []
+        for s in range(n_seg):
+            sel = (us >= seg_edges[s]) & (us <= seg_edges[s + 1])
+            if sel.sum() < degree + 2:
+                sel = (us >= seg_edges[s] - 1e-6) & (us <= seg_edges[s + 1] + 1e-6)
+            c = np.polyfit(us[sel] - seg_edges[s], gs[sel], degree)
+            err = float(np.abs(np.polyval(c, us[sel] - seg_edges[s]) - gs[sel]).max())
+            max_err = max(max_err, err)
+            bounds.append(float(seg_edges[s + 1]))
+            coeffs.append(tuple(float(v) for v in c))
+        branches.append(Branch(
+            x_lo=x_lo, x_hi=x_hi, y_anchor=y_anchor, sign=sign,
+            bounds=tuple(bounds), coeffs=tuple(coeffs), degree=degree,
+        ))
+    return InplaceSpec(name=name, extrema=tuple(extrema),
+                       branches=tuple(branches), max_fit_err=max_err)
+
+
+# --------------------------------------------------------------------------
+# jnp evaluation (same gather-free one-hot contraction as gelu.py)
+# --------------------------------------------------------------------------
+
+
+def _eval_branch(br: Branch, y):
+    u = jnp.sqrt(jnp.maximum(br.sign * (y - br.y_anchor), 0.0))
+    inner = jnp.asarray(br.bounds[:-1], jnp.float32)
+    lefts = jnp.asarray((0.0,) + br.bounds[:-1], jnp.float32)
+    table = jnp.asarray(br.coeffs, jnp.float32)
+    n_seg = table.shape[0]
+    seg = jnp.sum((u[..., None] > inner).astype(jnp.float32), axis=-1)
+    onehot = (seg[..., None] == jnp.arange(n_seg, dtype=jnp.float32)).astype(jnp.float32)
+    c = jnp.einsum("...s,sk->...k", onehot, table)
+    t = u - jnp.einsum("...s,s->...", onehot, lefts)
+    acc = c[..., 0]
+    for k in range(1, br.degree + 1):
+        acc = acc * t + c[..., k]
+    return acc
+
+
+def grad_from_output(spec: InplaceSpec, y, m):
+    """f'(f⁻¹(y)) selected by the stored branch indicator (f32 internal)."""
+    out_dt = y.dtype
+    y = y.astype(jnp.float32)
+    vals = [_eval_branch(br, y) for br in spec.branches]
+    acc = vals[0]
+    for i in range(1, len(vals)):
+        acc = jnp.where(m >= i, vals[i], acc)
+    return acc.astype(out_dt)
+
+
+def branch_indicator(spec: InplaceSpec, x):
+    """m = index of the branch x falls in (int8, the paper's mask)."""
+    m = jnp.zeros(x.shape, jnp.int8)
+    for i, xstar in enumerate(spec.extrema):
+        m = jnp.where(x >= jnp.asarray(xstar, x.dtype), jnp.int8(i + 1), m)
+    return m
+
+
+def make_inplace_layer(spec: InplaceSpec, f_jnp):
+    """Return a custom_vjp layer storing only (y, m) for backward."""
+
+    @jax.custom_vjp
+    def layer(x):
+        return f_jnp(x)
+
+    def fwd(x):
+        y = f_jnp(x)
+        return y, (y, branch_indicator(spec, x))
+
+    def bwd(res, dy):
+        y, m = res
+        return (dy * grad_from_output(spec, y, m),)
+
+    layer.defvjp(fwd, bwd)
+    return layer
+
+
+# --------------------------------------------------------------------------
+# instances
+# --------------------------------------------------------------------------
+
+
+def _sigmoid64(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _silu64(x):
+    return x * _sigmoid64(x)
+
+
+def _dsilu64(x):
+    s = _sigmoid64(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+def silu_jnp(x):
+    out_dt = x.dtype
+    x = x.astype(jnp.float32)
+    return (x * jax.nn.sigmoid(x)).astype(out_dt)
+
+
+SILU_SPEC = build_spec("silu", _silu64, _dsilu64)
+inplace_silu = make_inplace_layer(SILU_SPEC, silu_jnp)
+
+
+def _gelu64(x):
+    from math import erf
+
+    v = np.vectorize(lambda t: t * 0.5 * (1.0 + erf(t / np.sqrt(2.0))))
+    return v(x)
+
+
+def _dgelu64(x):
+    from math import erf
+
+    pdf = lambda t: np.exp(-0.5 * t * t) / np.sqrt(2 * np.pi)  # noqa: E731
+    cdf = lambda t: 0.5 * (1.0 + erf(t / np.sqrt(2.0)))  # noqa: E731
+    v = np.vectorize(lambda t: cdf(t) + t * pdf(t))
+    return v(x)
+
+
+def gelu_jnp(x):
+    from . import ref
+
+    return ref.gelu(x)
+
+
+GELU_SPEC = build_spec("gelu", _gelu64, _dgelu64)
+inplace_gelu_generic = make_inplace_layer(GELU_SPEC, gelu_jnp)

@@ -1,0 +1,317 @@
+"""In-place GELU (Tempo §3.1, Appendix E.1/F.1).
+
+Forward: a single fused kernel ``gelu_fwd`` returns ``(y, m)`` where
+``y = GELU(x)`` and ``m`` is the paper's one-byte mask recording whether
+the input lies right of the GELU minimum ``x* ≈ -0.75179``. The input
+``x`` is *discarded* — it is recoverable from ``(y, m)`` because GELU is
+one-to-one on each side of its unique minimum.
+
+Backward: ``gelu_bwd(dy, y, m) = dy * g(y, m)`` where
+``g = GELU' ∘ GELU*⁻¹`` (paper Eq. 2) — the derivative expressed directly
+in terms of the *output*. GELU is transcendental so ``g`` has no
+closed-form; following Appendix F.1 we approximate it with piecewise
+polynomials of degree ≤ 13.
+
+Approximation detail (improves on a naive fit in ``y``): near the
+minimum, ``y - y* ~ c (x - x*)²``, so ``g`` behaves like ``±sqrt(y - y*)``
+— polynomials in ``y`` converge miserably there. We instead fit
+polynomials in ``u = sqrt(y - y*)``, in which ``g`` is analytic across
+the minimum; a handful of segments per branch then reaches ~1e-4 max
+error at degree ≤ 13. The far positive tail uses the exact derivative
+evaluated at ``x ≈ y`` (GELU(x) → x); the far negative tail clamps to 0
+(|g| < 6e-4 there). The tolerance/degree/segment knobs are the paper's
+"tunable lossy" tradeoff.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# --------------------------------------------------------------------------
+# The GELU minimum, solved once in float64.
+# --------------------------------------------------------------------------
+
+
+def _gelu64(x: np.ndarray) -> np.ndarray:
+    from math import erf
+
+    v = np.vectorize(lambda t: t * 0.5 * (1.0 + erf(t / np.sqrt(2.0))))
+    return v(x)
+
+
+def _gelu_grad64(x: np.ndarray) -> np.ndarray:
+    from math import erf
+
+    pdf = lambda t: np.exp(-0.5 * t * t) / np.sqrt(2 * np.pi)  # noqa: E731
+    cdf = lambda t: 0.5 * (1.0 + erf(t / np.sqrt(2.0)))  # noqa: E731
+    v = np.vectorize(lambda t: cdf(t) + t * pdf(t))
+    return v(x)
+
+
+def _solve_xstar() -> float:
+    """Bisection for the root of GELU' (unique minimum of GELU)."""
+    lo, hi = -1.0, -0.5
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if _gelu_grad64(np.array(mid)) > 0:
+            hi = mid
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
+XSTAR: float = float(_solve_xstar())  # ≈ -0.7517916243...
+YSTAR: float = float(_gelu64(np.array(XSTAR)))  # ≈ -0.1699935...
+
+# Positive-branch analytic tail: for y >= Y_HI, x - y < 1e-8 so we can
+# evaluate GELU'(y) directly.
+Y_HI = 6.0
+# Negative-branch clamp: for x <= X_LO_CLAMP the derivative magnitude is
+# < 6e-4 and we return 0. In u-space this is u >= U_CLAMP_NEG.
+X_LO_CLAMP = -4.0
+
+
+@dataclass(frozen=True)
+class GeluApprox:
+    """Piecewise-polynomial approximation of g(y, m) = GELU'(GELU*⁻¹(y, m)).
+
+    Polynomials are in u = sqrt(y - y*). ``bounds_*`` are the segment
+    right-edges in u-space (last edge = branch end); ``coeffs_*`` is an
+    [n_seg, degree+1] table, highest power first (Horner order).
+    """
+
+    degree: int
+    bounds_pos: tuple
+    coeffs_pos: tuple  # tuple of tuples
+    bounds_neg: tuple
+    coeffs_neg: tuple
+    max_err_pos: float
+    max_err_neg: float
+
+    @staticmethod
+    @functools.lru_cache(maxsize=8)
+    def fit(degree: int = 11, n_seg_pos: int = 6, n_seg_neg: int = 6) -> "GeluApprox":
+        """Least-squares fit on dense Chebyshev-style samples per segment.
+
+        Deterministic and fast (<50 ms); run at import/build time, the
+        coefficient table is baked into the lowered HLO as constants.
+        """
+
+        def fit_branch(x_lo: float, x_hi: float, n_seg: int):
+            # Dense x-grid on the branch; map to (u, g) samples.
+            xs = np.linspace(x_lo, x_hi, 20001, dtype=np.float64)
+            ys = _gelu64(xs)
+            us = np.sqrt(np.maximum(ys - YSTAR, 0.0))
+            gs = _gelu_grad64(xs)
+            u_max = float(us.max())
+            # Geometric-ish segmentation: denser near u=0 (the minimum),
+            # where curvature of g(u) is highest on the negative branch.
+            edges = u_max * (np.linspace(0, 1, n_seg + 1) ** 1.3)
+            bounds, coeffs, max_err = [], [], 0.0
+            for i in range(n_seg):
+                lo, hi = edges[i], edges[i + 1]
+                sel = (us >= lo) & (us <= hi)
+                if sel.sum() < degree + 2:  # widen degenerate segments
+                    sel = (us >= lo - 1e-6) & (us <= hi + 1e-6)
+                u_s, g_s = us[sel], gs[sel]
+                # Fit in a shifted variable for conditioning.
+                c = np.polyfit(u_s - lo, g_s, degree)
+                err = float(np.abs(np.polyval(c, u_s - lo) - g_s).max())
+                max_err = max(max_err, err)
+                bounds.append(float(hi))
+                coeffs.append(tuple(float(v) for v in c))
+            return tuple(bounds), tuple(coeffs), max_err
+
+        bp, cp, ep = fit_branch(XSTAR, Y_HI + 0.25, n_seg_pos)
+        bn, cn, en = fit_branch(X_LO_CLAMP, XSTAR, n_seg_neg)
+        return GeluApprox(
+            degree=degree,
+            bounds_pos=bp,
+            coeffs_pos=cp,
+            bounds_neg=bn,
+            coeffs_neg=cn,
+            max_err_pos=ep,
+            max_err_neg=en,
+        )
+
+    # -- evaluation (pure jnp; used inside both the pallas kernel and the
+    #    jnp fast path, so the two lower to identical math). The tables are
+    #    threaded as explicit arrays so the pallas kernel can take them as
+    #    inputs (pallas forbids captured array constants). ---------------
+
+    def tables(self, dtype=jnp.float32) -> dict:
+        """Materialize the coefficient tables as jnp arrays."""
+
+        def branch(bounds, coeffs):
+            return dict(
+                inner=jnp.asarray(bounds[:-1], dtype),  # inner right-edges
+                lefts=jnp.asarray((0.0,) + bounds[:-1], dtype),
+                table=jnp.asarray(coeffs, dtype),  # [n_seg, degree+1]
+            )
+
+        # NOTE: only rank>=1 arrays here — the tables ride through
+        # pallas_call as inputs, and rank-0 blocks lower to a malformed
+        # dynamic_slice under interpret mode. Scalars (u_clamp, YSTAR,
+        # Y_HI) are python floats inlined as HLO constants instead.
+        return dict(
+            pos=branch(self.bounds_pos, self.coeffs_pos),
+            neg=branch(self.bounds_neg, self.coeffs_neg),
+        )
+
+    def _eval_branch(self, u, br):
+        # Segment id via direct compares, then one-hot × table contraction
+        # instead of a gather: lowers to plain compare/mul/add (parseable
+        # by the old HLO toolchain, and maps onto the TPU MXU as a skinny
+        # [N, n_seg] @ [n_seg, degree+1] matmul).
+        inner = br["inner"]  # [n_seg-1] inner right-edges
+        n_seg = br["table"].shape[0]
+        seg = jnp.sum((u[..., None] > inner).astype(u.dtype), axis=-1)
+        onehot = (seg[..., None] == jnp.arange(n_seg, dtype=u.dtype)).astype(u.dtype)
+        c = jnp.einsum("...s,sk->...k", onehot, br["table"])
+        t = u - jnp.einsum("...s,s->...", onehot, br["lefts"])
+        acc = c[..., 0]
+        for k in range(1, self.degree + 1):
+            acc = acc * t + c[..., k]
+        return acc
+
+    def g_of_y_tabled(self, y, m, tabs):
+        """g(y, m) from explicit tables (pallas-kernel friendly).
+
+        Always computes in f32: a degree-11 Horner chain in bf16 loses
+        ~all mantissa bits (the TPU VPU would also evaluate this in f32
+        and round once at the end).
+        """
+        out_dt = y.dtype
+        y = y.astype(jnp.float32)
+        dt = y.dtype
+        u = jnp.sqrt(jnp.maximum(y - jnp.asarray(YSTAR, dt), 0.0))
+        g_pos_poly = self._eval_branch(u, tabs["pos"])
+        # analytic positive tail: x ≈ y for y >= Y_HI
+        g_pos = jnp.where(y >= Y_HI, ref.gelu_grad(y), g_pos_poly)
+        g_neg_poly = self._eval_branch(u, tabs["neg"])
+        u_clamp = jnp.asarray(self.bounds_neg[-1], dt)
+        g_neg = jnp.where(u >= u_clamp, jnp.zeros_like(y), g_neg_poly)
+        keep = m.astype(jnp.bool_) if m.dtype != jnp.bool_ else m
+        return jnp.where(keep, g_pos, g_neg).astype(out_dt)
+
+    def g_of_y(self, y, m):
+        """g(y, m): derivative factor from output + mask. Pure jnp."""
+        # Tables stay f32 regardless of the activation dtype — a
+        # degree-11 polynomial with bf16-rounded coefficients is garbage.
+        return self.g_of_y_tabled(y, m, self.tables(jnp.float32))
+
+
+DEFAULT_APPROX = GeluApprox.fit()
+
+
+# --------------------------------------------------------------------------
+# jnp fast path (identical math, no pallas_call wrapper)
+# --------------------------------------------------------------------------
+
+
+def gelu_fwd_jnp(x):
+    """Fused forward: (y, mask). Mask is int8 per the paper (footnote 3)."""
+    y = ref.gelu(x)
+    m = (x >= jnp.asarray(XSTAR, x.dtype)).astype(jnp.int8)
+    return y, m
+
+
+def gelu_bwd_jnp(dy, y, m, approx: GeluApprox = DEFAULT_APPROX):
+    """dx = dy * g(y, m) — single fused elementwise pass."""
+    return dy * approx.g_of_y(y, m)
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels (interpret=True — CPU PJRT cannot run Mosaic calls).
+# Row-tiled: the last dim is kept whole (lane dim), leading dims collapse
+# into a 1-D grid of row-blocks sized for VMEM.
+# --------------------------------------------------------------------------
+
+_BLOCK_ROWS = 256
+
+
+def _flatten_rows(x):
+    n = x.size // x.shape[-1]
+    return x.reshape(n, x.shape[-1])
+
+
+def _pad_rows(x2, block):
+    n = x2.shape[0]
+    pad = (-n) % block
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, x2.shape[1]), x2.dtype)], axis=0)
+    return x2, n
+
+
+def gelu_fwd_pallas(x, block_rows: int = _BLOCK_ROWS):
+    """Pallas fused GELU forward producing (y, mask) in one kernel."""
+    orig_shape = x.shape
+    x2, n = _pad_rows(_flatten_rows(x), block_rows)
+    rows, cols = x2.shape
+
+    def kernel(x_ref, y_ref, m_ref):
+        xv = x_ref[...]
+        y_ref[...] = ref.gelu(xv)
+        m_ref[...] = (xv >= jnp.asarray(XSTAR, xv.dtype)).astype(jnp.int8)
+
+    y2, m2 = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            jax.ShapeDtypeStruct((rows, cols), jnp.int8),
+        ],
+        interpret=True,
+    )(x2)
+    return y2[:n].reshape(orig_shape), m2[:n].reshape(orig_shape)
+
+
+def gelu_bwd_pallas(
+    dy, y, m, approx: GeluApprox = DEFAULT_APPROX, block_rows: int = _BLOCK_ROWS
+):
+    """Pallas fused GELU backward: dx = dy * g(y, m).
+
+    The coefficient tables ride along as (tiny, unblocked) kernel inputs;
+    on a real TPU they would live in SMEM/VMEM for the whole grid.
+    """
+    orig_shape = y.shape
+    dy2, n = _pad_rows(_flatten_rows(dy), block_rows)
+    y2, _ = _pad_rows(_flatten_rows(y), block_rows)
+    m2, _ = _pad_rows(_flatten_rows(m.astype(jnp.int8)), block_rows)
+    rows, cols = y2.shape
+    tabs = approx.tables(y.dtype)
+    flat_tabs, tree = jax.tree_util.tree_flatten(tabs)
+
+    def kernel(dy_ref, y_ref, m_ref, *rest):
+        tab_refs, dx_ref = rest[:-1], rest[-1]
+        tabs_in = jax.tree_util.tree_unflatten(tree, [r[...] for r in tab_refs])
+        dx_ref[...] = dy_ref[...] * approx.g_of_y_tabled(y_ref[...], m_ref[...], tabs_in)
+
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)  # noqa: E731
+    dx2 = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ]
+        + [whole(a) for a in flat_tabs],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), y.dtype),
+        interpret=True,
+    )(dy2, y2, m2, *flat_tabs)
+    return dx2[:n].reshape(orig_shape)

@@ -1,0 +1,153 @@
+"""In-place LayerNorm (Tempo §3.2, Appendix D).
+
+Forward: one fused kernel returning ``(y, rstd)``. The *input* is
+discarded; the output is retained anyway (the next matmul needs it), so
+the only per-activation memory this layer adds is the per-row ``rstd``
+(``1/sqrt(var + eps)``) — B·S floats instead of B·S·H.
+
+Backward (Appendix D, lossless): with ``x̂ = (y - β)/γ`` and ``g = dy·γ``:
+
+    dx = (g - mean(g·x̂)·x̂ - mean(g)) · rstd
+    dγ = Σ_rows dy·x̂        dβ = Σ_rows dy
+
+The derivation extends In-Place Activated BatchNorm [Rota Bulò et al.,
+CVPR'18] to LayerNorm's per-row statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS_DEFAULT = 1e-12  # HuggingFace BERT LayerNorm eps
+
+_BLOCK_ROWS = 128
+
+
+def _rows(x):
+    return x.reshape(x.size // x.shape[-1], x.shape[-1])
+
+
+def _pad_rows(x2, block):
+    n = x2.shape[0]
+    pad = (-n) % block
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, x2.shape[1]), x2.dtype)], axis=0)
+    return x2, n
+
+
+# --------------------------------------------------------------------------
+# jnp fast path
+# --------------------------------------------------------------------------
+
+
+def layernorm_fwd_jnp(x, gamma, beta, eps: float = EPS_DEFAULT):
+    """Fused forward: (y, rstd). rstd has the row shape (last axis dropped)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    y = (x - mu) * rstd * gamma + beta
+    return y, rstd[..., 0]
+
+
+def layernorm_bwd_jnp(dy, y, gamma, beta, rstd):
+    """Output-based backward. Returns (dx, dgamma, dbeta)."""
+    rstd = rstd[..., None]
+    xhat = (y - beta) / gamma
+    g = dy * gamma
+    red = tuple(range(y.ndim - 1))
+    dgamma = jnp.sum(dy * xhat, axis=red)
+    dbeta = jnp.sum(dy, axis=red)
+    mean_g = jnp.mean(g, axis=-1, keepdims=True)
+    mean_gx = jnp.mean(g * xhat, axis=-1, keepdims=True)
+    dx = (g - mean_gx * xhat - mean_g) * rstd
+    return dx, dgamma, dbeta
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels. Row-tiled; γ/β ride along whole (they are H-sized).
+# The backward kernel emits *per-block partial* dγ/dβ that the host-side
+# wrapper sums — mirroring how a TPU kernel would accumulate partials in
+# VMEM scratch and reduce across the grid.
+# --------------------------------------------------------------------------
+
+
+def layernorm_fwd_pallas(x, gamma, beta, eps: float = EPS_DEFAULT, block_rows: int = _BLOCK_ROWS):
+    orig_shape = x.shape
+    x2, n = _pad_rows(_rows(x), block_rows)
+    rows, cols = x2.shape
+
+    def kernel(x_ref, g_ref, b_ref, y_ref, r_ref):
+        xv = x_ref[...]
+        mu = jnp.mean(xv, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
+        rstd = 1.0 / jnp.sqrt(var + eps)
+        y_ref[...] = (xv - mu) * rstd * g_ref[...] + b_ref[...]
+        r_ref[...] = rstd[..., 0]
+
+    y2, r2 = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            jax.ShapeDtypeStruct((rows,), x.dtype),
+        ],
+        interpret=True,
+    )(x2, gamma, beta)
+    return y2[:n].reshape(orig_shape), r2[:n].reshape(orig_shape[:-1])
+
+
+def layernorm_bwd_pallas(dy, y, gamma, beta, rstd, block_rows: int = _BLOCK_ROWS):
+    orig_shape = y.shape
+    dy2, n = _pad_rows(_rows(dy), block_rows)
+    y2, _ = _pad_rows(_rows(y), block_rows)
+    r2, _ = _pad_rows(rstd.reshape(-1, 1), block_rows)
+    rows, cols = y2.shape
+    nblk = rows // block_rows
+
+    def kernel(dy_ref, y_ref, r_ref, g_ref, b_ref, dx_ref, dg_ref, db_ref):
+        dyv, yv = dy_ref[...], y_ref[...]
+        rstd_v = r_ref[...]  # [block, 1]
+        gam, bet = g_ref[...], b_ref[...]
+        xhat = (yv - bet) / gam
+        g = dyv * gam
+        mean_g = jnp.mean(g, axis=-1, keepdims=True)
+        mean_gx = jnp.mean(g * xhat, axis=-1, keepdims=True)
+        dx_ref[...] = (g - mean_gx * xhat - mean_g) * rstd_v
+        dg_ref[...] = jnp.sum(dyv * xhat, axis=0)[None, :]
+        db_ref[...] = jnp.sum(dyv, axis=0)[None, :]
+
+    dx2, dg_part, db_part = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), y.dtype),
+            jax.ShapeDtypeStruct((nblk, cols), y.dtype),
+            jax.ShapeDtypeStruct((nblk, cols), y.dtype),
+        ],
+        interpret=True,
+    )(dy2, y2, r2, gamma, beta)
+    dx = dx2[:n].reshape(orig_shape)
+    return dx, dg_part.sum(axis=0), db_part.sum(axis=0)

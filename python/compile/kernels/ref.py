@@ -1,0 +1,173 @@
+"""Pure-jnp reference oracle for every Tempo kernel.
+
+These are the "textbook" implementations: forward passes written in plain
+``jax.numpy`` with no custom_vjp, so ``jax.grad`` of these is the ground
+truth the Tempo backward derivations (and the Pallas kernels) are checked
+against in ``python/tests/``.
+
+They also serve as the *baseline* compute path (what PyTorch autograd
+would do), and document which tensors standard autodiff retains — the
+inventory mirrored by ``rust/src/memmodel``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SQRT_2 = 1.4142135623730951
+SQRT_2_PI = 2.5066282746310002  # sqrt(2*pi)
+
+# Location of the GELU minimum (solved to f64 precision in gelu.py; the
+# constant is duplicated here so the oracle has no dependency on the
+# kernel module).
+GELU_XSTAR = -0.7517915246935645
+
+
+def erf(x):
+    """Polynomial erf (Abramowitz & Stegun 7.1.26, |err| ≤ 1.5e-7).
+
+    Used instead of ``jax.lax.erf`` because the latter lowers to the
+    dedicated ``erf`` HLO opcode, which the image's xla_extension 0.5.1
+    HLO parser predates — this form lowers to plain mul/add/exp and is
+    exact at float32 precision.
+    """
+    a1, a2, a3, a4, a5 = (
+        0.254829592,
+        -0.284496736,
+        1.421413741,
+        -1.453152027,
+        1.061405429,
+    )
+    p = 0.3275911
+    s = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t
+    return s * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def phi(x):
+    """Standard normal pdf."""
+    return jnp.exp(-0.5 * jnp.square(x)) / SQRT_2_PI
+
+
+def Phi(x):
+    """Standard normal cdf, cancellation-free.
+
+    For x < 0 the naive ``0.5*(1+erf)`` computes ``1 - (1-tiny)`` and
+    loses all precision; the A&S polynomial actually yields
+    ``erfc(|z|) = poly(t)·exp(-z²)`` directly, so we branch on sign.
+    """
+    a1, a2, a3, a4, a5 = (
+        0.254829592,
+        -0.284496736,
+        1.421413741,
+        -1.453152027,
+        1.061405429,
+    )
+    p = 0.3275911
+    z = jnp.abs(x) / SQRT_2
+    t = 1.0 / (1.0 + p * z)
+    erfc = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t * jnp.exp(-z * z)
+    return jnp.where(x >= 0, 1.0 - 0.5 * erfc, 0.5 * erfc)
+
+
+def gelu(x):
+    """Exact (erf-based) GELU, matching torch.nn.GELU's default.
+
+    Computed in f32 internally — bf16 evaluation of the cdf polynomial
+    loses most of the mantissa (the TPU VPU likewise upcasts).
+    """
+    out_dt = x.dtype
+    x = x.astype(jnp.float32)
+    return (x * Phi(x)).astype(out_dt)
+
+
+def gelu_grad(x):
+    """d GELU / dx in terms of the *input* (what autodiff stashes x for)."""
+    out_dt = x.dtype
+    x = x.astype(jnp.float32)
+    return (Phi(x) + x * phi(x)).astype(out_dt)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-12):
+    """LayerNorm over the last axis (HuggingFace BERT default eps)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) / jnp.sqrt(var + eps)
+    return xhat * gamma + beta
+
+
+def layernorm_stats(x, eps: float = 1e-12):
+    """(mean, rstd) the in-place variant stashes instead of the input."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return mu, 1.0 / jnp.sqrt(var + eps)
+
+
+def softmax(x, axis: int = -1):
+    """Numerically-stable softmax (the baseline retains both x and y)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def dropout(x, mask, p: float):
+    """Dropout given a precomputed keep-mask (1 = keep).
+
+    Mask generation is factored out so baseline and Tempo paths consume
+    bit-identical masks (the paper stashes the very mask the forward drew).
+    """
+    if p <= 0.0:
+        return x
+    return x * mask.astype(x.dtype) / (1.0 - p)
+
+
+def attention(q, k, v, attn_bias, drop_mask, p: float):
+    """Reference scaled-dot-product attention with prob-dropout.
+
+    q, k, v: [B, A, S, D]; attn_bias: broadcastable to [B, A, S, S]
+    (additive, -inf style padding mask); drop_mask: [B, A, S, S] keep-mask.
+
+    Returns context [B, A, S, D].
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(d))
+    s = s + attn_bias
+    probs = softmax(s, axis=-1)
+    dropped = dropout(probs, drop_mask, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", dropped, v)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form backward passes (used to unit-test the Tempo derivations
+# independently of jax.grad, as a second line of defence).
+# ---------------------------------------------------------------------------
+
+
+def softmax_bwd_from_output(dy, y, axis: int = -1):
+    """Output-only softmax backward: dx = (dy - sum(dy*y)) * y."""
+    s = jnp.sum(dy * y, axis=axis, keepdims=True)
+    return (dy - s) * y
+
+
+def layernorm_bwd_from_output(dy, y, gamma, beta, rstd):
+    """Appendix D: gradients of LayerNorm from its *output*.
+
+    xhat is reconstructed as (y - beta) / gamma; requires |gamma| > 0.
+    Returns (dx, dgamma, dbeta).
+    """
+    xhat = (y - beta) / gamma
+    g = dy * gamma
+    dgamma = jnp.sum(dy * xhat, axis=tuple(range(y.ndim - 1)))
+    dbeta = jnp.sum(dy, axis=tuple(range(y.ndim - 1)))
+    mean_g = jnp.mean(g, axis=-1, keepdims=True)
+    mean_gx = jnp.mean(g * xhat, axis=-1, keepdims=True)
+    dx = (g - mean_gx * xhat - mean_g) * rstd
+    return dx, dgamma, dbeta
+
+
+def gelu_bwd_from_input(dy, x):
+    """Baseline GELU backward (retains x)."""
+    return dy * gelu_grad(x)

@@ -1,0 +1,84 @@
+"""Memory-efficient softmax (Tempo §3.4 engineering optimization).
+
+PyTorch's softmax retains both input and output for backward; only the
+output is necessary:  dx = (dy - Σ dy·y) · y  along the softmax axis.
+For the attention scores this discards an O(B·A·S²) feature map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ROWS = 128
+
+
+def _rows(x):
+    return x.reshape(x.size // x.shape[-1], x.shape[-1])
+
+
+def _pad_rows(x2, block):
+    n = x2.shape[0]
+    pad = (-n) % block
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, x2.shape[1]), x2.dtype)], axis=0)
+    return x2, n
+
+
+def softmax_fwd_jnp(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_bwd_jnp(dy, y):
+    s = jnp.sum(dy * y, axis=-1, keepdims=True)
+    return (dy - s) * y
+
+
+def softmax_fwd_pallas(x, block_rows: int = _BLOCK_ROWS):
+    orig = x.shape
+    x2, n = _pad_rows(_rows(x), block_rows)
+    rows, cols = x2.shape
+
+    def kernel(x_ref, y_ref):
+        xv = x_ref[...]
+        m = jnp.max(xv, axis=-1, keepdims=True)
+        e = jnp.exp(xv - m)
+        y_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    y2 = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=True,
+    )(x2)
+    return y2[:n].reshape(orig)
+
+
+def softmax_bwd_pallas(dy, y, block_rows: int = _BLOCK_ROWS):
+    orig = y.shape
+    dy2, n = _pad_rows(_rows(dy), block_rows)
+    y2, _ = _pad_rows(_rows(y), block_rows)
+    rows, cols = y2.shape
+
+    def kernel(dy_ref, y_ref, dx_ref):
+        dyv, yv = dy_ref[...], y_ref[...]
+        s = jnp.sum(dyv * yv, axis=-1, keepdims=True)
+        dx_ref[...] = (dyv - s) * yv
+
+    dx2 = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), y.dtype),
+        interpret=True,
+    )(dy2, y2)
+    return dx2[:n].reshape(orig)

@@ -1,0 +1,226 @@
+"""L2 layer library: Tempo drop-in replacements as ``jax.custom_vjp``.
+
+Each Tempo layer controls its backward residuals explicitly, so the
+lowered HLO retains exactly the tensors the paper's Table/Fig 1 analysis
+says it should:
+
+=================  ===============================  =========================
+layer              baseline residuals               Tempo residuals
+=================  ===============================  =========================
+GELU               x (B·S·4H fp)                    y reused + int8 mask
+LayerNorm          x (B·S·H fp)                     y reused + rstd (B·S)
+softmax (scores)   x and y (2 × B·A·S² fp)          y only
+attn dropout       y (B·A·S² fp) + mask             mask only (recompute y)
+=================  ===============================  =========================
+
+``impl`` selects the compute path: ``"jnp"`` (fused jnp math — what the
+shipped training artifacts use; XLA fuses it into single elementwise
+loops) or ``"pallas"`` (the L1 kernels under interpret=True, proving the
+kernel path composes; orders slower on CPU, structure-identical).
+
+Baseline twins (plain autodiff) live here too so model.py can build
+either variant from one code path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import dropout as drp_k
+from .kernels import gelu as gelu_k
+from .kernels import layernorm as ln_k
+from .kernels import ref
+from .kernels import softmax as sm_k
+
+# --------------------------------------------------------------------------
+# In-place GELU
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tempo_gelu(x, impl: str = "jnp"):
+    """GELU whose backward runs from (y, mask) — the input is discarded."""
+    y, _ = _gelu_fwd_impl(x, impl)
+    return y
+
+
+def _gelu_fwd_impl(x, impl):
+    if impl == "pallas":
+        return gelu_k.gelu_fwd_pallas(x)
+    return gelu_k.gelu_fwd_jnp(x)
+
+
+def _tempo_gelu_fwd(x, impl):
+    y, m = _gelu_fwd_impl(x, impl)
+    return y, (y, m)
+
+
+def _tempo_gelu_bwd(impl, res, dy):
+    y, m = res
+    if impl == "pallas":
+        return (gelu_k.gelu_bwd_pallas(dy, y, m),)
+    return (gelu_k.gelu_bwd_jnp(dy, y, m),)
+
+
+tempo_gelu.defvjp(_tempo_gelu_fwd, _tempo_gelu_bwd)
+
+
+def baseline_gelu(x):
+    """Plain autodiff GELU (residual: x)."""
+    return ref.gelu(x)
+
+
+# --------------------------------------------------------------------------
+# In-place LayerNorm
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def tempo_layernorm(x, gamma, beta, eps: float = ln_k.EPS_DEFAULT, impl: str = "jnp"):
+    """LayerNorm whose backward runs from (y, rstd, γ, β) — Appendix D."""
+    y, _ = _ln_fwd_impl(x, gamma, beta, eps, impl)
+    return y
+
+
+def _ln_fwd_impl(x, gamma, beta, eps, impl):
+    if impl == "pallas":
+        return ln_k.layernorm_fwd_pallas(x, gamma, beta, eps)
+    return ln_k.layernorm_fwd_jnp(x, gamma, beta, eps)
+
+
+def _tempo_ln_fwd(x, gamma, beta, eps, impl):
+    y, rstd = _ln_fwd_impl(x, gamma, beta, eps, impl)
+    return y, (y, gamma, beta, rstd)
+
+
+def _tempo_ln_bwd(eps, impl, res, dy):
+    y, gamma, beta, rstd = res
+    if impl == "pallas":
+        dx, dg, db = ln_k.layernorm_bwd_pallas(dy, y, gamma, beta, rstd)
+    else:
+        dx, dg, db = ln_k.layernorm_bwd_jnp(dy, y, gamma, beta, rstd)
+    return dx, dg, db
+
+
+tempo_layernorm.defvjp(_tempo_ln_fwd, _tempo_ln_bwd)
+
+
+def baseline_layernorm(x, gamma, beta, eps: float = ln_k.EPS_DEFAULT):
+    return ref.layernorm(x, gamma, beta, eps)
+
+
+# --------------------------------------------------------------------------
+# Output-only softmax
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tempo_softmax(x, impl: str = "jnp"):
+    return _sm_fwd_impl(x, impl)
+
+
+def _sm_fwd_impl(x, impl):
+    if impl == "pallas":
+        return sm_k.softmax_fwd_pallas(x)
+    return sm_k.softmax_fwd_jnp(x)
+
+
+def _tempo_sm_fwd(x, impl):
+    y = _sm_fwd_impl(x, impl)
+    return y, (y,)
+
+
+def _tempo_sm_bwd(impl, res, dy):
+    (y,) = res
+    if impl == "pallas":
+        return (sm_k.softmax_bwd_pallas(dy, y),)
+    return (sm_k.softmax_bwd_jnp(dy, y),)
+
+
+tempo_softmax.defvjp(_tempo_sm_fwd, _tempo_sm_bwd)
+
+
+def baseline_softmax(x):
+    return ref.softmax(x, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Dropout (mask passed in; Tempo variant never retains the output)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def tempo_dropout(x, mask, p: float, impl: str = "jnp"):
+    """Dropout retaining only the int8 mask for backward."""
+    return _drp_impl(x, mask, p, impl)
+
+
+def _drp_impl(x, mask, p, impl):
+    if p <= 0.0:
+        return x
+    if impl == "pallas":
+        return drp_k.dropout_apply_pallas(x, mask, p)
+    return drp_k.dropout_apply_jnp(x, mask, p)
+
+
+def _tempo_drp_fwd(x, mask, p, impl):
+    return _drp_impl(x, mask, p, impl), (mask,)
+
+
+def _tempo_drp_bwd(p, impl, res, dy):
+    (mask,) = res
+    return _drp_impl(dy, mask, p, impl), None
+
+
+tempo_dropout.defvjp(_tempo_drp_fwd, _tempo_drp_bwd)
+
+
+def baseline_dropout(x, mask, p: float):
+    return ref.dropout(x, mask, p)
+
+
+# --------------------------------------------------------------------------
+# Fused Tempo attention core (softmax opt + sub-layer dropout recompute).
+# q, k, v: [B, A, S, D]; bias broadcastable [B,1,1,S] or [B,1,S,S];
+# mask: [B, A, S, S] int8 keep-mask.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def tempo_attention(q, k, v, bias, mask, p: float, impl: str = "jnp"):
+    ctx, _ = _attn_fwd_impl(q, k, v, bias, mask, p, impl)
+    return ctx
+
+
+def _attn_fwd_impl(q, k, v, bias, mask, p, impl):
+    if impl == "pallas":
+        return attn_k.attention_fwd_pallas(q, k, v, bias, mask, p)
+    return attn_k.attention_fwd_jnp(q, k, v, bias, mask, p)
+
+
+def _tempo_attn_fwd(q, k, v, bias, mask, p, impl):
+    ctx, probs = _attn_fwd_impl(q, k, v, bias, mask, p, impl)
+    # Residuals: q, k, v (needed for their own grads — also retained by the
+    # baseline), probs and the int8 mask. NOT scores / dropped.
+    return ctx, (q, k, v, probs, mask)
+
+
+def _tempo_attn_bwd(p, impl, res, dctx):
+    q, k, v, probs, mask = res
+    if impl == "pallas":
+        dq, dk, dv = attn_k.attention_bwd_pallas(dctx, q, k, v, probs, mask, p)
+    else:
+        dq, dk, dv = attn_k.attention_bwd_jnp(dctx, q, k, v, probs, mask, p)
+    return dq, dk, dv, None, None
+
+
+tempo_attention.defvjp(_tempo_attn_fwd, _tempo_attn_bwd)
+
+
+def baseline_attention(q, k, v, bias, mask, p: float):
+    """Plain autodiff attention: retains scores, probs, dropped output."""
+    return ref.attention(q, k, v, bias, mask, p)

@@ -1,0 +1,297 @@
+"""L2: BERT-family model (Fig 1 faithful) with selectable variant.
+
+Variants (the paper's three compared techniques):
+
+* ``baseline``   — plain autodiff everywhere (NVIDIA/HuggingFace BERT).
+* ``checkpoint`` — per-encoder-layer rematerialization
+  (``jax.checkpoint``), mirroring ``torch.utils.checkpoint`` applied at
+  each Transformer encoder layer's input.
+* ``tempo``      — In-place GELU + In-place LayerNorm + Sub-Layer Dropout
+  Recomputation + output-only softmax (all four of §3).
+
+Architecture is the HuggingFace BERT encoder (post-LN): embeddings
+(word+position+segment → LN → dropout), L × [self-attention → add&LN →
+FFN(4H, GELU) → add&LN], MLM head with tied decoder, and a sequence
+classification head (the MRPC fine-tuning analogue).
+
+Dropout masks are drawn in-graph from a scalar seed via fold_in per
+(layer, site), so every variant consumes bit-identical masks — loss
+curves are comparable point-for-point (Fig 6a).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import dropout as drp_k
+from .kernels import ref
+
+VARIANTS = ("baseline", "checkpoint", "tempo")
+
+NEG_INF = -1e9  # additive attention-mask fill, matches HF BERT
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters (paper §2.1 notation: H, S, A, L)."""
+
+    name: str = "bert-tiny"
+    vocab_size: int = 4096
+    hidden: int = 128  # H
+    layers: int = 2  # L
+    heads: int = 2  # A
+    seq_len: int = 64  # S
+    intermediate: int = 512  # 4H
+    max_position: int = 512
+    type_vocab: int = 2
+    dropout_p: float = 0.1
+    attn_dropout_p: float = 0.1
+    num_classes: int = 2  # for the classification head
+    variant: str = "baseline"
+    impl: str = "jnp"  # kernel path: "jnp" | "pallas"
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def with_variant(self, variant: str, impl: str = "jnp") -> "ModelConfig":
+        assert variant in VARIANTS, variant
+        return replace(self, variant=variant, impl=impl)
+
+
+# Predefined configs. `tiny` trains in seconds on the CPU PJRT client;
+# `mini` is the e2e example scale; `base`/`large` exist for lowering/shape
+# checks and the analytical models (training them on 1 CPU core is not
+# realistic — see DESIGN.md §2).
+CONFIGS = {
+    "tiny": ModelConfig(name="bert-tiny", vocab_size=4096, hidden=128, layers=2,
+                        heads=2, seq_len=64, intermediate=512),
+    "mini": ModelConfig(name="bert-mini", vocab_size=8192, hidden=256, layers=4,
+                        heads=4, seq_len=128, intermediate=1024),
+    "small": ModelConfig(name="bert-small", vocab_size=16384, hidden=512, layers=6,
+                         heads=8, seq_len=128, intermediate=2048),
+    "base": ModelConfig(name="bert-base", vocab_size=30522, hidden=768, layers=12,
+                        heads=12, seq_len=128, intermediate=3072),
+    "large": ModelConfig(name="bert-large", vocab_size=30522, hidden=1024, layers=24,
+                         heads=16, seq_len=128, intermediate=4096),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter init (truncated-normal-ish; std 0.02 like BERT)
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Nested param dict. Flattening order (sorted keys) is the ABI the
+    Rust runtime relies on — see aot.py manifest."""
+    std = 0.02
+    k_iter = iter(jax.random.split(key, 16 + 16 * cfg.layers))
+
+    def dense(kk, n_in, n_out):
+        return {
+            "w": jax.random.normal(kk, (n_in, n_out), jnp.float32) * std,
+            "b": jnp.zeros((n_out,), jnp.float32),
+        }
+
+    def ln():
+        return {
+            "gamma": jnp.ones((cfg.hidden,), jnp.float32),
+            "beta": jnp.zeros((cfg.hidden,), jnp.float32),
+        }
+
+    params = {
+        "embeddings": {
+            "word": jax.random.normal(next(k_iter), (cfg.vocab_size, cfg.hidden), jnp.float32) * std,
+            "position": jax.random.normal(next(k_iter), (cfg.max_position, cfg.hidden), jnp.float32) * std,
+            "token_type": jax.random.normal(next(k_iter), (cfg.type_vocab, cfg.hidden), jnp.float32) * std,
+            "ln": ln(),
+        },
+        "encoder": {},
+        "mlm": {
+            "transform": dense(next(k_iter), cfg.hidden, cfg.hidden),
+            "ln": ln(),
+            "decoder_bias": jnp.zeros((cfg.vocab_size,), jnp.float32),
+        },
+        "cls": {
+            "pooler": dense(next(k_iter), cfg.hidden, cfg.hidden),
+            "classifier": dense(next(k_iter), cfg.hidden, cfg.num_classes),
+        },
+    }
+    for i in range(cfg.layers):
+        params["encoder"][f"layer_{i:02d}"] = {
+            "attn": {
+                "q": dense(next(k_iter), cfg.hidden, cfg.hidden),
+                "k": dense(next(k_iter), cfg.hidden, cfg.hidden),
+                "v": dense(next(k_iter), cfg.hidden, cfg.hidden),
+                "o": dense(next(k_iter), cfg.hidden, cfg.hidden),
+                "ln": ln(),
+            },
+            "ffn": {
+                "fc1": dense(next(k_iter), cfg.hidden, cfg.intermediate),
+                "fc2": dense(next(k_iter), cfg.intermediate, cfg.hidden),
+                "ln": ln(),
+            },
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Variant-dispatched primitive ops
+# --------------------------------------------------------------------------
+
+
+def _gelu(cfg, x):
+    if cfg.variant == "tempo":
+        return L.tempo_gelu(x, cfg.impl)
+    return L.baseline_gelu(x)
+
+
+def _layernorm(cfg, x, p):
+    if cfg.variant == "tempo":
+        return L.tempo_layernorm(x, p["gamma"], p["beta"], 1e-12, cfg.impl)
+    return L.baseline_layernorm(x, p["gamma"], p["beta"])
+
+
+def _dropout(cfg, x, key, p_rate, train):
+    if not train or p_rate <= 0.0:
+        return x
+    mask = drp_k.make_mask(key, x.shape, p_rate)
+    if cfg.variant == "tempo":
+        return L.tempo_dropout(x, mask, p_rate, cfg.impl)
+    return L.baseline_dropout(x, mask, p_rate)
+
+
+def _attention_core(cfg, q, k, v, bias, key, train):
+    p = cfg.attn_dropout_p if train else 0.0
+    mask = drp_k.make_mask(key, (q.shape[0], q.shape[1], q.shape[2], q.shape[2]), p)
+    if cfg.variant == "tempo":
+        return L.tempo_attention(q, k, v, bias, mask, p, cfg.impl)
+    return L.baseline_attention(q, k, v, bias, mask, p)
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# --------------------------------------------------------------------------
+# Encoder
+# --------------------------------------------------------------------------
+
+
+def _split_heads(cfg, x):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(cfg, x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def encoder_layer(cfg: ModelConfig, p, x, bias, key, train: bool):
+    """One Transformer encoder layer per Fig 1."""
+    k_attn, k_hdrop1, k_hdrop2 = jax.random.split(key, 3)
+    q = _split_heads(cfg, _dense(p["attn"]["q"], x))
+    k = _split_heads(cfg, _dense(p["attn"]["k"], x))
+    v = _split_heads(cfg, _dense(p["attn"]["v"], x))
+    ctx = _attention_core(cfg, q, k, v, bias, k_attn, train)
+    attn_out = _dense(p["attn"]["o"], _merge_heads(cfg, ctx))
+    attn_out = _dropout(cfg, attn_out, k_hdrop1, cfg.dropout_p, train)
+    x = _layernorm(cfg, x + attn_out, p["attn"]["ln"])
+    h = _gelu(cfg, _dense(p["ffn"]["fc1"], x))
+    h = _dense(p["ffn"]["fc2"], h)
+    h = _dropout(cfg, h, k_hdrop2, cfg.dropout_p, train)
+    return _layernorm(cfg, x + h, p["ffn"]["ln"])
+
+
+def encode(cfg: ModelConfig, params, input_ids, token_type_ids, attention_mask,
+           key, train: bool):
+    """Embeddings + L encoder layers → hidden states [B, S, H]."""
+    emb = params["embeddings"]
+    b, s = input_ids.shape
+    pos_ids = jnp.arange(s)[None, :]
+    x = (
+        emb["word"][input_ids]
+        + emb["position"][pos_ids]
+        + emb["token_type"][token_type_ids]
+    )
+    x = _layernorm(cfg, x, emb["ln"])
+    k_emb, key = jax.random.split(key)
+    x = _dropout(cfg, x, k_emb, cfg.dropout_p, train)
+    # additive mask: [B, 1, 1, S], 0 where attended, NEG_INF where padded
+    bias = (1.0 - attention_mask[:, None, None, :].astype(x.dtype)) * NEG_INF
+
+    layer_keys = jax.random.split(key, cfg.layers)
+    for i in range(cfg.layers):
+        lp = params["encoder"][f"layer_{i:02d}"]
+        if cfg.variant == "checkpoint":
+            # PyTorch-style whole-layer checkpointing: stash only the layer
+            # input, recompute everything inside during backward.
+            layer_fn = jax.checkpoint(
+                partial(encoder_layer, cfg, train=train),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+            x = layer_fn(lp, x, bias, layer_keys[i])
+        else:
+            x = encoder_layer(cfg, lp, x, bias, layer_keys[i], train=train)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Heads and losses
+# --------------------------------------------------------------------------
+
+
+def mlm_logits(cfg: ModelConfig, params, hidden):
+    """MLM head: transform → GELU → LN → tied decoder + bias."""
+    p = params["mlm"]
+    h = _dense(p["transform"], hidden)
+    h = _gelu(cfg, h)
+    h = _layernorm(cfg, h, p["ln"])
+    return h @ params["embeddings"]["word"].T + p["decoder_bias"]
+
+
+def mlm_loss(cfg: ModelConfig, params, batch, key, train: bool = True):
+    """Masked-LM cross entropy; labels == -100 are ignored (HF convention)."""
+    hidden = encode(cfg, params, batch["input_ids"], batch["token_type_ids"],
+                    batch["attention_mask"], key, train)
+    logits = mlm_logits(cfg, params, hidden)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe_labels[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    count = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / count.astype(nll.dtype)
+
+
+def cls_logits(cfg: ModelConfig, params, hidden):
+    """Sequence classification: tanh pooler over [CLS] → classifier."""
+    p = params["cls"]
+    pooled = jnp.tanh(_dense(p["pooler"], hidden[:, 0]))
+    return _dense(p["classifier"], pooled)
+
+
+def cls_loss(cfg: ModelConfig, params, batch, key, train: bool = True):
+    hidden = encode(cfg, params, batch["input_ids"], batch["token_type_ids"],
+                    batch["attention_mask"], key, train)
+    logits = cls_logits(cfg, params, hidden)
+    labels = batch["labels"][:, 0]  # [B] packed in column 0
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def cls_accuracy(cfg: ModelConfig, params, batch, key):
+    hidden = encode(cfg, params, batch["input_ids"], batch["token_type_ids"],
+                    batch["attention_mask"], key, train=False)
+    logits = cls_logits(cfg, params, hidden)
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.mean((pred == batch["labels"][:, 0]).astype(jnp.float32))

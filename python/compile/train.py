@@ -1,0 +1,135 @@
+"""Training step: AdamW fused in-graph, lowered per (config, variant).
+
+The exported ``train_step`` is a pure function
+
+    (params, m, v, input_ids, token_type_ids, attention_mask, labels,
+     step, seed, lr) → (params', m', v', loss)
+
+so the Rust coordinator owns the schedule (lr as a scalar input) and the
+PRNG stream (seed as a scalar input) while everything numeric stays
+inside one XLA executable. Optimizer state and params round-trip as the
+flat leaf list described by the AOT manifest.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)  # noqa: E731
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def _is_no_decay(path) -> bool:
+    """BERT convention: no weight decay on biases and LayerNorm params."""
+    names = {getattr(p, "key", getattr(p, "name", "")) for p in path}
+    return bool(names & {"b", "beta", "gamma", "decoder_bias"})
+
+
+def adamw_update(params, grads, m, v, step, lr):
+    """One AdamW step (decoupled weight decay, bias-corrected)."""
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - ADAM_B1**t
+    c2 = 1.0 - ADAM_B2**t
+
+    def upd(path, p, g, m_, v_):
+        m_n = ADAM_B1 * m_ + (1.0 - ADAM_B1) * g
+        v_n = ADAM_B2 * v_ + (1.0 - ADAM_B2) * jnp.square(g)
+        update = (m_n / c1) / (jnp.sqrt(v_n / c2) + ADAM_EPS)
+        if not _is_no_decay(path):
+            update = update + WEIGHT_DECAY * p
+        return p - lr * update, m_n, v_n
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    gs = jax.tree_util.tree_leaves(grads)
+    ms = jax.tree_util.tree_leaves(m)
+    vs = jax.tree_util.tree_leaves(v)
+    out = [upd(path, p, g, m_, v_) for (path, p), g, m_, v_ in zip(flat, gs, ms, vs)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def make_batch_struct(cfg: M.ModelConfig, batch_size: int):
+    """ShapeDtypeStructs of the batch tensors (ABI with the Rust side)."""
+    bs = (batch_size, cfg.seq_len)
+    i32 = jnp.int32
+    return {
+        "input_ids": jax.ShapeDtypeStruct(bs, i32),
+        "token_type_ids": jax.ShapeDtypeStruct(bs, i32),
+        "attention_mask": jax.ShapeDtypeStruct(bs, i32),
+        "labels": jax.ShapeDtypeStruct(bs, i32),
+    }
+
+
+def _rng(seed):
+    return jax.random.PRNGKey(seed)
+
+
+def train_step(cfg: M.ModelConfig, task: str, params, m, v,
+               input_ids, token_type_ids, attention_mask, labels,
+               step, seed, lr):
+    """One optimizer step. task: 'mlm' | 'cls'."""
+    batch = {
+        "input_ids": input_ids,
+        "token_type_ids": token_type_ids,
+        "attention_mask": attention_mask,
+        "labels": labels,
+    }
+    loss_fn = M.mlm_loss if task == "mlm" else M.cls_loss
+    key = jax.random.fold_in(_rng(seed), step)
+
+    def objective(p):
+        return loss_fn(cfg, p, batch, key, train=True)
+
+    loss, grads = jax.value_and_grad(objective)(params)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, loss
+
+
+def eval_step(cfg: M.ModelConfig, task: str, params,
+              input_ids, token_type_ids, attention_mask, labels, seed):
+    """Loss (mlm/cls) and accuracy (cls only; mlm returns masked accuracy)."""
+    batch = {
+        "input_ids": input_ids,
+        "token_type_ids": token_type_ids,
+        "attention_mask": attention_mask,
+        "labels": labels,
+    }
+    key = _rng(seed)
+    if task == "cls":
+        loss = M.cls_loss(cfg, params, batch, key, train=False)
+        acc = M.cls_accuracy(cfg, params, batch, key)
+        return loss, acc
+    loss = M.mlm_loss(cfg, params, batch, key, train=False)
+    return loss, loss * 0.0  # keep a uniform (loss, metric) signature
+
+
+def make_train_step_fn(cfg: M.ModelConfig, task: str = "mlm"):
+    return partial(train_step, cfg, task)
+
+
+def make_eval_fn(cfg: M.ModelConfig, task: str = "mlm"):
+    return partial(eval_step, cfg, task)
+
+
+def make_init_fn(cfg: M.ModelConfig):
+    def init(seed):
+        params = M.init_params(cfg, _rng(seed))
+        m, v = init_opt_state(params)
+        return params, m, v
+
+    return init

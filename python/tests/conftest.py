@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rs():
+    """Deterministic numpy RandomState per test."""
+    return np.random.RandomState(0)
+
+
+def assert_allclose(a, b, atol=1e-5, rtol=1e-5, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol,
+                               err_msg=msg)

@@ -1,0 +1,94 @@
+"""§5.1 generic in-place elementwise extension vs autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise as ew
+from compile.kernels import gelu as gelu_hand
+
+
+class TestSpecs:
+    def test_silu_minimum_found(self):
+        # SiLU has a single interior minimum near x ≈ -1.2784645
+        assert len(ew.SILU_SPEC.extrema) == 1
+        assert abs(ew.SILU_SPEC.extrema[0] + 1.2784645) < 1e-4
+
+    def test_gelu_minimum_matches_hand_kernel(self):
+        assert len(ew.GELU_SPEC.extrema) == 1
+        assert abs(ew.GELU_SPEC.extrema[0] - gelu_hand.XSTAR) < 1e-6
+
+    def test_fit_error_budgets(self):
+        assert ew.SILU_SPEC.max_fit_err < 2e-3
+        assert ew.GELU_SPEC.max_fit_err < 2e-3
+
+    def test_branch_count_is_extrema_plus_one(self):
+        for spec in (ew.SILU_SPEC, ew.GELU_SPEC):
+            assert len(spec.branches) == len(spec.extrema) + 1
+
+
+class TestIndicator:
+    def test_gelu_indicator_matches_mask(self, rs):
+        x = jnp.asarray(rs.randn(64) * 2, jnp.float32)
+        m = ew.branch_indicator(ew.GELU_SPEC, x)
+        _, m_hand = gelu_hand.gelu_fwd_jnp(x)
+        assert (np.asarray(m) == np.asarray(m_hand)).all()
+
+    def test_indicator_is_int8(self, rs):
+        x = jnp.asarray(rs.randn(8), jnp.float32)
+        assert ew.branch_indicator(ew.SILU_SPEC, x).dtype == jnp.int8
+
+
+class TestGradFromOutput:
+    def test_silu_grad_close_to_truth(self):
+        x = jnp.asarray(np.linspace(-7, 8, 100001), jnp.float32)
+        y = ew.silu_jnp(x)
+        m = ew.branch_indicator(ew.SILU_SPEC, x)
+        g = ew.grad_from_output(ew.SILU_SPEC, y, m)
+        truth = jnp.asarray(ew._dsilu64(np.asarray(x, np.float64)), jnp.float32)
+        err = np.abs(np.asarray(g) - np.asarray(truth))
+        assert err.max() < 5e-3, err.max()
+
+    def test_gelu_generic_close_to_hand_kernel(self):
+        x = jnp.asarray(np.linspace(-6, 8, 50001), jnp.float32)
+        y, m = gelu_hand.gelu_fwd_jnp(x)
+        g_hand = gelu_hand.DEFAULT_APPROX.g_of_y(y, m)
+        g_gen = ew.grad_from_output(ew.GELU_SPEC, y, ew.branch_indicator(ew.GELU_SPEC, x))
+        err = np.abs(np.asarray(g_hand) - np.asarray(g_gen))
+        assert err.max() < 5e-3, err.max()
+
+
+class TestLayer:
+    def test_inplace_silu_grad_matches_autodiff(self, rs):
+        x = jnp.asarray(rs.randn(16, 32) * 2, jnp.float32)
+        dy = jnp.asarray(rs.randn(16, 32), jnp.float32)
+        dx = jax.grad(lambda t: jnp.sum(ew.inplace_silu(t) * dy))(x)
+        dx_true = jax.grad(lambda t: jnp.sum(ew.silu_jnp(t) * dy))(x)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_true), atol=1e-2, rtol=0)
+
+    def test_residuals_are_output_and_int8(self, rs):
+        x = jnp.asarray(rs.randn(8, 8), jnp.float32)
+        y = ew.silu_jnp(x)
+        m = ew.branch_indicator(ew.SILU_SPEC, x)
+        # the factory's fwd stores exactly (y, m): reconstructable grads
+        g = ew.grad_from_output(ew.SILU_SPEC, y, m)
+        assert g.shape == x.shape
+        assert m.dtype.itemsize == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(1, 48),
+    scale=st.floats(0.2, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_silu_inplace_grads(rows, cols, scale, seed):
+    """Property: the §5.1 factory output == autodiff for any shape."""
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(rows, cols) * scale, jnp.float32)
+    dy = jnp.asarray(rs.randn(rows, cols), jnp.float32)
+    dx = jax.grad(lambda t: jnp.sum(ew.inplace_silu(t) * dy))(x)
+    dx_true = jax.grad(lambda t: jnp.sum(ew.silu_jnp(t) * dy))(x)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_true), atol=2e-2, rtol=0)

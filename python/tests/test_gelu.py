@@ -1,0 +1,153 @@
+"""In-place GELU: inverse-composition approximation + kernels vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gelu, ref
+
+from .conftest import assert_allclose
+
+APPROX_TOL = 2e-3  # the paper's "tunable lossy" budget; we land well under
+
+
+class TestMinimum:
+    def test_xstar_is_a_critical_point(self):
+        # float64 oracle (jax runs in f32 here, so use the numpy fitter's)
+        g = float(gelu._gelu_grad64(np.asarray(gelu.XSTAR)))
+        assert abs(g) < 1e-9
+
+    def test_ystar_matches_gelu_at_xstar(self):
+        y = float(gelu._gelu64(np.asarray(gelu.XSTAR)))
+        assert abs(y - gelu.YSTAR) < 1e-12
+
+    def test_minimum_is_global_on_grid(self):
+        xs = jnp.linspace(-10, 10, 100001)
+        ys = ref.gelu(xs)
+        assert float(ys.min()) >= gelu.YSTAR - 1e-6
+
+
+class TestApproximation:
+    def test_fit_error_budgets(self):
+        ap = gelu.GeluApprox.fit()
+        assert ap.max_err_pos < 1e-6
+        assert ap.max_err_neg < 1e-3
+
+    def test_g_of_y_matches_true_derivative_densely(self):
+        ap = gelu.DEFAULT_APPROX
+        x = jnp.asarray(np.linspace(-8.0, 10.0, 200001), jnp.float32)
+        y, m = gelu.gelu_fwd_jnp(x)
+        g = ap.g_of_y(y, m)
+        err = np.abs(np.asarray(g) - np.asarray(ref.gelu_grad(x)))
+        assert err.max() < APPROX_TOL, f"max err {err.max()}"
+
+    def test_tunable_tradeoff_more_segments_less_error(self):
+        lo = gelu.GeluApprox.fit(degree=5, n_seg_pos=2, n_seg_neg=2)
+        hi = gelu.GeluApprox.fit(degree=11, n_seg_pos=8, n_seg_neg=8)
+        assert hi.max_err_pos <= lo.max_err_pos
+        assert hi.max_err_neg <= lo.max_err_neg
+
+    def test_positive_tail_is_analytic(self):
+        # beyond Y_HI the derivative comes from GELU'(y) directly
+        x = jnp.asarray([7.0, 9.0, 25.0], jnp.float32)
+        y, m = gelu.gelu_fwd_jnp(x)
+        g = gelu.DEFAULT_APPROX.g_of_y(y, m)
+        assert_allclose(g, ref.gelu_grad(x), atol=1e-6)
+
+    def test_negative_tail_clamps_to_zero(self):
+        x = jnp.asarray([-6.0, -12.0], jnp.float32)
+        y, m = gelu.gelu_fwd_jnp(x)
+        g = gelu.DEFAULT_APPROX.g_of_y(y, m)
+        assert np.abs(np.asarray(g)).max() < 1e-3
+
+
+class TestForward:
+    def test_fwd_jnp_matches_reference(self, rs):
+        x = jnp.asarray(rs.randn(4, 33, 65), jnp.float32)
+        y, m = gelu.gelu_fwd_jnp(x)
+        assert_allclose(y, ref.gelu(x), atol=1e-6)
+        assert m.dtype == jnp.int8
+
+    def test_mask_semantics(self):
+        x = jnp.asarray([-3.0, gelu.XSTAR - 1e-3, gelu.XSTAR + 1e-3, 0.0, 5.0], jnp.float32)
+        _, m = gelu.gelu_fwd_jnp(x)
+        assert list(np.asarray(m)) == [0, 0, 1, 1, 1]
+
+    def test_fwd_pallas_matches_jnp(self, rs):
+        x = jnp.asarray(rs.randn(3, 17, 32), jnp.float32)
+        yp, mp = gelu.gelu_fwd_pallas(x)
+        yj, mj = gelu.gelu_fwd_jnp(x)
+        assert_allclose(yp, yj, atol=1e-6)
+        assert (np.asarray(mp) == np.asarray(mj)).all()
+
+
+class TestBackward:
+    def test_bwd_jnp_matches_input_based(self, rs):
+        x = jnp.asarray(rs.randn(8, 64) * 2.0, jnp.float32)
+        dy = jnp.asarray(rs.randn(8, 64), jnp.float32)
+        y, m = gelu.gelu_fwd_jnp(x)
+        dx = gelu.gelu_bwd_jnp(dy, y, m)
+        dx_ref = ref.gelu_bwd_from_input(dy, x)
+        assert_allclose(dx, dx_ref, atol=5 * APPROX_TOL, rtol=0)
+
+    def test_bwd_pallas_matches_jnp(self, rs):
+        x = jnp.asarray(rs.randn(5, 40) * 2.0, jnp.float32)
+        dy = jnp.asarray(rs.randn(5, 40), jnp.float32)
+        y, m = gelu.gelu_fwd_jnp(x)
+        assert_allclose(
+            gelu.gelu_bwd_pallas(dy, y, m),
+            gelu.gelu_bwd_jnp(dy, y, m),
+            atol=1e-4,
+        )
+
+    def test_memory_contract_mask_is_one_byte(self, rs):
+        x = jnp.asarray(rs.randn(16, 16), jnp.float32)
+        _, m = gelu.gelu_fwd_jnp(x)
+        assert m.dtype.itemsize == 1  # paper footnote 3
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    cols=st.integers(1, 65),
+    scale=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_gelu_bwd_close_to_autodiff(rows, cols, scale, seed):
+    """Property: for any shape/scale, Tempo GELU grad ≈ autodiff grad."""
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(rows, cols) * scale, jnp.float32)
+    dy = jnp.asarray(rs.randn(rows, cols), jnp.float32)
+    y, m = gelu.gelu_fwd_jnp(x)
+    dx = gelu.gelu_bwd_jnp(dy, y, m)
+    dx_true = ref.gelu_bwd_from_input(dy, x)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_true), atol=2e-2, rtol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.sampled_from([1, 7, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_pallas_fwd_any_shape(rows, cols, seed):
+    """Property: pallas fwd handles non-multiple-of-block shapes."""
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(rows, cols), jnp.float32)
+    yp, mp = gelu.gelu_fwd_pallas(x, block_rows=4)
+    yj, mj = gelu.gelu_fwd_jnp(x)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yj), atol=1e-6)
+    assert (np.asarray(mp) == np.asarray(mj)).all()
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 4e-2)])
+def test_dtype_sweep(dtype, tol, rs):
+    x = jnp.asarray(rs.randn(64, 64), dtype)
+    y, m = gelu.gelu_fwd_jnp(x)
+    g = gelu.DEFAULT_APPROX.g_of_y(y, m)
+    gt = ref.gelu_grad(x.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(g, dtype=np.float32), np.asarray(gt), atol=tol, rtol=0
+    )

@@ -1,0 +1,109 @@
+"""In-place LayerNorm: Appendix D derivation is lossless vs autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layernorm as ln, ref
+
+from .conftest import assert_allclose
+
+
+def _inputs(rs, shape, h):
+    x = jnp.asarray(rs.randn(*shape, h) * 1.5 + 0.3, jnp.float32)
+    gamma = jnp.asarray(rs.rand(h) + 0.5, jnp.float32)
+    beta = jnp.asarray(rs.randn(h), jnp.float32)
+    return x, gamma, beta
+
+
+class TestForward:
+    def test_fwd_matches_reference(self, rs):
+        x, g, b = _inputs(rs, (4, 7), 32)
+        y, rstd = ln.layernorm_fwd_jnp(x, g, b)
+        assert_allclose(y, ref.layernorm(x, g, b), atol=1e-6)
+        _, rstd_ref = ref.layernorm_stats(x)
+        assert_allclose(rstd, rstd_ref[..., 0], atol=1e-5)
+
+    def test_fwd_pallas_matches_jnp(self, rs):
+        x, g, b = _inputs(rs, (3, 5), 16)
+        yp, rp = ln.layernorm_fwd_pallas(x, g, b)
+        yj, rj = ln.layernorm_fwd_jnp(x, g, b)
+        assert_allclose(yp, yj, atol=1e-5)
+        assert_allclose(rp, rj, atol=1e-4, rtol=1e-4)
+
+    def test_rows_are_normalized(self, rs):
+        x, g, b = _inputs(rs, (2, 3), 64)
+        y, _ = ln.layernorm_fwd_jnp(x, jnp.ones(64), jnp.zeros(64))
+        assert np.abs(np.asarray(y.mean(-1))).max() < 1e-5
+        assert np.abs(np.asarray(y.std(-1)) - 1.0).max() < 1e-3
+
+
+class TestBackward:
+    def test_bwd_matches_autodiff(self, rs):
+        x, g, b = _inputs(rs, (4, 9), 24)
+        dy = jnp.asarray(rs.randn(4, 9, 24), jnp.float32)
+
+        def f(x, g, b):
+            return jnp.sum(ref.layernorm(x, g, b) * dy)
+
+        dx_t, dg_t, db_t = jax.grad(f, (0, 1, 2))(x, g, b)
+        y, rstd = ln.layernorm_fwd_jnp(x, g, b)
+        dx, dg, db = ln.layernorm_bwd_jnp(dy, y, g, b, rstd)
+        assert_allclose(dx, dx_t, atol=2e-5)
+        assert_allclose(dg, dg_t, atol=2e-4, rtol=1e-4)
+        assert_allclose(db, db_t, atol=2e-4, rtol=1e-4)
+
+    def test_bwd_pallas_matches_jnp(self, rs):
+        x, g, b = _inputs(rs, (6,), 20)
+        dy = jnp.asarray(rs.randn(6, 20), jnp.float32)
+        y, rstd = ln.layernorm_fwd_jnp(x, g, b)
+        dxp, dgp, dbp = ln.layernorm_bwd_pallas(dy, y, g, b, rstd, block_rows=4)
+        dxj, dgj, dbj = ln.layernorm_bwd_jnp(dy, y, g, b, rstd)
+        assert_allclose(dxp, dxj, atol=1e-5)
+        assert_allclose(dgp, dgj, atol=1e-5)
+        assert_allclose(dbp, dbj, atol=1e-5)
+
+    def test_closed_form_second_oracle(self, rs):
+        # ref.layernorm_bwd_from_output is an independent derivation copy;
+        # both must agree (guards against symmetric typos).
+        x, g, b = _inputs(rs, (5,), 12)
+        dy = jnp.asarray(rs.randn(5, 12), jnp.float32)
+        y, rstd = ln.layernorm_fwd_jnp(x, g, b)
+        a = ln.layernorm_bwd_jnp(dy, y, g, b, rstd)
+        c = ref.layernorm_bwd_from_output(dy, y, g, b, rstd[..., None])
+        for u, v in zip(a, c):
+            assert_allclose(u, v, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 17),
+    h=st.integers(2, 96),
+    seed=st.integers(0, 2**31 - 1),
+    shift=st.floats(-3.0, 3.0),
+)
+def test_hypothesis_inplace_ln_equals_autodiff(rows, h, seed, shift):
+    """Property: for any (rows, H), output-based LN grads == autodiff."""
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(rows, h) + shift, jnp.float32)
+    gamma = jnp.asarray(rs.rand(h) + 0.5, jnp.float32)
+    beta = jnp.asarray(rs.randn(h), jnp.float32)
+    dy = jnp.asarray(rs.randn(rows, h), jnp.float32)
+
+    def f(x, gamma, beta):
+        return jnp.sum(ref.layernorm(x, gamma, beta) * dy)
+
+    dx_t, dg_t, db_t = jax.grad(f, (0, 1, 2))(x, gamma, beta)
+    y, rstd = ln.layernorm_fwd_jnp(x, gamma, beta)
+    dx, dg, db = ln.layernorm_bwd_jnp(dy, y, gamma, beta, rstd)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_t), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(dg), np.asarray(dg_t), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_t), atol=1e-3, rtol=1e-3)
+
+
+def test_memory_contract_residuals(rs):
+    """The in-place variant's extra stash is O(rows), not O(rows·H)."""
+    x, g, b = _inputs(rs, (8, 16), 128)
+    _, rstd = ln.layernorm_fwd_jnp(x, g, b)
+    assert rstd.shape == (8, 16)  # B×S, last axis dropped

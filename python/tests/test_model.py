@@ -1,0 +1,180 @@
+"""Model-level numerics: variants agree, training improves loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M, train as T
+
+from .conftest import assert_allclose
+
+CFG = M.CONFIGS["tiny"]
+
+
+def _batch(rs, cfg, b, task="mlm"):
+    ids = rs.randint(5, cfg.vocab_size, size=(b, cfg.seq_len)).astype(np.int32)
+    labels = np.full((b, cfg.seq_len), -100, np.int32)
+    mask_positions = rs.rand(b, cfg.seq_len) < 0.15
+    labels[mask_positions] = ids[mask_positions]
+    if task == "cls":
+        labels = np.full((b, cfg.seq_len), 0, np.int32)
+        labels[:, 0] = rs.randint(0, 2, size=b)
+    return {
+        "input_ids": jnp.asarray(ids),
+        "token_type_ids": jnp.zeros((b, cfg.seq_len), jnp.int32),
+        "attention_mask": jnp.ones((b, cfg.seq_len), jnp.int32),
+        "labels": jnp.asarray(labels),
+    }
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+class TestInit:
+    def test_param_tree_shape(self, params):
+        leaves = jax.tree_util.tree_leaves(params)
+        assert len(leaves) == 46  # matches the exported manifests
+        total = sum(int(np.prod(l.shape)) for l in leaves)
+        assert total > CFG.vocab_size * CFG.hidden  # embeddings dominate
+
+    def test_layernorm_init_is_identity(self, params):
+        ln = params["encoder"]["layer_00"]["attn"]["ln"]
+        assert (np.asarray(ln["gamma"]) == 1.0).all()
+        assert (np.asarray(ln["beta"]) == 0.0).all()
+
+
+class TestVariantEquivalence:
+    """Fig 6a's premise: tempo/checkpoint losses track baseline exactly
+    (same masks, same data) up to the GELU approximation."""
+
+    def test_eval_losses_agree_across_variants(self, params, rs):
+        batch = _batch(rs, CFG, 4)
+        key = jax.random.PRNGKey(9)
+        losses = {}
+        for variant in M.VARIANTS:
+            cfg = CFG.with_variant(variant)
+            losses[variant] = float(M.mlm_loss(cfg, params, batch, key, train=False))
+        assert abs(losses["baseline"] - losses["checkpoint"]) < 1e-6
+        assert abs(losses["baseline"] - losses["tempo"]) < 1e-3
+
+    def test_train_losses_agree_with_shared_masks(self, params, rs):
+        batch = _batch(rs, CFG, 4)
+        key = jax.random.PRNGKey(11)
+        base = float(M.mlm_loss(CFG.with_variant("baseline"), params, batch, key, train=True))
+        temp = float(M.mlm_loss(CFG.with_variant("tempo"), params, batch, key, train=True))
+        chkp = float(M.mlm_loss(CFG.with_variant("checkpoint"), params, batch, key, train=True))
+        assert abs(base - chkp) < 1e-5
+        assert abs(base - temp) < 2e-3
+
+    def test_gradients_agree_across_variants(self, params, rs):
+        batch = _batch(rs, CFG, 2)
+        key = jax.random.PRNGKey(3)
+
+        def gradnorm(cfg):
+            g = jax.grad(lambda p: M.mlm_loss(cfg, p, batch, key, train=True))(params)
+            return jnp.sqrt(
+                sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(g))
+            )
+
+        gb = float(gradnorm(CFG.with_variant("baseline")))
+        gt = float(gradnorm(CFG.with_variant("tempo")))
+        gc = float(gradnorm(CFG.with_variant("checkpoint")))
+        assert abs(gb - gc) / gb < 1e-4
+        assert abs(gb - gt) / gb < 5e-3  # GELU approximation budget
+
+
+class TestTraining:
+    def test_loss_decreases_over_steps(self, rs):
+        cfg = CFG.with_variant("tempo")
+        step_fn = jax.jit(
+            lambda p, m, v, b, s: T.train_step(
+                cfg, "mlm", p, m, v,
+                b["input_ids"], b["token_type_ids"], b["attention_mask"],
+                b["labels"], s, jnp.asarray(0, jnp.int32),
+                jnp.asarray(1e-3, jnp.float32),
+            )
+        )
+        params = M.init_params(cfg, jax.random.PRNGKey(1))
+        m, v = T.init_opt_state(params)
+        batch = _batch(rs, cfg, 4)
+        losses = []
+        for s in range(8):
+            params, m, v, loss = step_fn(params, m, v, batch, jnp.asarray(s, jnp.int32))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_cls_task_loss_and_accuracy(self, params, rs):
+        batch = _batch(rs, CFG, 8, task="cls")
+        loss, acc = T.eval_step(
+            CFG, "cls", params,
+            batch["input_ids"], batch["token_type_ids"],
+            batch["attention_mask"], batch["labels"],
+            jnp.asarray(0, jnp.int32),
+        )
+        assert 0.0 <= float(acc) <= 1.0
+        assert 0.3 < float(loss) < 2.0  # near ln(2) at init
+
+    def test_adamw_moves_every_leaf(self, params):
+        grads = jax.tree.map(jnp.ones_like, params)
+        m, v = T.init_opt_state(params)
+        new_p, new_m, new_v = T.adamw_update(
+            params, grads, m, v, jnp.asarray(0, jnp.int32), jnp.asarray(1e-2, jnp.float32)
+        )
+        moved = jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, new_p)
+        assert all(jax.tree_util.tree_leaves(moved))
+
+    def test_no_decay_on_norm_params(self):
+        # weight decay must not leak into gamma/beta/bias updates
+        p = {"ln": {"gamma": jnp.ones((4,))}, "w": jnp.ones((4,))}
+        g = jax.tree.map(jnp.zeros_like, p)
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        np_, _, _ = T.adamw_update(p, g, m, v, jnp.asarray(0, jnp.int32), jnp.asarray(0.1, jnp.float32))
+        # zero grad → gamma unchanged; w shrinks by lr*wd*w
+        assert (np.asarray(np_["ln"]["gamma"]) == 1.0).all()
+        assert (np.asarray(np_["w"]) < 1.0).all()
+
+
+class TestDropoutDeterminism:
+    def test_same_seed_same_loss(self, params, rs):
+        batch = _batch(rs, CFG, 2)
+        key = jax.random.PRNGKey(17)
+        a = float(M.mlm_loss(CFG, params, batch, key, train=True))
+        b = float(M.mlm_loss(CFG, params, batch, key, train=True))
+        assert a == b
+
+    def test_different_seed_different_loss(self, params, rs):
+        batch = _batch(rs, CFG, 2)
+        a = float(M.mlm_loss(CFG, params, batch, jax.random.PRNGKey(1), train=True))
+        b = float(M.mlm_loss(CFG, params, batch, jax.random.PRNGKey(2), train=True))
+        assert a != b
+
+
+class TestPallasPath:
+    """The L1 kernels compose inside the full model (interpret mode)."""
+
+    def test_pallas_model_matches_jnp_model(self, params, rs):
+        batch = _batch(rs, CFG, 2)
+        key = jax.random.PRNGKey(5)
+        jnp_loss = float(
+            M.mlm_loss(CFG.with_variant("tempo", "jnp"), params, batch, key, train=True)
+        )
+        pallas_loss = float(
+            M.mlm_loss(CFG.with_variant("tempo", "pallas"), params, batch, key, train=True)
+        )
+        assert abs(jnp_loss - pallas_loss) < 1e-3, (jnp_loss, pallas_loss)
+
+    def test_pallas_grad_matches_jnp_grad(self, params, rs):
+        batch = _batch(rs, CFG, 1)
+        key = jax.random.PRNGKey(6)
+
+        def loss_with(impl):
+            cfg = CFG.with_variant("tempo", impl)
+            g = jax.grad(lambda p: M.mlm_loss(cfg, p, batch, key, train=True))(params)
+            return jax.tree_util.tree_leaves(g)
+
+        for a, b in zip(loss_with("jnp"), loss_with("pallas")):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3, rtol=1e-2)

@@ -1,0 +1,121 @@
+"""Output-only softmax + sub-layer dropout recomputation vs autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dropout as drp, ref, softmax as sm
+
+from .conftest import assert_allclose
+
+
+class TestSoftmax:
+    def test_fwd_matches_reference(self, rs):
+        x = jnp.asarray(rs.randn(3, 5, 11) * 3.0, jnp.float32)
+        assert_allclose(sm.softmax_fwd_jnp(x), ref.softmax(x), atol=1e-6)
+
+    def test_fwd_is_stable_for_large_logits(self):
+        x = jnp.asarray([[1e4, 1e4 - 1.0, -1e4]], jnp.float32)
+        y = sm.softmax_fwd_jnp(x)
+        assert np.isfinite(np.asarray(y)).all()
+        assert abs(float(y.sum()) - 1.0) < 1e-5
+
+    def test_bwd_matches_autodiff(self, rs):
+        x = jnp.asarray(rs.randn(4, 9), jnp.float32)
+        dy = jnp.asarray(rs.randn(4, 9), jnp.float32)
+        dx_t = jax.grad(lambda t: jnp.sum(ref.softmax(t) * dy))(x)
+        y = sm.softmax_fwd_jnp(x)
+        assert_allclose(sm.softmax_bwd_jnp(dy, y), dx_t, atol=1e-5)
+
+    def test_pallas_matches_jnp(self, rs):
+        x = jnp.asarray(rs.randn(7, 13), jnp.float32)
+        dy = jnp.asarray(rs.randn(7, 13), jnp.float32)
+        assert_allclose(sm.softmax_fwd_pallas(x, block_rows=4), sm.softmax_fwd_jnp(x), atol=1e-6)
+        y = sm.softmax_fwd_jnp(x)
+        assert_allclose(sm.softmax_bwd_pallas(dy, y, block_rows=4), sm.softmax_bwd_jnp(dy, y), atol=1e-6)
+
+
+class TestDropout:
+    def test_mask_rate(self):
+        key = jax.random.PRNGKey(1)
+        m = drp.make_mask(key, (512, 512), 0.1)
+        keep = float(np.asarray(m, np.float64).mean())
+        assert abs(keep - 0.9) < 0.01
+        assert m.dtype == jnp.int8  # the paper's 8-bit bool (footnote 3)
+
+    def test_apply_scales_kept_entries(self, rs):
+        x = jnp.asarray(rs.randn(8, 8), jnp.float32)
+        m = drp.make_mask(jax.random.PRNGKey(0), (8, 8), 0.25)
+        y = drp.dropout_apply_jnp(x, m, 0.25)
+        expect = np.asarray(x) * np.asarray(m) / 0.75
+        assert_allclose(y, expect, atol=1e-6)
+
+    def test_recomputation_is_exact(self, rs):
+        """The crux of §3.3: recomputed output == discarded output."""
+        x = jnp.asarray(rs.randn(16, 16), jnp.float32)
+        m = drp.make_mask(jax.random.PRNGKey(3), (16, 16), 0.1)
+        first = drp.dropout_apply_jnp(x, m, 0.1)
+        recomputed = drp.dropout_apply_jnp(x, m, 0.1)
+        assert (np.asarray(first) == np.asarray(recomputed)).all()
+
+    def test_bwd_matches_autodiff(self, rs):
+        x = jnp.asarray(rs.randn(6, 10), jnp.float32)
+        dy = jnp.asarray(rs.randn(6, 10), jnp.float32)
+        m = drp.make_mask(jax.random.PRNGKey(5), (6, 10), 0.2)
+        dx_t = jax.grad(lambda t: jnp.sum(ref.dropout(t, m, 0.2) * dy))(x)
+        assert_allclose(drp.dropout_bwd_jnp(dy, m, 0.2), dx_t, atol=1e-6)
+
+    def test_p_zero_is_identity(self, rs):
+        x = jnp.asarray(rs.randn(4, 4), jnp.float32)
+        m = jnp.ones((4, 4), jnp.int8)
+        assert (np.asarray(drp.dropout_apply_jnp(x, m, 0.0)) == np.asarray(x)).all()
+
+    def test_pallas_matches_jnp(self, rs):
+        x = jnp.asarray(rs.randn(9, 12), jnp.float32)
+        m = drp.make_mask(jax.random.PRNGKey(7), (9, 12), 0.3)
+        assert_allclose(
+            drp.dropout_apply_pallas(x, m, 0.3, block_rows=4),
+            drp.dropout_apply_jnp(x, m, 0.3),
+            atol=1e-6,
+        )
+
+    def test_memory_contract(self):
+        """Mask is 1 byte/elt; output (4 bytes/elt) is discardable → 4/5 saved."""
+        m = drp.make_mask(jax.random.PRNGKey(0), (10, 10), 0.1)
+        assert m.dtype.itemsize * m.size == 100
+        # float output would be 400 bytes; keeping only the mask saves 4/5
+        assert 1.0 - 100 / 500 == 0.8
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(2, 64),
+    scale=st.floats(0.1, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_softmax_output_only_bwd(rows, cols, scale, seed):
+    """Property: output-only softmax backward == autodiff for any shape."""
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(rows, cols) * scale, jnp.float32)
+    dy = jnp.asarray(rs.randn(rows, cols), jnp.float32)
+    dx_t = jax.grad(lambda t: jnp.sum(ref.softmax(t) * dy))(x)
+    y = sm.softmax_fwd_jnp(x)
+    np.testing.assert_allclose(
+        np.asarray(sm.softmax_bwd_jnp(dy, y)), np.asarray(dx_t), atol=1e-4, rtol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.floats(0.0, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_dropout_grad_any_rate(p, seed):
+    """Property: mask-only dropout backward == autodiff for any rate."""
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(8, 8), jnp.float32)
+    dy = jnp.asarray(rs.randn(8, 8), jnp.float32)
+    m = drp.make_mask(jax.random.PRNGKey(seed), (8, 8), p)
+    dx_t = jax.grad(lambda t: jnp.sum(ref.dropout(t, m, p) * dy))(x)
+    np.testing.assert_allclose(
+        np.asarray(drp.dropout_bwd_jnp(dy, m, p)), np.asarray(dx_t), atol=1e-5, rtol=1e-5
+    )

@@ -1,0 +1,20 @@
+//! Auto-Tempo (§5.2): automatically deciding where to apply Tempo.
+//!
+//! Two prototype policies, as in the paper:
+//!
+//! 1. **Coarse** ([`coarse_pass`]) — profile first: if the target batch
+//!    does not fit (or utilization is below a knee), switch *all*
+//!    applicable layers to Tempo; otherwise leave the model alone.
+//! 2. **Fine-grained** ([`fine_search`]) — apply Tempo to a *subset* of
+//!    the optimizations/layers, found by a profile-guided search
+//!    "analogous to binary search": grow the applied prefix until the
+//!    target batch fits, then keep the smallest sufficient set (less
+//!    surface for the lossy GELU approximation and overheads).
+//!
+//! Profiles come from the analytical memmodel/perfmodel, which is what
+//! a compiler pass would precompute; the same interface could be backed
+//! by measured probes.
+
+mod search;
+
+pub use search::{coarse_pass, fine_search, AutoTempoDecision, LayerPlan};

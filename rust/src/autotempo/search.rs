@@ -1,0 +1,234 @@
+//! Auto-Tempo search policies over the analytical profiles.
+
+use crate::config::{Gpu, ModelConfig, OptimizationSet, Technique};
+use crate::memmodel::{max_batch, ModelFootprint};
+use crate::perfmodel::throughput_at;
+
+/// Per-layer optimization assignment (index = encoder layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub per_layer: Vec<OptimizationSet>,
+}
+
+impl LayerPlan {
+    pub fn uniform(layers: usize, set: OptimizationSet) -> Self {
+        LayerPlan { per_layer: vec![set; layers] }
+    }
+
+    /// Number of layers with any optimization applied.
+    pub fn applied_layers(&self) -> usize {
+        self.per_layer.iter().filter(|s| s.count() > 0).count()
+    }
+
+    /// Footprint of the plan at batch `b`: the baseline whole-model
+    /// breakdown with the encoder slice replaced by the exact sum of
+    /// per-layer inventories under this plan.
+    pub fn total_bytes(&self, cfg: &ModelConfig, batch: usize) -> u64 {
+        let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).breakdown(batch);
+        let encoder: u64 = self
+            .per_layer
+            .iter()
+            .map(|set| crate::memmodel::layer_activation_bytes(cfg, batch, *set).total())
+            .sum();
+        base.total() - base.encoder_activations + encoder
+    }
+}
+
+/// Outcome of an Auto-Tempo pass.
+#[derive(Debug, Clone)]
+pub struct AutoTempoDecision {
+    pub plan: LayerPlan,
+    /// Max batch under the plan.
+    pub max_batch: usize,
+    /// Estimated throughput at that batch (seqs/s).
+    pub throughput: f64,
+    /// Human-readable rationale.
+    pub rationale: String,
+}
+
+fn plan_max_batch(cfg: &ModelConfig, plan: &LayerPlan, gpu: Gpu) -> usize {
+    let budget = gpu.spec().usable_bytes();
+    let fits = |b: usize| b == 0 || plan.total_bytes(cfg, b) <= budget;
+    if !fits(1) {
+        return 0;
+    }
+    let (mut lo, mut hi) = (1usize, 2usize);
+    while fits(hi) && hi < 1 << 20 {
+        lo = hi;
+        hi *= 2;
+    }
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Coarse policy: all-or-nothing, decided by a quick profile.
+pub fn coarse_pass(cfg: &ModelConfig, gpu: Gpu) -> AutoTempoDecision {
+    let base = max_batch(cfg, Technique::Baseline, gpu);
+    let tempo = max_batch(cfg, Technique::Tempo, gpu);
+    let thr_base = throughput_at(cfg, Technique::Baseline, gpu, base.max_batch).seqs_per_s;
+    let thr_tempo = throughput_at(cfg, Technique::Tempo, gpu, tempo.max_batch).seqs_per_s;
+    if thr_tempo > thr_base {
+        AutoTempoDecision {
+            plan: LayerPlan::uniform(cfg.layers, OptimizationSet::full()),
+            max_batch: tempo.max_batch,
+            throughput: thr_tempo,
+            rationale: format!(
+                "memory-bound: Tempo batch {} > baseline {} → apply everywhere (+{:.1}%)",
+                tempo.max_batch,
+                base.max_batch,
+                100.0 * (thr_tempo / thr_base - 1.0)
+            ),
+        }
+    } else {
+        AutoTempoDecision {
+            plan: LayerPlan::uniform(cfg.layers, OptimizationSet::none()),
+            max_batch: base.max_batch,
+            throughput: thr_base,
+            rationale: format!(
+                "not memory-bound at this scale (baseline {:.1} ≥ tempo {:.1} seq/s) → leave model unchanged",
+                thr_base, thr_tempo
+            ),
+        }
+    }
+}
+
+/// Fine-grained policy: smallest prefix of tempo-ized layers such that
+/// `target_batch` fits (binary search over the prefix length).
+pub fn fine_search(cfg: &ModelConfig, gpu: Gpu, target_batch: usize) -> AutoTempoDecision {
+    let layers = cfg.layers;
+    let plan_for = |k: usize| {
+        let mut per_layer = vec![OptimizationSet::none(); layers];
+        for set in per_layer.iter_mut().take(k) {
+            *set = OptimizationSet::full();
+        }
+        LayerPlan { per_layer }
+    };
+    let fits = |k: usize| plan_max_batch(cfg, &plan_for(k), gpu) >= target_batch;
+
+    if fits(0) {
+        let plan = plan_for(0);
+        let b = plan_max_batch(cfg, &plan, gpu);
+        return AutoTempoDecision {
+            plan,
+            max_batch: b,
+            throughput: throughput_at(cfg, Technique::Baseline, gpu, target_batch.min(b)).seqs_per_s,
+            rationale: format!("target batch {target_batch} already fits without Tempo"),
+        };
+    }
+    if !fits(layers) {
+        let plan = plan_for(layers);
+        let b = plan_max_batch(cfg, &plan, gpu);
+        return AutoTempoDecision {
+            plan,
+            max_batch: b,
+            throughput: throughput_at(cfg, Technique::Tempo, gpu, b).seqs_per_s,
+            rationale: format!(
+                "target batch {target_batch} unreachable even with full Tempo (max {b})"
+            ),
+        };
+    }
+    // binary search the smallest sufficient prefix
+    let (mut lo, mut hi) = (0usize, layers); // fits(lo)=false, fits(hi)=true
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if fits(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let plan = plan_for(hi);
+    let b = plan_max_batch(cfg, &plan, gpu);
+    AutoTempoDecision {
+        plan,
+        max_batch: b,
+        throughput: throughput_at(cfg, Technique::Tempo, gpu, target_batch).seqs_per_s,
+        rationale: format!(
+            "smallest sufficient set: Tempo on {hi}/{layers} layers reaches batch {target_batch}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn large512() -> ModelConfig {
+        ModelConfig::bert_large().with_seq_len(512)
+    }
+
+    #[test]
+    fn coarse_applies_tempo_when_memory_bound() {
+        let d = coarse_pass(&large512(), Gpu::Rtx2080Ti);
+        assert_eq!(d.plan.applied_layers(), 24);
+        assert!(d.rationale.contains("memory-bound"));
+    }
+
+    #[test]
+    fn coarse_skips_when_not_memory_bound() {
+        // tiny model on an A100: batch is huge either way; overheads make
+        // Tempo pointless → pass should leave the model alone
+        let cfg = ModelConfig::bert_tiny();
+        let d = coarse_pass(&cfg, Gpu::A100);
+        assert_eq!(d.plan.applied_layers(), 0, "{}", d.rationale);
+    }
+
+    #[test]
+    fn fine_search_finds_minimal_prefix() {
+        let cfg = large512();
+        // target between baseline max (≈2) and tempo max (≈4)
+        let base = max_batch(&cfg, Technique::Baseline, Gpu::Rtx2080Ti).max_batch;
+        let tempo = max_batch(&cfg, Technique::Tempo, Gpu::Rtx2080Ti).max_batch;
+        assert!(tempo > base);
+        let target = base + 1;
+        let d = fine_search(&cfg, Gpu::Rtx2080Ti, target);
+        assert!(d.max_batch >= target);
+        assert!(d.plan.applied_layers() > 0);
+        assert!(d.plan.applied_layers() <= cfg.layers);
+        // minimality: one fewer layer must not reach the target
+        let k = d.plan.applied_layers();
+        if k > 1 {
+            let mut smaller = d.plan.clone();
+            smaller.per_layer[k - 1] = OptimizationSet::none();
+            let b = super::plan_max_batch(&cfg, &smaller, Gpu::Rtx2080Ti);
+            assert!(b < target, "prefix {k}-1 already reaches {target}");
+        }
+    }
+
+    #[test]
+    fn fine_search_zero_when_target_fits() {
+        let cfg = ModelConfig::bert_large().with_seq_len(128);
+        let d = fine_search(&cfg, Gpu::V100, 2);
+        assert_eq!(d.plan.applied_layers(), 0);
+    }
+
+    #[test]
+    fn fine_search_reports_unreachable() {
+        let d = fine_search(&large512(), Gpu::Rtx2080Ti, 1000);
+        assert!(d.rationale.contains("unreachable"));
+        assert_eq!(d.plan.applied_layers(), 24);
+    }
+
+    #[test]
+    fn plan_bytes_monotone_in_applied_layers() {
+        let cfg = large512();
+        let mut prev = u64::MAX;
+        for k in [0usize, 6, 12, 24] {
+            let mut per_layer = vec![OptimizationSet::none(); 24];
+            for set in per_layer.iter_mut().take(k) {
+                *set = OptimizationSet::full();
+            }
+            let plan = LayerPlan { per_layer };
+            let bytes = plan.total_bytes(&cfg, 2);
+            assert!(bytes < prev, "k={k}");
+            prev = bytes;
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! GPU hardware specifications for the capacity and roofline simulators.
+//!
+//! These describe the paper's three test platforms (Table 4 / §4.1):
+//! 4×RTX 2080 Ti (11 GB, PCIe), 4×V100 (16 GB, NVLink), 1×A100 (40 GB).
+//! Peak numbers are the published fp16-with-fp32-accumulate tensor
+//! throughputs, since the NVIDIA BERT reference trains with AMP.
+
+/// The paper's evaluation GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gpu {
+    Rtx2080Ti,
+    V100,
+    A100,
+}
+
+impl Gpu {
+    pub fn name(self) -> &'static str {
+        match self {
+            Gpu::Rtx2080Ti => "2080Ti",
+            Gpu::V100 => "V100",
+            Gpu::A100 => "A100",
+        }
+    }
+
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            // 2080 Ti: 11 GB GDDR6, 616 GB/s, ~108 TFLOPS fp16 tensor
+            // (~57 TFLOPS sustained with fp32 accumulate on TU102).
+            Gpu::Rtx2080Ti => GpuSpec {
+                gpu: self,
+                mem_bytes: 11 * GIB,
+                bandwidth: 616.0e9,
+                peak_matmul_flops: 53.8e12,
+                peak_vector_flops: 13.4e12,
+                // fixed CUDA context + framework + cudnn workspace floor,
+                // calibrated once against the paper's Table 2 (see
+                // memmodel::calib).
+                reserved_bytes: (1.05 * GIB as f64) as u64,
+                // PCIe v3 ring across 4 GPUs: ~9 GB/s effective
+                allreduce_bw: Some(9.0e9),
+            },
+            // V100 (SXM2 16 GB): 900 GB/s HBM2, 125 TFLOPS fp16 tensor.
+            Gpu::V100 => GpuSpec {
+                gpu: self,
+                mem_bytes: 16 * GIB,
+                bandwidth: 900.0e9,
+                peak_matmul_flops: 112.0e12,
+                peak_vector_flops: 15.7e12,
+                reserved_bytes: (1.10 * GIB as f64) as u64,
+                // NVLink (p3.8xlarge): ~55 GB/s effective all-reduce
+                allreduce_bw: Some(55.0e9),
+            },
+            // A100 40 GB: 1555 GB/s, 312 TFLOPS bf16 tensor.
+            Gpu::A100 => GpuSpec {
+                gpu: self,
+                mem_bytes: 40 * GIB,
+                bandwidth: 1555.0e9,
+                peak_matmul_flops: 280.0e12,
+                peak_vector_flops: 19.5e12,
+                reserved_bytes: (1.20 * GIB as f64) as u64,
+                // single-GPU ablation platform: no gradient sync
+                allreduce_bw: None,
+            },
+        }
+    }
+
+    pub fn all() -> [Gpu; 3] {
+        [Gpu::Rtx2080Ti, Gpu::V100, Gpu::A100]
+    }
+}
+
+const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Static hardware description used by memmodel (capacity) and
+/// perfmodel (roofline).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub gpu: Gpu,
+    /// Total device memory.
+    pub mem_bytes: u64,
+    /// HBM/GDDR bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Peak tensor-core matmul throughput, FLOP/s (fp16 acc fp32).
+    pub peak_matmul_flops: f64,
+    /// Peak CUDA-core elementwise throughput, FLOP/s.
+    pub peak_vector_flops: f64,
+    /// Memory unavailable to tensors (context, cudnn workspace, frags).
+    pub reserved_bytes: u64,
+    /// Effective all-reduce bandwidth of the node's interconnect
+    /// (bytes/s); `None` = single-GPU rig (the A100 ablation box).
+    /// This fixed per-step gradient-sync cost is what larger batches
+    /// amortize — a key reason bigger batches win on the paper's
+    /// PCIe-connected 2080 Ti rig.
+    pub allreduce_bw: Option<f64>,
+}
+
+impl GpuSpec {
+    /// Bytes usable for model state + activations.
+    pub fn usable_bytes(&self) -> u64 {
+        self.mem_bytes - self.reserved_bytes
+    }
+
+    /// Machine balance (FLOP per byte at the matmul roofline knee).
+    pub fn balance(&self) -> f64 {
+        self.peak_matmul_flops / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_ordering_matches_paper() {
+        let caps: Vec<u64> = Gpu::all().iter().map(|g| g.spec().mem_bytes).collect();
+        assert!(caps[0] < caps[1] && caps[1] < caps[2]);
+        assert_eq!(caps[0], 11 * GIB);
+        assert_eq!(caps[1], 16 * GIB);
+        assert_eq!(caps[2], 40 * GIB);
+    }
+
+    #[test]
+    fn usable_is_less_than_total() {
+        for g in Gpu::all() {
+            let s = g.spec();
+            assert!(s.usable_bytes() < s.mem_bytes);
+            assert!(s.usable_bytes() > s.mem_bytes / 2);
+        }
+    }
+
+    #[test]
+    fn newer_gpus_are_faster() {
+        let [t, v, a] = Gpu::all().map(|g| g.spec().peak_matmul_flops);
+        assert!(t < v && v < a);
+    }
+
+    #[test]
+    fn balance_is_tens_of_flops_per_byte() {
+        for g in Gpu::all() {
+            let b = g.spec().balance();
+            assert!((50.0..250.0).contains(&b), "{} balance {b}", g.name());
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system: model presets (BERT family + GPT2/RoBERTa),
+//! GPU hardware specs, technique selection and training hyperparameters.
+
+mod hardware;
+mod model;
+mod technique;
+mod training;
+
+pub use hardware::{Gpu, GpuSpec};
+pub use model::{ModelConfig, ModelKind};
+pub use technique::{OptimizationSet, Technique};
+pub use training::TrainingConfig;

@@ -1,0 +1,252 @@
+//! Transformer model hyperparameters (paper §2.1 notation: H, S, A, L).
+//!
+//! Presets cover every configuration the paper evaluates: BERT-BASE /
+//! BERT-LARGE (Table 2, Fig 2/5/6/9/12), the widened ablation configs
+//! (Fig 7: H=2048/3072), the 12-layer BERT-LARGE used for the long-
+//! sequence ablation (Fig 8), and the GPT2 / RoBERTa analogues (§4.3
+//! "Results on Other Models").
+
+/// Architectural family — affects the per-layer tensor inventory only
+/// marginally (all three are post-LN Transformer encoders/decoders with
+/// learned positions; GPT2 uses causal attention, same memory shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Bert,
+    Gpt2,
+    Roberta,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Bert => "bert",
+            ModelKind::Gpt2 => "gpt2",
+            ModelKind::Roberta => "roberta",
+        }
+    }
+}
+
+/// Model hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub kind: ModelKind,
+    /// Hidden size H.
+    pub hidden: usize,
+    /// Encoder layers L.
+    pub layers: usize,
+    /// Attention heads A.
+    pub heads: usize,
+    /// Sequence length S.
+    pub seq_len: usize,
+    /// FFN inner size (4H for the standard Transformer).
+    pub intermediate: usize,
+    pub vocab_size: usize,
+    pub max_position: usize,
+    pub type_vocab: usize,
+    pub dropout_p: f64,
+}
+
+impl ModelConfig {
+    /// Head dimension (H/A; the paper keeps H/A = 64).
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Total parameter count (embeddings + encoder + MLM head, fp32
+    /// element count — multiply by dtype width for bytes).
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let emb = (self.vocab_size + self.max_position + self.type_vocab) * h + 2 * h;
+        // per layer: QKV+O (4 h² + 4h), FFN (2·h·i + i + h), 2 LN (4h)
+        let per_layer = 4 * h * h + 4 * h + 2 * h * self.intermediate + self.intermediate + h + 4 * h;
+        let mlm = h * h + h + 2 * h + self.vocab_size; // transform + LN + tied decoder bias
+        emb + self.layers * per_layer + mlm
+    }
+
+    /// Builder: override the sequence length (phase 1 vs phase 2).
+    pub fn with_seq_len(&self, s: usize) -> ModelConfig {
+        ModelConfig { seq_len: s, name: format!("{}-s{}", self.name, s), ..self.clone() }
+    }
+
+    /// Builder: override hidden size keeping H/A = 64 (Fig 7 ablation).
+    pub fn with_hidden(&self, h: usize) -> ModelConfig {
+        ModelConfig {
+            hidden: h,
+            heads: h / 64,
+            intermediate: 4 * h,
+            name: format!("{}-h{}", self.name, h),
+            ..self.clone()
+        }
+    }
+
+    /// Builder: override layer count (Fig 8 uses BERT-LARGE with L=12).
+    pub fn with_layers(&self, l: usize) -> ModelConfig {
+        ModelConfig { layers: l, name: format!("{}-l{}", self.name, l), ..self.clone() }
+    }
+
+    // ---- presets -----------------------------------------------------------
+
+    pub fn bert_base() -> ModelConfig {
+        ModelConfig {
+            name: "bert-base".into(),
+            kind: ModelKind::Bert,
+            hidden: 768,
+            layers: 12,
+            heads: 12,
+            seq_len: 128,
+            intermediate: 3072,
+            vocab_size: 30522,
+            max_position: 512,
+            type_vocab: 2,
+            dropout_p: 0.1,
+        }
+    }
+
+    pub fn bert_large() -> ModelConfig {
+        ModelConfig {
+            name: "bert-large".into(),
+            kind: ModelKind::Bert,
+            hidden: 1024,
+            layers: 24,
+            heads: 16,
+            seq_len: 128,
+            intermediate: 4096,
+            vocab_size: 30522,
+            max_position: 512,
+            type_vocab: 2,
+            dropout_p: 0.1,
+        }
+    }
+
+    /// GPT2-124M ("small") — §4.3 other-models ablation.
+    pub fn gpt2() -> ModelConfig {
+        ModelConfig {
+            name: "gpt2".into(),
+            kind: ModelKind::Gpt2,
+            hidden: 768,
+            layers: 12,
+            heads: 12,
+            seq_len: 512,
+            intermediate: 3072,
+            vocab_size: 50257,
+            max_position: 1024,
+            type_vocab: 1,
+            dropout_p: 0.1,
+        }
+    }
+
+    /// RoBERTa-LARGE (fairseq default for the paper's ablation).
+    pub fn roberta_large() -> ModelConfig {
+        ModelConfig {
+            name: "roberta-large".into(),
+            kind: ModelKind::Roberta,
+            hidden: 1024,
+            layers: 24,
+            heads: 16,
+            seq_len: 512,
+            intermediate: 4096,
+            vocab_size: 50265,
+            max_position: 514,
+            type_vocab: 1,
+            dropout_p: 0.1,
+        }
+    }
+
+    /// The scaled-down configs that actually train on the CPU testbed
+    /// (mirroring python/compile/model.py CONFIGS).
+    pub fn bert_tiny() -> ModelConfig {
+        ModelConfig {
+            name: "bert-tiny".into(),
+            kind: ModelKind::Bert,
+            hidden: 128,
+            layers: 2,
+            heads: 2,
+            seq_len: 64,
+            intermediate: 512,
+            vocab_size: 4096,
+            max_position: 512,
+            type_vocab: 2,
+            dropout_p: 0.1,
+        }
+    }
+
+    pub fn bert_mini() -> ModelConfig {
+        ModelConfig {
+            name: "bert-mini".into(),
+            kind: ModelKind::Bert,
+            hidden: 256,
+            layers: 4,
+            heads: 4,
+            seq_len: 128,
+            intermediate: 1024,
+            vocab_size: 8192,
+            max_position: 512,
+            type_vocab: 2,
+            dropout_p: 0.1,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        match name {
+            "bert-base" => Some(Self::bert_base()),
+            "bert-large" => Some(Self::bert_large()),
+            "gpt2" => Some(Self::gpt2()),
+            "roberta-large" => Some(Self::roberta_large()),
+            "bert-tiny" => Some(Self::bert_tiny()),
+            "bert-mini" => Some(Self::bert_mini()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_param_count_is_about_110m() {
+        let n = ModelConfig::bert_base().param_count();
+        assert!((100_000_000..125_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn bert_large_param_count_is_about_335m() {
+        let n = ModelConfig::bert_large().param_count();
+        assert!((320_000_000..350_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn head_ratio_is_64_for_paper_models() {
+        for cfg in [ModelConfig::bert_base(), ModelConfig::bert_large(),
+                    ModelConfig::gpt2(), ModelConfig::roberta_large()] {
+            assert_eq!(cfg.head_dim(), 64, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn with_hidden_keeps_ratio() {
+        let cfg = ModelConfig::bert_base().with_hidden(2048);
+        assert_eq!(cfg.heads, 32);
+        assert_eq!(cfg.intermediate, 8192);
+        assert_eq!(cfg.head_dim(), 64);
+    }
+
+    #[test]
+    fn with_seq_len_and_layers() {
+        let cfg = ModelConfig::bert_large().with_layers(12).with_seq_len(3072);
+        assert_eq!(cfg.layers, 12);
+        assert_eq!(cfg.seq_len, 3072);
+        assert_eq!(cfg.hidden, 1024);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["bert-base", "bert-large", "gpt2", "roberta-large",
+                     "bert-tiny", "bert-mini"] {
+            assert!(ModelConfig::preset(name).is_some(), "{name}");
+        }
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+}

@@ -1,0 +1,150 @@
+//! Technique selection: the paper's three compared methods plus the
+//! fine-grained per-optimization toggles used by the ablations (Fig 12)
+//! and Auto-Tempo (§5.2).
+
+/// Top-level memory-management technique (§4.2 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Technique {
+    /// No footprint reduction (NVIDIA reference model).
+    Baseline,
+    /// PyTorch-style whole-encoder-layer checkpointing.
+    Checkpoint,
+    /// Tempo: the optimization set in [`OptimizationSet`].
+    Tempo,
+}
+
+impl Technique {
+    pub fn name(self) -> &'static str {
+        match self {
+            Technique::Baseline => "Baseline",
+            Technique::Checkpoint => "Checkpoint",
+            Technique::Tempo => "Tempo",
+        }
+    }
+
+    pub fn all() -> [Technique; 3] {
+        [Technique::Baseline, Technique::Checkpoint, Technique::Tempo]
+    }
+}
+
+/// Fine-grained Tempo optimization toggles (Fig 12 ablation axes;
+/// Auto-Tempo searches over subsets of these per layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OptimizationSet {
+    /// §3.1 In-place GELU (drop the 4H-wide GELU input, keep int8 mask).
+    pub inplace_gelu: bool,
+    /// §3.2 In-place LayerNorm (drop LN inputs, keep per-row rstd).
+    pub inplace_layernorm: bool,
+    /// §3.3 Sub-layer dropout recomputation on the attention probs.
+    pub dropout_recompute: bool,
+    /// §3.4 output-only softmax (drop the retained softmax input).
+    pub softmax_outonly: bool,
+}
+
+impl OptimizationSet {
+    /// All four optimizations on — the paper's "Tempo" configuration.
+    pub fn full() -> Self {
+        OptimizationSet {
+            inplace_gelu: true,
+            inplace_layernorm: true,
+            dropout_recompute: true,
+            softmax_outonly: true,
+        }
+    }
+
+    /// Everything off — the baseline inventory.
+    pub fn none() -> Self {
+        OptimizationSet {
+            inplace_gelu: false,
+            inplace_layernorm: false,
+            dropout_recompute: false,
+            softmax_outonly: false,
+        }
+    }
+
+    /// Exactly one optimization on (ablation rows in Fig 12).
+    pub fn only(which: &str) -> Option<Self> {
+        let mut s = Self::none();
+        match which {
+            "gelu" => s.inplace_gelu = true,
+            "layernorm" => s.inplace_layernorm = true,
+            "dropout" => s.dropout_recompute = true,
+            "softmax" => s.softmax_outonly = true,
+            _ => return None,
+        }
+        Some(s)
+    }
+
+    /// Number of enabled optimizations.
+    pub fn count(&self) -> usize {
+        [self.inplace_gelu, self.inplace_layernorm, self.dropout_recompute, self.softmax_outonly]
+            .iter()
+            .filter(|b| **b)
+            .count()
+    }
+
+    /// Enumerate all 16 subsets (Auto-Tempo's fine-grained search space
+    /// per layer).
+    pub fn all_subsets() -> Vec<OptimizationSet> {
+        (0..16)
+            .map(|bits: u32| OptimizationSet {
+                inplace_gelu: bits & 1 != 0,
+                inplace_layernorm: bits & 2 != 0,
+                dropout_recompute: bits & 4 != 0,
+                softmax_outonly: bits & 8 != 0,
+            })
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        if *self == Self::full() {
+            return "tempo(all)".into();
+        }
+        if *self == Self::none() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        if self.inplace_gelu {
+            parts.push("gelu");
+        }
+        if self.inplace_layernorm {
+            parts.push("ln");
+        }
+        if self.dropout_recompute {
+            parts.push("drop");
+        }
+        if self.softmax_outonly {
+            parts.push("sm");
+        }
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsets_are_complete_and_unique() {
+        let all = OptimizationSet::all_subsets();
+        assert_eq!(all.len(), 16);
+        let mut labels: Vec<String> = all.iter().map(|s| format!("{s:?}")).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 16);
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(OptimizationSet::full().count(), 4);
+        assert_eq!(OptimizationSet::none().count(), 0);
+        assert_eq!(OptimizationSet::only("gelu").unwrap().count(), 1);
+        assert!(OptimizationSet::only("bogus").is_none());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(OptimizationSet::full().label(), "tempo(all)");
+        assert_eq!(OptimizationSet::only("dropout").unwrap().label(), "drop");
+    }
+}

@@ -1,0 +1,131 @@
+//! Training-run hyperparameters consumed by the coordinator.
+
+use crate::{Error, Result};
+
+/// Hyperparameters for a coordinator-driven training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingConfig {
+    /// Artifact name (see `artifacts/index.json`).
+    pub artifact: String,
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub peak_lr: f64,
+    /// Seed for data generation and the in-graph dropout PRNG.
+    pub seed: u64,
+    /// Evaluate every N steps (0 = never).
+    pub eval_every: usize,
+    /// Log every N steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig {
+            artifact: "bert_tiny_tempo".into(),
+            steps: 200,
+            warmup_steps: 20,
+            peak_lr: 1e-3,
+            seed: 42,
+            eval_every: 50,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainingConfig {
+    /// Linear warmup to `peak_lr`, then linear decay to 0 at `steps`
+    /// (the BERT pre-training schedule).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        if step < self.warmup_steps {
+            return self.peak_lr * (step as f64 + 1.0) / self.warmup_steps.max(1) as f64;
+        }
+        let remain = (self.steps - step.min(self.steps)) as f64;
+        let denom = (self.steps - self.warmup_steps).max(1) as f64;
+        self.peak_lr * (remain / denom).clamp(0.0, 1.0)
+    }
+
+    /// Parse from a small `key = value` TOML-subset file (strings,
+    /// integers, floats; comments with `#`). Keeps the offline build
+    /// free of a TOML dependency while staying human-editable.
+    pub fn from_kv_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = TrainingConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Parse(format!("{path}:{}: expected key = value", lineno + 1))
+            })?;
+            let (k, v) = (k.trim(), v.trim().trim_matches('"'));
+            let bad = |what: &str| Error::Parse(format!("{path}:{}: bad {what}", lineno + 1));
+            match k {
+                "artifact" => cfg.artifact = v.to_string(),
+                "steps" => cfg.steps = v.parse().map_err(|_| bad("steps"))?,
+                "warmup_steps" => cfg.warmup_steps = v.parse().map_err(|_| bad("warmup_steps"))?,
+                "peak_lr" => cfg.peak_lr = v.parse().map_err(|_| bad("peak_lr"))?,
+                "seed" => cfg.seed = v.parse().map_err(|_| bad("seed"))?,
+                "eval_every" => cfg.eval_every = v.parse().map_err(|_| bad("eval_every"))?,
+                "log_every" => cfg.log_every = v.parse().map_err(|_| bad("log_every"))?,
+                other => return Err(Error::Parse(format!("{path}: unknown key '{other}'"))),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shape() {
+        let cfg = TrainingConfig { steps: 100, warmup_steps: 10, peak_lr: 1.0, ..Default::default() };
+        assert!(cfg.lr_at(0) > 0.0);
+        assert!(cfg.lr_at(4) < cfg.lr_at(9));
+        assert!((cfg.lr_at(9) - 1.0).abs() < 1e-9); // peak at end of warmup
+        assert!(cfg.lr_at(50) < 1.0);
+        assert!(cfg.lr_at(99) > cfg.lr_at(100));
+        assert_eq!(cfg.lr_at(100), 0.0);
+    }
+
+    #[test]
+    fn schedule_monotone_after_warmup() {
+        let cfg = TrainingConfig { steps: 60, warmup_steps: 5, peak_lr: 3e-4, ..Default::default() };
+        let mut prev = f64::INFINITY;
+        for s in 5..=60 {
+            let lr = cfg.lr_at(s);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn kv_file_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.file("run.toml");
+        std::fs::write(
+            &p,
+            "# comment\nartifact = \"bert_mini_tempo\"\nsteps = 300\npeak_lr = 5e-4\nseed = 7\n",
+        )
+        .unwrap();
+        let cfg = TrainingConfig::from_kv_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.artifact, "bert_mini_tempo");
+        assert_eq!(cfg.steps, 300);
+        assert_eq!(cfg.peak_lr, 5e-4);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.eval_every, 50); // default preserved
+    }
+
+    #[test]
+    fn kv_file_rejects_unknown_keys() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.file("bad.toml");
+        std::fs::write(&p, "nope = 1\n").unwrap();
+        assert!(TrainingConfig::from_kv_file(p.to_str().unwrap()).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Fig 6a analogue: train baseline vs tempo (same data stream, same
+//! dropout seeds) and compare the loss curves point-for-point.
+
+use crate::config::TrainingConfig;
+use crate::runtime::{ArtifactIndex, Runtime};
+use crate::Result;
+
+use super::trainer::{Trainer, TrainerOptions};
+
+/// One variant's loss trajectory.
+#[derive(Debug, Clone)]
+pub struct LossCurve {
+    pub artifact: String,
+    pub losses: Vec<f64>,
+}
+
+impl LossCurve {
+    /// Final-window mean (smooths step noise).
+    pub fn endpoint(&self, window: usize) -> f64 {
+        let n = self.losses.len();
+        let w = window.min(n).max(1);
+        self.losses[n - w..].iter().sum::<f64>() / w as f64
+    }
+}
+
+/// Result of a variant comparison run.
+#[derive(Debug, Clone)]
+pub struct CompareResult {
+    pub curves: Vec<LossCurve>,
+    /// Max relative endpoint difference vs the first (reference) curve.
+    pub max_endpoint_rel_diff: f64,
+}
+
+/// Train each artifact with identical config/seeds; collect loss curves.
+///
+/// The first artifact is the reference (the paper compares Tempo against
+/// the NVIDIA baseline and reports ≤0.5% endpoint difference).
+pub fn compare_variants(
+    rt: &Runtime,
+    index: &ArtifactIndex,
+    artifact_names: &[&str],
+    cfg: &TrainingConfig,
+    verbose: bool,
+) -> Result<CompareResult> {
+    let mut curves = Vec::new();
+    for name in artifact_names {
+        let artifact = index.open(name)?;
+        let mut trainer = Trainer::new(
+            rt,
+            artifact,
+            cfg.clone(),
+            TrainerOptions { verbose, ..Default::default() },
+        )?;
+        trainer.run()?;
+        curves.push(LossCurve {
+            artifact: name.to_string(),
+            losses: trainer.metrics().records().iter().map(|r| r.loss).collect(),
+        });
+    }
+    let window = (cfg.steps / 10).max(5);
+    let reference = curves[0].endpoint(window);
+    let max_endpoint_rel_diff = curves
+        .iter()
+        .skip(1)
+        .map(|c| (c.endpoint(window) - reference).abs() / reference)
+        .fold(0.0, f64::max);
+    Ok(CompareResult { curves, max_endpoint_rel_diff })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_uses_final_window() {
+        let c = LossCurve { artifact: "x".into(), losses: vec![10.0, 9.0, 2.0, 2.0] };
+        assert!((c.endpoint(2) - 2.0).abs() < 1e-12);
+        assert!((c.endpoint(100) - 5.75).abs() < 1e-12); // clamped to len
+    }
+
+    #[test]
+    fn endpoint_handles_window_one() {
+        let c = LossCurve { artifact: "x".into(), losses: vec![3.0, 1.5] };
+        assert_eq!(c.endpoint(1), 1.5);
+    }
+}

@@ -1,0 +1,143 @@
+//! Fig 6b analogue: MRPC-like fine-tuning trials.
+//!
+//! Runs N independent trials of the classification artifact on the
+//! synthetic paraphrase-pair task and reports the per-epoch accuracy
+//! band (median/min/max across trials), for baseline vs tempo.
+
+use crate::data::{Corpus, CorpusConfig, PairTask};
+use crate::runtime::{Artifact, Runtime, TrainState};
+use crate::tensor::HostTensor;
+use crate::{Error, Result};
+
+/// Accuracy trajectory of one trial.
+#[derive(Debug, Clone)]
+pub struct TrialCurve {
+    pub seed: u64,
+    /// accuracy after each eval point
+    pub accuracy: Vec<f64>,
+}
+
+/// Aggregated fine-tuning result for one artifact.
+#[derive(Debug, Clone)]
+pub struct FinetuneResult {
+    pub artifact: String,
+    pub trials: Vec<TrialCurve>,
+}
+
+impl FinetuneResult {
+    /// (min, median, max) accuracy at the final eval point.
+    pub fn final_band(&self) -> (f64, f64, f64) {
+        let mut finals: Vec<f64> = self
+            .trials
+            .iter()
+            .filter_map(|t| t.accuracy.last().copied())
+            .collect();
+        finals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = finals.len();
+        if n == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (finals[0], finals[n / 2], finals[n - 1])
+    }
+}
+
+/// Run `trials` fine-tuning runs of `steps` steps, evaluating accuracy
+/// every `eval_every` steps on held-out pair batches.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_trials(
+    rt: &Runtime,
+    artifact: &Artifact,
+    trials: usize,
+    steps: usize,
+    eval_every: usize,
+    lr: f64,
+    base_seed: u64,
+    verbose: bool,
+) -> Result<FinetuneResult> {
+    let m = &artifact.manifest;
+    if m.task != "cls" {
+        return Err(Error::Invalid(format!("{} is not a cls artifact", m.name)));
+    }
+    let init_exe = rt.load(artifact.init_path())?;
+    let step_exe = rt.load(artifact.step_path())?;
+    let eval_exe = rt.load(artifact.eval_path())?;
+
+    let mut result = FinetuneResult { artifact: m.name.clone(), trials: Vec::new() };
+    for trial in 0..trials {
+        let seed = base_seed + 1000 * trial as u64;
+        let outs = init_exe.run(&[HostTensor::scalar_i32(seed as i32)])?;
+        let mut state = TrainState::from_init(outs, m)?;
+        let corpus = Corpus::new(
+            CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() },
+            seed,
+        );
+        let mut task = PairTask::new(corpus, m.batch_size, m.config.seq_len, seed ^ 0xF00D);
+        let mut curve = TrialCurve { seed, accuracy: Vec::new() };
+
+        for s in 0..steps {
+            let batch = task.next_batch()?;
+            let mut inputs: Vec<HostTensor> = state.leaves.clone();
+            for t in batch.tensors() {
+                inputs.push(t.clone());
+            }
+            inputs.push(HostTensor::scalar_i32(state.step as i32));
+            inputs.push(HostTensor::scalar_i32(seed as i32));
+            inputs.push(HostTensor::scalar_f32(lr as f32));
+            let outs = step_exe.run(&inputs)?;
+            let train_loss = state.absorb_step_output(outs)?;
+            if verbose && (s + 1) % eval_every == 0 {
+                println!("[{}] trial {} step {:>4} train loss {:.4}", m.name, trial, s + 1, train_loss);
+            }
+
+            if (s + 1) % eval_every == 0 || s + 1 == steps {
+                // average accuracy over a few held-out batches
+                let mut accs = Vec::new();
+                for _ in 0..4 {
+                    let eval_batch = task.next_batch()?;
+                    let mut inputs: Vec<HostTensor> = state.params().to_vec();
+                    for t in eval_batch.tensors() {
+                        inputs.push(t.clone());
+                    }
+                    inputs.push(HostTensor::scalar_i32(0));
+                    let outs = eval_exe.run(&inputs)?;
+                    accs.push(outs[1].first()?);
+                }
+                let acc = accs.iter().sum::<f64>() / accs.len() as f64;
+                curve.accuracy.push(acc);
+                if verbose {
+                    println!(
+                        "[{}] trial {} step {:>4}/{} acc {:.3}",
+                        m.name, trial, s + 1, steps, acc
+                    );
+                }
+            }
+        }
+        result.trials.push(curve);
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_band_orders() {
+        let r = FinetuneResult {
+            artifact: "x".into(),
+            trials: vec![
+                TrialCurve { seed: 0, accuracy: vec![0.5, 0.8] },
+                TrialCurve { seed: 1, accuracy: vec![0.5, 0.6] },
+                TrialCurve { seed: 2, accuracy: vec![0.5, 0.9] },
+            ],
+        };
+        let (lo, med, hi) = r.final_band();
+        assert_eq!((lo, med, hi), (0.6, 0.8, 0.9));
+    }
+
+    #[test]
+    fn empty_band_is_zero() {
+        let r = FinetuneResult { artifact: "x".into(), trials: vec![] };
+        assert_eq!(r.final_band(), (0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,126 @@
+//! Training metrics: per-step records, EMA loss, throughput tracking.
+
+use std::time::Duration;
+
+use crate::tensor::OnlineStats;
+
+/// One logged training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: i64,
+    pub loss: f64,
+    pub lr: f64,
+    pub step_time: Duration,
+}
+
+/// Rolling training metrics.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    records: Vec<StepRecord>,
+    ema_loss: Option<f64>,
+    ema_alpha: f64,
+    step_stats: OnlineStats,
+    batch_size: usize,
+}
+
+impl Metrics {
+    pub fn new(batch_size: usize) -> Self {
+        Metrics {
+            records: Vec::new(),
+            ema_loss: None,
+            ema_alpha: 0.05,
+            step_stats: OnlineStats::new(),
+            batch_size,
+        }
+    }
+
+    /// Record one step.
+    pub fn push(&mut self, rec: StepRecord) {
+        self.ema_loss = Some(match self.ema_loss {
+            None => rec.loss,
+            Some(prev) => prev + self.ema_alpha * (rec.loss - prev),
+        });
+        self.step_stats.push(rec.step_time.as_secs_f64());
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    pub fn ema_loss(&self) -> Option<f64> {
+        self.ema_loss
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean sequences/second across recorded steps.
+    pub fn throughput(&self) -> f64 {
+        let m = self.step_stats.mean();
+        if m > 0.0 {
+            self.batch_size as f64 / m
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_step_time(&self) -> Duration {
+        Duration::from_secs_f64(self.step_stats.mean())
+    }
+
+    /// Dump as CSV text (step,loss,lr,step_time_s).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss,lr,step_time_s\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.8},{:.6}\n",
+                r.step,
+                r.loss,
+                r.lr,
+                r.step_time.as_secs_f64()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: i64, loss: f64) -> StepRecord {
+        StepRecord { step, loss, lr: 1e-3, step_time: Duration::from_millis(10) }
+    }
+
+    #[test]
+    fn ema_tracks_loss() {
+        let mut m = Metrics::new(8);
+        for i in 0..100 {
+            m.push(rec(i, 10.0 - 0.05 * i as f64));
+        }
+        let ema = m.ema_loss().unwrap();
+        let last = m.last_loss().unwrap();
+        assert!(ema > last); // EMA lags a falling curve
+        assert!(ema < 10.0);
+    }
+
+    #[test]
+    fn throughput_from_step_time() {
+        let mut m = Metrics::new(4);
+        m.push(rec(0, 1.0));
+        let thr = m.throughput();
+        assert!((thr - 400.0).abs() < 1.0, "{thr}"); // 4 seqs / 10 ms
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = Metrics::new(1);
+        m.push(rec(0, 2.5));
+        m.push(rec(1, 2.25));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 training coordinator: drives the AOT-compiled train/eval
+//! executables over the synthetic data substrate.
+//!
+//! * [`Trainer`] — the training loop (schedule, metrics, checkpoints).
+//! * [`compare`] — baseline-vs-tempo loss-curve runs (Fig 6a analogue).
+//! * [`finetune`] — MRPC-analogue classification trials (Fig 6b).
+
+mod compare;
+mod finetune;
+mod metrics;
+mod trainer;
+
+pub use compare::{compare_variants, CompareResult, LossCurve};
+pub use finetune::{finetune_trials, FinetuneResult, TrialCurve};
+pub use metrics::{Metrics, StepRecord};
+pub use trainer::{Trainer, TrainerOptions};

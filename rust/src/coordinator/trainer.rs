@@ -1,0 +1,185 @@
+//! The training loop: artifact → PJRT executables → steps over the
+//! synthetic corpus, with LR schedule, metrics and checkpointing.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::config::TrainingConfig;
+use crate::data::{Corpus, CorpusConfig, MlmBatch, MlmBatcher, MlmConfig};
+use crate::runtime::{tensor_to_literal, Artifact, Executable, LiteralState, Runtime, TrainState};
+use crate::tensor::HostTensor;
+use crate::{Error, Result};
+
+use super::metrics::{Metrics, StepRecord};
+
+/// Knobs not covered by [`TrainingConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct TrainerOptions {
+    /// Save a checkpoint here at the end of training.
+    pub checkpoint_out: Option<PathBuf>,
+    /// Resume from this checkpoint instead of running `init`.
+    pub resume_from: Option<PathBuf>,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+/// Drives one artifact through `cfg.steps` optimizer steps.
+pub struct Trainer {
+    artifact: Artifact,
+    cfg: TrainingConfig,
+    opts: TrainerOptions,
+    step_exe: std::sync::Arc<Executable>,
+    eval_exe: std::sync::Arc<Executable>,
+    /// Literal-resident hot state (params, m, v) — see runtime::LiteralState.
+    state: LiteralState,
+    batcher: MlmBatcher,
+    metrics: Metrics,
+}
+
+impl Trainer {
+    /// Build a trainer: load + compile the artifact's executables, run
+    /// `init` (or resume), wire up the data stream.
+    pub fn new(rt: &Runtime, artifact: Artifact, cfg: TrainingConfig, opts: TrainerOptions) -> Result<Self> {
+        let m = &artifact.manifest;
+        if m.task != "mlm" {
+            return Err(Error::Invalid(format!(
+                "Trainer drives mlm artifacts; {} is {}",
+                m.name, m.task
+            )));
+        }
+        let init_exe = rt.load(artifact.init_path())?;
+        let step_exe = rt.load(artifact.step_path())?;
+        let eval_exe = rt.load(artifact.eval_path())?;
+
+        let state = match &opts.resume_from {
+            Some(path) => LiteralState::from_host(&TrainState::load(path)?)?,
+            None => {
+                // validate the ABI once through the host path, then keep
+                // the leaves as literals for the hot loop
+                let init_in = tensor_to_literal(&HostTensor::scalar_i32(cfg.seed as i32))?;
+                let outs = init_exe.run_literals_raw(&[init_in])?;
+                let host: Vec<HostTensor> = outs
+                    .iter()
+                    .map(crate::runtime::literal_to_tensor)
+                    .collect::<Result<_>>()?;
+                TrainState::from_init(host, m)?; // shape/arity validation
+                LiteralState::from_init(outs, m)?
+            }
+        };
+
+        let corpus = Corpus::new(
+            CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() },
+            cfg.seed,
+        );
+        let batcher = MlmBatcher::new(
+            corpus,
+            MlmConfig::default(),
+            m.batch_size,
+            m.config.seq_len,
+            cfg.seed ^ 0xDA7A,
+        );
+        let metrics = Metrics::new(m.batch_size);
+        Ok(Trainer { artifact, cfg, opts, step_exe, eval_exe, state, batcher, metrics })
+    }
+
+    /// The artifact being trained.
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Host copy of the current state (checkpointing, inspection).
+    pub fn state(&self) -> TrainState {
+        self.state.to_host().expect("state conversion")
+    }
+
+    /// Convert batch tensors + scalars to literals (the only per-step
+    /// host→literal conversions on the hot path).
+    fn batch_literals(&self, batch: &MlmBatch, lr: f64) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(7);
+        for t in batch.tensors() {
+            lits.push(tensor_to_literal(t)?);
+        }
+        lits.push(tensor_to_literal(&HostTensor::scalar_i32(self.state.step as i32))?);
+        lits.push(tensor_to_literal(&HostTensor::scalar_i32(self.cfg.seed as i32))?);
+        lits.push(tensor_to_literal(&HostTensor::scalar_f32(lr as f32))?);
+        Ok(lits)
+    }
+
+    /// Run exactly one optimizer step; returns the loss.
+    pub fn step(&mut self) -> Result<f64> {
+        let lr = self.cfg.lr_at(self.state.step as usize);
+        let batch = self.batcher.next_batch()?;
+        let batch_lits = self.batch_literals(&batch, lr)?;
+        let t0 = Instant::now();
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.state.leaves.len() + 7);
+        refs.extend(self.state.leaves.iter());
+        refs.extend(batch_lits.iter());
+        let outs = self.step_exe.run_refs(&refs)?;
+        let loss = self.state.absorb_step_output(outs)?;
+        self.metrics.push(StepRecord {
+            step: self.state.step - 1,
+            loss,
+            lr,
+            step_time: t0.elapsed(),
+        });
+        Ok(loss)
+    }
+
+    /// Evaluate on one held-out batch; returns (loss, metric).
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let batch = self.batcher.next_batch()?;
+        let mut lits = Vec::with_capacity(5);
+        for t in batch.tensors() {
+            lits.push(tensor_to_literal(t)?);
+        }
+        lits.push(tensor_to_literal(&HostTensor::scalar_i32(0))?);
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.state.n_params + 5);
+        refs.extend(self.state.params().iter());
+        refs.extend(lits.iter());
+        let outs = self.eval_exe.run_refs(&refs)?;
+        if outs.len() != 2 {
+            return Err(Error::Abi(format!("eval returned {} outputs", outs.len())));
+        }
+        Ok((outs[0].to_vec::<f32>()?[0] as f64, outs[1].to_vec::<f32>()?[0] as f64))
+    }
+
+    /// Run the full configured training loop.
+    pub fn run(&mut self) -> Result<()> {
+        let total = self.cfg.steps;
+        while (self.state.step as usize) < total {
+            let loss = self.step()?;
+            let s = self.state.step as usize;
+            if self.opts.verbose && (s % self.cfg.log_every.max(1) == 0 || s == total) {
+                println!(
+                    "[{}] step {:>5}/{} loss {:.4} ema {:.4} {:>6.1} seq/s",
+                    self.artifact.manifest.name,
+                    s,
+                    total,
+                    loss,
+                    self.metrics.ema_loss().unwrap_or(loss),
+                    self.metrics.throughput(),
+                );
+            }
+            if self.cfg.eval_every > 0 && s % self.cfg.eval_every == 0 {
+                let (eval_loss, _) = self.evaluate()?;
+                if self.opts.verbose {
+                    println!(
+                        "[{}] step {:>5} eval loss {:.4}",
+                        self.artifact.manifest.name, s, eval_loss
+                    );
+                }
+            }
+        }
+        if let Some(path) = &self.opts.checkpoint_out {
+            self.state.to_host()?.save(path)?;
+            if self.opts.verbose {
+                println!("[{}] checkpoint → {}", self.artifact.manifest.name, path.display());
+            }
+        }
+        Ok(())
+    }
+}

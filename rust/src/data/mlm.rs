@@ -1,0 +1,164 @@
+//! BERT masked-LM batch construction (80/10/10 masking, label = -100 on
+//! unmasked positions — HuggingFace conventions, matching the L2 loss).
+
+use crate::data::corpus::{Corpus, CLS, FIRST_WORD, MASK, PAD, SEP};
+use crate::tensor::{HostTensor, Rng};
+use crate::Result;
+
+/// Masking hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MlmConfig {
+    /// Fraction of (non-special) tokens selected for prediction.
+    pub mask_prob: f64,
+    /// Of the selected: replaced by [MASK] (0.8), random (0.1), kept (0.1).
+    pub replace_mask: f64,
+    pub replace_random: f64,
+}
+
+impl Default for MlmConfig {
+    fn default() -> Self {
+        MlmConfig { mask_prob: 0.15, replace_mask: 0.8, replace_random: 0.1 }
+    }
+}
+
+/// One MLM training batch in the artifact ABI layout.
+#[derive(Debug, Clone)]
+pub struct MlmBatch {
+    pub input_ids: HostTensor,
+    pub token_type_ids: HostTensor,
+    pub attention_mask: HostTensor,
+    pub labels: HostTensor,
+}
+
+impl MlmBatch {
+    /// The four tensors in manifest `batch_inputs` order.
+    pub fn tensors(&self) -> [&HostTensor; 4] {
+        [&self.input_ids, &self.token_type_ids, &self.attention_mask, &self.labels]
+    }
+}
+
+/// Streaming batch generator over a synthetic corpus.
+pub struct MlmBatcher {
+    corpus: Corpus,
+    cfg: MlmConfig,
+    batch_size: usize,
+    seq_len: usize,
+    rng: Rng,
+}
+
+impl MlmBatcher {
+    pub fn new(corpus: Corpus, cfg: MlmConfig, batch_size: usize, seq_len: usize, seed: u64) -> Self {
+        MlmBatcher { corpus, cfg, batch_size, seq_len, rng: Rng::new(seed) }
+    }
+
+    /// Produce the next batch.
+    pub fn next_batch(&mut self) -> Result<MlmBatch> {
+        let (b, s) = (self.batch_size, self.seq_len);
+        let mut ids = Vec::with_capacity(b * s);
+        let mut attn = Vec::with_capacity(b * s);
+        let mut labels = vec![-100i32; b * s];
+        for row in 0..b {
+            let (seq, mask) = self.corpus.sequence(&mut self.rng, s);
+            for (col, (&tok, &m)) in seq.iter().zip(mask.iter()).enumerate() {
+                let idx = row * s + col;
+                let special = matches!(tok, PAD | CLS | SEP | MASK);
+                let mut out_tok = tok;
+                if m == 1 && !special && self.rng.coin(self.cfg.mask_prob) {
+                    labels[idx] = tok;
+                    let r = self.rng.next_f64();
+                    if r < self.cfg.replace_mask {
+                        out_tok = MASK;
+                    } else if r < self.cfg.replace_mask + self.cfg.replace_random {
+                        out_tok = FIRST_WORD
+                            + self.rng.below(self.corpus.vocab_size() - FIRST_WORD as usize) as i32;
+                    } // else keep original
+                }
+                ids.push(out_tok);
+                attn.push(m);
+            }
+        }
+        Ok(MlmBatch {
+            input_ids: HostTensor::i32(vec![b, s], ids)?,
+            token_type_ids: HostTensor::zeros(crate::tensor::Dtype::I32, vec![b, s]),
+            attention_mask: HostTensor::i32(vec![b, s], attn)?,
+            labels: HostTensor::i32(vec![b, s], labels)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn batcher(seed: u64) -> MlmBatcher {
+        let corpus = Corpus::new(CorpusConfig::default(), 5);
+        MlmBatcher::new(corpus, MlmConfig::default(), 4, 64, seed)
+    }
+
+    #[test]
+    fn shapes_and_dtypes() {
+        let b = batcher(1).next_batch().unwrap();
+        assert_eq!(b.input_ids.shape(), &[4, 64]);
+        assert_eq!(b.labels.shape(), &[4, 64]);
+        assert_eq!(b.tensors().len(), 4);
+    }
+
+    #[test]
+    fn mask_rate_near_15_percent() {
+        let mut gen = batcher(2);
+        let mut masked = 0usize;
+        let mut real = 0usize;
+        for _ in 0..20 {
+            let b = gen.next_batch().unwrap();
+            let labels = b.labels.as_i32().unwrap();
+            let attn = b.attention_mask.as_i32().unwrap();
+            masked += labels.iter().filter(|&&l| l >= 0).count();
+            real += attn.iter().filter(|&&m| m == 1).count();
+        }
+        let rate = masked as f64 / real as f64;
+        assert!((0.10..0.20).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn labels_only_on_real_tokens() {
+        let b = batcher(3).next_batch().unwrap();
+        let labels = b.labels.as_i32().unwrap();
+        let attn = b.attention_mask.as_i32().unwrap();
+        for (l, m) in labels.iter().zip(attn) {
+            if *m == 0 {
+                assert_eq!(*l, -100);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_positions_mostly_mask_token() {
+        let mut gen = batcher(4);
+        let mut mask_tok = 0usize;
+        let mut total = 0usize;
+        for _ in 0..10 {
+            let b = gen.next_batch().unwrap();
+            let ids = b.input_ids.as_i32().unwrap();
+            let labels = b.labels.as_i32().unwrap();
+            for (i, l) in labels.iter().enumerate() {
+                if *l >= 0 {
+                    total += 1;
+                    if ids[i] == MASK {
+                        mask_tok += 1;
+                    }
+                }
+            }
+        }
+        let frac = mask_tok as f64 / total as f64;
+        assert!((0.7..0.9).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let a = batcher(9).next_batch().unwrap();
+        let b = batcher(9).next_batch().unwrap();
+        assert_eq!(a.input_ids, b.input_ids);
+        assert_eq!(a.labels, b.labels);
+    }
+}

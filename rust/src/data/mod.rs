@@ -1,0 +1,18 @@
+//! Synthetic data substrate.
+//!
+//! The paper trains on English Wikipedia / WikiText / MRPC; none are
+//! shippable here, so this module synthesizes corpora with the same
+//! *statistical* properties the experiments depend on (Zipfian unigram
+//! distribution + local structure a language model can actually learn,
+//! so loss curves fall) and an MRPC-like paraphrase-pair task whose
+//! labels are learnable from token overlap. The paper's claims are
+//! variant-vs-variant comparisons, which are dataset-agnostic —
+//! DESIGN.md §2 documents the substitution.
+
+mod corpus;
+mod mlm;
+mod pairs;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use mlm::{MlmBatch, MlmBatcher, MlmConfig};
+pub use pairs::{PairBatch, PairTask};

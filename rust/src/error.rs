@@ -1,0 +1,47 @@
+//! Crate-wide error type: thin wrapper so public APIs don't leak `xla::Error`.
+
+use std::fmt;
+
+/// Unified error for runtime, IO, config and coordination failures.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    Xla(String),
+    /// Artifact or checkpoint IO.
+    Io(std::io::Error),
+    /// Manifest / config parse errors.
+    Parse(String),
+    /// ABI mismatches between manifest and executable.
+    Abi(String),
+    /// Invalid configuration or arguments.
+    Invalid(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Abi(m) => write!(f, "abi mismatch: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+

@@ -1,0 +1,30 @@
+//! # Tempo — memory-footprint-optimized Transformer training (NeurIPS 2022)
+//!
+//! Rust + JAX + Pallas reproduction of *"Tempo: Accelerating
+//! Transformer-Based Model Training through Memory Footprint Reduction"*
+//! (Andoorveedu et al., NeurIPS 2022).
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — training coordinator, GPU memory-capacity
+//!   simulator, roofline throughput simulator, Auto-Tempo search, report
+//!   harness regenerating every paper table/figure.
+//! * **L2/L1 (build-time python)** — JAX BERT with Tempo `custom_vjp`
+//!   layers and Pallas kernels, AOT-lowered to HLO text artifacts this
+//!   crate loads via the PJRT C API (`xla` crate).
+//!
+//! Python never runs on the training path: after `make artifacts`, the
+//! `tempo` binary is self-contained.
+
+pub mod autotempo;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod memmodel;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,337 @@
+//! `tempo` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train        — train one artifact (MLM on the synthetic corpus)
+//!   compare      — baseline-vs-tempo loss curves (Fig 6a analogue)
+//!   finetune     — MRPC-analogue classification trials (Fig 6b)
+//!   experiments  — regenerate paper tables/figures (memmodel+perfmodel)
+//!   max-batch    — capacity query for a (model, technique, gpu)
+//!   autotempo    — §5.2 automatic application pass
+//!   artifacts    — list available AOT artifacts
+
+use std::path::PathBuf;
+
+use tempo::autotempo::{coarse_pass, fine_search};
+use tempo::config::{Gpu, ModelConfig, Technique, TrainingConfig};
+use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
+use tempo::memmodel::max_batch;
+use tempo::report::{run_experiment, ALL_EXPERIMENTS};
+use tempo::runtime::{ArtifactIndex, Runtime};
+use tempo::util::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+tempo — Tempo (NeurIPS'22) reproduction coordinator
+
+USAGE:
+  tempo train [--artifact NAME] [--steps N] [--lr F] [--seed N]
+              [--config FILE] [--checkpoint-out PATH] [--resume PATH]
+  tempo compare [--artifacts a,b,...] [--steps N] [--lr F] [--seed N] [--out CSV]
+  tempo finetune [--artifact NAME] [--trials N] [--steps N] [--lr F] [--out CSV]
+  tempo experiments (--all | --id ID) [--quiet]
+  tempo max-batch --model NAME [--seq N] [--gpu 2080ti|v100|a100]
+  tempo memory-report --model NAME [--seq N] [--batch N] [--finetune]
+  tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
+  tempo artifacts [--dir DIR]
+
+Artifacts default to ./artifacts (override with --dir / TEMPO_ARTIFACTS).";
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get("dir")
+        .map(str::to_string)
+        .or_else(|| std::env::var("TEMPO_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".into())
+}
+
+fn parse_gpu(name: &str) -> tempo::Result<Gpu> {
+    match name.to_ascii_lowercase().as_str() {
+        "2080ti" | "rtx2080ti" => Ok(Gpu::Rtx2080Ti),
+        "v100" => Ok(Gpu::V100),
+        "a100" => Ok(Gpu::A100),
+        other => Err(tempo::Error::Invalid(format!("unknown gpu '{other}'"))),
+    }
+}
+
+fn parse_model(args: &Args) -> tempo::Result<ModelConfig> {
+    let name = args.get_or("model", "bert-large");
+    let mut cfg = ModelConfig::preset(&name)
+        .ok_or_else(|| tempo::Error::Invalid(format!("unknown model preset '{name}'")))?;
+    if let Some(s) = args.get("seq") {
+        cfg = cfg.with_seq_len(s.parse().map_err(|_| tempo::Error::Invalid("--seq".into()))?);
+    }
+    if let Some(h) = args.get("hidden") {
+        cfg = cfg.with_hidden(h.parse().map_err(|_| tempo::Error::Invalid("--hidden".into()))?);
+    }
+    if let Some(l) = args.get("layers") {
+        cfg = cfg.with_layers(l.parse().map_err(|_| tempo::Error::Invalid("--layers".into()))?);
+    }
+    Ok(cfg)
+}
+
+fn training_config(args: &Args) -> tempo::Result<TrainingConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainingConfig::from_kv_file(path)?,
+        None => TrainingConfig::default(),
+    };
+    if let Some(a) = args.get("artifact") {
+        cfg.artifact = a.to_string();
+    }
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.warmup_steps = args.get_usize("warmup", cfg.warmup_steps)?;
+    cfg.peak_lr = args.get_f64("lr", cfg.peak_lr)?;
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.log_every = args.get_usize("log-every", cfg.log_every)?;
+    Ok(cfg)
+}
+
+fn run() -> tempo::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "finetune" => cmd_finetune(&args),
+        "experiments" => cmd_experiments(&args),
+        "max-batch" => cmd_max_batch(&args),
+        "memory-report" => cmd_memory_report(&args),
+        "autotempo" => cmd_autotempo(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> tempo::Result<()> {
+    let cfg = training_config(args)?;
+    let index = ArtifactIndex::load(artifacts_dir(args))?;
+    let rt = Runtime::cpu()?;
+    println!("loading artifact {} …", cfg.artifact);
+    let artifact = index.open(&cfg.artifact)?;
+    let opts = TrainerOptions {
+        checkpoint_out: args.get("checkpoint-out").map(PathBuf::from),
+        resume_from: args.get("resume").map(PathBuf::from),
+        verbose: true,
+    };
+    let mut trainer = Trainer::new(&rt, artifact, cfg, opts)?;
+    println!(
+        "params: {} ({:.1} M) — starting",
+        trainer.state().param_count(),
+        trainer.state().param_count() as f64 / 1e6
+    );
+    trainer.run()?;
+    let m = trainer.metrics();
+    println!(
+        "done: final loss {:.4} | ema {:.4} | {:.1} seq/s | mean step {:?}",
+        m.last_loss().unwrap_or(f64::NAN),
+        m.ema_loss().unwrap_or(f64::NAN),
+        m.throughput(),
+        m.mean_step_time(),
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, m.to_csv())?;
+        println!("loss curve → {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> tempo::Result<()> {
+    let cfg = training_config(args)?;
+    let names_raw = args.get_or("artifacts", "bert_tiny_baseline,bert_tiny_tempo");
+    let names: Vec<&str> = names_raw.split(',').collect();
+    let index = ArtifactIndex::load(artifacts_dir(args))?;
+    let rt = Runtime::cpu()?;
+    println!("comparing {names:?} over {} steps (shared data/masks)", cfg.steps);
+    let result = compare_variants(&rt, &index, &names, &cfg, true)?;
+    for c in &result.curves {
+        println!(
+            "  {:<24} endpoint loss {:.4}",
+            c.artifact,
+            c.endpoint((cfg.steps / 10).max(5))
+        );
+    }
+    println!(
+        "max endpoint deviation vs {}: {:.3}% (paper Fig 6a: ≤ 0.5%)",
+        names[0],
+        100.0 * result.max_endpoint_rel_diff
+    );
+    if let Some(out) = args.get("out") {
+        let mut csv = String::from("step");
+        for c in &result.curves {
+            csv.push_str(&format!(",{}", c.artifact));
+        }
+        csv.push('\n');
+        for i in 0..result.curves[0].losses.len() {
+            csv.push_str(&i.to_string());
+            for c in &result.curves {
+                csv.push_str(&format!(",{:.6}", c.losses[i]));
+            }
+            csv.push('\n');
+        }
+        std::fs::write(out, csv)?;
+        println!("curves → {out}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> tempo::Result<()> {
+    let index = ArtifactIndex::load(artifacts_dir(args))?;
+    let rt = Runtime::cpu()?;
+    let artifact_name = args.get_or("artifact", "cls_tiny_tempo");
+    let trials = args.get_usize("trials", 3)?;
+    let steps = args.get_usize("steps", 60)?;
+    let eval_every = args.get_usize("eval-every", 20)?;
+    let lr = args.get_f64("lr", 5e-4)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let artifact = index.open(&artifact_name)?;
+    println!("fine-tuning {artifact_name}: {trials} trials × {steps} steps");
+    let result = finetune_trials(&rt, &artifact, trials, steps, eval_every, lr, seed, true)?;
+    let (lo, med, hi) = result.final_band();
+    println!("final accuracy band: min {lo:.3} / median {med:.3} / max {hi:.3}");
+    if let Some(out) = args.get("out") {
+        let mut csv = String::from("trial,eval_point,accuracy\n");
+        for (i, t) in result.trials.iter().enumerate() {
+            for (j, a) in t.accuracy.iter().enumerate() {
+                csv.push_str(&format!("{i},{j},{a:.4}\n"));
+            }
+        }
+        std::fs::write(out, csv)?;
+        println!("curves → {out}");
+    }
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> tempo::Result<()> {
+    let quiet = args.flag("quiet");
+    let ids: Vec<&str> = if args.flag("all") || args.get("id").is_none() {
+        ALL_EXPERIMENTS.iter().map(|e| e.id).collect()
+    } else {
+        vec![args.get("id").unwrap()]
+    };
+    for id in ids {
+        let table = run_experiment(id)?;
+        if !quiet {
+            println!("{}", table.render());
+        }
+        let path = table.write_csv(id)?;
+        println!("[{id}] → {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_max_batch(args: &Args) -> tempo::Result<()> {
+    let cfg = parse_model(args)?;
+    let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
+    println!("{} @ S={} on {}:", cfg.name, cfg.seq_len, gpu.name());
+    for tech in Technique::all() {
+        let fit = max_batch(&cfg, tech, gpu);
+        println!(
+            "  {:<11} max batch {:>5}  ({:.2} GB at max, {:.2} GB would overflow)",
+            tech.name(),
+            fit.max_batch,
+            fit.bytes_at_max as f64 / 1e9,
+            fit.bytes_over as f64 / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory_report(args: &Args) -> tempo::Result<()> {
+    use tempo::memmodel::ModelFootprint;
+    let cfg = parse_model(args)?;
+    let batch = args.get_usize("batch", 8)?;
+    let finetune = args.flag("finetune");
+    println!(
+        "{} @ S={} B={} ({}) — per-GPU bytes:",
+        cfg.name,
+        cfg.seq_len,
+        batch,
+        if finetune { "fine-tune head" } else { "MLM head" }
+    );
+    for tech in Technique::all() {
+        let mut fp = ModelFootprint::new(cfg.clone(), tech);
+        if finetune {
+            fp = fp.finetune();
+        }
+        let bd = fp.breakdown(batch);
+        println!("  {}:", tech.name());
+        for (label, bytes) in [
+            ("params", bd.params),
+            ("grads", bd.grads),
+            ("optimizer", bd.optimizer),
+            ("encoder activations", bd.encoder_activations),
+            ("other activations", bd.other_activations),
+            ("transient", bd.transient),
+        ] {
+            println!(
+                "    {:<20} {:>9.3} GB  ({:>5.1}%)",
+                label,
+                bytes as f64 / 1e9,
+                100.0 * bytes as f64 / bd.total() as f64
+            );
+        }
+        println!("    {:<20} {:>9.3} GB", "TOTAL", bd.total() as f64 / 1e9);
+    }
+    Ok(())
+}
+
+fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
+    let cfg = parse_model(args)?;
+    let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
+    match args.get("target-batch") {
+        None => {
+            let d = coarse_pass(&cfg, gpu);
+            println!("coarse pass: {}", d.rationale);
+            println!(
+                "  plan: tempo on {}/{} layers, max batch {}, {:.2} seq/s",
+                d.plan.applied_layers(),
+                cfg.layers,
+                d.max_batch,
+                d.throughput
+            );
+        }
+        Some(tb) => {
+            let target: usize =
+                tb.parse().map_err(|_| tempo::Error::Invalid("--target-batch".into()))?;
+            let d = fine_search(&cfg, gpu, target);
+            println!("fine-grained search: {}", d.rationale);
+            println!(
+                "  plan: tempo on {}/{} layers, max batch {}, {:.2} seq/s",
+                d.plan.applied_layers(),
+                cfg.layers,
+                d.max_batch,
+                d.throughput
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> tempo::Result<()> {
+    let dir = artifacts_dir(args);
+    let index = ArtifactIndex::load(&dir)?;
+    println!("artifacts in {dir}:");
+    for name in index.names() {
+        let a = index.open(name)?;
+        let m = &a.manifest;
+        println!(
+            "  {:<22} task={:<4} variant={:<10} impl={:<6} B={:<3} {} ({:.1} M params)",
+            m.name,
+            m.task,
+            m.variant,
+            m.impl_name,
+            m.batch_size,
+            m.config.name,
+            m.param_count() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Capacity fit: largest batch that fits a GPU (Table 2 generator).
+
+use crate::config::{Gpu, ModelConfig, Technique};
+
+use super::model::ModelFootprint;
+
+/// Result of a max-batch search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FitResult {
+    pub max_batch: usize,
+    /// Bytes used at that batch.
+    pub bytes_at_max: u64,
+    /// Bytes that would be used at max_batch + 1 (the overflow point).
+    pub bytes_over: u64,
+}
+
+/// Largest per-GPU batch size whose footprint fits `gpu`'s usable memory.
+///
+/// Footprint is monotone in B, so a doubling search + binary refine
+/// suffices. Returns batch 0 if even B=1 does not fit (the paper's
+/// "BERT at S=512 does not fit a 12 GB GPU at batch 1" observation).
+pub fn max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu) -> FitResult {
+    let fp = ModelFootprint::new(cfg.clone(), technique);
+    let budget = gpu.spec().usable_bytes();
+    let fits = |b: usize| b == 0 || fp.total_bytes(b) <= budget;
+
+    if !fits(1) {
+        return FitResult { max_batch: 0, bytes_at_max: fp.total_bytes(0), bytes_over: fp.total_bytes(1) };
+    }
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while fits(hi) {
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 20 {
+            break; // absurd; avoid pathological loops for tiny models
+        }
+    }
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    FitResult {
+        max_batch: lo,
+        bytes_at_max: fp.total_bytes(lo),
+        bytes_over: fp.total_bytes(lo + 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn large(s: usize) -> ModelConfig {
+        ModelConfig::bert_large().with_seq_len(s)
+    }
+
+    #[test]
+    fn fit_is_tight() {
+        let r = max_batch(&large(128), Technique::Baseline, Gpu::Rtx2080Ti);
+        let budget = Gpu::Rtx2080Ti.spec().usable_bytes();
+        assert!(r.bytes_at_max <= budget);
+        assert!(r.bytes_over > budget);
+    }
+
+    #[test]
+    fn longer_sequences_fit_fewer() {
+        for t in Technique::all() {
+            let b128 = max_batch(&large(128), t, Gpu::V100).max_batch;
+            let b512 = max_batch(&large(512), t, Gpu::V100).max_batch;
+            assert!(b512 < b128, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn bigger_gpu_fits_more() {
+        for t in Technique::all() {
+            let small = max_batch(&large(512), t, Gpu::Rtx2080Ti).max_batch;
+            let big = max_batch(&large(512), t, Gpu::A100).max_batch;
+            assert!(big > small, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn technique_ordering_in_max_batch() {
+        // Table 2's structure: Baseline < Tempo < Checkpoint everywhere.
+        for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
+            for s in [128, 512] {
+                let base = max_batch(&large(s), Technique::Baseline, gpu).max_batch;
+                let tempo = max_batch(&large(s), Technique::Tempo, gpu).max_batch;
+                let chk = max_batch(&large(s), Technique::Checkpoint, gpu).max_batch;
+                assert!(base < tempo, "{gpu:?} S={s}: {base} !< {tempo}");
+                assert!(tempo < chk, "{gpu:?} S={s}: {tempo} !< {chk}");
+            }
+        }
+    }
+}

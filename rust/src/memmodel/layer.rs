@@ -1,0 +1,209 @@
+//! Per-encoder-layer retained-activation inventory (paper Fig 1).
+//!
+//! Every tensor the backward pass needs, per technique. Derived from the
+//! HuggingFace BERT encoder layer the paper annotates:
+//!
+//! ```text
+//!  x ─→ Q,K,V linears ─→ scores(S²) ─→ softmax(S²) ─→ dropout(S²)
+//!    ─→ PV ─→ proj ─→ dropout ─→ +x → LN1 ─→ FC1(4H) ─→ GELU ─→ FC2
+//!    ─→ dropout ─→ +LN1 → LN2 ─→ next layer
+//! ```
+
+use crate::config::{ModelConfig, OptimizationSet};
+
+use super::{F32, MASK};
+
+/// Byte totals for one encoder layer at batch B.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerBytes {
+    /// fp32 feature maps retained for backward.
+    pub float_bytes: u64,
+    /// 1-byte masks retained (dropout keep-masks, Tempo's GELU mask).
+    pub mask_bytes: u64,
+    /// Small per-row statistics (LN mean/var or rstd).
+    pub stat_bytes: u64,
+}
+
+impl LayerBytes {
+    pub fn total(&self) -> u64 {
+        self.float_bytes + self.mask_bytes + self.stat_bytes
+    }
+}
+
+/// Retained activations of ONE encoder layer under an optimization set.
+///
+/// `OptimizationSet::none()` is the Baseline column; `::full()` is Tempo.
+/// (Checkpointing is handled at the model level — it changes *which
+/// layers* retain anything, not the per-layer inventory.)
+pub fn layer_activation_bytes(cfg: &ModelConfig, batch: usize, opts: OptimizationSet) -> LayerBytes {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let a = cfg.heads as u64;
+    let i = cfg.intermediate as u64;
+
+    let bsh = b * s * h;
+    let bsi = b * s * i;
+    let bass = b * a * s * s;
+
+    let mut float_elems: u64 = 0;
+    let mut mask_bytes: u64 = 0;
+    let mut stat_bytes: u64 = 0;
+
+    // ---- attention block ---------------------------------------------------
+    // layer input x (consumed by QKV linears and the residual)
+    float_elems += bsh;
+    // Q, K, V projections (inputs to the attention core)
+    float_elems += 3 * bsh;
+    // scores = QKᵀ/√d : the softmax *input*. PyTorch softmax retains it;
+    // the §3.4 output-only softmax discards it.
+    if !opts.softmax_outonly {
+        float_elems += bass;
+        // HF GPT2's unfused attention additionally materializes (and
+        // autograd retains) the causal-masked scores and the fp32
+        // upcast copy — absent once the Tempo fused core is in place.
+        if cfg.kind == crate::config::ModelKind::Gpt2 {
+            float_elems += 2 * bass;
+        }
+    }
+    // softmax output (needed by both softmax bwd and dropout bwd)
+    float_elems += bass;
+    // attention-prob dropout: mask always retained (1 byte)…
+    mask_bytes += bass * MASK;
+    // …and the scaled output (input to the PV matmul) — discarded and
+    // recomputed under §3.3 sub-layer dropout recomputation.
+    if !opts.dropout_recompute {
+        float_elems += bass;
+    }
+    // context = probs·V (input to the output projection)
+    float_elems += bsh;
+    // hidden dropout after the projection: mask + (output folded into the
+    // residual-sum tensor accounted as the LN input below)
+    mask_bytes += bsh * MASK;
+
+    // ---- LayerNorm 1 -------------------------------------------------------
+    // LN input (residual sum). In-place LN reconstructs from the output.
+    if !opts.inplace_layernorm {
+        float_elems += bsh;
+        stat_bytes += 2 * b * s * F32; // mean + var
+    } else {
+        stat_bytes += b * s * F32; // rstd only (App. D)
+    }
+    // LN1 output (input to FC1 — retained by every variant)
+    float_elems += bsh;
+
+    // ---- feed-forward ------------------------------------------------------
+    // FC1 output X = GELU input. In-place GELU replaces it with a mask.
+    if opts.inplace_gelu {
+        mask_bytes += bsi * MASK;
+    } else {
+        float_elems += bsi;
+    }
+    // GELU output Y (input to FC2 — retained by every variant)
+    float_elems += bsi;
+    // hidden dropout after FC2
+    mask_bytes += bsh * MASK;
+
+    // ---- LayerNorm 2 -------------------------------------------------------
+    if !opts.inplace_layernorm {
+        float_elems += bsh;
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    // LN2 output is the next layer's input — counted there (or by the
+    // head for the final layer).
+
+    LayerBytes {
+        float_bytes: float_elems * F32,
+        mask_bytes,
+        stat_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn base_at(s: usize) -> ModelConfig {
+        ModelConfig::bert_base().with_seq_len(s)
+    }
+
+    #[test]
+    fn paper_claim_s2_maps_are_56pct_at_s512() {
+        // §2.1 ①: the three B·A·S² maps are 56% of encoder-layer
+        // activation memory for BERT_BASE at S=512.
+        let cfg = base_at(512);
+        let all = layer_activation_bytes(&cfg, 1, OptimizationSet::none());
+        let (b, s, a) = (1u64, 512u64, 12u64);
+        let s2_bytes = 3 * b * a * s * s * F32;
+        let share = s2_bytes as f64 / all.total() as f64;
+        assert!((0.50..0.62).contains(&share), "share={share:.3}");
+    }
+
+    #[test]
+    fn paper_claim_gelu_input_is_17pct_at_s128() {
+        // §2.1 ③: GELU's stored input is ~17% of layer activation
+        // memory for BERT_BASE at S=128.
+        let cfg = base_at(128);
+        let all = layer_activation_bytes(&cfg, 1, OptimizationSet::none());
+        let gelu_x = (128u64 * 3072) * F32;
+        let share = gelu_x as f64 / all.total() as f64;
+        assert!((0.13..0.21).contains(&share), "share={share:.3}");
+    }
+
+    #[test]
+    fn each_optimization_strictly_reduces() {
+        let cfg = base_at(128);
+        let baseline = layer_activation_bytes(&cfg, 4, OptimizationSet::none()).total();
+        for which in ["gelu", "layernorm", "dropout", "softmax"] {
+            let opt = OptimizationSet::only(which).unwrap();
+            let reduced = layer_activation_bytes(&cfg, 4, opt).total();
+            assert!(reduced < baseline, "{which} did not reduce");
+        }
+        let full = layer_activation_bytes(&cfg, 4, OptimizationSet::full()).total();
+        assert!(full < baseline / 2 + baseline / 4, "full tempo saves >25%");
+    }
+
+    #[test]
+    fn savings_are_additive() {
+        // the four optimizations touch disjoint tensors, so the full-set
+        // saving equals the sum of individual savings
+        let cfg = base_at(256);
+        let base = layer_activation_bytes(&cfg, 2, OptimizationSet::none()).total();
+        let full = layer_activation_bytes(&cfg, 2, OptimizationSet::full()).total();
+        let individual_sum: u64 = ["gelu", "layernorm", "dropout", "softmax"]
+            .iter()
+            .map(|w| base - layer_activation_bytes(&cfg, 2, OptimizationSet::only(w).unwrap()).total())
+            .sum();
+        assert_eq!(base - full, individual_sum);
+    }
+
+    #[test]
+    fn scaling_is_linear_in_batch() {
+        let cfg = base_at(128);
+        let one = layer_activation_bytes(&cfg, 1, OptimizationSet::full());
+        let eight = layer_activation_bytes(&cfg, 8, OptimizationSet::full());
+        assert_eq!(eight.float_bytes, 8 * one.float_bytes);
+        assert_eq!(eight.mask_bytes, 8 * one.mask_bytes);
+    }
+
+    #[test]
+    fn dropout_recompute_saves_s2_map() {
+        let cfg = base_at(512);
+        let without = layer_activation_bytes(&cfg, 1, OptimizationSet::none());
+        let with = layer_activation_bytes(&cfg, 1, OptimizationSet::only("dropout").unwrap());
+        let saved = without.total() - with.total();
+        assert_eq!(saved, 12 * 512 * 512 * F32); // one B·A·S² fp32 map
+    }
+
+    #[test]
+    fn gelu_mask_costs_quarter_of_saved_map() {
+        let cfg = base_at(128);
+        let without = layer_activation_bytes(&cfg, 1, OptimizationSet::none());
+        let with = layer_activation_bytes(&cfg, 1, OptimizationSet::only("gelu").unwrap());
+        let bsi = 128 * 3072;
+        assert_eq!(without.total() - with.total(), bsi * F32 - bsi * MASK);
+    }
+}

@@ -1,0 +1,31 @@
+//! GPU memory-capacity simulator.
+//!
+//! Reproduces the paper's memory results analytically from the Fig 1
+//! tensor inventory: which feature maps each technique retains for the
+//! backward pass, at what width (fp32 activations + 1-byte masks,
+//! matching the paper's accounting in §3 and footnote 3).
+//!
+//! Outputs:
+//! * Table 2 — max batch per (GPU, seq len, technique)
+//! * §4.2 text — total GB at a fixed batch
+//! * Fig 9 — memory breakdown (weights / grads / optimizer / activations)
+//! * Fig 12 — per-optimization footprint-reduction ablation vs S
+//!
+//! The substitution (real HBM → analytical bytes) is sound because max
+//! batch is a pure arithmetic consequence of the inventory; the
+//! `calib` tests pin the model against the paper's published numbers.
+
+pub mod calib;
+mod fit;
+mod layer;
+mod model;
+mod report;
+
+pub use calib::{gb_at_b15, table2, Table2Row, PAPER_GB_AT_B15, PAPER_TABLE2};
+pub use fit::{max_batch, FitResult};
+pub use layer::{layer_activation_bytes, LayerBytes};
+pub use model::{Breakdown, ModelFootprint};
+pub use report::{ablation_fig12, breakdown_fig9, AblationRow, BreakdownRow};
+
+pub const F32: u64 = 4;
+pub const MASK: u64 = 1;

@@ -1,0 +1,210 @@
+//! Whole-model footprint: model states + activations per technique.
+
+use crate::config::{ModelConfig, OptimizationSet, Technique};
+
+use super::layer::layer_activation_bytes;
+use super::{F32, MASK};
+
+/// Full memory breakdown at a given batch size (per GPU).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Breakdown {
+    pub params: u64,
+    pub grads: u64,
+    pub optimizer: u64,
+    /// Encoder-layer retained activations (Fig 9's dominant slice).
+    pub encoder_activations: u64,
+    /// Embedding + MLM-head activations (incl. the B·S·V logits).
+    pub other_activations: u64,
+    /// Transient peak during backward of one layer (checkpointing's
+    /// recompute live set; small working headroom otherwise).
+    pub transient: u64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> u64 {
+        self.params
+            + self.grads
+            + self.optimizer
+            + self.encoder_activations
+            + self.other_activations
+            + self.transient
+    }
+
+    pub fn activations(&self) -> u64 {
+        self.encoder_activations + self.other_activations
+    }
+}
+
+/// Footprint calculator for one (model, technique) pair.
+#[derive(Debug, Clone)]
+pub struct ModelFootprint {
+    pub cfg: ModelConfig,
+    pub technique: Technique,
+    /// Fine-grained toggles (ignored for Baseline/Checkpoint).
+    pub opts: OptimizationSet,
+    /// Pre-training (MLM head with B·S·V logits) vs fine-tuning
+    /// (classification head, negligible memory) — Fig 9 is fine-tuning.
+    pub mlm_head: bool,
+}
+
+impl ModelFootprint {
+    pub fn new(cfg: ModelConfig, technique: Technique) -> Self {
+        let opts = match technique {
+            Technique::Tempo => OptimizationSet::full(),
+            _ => OptimizationSet::none(),
+        };
+        ModelFootprint { cfg, technique, opts, mlm_head: true }
+    }
+
+    /// Custom optimization subset (Fig 12 ablation / Auto-Tempo).
+    pub fn with_opts(cfg: ModelConfig, opts: OptimizationSet) -> Self {
+        ModelFootprint { cfg, technique: Technique::Tempo, opts, mlm_head: true }
+    }
+
+    /// Fine-tuning footprint (classification head instead of MLM).
+    pub fn finetune(mut self) -> Self {
+        self.mlm_head = false;
+        self
+    }
+
+    /// Model states: fp32 params + fp32 grads + Adam (m, v).
+    fn state_bytes(&self) -> (u64, u64, u64) {
+        let p = self.cfg.param_count() as u64 * F32;
+        (p, p, 2 * p)
+    }
+
+    /// Embedding-block activations (gather output, LN, dropout mask).
+    fn embedding_activation_bytes(&self, batch: usize) -> u64 {
+        let b = batch as u64;
+        let s = self.cfg.seq_len as u64;
+        let h = self.cfg.hidden as u64;
+        // summed gather output + LN input (or skipped when in-place) + LN
+        // output + dropout mask
+        let ln_in = if self.opts.inplace_layernorm { 0 } else { b * s * h };
+        (b * s * h + ln_in + b * s * h) * F32 + b * s * h * MASK
+    }
+
+    /// MLM-head activations: transform (H→H) + GELU + LN + the fp32
+    /// logits and their log-softmax, both B·S·V — the head dominates
+    /// non-encoder memory for real vocabularies.
+    fn head_activation_bytes(&self, batch: usize) -> u64 {
+        let b = batch as u64;
+        let s = self.cfg.seq_len as u64;
+        let h = self.cfg.hidden as u64;
+        if !self.mlm_head {
+            // classification: pooled [CLS] (B·H), tanh out, logits — tiny
+            return 3 * b * h * F32;
+        }
+        let v = self.cfg.vocab_size as u64;
+        let gelu_in = if self.opts.inplace_gelu { b * s * h * MASK } else { b * s * h * F32 };
+        let ln_in = if self.opts.inplace_layernorm { 0 } else { b * s * h * F32 };
+        // transform out + gelu out + LN out + logits + log-softmax
+        (3 * b * s * h + 2 * b * s * v) * F32 + gelu_in + ln_in
+    }
+
+    /// Full breakdown at batch `b`.
+    pub fn breakdown(&self, batch: usize) -> Breakdown {
+        let (params, grads, optimizer) = self.state_bytes();
+        let layers = self.cfg.layers as u64;
+        let per_layer_full = layer_activation_bytes(&self.cfg, batch, OptimizationSet::none());
+        let per_layer_opt = layer_activation_bytes(&self.cfg, batch, self.opts);
+
+        let (encoder, transient) = match self.technique {
+            Technique::Checkpoint => {
+                // PyTorch-style: retain only each layer's input, recompute
+                // the layer during backward. The backward live set holds
+                // the recomputed layer inventory PLUS the activation
+                // gradients flowing through it (≈ the same float volume
+                // again) — this doubled transient is what caps
+                // checkpointing's batch at long S in Table 2.
+                let b = batch as u64;
+                let s = self.cfg.seq_len as u64;
+                let h = self.cfg.hidden as u64;
+                let stored = layers * b * s * h * F32;
+                (stored, per_layer_full.total() + per_layer_full.float_bytes)
+            }
+            _ => {
+                let stored = layers * per_layer_opt.total();
+                // backward working headroom: activation grads of the
+                // widest rows while one layer's backprop is in flight
+                let b = batch as u64;
+                let s = self.cfg.seq_len as u64;
+                let wide = (b * s * self.cfg.intermediate as u64)
+                    .max(b * self.cfg.heads as u64 * s * s);
+                (stored, 2 * wide * F32)
+            }
+        };
+
+        Breakdown {
+            params,
+            grads,
+            optimizer,
+            encoder_activations: encoder,
+            other_activations: self.embedding_activation_bytes(batch)
+                + self.head_activation_bytes(batch),
+            transient,
+        }
+    }
+
+    /// Total bytes at batch `b`.
+    pub fn total_bytes(&self, batch: usize) -> u64 {
+        self.breakdown(batch).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Gpu;
+
+    #[test]
+    fn states_match_param_count() {
+        let fp = ModelFootprint::new(ModelConfig::bert_large(), Technique::Baseline);
+        let bd = fp.breakdown(1);
+        let p = ModelConfig::bert_large().param_count() as u64 * 4;
+        assert_eq!(bd.params, p);
+        assert_eq!(bd.grads, p);
+        assert_eq!(bd.optimizer, 2 * p);
+    }
+
+    #[test]
+    fn ordering_tempo_between_baseline_and_checkpoint() {
+        // Table 2's qualitative structure: checkpoint < tempo < baseline
+        // in footprint at equal batch.
+        for s in [128, 512] {
+            let cfg = ModelConfig::bert_large().with_seq_len(s);
+            let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).total_bytes(4);
+            let tempo = ModelFootprint::new(cfg.clone(), Technique::Tempo).total_bytes(4);
+            let chk = ModelFootprint::new(cfg, Technique::Checkpoint).total_bytes(4);
+            assert!(chk < tempo, "S={s}");
+            assert!(tempo < base, "S={s}");
+        }
+    }
+
+    #[test]
+    fn paper_total_at_b15_s128_is_about_11gb() {
+        // §4.2: Baseline uses 11.3 GB at B=15, S=128 on BERT_LARGE.
+        let cfg = ModelConfig::bert_large().with_seq_len(128);
+        let gb = ModelFootprint::new(cfg, Technique::Baseline).total_bytes(15) as f64 / 1e9;
+        assert!((9.5..12.5).contains(&gb), "got {gb:.2} GB");
+    }
+
+    #[test]
+    fn encoder_dominates_for_bert_base_b32() {
+        // Fig 9 / App A: encoder activations ≈ 66% of total for
+        // BERT_BASE fine-tuning at B=32, S=128.
+        let cfg = ModelConfig::bert_base().with_seq_len(128);
+        let bd = ModelFootprint::new(cfg, Technique::Baseline).finetune().breakdown(32);
+        let share = bd.encoder_activations as f64 / bd.total() as f64;
+        assert!((0.55..0.75).contains(&share), "share={share:.3}");
+    }
+
+    #[test]
+    fn fits_on_gpu_sanity() {
+        let cfg = ModelConfig::bert_large().with_seq_len(128);
+        let fp = ModelFootprint::new(cfg, Technique::Baseline);
+        let usable = Gpu::Rtx2080Ti.spec().usable_bytes();
+        assert!(fp.total_bytes(15) <= usable + usable / 6, "B=15 should ~fit");
+        assert!(fp.total_bytes(40) > usable, "B=40 must not fit");
+    }
+}

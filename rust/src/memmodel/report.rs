@@ -1,0 +1,124 @@
+//! Report generators for the memory figures (Fig 9, Fig 12).
+
+use crate::config::{ModelConfig, OptimizationSet, Technique};
+
+use super::layer::layer_activation_bytes;
+use super::model::ModelFootprint;
+
+/// One slice of the Fig 9 breakdown pie.
+#[derive(Debug, Clone)]
+pub struct BreakdownRow {
+    pub label: &'static str,
+    pub bytes: u64,
+    pub share: f64,
+}
+
+/// Fig 9 (App. A): GPU memory breakdown for BERT_BASE fine-tuning at
+/// B=32, S=128 — weights / gradients / optimizer / encoder activations /
+/// other activations.
+pub fn breakdown_fig9(cfg: &ModelConfig, technique: Technique, batch: usize) -> Vec<BreakdownRow> {
+    // Fig 9 profiles the MRPC *fine-tuning* task (classification head).
+    let bd = ModelFootprint::new(cfg.clone(), technique).finetune().breakdown(batch);
+    let total = bd.total() as f64;
+    let row = |label, bytes: u64| BreakdownRow { label, bytes, share: bytes as f64 / total };
+    vec![
+        row("weights", bd.params),
+        row("gradients", bd.grads),
+        row("optimizer", bd.optimizer),
+        row("encoder activations", bd.encoder_activations),
+        row("other activations", bd.other_activations),
+        row("transient", bd.transient),
+    ]
+}
+
+/// One row of the Fig 12 ablation: per-optimization share of the
+/// encoder-layer footprint reduced, at one sequence length.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub seq_len: usize,
+    pub optimization: &'static str,
+    /// Fraction of the baseline per-layer footprint this optimization
+    /// removes (the paper's y-axis).
+    pub reduction_share: f64,
+}
+
+/// Fig 12 (App. H): per-layer footprint reduction per optimization
+/// across sequence lengths, H/A = 64 fixed.
+pub fn ablation_fig12(cfg: &ModelConfig, seq_lens: &[usize]) -> Vec<AblationRow> {
+    let mut out = Vec::new();
+    for &s in seq_lens {
+        let c = cfg.with_seq_len(s);
+        let base = layer_activation_bytes(&c, 1, OptimizationSet::none()).total() as f64;
+        for which in ["gelu", "layernorm", "dropout", "softmax"] {
+            let with = layer_activation_bytes(&c, 1, OptimizationSet::only(which).unwrap()).total();
+            out.push(AblationRow {
+                seq_len: s,
+                optimization: match which {
+                    "gelu" => "In-place GELU",
+                    "layernorm" => "In-place LayerNorm",
+                    "dropout" => "Dropout Recompute",
+                    _ => "Softmax (out-only)",
+                },
+                reduction_share: (base - with as f64) / base,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shares_sum_to_one() {
+        let cfg = ModelConfig::bert_base().with_seq_len(128);
+        let rows = breakdown_fig9(&cfg, Technique::Baseline, 32);
+        let sum: f64 = rows.iter().map(|r| r.share).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert_eq!(rows.len(), 6);
+    }
+
+    #[test]
+    fn fig12_short_seq_dominated_by_gelu_and_ln() {
+        // App. H: In-place GELU + LayerNorm provide the bulk of the
+        // reduction at short S (their savings go as S·H)…
+        let cfg = ModelConfig::bert_base();
+        let rows = ablation_fig12(&cfg, &[128]);
+        let get = |name: &str| rows.iter().find(|r| r.optimization.contains(name)).unwrap().reduction_share;
+        assert!(get("GELU") + get("LayerNorm") > get("Dropout") + get("Softmax"));
+    }
+
+    #[test]
+    fn fig12_long_seq_dominated_by_s2_optimizations() {
+        // …while dropout-recompute + softmax (O(S²)) take over at long S.
+        let cfg = ModelConfig::bert_base();
+        let rows = ablation_fig12(&cfg, &[2048]);
+        let get = |name: &str| rows.iter().find(|r| r.optimization.contains(name)).unwrap().reduction_share;
+        assert!(get("Dropout") + get("Softmax") > get("GELU") + get("LayerNorm"));
+    }
+
+    #[test]
+    fn fig12_crossover_exists() {
+        // somewhere between S=128 and S=2048 the O(S²) pair overtakes —
+        // the robustness argument of App. H.
+        let cfg = ModelConfig::bert_base();
+        let mut crossed = false;
+        let mut prev_sign = None;
+        for s in [128usize, 256, 512, 1024, 2048] {
+            let rows = ablation_fig12(&cfg, &[s]);
+            let get = |name: &str| {
+                rows.iter().find(|r| r.optimization.contains(name)).unwrap().reduction_share
+            };
+            let diff = (get("GELU") + get("LayerNorm")) - (get("Dropout") + get("Softmax"));
+            let sign = diff > 0.0;
+            if let Some(p) = prev_sign {
+                if p != sign {
+                    crossed = true;
+                }
+            }
+            prev_sign = Some(sign);
+        }
+        assert!(crossed, "no crossover between SH and S² regimes");
+    }
+}

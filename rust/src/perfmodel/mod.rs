@@ -1,0 +1,25 @@
+//! GPU roofline throughput simulator.
+//!
+//! Reproduces the *shape* of the paper's throughput results (who wins,
+//! by roughly what factor, where crossovers fall) from first principles:
+//!
+//! * an op census per encoder layer (matmul FLOPs + vector bytes, fwd
+//!   and bwd, per technique — checkpointing pays a full re-forward,
+//!   Tempo pays the dropout-recompute multiply + polynomial GELU bwd);
+//! * a roofline timing model per GPU (tensor-core peak for matmuls,
+//!   HBM bandwidth for elementwise traffic) with a batch-dependent
+//!   utilization saturation curve — small batches under-fill the GPU,
+//!   which is exactly the effect Tempo's memory savings monetize.
+//!
+//! Regenerates Fig 2 (throughput vs batch), Fig 5 (throughput at max
+//! batch), Fig 7 (hidden-size ablation), Fig 8 (sequence-length
+//! ablation) and the §4.3 GPT2/RoBERTa results.
+
+pub mod calib;
+mod ops;
+mod roofline;
+mod throughput;
+
+pub use ops::{step_census, OpCensus};
+pub use roofline::{step_time, utilization};
+pub use throughput::{throughput_at, throughput_at_max_batch, ThroughputPoint};

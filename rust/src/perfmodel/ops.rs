@@ -1,0 +1,196 @@
+//! Op census: FLOPs and memory traffic for one training step.
+
+use crate::config::{ModelConfig, Technique};
+
+/// Aggregate work of one training step at batch B.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCensus {
+    /// Tensor-core matmul FLOPs (fwd + bwd + any recompute).
+    pub matmul_flops: f64,
+    /// CUDA-core elementwise FLOPs (softmax, GELU poly, LN, dropout…).
+    pub vector_flops: f64,
+    /// HBM bytes moved by bandwidth-bound ops (activations r/w).
+    pub vector_bytes: f64,
+    /// Optimizer + gradient traffic (params-sized streams).
+    pub state_bytes: f64,
+}
+
+impl OpCensus {
+    fn zero() -> Self {
+        OpCensus { matmul_flops: 0.0, vector_flops: 0.0, vector_bytes: 0.0, state_bytes: 0.0 }
+    }
+
+    fn add(&mut self, o: OpCensus) {
+        self.matmul_flops += o.matmul_flops;
+        self.vector_flops += o.vector_flops;
+        self.vector_bytes += o.vector_bytes;
+        self.state_bytes += o.state_bytes;
+    }
+
+    fn scale(mut self, f: f64) -> Self {
+        self.matmul_flops *= f;
+        self.vector_flops *= f;
+        self.vector_bytes *= f;
+        self.state_bytes *= f;
+        self
+    }
+}
+
+/// Forward-pass census of ONE encoder layer.
+fn layer_forward(cfg: &ModelConfig, batch: usize) -> OpCensus {
+    let b = batch as f64;
+    let s = cfg.seq_len as f64;
+    let h = cfg.hidden as f64;
+    let a = cfg.heads as f64;
+    let i = cfg.intermediate as f64;
+    let bsh = b * s * h;
+    let bass = b * a * s * s;
+
+    // matmuls: QKV (3·2BSH²) + scores (2BS²H) + PV (2BS²H) + proj (2BSH²)
+    //        + FC1/FC2 (2·2BSHI)
+    let matmul = 8.0 * bsh * h + 4.0 * b * s * s * h + 4.0 * bsh * i;
+
+    // vector traffic: each elementwise op reads+writes its maps (fp32).
+    // softmax (~3 passes over BAS²), dropout (2 maps), residuals+LN
+    // (~6 passes over BSH), GELU (2 passes over BSI).
+    let vector_bytes = 4.0 * (5.0 * bass + 8.0 * bsh + 3.0 * (b * s * i));
+    // elementwise FLOPs ≈ a few per element touched
+    let vector_flops = 4.0 * bass + 6.0 * bsh + 8.0 * (b * s * i);
+
+    OpCensus { matmul_flops: matmul, vector_flops, vector_bytes, state_bytes: 0.0 }
+}
+
+/// Extra vector work Tempo's backward adds (the "low overhead" of §3):
+/// the dropout-recompute multiply over the B·A·S² probs and the
+/// polynomial (deg ≤ 13) GELU backward over B·S·I.
+fn tempo_overhead(cfg: &ModelConfig, batch: usize) -> OpCensus {
+    let b = batch as f64;
+    let s = cfg.seq_len as f64;
+    let bass = b * cfg.heads as f64 * s * s;
+    let bsi = b * s * cfg.intermediate as f64;
+    OpCensus {
+        matmul_flops: 0.0,
+        // Horner chain: ~13 FMA/elt on the GELU map; one FMA on probs
+        vector_flops: 26.0 * bsi + 2.0 * bass,
+        // Net NEW traffic only: the dropout recompute fuses into the dV
+        // matmul prologue (read probs 4B + mask 1B instead of the stored
+        // dropped map 4B → +1 B/elt); GELU bwd reads y+mask instead of x
+        // (+1 B/elt); in-place LN re-derives x̂ from y (already resident).
+        vector_bytes: bass * 1.0 + bsi * 1.0,
+        state_bytes: 0.0,
+    }
+}
+
+/// Embedding + MLM-head census (fwd; bwd ≈ 2×, folded by caller).
+fn head_forward(cfg: &ModelConfig, batch: usize) -> OpCensus {
+    let b = batch as f64;
+    let s = cfg.seq_len as f64;
+    let h = cfg.hidden as f64;
+    let v = cfg.vocab_size as f64;
+    OpCensus {
+        // transform (2BSH²) + decoder (2BSHV)
+        matmul_flops: 2.0 * b * s * h * h + 2.0 * b * s * h * v,
+        vector_flops: 5.0 * b * s * v,
+        vector_bytes: 4.0 * (4.0 * b * s * v + 6.0 * b * s * h),
+        state_bytes: 0.0,
+    }
+}
+
+/// Census of one full training step under `technique`.
+pub fn step_census(cfg: &ModelConfig, technique: Technique, batch: usize) -> OpCensus {
+    let layers = cfg.layers as f64;
+    let fwd = layer_forward(cfg, batch);
+    let mut total = OpCensus::zero();
+    // forward + backward (bwd ≈ 2× fwd work for matmuls and traffic)
+    total.add(fwd.scale(3.0 * layers));
+    total.add(head_forward(cfg, batch).scale(3.0));
+
+    match technique {
+        Technique::Checkpoint => {
+            // full re-forward of every layer during backward; recompute
+            // runs ~25% less efficiently than the autotuned first
+            // forward (RNG-state restore, cold kernels, extra copies)
+            total.add(layer_forward(cfg, batch).scale(1.25 * layers));
+        }
+        Technique::Tempo => {
+            total.add(tempo_overhead(cfg, batch).scale(layers));
+        }
+        Technique::Baseline => {}
+    }
+
+    // optimizer: read params+grads+m+v, write params+m+v (fp32), plus
+    // DDP all-reduce traffic ≈ 2× grads through HBM
+    let p = cfg.param_count() as f64;
+    total.state_bytes += 4.0 * p * 9.0;
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn large(s: usize) -> ModelConfig {
+        ModelConfig::bert_large().with_seq_len(s)
+    }
+
+    #[test]
+    fn checkpoint_pays_a_third_more_matmul() {
+        let cfg = large(128);
+        let base = step_census(&cfg, Technique::Baseline, 8);
+        let chk = step_census(&cfg, Technique::Checkpoint, 8);
+        let ratio = chk.matmul_flops / base.matmul_flops;
+        // re-forward of the encoder ≈ +1/3 of encoder matmul work,
+        // plus the 25% recompute-inefficiency factor
+        assert!((1.25..1.45).contains(&ratio), "ratio={ratio:.3}");
+    }
+
+    #[test]
+    fn tempo_overhead_is_small() {
+        // §1: "as low as 1%" throughput degradation — the extra vector
+        // work must be a tiny fraction of the step's total traffic.
+        for s in [128, 512] {
+            let cfg = large(s);
+            let base = step_census(&cfg, Technique::Baseline, 8);
+            let tempo = step_census(&cfg, Technique::Tempo, 8);
+            let extra_bytes = tempo.vector_bytes - base.vector_bytes;
+            assert!(extra_bytes > 0.0);
+            assert!(
+                extra_bytes / base.vector_bytes < 0.25,
+                "S={s}: byte overhead {:.3}",
+                extra_bytes / base.vector_bytes
+            );
+            assert_eq!(tempo.matmul_flops, base.matmul_flops);
+        }
+    }
+
+    #[test]
+    fn census_scales_linearly_in_batch() {
+        let cfg = large(128);
+        let one = step_census(&cfg, Technique::Baseline, 1);
+        let four = step_census(&cfg, Technique::Baseline, 4);
+        let lin = |a: f64, b: f64| ((b - 4.0 * a) / (4.0 * a)).abs();
+        assert!(lin(one.matmul_flops, four.matmul_flops) < 1e-9);
+        // state traffic is batch-independent
+        assert_eq!(one.state_bytes, four.state_bytes);
+    }
+
+    #[test]
+    fn attention_flops_grow_quadratically_in_s() {
+        let c1 = step_census(&large(512), Technique::Baseline, 1);
+        let c2 = step_census(&large(1024), Technique::Baseline, 1);
+        // doubling S more than doubles FLOPs (S² attention term)
+        assert!(c2.matmul_flops > 2.1 * c1.matmul_flops);
+    }
+
+    #[test]
+    fn flops_magnitude_sanity() {
+        // BERT-LARGE fwd+bwd ≈ 6·params FLOPs per token (transformer rule
+        // of thumb), excluding attention and head.
+        let cfg = large(128);
+        let census = step_census(&cfg, Technique::Baseline, 1);
+        let tokens = 128.0;
+        let rule = 6.0 * cfg.param_count() as f64 * tokens;
+        let ratio = census.matmul_flops / rule;
+        assert!((0.6..1.6).contains(&ratio), "ratio={ratio:.2}");
+    }
+}

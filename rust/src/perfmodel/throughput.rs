@@ -1,0 +1,79 @@
+//! Throughput (sequences/s) sweeps — the paper's primary metric.
+
+use crate::config::{Gpu, ModelConfig, Technique};
+use crate::memmodel::max_batch;
+
+use super::roofline::step_time;
+
+/// One throughput measurement (one bar in Fig 5/7/8, one point in Fig 2).
+#[derive(Debug, Clone)]
+pub struct ThroughputPoint {
+    pub technique: Technique,
+    pub gpu: Gpu,
+    pub seq_len: usize,
+    pub batch: usize,
+    /// sequences per second (per GPU).
+    pub seqs_per_s: f64,
+}
+
+/// Throughput at an explicit batch size.
+pub fn throughput_at(cfg: &ModelConfig, technique: Technique, gpu: Gpu, batch: usize) -> ThroughputPoint {
+    let t = step_time(cfg, technique, &gpu.spec(), batch);
+    ThroughputPoint {
+        technique,
+        gpu,
+        seq_len: cfg.seq_len,
+        batch,
+        seqs_per_s: if batch == 0 { 0.0 } else { batch as f64 / t },
+    }
+}
+
+/// Throughput at the memory-model max batch (the Fig 5/7/8 protocol:
+/// every technique runs as large as it fits).
+pub fn throughput_at_max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu) -> ThroughputPoint {
+    let b = max_batch(cfg, technique, gpu).max_batch;
+    throughput_at(cfg, technique, gpu, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn large(s: usize) -> ModelConfig {
+        ModelConfig::bert_large().with_seq_len(s)
+    }
+
+    #[test]
+    fn fig2_shape_rising_throughput_with_batch() {
+        let cfg = large(128);
+        let mut prev = 0.0;
+        for b in [1usize, 2, 4, 8, 15] {
+            let p = throughput_at(&cfg, Technique::Baseline, Gpu::Rtx2080Ti, b);
+            assert!(p.seqs_per_s > prev, "B={b}");
+            prev = p.seqs_per_s;
+        }
+    }
+
+    #[test]
+    fn fig5_tempo_wins_at_max_batch_everywhere() {
+        // The headline: Tempo outperforms both baselines across both
+        // sequence lengths and both GPUs.
+        for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
+            for s in [128usize, 512] {
+                let cfg = large(s);
+                let t = throughput_at_max_batch(&cfg, Technique::Tempo, gpu).seqs_per_s;
+                let b = throughput_at_max_batch(&cfg, Technique::Baseline, gpu).seqs_per_s;
+                let c = throughput_at_max_batch(&cfg, Technique::Checkpoint, gpu).seqs_per_s;
+                assert!(t > b, "{gpu:?} S={s}: tempo {t:.2} !> baseline {b:.2}");
+                assert!(t > c, "{gpu:?} S={s}: tempo {t:.2} !> checkpoint {c:.2}");
+            }
+        }
+    }
+
+    #[test]
+    fn unrunnable_config_reports_zero() {
+        // Fig 8's S=3072 Baseline bar is missing (OOM) — batch 0 → 0 seq/s
+        let p = throughput_at(&large(128), Technique::Baseline, Gpu::Rtx2080Ti, 0);
+        assert_eq!(p.seqs_per_s, 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Report harness: regenerate every paper table/figure as ASCII + CSV.
+
+mod experiments;
+mod table;
+
+pub use experiments::{run_experiment, Experiment, ALL_EXPERIMENTS};
+pub use table::Table;

@@ -1,0 +1,277 @@
+//! Artifact manifests: the ABI contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! Each artifact directory holds `init.hlo.txt`, `step.hlo.txt`,
+//! `eval.hlo.txt` and a `manifest.json` describing the flat parameter
+//! leaf order, batch tensor shapes and scalar inputs.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// One parameter/batch leaf: name, shape, dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl LeafSpec {
+    /// Total elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(LeafSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Model hyperparameters echoed into the manifest (for reports/sanity).
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub intermediate: usize,
+    pub dropout_p: f64,
+    pub num_classes: usize,
+}
+
+/// Files within an artifact directory.
+#[derive(Debug, Clone)]
+pub struct ManifestFiles {
+    pub init: String,
+    pub step: String,
+    pub eval: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub task: String,
+    pub variant: String,
+    /// Kernel path the artifact was lowered with ("jnp" | "pallas").
+    pub impl_name: String,
+    pub batch_size: usize,
+    pub config: ManifestConfig,
+    pub n_param_leaves: usize,
+    pub params: Vec<LeafSpec>,
+    pub batch_inputs: Vec<LeafSpec>,
+    pub files: ManifestFiles,
+}
+
+impl Manifest {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let cfg = v.req("config")?;
+        let manifest = Manifest {
+            name: v.req("name")?.as_str()?.to_string(),
+            task: v.req("task")?.as_str()?.to_string(),
+            variant: v.req("variant")?.as_str()?.to_string(),
+            impl_name: v
+                .get("impl")
+                .and_then(|x| x.as_str().ok())
+                .unwrap_or("jnp")
+                .to_string(),
+            batch_size: v.req("batch_size")?.as_usize()?,
+            config: ManifestConfig {
+                name: cfg.req("name")?.as_str()?.to_string(),
+                vocab_size: cfg.req("vocab_size")?.as_usize()?,
+                hidden: cfg.req("hidden")?.as_usize()?,
+                layers: cfg.req("layers")?.as_usize()?,
+                heads: cfg.req("heads")?.as_usize()?,
+                seq_len: cfg.req("seq_len")?.as_usize()?,
+                intermediate: cfg.req("intermediate")?.as_usize()?,
+                dropout_p: cfg.req("dropout_p")?.as_f64()?,
+                num_classes: cfg.req("num_classes")?.as_usize()?,
+            },
+            n_param_leaves: v.req("n_param_leaves")?.as_usize()?,
+            params: v
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(LeafSpec::from_json)
+                .collect::<Result<_>>()?,
+            batch_inputs: v
+                .req("batch_inputs")?
+                .as_arr()?
+                .iter()
+                .map(LeafSpec::from_json)
+                .collect::<Result<_>>()?,
+            files: ManifestFiles {
+                init: v.req("files")?.req("init")?.as_str()?.to_string(),
+                step: v.req("files")?.req("step")?.as_str()?.to_string(),
+                eval: v.req("files")?.req("eval")?.as_str()?.to_string(),
+            },
+        };
+        if manifest.params.len() != manifest.n_param_leaves {
+            return Err(Error::Abi(format!(
+                "manifest {}: n_param_leaves {} != params list {}",
+                manifest.name,
+                manifest.n_param_leaves,
+                manifest.params.len()
+            )));
+        }
+        if manifest.batch_inputs.len() != 4 {
+            return Err(Error::Abi(format!(
+                "manifest {}: expected 4 batch inputs, got {}",
+                manifest.name,
+                manifest.batch_inputs.len()
+            )));
+        }
+        Ok(manifest)
+    }
+
+    /// Total parameter count (sum of leaf elements).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(LeafSpec::numel).sum()
+    }
+}
+
+/// An artifact on disk: directory + parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    /// Load `<dir>/manifest.json` and validate basic invariants.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(Artifact { dir, manifest })
+    }
+
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join(&self.manifest.files.init)
+    }
+
+    pub fn step_path(&self) -> PathBuf {
+        self.dir.join(&self.manifest.files.step)
+    }
+
+    pub fn eval_path(&self) -> PathBuf {
+        self.dir.join(&self.manifest.files.eval)
+    }
+}
+
+/// The `artifacts/index.json` listing.
+#[derive(Debug, Clone)]
+pub struct IndexEntry {
+    pub name: String,
+    pub dir: String,
+    pub n_param_leaves: usize,
+}
+
+/// All artifacts below a root directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub root: PathBuf,
+    pub entries: Vec<IndexEntry>,
+}
+
+impl ArtifactIndex {
+    /// Read `<root>/index.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("index.json"))?;
+        let v = Json::parse(&text)?;
+        let entries = v
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(IndexEntry {
+                    name: e.req("name")?.as_str()?.to_string(),
+                    dir: e.req("dir")?.as_str()?.to_string(),
+                    n_param_leaves: e.req("n_param_leaves")?.as_usize()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(ArtifactIndex { root, entries })
+    }
+
+    /// Open one artifact by name.
+    pub fn open(&self, name: &str) -> Result<Artifact> {
+        let entry = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Invalid(format!("unknown artifact {name}")))?;
+        Artifact::load(self.root.join(&entry.dir))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    const MANIFEST: &str = r#"{
+        "name": "t", "task": "mlm", "variant": "tempo", "impl": "jnp",
+        "batch_size": 8,
+        "config": {"name": "bert-tiny", "vocab_size": 4096, "hidden": 128,
+                   "layers": 2, "heads": 2, "seq_len": 64,
+                   "intermediate": 512, "dropout_p": 0.1, "num_classes": 2},
+        "n_param_leaves": 1,
+        "params": [{"name": "w", "shape": [2, 3], "dtype": "float32"}],
+        "batch_inputs": [
+            {"name": "input_ids", "shape": [8, 64], "dtype": "int32"},
+            {"name": "token_type_ids", "shape": [8, 64], "dtype": "int32"},
+            {"name": "attention_mask", "shape": [8, 64], "dtype": "int32"},
+            {"name": "labels", "shape": [8, 64], "dtype": "int32"}],
+        "files": {"init": "init.hlo.txt", "step": "step.hlo.txt",
+                  "eval": "eval.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.param_count(), 6);
+        assert_eq!(m.config.hidden, 128);
+        assert_eq!(m.impl_name, "jnp");
+        assert_eq!(m.batch_inputs[3].name, "labels");
+    }
+
+    #[test]
+    fn leaf_count_mismatch_rejected() {
+        let bad = MANIFEST.replace("\"n_param_leaves\": 1", "\"n_param_leaves\": 7");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn artifact_and_index_load() {
+        let dir = TempDir::new().unwrap();
+        let adir = dir.path().join("t");
+        std::fs::create_dir_all(&adir).unwrap();
+        std::fs::write(adir.join("manifest.json"), MANIFEST).unwrap();
+        std::fs::write(
+            dir.path().join("index.json"),
+            r#"[{"name": "t", "dir": "t", "n_param_leaves": 1}]"#,
+        )
+        .unwrap();
+        let idx = ArtifactIndex::load(dir.path()).unwrap();
+        assert_eq!(idx.names(), vec!["t"]);
+        let a = idx.open("t").unwrap();
+        assert!(a.step_path().ends_with("step.hlo.txt"));
+        assert!(idx.open("missing").is_err());
+    }
+}

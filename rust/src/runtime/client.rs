@@ -1,0 +1,130 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::literal::{literal_to_tensor, tensor_to_literal};
+use crate::tensor::HostTensor;
+use crate::{Error, Result};
+
+// SAFETY: the PJRT C API objects wrapped by the `xla` crate (client,
+// loaded executable) are documented thread-safe; the crate just doesn't
+// mark its raw-pointer wrappers. All mutation on our side is behind a
+// Mutex.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+/// A compiled XLA executable plus bookkeeping.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Client handle for host→device buffer staging.
+    client: xla::PjRtClient,
+    /// Source path, for diagnostics.
+    pub source: String,
+    /// Wall time spent compiling.
+    pub compile_time: std::time::Duration,
+}
+
+impl Executable {
+    /// Run with host tensors; returns the flattened output tuple.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so execution
+    /// yields a single tuple literal we decompose into leaves.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Run with pre-converted literals (hot path: params stay as literals
+    /// across steps, only the batch tensors are re-converted).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let outs = self.run_literals_raw(literals)?;
+        outs.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Run and keep the outputs as literals (avoids host copies when the
+    /// results are immediately fed back in, e.g. the training loop).
+    pub fn run_literals_raw(&self, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Hot path: borrowed-literal inputs → literal outputs. The training
+    /// loop keeps params/optimizer state as literals across steps, so
+    /// the only per-step host conversions are the batch tensors in and
+    /// the scalar loss out (see coordinator::Trainer).
+    ///
+    /// LEAK NOTE: the vendored crate's literal-input `execute` stages
+    /// each input into a PJRT buffer it `release()`s and never frees —
+    /// one full state copy leaked per training step (found via the
+    /// /proc RSS probe, see EXPERIMENTS.md §Perf). We stage the buffers
+    /// ourselves (owned `PjRtBuffer`s, freed on drop) and call the
+    /// borrow-only `execute_b` instead.
+    pub fn run_refs(&self, literals: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let buffers: Vec<xla::PjRtBuffer> = literals
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, xla::Error>>()?;
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla("executable produced no outputs".into()))?;
+        let tuple = first.to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Shared PJRT CPU client + executable cache.
+///
+/// Compilation of the training step is expensive (seconds); the cache
+/// makes `load` idempotent per path so examples/benches can re-enter.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string, e.g. "cpu" (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by canonical path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let path = path.as_ref();
+        let key = path
+            .canonicalize()
+            .unwrap_or_else(|_| path.to_path_buf())
+            .to_string_lossy()
+            .into_owned();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let built = Arc::new(Executable {
+            exe,
+            client: self.client.clone(),
+            source: key.clone(),
+            compile_time: t0.elapsed(),
+        });
+        self.cache.lock().unwrap().insert(key, built.clone());
+        Ok(built)
+    }
+}

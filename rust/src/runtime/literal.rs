@@ -1,0 +1,46 @@
+//! HostTensor ⇄ xla::Literal conversion.
+
+use crate::tensor::HostTensor;
+use crate::{Error, Result};
+
+/// Host → device-feedable literal.
+pub fn tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+/// Literal → host tensor (f32 / s32 supported; everything the ABI emits).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => HostTensor::i32(dims, lit.to_vec::<i32>()?),
+        other => Err(Error::Abi(format!("unsupported literal type {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar() {
+        let t = HostTensor::scalar_i32(-7);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

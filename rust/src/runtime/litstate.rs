@@ -1,0 +1,78 @@
+//! Literal-resident training state — the §Perf-optimized hot path.
+//!
+//! [`super::TrainState`] stages every leaf through `HostTensor`s, which
+//! costs several full-state memcpys per step (clone → vec1 → reshape →
+//! buffer). `LiteralState` keeps the (params, m, v) leaves as
+//! `xla::Literal`s across steps: the step executable consumes them by
+//! reference and its output tuple decomposes straight back into the
+//! next step's literals. Host conversions remain only for the batch in
+//! and the scalar loss out. See EXPERIMENTS.md §Perf for before/after.
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::literal::{literal_to_tensor, tensor_to_literal};
+use crate::runtime::state::TrainState;
+use crate::{Error, Result};
+
+/// Flat (params ++ m ++ v) state held as XLA literals.
+pub struct LiteralState {
+    pub leaves: Vec<xla::Literal>,
+    pub n_params: usize,
+    pub step: i64,
+}
+
+impl LiteralState {
+    /// Wrap the output of the `init` executable (already literals).
+    pub fn from_init(outputs: Vec<xla::Literal>, manifest: &Manifest) -> Result<Self> {
+        let n = manifest.n_param_leaves;
+        if outputs.len() != 3 * n {
+            return Err(Error::Abi(format!(
+                "init returned {} leaves, expected {}",
+                outputs.len(),
+                3 * n
+            )));
+        }
+        Ok(LiteralState { leaves: outputs, n_params: n, step: 0 })
+    }
+
+    /// Convert a host-side state (e.g. a loaded checkpoint).
+    pub fn from_host(state: &TrainState) -> Result<Self> {
+        let leaves = state
+            .leaves
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LiteralState { leaves, n_params: state.n_params, step: state.step })
+    }
+
+    /// Materialize on the host (checkpointing, inspection).
+    pub fn to_host(&self) -> Result<TrainState> {
+        let leaves = self
+            .leaves
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { leaves, n_params: self.n_params, step: self.step })
+    }
+
+    /// Borrow just the parameter leaves (for eval).
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.leaves[..self.n_params]
+    }
+
+    /// Replace state from the step output (`params ++ m ++ v ++ [loss]`);
+    /// returns the loss. The state leaves are *moved*, not copied.
+    pub fn absorb_step_output(&mut self, mut outputs: Vec<xla::Literal>) -> Result<f64> {
+        if outputs.len() != self.leaves.len() + 1 {
+            return Err(Error::Abi(format!(
+                "step returned {} leaves, expected {}",
+                outputs.len(),
+                self.leaves.len() + 1
+            )));
+        }
+        let loss_lit = outputs.pop().unwrap();
+        let loss = loss_lit.to_vec::<f32>()?[0] as f64;
+        self.leaves = outputs;
+        self.step += 1;
+        Ok(loss)
+    }
+}

@@ -1,0 +1,19 @@
+//! L3↔L2 bridge: load AOT HLO-text artifacts and run them on PJRT.
+//!
+//! The python side (`python/compile/aot.py`) lowers `init` / `step` /
+//! `eval` per (model config, variant) to HLO **text** plus a
+//! `manifest.json` describing the flat-leaf ABI. This module loads the
+//! text with `HloModuleProto::from_text_file`, compiles it once on the
+//! PJRT CPU client, and shuttles `HostTensor`s in and out as literals.
+
+mod artifact;
+mod client;
+mod literal;
+mod litstate;
+mod state;
+
+pub use artifact::{Artifact, ArtifactIndex, LeafSpec, Manifest};
+pub use client::{Executable, Runtime};
+pub use literal::{literal_to_tensor, tensor_to_literal};
+pub use litstate::LiteralState;
+pub use state::TrainState;

@@ -1,0 +1,207 @@
+//! Training state: the (params, m, v) leaf lists shuttled through the
+//! `step` executable, plus checkpoint save/load in a tiny binary format.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::artifact::Manifest;
+use crate::tensor::{Dtype, HostTensor};
+use crate::{Error, Result};
+
+/// Flat training state in manifest leaf order: `leaves = params ++ m ++ v`.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// 3n leaves (params, then Adam m, then Adam v).
+    pub leaves: Vec<HostTensor>,
+    /// Number of parameter leaves (n).
+    pub n_params: usize,
+    /// Global step counter (host-side; fed to the executable as a scalar).
+    pub step: i64,
+}
+
+impl TrainState {
+    /// Wrap the output of the `init` executable.
+    pub fn from_init(outputs: Vec<HostTensor>, manifest: &Manifest) -> Result<Self> {
+        let n = manifest.n_param_leaves;
+        if outputs.len() != 3 * n {
+            return Err(Error::Abi(format!(
+                "init returned {} leaves, expected {}",
+                outputs.len(),
+                3 * n
+            )));
+        }
+        // Validate shapes against the manifest (params section only —
+        // m and v mirror params exactly).
+        for (spec, leaf) in manifest.params.iter().zip(outputs.iter()) {
+            if spec.shape != leaf.shape() {
+                return Err(Error::Abi(format!(
+                    "leaf {}: manifest shape {:?} != init shape {:?}",
+                    spec.name,
+                    spec.shape,
+                    leaf.shape()
+                )));
+            }
+        }
+        Ok(TrainState { leaves: outputs, n_params: n, step: 0 })
+    }
+
+    /// Parameter leaves only.
+    pub fn params(&self) -> &[HostTensor] {
+        &self.leaves[..self.n_params]
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params().iter().map(HostTensor::len).sum()
+    }
+
+    /// Replace state from the step executable's output
+    /// (`params ++ m ++ v ++ [loss]`); returns the loss.
+    pub fn absorb_step_output(&mut self, mut outputs: Vec<HostTensor>) -> Result<f64> {
+        if outputs.len() != self.leaves.len() + 1 {
+            return Err(Error::Abi(format!(
+                "step returned {} leaves, expected {}",
+                outputs.len(),
+                self.leaves.len() + 1
+            )));
+        }
+        let loss = outputs.pop().unwrap().first()?;
+        self.leaves = outputs;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    // -- checkpointing ------------------------------------------------------
+    //
+    // Format: magic, version, step, n_leaves, then per leaf:
+    // dtype(u8), ndim(u32), dims(u64...), payload (LE bytes).
+
+    const MAGIC: &'static [u8; 8] = b"TEMPOCK1";
+
+    /// Serialize the full state to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.step as u64).to_le_bytes())?;
+        w.write_all(&(self.n_params as u64).to_le_bytes())?;
+        w.write_all(&(self.leaves.len() as u64).to_le_bytes())?;
+        for leaf in &self.leaves {
+            let dt: u8 = match leaf.dtype() {
+                Dtype::F32 => 0,
+                Dtype::I32 => 1,
+            };
+            w.write_all(&[dt])?;
+            w.write_all(&(leaf.shape().len() as u32).to_le_bytes())?;
+            for &d in leaf.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match leaf {
+                HostTensor::F32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                HostTensor::I32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a state produced by [`TrainState::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            return Err(Error::Parse("bad checkpoint magic".into()));
+        }
+        let step = read_u64(&mut r)? as i64;
+        let n_params = read_u64(&mut r)? as usize;
+        let n_leaves = read_u64(&mut r)? as usize;
+        let mut leaves = Vec::with_capacity(n_leaves);
+        for _ in 0..n_leaves {
+            let mut dt = [0u8; 1];
+            r.read_exact(&mut dt)?;
+            let mut nd = [0u8; 4];
+            r.read_exact(&mut nd)?;
+            let ndim = u32::from_le_bytes(nd) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let leaf = match dt[0] {
+                0 => {
+                    let mut data = vec![0f32; n];
+                    let mut buf = [0u8; 4];
+                    for v in &mut data {
+                        r.read_exact(&mut buf)?;
+                        *v = f32::from_le_bytes(buf);
+                    }
+                    HostTensor::F32 { shape, data }
+                }
+                1 => {
+                    let mut data = vec![0i32; n];
+                    let mut buf = [0u8; 4];
+                    for v in &mut data {
+                        r.read_exact(&mut buf)?;
+                        *v = i32::from_le_bytes(buf);
+                    }
+                    HostTensor::I32 { shape, data }
+                }
+                other => return Err(Error::Parse(format!("bad dtype tag {other}"))),
+            };
+            leaves.push(leaf);
+        }
+        Ok(TrainState { leaves, n_params, step })
+    }
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let leaves = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.25]).unwrap(),
+            HostTensor::f32(vec![3], vec![0.0; 3]).unwrap(),
+            HostTensor::f32(vec![3], vec![9.0; 3]).unwrap(),
+        ];
+        let st = TrainState { leaves, n_params: 1, step: 42 };
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("ck.bin");
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.n_params, 1);
+        assert_eq!(back.leaves, st.leaves);
+    }
+
+    #[test]
+    fn absorb_checks_arity() {
+        let mut st = TrainState {
+            leaves: vec![HostTensor::scalar_f32(1.0); 3],
+            n_params: 1,
+            step: 0,
+        };
+        // wrong arity
+        assert!(st.absorb_step_output(vec![HostTensor::scalar_f32(0.0); 3]).is_err());
+        // right arity: 3 leaves + loss
+        let mut outs = vec![HostTensor::scalar_f32(2.0); 3];
+        outs.push(HostTensor::scalar_f32(0.5));
+        let loss = st.absorb_step_output(outs).unwrap();
+        assert_eq!(loss, 0.5);
+        assert_eq!(st.step, 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Row-major host tensors (f32 / i32) used to stage data across the PJRT
+//! boundary and to hold parameter checkpoints.
+
+use crate::{Error, Result};
+
+/// Element type of a [`HostTensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        4
+    }
+
+    /// Parse the manifest's dtype string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" | "f32" => Ok(Dtype::F32),
+            "int32" | "i32" => Ok(Dtype::I32),
+            other => Err(Error::Parse(format!("unsupported dtype {other}"))),
+        }
+    }
+}
+
+/// A dense row-major tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    /// New f32 tensor; checks element count against the shape.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Invalid(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(HostTensor::F32 { shape, data })
+    }
+
+    /// New i32 tensor; checks element count against the shape.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Invalid(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(HostTensor::I32 { shape, data })
+    }
+
+    /// All-zero tensor of the given dtype/shape.
+    pub fn zeros(dtype: Dtype, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        match dtype {
+            Dtype::F32 => HostTensor::F32 { shape, data: vec![0.0; n] },
+            Dtype::I32 => HostTensor::I32 { shape, data: vec![0; n] },
+        }
+    }
+
+    /// Scalar f32.
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    /// Scalar i32.
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes occupied by the payload.
+    pub fn nbytes(&self) -> usize {
+        self.len() * self.dtype().size()
+    }
+
+    /// Borrow the f32 payload.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::Invalid("tensor is not f32".into())),
+        }
+    }
+
+    /// Borrow the i32 payload.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(Error::Invalid("tensor is not i32".into())),
+        }
+    }
+
+    /// First element as f64 (handy for scalar outputs like loss).
+    pub fn first(&self) -> Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } => data
+                .first()
+                .map(|v| *v as f64)
+                .ok_or_else(|| Error::Invalid("empty tensor".into())),
+            HostTensor::I32 { data, .. } => data
+                .first()
+                .map(|v| *v as f64)
+                .ok_or_else(|| Error::Invalid("empty tensor".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = HostTensor::scalar_f32(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.first().unwrap(), 2.5);
+        assert_eq!(s.nbytes(), 4);
+    }
+
+    #[test]
+    fn zeros_len() {
+        let z = HostTensor::zeros(Dtype::I32, vec![3, 5]);
+        assert_eq!(z.len(), 15);
+        assert_eq!(z.dtype(), Dtype::I32);
+        assert!(!z.is_empty());
+    }
+}

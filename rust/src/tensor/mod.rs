@@ -1,0 +1,15 @@
+//! Minimal host-side tensor + deterministic RNG substrate.
+//!
+//! The coordinator only needs CPU-side staging buffers (batches in, loss
+//! and checkpoints out) — all heavy math lives inside the XLA
+//! executables — so this is deliberately small: row-major buffers of
+//! `f32`/`i32` with shape metadata, plus a SplitMix64 RNG for data
+//! generation that is reproducible across runs and platforms.
+
+mod host;
+mod rng;
+pub mod stats;
+
+pub use host::{Dtype, HostTensor};
+pub use rng::Rng;
+pub use stats::{mean, stddev, OnlineStats};

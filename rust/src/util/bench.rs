@@ -1,0 +1,173 @@
+//! In-tree micro-benchmark harness (criterion stand-in).
+//!
+//! Warms up, then runs timed iterations until both a minimum iteration
+//! count and a minimum wall budget are met; reports mean/p50/p95/stddev.
+//! Used by the `benches/*.rs` targets (harness = false).
+
+use std::time::{Duration, Instant};
+
+use crate::tensor::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchResult {
+    /// Mean iterations/second.
+    pub fn throughput(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 {
+            1.0 / self.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Bench driver with configurable budgets.
+pub struct BenchHarness {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for BenchHarness {
+    fn default() -> Self {
+        BenchHarness {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            min_time: Duration::from_millis(300),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl BenchHarness {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick harness for expensive cases (e2e training steps).
+    pub fn heavy() -> Self {
+        BenchHarness {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(500),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record under `name`. Returns the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.min_time && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx]
+        };
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            p50: Duration::from_secs_f64(pct(0.50)),
+            p95: Duration::from_secs_f64(pct(0.95)),
+            stddev: Duration::from_secs_f64(stats::stddev(&samples)),
+        };
+        println!(
+            "bench {:<42} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            res.name, res.mean, res.p50, res.p95, res.iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as CSV (`bench_results/<file>`).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from("name,iters,mean_s,p50_s,p95_s,stddev_s\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{:.9}\n",
+                r.name,
+                r.iters,
+                r.mean.as_secs_f64(),
+                r.p50.as_secs_f64(),
+                r.p95.as_secs_f64(),
+                r.stddev.as_secs_f64()
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let mut h = BenchHarness {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 20,
+            min_time: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        let mut x = 0u64;
+        let r = h.bench("spin", || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+        assert_eq!(h.results().len(), 1);
+    }
+
+    #[test]
+    fn csv_emits_rows() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let mut h = BenchHarness {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            min_time: Duration::ZERO,
+            results: Vec::new(),
+        };
+        h.bench("a", || {});
+        let p = dir.file("out.csv");
+        h.write_csv(p.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.starts_with("name,iters"));
+        assert!(text.lines().count() == 2);
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser (in-tree `clap` stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that were consumed via a typed getter (for unknown-key
+    /// diagnostics).
+    known: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse an iterator of raw args (without argv[0]).
+    ///
+    /// A token starting with `--` becomes a flag unless the next token
+    /// exists and does not start with `--`, in which case it is an
+    /// option with that value. `--k=v` is always an option.
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let raw: Vec<String> = raw.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.known.borrow_mut().insert(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.known.borrow_mut().insert(name.to_string());
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Require an option.
+    pub fn require(&self, name: &str) -> Result<String> {
+        self.get(name)
+            .map(str::to_string)
+            .ok_or_else(|| Error::Invalid(format!("missing required --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = parse("train --steps 100 --lr=1e-4 --verbose --out dir pos1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 1e-4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("dir"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--steps ten");
+        assert!(a.get_usize("steps", 5).is_err());
+        assert_eq!(a.get_usize("other", 7).unwrap(), 7);
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--fast");
+        assert!(a.flag("fast"));
+        assert!(a.positional.is_empty());
+    }
+}

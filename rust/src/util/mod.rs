@@ -1,0 +1,13 @@
+//! In-tree utility substrates (the build is fully offline, so JSON, CLI
+//! parsing, the bench harness, temp dirs and property testing are all
+//! implemented here rather than pulled from crates.io).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod temp;
+
+pub use bench::{BenchHarness, BenchResult};
+pub use cli::Args;
+pub use json::Json;
+pub use temp::TempDir;
