@@ -1,20 +1,20 @@
-//! End-to-end L3 hot-path bench: real PJRT training-step latency per
-//! artifact variant, plus the data pipeline and the host↔device
-//! conversion costs in isolation. This is the profile the §Perf pass
-//! iterates on (see EXPERIMENTS.md §Perf).
+//! End-to-end L3 hot-path bench: training-step dispatch latency per
+//! artifact variant on the sim backend (host-side coordinator cost —
+//! data pipeline, state shuttling, ABI bookkeeping), plus the data
+//! pipeline in isolation. With `--features pjrt` and on-disk artifacts
+//! this is the profile the §Perf pass iterates on (see EXPERIMENTS.md
+//! §Perf); the sim numbers isolate the coordinator overhead that the
+//! PJRT numbers include.
 
 use tempo::config::TrainingConfig;
 use tempo::coordinator::{Trainer, TrainerOptions};
 use tempo::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
-use tempo::runtime::{ArtifactIndex, Runtime};
+use tempo::runtime::{ArtifactIndex, SimBackend};
 use tempo::util::BenchHarness;
 
 fn main() {
-    let Ok(index) = ArtifactIndex::load("artifacts") else {
-        eprintln!("artifacts/ missing — run `make artifacts` first; skipping runtime bench");
-        return;
-    };
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let index = ArtifactIndex::load_or_builtin("artifacts");
+    let backend = SimBackend::new();
     let mut h = BenchHarness::heavy();
 
     // data pipeline alone
@@ -24,12 +24,12 @@ fn main() {
         std::hint::black_box(batcher.next_batch().unwrap());
     });
 
-    // full train step per variant (compile once via Trainer construction)
+    // full train-step dispatch per variant
     for name in ["bert_tiny_baseline", "bert_tiny_checkpoint", "bert_tiny_tempo"] {
         let artifact = index.open(name).unwrap();
         let cfg = TrainingConfig { artifact: name.into(), steps: 1, ..Default::default() };
-        let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions::default()).unwrap();
-        h.bench(&format!("train_step/{name}"), || {
+        let mut trainer = Trainer::new(&backend, artifact, cfg, TrainerOptions::default()).unwrap();
+        h.bench(&format!("sim_step/{name}"), || {
             trainer.step().unwrap();
         });
     }
@@ -37,8 +37,8 @@ fn main() {
     // the bigger e2e model
     if let Ok(artifact) = index.open("bert_mini_tempo") {
         let cfg = TrainingConfig { artifact: "bert_mini_tempo".into(), steps: 1, ..Default::default() };
-        let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions::default()).unwrap();
-        h.bench("train_step/bert_mini_tempo", || {
+        let mut trainer = Trainer::new(&backend, artifact, cfg, TrainerOptions::default()).unwrap();
+        h.bench("sim_step/bert_mini_tempo", || {
             trainer.step().unwrap();
         });
     }
@@ -46,10 +46,31 @@ fn main() {
     // eval step (params only, no optimizer)
     let artifact = index.open("bert_tiny_tempo").unwrap();
     let cfg = TrainingConfig { artifact: "bert_tiny_tempo".into(), steps: 1, ..Default::default() };
-    let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions::default()).unwrap();
-    h.bench("eval_step/bert_tiny_tempo", || {
+    let mut trainer = Trainer::new(&backend, artifact, cfg, TrainerOptions::default()).unwrap();
+    h.bench("sim_eval/bert_tiny_tempo", || {
         trainer.evaluate().unwrap();
     });
+
+    // the real §Perf numbers: PJRT step latency per variant (feature +
+    // on-disk artifacts required; silently skipped otherwise)
+    #[cfg(feature = "pjrt")]
+    {
+        use tempo::runtime::PjrtBackend;
+        if index.is_builtin() {
+            eprintln!("artifacts/ missing — run `make artifacts` for the PJRT step bench");
+        } else {
+            let pjrt = PjrtBackend::cpu().expect("PJRT CPU client");
+            for name in ["bert_tiny_baseline", "bert_tiny_checkpoint", "bert_tiny_tempo"] {
+                let artifact = index.open(name).unwrap();
+                let cfg = TrainingConfig { artifact: name.into(), steps: 1, ..Default::default() };
+                let mut trainer =
+                    Trainer::new(&pjrt, artifact, cfg, TrainerOptions::default()).unwrap();
+                h.bench(&format!("train_step/{name}"), || {
+                    trainer.step().unwrap();
+                });
+            }
+        }
+    }
 
     h.write_csv("bench_results/bench_runtime_step.csv").unwrap();
 }

@@ -1,12 +1,13 @@
 //! Auto-Tempo (§5.2) demo: the coarse profile-then-apply pass and the
 //! fine-grained minimal-subset search, across a scenario matrix.
+//! Purely analytical — needs no artifacts and no backend.
 //!
 //! Run: `cargo run --release --example autotempo_demo`
 
 use tempo::autotempo::{coarse_pass, fine_search};
 use tempo::config::{Gpu, ModelConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     println!("=== coarse pass (apply-everywhere vs leave-alone) ===");
     let scenarios = [
         ("bert-large S=512 on 2080Ti (memory-starved)", ModelConfig::bert_large().with_seq_len(512), Gpu::Rtx2080Ti),
@@ -34,5 +35,4 @@ fn main() -> anyhow::Result<()> {
             d.rationale
         );
     }
-    Ok(())
 }

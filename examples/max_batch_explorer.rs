@@ -9,11 +9,11 @@ use tempo::memmodel::{max_batch, ModelFootprint};
 use tempo::report::Table;
 use tempo::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tempo::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let models: Vec<ModelConfig> = match args.get("model") {
         Some(name) => vec![ModelConfig::preset(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?],
+            .ok_or_else(|| tempo::Error::Invalid(format!("unknown preset {name}")))?],
         None => vec![
             ModelConfig::bert_base(),
             ModelConfig::bert_large(),

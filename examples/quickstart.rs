@@ -1,20 +1,21 @@
-//! Quickstart: the whole three-layer stack in ~40 lines.
+//! Quickstart: the whole stack in ~40 lines, zero setup.
 //!
-//! Loads the AOT-compiled Tempo BERT-tiny training step (lowered once by
-//! `make artifacts`; python never runs here), initializes parameters on
-//! the PJRT CPU client, and takes a few optimizer steps on the synthetic
-//! corpus.
+//! Opens the artifact index (the builtin sim set when `make artifacts`
+//! hasn't run), initializes parameters on the deterministic sim
+//! backend, and takes a few optimizer steps on the synthetic corpus.
+//! With `--features pjrt` + artifacts on disk, pass `--backend pjrt`
+//! to the `tempo` binary instead for the real PJRT path.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use tempo::config::TrainingConfig;
 use tempo::coordinator::{Trainer, TrainerOptions};
-use tempo::runtime::{ArtifactIndex, Runtime};
+use tempo::runtime::{ArtifactIndex, Backend, SimBackend};
 
-fn main() -> anyhow::Result<()> {
-    let index = ArtifactIndex::load("artifacts")?;
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
+fn main() -> tempo::Result<()> {
+    let index = ArtifactIndex::load_or_builtin("artifacts");
+    let backend = SimBackend::new();
+    println!("backend: {}", backend.name());
     println!("available artifacts: {:?}", index.names());
 
     let cfg = TrainingConfig {
@@ -37,12 +38,12 @@ fn main() -> anyhow::Result<()> {
         artifact.manifest.batch_size,
     );
 
-    let mut trainer = Trainer::new(&rt, artifact, cfg, TrainerOptions { verbose: true, ..Default::default() })?;
+    let mut trainer = Trainer::new(&backend, artifact, cfg, TrainerOptions { verbose: true, ..Default::default() })?;
     trainer.run()?;
 
     let m = trainer.metrics();
     println!(
-        "\nfirst loss {:.4} → last loss {:.4} @ {:.1} seq/s",
+        "\nfirst loss {:.4} → last loss {:.4} @ {:.1} seq/s (roofline-modeled)",
         m.records().first().map(|r| r.loss).unwrap_or(f64::NAN),
         m.last_loss().unwrap_or(f64::NAN),
         m.throughput()

@@ -1,8 +1,10 @@
 //! Fig 6a analogue: train baseline vs tempo (same data stream, same
 //! dropout seeds) and compare the loss curves point-for-point.
+//! Backend-generic: runs on the sim backend with zero artifacts, or on
+//! PJRT against the real executables.
 
 use crate::config::TrainingConfig;
-use crate::runtime::{ArtifactIndex, Runtime};
+use crate::runtime::{ArtifactIndex, Backend};
 use crate::Result;
 
 use super::trainer::{Trainer, TrainerOptions};
@@ -35,8 +37,8 @@ pub struct CompareResult {
 ///
 /// The first artifact is the reference (the paper compares Tempo against
 /// the NVIDIA baseline and reports ≤0.5% endpoint difference).
-pub fn compare_variants(
-    rt: &Runtime,
+pub fn compare_variants<B: Backend>(
+    backend: &B,
     index: &ArtifactIndex,
     artifact_names: &[&str],
     cfg: &TrainingConfig,
@@ -46,7 +48,7 @@ pub fn compare_variants(
     for name in artifact_names {
         let artifact = index.open(name)?;
         let mut trainer = Trainer::new(
-            rt,
+            backend,
             artifact,
             cfg.clone(),
             TrainerOptions { verbose, ..Default::default() },

@@ -3,9 +3,10 @@
 //! Runs N independent trials of the classification artifact on the
 //! synthetic paraphrase-pair task and reports the per-epoch accuracy
 //! band (median/min/max across trials), for baseline vs tempo.
+//! Backend-generic like [`super::Trainer`].
 
 use crate::data::{Corpus, CorpusConfig, PairTask};
-use crate::runtime::{Artifact, Runtime, TrainState};
+use crate::runtime::{Artifact, Backend, DeviceState, Entry, Program};
 use crate::tensor::HostTensor;
 use crate::{Error, Result};
 
@@ -44,8 +45,8 @@ impl FinetuneResult {
 /// Run `trials` fine-tuning runs of `steps` steps, evaluating accuracy
 /// every `eval_every` steps on held-out pair batches.
 #[allow(clippy::too_many_arguments)]
-pub fn finetune_trials(
-    rt: &Runtime,
+pub fn finetune_trials<B: Backend>(
+    backend: &B,
     artifact: &Artifact,
     trials: usize,
     steps: usize,
@@ -58,15 +59,18 @@ pub fn finetune_trials(
     if m.task != "cls" {
         return Err(Error::Invalid(format!("{} is not a cls artifact", m.name)));
     }
-    let init_exe = rt.load(artifact.init_path())?;
-    let step_exe = rt.load(artifact.step_path())?;
-    let eval_exe = rt.load(artifact.eval_path())?;
+    // eval_every = 0 means "final eval only" (and guards the modulo below).
+    let eval_every = if eval_every == 0 { steps.max(1) } else { eval_every };
+    let init_prog = backend.prepare(artifact, Entry::Init)?;
+    let step_prog = backend.prepare(artifact, Entry::Step)?;
+    let eval_prog = backend.prepare(artifact, Entry::Eval)?;
 
     let mut result = FinetuneResult { artifact: m.name.clone(), trials: Vec::new() };
     for trial in 0..trials {
         let seed = base_seed + 1000 * trial as u64;
-        let outs = init_exe.run(&[HostTensor::scalar_i32(seed as i32)])?;
-        let mut state = TrainState::from_init(outs, m)?;
+        let seed_in = backend.upload(&HostTensor::scalar_i32(seed as i32))?;
+        let outs = init_prog.run(&[&seed_in])?;
+        let mut state = DeviceState::from_init(outs, m)?;
         let corpus = Corpus::new(
             CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() },
             seed,
@@ -76,17 +80,28 @@ pub fn finetune_trials(
 
         for s in 0..steps {
             let batch = task.next_batch()?;
-            let mut inputs: Vec<HostTensor> = state.leaves.clone();
+            let mut vals = Vec::with_capacity(7);
             for t in batch.tensors() {
-                inputs.push(t.clone());
+                vals.push(backend.upload(t)?);
             }
-            inputs.push(HostTensor::scalar_i32(state.step as i32));
-            inputs.push(HostTensor::scalar_i32(seed as i32));
-            inputs.push(HostTensor::scalar_f32(lr as f32));
-            let outs = step_exe.run(&inputs)?;
-            let train_loss = state.absorb_step_output(outs)?;
+            vals.push(backend.upload(&HostTensor::scalar_i32(state.step as i32))?);
+            vals.push(backend.upload(&HostTensor::scalar_i32(seed as i32))?);
+            vals.push(backend.upload(&HostTensor::scalar_f32(lr as f32))?);
+            let mut refs: Vec<&B::Value> = Vec::with_capacity(state.leaves.len() + 7);
+            refs.extend(state.leaves.iter());
+            refs.extend(vals.iter());
+            let outs = step_prog.run(&refs)?;
+            drop(refs);
+            let loss_leaf = state.absorb_step_output(outs)?;
+            let train_loss = backend.scalar(&loss_leaf)?;
             if verbose && (s + 1) % eval_every == 0 {
-                println!("[{}] trial {} step {:>4} train loss {:.4}", m.name, trial, s + 1, train_loss);
+                println!(
+                    "[{}] trial {} step {:>4} train loss {:.4}",
+                    m.name,
+                    trial,
+                    s + 1,
+                    train_loss
+                );
             }
 
             if (s + 1) % eval_every == 0 || s + 1 == steps {
@@ -94,20 +109,34 @@ pub fn finetune_trials(
                 let mut accs = Vec::new();
                 for _ in 0..4 {
                     let eval_batch = task.next_batch()?;
-                    let mut inputs: Vec<HostTensor> = state.params().to_vec();
+                    let mut evals = Vec::with_capacity(5);
                     for t in eval_batch.tensors() {
-                        inputs.push(t.clone());
+                        evals.push(backend.upload(t)?);
                     }
-                    inputs.push(HostTensor::scalar_i32(0));
-                    let outs = eval_exe.run(&inputs)?;
-                    accs.push(outs[1].first()?);
+                    evals.push(backend.upload(&HostTensor::scalar_i32(0))?);
+                    let mut refs: Vec<&B::Value> =
+                        Vec::with_capacity(state.n_params + 5);
+                    refs.extend(state.params().iter());
+                    refs.extend(evals.iter());
+                    let outs = eval_prog.run(&refs)?;
+                    if outs.len() != 2 {
+                        return Err(Error::Abi(format!(
+                            "eval returned {} outputs",
+                            outs.len()
+                        )));
+                    }
+                    accs.push(backend.scalar(&outs[1])?);
                 }
                 let acc = accs.iter().sum::<f64>() / accs.len() as f64;
                 curve.accuracy.push(acc);
                 if verbose {
                     println!(
                         "[{}] trial {} step {:>4}/{} acc {:.3}",
-                        m.name, trial, s + 1, steps, acc
+                        m.name,
+                        trial,
+                        s + 1,
+                        steps,
+                        acc
                     );
                 }
             }

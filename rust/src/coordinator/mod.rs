@@ -1,5 +1,6 @@
-//! L3 training coordinator: drives the AOT-compiled train/eval
-//! executables over the synthetic data substrate.
+//! L3 training coordinator: drives train/eval programs over the
+//! synthetic data substrate, generic over the execution backend
+//! (sim by default, PJRT under `--features pjrt`).
 //!
 //! * [`Trainer`] — the training loop (schedule, metrics, checkpoints).
 //! * [`compare`] — baseline-vs-tempo loss-curve runs (Fig 6a analogue).

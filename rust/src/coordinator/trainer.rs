@@ -1,12 +1,19 @@
-//! The training loop: artifact → PJRT executables → steps over the
+//! The training loop: artifact → backend programs → steps over the
 //! synthetic corpus, with LR schedule, metrics and checkpointing.
+//!
+//! Generic over the execution [`Backend`]: the sim backend drives it
+//! with zero artifacts present; the PJRT backend (`--features pjrt`)
+//! drives the real AOT-compiled executables. The (params, m, v) state
+//! stays device-resident between steps on either backend (the §Perf
+//! hot path — see `runtime::DeviceState`).
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::config::TrainingConfig;
-use crate::data::{Corpus, CorpusConfig, MlmBatch, MlmBatcher, MlmConfig};
-use crate::runtime::{tensor_to_literal, Artifact, Executable, LiteralState, Runtime, TrainState};
+use crate::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
+use crate::runtime::{Artifact, Backend, DeviceState, Entry, Program, TrainState};
 use crate::tensor::HostTensor;
 use crate::{Error, Result};
 
@@ -23,23 +30,32 @@ pub struct TrainerOptions {
     pub verbose: bool,
 }
 
-/// Drives one artifact through `cfg.steps` optimizer steps.
-pub struct Trainer {
+/// Drives one artifact through `cfg.steps` optimizer steps on a backend.
+pub struct Trainer<'b, B: Backend> {
+    backend: &'b B,
     artifact: Artifact,
     cfg: TrainingConfig,
     opts: TrainerOptions,
-    step_exe: std::sync::Arc<Executable>,
-    eval_exe: std::sync::Arc<Executable>,
-    /// Literal-resident hot state (params, m, v) — see runtime::LiteralState.
-    state: LiteralState,
+    step_prog: Arc<B::Prog>,
+    eval_prog: Arc<B::Prog>,
+    /// Device-resident hot state (params, m, v) — see runtime::DeviceState.
+    state: DeviceState<B::Value>,
     batcher: MlmBatcher,
     metrics: Metrics,
+    /// `Some` when the backend models step latency analytically (sim);
+    /// `None` means measure wall clock (pjrt).
+    modeled_step_time: Option<Duration>,
 }
 
-impl Trainer {
-    /// Build a trainer: load + compile the artifact's executables, run
-    /// `init` (or resume), wire up the data stream.
-    pub fn new(rt: &Runtime, artifact: Artifact, cfg: TrainingConfig, opts: TrainerOptions) -> Result<Self> {
+impl<'b, B: Backend> Trainer<'b, B> {
+    /// Build a trainer: prepare the artifact's entry points, run `init`
+    /// (or resume), wire up the data stream.
+    pub fn new(
+        backend: &'b B,
+        artifact: Artifact,
+        cfg: TrainingConfig,
+        opts: TrainerOptions,
+    ) -> Result<Self> {
         let m = &artifact.manifest;
         if m.task != "mlm" {
             return Err(Error::Invalid(format!(
@@ -47,23 +63,38 @@ impl Trainer {
                 m.name, m.task
             )));
         }
-        let init_exe = rt.load(artifact.init_path())?;
-        let step_exe = rt.load(artifact.step_path())?;
-        let eval_exe = rt.load(artifact.eval_path())?;
+        let init_prog = backend.prepare(&artifact, Entry::Init)?;
+        let step_prog = backend.prepare(&artifact, Entry::Step)?;
+        let eval_prog = backend.prepare(&artifact, Entry::Eval)?;
 
         let state = match &opts.resume_from {
-            Some(path) => LiteralState::from_host(&TrainState::load(path)?)?,
-            None => {
-                // validate the ABI once through the host path, then keep
-                // the leaves as literals for the hot loop
-                let init_in = tensor_to_literal(&HostTensor::scalar_i32(cfg.seed as i32))?;
-                let outs = init_exe.run_literals_raw(&[init_in])?;
-                let host: Vec<HostTensor> = outs
+            Some(path) => {
+                let host = TrainState::load(path)?;
+                let leaves = host
+                    .leaves
                     .iter()
-                    .map(crate::runtime::literal_to_tensor)
-                    .collect::<Result<_>>()?;
-                TrainState::from_init(host, m)?; // shape/arity validation
-                LiteralState::from_init(outs, m)?
+                    .map(|t| backend.upload(t))
+                    .collect::<Result<Vec<_>>>()?;
+                DeviceState { leaves, n_params: host.n_params, step: host.step }
+            }
+            None => {
+                let seed_in = backend.upload(&HostTensor::scalar_i32(cfg.seed as i32))?;
+                let outs = init_prog.run(&[&seed_in])?;
+                let state = DeviceState::from_init(outs, m)?;
+                // Validate the ABI once: init's parameter shapes must
+                // match the manifest (m and v mirror params exactly).
+                for (spec, leaf) in m.params.iter().zip(state.params()) {
+                    let host = backend.download(leaf)?;
+                    if spec.shape != host.shape() {
+                        return Err(Error::Abi(format!(
+                            "leaf {}: manifest shape {:?} != init shape {:?}",
+                            spec.name,
+                            spec.shape,
+                            host.shape()
+                        )));
+                    }
+                }
+                state
             }
         };
 
@@ -79,7 +110,19 @@ impl Trainer {
             cfg.seed ^ 0xDA7A,
         );
         let metrics = Metrics::new(m.batch_size);
-        Ok(Trainer { artifact, cfg, opts, step_exe, eval_exe, state, batcher, metrics })
+        let modeled_step_time = backend.modeled_step_time(&artifact);
+        Ok(Trainer {
+            backend,
+            artifact,
+            cfg,
+            opts,
+            step_prog,
+            eval_prog,
+            state,
+            batcher,
+            metrics,
+            modeled_step_time,
+        })
     }
 
     /// The artifact being trained.
@@ -92,39 +135,46 @@ impl Trainer {
     }
 
     /// Host copy of the current state (checkpointing, inspection).
-    pub fn state(&self) -> TrainState {
-        self.state.to_host().expect("state conversion")
+    pub fn state(&self) -> Result<TrainState> {
+        let leaves = self
+            .state
+            .leaves
+            .iter()
+            .map(|v| self.backend.download(v))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { leaves, n_params: self.state.n_params, step: self.state.step })
     }
 
-    /// Convert batch tensors + scalars to literals (the only per-step
-    /// host→literal conversions on the hot path).
-    fn batch_literals(&self, batch: &MlmBatch, lr: f64) -> Result<Vec<xla::Literal>> {
-        let mut lits = Vec::with_capacity(7);
-        for t in batch.tensors() {
-            lits.push(tensor_to_literal(t)?);
+    /// Convert batch tensors + scalars to device values (the only
+    /// per-step host→device conversions on the hot path).
+    fn batch_values(&self, tensors: [&HostTensor; 4], lr: f64) -> Result<Vec<B::Value>> {
+        let mut vals = Vec::with_capacity(7);
+        for t in tensors {
+            vals.push(self.backend.upload(t)?);
         }
-        lits.push(tensor_to_literal(&HostTensor::scalar_i32(self.state.step as i32))?);
-        lits.push(tensor_to_literal(&HostTensor::scalar_i32(self.cfg.seed as i32))?);
-        lits.push(tensor_to_literal(&HostTensor::scalar_f32(lr as f32))?);
-        Ok(lits)
+        vals.push(self.backend.upload(&HostTensor::scalar_i32(self.state.step as i32))?);
+        vals.push(self.backend.upload(&HostTensor::scalar_i32(self.cfg.seed as i32))?);
+        vals.push(self.backend.upload(&HostTensor::scalar_f32(lr as f32))?);
+        Ok(vals)
     }
 
     /// Run exactly one optimizer step; returns the loss.
     pub fn step(&mut self) -> Result<f64> {
         let lr = self.cfg.lr_at(self.state.step as usize);
         let batch = self.batcher.next_batch()?;
-        let batch_lits = self.batch_literals(&batch, lr)?;
+        let batch_vals = self.batch_values(batch.tensors(), lr)?;
         let t0 = Instant::now();
-        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.state.leaves.len() + 7);
+        let mut refs: Vec<&B::Value> = Vec::with_capacity(self.state.leaves.len() + 7);
         refs.extend(self.state.leaves.iter());
-        refs.extend(batch_lits.iter());
-        let outs = self.step_exe.run_refs(&refs)?;
-        let loss = self.state.absorb_step_output(outs)?;
+        refs.extend(batch_vals.iter());
+        let outs = self.step_prog.run(&refs)?;
+        let loss_leaf = self.state.absorb_step_output(outs)?;
+        let loss = self.backend.scalar(&loss_leaf)?;
         self.metrics.push(StepRecord {
             step: self.state.step - 1,
             loss,
             lr,
-            step_time: t0.elapsed(),
+            step_time: self.modeled_step_time.unwrap_or_else(|| t0.elapsed()),
         });
         Ok(loss)
     }
@@ -132,19 +182,19 @@ impl Trainer {
     /// Evaluate on one held-out batch; returns (loss, metric).
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
         let batch = self.batcher.next_batch()?;
-        let mut lits = Vec::with_capacity(5);
+        let mut vals = Vec::with_capacity(5);
         for t in batch.tensors() {
-            lits.push(tensor_to_literal(t)?);
+            vals.push(self.backend.upload(t)?);
         }
-        lits.push(tensor_to_literal(&HostTensor::scalar_i32(0))?);
-        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.state.n_params + 5);
+        vals.push(self.backend.upload(&HostTensor::scalar_i32(0))?);
+        let mut refs: Vec<&B::Value> = Vec::with_capacity(self.state.n_params + 5);
         refs.extend(self.state.params().iter());
-        refs.extend(lits.iter());
-        let outs = self.eval_exe.run_refs(&refs)?;
+        refs.extend(vals.iter());
+        let outs = self.eval_prog.run(&refs)?;
         if outs.len() != 2 {
             return Err(Error::Abi(format!("eval returned {} outputs", outs.len())));
         }
-        Ok((outs[0].to_vec::<f32>()?[0] as f64, outs[1].to_vec::<f32>()?[0] as f64))
+        Ok((self.backend.scalar(&outs[0])?, self.backend.scalar(&outs[1])?))
     }
 
     /// Run the full configured training loop.
@@ -175,7 +225,7 @@ impl Trainer {
             }
         }
         if let Some(path) = &self.opts.checkpoint_out {
-            self.state.to_host()?.save(path)?;
+            self.state()?.save(path)?;
             if self.opts.verbose {
                 println!("[{}] checkpoint → {}", self.artifact.manifest.name, path.display());
             }

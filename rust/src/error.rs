@@ -1,12 +1,14 @@
-//! Crate-wide error type: thin wrapper so public APIs don't leak `xla::Error`.
+//! Crate-wide error type: thin wrapper so public APIs don't leak
+//! backend-specific error types (e.g. `xla::Error` under `--features
+//! pjrt`).
 
 use std::fmt;
 
 /// Unified error for runtime, IO, config and coordination failures.
 #[derive(Debug)]
 pub enum Error {
-    /// PJRT / XLA failures (compile, execute, literal conversion).
-    Xla(String),
+    /// Execution-backend failures (compile, execute, value conversion).
+    Backend(String),
     /// Artifact or checkpoint IO.
     Io(std::io::Error),
     /// Manifest / config parse errors.
@@ -22,7 +24,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Backend(m) => write!(f, "backend error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Abi(m) => write!(f, "abi mismatch: {m}"),
@@ -33,9 +35,10 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+        Error::Backend(e.to_string())
     }
 }
 
@@ -44,4 +47,3 @@ impl From<std::io::Error> for Error {
         Error::Io(e)
     }
 }
-

@@ -9,11 +9,25 @@
 //!   simulator, roofline throughput simulator, Auto-Tempo search, report
 //!   harness regenerating every paper table/figure.
 //! * **L2/L1 (build-time python)** — JAX BERT with Tempo `custom_vjp`
-//!   layers and Pallas kernels, AOT-lowered to HLO text artifacts this
-//!   crate loads via the PJRT C API (`xla` crate).
+//!   layers and Pallas kernels, AOT-lowered to HLO text artifacts.
 //!
-//! Python never runs on the training path: after `make artifacts`, the
-//! `tempo` binary is self-contained.
+//! ## Execution backends
+//!
+//! The coordinator is generic over [`runtime::Backend`]:
+//!
+//! * [`runtime::SimBackend`] — the default. Pure Rust, deterministic,
+//!   zero dependencies: executes the `init`/`step`/`eval` ABI
+//!   analytically from (builtin or on-disk) manifests, with step
+//!   latency from [`perfmodel`] and memory from [`memmodel`]. A fresh
+//!   checkout runs `cargo test`, every example and every coordinator
+//!   flow offline with no artifacts present.
+//! * `runtime::PjrtBackend` (`--features pjrt`) — loads the AOT HLO
+//!   text artifacts produced by `make artifacts` and executes them via
+//!   the PJRT C API (`xla` crate). Python never runs on the training
+//!   path: after `make artifacts`, the `tempo` binary is self-contained.
+//!
+//! All `xla::` usage compiles only under `--features pjrt`
+//! (`runtime::pjrt` is the single module that touches it).
 
 pub mod autotempo;
 pub mod config;

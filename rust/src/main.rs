@@ -7,7 +7,11 @@
 //!   experiments  — regenerate paper tables/figures (memmodel+perfmodel)
 //!   max-batch    — capacity query for a (model, technique, gpu)
 //!   autotempo    — §5.2 automatic application pass
-//!   artifacts    — list available AOT artifacts
+//!   artifacts    — list available artifacts (on-disk or builtin sim)
+//!
+//! Execution backend: `--backend sim` (default; deterministic, zero
+//! artifacts needed) or `--backend pjrt` (requires `--features pjrt`
+//! and `make artifacts`).
 
 use std::path::PathBuf;
 
@@ -16,7 +20,7 @@ use tempo::config::{Gpu, ModelConfig, Technique, TrainingConfig};
 use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
 use tempo::memmodel::max_batch;
 use tempo::report::{run_experiment, ALL_EXPERIMENTS};
-use tempo::runtime::{ArtifactIndex, Runtime};
+use tempo::runtime::{ArtifactIndex, Backend, SimBackend};
 use tempo::util::Args;
 
 fn main() {
@@ -40,13 +44,45 @@ USAGE:
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
   tempo artifacts [--dir DIR]
 
-Artifacts default to ./artifacts (override with --dir / TEMPO_ARTIFACTS).";
+Common options:
+  --backend sim|pjrt   execution engine (default: sim; pjrt requires the
+                       `pjrt` cargo feature and on-disk artifacts)
+
+Artifacts default to ./artifacts (override with --dir / TEMPO_ARTIFACTS);
+when no artifacts/ exists, the builtin sim set is used.";
+
+/// Which execution engine the user asked for.
+enum BackendChoice {
+    Sim,
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+fn backend_choice(args: &Args) -> tempo::Result<BackendChoice> {
+    match args.get_or("backend", "sim").as_str() {
+        "sim" => Ok(BackendChoice::Sim),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(BackendChoice::Pjrt),
+        other => Err(tempo::Error::Invalid(format!(
+            "unknown backend '{other}' (this build supports: sim{})",
+            if cfg!(feature = "pjrt") { ", pjrt" } else { " — rebuild with --features pjrt for pjrt" }
+        ))),
+    }
+}
 
 fn artifacts_dir(args: &Args) -> String {
     args.get("dir")
         .map(str::to_string)
         .or_else(|| std::env::var("TEMPO_ARTIFACTS").ok())
         .unwrap_or_else(|| "artifacts".into())
+}
+
+fn open_index(args: &Args) -> ArtifactIndex {
+    let index = ArtifactIndex::load_or_builtin(artifacts_dir(args));
+    if index.is_builtin() {
+        eprintln!("note: no artifacts/ on disk — using the builtin sim artifact set");
+    }
+    index
 }
 
 fn parse_gpu(name: &str) -> tempo::Result<Gpu> {
@@ -111,21 +147,31 @@ fn run() -> tempo::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> tempo::Result<()> {
+    let index = open_index(args);
+    match backend_choice(args)? {
+        BackendChoice::Sim => train_with(&SimBackend::new(), &index, args),
+        #[cfg(feature = "pjrt")]
+        BackendChoice::Pjrt => {
+            train_with(&tempo::runtime::PjrtBackend::cpu()?, &index, args)
+        }
+    }
+}
+
+fn train_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) -> tempo::Result<()> {
     let cfg = training_config(args)?;
-    let index = ArtifactIndex::load(artifacts_dir(args))?;
-    let rt = Runtime::cpu()?;
-    println!("loading artifact {} …", cfg.artifact);
+    println!("loading artifact {} (backend: {}) …", cfg.artifact, backend.name());
     let artifact = index.open(&cfg.artifact)?;
     let opts = TrainerOptions {
         checkpoint_out: args.get("checkpoint-out").map(PathBuf::from),
         resume_from: args.get("resume").map(PathBuf::from),
         verbose: true,
     };
-    let mut trainer = Trainer::new(&rt, artifact, cfg, opts)?;
+    let mut trainer = Trainer::new(backend, artifact, cfg, opts)?;
+    let state = trainer.state()?;
     println!(
         "params: {} ({:.1} M) — starting",
-        trainer.state().param_count(),
-        trainer.state().param_count() as f64 / 1e6
+        state.param_count(),
+        state.param_count() as f64 / 1e6
     );
     trainer.run()?;
     let m = trainer.metrics();
@@ -144,13 +190,22 @@ fn cmd_train(args: &Args) -> tempo::Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> tempo::Result<()> {
+    let index = open_index(args);
+    match backend_choice(args)? {
+        BackendChoice::Sim => compare_with(&SimBackend::new(), &index, args),
+        #[cfg(feature = "pjrt")]
+        BackendChoice::Pjrt => {
+            compare_with(&tempo::runtime::PjrtBackend::cpu()?, &index, args)
+        }
+    }
+}
+
+fn compare_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) -> tempo::Result<()> {
     let cfg = training_config(args)?;
     let names_raw = args.get_or("artifacts", "bert_tiny_baseline,bert_tiny_tempo");
     let names: Vec<&str> = names_raw.split(',').collect();
-    let index = ArtifactIndex::load(artifacts_dir(args))?;
-    let rt = Runtime::cpu()?;
     println!("comparing {names:?} over {} steps (shared data/masks)", cfg.steps);
-    let result = compare_variants(&rt, &index, &names, &cfg, true)?;
+    let result = compare_variants(backend, index, &names, &cfg, true)?;
     for c in &result.curves {
         println!(
             "  {:<24} endpoint loss {:.4}",
@@ -183,8 +238,17 @@ fn cmd_compare(args: &Args) -> tempo::Result<()> {
 }
 
 fn cmd_finetune(args: &Args) -> tempo::Result<()> {
-    let index = ArtifactIndex::load(artifacts_dir(args))?;
-    let rt = Runtime::cpu()?;
+    let index = open_index(args);
+    match backend_choice(args)? {
+        BackendChoice::Sim => finetune_with(&SimBackend::new(), &index, args),
+        #[cfg(feature = "pjrt")]
+        BackendChoice::Pjrt => {
+            finetune_with(&tempo::runtime::PjrtBackend::cpu()?, &index, args)
+        }
+    }
+}
+
+fn finetune_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) -> tempo::Result<()> {
     let artifact_name = args.get_or("artifact", "cls_tiny_tempo");
     let trials = args.get_usize("trials", 3)?;
     let steps = args.get_usize("steps", 60)?;
@@ -193,7 +257,7 @@ fn cmd_finetune(args: &Args) -> tempo::Result<()> {
     let seed = args.get_usize("seed", 42)? as u64;
     let artifact = index.open(&artifact_name)?;
     println!("fine-tuning {artifact_name}: {trials} trials × {steps} steps");
-    let result = finetune_trials(&rt, &artifact, trials, steps, eval_every, lr, seed, true)?;
+    let result = finetune_trials(backend, &artifact, trials, steps, eval_every, lr, seed, true)?;
     let (lo, med, hi) = result.final_band();
     println!("final accuracy band: min {lo:.3} / median {med:.3} / max {hi:.3}");
     if let Some(out) = args.get("out") {
@@ -317,8 +381,12 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
 
 fn cmd_artifacts(args: &Args) -> tempo::Result<()> {
     let dir = artifacts_dir(args);
-    let index = ArtifactIndex::load(&dir)?;
-    println!("artifacts in {dir}:");
+    let index = ArtifactIndex::load_or_builtin(&dir);
+    if index.is_builtin() {
+        println!("artifacts (builtin sim set; no {dir}/ on disk):");
+    } else {
+        println!("artifacts in {dir}:");
+    }
     for name in index.names() {
         let a = index.open(name)?;
         let m = &a.manifest;

@@ -70,66 +70,27 @@ pub fn gb_at_b15(technique: Technique) -> f64 {
     super::model::ModelFootprint::new(cfg, technique).total_bytes(15) as f64 / 1e9
 }
 
+// The calibration pins themselves (per-cell tolerances against
+// PAPER_TABLE2 / PAPER_GB_AT_B15, checkpoint ratio band, headline 2×
+// ratio, §4.2 ordering) live in ONE place:
+// `rust/tests/calibration_paper.rs`, with failure messages naming the
+// exact (GPU, seq-len, technique) cell that drifted. Only a structural
+// smoke test stays in-module.
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn table2_baseline_and_tempo_calibrated() {
-        for row in table2() {
-            if row.technique == Technique::Checkpoint {
-                continue;
-            }
-            let tol = (row.paper_batch as f64 * 0.25).max(2.0);
-            let diff = (row.model_batch as f64 - row.paper_batch as f64).abs();
-            assert!(
-                diff <= tol,
-                "{:?} {:?} S={}: model {} vs paper {}",
-                row.gpu, row.technique, row.seq_len, row.model_batch, row.paper_batch
-            );
-        }
+    fn table2_regenerates_every_cell() {
+        let rows = table2();
+        assert_eq!(rows.len(), PAPER_TABLE2.len() * 2); // × 2 GPUs
+        assert!(rows.iter().all(|r| r.paper_batch > 0));
     }
 
     #[test]
-    fn table2_checkpoint_bounded() {
-        for row in table2() {
-            if row.technique != Technique::Checkpoint {
-                continue;
-            }
-            let ratio = row.model_batch as f64 / row.paper_batch as f64;
-            assert!(
-                (1.0..=4.0).contains(&ratio),
-                "{:?} S={}: model {} vs paper {} (ratio {ratio:.2})",
-                row.gpu, row.seq_len, row.model_batch, row.paper_batch
-            );
+    fn gb_at_b15_is_positive_for_all_techniques() {
+        for tech in Technique::all() {
+            assert!(gb_at_b15(tech) > 0.0, "{tech:?}");
         }
-    }
-
-    #[test]
-    fn headline_tempo_doubles_baseline_batch_at_s512() {
-        // Abstract: "up to 2× higher batch sizes".
-        for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
-            let cfg = ModelConfig::bert_large().with_seq_len(512);
-            let base = max_batch(&cfg, Technique::Baseline, gpu).max_batch.max(1);
-            let tempo = max_batch(&cfg, Technique::Tempo, gpu).max_batch;
-            let ratio = tempo as f64 / base as f64;
-            assert!((1.5..=2.6).contains(&ratio), "{gpu:?}: ratio {ratio:.2}");
-        }
-    }
-
-    #[test]
-    fn fixed_batch_gb_within_25pct() {
-        for (tech, paper) in PAPER_GB_AT_B15 {
-            let got = gb_at_b15(tech);
-            let rel = (got - paper).abs() / paper;
-            assert!(rel < 0.25, "{tech:?}: model {got:.2} GB vs paper {paper} GB");
-        }
-    }
-
-    #[test]
-    fn fixed_batch_gb_ordering_matches_paper() {
-        // checkpoint < tempo < baseline at equal batch (§4.2)
-        assert!(gb_at_b15(Technique::Checkpoint) < gb_at_b15(Technique::Tempo));
-        assert!(gb_at_b15(Technique::Tempo) < gb_at_b15(Technique::Baseline));
     }
 }

@@ -1,12 +1,17 @@
 //! Artifact manifests: the ABI contract between `python/compile/aot.py`
 //! and the Rust runtime.
 //!
-//! Each artifact directory holds `init.hlo.txt`, `step.hlo.txt`,
+//! Each on-disk artifact directory holds `init.hlo.txt`, `step.hlo.txt`,
 //! `eval.hlo.txt` and a `manifest.json` describing the flat parameter
-//! leaf order, batch tensor shapes and scalar inputs.
+//! leaf order, batch tensor shapes and scalar inputs. The sim backend
+//! additionally synthesizes *builtin* artifacts — the same [`Manifest`]
+//! structure, no files behind it — so every coordinator flow runs from
+//! a fresh checkout with zero artifacts present.
 
 use std::path::{Path, PathBuf};
 
+use crate::config::ModelConfig;
+use crate::runtime::backend::Entry;
 use crate::util::Json;
 use crate::{Error, Result};
 
@@ -24,6 +29,10 @@ impl LeafSpec {
         self.shape.iter().product()
     }
 
+    fn f32(name: impl Into<String>, shape: Vec<usize>) -> Self {
+        LeafSpec { name: name.into(), shape, dtype: "float32".into() }
+    }
+
     fn from_json(v: &Json) -> Result<Self> {
         Ok(LeafSpec {
             name: v.req("name")?.as_str()?.to_string(),
@@ -33,7 +42,8 @@ impl LeafSpec {
     }
 }
 
-/// Model hyperparameters echoed into the manifest (for reports/sanity).
+/// Model hyperparameters echoed into the manifest (for reports/sanity
+/// and the sim backend's capacity/roofline reconstruction).
 #[derive(Debug, Clone)]
 pub struct ManifestConfig {
     pub name: String,
@@ -45,6 +55,11 @@ pub struct ManifestConfig {
     pub intermediate: usize,
     pub dropout_p: f64,
     pub num_classes: usize,
+    /// Position-embedding table size (older manifests omit it; defaults
+    /// to `max(seq_len, 512)`).
+    pub max_position: usize,
+    /// Token-type table size (older manifests omit it; defaults to 2).
+    pub type_vocab: usize,
 }
 
 /// Files within an artifact directory.
@@ -55,7 +70,7 @@ pub struct ManifestFiles {
     pub eval: String,
 }
 
-/// Parsed `manifest.json`.
+/// Parsed `manifest.json` (or a synthesized builtin equivalent).
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub name: String,
@@ -76,6 +91,7 @@ impl Manifest {
     pub fn parse(text: &str) -> Result<Self> {
         let v = Json::parse(text)?;
         let cfg = v.req("config")?;
+        let seq_len = cfg.req("seq_len")?.as_usize()?;
         let manifest = Manifest {
             name: v.req("name")?.as_str()?.to_string(),
             task: v.req("task")?.as_str()?.to_string(),
@@ -92,10 +108,20 @@ impl Manifest {
                 hidden: cfg.req("hidden")?.as_usize()?,
                 layers: cfg.req("layers")?.as_usize()?,
                 heads: cfg.req("heads")?.as_usize()?,
-                seq_len: cfg.req("seq_len")?.as_usize()?,
+                seq_len,
                 intermediate: cfg.req("intermediate")?.as_usize()?,
                 dropout_p: cfg.req("dropout_p")?.as_f64()?,
                 num_classes: cfg.req("num_classes")?.as_usize()?,
+                // absent in older manifests (defaulted); present-but-
+                // malformed is an error like every other config field
+                max_position: match cfg.get("max_position") {
+                    Some(x) => x.as_usize()?,
+                    None => seq_len.max(512),
+                },
+                type_vocab: match cfg.get("type_vocab") {
+                    Some(x) => x.as_usize()?,
+                    None => 2,
+                },
             },
             n_param_leaves: v.req("n_param_leaves")?.as_usize()?,
             params: v
@@ -134,16 +160,113 @@ impl Manifest {
         Ok(manifest)
     }
 
+    /// Synthesize a manifest from a model config — the BERT-family leaf
+    /// inventory `python/compile/model.py` lowers, with no files behind
+    /// it. This is what the sim backend executes analytically.
+    ///
+    /// `task` is "mlm" (pre-training head) or "cls" (`num_classes`-way
+    /// classification head); `variant` one of "baseline" | "checkpoint"
+    /// | "tempo".
+    pub fn synthetic(
+        name: &str,
+        task: &str,
+        variant: &str,
+        impl_name: &str,
+        batch_size: usize,
+        cfg: &ModelConfig,
+        num_classes: usize,
+    ) -> Self {
+        let h = cfg.hidden;
+        let i = cfg.intermediate;
+        let mut params = vec![
+            LeafSpec::f32("embeddings.word", vec![cfg.vocab_size, h]),
+            LeafSpec::f32("embeddings.position", vec![cfg.max_position, h]),
+            LeafSpec::f32("embeddings.token_type", vec![cfg.type_vocab.max(1), h]),
+            LeafSpec::f32("embeddings.ln.gamma", vec![h]),
+            LeafSpec::f32("embeddings.ln.beta", vec![h]),
+        ];
+        for l in 0..cfg.layers {
+            for (suffix, shape) in [
+                ("attn.q_w", vec![h, h]),
+                ("attn.q_b", vec![h]),
+                ("attn.k_w", vec![h, h]),
+                ("attn.k_b", vec![h]),
+                ("attn.v_w", vec![h, h]),
+                ("attn.v_b", vec![h]),
+                ("attn.out_w", vec![h, h]),
+                ("attn.out_b", vec![h]),
+                ("attn.ln.gamma", vec![h]),
+                ("attn.ln.beta", vec![h]),
+                ("ffn.in_w", vec![h, i]),
+                ("ffn.in_b", vec![i]),
+                ("ffn.out_w", vec![i, h]),
+                ("ffn.out_b", vec![h]),
+                ("ffn.ln.gamma", vec![h]),
+                ("ffn.ln.beta", vec![h]),
+            ] {
+                params.push(LeafSpec::f32(format!("encoder.{l}.{suffix}"), shape));
+            }
+        }
+        if task == "cls" {
+            params.push(LeafSpec::f32("pooler.w", vec![h, h]));
+            params.push(LeafSpec::f32("pooler.b", vec![h]));
+            params.push(LeafSpec::f32("classifier.w", vec![h, num_classes.max(2)]));
+            params.push(LeafSpec::f32("classifier.b", vec![num_classes.max(2)]));
+        } else {
+            params.push(LeafSpec::f32("mlm.transform_w", vec![h, h]));
+            params.push(LeafSpec::f32("mlm.transform_b", vec![h]));
+            params.push(LeafSpec::f32("mlm.ln.gamma", vec![h]));
+            params.push(LeafSpec::f32("mlm.ln.beta", vec![h]));
+            params.push(LeafSpec::f32("mlm.decoder_bias", vec![cfg.vocab_size]));
+        }
+        let batch_shape = vec![batch_size, cfg.seq_len];
+        let batch_inputs = ["input_ids", "token_type_ids", "attention_mask", "labels"]
+            .iter()
+            .map(|n| LeafSpec { name: n.to_string(), shape: batch_shape.clone(), dtype: "int32".into() })
+            .collect();
+        let n_param_leaves = params.len();
+        Manifest {
+            name: name.to_string(),
+            task: task.to_string(),
+            variant: variant.to_string(),
+            impl_name: impl_name.to_string(),
+            batch_size,
+            config: ManifestConfig {
+                name: cfg.name.clone(),
+                vocab_size: cfg.vocab_size,
+                hidden: h,
+                layers: cfg.layers,
+                heads: cfg.heads,
+                seq_len: cfg.seq_len,
+                intermediate: i,
+                dropout_p: cfg.dropout_p,
+                num_classes: if task == "cls" { num_classes.max(2) } else { 0 },
+                max_position: cfg.max_position,
+                type_vocab: cfg.type_vocab.max(1),
+            },
+            n_param_leaves,
+            params,
+            batch_inputs,
+            files: ManifestFiles {
+                init: "init.hlo.txt".into(),
+                step: "step.hlo.txt".into(),
+                eval: "eval.hlo.txt".into(),
+            },
+        }
+    }
+
     /// Total parameter count (sum of leaf elements).
     pub fn param_count(&self) -> usize {
         self.params.iter().map(LeafSpec::numel).sum()
     }
 }
 
-/// An artifact on disk: directory + parsed manifest.
+/// An artifact: a manifest plus (for on-disk artifacts) the directory
+/// holding its HLO text files. Builtin sim artifacts have no directory.
 #[derive(Debug, Clone)]
 pub struct Artifact {
-    pub dir: PathBuf,
+    /// `None` for synthetic builtin artifacts (sim backend only).
+    pub dir: Option<PathBuf>,
     pub manifest: Manifest,
 }
 
@@ -153,23 +276,53 @@ impl Artifact {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         let manifest = Manifest::parse(&text)?;
-        Ok(Artifact { dir, manifest })
+        Ok(Artifact { dir: Some(dir), manifest })
     }
 
-    pub fn init_path(&self) -> PathBuf {
-        self.dir.join(&self.manifest.files.init)
+    /// Wrap a synthesized manifest (no on-disk files; sim backend only).
+    pub fn synthetic(manifest: Manifest) -> Self {
+        Artifact { dir: None, manifest }
     }
 
-    pub fn step_path(&self) -> PathBuf {
-        self.dir.join(&self.manifest.files.step)
+    /// True when this artifact has no HLO files behind it.
+    pub fn is_synthetic(&self) -> bool {
+        self.dir.is_none()
     }
 
-    pub fn eval_path(&self) -> PathBuf {
-        self.dir.join(&self.manifest.files.eval)
+    fn file(&self, name: &str) -> Result<PathBuf> {
+        match &self.dir {
+            Some(d) => Ok(d.join(name)),
+            None => Err(Error::Invalid(format!(
+                "artifact {} is synthetic (builtin sim manifest) — no on-disk HLO files; \
+                 run it on the sim backend or `make artifacts` for PJRT",
+                self.manifest.name
+            ))),
+        }
+    }
+
+    /// Path of one entry point's HLO text file.
+    pub fn entry_path(&self, entry: Entry) -> Result<PathBuf> {
+        match entry {
+            Entry::Init => self.init_path(),
+            Entry::Step => self.step_path(),
+            Entry::Eval => self.eval_path(),
+        }
+    }
+
+    pub fn init_path(&self) -> Result<PathBuf> {
+        self.file(&self.manifest.files.init)
+    }
+
+    pub fn step_path(&self) -> Result<PathBuf> {
+        self.file(&self.manifest.files.step)
+    }
+
+    pub fn eval_path(&self) -> Result<PathBuf> {
+        self.file(&self.manifest.files.eval)
     }
 }
 
-/// The `artifacts/index.json` listing.
+/// One `artifacts/index.json` listing entry.
 #[derive(Debug, Clone)]
 pub struct IndexEntry {
     pub name: String,
@@ -177,11 +330,14 @@ pub struct IndexEntry {
     pub n_param_leaves: usize,
 }
 
-/// All artifacts below a root directory.
+/// All artifacts visible to the coordinator: the on-disk set below a
+/// root directory, the builtin sim set, or (after `load_or_builtin`)
+/// whichever of the two exists.
 #[derive(Debug, Clone)]
 pub struct ArtifactIndex {
-    pub root: PathBuf,
-    pub entries: Vec<IndexEntry>,
+    root: Option<PathBuf>,
+    entries: Vec<IndexEntry>,
+    builtin: Vec<Manifest>,
 }
 
 impl ArtifactIndex {
@@ -201,49 +357,95 @@ impl ArtifactIndex {
                 })
             })
             .collect::<Result<_>>()?;
-        Ok(ArtifactIndex { root, entries })
+        Ok(ArtifactIndex { root: Some(root), entries, builtin: Vec::new() })
+    }
+
+    /// The builtin sim artifact set (zero files needed).
+    pub fn builtin() -> Self {
+        ArtifactIndex {
+            root: None,
+            entries: Vec::new(),
+            builtin: crate::runtime::sim::builtin_manifests(),
+        }
+    }
+
+    /// On-disk index when present, builtin sim set otherwise — the
+    /// fresh-checkout default. Only a *missing* index falls through
+    /// silently; a corrupt one is surfaced before falling back, so a
+    /// broken artifacts/ dir can't be mistaken for a fresh checkout.
+    pub fn load_or_builtin(root: impl AsRef<Path>) -> Self {
+        match Self::load(&root) {
+            Ok(idx) => idx,
+            Err(e) => {
+                let missing = matches!(
+                    &e,
+                    Error::Io(io) if io.kind() == std::io::ErrorKind::NotFound
+                );
+                if !missing {
+                    eprintln!(
+                        "warning: artifact index at {} is unusable ({e}); \
+                         falling back to the builtin sim set",
+                        root.as_ref().display()
+                    );
+                }
+                Self::builtin()
+            }
+        }
+    }
+
+    /// True when this index serves builtin manifests (no artifacts/ dir).
+    pub fn is_builtin(&self) -> bool {
+        self.root.is_none()
     }
 
     /// Open one artifact by name.
     pub fn open(&self, name: &str) -> Result<Artifact> {
-        let entry = self
-            .entries
-            .iter()
-            .find(|e| e.name == name)
-            .ok_or_else(|| Error::Invalid(format!("unknown artifact {name}")))?;
-        Artifact::load(self.root.join(&entry.dir))
+        if let Some(entry) = self.entries.iter().find(|e| e.name == name) {
+            let root = self.root.as_ref().expect("disk entries imply a root");
+            return Artifact::load(root.join(&entry.dir));
+        }
+        if let Some(m) = self.builtin.iter().find(|m| m.name == name) {
+            return Ok(Artifact::synthetic(m.clone()));
+        }
+        Err(Error::Invalid(format!("unknown artifact {name}")))
     }
 
     pub fn names(&self) -> Vec<&str> {
-        self.entries.iter().map(|e| e.name.as_str()).collect()
+        self.entries
+            .iter()
+            .map(|e| e.name.as_str())
+            .chain(self.builtin.iter().map(|m| m.name.as_str()))
+            .collect()
     }
 }
+
+/// Shared fixture for runtime unit tests.
+#[cfg(test)]
+pub(crate) const TEST_MANIFEST: &str = r#"{
+    "name": "t", "task": "mlm", "variant": "tempo", "impl": "jnp",
+    "batch_size": 8,
+    "config": {"name": "bert-tiny", "vocab_size": 4096, "hidden": 128,
+               "layers": 2, "heads": 2, "seq_len": 64,
+               "intermediate": 512, "dropout_p": 0.1, "num_classes": 2},
+    "n_param_leaves": 1,
+    "params": [{"name": "w", "shape": [2, 3], "dtype": "float32"}],
+    "batch_inputs": [
+        {"name": "input_ids", "shape": [8, 64], "dtype": "int32"},
+        {"name": "token_type_ids", "shape": [8, 64], "dtype": "int32"},
+        {"name": "attention_mask", "shape": [8, 64], "dtype": "int32"},
+        {"name": "labels", "shape": [8, 64], "dtype": "int32"}],
+    "files": {"init": "init.hlo.txt", "step": "step.hlo.txt",
+              "eval": "eval.hlo.txt"}
+}"#;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::TempDir;
 
-    const MANIFEST: &str = r#"{
-        "name": "t", "task": "mlm", "variant": "tempo", "impl": "jnp",
-        "batch_size": 8,
-        "config": {"name": "bert-tiny", "vocab_size": 4096, "hidden": 128,
-                   "layers": 2, "heads": 2, "seq_len": 64,
-                   "intermediate": 512, "dropout_p": 0.1, "num_classes": 2},
-        "n_param_leaves": 1,
-        "params": [{"name": "w", "shape": [2, 3], "dtype": "float32"}],
-        "batch_inputs": [
-            {"name": "input_ids", "shape": [8, 64], "dtype": "int32"},
-            {"name": "token_type_ids", "shape": [8, 64], "dtype": "int32"},
-            {"name": "attention_mask", "shape": [8, 64], "dtype": "int32"},
-            {"name": "labels", "shape": [8, 64], "dtype": "int32"}],
-        "files": {"init": "init.hlo.txt", "step": "step.hlo.txt",
-                  "eval": "eval.hlo.txt"}
-    }"#;
-
     #[test]
     fn parse_manifest() {
-        let m = Manifest::parse(MANIFEST).unwrap();
+        let m = Manifest::parse(TEST_MANIFEST).unwrap();
         assert_eq!(m.name, "t");
         assert_eq!(m.param_count(), 6);
         assert_eq!(m.config.hidden, 128);
@@ -253,7 +455,7 @@ mod tests {
 
     #[test]
     fn leaf_count_mismatch_rejected() {
-        let bad = MANIFEST.replace("\"n_param_leaves\": 1", "\"n_param_leaves\": 7");
+        let bad = TEST_MANIFEST.replace("\"n_param_leaves\": 1", "\"n_param_leaves\": 7");
         assert!(Manifest::parse(&bad).is_err());
     }
 
@@ -262,16 +464,55 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let adir = dir.path().join("t");
         std::fs::create_dir_all(&adir).unwrap();
-        std::fs::write(adir.join("manifest.json"), MANIFEST).unwrap();
+        std::fs::write(adir.join("manifest.json"), TEST_MANIFEST).unwrap();
         std::fs::write(
             dir.path().join("index.json"),
             r#"[{"name": "t", "dir": "t", "n_param_leaves": 1}]"#,
         )
         .unwrap();
         let idx = ArtifactIndex::load(dir.path()).unwrap();
+        assert!(!idx.is_builtin());
         assert_eq!(idx.names(), vec!["t"]);
         let a = idx.open("t").unwrap();
-        assert!(a.step_path().ends_with("step.hlo.txt"));
+        assert!(!a.is_synthetic());
+        assert!(a.step_path().unwrap().ends_with("step.hlo.txt"));
         assert!(idx.open("missing").is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_bert_inventory() {
+        let cfg = crate::config::ModelConfig::bert_tiny();
+        let m = Manifest::synthetic("bt", "mlm", "tempo", "jnp", 8, &cfg, 0);
+        assert_eq!(m.n_param_leaves, m.params.len());
+        // 5 embedding leaves + 16 per layer + 5 MLM-head leaves
+        assert_eq!(m.params.len(), 5 + 16 * cfg.layers + 5);
+        assert_eq!(m.batch_inputs.len(), 4);
+        assert_eq!(m.batch_inputs[0].shape, vec![8, cfg.seq_len]);
+        // leaf 0 is the word embedding — the sim backend's progress proxy
+        assert_eq!(m.params[0].shape, vec![cfg.vocab_size, cfg.hidden]);
+        // close to the analytical param_count (synthetic adds the pos/type
+        // tables at max_position, exactly like the python model)
+        let analytic = cfg.param_count();
+        let got = m.param_count();
+        let rel = (got as f64 - analytic as f64).abs() / analytic as f64;
+        assert!(rel < 0.05, "synthetic {got} vs analytic {analytic}");
+    }
+
+    #[test]
+    fn synthetic_cls_head() {
+        let cfg = crate::config::ModelConfig::bert_tiny();
+        let m = Manifest::synthetic("ct", "cls", "baseline", "jnp", 4, &cfg, 2);
+        assert_eq!(m.config.num_classes, 2);
+        assert_eq!(m.params.last().unwrap().name, "classifier.b");
+    }
+
+    #[test]
+    fn builtin_index_opens_synthetic_artifacts() {
+        let idx = ArtifactIndex::builtin();
+        assert!(idx.is_builtin());
+        assert!(idx.names().contains(&"bert_tiny_tempo"));
+        let a = idx.open("bert_tiny_tempo").unwrap();
+        assert!(a.is_synthetic());
+        assert!(a.step_path().is_err(), "synthetic artifacts have no files");
     }
 }

@@ -1,0 +1,171 @@
+//! Pluggable execution backends.
+//!
+//! The coordinator is written against two small traits instead of the
+//! PJRT client directly:
+//!
+//! * [`Backend`] — prepares an [`Artifact`] entry point for execution
+//!   and moves tensors across the host/device boundary. The associated
+//!   `Value` type is the backend's *device-resident* representation
+//!   (`Arc<HostTensor>` for the sim backend, `xla::Literal`s for
+//!   PJRT), which preserves the §Perf literal-resident hot path: the
+//!   (params, m, v) training state never round-trips through the host
+//!   between steps on either backend.
+//! * [`Program`] — one prepared entry point; `run` consumes borrowed
+//!   leaves and produces the owned output leaves of the ABI.
+//!
+//! Implementations: [`super::SimBackend`] (default; pure Rust,
+//! deterministic, zero artifacts needed) and `super::PjrtBackend`
+//! (`--features pjrt`; compiles the AOT HLO text on the PJRT client).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::runtime::artifact::{Artifact, Manifest};
+use crate::tensor::HostTensor;
+use crate::{Error, Result};
+
+/// The three entry points of the artifact ABI (see `runtime::artifact`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Entry {
+    /// `init(seed) -> params ++ m ++ v`
+    Init,
+    /// `step(params ++ m ++ v ++ batch[4] ++ step ++ seed ++ lr)
+    ///  -> params' ++ m' ++ v' ++ [loss]`
+    Step,
+    /// `eval(params ++ batch[4] ++ seed) -> [loss, metric]`
+    Eval,
+}
+
+impl Entry {
+    pub fn name(self) -> &'static str {
+        match self {
+            Entry::Init => "init",
+            Entry::Step => "step",
+            Entry::Eval => "eval",
+        }
+    }
+}
+
+/// A prepared (compiled or analytically modeled) artifact entry point.
+pub trait Program: Send + Sync {
+    /// Device-resident value type (matches the owning backend's).
+    type Value;
+
+    /// Run with borrowed inputs; returns the flattened output leaves.
+    fn run(&self, inputs: &[&Self::Value]) -> Result<Vec<Self::Value>>;
+}
+
+/// An execution engine for artifact ABIs.
+pub trait Backend: Send + Sync {
+    /// Device-resident value (host tensors for sim, literals for PJRT).
+    /// Deliberately unbounded: PJRT literal wrappers are not `Send`.
+    type Value;
+    /// The backend's program type.
+    type Prog: Program<Value = Self::Value>;
+
+    /// Short backend identifier ("sim", "pjrt") for diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Prepare one entry point of an artifact for repeated execution.
+    fn prepare(&self, artifact: &Artifact, entry: Entry) -> Result<Arc<Self::Prog>>;
+
+    /// Host tensor → device value.
+    fn upload(&self, t: &HostTensor) -> Result<Self::Value>;
+
+    /// Device value → host tensor.
+    fn download(&self, v: &Self::Value) -> Result<HostTensor>;
+
+    /// First element of a scalar output as f64 (loss readback).
+    fn scalar(&self, v: &Self::Value) -> Result<f64> {
+        self.download(v)?.first()
+    }
+
+    /// Per-step latency when the backend models time analytically
+    /// instead of measuring it (the sim backend draws this from
+    /// `perfmodel`); `None` means "measure wall clock".
+    fn modeled_step_time(&self, _artifact: &Artifact) -> Option<Duration> {
+        None
+    }
+}
+
+/// Flat `(params ++ m ++ v)` training state in backend value space.
+///
+/// Generalizes the §Perf-optimized literal-resident state: the step
+/// program consumes the leaves by reference and its output tuple
+/// becomes the next step's leaves with no host round-trip. Host
+/// conversions remain only for batches in and the scalar loss out.
+pub struct DeviceState<V> {
+    /// 3n leaves (params, then Adam m, then Adam v).
+    pub leaves: Vec<V>,
+    /// Number of parameter leaves (n).
+    pub n_params: usize,
+    /// Global step counter (host-side; fed to the step program as a scalar).
+    pub step: i64,
+}
+
+impl<V> DeviceState<V> {
+    /// Wrap the output of the `init` program.
+    pub fn from_init(outputs: Vec<V>, manifest: &Manifest) -> Result<Self> {
+        let n = manifest.n_param_leaves;
+        if outputs.len() != 3 * n {
+            return Err(Error::Abi(format!(
+                "init returned {} leaves, expected {}",
+                outputs.len(),
+                3 * n
+            )));
+        }
+        Ok(DeviceState { leaves: outputs, n_params: n, step: 0 })
+    }
+
+    /// Borrow just the parameter leaves (for eval).
+    pub fn params(&self) -> &[V] {
+        &self.leaves[..self.n_params]
+    }
+
+    /// Replace state from the step output (`params ++ m ++ v ++ [loss]`);
+    /// returns the loss leaf. The state leaves are *moved*, not copied.
+    pub fn absorb_step_output(&mut self, mut outputs: Vec<V>) -> Result<V> {
+        if outputs.len() != self.leaves.len() + 1 {
+            return Err(Error::Abi(format!(
+                "step returned {} leaves, expected {}",
+                outputs.len(),
+                self.leaves.len() + 1
+            )));
+        }
+        let loss = outputs.pop().unwrap();
+        self.leaves = outputs;
+        self.step += 1;
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_checks_arity_and_advances_step() {
+        let mut st = DeviceState { leaves: vec![1.0f64; 3], n_params: 1, step: 0 };
+        assert!(st.absorb_step_output(vec![0.0f64; 3]).is_err());
+        let loss = st.absorb_step_output(vec![2.0, 2.0, 2.0, 0.5]).unwrap();
+        assert_eq!(loss, 0.5);
+        assert_eq!(st.step, 1);
+        assert_eq!(st.leaves, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn from_init_checks_leaf_count() {
+        let m = Manifest::parse(crate::runtime::artifact::TEST_MANIFEST).unwrap();
+        assert!(DeviceState::from_init(vec![0.0f64; 3], &m).is_ok());
+        assert!(DeviceState::from_init(vec![0.0f64; 2], &m).is_err());
+        let st = DeviceState::from_init(vec![7.0f64, 0.0, 0.0], &m).unwrap();
+        assert_eq!(st.params(), &[7.0]);
+    }
+
+    #[test]
+    fn entry_names() {
+        assert_eq!(Entry::Init.name(), "init");
+        assert_eq!(Entry::Step.name(), "step");
+        assert_eq!(Entry::Eval.name(), "eval");
+    }
+}

@@ -1,19 +1,33 @@
-//! L3↔L2 bridge: load AOT HLO-text artifacts and run them on PJRT.
+//! Execution layer: artifacts, pluggable backends, training state.
 //!
 //! The python side (`python/compile/aot.py`) lowers `init` / `step` /
 //! `eval` per (model config, variant) to HLO **text** plus a
-//! `manifest.json` describing the flat-leaf ABI. This module loads the
-//! text with `HloModuleProto::from_text_file`, compiles it once on the
-//! PJRT CPU client, and shuttles `HostTensor`s in and out as literals.
+//! `manifest.json` describing the flat-leaf ABI. This module exposes
+//! that ABI behind the [`Backend`] / [`Program`] traits with two
+//! implementations:
+//!
+//! * [`SimBackend`] (always available, the default) — executes the ABI
+//!   analytically: deterministic seeded init, a calibrated synthetic
+//!   loss trajectory, and latency/memory drawn from `perfmodel` /
+//!   `memmodel`. Runs from a fresh checkout with zero artifacts.
+//! * `PjrtBackend` (`--features pjrt`) — loads the HLO text with
+//!   `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//!   client, and shuttles `HostTensor`s in and out as literals.
+//!
+//! See DESIGN.md §Backends for the feature matrix.
 
 mod artifact;
-mod client;
-mod literal;
-mod litstate;
+mod backend;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+mod sim;
 mod state;
 
-pub use artifact::{Artifact, ArtifactIndex, LeafSpec, Manifest};
-pub use client::{Executable, Runtime};
-pub use literal::{literal_to_tensor, tensor_to_literal};
-pub use litstate::LiteralState;
+pub use artifact::{
+    Artifact, ArtifactIndex, IndexEntry, LeafSpec, Manifest, ManifestConfig, ManifestFiles,
+};
+pub use backend::{Backend, DeviceState, Entry, Program};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{literal_to_tensor, tensor_to_literal, Executable, PjrtBackend, Runtime};
+pub use sim::{builtin_manifests, SimBackend, SimProgram, SIM_INIT_STD};
 pub use state::TrainState;

@@ -1,11 +1,19 @@
-//! PJRT client wrapper: compile HLO text once, execute many times.
+//! PJRT execution backend (`--features pjrt`): compile AOT HLO text
+//! once on the PJRT CPU client, execute many times.
+//!
+//! All `xla::` usage in the crate lives in this module; the default
+//! build never compiles it. The [`PjrtBackend`] keeps the training
+//! state device-resident as `xla::Literal`s across steps (the §Perf
+//! hot path — see `runtime::backend::DeviceState`), so per-step host
+//! conversions are only the batch tensors in and the scalar loss out.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::runtime::literal::{literal_to_tensor, tensor_to_literal};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::backend::{Backend, Entry, Program};
 use crate::tensor::HostTensor;
 use crate::{Error, Result};
 
@@ -17,6 +25,29 @@ unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
+unsafe impl Send for PjrtProgram {}
+unsafe impl Sync for PjrtProgram {}
+
+/// Host → device-feedable literal.
+pub fn tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+/// Literal → host tensor (f32 / s32 supported; everything the ABI emits).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => HostTensor::i32(dims, lit.to_vec::<i32>()?),
+        other => Err(Error::Abi(format!("unsupported literal type {other:?}"))),
+    }
+}
 
 /// A compiled XLA executable plus bookkeeping.
 pub struct Executable {
@@ -76,7 +107,7 @@ impl Executable {
         let first = result
             .first()
             .and_then(|r| r.first())
-            .ok_or_else(|| Error::Xla("executable produced no outputs".into()))?;
+            .ok_or_else(|| Error::Backend("executable produced no outputs".into()))?;
         let tuple = first.to_literal_sync()?;
         Ok(tuple.to_tuple()?)
     }
@@ -126,5 +157,72 @@ impl Runtime {
         });
         self.cache.lock().unwrap().insert(key, built.clone());
         Ok(built)
+    }
+}
+
+/// [`Backend`] implementation over the PJRT runtime.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// PJRT CPU client backend.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtBackend { rt: Runtime::cpu()? })
+    }
+
+    /// Wrap an existing runtime (shares its executable cache).
+    pub fn from_runtime(rt: Runtime) -> Self {
+        PjrtBackend { rt }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+/// One compiled entry point.
+pub struct PjrtProgram {
+    exe: Arc<Executable>,
+}
+
+impl Program for PjrtProgram {
+    type Value = xla::Literal;
+
+    fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.exe.run_refs(inputs)
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Value = xla::Literal;
+    type Prog = PjrtProgram;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, artifact: &Artifact, entry: Entry) -> Result<Arc<PjrtProgram>> {
+        let path = artifact.entry_path(entry)?;
+        Ok(Arc::new(PjrtProgram { exe: self.rt.load(path)? }))
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<xla::Literal> {
+        tensor_to_literal(t)
+    }
+
+    fn download(&self, v: &xla::Literal) -> Result<HostTensor> {
+        literal_to_tensor(v)
+    }
+
+    fn scalar(&self, v: &xla::Literal) -> Result<f64> {
+        v.to_vec::<f32>()?
+            .first()
+            .map(|&x| x as f64)
+            .ok_or_else(|| Error::Abi("empty scalar output leaf".into()))
     }
 }

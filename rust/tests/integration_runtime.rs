@@ -1,20 +1,23 @@
-//! Integration tests over the real PJRT runtime + AOT artifacts.
+//! Integration tests over the real PJRT runtime + AOT artifacts
+//! (`--features pjrt` only; the whole file compiles away otherwise).
 //!
-//! These require `make artifacts` to have run; every test no-ops (with a
-//! notice) if artifacts/ is absent so `cargo test` stays green in a
-//! fresh checkout.
+//! These additionally require `make artifacts` to have run; every test
+//! no-ops (with a notice) if artifacts/ is absent so `cargo test
+//! --features pjrt` stays green in a fresh checkout. The sim-backend
+//! equivalents in `integration_sim.rs` run unconditionally.
+#![cfg(feature = "pjrt")]
 
 use std::sync::OnceLock;
 
 use tempo::config::TrainingConfig;
 use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
-use tempo::runtime::{ArtifactIndex, Runtime, TrainState};
+use tempo::runtime::{ArtifactIndex, PjrtBackend, TrainState};
 use tempo::tensor::HostTensor;
 use tempo::util::TempDir;
 
-fn runtime() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| Runtime::cpu().expect("PJRT CPU client"))
+fn backend() -> &'static PjrtBackend {
+    static RT: OnceLock<PjrtBackend> = OnceLock::new();
+    RT.get_or_init(|| PjrtBackend::cpu().expect("PJRT CPU client"))
 }
 
 fn index() -> Option<ArtifactIndex> {
@@ -44,7 +47,7 @@ fn quick_cfg(artifact: &str, steps: usize) -> TrainingConfig {
 fn init_abi_matches_manifest() {
     let Some(idx) = index() else { return };
     let artifact = idx.open("bert_tiny_tempo").unwrap();
-    let init = runtime().load(artifact.init_path()).unwrap();
+    let init = backend().runtime().load(artifact.init_path().unwrap()).unwrap();
     let outs = init.run(&[HostTensor::scalar_i32(3)]).unwrap();
     let state = TrainState::from_init(outs, &artifact.manifest).unwrap();
     assert_eq!(state.n_params, artifact.manifest.n_param_leaves);
@@ -55,7 +58,7 @@ fn init_abi_matches_manifest() {
 fn init_is_deterministic_in_seed() {
     let Some(idx) = index() else { return };
     let artifact = idx.open("bert_tiny_baseline").unwrap();
-    let init = runtime().load(artifact.init_path()).unwrap();
+    let init = backend().runtime().load(artifact.init_path().unwrap()).unwrap();
     let a = init.run(&[HostTensor::scalar_i32(5)]).unwrap();
     let b = init.run(&[HostTensor::scalar_i32(5)]).unwrap();
     let c = init.run(&[HostTensor::scalar_i32(6)]).unwrap();
@@ -74,7 +77,7 @@ fn trainer_reduces_loss_on_tiny() {
     let artifact = idx.open("bert_tiny_tempo").unwrap();
     let mut cfg = quick_cfg("bert_tiny_tempo", 40);
     cfg.peak_lr = 2e-3;
-    let mut trainer = Trainer::new(runtime(), artifact, cfg, TrainerOptions::default()).unwrap();
+    let mut trainer = Trainer::new(backend(), artifact, cfg, TrainerOptions::default()).unwrap();
     trainer.run().unwrap();
     let records = trainer.metrics().records();
     let first = records.first().unwrap().loss;
@@ -90,7 +93,7 @@ fn eval_returns_finite_loss() {
     let Some(idx) = index() else { return };
     let artifact = idx.open("bert_tiny_baseline").unwrap();
     let mut trainer = Trainer::new(
-        runtime(),
+        backend(),
         artifact,
         quick_cfg("bert_tiny_baseline", 1),
         TrainerOptions::default(),
@@ -110,7 +113,7 @@ fn checkpoint_resume_roundtrip() {
     // phase 1: train 6 steps, save
     let artifact = idx.open("bert_tiny_tempo").unwrap();
     let mut t1 = Trainer::new(
-        runtime(),
+        backend(),
         artifact.clone(),
         quick_cfg("bert_tiny_tempo", 6),
         TrainerOptions { checkpoint_out: Some(ck.clone()), ..Default::default() },
@@ -120,14 +123,14 @@ fn checkpoint_resume_roundtrip() {
 
     // phase 2: resume and confirm the step counter and params carried over
     let t2 = Trainer::new(
-        runtime(),
+        backend(),
         artifact,
         quick_cfg("bert_tiny_tempo", 6),
         TrainerOptions { resume_from: Some(ck), ..Default::default() },
     )
     .unwrap();
-    assert_eq!(t2.state().step, 6);
-    assert_eq!(t2.state().params()[0], t1.state().params()[0]);
+    assert_eq!(t2.state().unwrap().step, 6);
+    assert_eq!(t2.state().unwrap().params()[0], t1.state().unwrap().params()[0]);
 }
 
 #[test]
@@ -136,7 +139,7 @@ fn variants_track_each_other_short_run() {
     let Some(idx) = index() else { return };
     let cfg = quick_cfg("", 12);
     let result = compare_variants(
-        runtime(),
+        backend(),
         &idx,
         &["bert_tiny_baseline", "bert_tiny_tempo", "bert_tiny_checkpoint"],
         &cfg,
@@ -160,7 +163,7 @@ fn variants_track_each_other_short_run() {
 fn finetune_learns_above_chance() {
     let Some(idx) = index() else { return };
     let artifact = idx.open("cls_tiny_tempo").unwrap();
-    let result = finetune_trials(runtime(), &artifact, 1, 50, 50, 2e-3, 11, false).unwrap();
+    let result = finetune_trials(backend(), &artifact, 1, 50, 50, 2e-3, 11, false).unwrap();
     let (_, med, _) = result.final_band();
     assert!(med > 0.7, "median accuracy {med:.3} not above chance");
 }
@@ -172,7 +175,7 @@ fn pallas_artifact_loads_and_steps() {
     let artifact = idx.open("pallas_smoke").unwrap();
     assert_eq!(artifact.manifest.impl_name, "pallas");
     let mut trainer = Trainer::new(
-        runtime(),
+        backend(),
         artifact,
         quick_cfg("pallas_smoke", 2),
         TrainerOptions::default(),
@@ -191,8 +194,8 @@ fn pallas_numerics_match_jnp_artifact() {
     // eval path instead: loss after init must match across runs.
     let Some(idx) = index() else { return };
     let artifact = idx.open("pallas_smoke").unwrap();
-    let mut a = Trainer::new(runtime(), artifact.clone(), quick_cfg("pallas_smoke", 1), TrainerOptions::default()).unwrap();
-    let mut b = Trainer::new(runtime(), artifact, quick_cfg("pallas_smoke", 1), TrainerOptions::default()).unwrap();
+    let mut a = Trainer::new(backend(), artifact.clone(), quick_cfg("pallas_smoke", 1), TrainerOptions::default()).unwrap();
+    let mut b = Trainer::new(backend(), artifact, quick_cfg("pallas_smoke", 1), TrainerOptions::default()).unwrap();
     let la = a.step().unwrap();
     let lb = b.step().unwrap();
     assert!((la - lb).abs() < 1e-6, "pallas step not deterministic: {la} vs {lb}");

@@ -1,0 +1,204 @@
+//! End-to-end coordinator flows on the deterministic sim backend.
+//!
+//! Unlike `integration_runtime.rs` (pjrt feature + on-disk artifacts),
+//! everything here runs from a fresh checkout with **zero artifacts
+//! present**: the builtin manifest set + `SimBackend` cover `Trainer`,
+//! `compare_variants`, `finetune_trials` and the Auto-Tempo search.
+
+use tempo::autotempo::{coarse_pass, fine_search};
+use tempo::config::{Gpu, ModelConfig, TrainingConfig};
+use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
+use tempo::runtime::{ArtifactIndex, SimBackend};
+use tempo::util::TempDir;
+
+fn quick_cfg(artifact: &str, steps: usize) -> TrainingConfig {
+    TrainingConfig {
+        artifact: artifact.into(),
+        steps,
+        warmup_steps: 2,
+        peak_lr: 2e-3,
+        seed: 7,
+        eval_every: 0,
+        log_every: 1000,
+    }
+}
+
+#[test]
+fn builtin_index_needs_no_files() {
+    let idx = ArtifactIndex::builtin();
+    assert!(idx.is_builtin());
+    for name in ["bert_tiny_baseline", "bert_tiny_tempo", "cls_tiny_tempo", "pallas_smoke"] {
+        let a = idx.open(name).unwrap();
+        assert!(a.is_synthetic(), "{name} should be synthetic");
+    }
+}
+
+#[test]
+fn trainer_runs_and_reduces_loss() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("bert_tiny_tempo").unwrap();
+    let mut trainer =
+        Trainer::new(&backend, artifact, quick_cfg("bert_tiny_tempo", 40), TrainerOptions::default())
+            .unwrap();
+    trainer.run().unwrap();
+    let records = trainer.metrics().records();
+    assert_eq!(records.len(), 40);
+    let first = records.first().unwrap().loss;
+    let last = records.last().unwrap().loss;
+    assert!(last < first - 0.6, "loss did not fall: {first:.3} → {last:.3}");
+    // step latency comes from the roofline model, not wall clock
+    assert!(trainer.metrics().throughput() > 0.0);
+}
+
+#[test]
+fn eval_returns_finite_loss_and_metric() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("bert_tiny_baseline").unwrap();
+    let mut trainer = Trainer::new(
+        &backend,
+        artifact,
+        quick_cfg("bert_tiny_baseline", 1),
+        TrainerOptions::default(),
+    )
+    .unwrap();
+    trainer.step().unwrap();
+    let (loss, metric) = trainer.evaluate().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "eval loss {loss}");
+    assert!((0.0..=1.0).contains(&metric), "mlm token prob {metric}");
+}
+
+#[test]
+fn checkpoint_resume_roundtrip() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let dir = TempDir::new().unwrap();
+    let ck = dir.file("state.ck");
+
+    let artifact = idx.open("bert_tiny_tempo").unwrap();
+    let mut t1 = Trainer::new(
+        &backend,
+        artifact.clone(),
+        quick_cfg("bert_tiny_tempo", 6),
+        TrainerOptions { checkpoint_out: Some(ck.clone()), ..Default::default() },
+    )
+    .unwrap();
+    t1.run().unwrap();
+
+    let t2 = Trainer::new(
+        &backend,
+        artifact,
+        quick_cfg("bert_tiny_tempo", 6),
+        TrainerOptions { resume_from: Some(ck), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(t2.state().unwrap().step, 6);
+    assert_eq!(t2.state().unwrap().params()[0], t1.state().unwrap().params()[0]);
+}
+
+#[test]
+fn variants_track_each_other() {
+    // Fig 6a miniature: identical config/seed across variants → the sim
+    // trajectories coincide (the paper reports ≤0.5% endpoint gap).
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let result = compare_variants(
+        &backend,
+        &idx,
+        &["bert_tiny_baseline", "bert_tiny_tempo", "bert_tiny_checkpoint"],
+        &quick_cfg("", 12),
+        false,
+    )
+    .unwrap();
+    assert_eq!(result.curves.len(), 3);
+    assert_eq!(result.curves[0].losses.len(), 12);
+    assert!(
+        result.max_endpoint_rel_diff < 1e-9,
+        "sim variants deviate {:.3e}",
+        result.max_endpoint_rel_diff
+    );
+}
+
+#[test]
+fn different_data_seeds_give_different_curves() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let run = |seed: u64| {
+        let mut cfg = quick_cfg("bert_tiny_tempo", 8);
+        cfg.seed = seed;
+        let artifact = idx.open("bert_tiny_tempo").unwrap();
+        let mut t = Trainer::new(&backend, artifact, cfg, TrainerOptions::default()).unwrap();
+        t.run().unwrap();
+        t.metrics().records().iter().map(|r| r.loss).collect::<Vec<f64>>()
+    };
+    assert_ne!(run(1), run(2), "seed must perturb the trajectory");
+}
+
+#[test]
+fn finetune_learns_above_chance() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("cls_tiny_tempo").unwrap();
+    let result = finetune_trials(&backend, &artifact, 1, 50, 50, 2e-3, 11, false).unwrap();
+    let (_, med, _) = result.final_band();
+    assert!(med > 0.7, "median accuracy {med:.3} not above chance");
+}
+
+#[test]
+fn finetune_band_spans_trials() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("cls_tiny_baseline").unwrap();
+    let result = finetune_trials(&backend, &artifact, 3, 20, 10, 1e-3, 5, false).unwrap();
+    assert_eq!(result.trials.len(), 3);
+    for t in &result.trials {
+        assert_eq!(t.accuracy.len(), 2, "eval every 10 over 20 steps");
+    }
+    let (lo, med, hi) = result.final_band();
+    assert!(lo <= med && med <= hi);
+}
+
+#[test]
+fn pallas_smoke_steps_on_sim() {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("pallas_smoke").unwrap();
+    assert_eq!(artifact.manifest.impl_name, "pallas");
+    let mut trainer =
+        Trainer::new(&backend, artifact, quick_cfg("pallas_smoke", 2), TrainerOptions::default())
+            .unwrap();
+    let l1 = trainer.step().unwrap();
+    let l2 = trainer.step().unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+}
+
+#[test]
+fn autotempo_search_completes_with_zero_artifacts() {
+    // Auto-Tempo profiles come from the analytical models — no runtime,
+    // no artifacts. Both policies must complete and return sane plans.
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let coarse = coarse_pass(&cfg, Gpu::Rtx2080Ti);
+    assert!(coarse.max_batch > 0);
+    assert_eq!(coarse.plan.per_layer.len(), cfg.layers);
+
+    let fine = fine_search(&cfg, Gpu::Rtx2080Ti, 2);
+    assert!(fine.max_batch >= 2, "target batch 2 must be reachable");
+    assert!(fine.plan.applied_layers() <= cfg.layers);
+}
+
+#[test]
+fn modeled_step_time_orders_techniques() {
+    // At equal batch the roofline model must charge checkpointing its
+    // re-forward: sim baseline steps are "faster" than checkpoint steps.
+    let backend = SimBackend::with_gpu(Gpu::V100);
+    let idx = ArtifactIndex::builtin();
+    use tempo::runtime::Backend;
+    let base = backend
+        .modeled_step_time(&idx.open("bert_tiny_baseline").unwrap())
+        .unwrap();
+    let chk = backend
+        .modeled_step_time(&idx.open("bert_tiny_checkpoint").unwrap())
+        .unwrap();
+    assert!(chk > base, "checkpoint {chk:?} should exceed baseline {base:?}");
+}

@@ -1,0 +1,176 @@
+//! Property tests over the Auto-Tempo planning layer (`LayerPlan` and
+//! the two search policies), driven by the in-tree SplitMix64 RNG over
+//! seeded-random model configs (no proptest in the offline build).
+
+use tempo::autotempo::{coarse_pass, fine_search, LayerPlan};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet};
+use tempo::tensor::Rng;
+
+/// Run `body(rng, case_index)` for `n` seeded cases.
+fn cases(n: usize, seed: u64, mut body: impl FnMut(&mut Rng, usize)) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let mut case_rng = rng.fork(i as u64);
+        body(&mut case_rng, i);
+    }
+}
+
+/// A random plausible transformer config.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let heads = [2usize, 4, 8, 12, 16][rng.below(5)];
+    let hidden = heads * 64;
+    ModelConfig {
+        name: "rand".into(),
+        kind: tempo::config::ModelKind::Bert,
+        hidden,
+        layers: rng.range(1, 25),
+        heads,
+        seq_len: [64usize, 128, 256, 512][rng.below(4)],
+        intermediate: hidden * 4,
+        vocab_size: rng.range(4096, 50000),
+        max_position: 1024,
+        type_vocab: 2,
+        dropout_p: 0.1,
+    }
+}
+
+/// A random per-layer optimization assignment.
+fn random_plan(rng: &mut Rng, layers: usize) -> LayerPlan {
+    let subsets = OptimizationSet::all_subsets();
+    LayerPlan {
+        per_layer: (0..layers).map(|_| subsets[rng.below(subsets.len())]).collect(),
+    }
+}
+
+/// The single-optimization toggles in a fixed order.
+fn toggles() -> [OptimizationSet; 4] {
+    [
+        OptimizationSet::only("gelu").unwrap(),
+        OptimizationSet::only("layernorm").unwrap(),
+        OptimizationSet::only("dropout").unwrap(),
+        OptimizationSet::only("softmax").unwrap(),
+    ]
+}
+
+fn merge(a: OptimizationSet, b: OptimizationSet) -> OptimizationSet {
+    OptimizationSet {
+        inplace_gelu: a.inplace_gelu || b.inplace_gelu,
+        inplace_layernorm: a.inplace_layernorm || b.inplace_layernorm,
+        dropout_recompute: a.dropout_recompute || b.dropout_recompute,
+        softmax_outonly: a.softmax_outonly || b.softmax_outonly,
+    }
+}
+
+#[test]
+fn prop_total_bytes_non_increasing_as_optimizations_are_added() {
+    // Start from a random plan, add the four optimizations one at a time
+    // to one random layer: the whole-plan footprint must never grow.
+    cases(120, 21, |rng, i| {
+        let cfg = random_config(rng);
+        let batch = rng.range(1, 9);
+        let mut plan = random_plan(rng, cfg.layers);
+        let layer = rng.below(cfg.layers);
+        let mut order = toggles();
+        rng.shuffle(&mut order);
+
+        let mut prev = plan.total_bytes(&cfg, batch);
+        for t in order {
+            plan.per_layer[layer] = merge(plan.per_layer[layer], t);
+            let now = plan.total_bytes(&cfg, batch);
+            assert!(
+                now <= prev,
+                "case {i}: adding {:?} to layer {layer} grew the plan: {now} > {prev} ({cfg:?})",
+                t.label()
+            );
+            prev = now;
+        }
+    });
+}
+
+#[test]
+fn prop_full_plan_strictly_below_empty_plan() {
+    cases(60, 22, |rng, i| {
+        let cfg = random_config(rng);
+        let batch = rng.range(1, 9);
+        let empty = LayerPlan::uniform(cfg.layers, OptimizationSet::none());
+        let full = LayerPlan::uniform(cfg.layers, OptimizationSet::full());
+        assert!(
+            full.total_bytes(&cfg, batch) < empty.total_bytes(&cfg, batch),
+            "case {i}: full tempo saved nothing on {cfg:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_uniform_applied_layers_matches() {
+    cases(100, 23, |rng, _| {
+        let n = rng.range(1, 33);
+        assert_eq!(LayerPlan::uniform(n, OptimizationSet::full()).applied_layers(), n);
+        assert_eq!(LayerPlan::uniform(n, OptimizationSet::none()).applied_layers(), 0);
+        let one = OptimizationSet::only("dropout").unwrap();
+        assert_eq!(LayerPlan::uniform(n, one).applied_layers(), n);
+    });
+}
+
+#[test]
+fn prop_applied_layers_counts_nonempty_sets() {
+    cases(100, 24, |rng, i| {
+        let layers = rng.range(1, 25);
+        let plan = random_plan(rng, layers);
+        let expect = plan.per_layer.iter().filter(|s| s.count() > 0).count();
+        assert_eq!(plan.applied_layers(), expect, "case {i}");
+    });
+}
+
+#[test]
+fn prop_searched_plan_fits_the_gpu_budget() {
+    // Whatever the fine-grained search decides, its reported max batch
+    // must actually fit the GPU budget under its own plan.
+    cases(40, 25, |rng, i| {
+        let cfg = random_config(rng);
+        let gpu = Gpu::all()[rng.below(3)];
+        let target = rng.range(1, 33);
+        let d = fine_search(&cfg, gpu, target);
+        if d.max_batch == 0 {
+            return; // model doesn't fit at all on this GPU
+        }
+        let bytes = d.plan.total_bytes(&cfg, d.max_batch);
+        let budget = gpu.spec().usable_bytes();
+        assert!(
+            bytes <= budget,
+            "case {i}: searched plan exceeds budget on {} at B={}: {bytes} > {budget} \
+             (target {target}, applied {}/{} layers, {cfg:?})",
+            gpu.name(),
+            d.max_batch,
+            d.plan.applied_layers(),
+            cfg.layers
+        );
+    });
+}
+
+#[test]
+fn prop_coarse_plan_fits_the_gpu_budget() {
+    // coarse_pass sizes its batch with the whole-model technique
+    // accounting (all-or-nothing), so verify against the same model.
+    cases(40, 26, |rng, i| {
+        let cfg = random_config(rng);
+        let gpu = Gpu::all()[rng.below(3)];
+        let d = coarse_pass(&cfg, gpu);
+        if d.max_batch == 0 {
+            return;
+        }
+        let tech = if d.plan.applied_layers() > 0 {
+            tempo::config::Technique::Tempo
+        } else {
+            tempo::config::Technique::Baseline
+        };
+        let bytes =
+            tempo::memmodel::ModelFootprint::new(cfg.clone(), tech).total_bytes(d.max_batch);
+        let budget = gpu.spec().usable_bytes();
+        assert!(
+            bytes <= budget,
+            "case {i}: coarse decision exceeds budget on {}: {bytes} > {budget} ({cfg:?})",
+            gpu.name()
+        );
+    });
+}

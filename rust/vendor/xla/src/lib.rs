@@ -1,0 +1,152 @@
+//! API shim for the vendored PJRT `xla` crate.
+//!
+//! This crate exists so `cargo check --features pjrt` can type-check the
+//! `tempo::runtime::pjrt` backend **offline**, keeping the feature-gated
+//! code from bit-rotting in environments without the real PJRT C API
+//! bindings. It mirrors exactly the API surface tempo uses — nothing
+//! more — and every function panics at runtime.
+//!
+//! Deployments with the real vendored bindings replace this crate
+//! (overwrite `rust/vendor/xla` or add a `[patch]` section); the tempo
+//! side compiles unchanged against either.
+
+use std::fmt;
+
+const SHIM_MSG: &str =
+    "xla shim: this is the type-check-only API surface; link the vendored PJRT bindings \
+     (replace rust/vendor/xla) to execute on PJRT";
+
+/// Error type of the PJRT bindings.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types tempo's ABI shuttles (subset of the real enum;
+/// non-exhaustive so callers keep the wildcard arm the real crate needs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Native host types convertible to/from literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side literal (dense tensor value).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        unimplemented!("{SHIM_MSG}")
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unimplemented!("{SHIM_MSG}")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unimplemented!("{SHIM_MSG}")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unimplemented!("{SHIM_MSG}")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unimplemented!("{SHIM_MSG}")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unimplemented!("{SHIM_MSG}")
+    }
+}
+
+/// An XLA computation ready to compile.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        unimplemented!("{SHIM_MSG}")
+    }
+}
+
+/// Device-resident buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unimplemented!("{SHIM_MSG}")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(SHIM_MSG.to_string()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        unimplemented!("{SHIM_MSG}")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unimplemented!("{SHIM_MSG}")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unimplemented!("{SHIM_MSG}")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Borrow-only execute (the leak-free path tempo uses; see
+    /// `runtime::pjrt` LEAK NOTE).
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unimplemented!("{SHIM_MSG}")
+    }
+}
