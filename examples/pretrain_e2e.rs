@@ -17,10 +17,14 @@
 //! GELU-approximation differences amplify chaotically like data-order
 //! noise.
 //!
-//! Run: `cargo run --release --example pretrain_e2e [-- --steps N --scale mini|tiny]`
+//! The three runs are independent cells on the concurrent experiment
+//! engine (`--jobs N`, default one worker per core): results come back
+//! in grid order, so the report is bit-identical for every `--jobs`.
+//!
+//! Run: `cargo run --release --example pretrain_e2e [-- --steps N --scale mini|tiny --jobs N]`
 
 use tempo::config::TrainingConfig;
-use tempo::coordinator::{Trainer, TrainerOptions};
+use tempo::coordinator::{ExperimentEngine, Trainer, TrainerOptions};
 use tempo::runtime::{ArtifactIndex, Backend, SimBackend};
 use tempo::util::Args;
 use tempo::{Error, Result};
@@ -31,6 +35,7 @@ fn run_one<B: Backend>(
     artifact: &str,
     steps: usize,
     seed: u64,
+    verbose: bool,
 ) -> Result<(Vec<f64>, f64)> {
     let cfg = TrainingConfig {
         artifact: artifact.into(),
@@ -45,7 +50,7 @@ fn run_one<B: Backend>(
         backend,
         index.open(artifact)?,
         cfg,
-        TrainerOptions { verbose: true, ..Default::default() },
+        TrainerOptions { verbose, ..Default::default() },
     )?;
     trainer.run()?;
     let losses: Vec<f64> = trainer.metrics().records().iter().map(|r| r.loss).collect();
@@ -78,16 +83,33 @@ fn main() -> Result<()> {
 
     let index = ArtifactIndex::load_or_builtin("artifacts");
     let backend = SimBackend::new();
+    // Same --jobs semantics as the tempo CLI: default/`auto`/`0` = one
+    // worker per core.
+    let engine = match args.get("jobs") {
+        None | Some("auto") | Some("0") => ExperimentEngine::auto(),
+        Some(v) => ExperimentEngine::new(v.parse().map_err(|_| {
+            Error::Invalid(format!("--jobs expects an integer or 'auto', got '{v}'"))
+        })?),
+    };
 
     println!(
-        "=== pretrain_e2e ({}): {baseline} vs {tempo_name}, {steps} steps ===",
-        backend.name()
+        "=== pretrain_e2e ({}): {baseline} vs {tempo_name}, {steps} steps, {} worker(s) ===",
+        backend.name(),
+        engine.jobs()
     );
+    // Three independent cells; verbose per-step lines only when serial
+    // (they would interleave across workers).
+    let grid: [(&str, u64); 3] = [(baseline, 42), (tempo_name, 42), (baseline, 43)];
+    let verbose = engine.jobs() == 1;
     let t0 = std::time::Instant::now();
-    let (base_a, thr_base) = run_one(&backend, &index, baseline, steps, 42)?;
-    let (tempo_a, thr_tempo) = run_one(&backend, &index, tempo_name, steps, 42)?;
-    let (base_b, _) = run_one(&backend, &index, baseline, steps, 43)?;
+    let mut cells = engine.run_cells(grid.len(), |i| {
+        let (artifact, seed) = grid[i];
+        run_one(&backend, &index, artifact, steps, seed, verbose)
+    });
     let wall = t0.elapsed();
+    let (base_b, _) = cells.pop().unwrap()?;
+    let (tempo_a, thr_tempo) = cells.pop().unwrap()?;
+    let (base_a, thr_base) = cells.pop().unwrap()?;
 
     std::fs::create_dir_all("bench_results")?;
     let mut csv = String::from("step,baseline_seedA,tempo_seedA,baseline_seedB\n");

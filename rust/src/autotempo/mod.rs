@@ -17,4 +17,4 @@
 
 mod search;
 
-pub use search::{coarse_pass, fine_search, AutoTempoDecision, LayerPlan};
+pub use search::{coarse_pass, fine_search, plan_throughput, AutoTempoDecision, LayerPlan};

@@ -99,8 +99,34 @@ pub fn coarse_pass(cfg: &ModelConfig, gpu: Gpu) -> AutoTempoDecision {
     }
 }
 
+/// Throughput (seqs/s) of a prefix plan with `applied` of `cfg.layers`
+/// layers tempo-ized, at batch `batch`.
+///
+/// The roofline `step_time` is affine in the op census, and Tempo's
+/// census delta is per-layer linear, so interpolating the two uniform
+/// endpoints by the applied fraction is *exact* for prefix plans —
+/// `applied = 0` reproduces the Baseline number and `applied = layers`
+/// the Tempo number bit-for-bit.
+pub fn plan_throughput(cfg: &ModelConfig, gpu: Gpu, applied: usize, batch: usize) -> f64 {
+    if batch == 0 {
+        return 0.0;
+    }
+    let spec = gpu.spec();
+    let t_base = crate::perfmodel::step_time(cfg, Technique::Baseline, &spec, batch);
+    let t_tempo = crate::perfmodel::step_time(cfg, Technique::Tempo, &spec, batch);
+    let frac = applied as f64 / cfg.layers.max(1) as f64;
+    let t = t_base + frac * (t_tempo - t_base);
+    batch as f64 / t
+}
+
 /// Fine-grained policy: smallest prefix of tempo-ized layers such that
 /// `target_batch` fits (binary search over the prefix length).
+///
+/// Every branch models throughput with the *plan-aware* estimate
+/// ([`plan_throughput`]) at the clamped batch
+/// `target_batch.min(max_batch)` — partial plans are no longer priced
+/// as uniform Tempo, and an unreachable target is priced at the batch
+/// that actually runs.
 pub fn fine_search(cfg: &ModelConfig, gpu: Gpu, target_batch: usize) -> AutoTempoDecision {
     let layers = cfg.layers;
     let plan_for = |k: usize| {
@@ -111,28 +137,26 @@ pub fn fine_search(cfg: &ModelConfig, gpu: Gpu, target_batch: usize) -> AutoTemp
         LayerPlan { per_layer }
     };
     let fits = |k: usize| plan_max_batch(cfg, &plan_for(k), gpu) >= target_batch;
+    let decide = |k: usize, rationale: String| {
+        let plan = plan_for(k);
+        let b = plan_max_batch(cfg, &plan, gpu);
+        AutoTempoDecision {
+            plan,
+            max_batch: b,
+            throughput: plan_throughput(cfg, gpu, k, target_batch.min(b)),
+            rationale,
+        }
+    };
 
     if fits(0) {
-        let plan = plan_for(0);
-        let b = plan_max_batch(cfg, &plan, gpu);
-        return AutoTempoDecision {
-            plan,
-            max_batch: b,
-            throughput: throughput_at(cfg, Technique::Baseline, gpu, target_batch.min(b)).seqs_per_s,
-            rationale: format!("target batch {target_batch} already fits without Tempo"),
-        };
+        return decide(0, format!("target batch {target_batch} already fits without Tempo"));
     }
     if !fits(layers) {
-        let plan = plan_for(layers);
-        let b = plan_max_batch(cfg, &plan, gpu);
-        return AutoTempoDecision {
-            plan,
-            max_batch: b,
-            throughput: throughput_at(cfg, Technique::Tempo, gpu, b).seqs_per_s,
-            rationale: format!(
-                "target batch {target_batch} unreachable even with full Tempo (max {b})"
-            ),
-        };
+        let b = plan_max_batch(cfg, &plan_for(layers), gpu);
+        return decide(
+            layers,
+            format!("target batch {target_batch} unreachable even with full Tempo (max {b})"),
+        );
     }
     // binary search the smallest sufficient prefix
     let (mut lo, mut hi) = (0usize, layers); // fits(lo)=false, fits(hi)=true
@@ -144,16 +168,12 @@ pub fn fine_search(cfg: &ModelConfig, gpu: Gpu, target_batch: usize) -> AutoTemp
             lo = mid;
         }
     }
-    let plan = plan_for(hi);
-    let b = plan_max_batch(cfg, &plan, gpu);
-    AutoTempoDecision {
-        plan,
-        max_batch: b,
-        throughput: throughput_at(cfg, Technique::Tempo, gpu, target_batch).seqs_per_s,
-        rationale: format!(
+    decide(
+        hi,
+        format!(
             "smallest sufficient set: Tempo on {hi}/{layers} layers reaches batch {target_batch}"
         ),
-    }
+    )
 }
 
 #[cfg(test)]
@@ -214,6 +234,63 @@ mod tests {
         let d = fine_search(&large512(), Gpu::Rtx2080Ti, 1000);
         assert!(d.rationale.contains("unreachable"));
         assert_eq!(d.plan.applied_layers(), 24);
+    }
+
+    #[test]
+    fn plan_throughput_matches_uniform_endpoints() {
+        let cfg = large512();
+        for b in [1usize, 2, 4] {
+            let p0 = plan_throughput(&cfg, Gpu::Rtx2080Ti, 0, b);
+            let base = throughput_at(&cfg, Technique::Baseline, Gpu::Rtx2080Ti, b).seqs_per_s;
+            assert!((p0 - base).abs() < 1e-12, "B={b}: plan {p0} vs baseline {base}");
+            let pl = plan_throughput(&cfg, Gpu::Rtx2080Ti, cfg.layers, b);
+            let tempo = throughput_at(&cfg, Technique::Tempo, Gpu::Rtx2080Ti, b).seqs_per_s;
+            assert!((pl - tempo).abs() < 1e-12, "B={b}: plan {pl} vs tempo {tempo}");
+        }
+    }
+
+    #[test]
+    fn plan_throughput_interpolates_monotonically() {
+        // Tempo adds per-layer overhead at equal batch, so throughput
+        // must fall strictly between the endpoints and decrease as more
+        // layers are tempo-ized.
+        let cfg = large512();
+        let mut prev = f64::INFINITY;
+        for k in [0usize, 6, 12, 18, 24] {
+            let p = plan_throughput(&cfg, Gpu::Rtx2080Ti, k, 2);
+            assert!(p < prev, "k={k}: {p} !< {prev}");
+            assert!(p > 0.0);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn plan_throughput_zero_batch_is_zero() {
+        assert_eq!(plan_throughput(&large512(), Gpu::Rtx2080Ti, 4, 0), 0.0);
+    }
+
+    #[test]
+    fn fine_search_unreachable_prices_the_batch_that_runs() {
+        // target 1000 is unreachable; throughput must be modeled at the
+        // actual max batch, not the fantasy target.
+        let cfg = large512();
+        let d = fine_search(&cfg, Gpu::Rtx2080Ti, 1000);
+        let expect = plan_throughput(&cfg, Gpu::Rtx2080Ti, cfg.layers, d.max_batch);
+        assert!((d.throughput - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fine_search_partial_plan_priced_plan_aware() {
+        let cfg = large512();
+        let base = max_batch(&cfg, Technique::Baseline, Gpu::Rtx2080Ti).max_batch;
+        let d = fine_search(&cfg, Gpu::Rtx2080Ti, base + 1);
+        let k = d.plan.applied_layers();
+        assert!(k > 0 && k < cfg.layers, "want a partial plan, got {k}");
+        let expect = plan_throughput(&cfg, Gpu::Rtx2080Ti, k, (base + 1).min(d.max_batch));
+        assert!((d.throughput - expect).abs() < 1e-12);
+        // a partial plan must beat uniform-Tempo pricing at the same batch
+        let uniform = throughput_at(&cfg, Technique::Tempo, Gpu::Rtx2080Ti, base + 1).seqs_per_s;
+        assert!(d.throughput > uniform, "partial {0} !> uniform {uniform}", d.throughput);
     }
 
     #[test]

@@ -2,11 +2,17 @@
 //! dropout seeds) and compare the loss curves point-for-point.
 //! Backend-generic: runs on the sim backend with zero artifacts, or on
 //! PJRT against the real executables.
+//!
+//! Each variant is one independent cell on the [`ExperimentEngine`]:
+//! the sweep scales across cores with `--jobs`, results come back in
+//! grid (argument) order, and a failing variant is captured in
+//! [`CompareResult::failures`] instead of aborting the others.
 
 use crate::config::TrainingConfig;
 use crate::runtime::{ArtifactIndex, Backend};
-use crate::Result;
+use crate::{Error, Result};
 
+use super::engine::{partition_cells, CellFailure, ExperimentEngine};
 use super::trainer::{Trainer, TrainerOptions};
 
 /// One variant's loss trajectory.
@@ -28,36 +34,55 @@ impl LossCurve {
 /// Result of a variant comparison run.
 #[derive(Debug, Clone)]
 pub struct CompareResult {
+    /// Successful curves, in the order the artifacts were requested.
     pub curves: Vec<LossCurve>,
-    /// Max relative endpoint difference vs the first (reference) curve.
+    /// Max relative endpoint difference vs the first successful
+    /// (reference) curve.
     pub max_endpoint_rel_diff: f64,
+    /// Variants whose cell failed (the sweep continued without them).
+    pub failures: Vec<CellFailure>,
 }
 
 /// Train each artifact with identical config/seeds; collect loss curves.
 ///
 /// The first artifact is the reference (the paper compares Tempo against
-/// the NVIDIA baseline and reports ≤0.5% endpoint difference).
+/// the NVIDIA baseline and reports ≤0.5% endpoint difference). Cells run
+/// on `engine`; per-step progress printing is suppressed when the engine
+/// is parallel so the output stays deterministic across `--jobs`.
 pub fn compare_variants<B: Backend>(
     backend: &B,
     index: &ArtifactIndex,
     artifact_names: &[&str],
     cfg: &TrainingConfig,
+    engine: &ExperimentEngine,
     verbose: bool,
 ) -> Result<CompareResult> {
-    let mut curves = Vec::new();
-    for name in artifact_names {
+    if artifact_names.is_empty() {
+        return Err(Error::Invalid("compare_variants: no artifacts given".into()));
+    }
+    let cell_verbose = verbose && engine.jobs() == 1;
+    let results = engine.run_cells(artifact_names.len(), |i| {
+        let name = artifact_names[i];
         let artifact = index.open(name)?;
         let mut trainer = Trainer::new(
             backend,
             artifact,
             cfg.clone(),
-            TrainerOptions { verbose, ..Default::default() },
+            TrainerOptions { verbose: cell_verbose, ..Default::default() },
         )?;
         trainer.run()?;
-        curves.push(LossCurve {
+        Ok(LossCurve {
             artifact: name.to_string(),
             losses: trainer.metrics().records().iter().map(|r| r.loss).collect(),
-        });
+        })
+    });
+    let (curves, failures) = partition_cells(results, |i| artifact_names[i].to_string());
+    if curves.is_empty() {
+        return Err(Error::Backend(format!(
+            "all {} compare cells failed; first: {}",
+            artifact_names.len(),
+            failures[0]
+        )));
     }
     let window = (cfg.steps / 10).max(5);
     let reference = curves[0].endpoint(window);
@@ -66,7 +91,7 @@ pub fn compare_variants<B: Backend>(
         .skip(1)
         .map(|c| (c.endpoint(window) - reference).abs() / reference)
         .fold(0.0, f64::max);
-    Ok(CompareResult { curves, max_endpoint_rel_diff })
+    Ok(CompareResult { curves, max_endpoint_rel_diff, failures })
 }
 
 #[cfg(test)]
@@ -84,5 +109,37 @@ mod tests {
     fn endpoint_handles_window_one() {
         let c = LossCurve { artifact: "x".into(), losses: vec![3.0, 1.5] };
         assert_eq!(c.endpoint(1), 1.5);
+    }
+
+    #[test]
+    fn empty_artifact_list_rejected() {
+        let backend = crate::runtime::SimBackend::new();
+        let idx = ArtifactIndex::builtin();
+        let r = compare_variants(
+            &backend,
+            &idx,
+            &[],
+            &TrainingConfig::default(),
+            &ExperimentEngine::serial(),
+            false,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn all_cells_failing_is_an_error() {
+        let backend = crate::runtime::SimBackend::new();
+        let idx = ArtifactIndex::builtin();
+        let cfg = TrainingConfig { steps: 2, ..Default::default() };
+        let r = compare_variants(
+            &backend,
+            &idx,
+            &["nope_a", "nope_b"],
+            &cfg,
+            &ExperimentEngine::serial(),
+            false,
+        );
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.contains("nope_a"), "{msg}");
     }
 }

@@ -1,0 +1,248 @@
+//! Concurrent experiment engine: fans independent sweep cells out
+//! across a scoped-thread worker pool.
+//!
+//! The paper's headline results (Fig 6a/6b, Table 2) are grids of
+//! independent (artifact, variant, trial, batch-size) runs. Each such
+//! cell is deterministic on its own — the coordinator's determinism
+//! contract (DESIGN.md §Backends) is per run, not per schedule — so the
+//! grid can execute in any order on any number of threads as long as
+//! results are *collected by grid index*, never by completion order.
+//!
+//! [`ExperimentEngine::run_cells`] implements exactly that:
+//!
+//! * workers pull the next cell index from a shared atomic counter
+//!   (work stealing without queues);
+//! * every result lands in a pre-sized slot vector at its own index,
+//!   so the output of `--jobs 4` is bit-identical to `--jobs 1`;
+//! * a failing (or panicking) cell yields an `Err` in its slot instead
+//!   of aborting the sweep — the remaining cells still run.
+//!
+//! The pool uses `std::thread::scope`, so cells may borrow the backend
+//! and artifact index from the caller's stack; no dependencies, no
+//! `'static` bounds. Backends are shared (`Backend: Send + Sync`), but
+//! each cell creates and drops its own device values on one worker
+//! thread, so `Backend::Value` itself never crosses threads (this is
+//! what keeps the non-`Send` PJRT literals legal under the engine).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+/// One failed sweep cell, kept alongside the successful results so a
+/// partial sweep is still reportable (and reproducible: the index is
+/// the cell's grid position, stable across `--jobs` settings).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellFailure {
+    /// Grid index of the failed cell.
+    pub index: usize,
+    /// Human-readable cell label (artifact name, trial id, …).
+    pub label: String,
+    /// Rendered error.
+    pub error: String,
+}
+
+impl std::fmt::Display for CellFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cell {} ({}): {}", self.index, self.label, self.error)
+    }
+}
+
+/// Scoped-thread worker pool over independent experiment cells.
+#[derive(Debug, Clone)]
+pub struct ExperimentEngine {
+    jobs: usize,
+}
+
+impl ExperimentEngine {
+    /// Pool with exactly `jobs` workers (0 is clamped to 1).
+    pub fn new(jobs: usize) -> Self {
+        ExperimentEngine { jobs: jobs.max(1) }
+    }
+
+    /// Serial engine: cells run in grid order on the calling thread.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// Worker count.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run `f(0..n)` across the pool; slot `i` of the returned vector
+    /// holds cell `i`'s result regardless of completion order. A cell
+    /// that returns `Err` (or panics) fills its slot with the error and
+    /// the sweep continues.
+    pub fn run_cells<T, F>(&self, n: usize, f: F) -> Vec<Result<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        let run_one = |i: usize| -> Result<T> {
+            match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(r) => r,
+                Err(payload) => Err(Error::Backend(format!(
+                    "cell {i} panicked: {}",
+                    panic_message(&*payload)
+                ))),
+            }
+        };
+        if self.jobs == 1 || n <= 1 {
+            // Serial fast path: same slots, same order, no threads.
+            return (0..n).map(run_one).collect();
+        }
+        let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.jobs.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let result = run_one(i);
+                    *slots[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| match slot.into_inner() {
+                Ok(Some(r)) => r,
+                _ => Err(Error::Backend(format!("cell {i} produced no result"))),
+            })
+            .collect()
+    }
+}
+
+impl Default for ExperimentEngine {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+/// Split cell results into in-order successes and captured failures.
+pub fn partition_cells<T>(
+    results: Vec<Result<T>>,
+    label: impl Fn(usize) -> String,
+) -> (Vec<T>, Vec<CellFailure>) {
+    let mut ok = Vec::new();
+    let mut failures = Vec::new();
+    for (index, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(v) => ok.push(v),
+            Err(e) => failures.push(CellFailure {
+                index,
+                label: label(index),
+                error: e.to_string(),
+            }),
+        }
+    }
+    (ok, failures)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_land_in_grid_order() {
+        for jobs in [1usize, 4] {
+            let engine = ExperimentEngine::new(jobs);
+            let out = engine.run_cells(16, |i| Ok(i * i));
+            let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(vals, (0..16).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn failing_cell_does_not_abort_sweep() {
+        let engine = ExperimentEngine::new(4);
+        let out = engine.run_cells(5, |i| {
+            if i == 2 {
+                Err(Error::Invalid("boom".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(out[2].is_err());
+        for (i, r) in out.iter().enumerate() {
+            if i != 2 {
+                assert_eq!(*r.as_ref().unwrap(), i);
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_cell_is_captured() {
+        let engine = ExperimentEngine::new(2);
+        let out = engine.run_cells(3, |i| {
+            if i == 1 {
+                panic!("deliberate test panic");
+            }
+            Ok(i)
+        });
+        assert_eq!(*out[0].as_ref().unwrap(), 0);
+        assert_eq!(*out[2].as_ref().unwrap(), 2);
+        let msg = out[1].as_ref().unwrap_err().to_string();
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("deliberate test panic"), "{msg}");
+    }
+
+    #[test]
+    fn jobs_are_clamped_and_reported() {
+        assert_eq!(ExperimentEngine::new(0).jobs(), 1);
+        assert_eq!(ExperimentEngine::serial().jobs(), 1);
+        assert!(ExperimentEngine::auto().jobs() >= 1);
+    }
+
+    #[test]
+    fn partition_keeps_order_and_labels() {
+        let results: Vec<Result<usize>> = vec![
+            Ok(10),
+            Err(Error::Invalid("x".into())),
+            Ok(30),
+            Err(Error::Backend("y".into())),
+        ];
+        let (ok, failures) = partition_cells(results, |i| format!("cell-{i}"));
+        assert_eq!(ok, vec![10, 30]);
+        assert_eq!(failures.len(), 2);
+        assert_eq!(failures[0].index, 1);
+        assert_eq!(failures[0].label, "cell-1");
+        assert!(failures[0].error.contains("x"));
+        assert_eq!(failures[1].index, 3);
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let out = ExperimentEngine::new(4).run_cells(0, |_| Ok(0u8));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn backends_are_engine_shareable() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<crate::runtime::SimBackend>();
+        assert_send_sync::<crate::runtime::SimProgram>();
+        assert_send_sync::<ExperimentEngine>();
+    }
+}

@@ -4,11 +4,28 @@
 //! synthetic paraphrase-pair task and reports the per-epoch accuracy
 //! band (median/min/max across trials), for baseline vs tempo.
 //! Backend-generic like [`super::Trainer`].
+//!
+//! Trials are independent cells on the [`ExperimentEngine`]: the
+//! prepared programs are shared (`Arc`), each trial's device state
+//! lives and dies on one worker thread, results come back in trial
+//! order, and a failing trial is captured in
+//! [`FinetuneResult::failures`] instead of aborting the sweep.
+//!
+//! Evaluation draws from a *held-out* pair stream (seed
+//! `trial_seed ^ 0xE7A1`), so the number of eval points never shifts
+//! the training data stream — the same split the MLM [`super::Trainer`]
+//! applies.
 
 use crate::data::{Corpus, CorpusConfig, PairTask};
 use crate::runtime::{Artifact, Backend, DeviceState, Entry, Program};
-use crate::tensor::HostTensor;
+use crate::tensor::{fold_seed_i32, HostTensor};
 use crate::{Error, Result};
+
+use super::engine::{partition_cells, CellFailure, ExperimentEngine};
+
+/// Seed-domain separator for held-out evaluation streams (shared with
+/// the MLM trainer's eval batcher).
+pub(crate) const EVAL_SEED_SALT: u64 = 0xE7A1;
 
 /// Accuracy trajectory of one trial.
 #[derive(Debug, Clone)]
@@ -22,7 +39,10 @@ pub struct TrialCurve {
 #[derive(Debug, Clone)]
 pub struct FinetuneResult {
     pub artifact: String,
+    /// Successful trials, in trial order.
     pub trials: Vec<TrialCurve>,
+    /// Trials whose cell failed (the sweep continued without them).
+    pub failures: Vec<CellFailure>,
 }
 
 impl FinetuneResult {
@@ -44,6 +64,10 @@ impl FinetuneResult {
 
 /// Run `trials` fine-tuning runs of `steps` steps, evaluating accuracy
 /// every `eval_every` steps on held-out pair batches.
+///
+/// Trial `t` uses seed `base_seed + 1000·t`; the full 64-bit seed is
+/// mixed (SplitMix64 fold, [`fold_seed_i32`]) into the i32 ABI scalar,
+/// so base seeds ≥ 2³¹ no longer alias across trials.
 #[allow(clippy::too_many_arguments)]
 pub fn finetune_trials<B: Backend>(
     backend: &B,
@@ -53,6 +77,7 @@ pub fn finetune_trials<B: Backend>(
     eval_every: usize,
     lr: f64,
     base_seed: u64,
+    engine: &ExperimentEngine,
     verbose: bool,
 ) -> Result<FinetuneResult> {
     let m = &artifact.manifest;
@@ -64,18 +89,22 @@ pub fn finetune_trials<B: Backend>(
     let init_prog = backend.prepare(artifact, Entry::Init)?;
     let step_prog = backend.prepare(artifact, Entry::Step)?;
     let eval_prog = backend.prepare(artifact, Entry::Eval)?;
+    let cell_verbose = verbose && engine.jobs() == 1;
 
-    let mut result = FinetuneResult { artifact: m.name.clone(), trials: Vec::new() };
-    for trial in 0..trials {
+    let results = engine.run_cells(trials, |trial| {
         let seed = base_seed + 1000 * trial as u64;
-        let seed_in = backend.upload(&HostTensor::scalar_i32(seed as i32))?;
+        let abi_seed = fold_seed_i32(seed);
+        let seed_in = backend.upload(&HostTensor::scalar_i32(abi_seed))?;
         let outs = init_prog.run(&[&seed_in])?;
         let mut state = DeviceState::from_init(outs, m)?;
-        let corpus = Corpus::new(
-            CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() },
-            seed,
-        );
+        let corpus_cfg = CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() };
+        let corpus = Corpus::new(corpus_cfg.clone(), seed);
         let mut task = PairTask::new(corpus, m.batch_size, m.config.seq_len, seed ^ 0xF00D);
+        // Held-out stream: same distribution, disjoint RNG stream, so
+        // evaluation never consumes (or shifts) training batches.
+        let eval_corpus = Corpus::new(corpus_cfg, seed);
+        let mut eval_task =
+            PairTask::new(eval_corpus, m.batch_size, m.config.seq_len, seed ^ EVAL_SEED_SALT);
         let mut curve = TrialCurve { seed, accuracy: Vec::new() };
 
         for s in 0..steps {
@@ -85,7 +114,7 @@ pub fn finetune_trials<B: Backend>(
                 vals.push(backend.upload(t)?);
             }
             vals.push(backend.upload(&HostTensor::scalar_i32(state.step as i32))?);
-            vals.push(backend.upload(&HostTensor::scalar_i32(seed as i32))?);
+            vals.push(backend.upload(&HostTensor::scalar_i32(abi_seed))?);
             vals.push(backend.upload(&HostTensor::scalar_f32(lr as f32))?);
             let mut refs: Vec<&B::Value> = Vec::with_capacity(state.leaves.len() + 7);
             refs.extend(state.leaves.iter());
@@ -94,7 +123,7 @@ pub fn finetune_trials<B: Backend>(
             drop(refs);
             let loss_leaf = state.absorb_step_output(outs)?;
             let train_loss = backend.scalar(&loss_leaf)?;
-            if verbose && (s + 1) % eval_every == 0 {
+            if cell_verbose && (s + 1) % eval_every == 0 {
                 println!(
                     "[{}] trial {} step {:>4} train loss {:.4}",
                     m.name,
@@ -108,7 +137,7 @@ pub fn finetune_trials<B: Backend>(
                 // average accuracy over a few held-out batches
                 let mut accs = Vec::new();
                 for _ in 0..4 {
-                    let eval_batch = task.next_batch()?;
+                    let eval_batch = eval_task.next_batch()?;
                     let mut evals = Vec::with_capacity(5);
                     for t in eval_batch.tensors() {
                         evals.push(backend.upload(t)?);
@@ -129,7 +158,7 @@ pub fn finetune_trials<B: Backend>(
                 }
                 let acc = accs.iter().sum::<f64>() / accs.len() as f64;
                 curve.accuracy.push(acc);
-                if verbose {
+                if cell_verbose {
                     println!(
                         "[{}] trial {} step {:>4}/{} acc {:.3}",
                         m.name,
@@ -141,9 +170,10 @@ pub fn finetune_trials<B: Backend>(
                 }
             }
         }
-        result.trials.push(curve);
-    }
-    Ok(result)
+        Ok(curve)
+    });
+    let (curves, failures) = partition_cells(results, |trial| format!("trial {trial}"));
+    Ok(FinetuneResult { artifact: m.name.clone(), trials: curves, failures })
 }
 
 #[cfg(test)]
@@ -159,6 +189,7 @@ mod tests {
                 TrialCurve { seed: 1, accuracy: vec![0.5, 0.6] },
                 TrialCurve { seed: 2, accuracy: vec![0.5, 0.9] },
             ],
+            failures: Vec::new(),
         };
         let (lo, med, hi) = r.final_band();
         assert_eq!((lo, med, hi), (0.6, 0.8, 0.9));
@@ -166,7 +197,7 @@ mod tests {
 
     #[test]
     fn empty_band_is_zero() {
-        let r = FinetuneResult { artifact: "x".into(), trials: vec![] };
+        let r = FinetuneResult { artifact: "x".into(), trials: vec![], failures: vec![] };
         assert_eq!(r.final_band(), (0.0, 0.0, 0.0));
     }
 }

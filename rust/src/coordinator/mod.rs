@@ -3,15 +3,20 @@
 //! (sim by default, PJRT under `--features pjrt`).
 //!
 //! * [`Trainer`] — the training loop (schedule, metrics, checkpoints).
+//! * [`engine`] — the concurrent experiment engine: sweeps fan out
+//!   across a scoped-thread pool with deterministic, grid-ordered
+//!   results and per-cell error capture (DESIGN.md §Concurrency).
 //! * [`compare`] — baseline-vs-tempo loss-curve runs (Fig 6a analogue).
 //! * [`finetune`] — MRPC-analogue classification trials (Fig 6b).
 
 mod compare;
+mod engine;
 mod finetune;
 mod metrics;
 mod trainer;
 
 pub use compare::{compare_variants, CompareResult, LossCurve};
+pub use engine::{CellFailure, ExperimentEngine};
 pub use finetune::{finetune_trials, FinetuneResult, TrialCurve};
 pub use metrics::{Metrics, StepRecord};
 pub use trainer::{Trainer, TrainerOptions};

@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 use crate::config::TrainingConfig;
 use crate::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
 use crate::runtime::{Artifact, Backend, DeviceState, Entry, Program, TrainState};
-use crate::tensor::HostTensor;
+use crate::tensor::{fold_seed_i32, HostTensor};
 use crate::{Error, Result};
 
 use super::metrics::{Metrics, StepRecord};
@@ -41,6 +41,10 @@ pub struct Trainer<'b, B: Backend> {
     /// Device-resident hot state (params, m, v) — see runtime::DeviceState.
     state: DeviceState<B::Value>,
     batcher: MlmBatcher,
+    /// Held-out stream for [`Trainer::evaluate`]: a disjoint RNG stream
+    /// over the same corpus distribution, so evaluation never consumes
+    /// training batches — `eval_every` cannot shift the training trace.
+    eval_batcher: MlmBatcher,
     metrics: Metrics,
     /// `Some` when the backend models step latency analytically (sim);
     /// `None` means measure wall clock (pjrt).
@@ -70,6 +74,16 @@ impl<'b, B: Backend> Trainer<'b, B> {
         let state = match &opts.resume_from {
             Some(path) => {
                 let host = TrainState::load(path)?;
+                // Validate up front, mirroring the init path below: a
+                // checkpoint from a different config must fail with a
+                // clear message, not a confusing ABI error many steps in.
+                host.validate_manifest(m).map_err(|e| {
+                    Error::Abi(format!(
+                        "checkpoint {} does not match artifact {}: {e}",
+                        path.display(),
+                        m.name
+                    ))
+                })?;
                 let leaves = host
                     .leaves
                     .iter()
@@ -78,7 +92,10 @@ impl<'b, B: Backend> Trainer<'b, B> {
                 DeviceState { leaves, n_params: host.n_params, step: host.step }
             }
             None => {
-                let seed_in = backend.upload(&HostTensor::scalar_i32(cfg.seed as i32))?;
+                // Full 64-bit seed folded into the i32 ABI scalar, so
+                // seeds 2³² apart cannot alias (same fix as finetune).
+                let seed_in =
+                    backend.upload(&HostTensor::scalar_i32(fold_seed_i32(cfg.seed)))?;
                 let outs = init_prog.run(&[&seed_in])?;
                 let state = DeviceState::from_init(outs, m)?;
                 // Validate the ABI once: init's parameter shapes must
@@ -98,16 +115,23 @@ impl<'b, B: Backend> Trainer<'b, B> {
             }
         };
 
-        let corpus = Corpus::new(
-            CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() },
-            cfg.seed,
-        );
+        let corpus_cfg = CorpusConfig { vocab_size: m.config.vocab_size, ..Default::default() };
+        let corpus = Corpus::new(corpus_cfg.clone(), cfg.seed);
         let batcher = MlmBatcher::new(
             corpus,
             MlmConfig::default(),
             m.batch_size,
             m.config.seq_len,
             cfg.seed ^ 0xDA7A,
+        );
+        // Held-out eval stream: same corpus distribution, disjoint RNG
+        // stream (salt shared with finetune's eval split).
+        let eval_batcher = MlmBatcher::new(
+            Corpus::new(corpus_cfg, cfg.seed),
+            MlmConfig::default(),
+            m.batch_size,
+            m.config.seq_len,
+            cfg.seed ^ super::finetune::EVAL_SEED_SALT,
         );
         let metrics = Metrics::new(m.batch_size);
         let modeled_step_time = backend.modeled_step_time(&artifact);
@@ -120,6 +144,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
             eval_prog,
             state,
             batcher,
+            eval_batcher,
             metrics,
             modeled_step_time,
         })
@@ -153,7 +178,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
             vals.push(self.backend.upload(t)?);
         }
         vals.push(self.backend.upload(&HostTensor::scalar_i32(self.state.step as i32))?);
-        vals.push(self.backend.upload(&HostTensor::scalar_i32(self.cfg.seed as i32))?);
+        vals.push(self.backend.upload(&HostTensor::scalar_i32(fold_seed_i32(self.cfg.seed)))?);
         vals.push(self.backend.upload(&HostTensor::scalar_f32(lr as f32))?);
         Ok(vals)
     }
@@ -180,8 +205,12 @@ impl<'b, B: Backend> Trainer<'b, B> {
     }
 
     /// Evaluate on one held-out batch; returns (loss, metric).
+    ///
+    /// Draws from the dedicated eval stream, never the training
+    /// batcher: the training loss trace is bit-identical whatever
+    /// `eval_every` is set to.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
-        let batch = self.batcher.next_batch()?;
+        let batch = self.eval_batcher.next_batch()?;
         let mut vals = Vec::with_capacity(5);
         for t in batch.tensors() {
             vals.push(self.backend.upload(t)?);

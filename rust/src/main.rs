@@ -17,9 +17,11 @@ use std::path::PathBuf;
 
 use tempo::autotempo::{coarse_pass, fine_search};
 use tempo::config::{Gpu, ModelConfig, Technique, TrainingConfig};
-use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
+use tempo::coordinator::{
+    compare_variants, finetune_trials, CellFailure, ExperimentEngine, Trainer, TrainerOptions,
+};
 use tempo::memmodel::max_batch;
-use tempo::report::{run_experiment, ALL_EXPERIMENTS};
+use tempo::report::{run_experiments, ALL_EXPERIMENTS};
 use tempo::runtime::{ArtifactIndex, Backend, SimBackend};
 use tempo::util::Args;
 
@@ -47,6 +49,14 @@ USAGE:
 Common options:
   --backend sim|pjrt   execution engine (default: sim; pjrt requires the
                        `pjrt` cargo feature and on-disk artifacts)
+  --jobs N|auto        worker threads for compare/finetune/experiments
+                       sweeps (default: auto = one per core; stdout is
+                       bit-identical for every N — see DESIGN.md
+                       §Concurrency)
+  --verbose            per-step progress lines in compare/finetune
+                       sweeps (honored serially, i.e. with --jobs 1;
+                       parallel workers stay quiet so output cannot
+                       interleave)
 
 Artifacts default to ./artifacts (override with --dir / TEMPO_ARTIFACTS);
 when no artifacts/ exists, the builtin sim set is used.";
@@ -68,6 +78,35 @@ fn backend_choice(args: &Args) -> tempo::Result<BackendChoice> {
             if cfg!(feature = "pjrt") { ", pjrt" } else { " — rebuild with --features pjrt for pjrt" }
         ))),
     }
+}
+
+/// Sweep worker pool from `--jobs` (default: one worker per core).
+fn engine_from_args(args: &Args) -> tempo::Result<ExperimentEngine> {
+    match args.get("jobs") {
+        None => Ok(ExperimentEngine::auto()),
+        Some("auto") | Some("0") => Ok(ExperimentEngine::auto()),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| {
+                tempo::Error::Invalid(format!("--jobs expects an integer or 'auto', got '{v}'"))
+            })?;
+            Ok(ExperimentEngine::new(n))
+        }
+    }
+}
+
+/// Report captured per-cell failures; `Err` when any cell failed so the
+/// process exits non-zero *after* the surviving cells were reported.
+fn report_failures(what: &str, failures: &[CellFailure]) -> tempo::Result<()> {
+    if failures.is_empty() {
+        return Ok(());
+    }
+    for f in failures {
+        eprintln!("error: {what} {f}");
+    }
+    Err(tempo::Error::Backend(format!(
+        "{} of the {what} cells failed (the rest completed and were reported above)",
+        failures.len()
+    )))
 }
 
 fn artifacts_dir(args: &Args) -> String {
@@ -202,10 +241,16 @@ fn cmd_compare(args: &Args) -> tempo::Result<()> {
 
 fn compare_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) -> tempo::Result<()> {
     let cfg = training_config(args)?;
+    let engine = engine_from_args(args)?;
     let names_raw = args.get_or("artifacts", "bert_tiny_baseline,bert_tiny_tempo");
     let names: Vec<&str> = names_raw.split(',').collect();
+    // stdout is byte-identical for every --jobs value: worker count goes
+    // to stderr, per-step progress lines stay off (--verbose opts in,
+    // serial only).
+    eprintln!("note: {} sweep worker(s)", engine.jobs());
     println!("comparing {names:?} over {} steps (shared data/masks)", cfg.steps);
-    let result = compare_variants(backend, index, &names, &cfg, true)?;
+    let verbose = args.flag("verbose");
+    let result = compare_variants(backend, index, &names, &cfg, &engine, verbose)?;
     for c in &result.curves {
         println!(
             "  {:<24} endpoint loss {:.4}",
@@ -215,7 +260,7 @@ fn compare_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) -> 
     }
     println!(
         "max endpoint deviation vs {}: {:.3}% (paper Fig 6a: ≤ 0.5%)",
-        names[0],
+        result.curves[0].artifact,
         100.0 * result.max_endpoint_rel_diff
     );
     if let Some(out) = args.get("out") {
@@ -234,7 +279,7 @@ fn compare_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) -> 
         std::fs::write(out, csv)?;
         println!("curves → {out}");
     }
-    Ok(())
+    report_failures("compare", &result.failures)
 }
 
 fn cmd_finetune(args: &Args) -> tempo::Result<()> {
@@ -256,8 +301,21 @@ fn finetune_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) ->
     let lr = args.get_f64("lr", 5e-4)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let artifact = index.open(&artifact_name)?;
+    let engine = engine_from_args(args)?;
+    eprintln!("note: {} sweep worker(s)", engine.jobs());
     println!("fine-tuning {artifact_name}: {trials} trials × {steps} steps");
-    let result = finetune_trials(backend, &artifact, trials, steps, eval_every, lr, seed, true)?;
+    let verbose = args.flag("verbose");
+    let result = finetune_trials(
+        backend,
+        &artifact,
+        trials,
+        steps,
+        eval_every,
+        lr,
+        seed,
+        &engine,
+        verbose,
+    )?;
     let (lo, med, hi) = result.final_band();
     println!("final accuracy band: min {lo:.3} / median {med:.3} / max {hi:.3}");
     if let Some(out) = args.get("out") {
@@ -270,25 +328,42 @@ fn finetune_with<B: Backend>(backend: &B, index: &ArtifactIndex, args: &Args) ->
         std::fs::write(out, csv)?;
         println!("curves → {out}");
     }
-    Ok(())
+    report_failures("finetune", &result.failures)
 }
 
 fn cmd_experiments(args: &Args) -> tempo::Result<()> {
     let quiet = args.flag("quiet");
+    let engine = engine_from_args(args)?;
     let ids: Vec<&str> = if args.flag("all") || args.get("id").is_none() {
         ALL_EXPERIMENTS.iter().map(|e| e.id).collect()
     } else {
         vec![args.get("id").unwrap()]
     };
-    for id in ids {
-        let table = run_experiment(id)?;
-        if !quiet {
-            println!("{}", table.render());
+    // Tables are built concurrently; printing and CSV writing happen
+    // here, serially in id order, so the output is identical for every
+    // --jobs setting.
+    let mut failures = Vec::new();
+    for (index, (id, result)) in run_experiments(&ids, &engine).into_iter().enumerate() {
+        match result {
+            Ok(table) => {
+                if !quiet {
+                    println!("{}", table.render());
+                }
+                // CSV IO errors are isolated like compute errors: the
+                // remaining tables still print and get reported.
+                match table.write_csv(&id) {
+                    Ok(path) => println!("[{id}] → {}", path.display()),
+                    Err(e) => failures.push(CellFailure {
+                        index,
+                        label: id,
+                        error: format!("writing CSV failed: {e}"),
+                    }),
+                }
+            }
+            Err(e) => failures.push(CellFailure { index, label: id, error: e.to_string() }),
         }
-        let path = table.write_csv(id)?;
-        println!("[{id}] → {}", path.display());
     }
-    Ok(())
+    report_failures("experiments", &failures)
 }
 
 fn cmd_max_batch(args: &Args) -> tempo::Result<()> {

@@ -306,7 +306,24 @@ fn exp_gelu_approx() -> Table {
     t
 }
 
-/// Run one experiment by id; prints the table, writes CSV, returns it.
+/// Run several experiments as independent cells on the experiment
+/// engine; results come back in `ids` order regardless of completion
+/// order, and a failing experiment occupies its slot with the error
+/// instead of aborting the rest (table building is pure — printing and
+/// CSV writing stay with the caller, serial and deterministic).
+pub fn run_experiments(
+    ids: &[&str],
+    engine: &crate::coordinator::ExperimentEngine,
+) -> Vec<(String, Result<Table>)> {
+    let results = engine.run_cells(ids.len(), |i| run_experiment(ids[i]));
+    ids.iter()
+        .map(|id| id.to_string())
+        .zip(results)
+        .collect()
+}
+
+/// Run one experiment by id; returns the table (pure — no printing, no
+/// file IO).
 pub fn run_experiment(id: &str) -> Result<Table> {
     let table = match id {
         "table1" => exp_table1(),
@@ -345,6 +362,32 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("fig99").is_err());
+    }
+
+    #[test]
+    fn run_experiments_keeps_id_order_and_captures_failures() {
+        let engine = crate::coordinator::ExperimentEngine::new(4);
+        let ids = ["table1", "fig99", "fig2"];
+        let out = run_experiments(&ids, &engine);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].0, "table1");
+        assert!(out[0].1.is_ok());
+        assert_eq!(out[1].0, "fig99");
+        assert!(out[1].1.is_err());
+        assert_eq!(out[2].0, "fig2");
+        assert!(out[2].1.is_ok());
+    }
+
+    #[test]
+    fn run_experiments_parallel_matches_serial() {
+        let ids: Vec<&str> = ALL_EXPERIMENTS.iter().map(|e| e.id).collect();
+        let serial = run_experiments(&ids, &crate::coordinator::ExperimentEngine::serial());
+        let parallel = run_experiments(&ids, &crate::coordinator::ExperimentEngine::new(4));
+        for ((id_s, t_s), (id_p, t_p)) in serial.iter().zip(&parallel) {
+            assert_eq!(id_s, id_p);
+            let (t_s, t_p) = (t_s.as_ref().unwrap(), t_p.as_ref().unwrap());
+            assert_eq!(t_s.render(), t_p.render(), "{id_s} diverged across --jobs");
+        }
     }
 
     #[test]

@@ -3,5 +3,5 @@
 mod experiments;
 mod table;
 
-pub use experiments::{run_experiment, Experiment, ALL_EXPERIMENTS};
+pub use experiments::{run_experiment, run_experiments, Experiment, ALL_EXPERIMENTS};
 pub use table::Table;

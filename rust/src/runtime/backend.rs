@@ -56,9 +56,18 @@ pub trait Program: Send + Sync {
 }
 
 /// An execution engine for artifact ABIs.
+///
+/// `Send + Sync` is part of the contract: one backend instance is
+/// shared by every worker of the concurrent experiment engine
+/// (`coordinator::ExperimentEngine`), so `prepare`/`upload`/`download`
+/// may be called from several threads at once and implementations must
+/// synchronize any internal mutable state (the PJRT executable cache
+/// does this with a mutex; the sim backend is stateless).
 pub trait Backend: Send + Sync {
     /// Device-resident value (host tensors for sim, literals for PJRT).
-    /// Deliberately unbounded: PJRT literal wrappers are not `Send`.
+    /// Deliberately unbounded: PJRT literal wrappers are not `Send` —
+    /// the experiment engine respects this by creating and dropping
+    /// each sweep cell's values on a single worker thread.
     type Value;
     /// The backend's program type.
     type Prog: Program<Value = Self::Value>;

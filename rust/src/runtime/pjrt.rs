@@ -20,7 +20,10 @@ use crate::{Error, Result};
 // SAFETY: the PJRT C API objects wrapped by the `xla` crate (client,
 // loaded executable) are documented thread-safe; the crate just doesn't
 // mark its raw-pointer wrappers. All mutation on our side is behind a
-// Mutex.
+// Mutex. These impls are what lets one PjrtBackend serve all workers of
+// the concurrent experiment engine; `xla::Literal` (Backend::Value)
+// stays non-Send, which the engine honors by keeping every cell's
+// values on one worker thread.
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 unsafe impl Send for Runtime {}

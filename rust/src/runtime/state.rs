@@ -50,6 +50,43 @@ impl TrainState {
         &self.leaves[..self.n_params]
     }
 
+    /// Check that this state is shaped for `manifest`'s ABI: leaf count
+    /// and every (params, m, v) leaf shape must match the manifest's
+    /// parameter inventory (m and v mirror params exactly). Used by the
+    /// resume path so a checkpoint from a different config fails up
+    /// front with a precise message instead of a late ABI error.
+    pub fn validate_manifest(&self, manifest: &Manifest) -> Result<()> {
+        let n = manifest.n_param_leaves;
+        if self.n_params != n {
+            return Err(Error::Abi(format!(
+                "checkpoint has {} parameter leaves, manifest expects {}",
+                self.n_params, n
+            )));
+        }
+        if self.leaves.len() != 3 * n {
+            return Err(Error::Abi(format!(
+                "checkpoint has {} leaves, manifest expects {} (params ++ m ++ v)",
+                self.leaves.len(),
+                3 * n
+            )));
+        }
+        for (section, offset) in [("params", 0), ("adam m", n), ("adam v", 2 * n)] {
+            for (spec, leaf) in
+                manifest.params.iter().zip(&self.leaves[offset..offset + n])
+            {
+                if spec.shape != leaf.shape() {
+                    return Err(Error::Abi(format!(
+                        "{section} leaf {}: checkpoint shape {:?} != manifest shape {:?}",
+                        spec.name,
+                        leaf.shape(),
+                        spec.shape
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Total parameter count.
     pub fn param_count(&self) -> usize {
         self.params().iter().map(HostTensor::len).sum()
@@ -186,6 +223,37 @@ mod tests {
         assert_eq!(back.step, 42);
         assert_eq!(back.n_params, 1);
         assert_eq!(back.leaves, st.leaves);
+    }
+
+    #[test]
+    fn validate_manifest_accepts_matching_state() {
+        let m = Manifest::parse(crate::runtime::artifact::TEST_MANIFEST).unwrap();
+        let leaf = || HostTensor::f32(vec![2, 3], vec![0.0; 6]).unwrap();
+        let st = TrainState { leaves: vec![leaf(), leaf(), leaf()], n_params: 1, step: 3 };
+        assert!(st.validate_manifest(&m).is_ok());
+    }
+
+    #[test]
+    fn validate_manifest_rejects_mismatches() {
+        let m = Manifest::parse(crate::runtime::artifact::TEST_MANIFEST).unwrap();
+        let leaf = |shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            HostTensor::f32(shape, vec![0.0; n]).unwrap()
+        };
+        // wrong leaf count
+        let st = TrainState { leaves: vec![leaf(vec![2, 3]); 2], n_params: 1, step: 0 };
+        assert!(st.validate_manifest(&m).is_err());
+        // wrong n_params
+        let st = TrainState { leaves: vec![leaf(vec![2, 3]); 3], n_params: 2, step: 0 };
+        assert!(st.validate_manifest(&m).is_err());
+        // wrong shape in the adam-m section
+        let st = TrainState {
+            leaves: vec![leaf(vec![2, 3]), leaf(vec![3, 2]), leaf(vec![2, 3])],
+            n_params: 1,
+            step: 0,
+        };
+        let msg = st.validate_manifest(&m).unwrap_err().to_string();
+        assert!(msg.contains("adam m"), "{msg}");
     }
 
     #[test]

@@ -11,5 +11,5 @@ mod rng;
 pub mod stats;
 
 pub use host::{Dtype, HostTensor};
-pub use rng::Rng;
+pub use rng::{fold_seed_i32, mix64, Rng};
 pub use stats::{mean, stddev, OnlineStats};

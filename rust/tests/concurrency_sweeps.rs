@@ -1,0 +1,151 @@
+//! Determinism contracts of the concurrent experiment engine
+//! (DESIGN.md §Concurrency): a sweep's output is a function of its
+//! grid, never of its schedule — `--jobs 4` and `--jobs 1` must produce
+//! bit-identical results, including when cells fail.
+
+use tempo::config::TrainingConfig;
+use tempo::coordinator::{compare_variants, finetune_trials, ExperimentEngine};
+use tempo::report::{run_experiments, ALL_EXPERIMENTS};
+use tempo::runtime::{ArtifactIndex, SimBackend};
+
+fn cfg(steps: usize) -> TrainingConfig {
+    TrainingConfig {
+        artifact: String::new(),
+        steps,
+        warmup_steps: 2,
+        peak_lr: 2e-3,
+        seed: 7,
+        eval_every: 3,
+        log_every: 1000,
+    }
+}
+
+/// The builtin MLM artifact matrix (every variant at both scales).
+const MATRIX: [&str; 5] = [
+    "bert_tiny_baseline",
+    "bert_tiny_checkpoint",
+    "bert_tiny_tempo",
+    "bert_mini_baseline",
+    "bert_mini_tempo",
+];
+
+fn compare_bits(names: &[&str], jobs: usize) -> (Vec<(String, Vec<u64>)>, Vec<(usize, String)>) {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let result = compare_variants(
+        &backend,
+        &idx,
+        names,
+        &cfg(10),
+        &ExperimentEngine::new(jobs),
+        false,
+    )
+    .unwrap();
+    (
+        result
+            .curves
+            .iter()
+            .map(|c| {
+                (c.artifact.clone(), c.losses.iter().map(|l| l.to_bits()).collect())
+            })
+            .collect(),
+        result.failures.iter().map(|f| (f.index, f.error.clone())).collect(),
+    )
+}
+
+#[test]
+fn compare_parallel_matches_serial_bitwise() {
+    let serial = compare_bits(&MATRIX, 1);
+    let parallel = compare_bits(&MATRIX, 4);
+    assert_eq!(serial, parallel);
+    assert!(serial.1.is_empty());
+    assert_eq!(serial.0.len(), MATRIX.len());
+    // grid order, not completion order
+    for (got, want) in serial.0.iter().zip(MATRIX) {
+        assert_eq!(got.0, want);
+    }
+}
+
+#[test]
+fn compare_failing_cell_is_isolated_and_deterministic() {
+    let names = [
+        "bert_tiny_baseline",
+        "no_such_artifact",
+        "bert_tiny_tempo",
+    ];
+    let serial = compare_bits(&names, 1);
+    let parallel = compare_bits(&names, 4);
+    assert_eq!(serial, parallel, "failing-cell sweep must not depend on --jobs");
+    let (curves, failures) = serial;
+    assert_eq!(curves.len(), 2, "surviving cells must complete");
+    assert_eq!(curves[0].0, "bert_tiny_baseline");
+    assert_eq!(curves[1].0, "bert_tiny_tempo");
+    assert_eq!(failures.len(), 1);
+    assert_eq!(failures[0].0, 1, "failure carries its grid index");
+    assert!(failures[0].1.contains("no_such_artifact"), "{}", failures[0].1);
+    // the surviving curves are the same ones a clean sweep produces
+    let clean = compare_bits(&["bert_tiny_baseline", "bert_tiny_tempo"], 1);
+    assert_eq!(clean.0, curves);
+}
+
+fn finetune_bits(trials: usize, jobs: usize) -> Vec<(u64, Vec<u64>)> {
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("cls_tiny_tempo").unwrap();
+    let result = finetune_trials(
+        &backend,
+        &artifact,
+        trials,
+        16,
+        4,
+        1e-3,
+        11,
+        &ExperimentEngine::new(jobs),
+        false,
+    )
+    .unwrap();
+    assert!(result.failures.is_empty());
+    result
+        .trials
+        .iter()
+        .map(|t| (t.seed, t.accuracy.iter().map(|a| a.to_bits()).collect()))
+        .collect()
+}
+
+#[test]
+fn finetune_parallel_matches_serial_bitwise() {
+    let serial = finetune_bits(5, 1);
+    let parallel = finetune_bits(5, 4);
+    assert_eq!(serial.len(), 5);
+    assert_eq!(serial, parallel);
+    // trial order by seed grid
+    for (i, (seed, _)) in serial.iter().enumerate() {
+        assert_eq!(*seed, 11 + 1000 * i as u64);
+    }
+}
+
+#[test]
+fn experiments_parallel_matches_serial_rendering() {
+    let ids: Vec<&str> = ALL_EXPERIMENTS.iter().map(|e| e.id).collect();
+    let serial = run_experiments(&ids, &ExperimentEngine::serial());
+    let parallel = run_experiments(&ids, &ExperimentEngine::new(4));
+    assert_eq!(serial.len(), parallel.len());
+    for ((id_s, t_s), (id_p, t_p)) in serial.iter().zip(&parallel) {
+        assert_eq!(id_s, id_p);
+        assert_eq!(
+            t_s.as_ref().unwrap().render(),
+            t_p.as_ref().unwrap().render(),
+            "{id_s} diverged across --jobs"
+        );
+        assert_eq!(t_s.as_ref().unwrap().to_csv(), t_p.as_ref().unwrap().to_csv());
+    }
+}
+
+#[test]
+fn compare_is_schedule_free_across_worker_counts() {
+    // 2, 3 and 8 workers over 5 cells exercise uneven work stealing.
+    let reference = compare_bits(&MATRIX, 1);
+    for jobs in [2usize, 3, 8] {
+        assert_eq!(reference, compare_bits(&MATRIX, jobs), "jobs={jobs}");
+    }
+}

@@ -3,7 +3,7 @@
 //! and of the sim backend end-to-end (golden loss traces).
 
 use tempo::config::TrainingConfig;
-use tempo::coordinator::{Trainer, TrainerOptions};
+use tempo::coordinator::{finetune_trials, ExperimentEngine, Trainer, TrainerOptions};
 use tempo::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
 use tempo::runtime::{ArtifactIndex, SimBackend};
 use tempo::tensor::Rng;
@@ -116,6 +116,86 @@ fn sim_trainer_golden_bit_identical_traces() {
     let mut other = cfg.clone();
     other.seed = 4321;
     assert_ne!(a, sim_loss_trace(&other));
+}
+
+#[test]
+fn eval_every_does_not_perturb_training_trace() {
+    // Evaluation draws from a dedicated held-out batcher, so turning it
+    // on (at any cadence) must leave the training loss trace bit-equal.
+    let base = TrainingConfig {
+        artifact: "bert_tiny_baseline".into(),
+        steps: 24,
+        warmup_steps: 2,
+        peak_lr: 1.2e-3,
+        seed: 77,
+        eval_every: 0,
+        log_every: 1000,
+    };
+    let no_eval = sim_loss_trace(&base);
+    for eval_every in [1usize, 3, 7] {
+        let mut cfg = base.clone();
+        cfg.eval_every = eval_every;
+        assert_eq!(
+            no_eval,
+            sim_loss_trace(&cfg),
+            "eval_every={eval_every} shifted the training data stream"
+        );
+    }
+}
+
+#[test]
+fn finetune_base_seeds_do_not_alias_mod_2_32() {
+    // `seed as i32` used to truncate the trial seed into the ABI scalar,
+    // so base seeds 2³² apart produced identical trials. The SplitMix64
+    // fold keeps all 64 bits live.
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let artifact = idx.open("cls_tiny_tempo").unwrap();
+    let engine = ExperimentEngine::serial();
+    let run = |base_seed: u64| {
+        finetune_trials(&backend, &artifact, 2, 12, 6, 1e-3, base_seed, &engine, false)
+            .unwrap()
+            .trials
+            .iter()
+            .map(|t| t.accuracy.iter().map(|a| a.to_bits()).collect::<Vec<u64>>())
+            .collect::<Vec<_>>()
+    };
+    let lo = run(42);
+    let hi = run(42 + (1u64 << 32)); // aliases 42 under `as i32`
+    assert_ne!(lo, hi, "base seeds 2^32 apart must give distinct trials");
+    // …while the same base seed stays bit-identical.
+    assert_eq!(lo, run(42));
+}
+
+#[test]
+fn trainer_init_seeds_do_not_alias_mod_2_32() {
+    // The trainer folds cfg.seed into the i32 ABI scalar the same way
+    // finetune does; init draws only see that scalar, so this isolates
+    // the fold (the data stream already used the full u64).
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let init_state = |seed: u64| {
+        let cfg = TrainingConfig {
+            artifact: "bert_tiny_baseline".into(),
+            steps: 1,
+            seed,
+            ..Default::default()
+        };
+        let t = Trainer::new(
+            &backend,
+            idx.open("bert_tiny_baseline").unwrap(),
+            cfg,
+            TrainerOptions::default(),
+        )
+        .unwrap();
+        t.state().unwrap().leaves
+    };
+    assert_ne!(
+        init_state(9),
+        init_state(9 + (1u64 << 32)),
+        "ABI seeds 2^32 apart must give distinct inits"
+    );
+    assert_eq!(init_state(9), init_state(9));
 }
 
 #[test]

@@ -10,7 +10,9 @@
 use std::sync::OnceLock;
 
 use tempo::config::TrainingConfig;
-use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
+use tempo::coordinator::{
+    compare_variants, finetune_trials, ExperimentEngine, Trainer, TrainerOptions,
+};
 use tempo::runtime::{ArtifactIndex, PjrtBackend, TrainState};
 use tempo::tensor::HostTensor;
 use tempo::util::TempDir;
@@ -143,6 +145,7 @@ fn variants_track_each_other_short_run() {
         &idx,
         &["bert_tiny_baseline", "bert_tiny_tempo", "bert_tiny_checkpoint"],
         &cfg,
+        &ExperimentEngine::serial(),
         false,
     )
     .unwrap();
@@ -163,7 +166,9 @@ fn variants_track_each_other_short_run() {
 fn finetune_learns_above_chance() {
     let Some(idx) = index() else { return };
     let artifact = idx.open("cls_tiny_tempo").unwrap();
-    let result = finetune_trials(backend(), &artifact, 1, 50, 50, 2e-3, 11, false).unwrap();
+    let result =
+        finetune_trials(backend(), &artifact, 1, 50, 50, 2e-3, 11, &ExperimentEngine::serial(), false)
+            .unwrap();
     let (_, med, _) = result.final_band();
     assert!(med > 0.7, "median accuracy {med:.3} not above chance");
 }

@@ -7,7 +7,9 @@
 
 use tempo::autotempo::{coarse_pass, fine_search};
 use tempo::config::{Gpu, ModelConfig, TrainingConfig};
-use tempo::coordinator::{compare_variants, finetune_trials, Trainer, TrainerOptions};
+use tempo::coordinator::{
+    compare_variants, finetune_trials, ExperimentEngine, Trainer, TrainerOptions,
+};
 use tempo::runtime::{ArtifactIndex, SimBackend};
 use tempo::util::TempDir;
 
@@ -98,6 +100,36 @@ fn checkpoint_resume_roundtrip() {
 }
 
 #[test]
+fn resume_from_mismatched_checkpoint_fails_up_front() {
+    // A checkpoint saved for one config must be rejected at Trainer::new
+    // with a clear message, not a confusing ABI error mid-training.
+    let backend = SimBackend::new();
+    let idx = ArtifactIndex::builtin();
+    let dir = TempDir::new().unwrap();
+    let ck = dir.file("tiny.ck");
+
+    let mut t1 = Trainer::new(
+        &backend,
+        idx.open("bert_tiny_tempo").unwrap(),
+        quick_cfg("bert_tiny_tempo", 2),
+        TrainerOptions { checkpoint_out: Some(ck.clone()), ..Default::default() },
+    )
+    .unwrap();
+    t1.run().unwrap();
+
+    let err = Trainer::new(
+        &backend,
+        idx.open("bert_mini_tempo").unwrap(),
+        quick_cfg("bert_mini_tempo", 2),
+        TrainerOptions { resume_from: Some(ck), ..Default::default() },
+    )
+    .err()
+    .expect("mismatched checkpoint must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("does not match artifact bert_mini_tempo"), "{msg}");
+}
+
+#[test]
 fn variants_track_each_other() {
     // Fig 6a miniature: identical config/seed across variants → the sim
     // trajectories coincide (the paper reports ≤0.5% endpoint gap).
@@ -108,9 +140,11 @@ fn variants_track_each_other() {
         &idx,
         &["bert_tiny_baseline", "bert_tiny_tempo", "bert_tiny_checkpoint"],
         &quick_cfg("", 12),
+        &ExperimentEngine::serial(),
         false,
     )
     .unwrap();
+    assert!(result.failures.is_empty());
     assert_eq!(result.curves.len(), 3);
     assert_eq!(result.curves[0].losses.len(), 12);
     assert!(
@@ -140,7 +174,9 @@ fn finetune_learns_above_chance() {
     let backend = SimBackend::new();
     let idx = ArtifactIndex::builtin();
     let artifact = idx.open("cls_tiny_tempo").unwrap();
-    let result = finetune_trials(&backend, &artifact, 1, 50, 50, 2e-3, 11, false).unwrap();
+    let result =
+        finetune_trials(&backend, &artifact, 1, 50, 50, 2e-3, 11, &ExperimentEngine::serial(), false)
+            .unwrap();
     let (_, med, _) = result.final_band();
     assert!(med > 0.7, "median accuracy {med:.3} not above chance");
 }
@@ -150,7 +186,10 @@ fn finetune_band_spans_trials() {
     let backend = SimBackend::new();
     let idx = ArtifactIndex::builtin();
     let artifact = idx.open("cls_tiny_baseline").unwrap();
-    let result = finetune_trials(&backend, &artifact, 3, 20, 10, 1e-3, 5, false).unwrap();
+    let result =
+        finetune_trials(&backend, &artifact, 3, 20, 10, 1e-3, 5, &ExperimentEngine::serial(), false)
+            .unwrap();
+    assert!(result.failures.is_empty());
     assert_eq!(result.trials.len(), 3);
     for t in &result.trials {
         assert_eq!(t.accuracy.len(), 2, "eval every 10 over 20 steps");
