@@ -1,0 +1,78 @@
+//! Graph-IR benches: lowering and sweep-pricing cost.
+//!
+//! The layer-graph refactor routes every capacity/roofline query through
+//! `graph::` block summaries, memoized per (block, dims, lowering,
+//! rewrite set). This bench gives that cost a trajectory: cold lowering
+//! (allocates the op/tensor vectors), the memoized hot path (what sweeps
+//! actually pay), and the end-to-end pricing loops that Table 2 /
+//! Auto-Tempo run thousands of times. CI uploads the JSON as
+//! `BENCH_graph.json`.
+
+use tempo::autotempo::{fine_search, LayerPlan};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
+use tempo::graph;
+use tempo::memmodel::{layer_activation_bytes, max_batch};
+use tempo::perfmodel::step_census;
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let large512 = ModelConfig::bert_large().with_seq_len(512);
+
+    // cold path: full lowering + fold, no cache
+    h.bench("lowering/cold/bert-large-s512", || {
+        let g = graph::encoder_block(&large512);
+        std::hint::black_box(g.summarize(OptimizationSet::full()));
+    });
+
+    // hot path: the memoized Arc lookup every sweep cell pays
+    graph::encoder_summary(&large512, OptimizationSet::full()); // warm
+    h.bench("lowering/memoized/bert-large-s512", || {
+        std::hint::black_box(graph::encoder_summary(&large512, OptimizationSet::full()));
+    });
+
+    // the memmodel fold (graph-backed layer_activation_bytes)
+    h.bench("pricing/layer-bytes/bert-large-s512", || {
+        std::hint::black_box(layer_activation_bytes(&large512, 8, OptimizationSet::full()));
+    });
+
+    // the perfmodel fold (graph-backed step census)
+    h.bench("pricing/step-census/bert-large-s512", || {
+        std::hint::black_box(step_census(&large512, Technique::Tempo, 8));
+    });
+
+    // Table 2-style cell: binary-search max batch (≈40 breakdowns)
+    h.bench("pricing/max-batch-cell/bert-large-s512-2080ti", || {
+        std::hint::black_box(max_batch(&large512, Technique::Tempo, Gpu::Rtx2080Ti));
+    });
+
+    // sweep-shaped loop: 16 subsets × 4 batches — the grid Fig 12 and
+    // the fine search re-price constantly
+    let subsets = OptimizationSet::all_subsets();
+    h.bench("pricing/sweep-16x4/bert-large-s512", || {
+        let mut acc = 0u64;
+        for &opts in &subsets {
+            for batch in [1usize, 4, 8, 16] {
+                acc = acc.wrapping_add(layer_activation_bytes(&large512, batch, opts).total());
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // mixed per-layer plan pricing (Auto-Tempo's inner loop)
+    let plan = LayerPlan {
+        per_layer: (0..large512.layers).map(|l| subsets[l % subsets.len()]).collect(),
+    };
+    h.bench("pricing/mixed-plan/bert-large-s512", || {
+        std::hint::black_box(plan.total_bytes(&large512, 4));
+    });
+
+    // end-to-end fine search (binary search over prefix plans)
+    h.bench("autotempo/fine-search/bert-large-s512-2080ti", || {
+        std::hint::black_box(fine_search(&large512, Gpu::Rtx2080Ti, 3));
+    });
+
+    println!("graph cache holds {} lowered blocks", graph::cache_len());
+    h.write_csv("bench_results/bench_graph.csv").unwrap();
+    h.write_json("bench_results/BENCH_graph.json").unwrap();
+}

@@ -11,9 +11,11 @@
 //!    target batch fits, then keep the smallest sufficient set (less
 //!    surface for the lossy GELU approximation and overheads).
 //!
-//! Profiles come from the analytical memmodel/perfmodel, which is what
-//! a compiler pass would precompute; the same interface could be backed
-//! by measured probes.
+//! Profiles come from the analytical memmodel/perfmodel — folds over
+//! the shared layer-graph IR ([`crate::graph`]), so a plan is literally
+//! a per-layer choice of graph rewrites — which is what a compiler pass
+//! would precompute; the same interface could be backed by measured
+//! probes.
 
 mod search;
 

@@ -1,10 +1,17 @@
 //! Auto-Tempo search policies over the analytical profiles.
+//!
+//! A [`LayerPlan`] is a per-layer *rewrite plan*: which of Tempo's four
+//! graph rewrites each encoder layer applies. Pricing a plan is a fold
+//! over [`crate::graph`] lowered blocks (one memoized summary per
+//! distinct rewrite subset — a 24-layer plan touches at most 16
+//! summaries), so the search never does tensor arithmetic of its own.
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet, Technique};
+use crate::graph;
 use crate::memmodel::{max_batch, ModelFootprint};
 use crate::perfmodel::throughput_at;
 
-/// Per-layer optimization assignment (index = encoder layer).
+/// Per-layer rewrite-plan assignment (index = encoder layer).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
     pub per_layer: Vec<OptimizationSet>,
@@ -22,13 +29,13 @@ impl LayerPlan {
 
     /// Footprint of the plan at batch `b`: the baseline whole-model
     /// breakdown with the encoder slice replaced by the exact sum of
-    /// per-layer inventories under this plan.
+    /// per-layer lowered-block inventories under this plan's rewrites.
     pub fn total_bytes(&self, cfg: &ModelConfig, batch: usize) -> u64 {
         let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).breakdown(batch);
         let encoder: u64 = self
             .per_layer
             .iter()
-            .map(|set| crate::memmodel::layer_activation_bytes(cfg, batch, *set).total())
+            .map(|set| graph::encoder_summary(cfg, *set).total_bytes(batch as u64))
             .sum();
         base.total() - base.encoder_activations + encoder
     }

@@ -70,14 +70,28 @@ impl ModelConfig {
     }
 
     /// Builder: override hidden size keeping H/A = 64 (Fig 7 ablation).
-    pub fn with_hidden(&self, h: usize) -> ModelConfig {
-        ModelConfig {
+    ///
+    /// The paper's rule is H/A = 64 exactly, so `h` must be a positive
+    /// multiple of 64 — anything else would silently produce a
+    /// degenerate config (`heads == 0` for h < 64, or a non-integer
+    /// head_dim that truncates) whose capacity/roofline numbers are
+    /// meaningless.
+    pub fn with_hidden(&self, h: usize) -> crate::Result<ModelConfig> {
+        if h == 0 || h % 64 != 0 {
+            return Err(crate::Error::Invalid(format!(
+                "with_hidden({h}): hidden size must be a positive multiple of 64 \
+                 (the paper keeps H/A = 64; {h} would give heads = {} with head_dim {})",
+                h / 64,
+                if h / 64 > 0 { h / (h / 64) } else { 0 },
+            )));
+        }
+        Ok(ModelConfig {
             hidden: h,
             heads: h / 64,
             intermediate: 4 * h,
             name: format!("{}-h{}", self.name, h),
             ..self.clone()
-        }
+        })
     }
 
     /// Builder: override layer count (Fig 8 uses BERT-LARGE with L=12).
@@ -227,10 +241,25 @@ mod tests {
 
     #[test]
     fn with_hidden_keeps_ratio() {
-        let cfg = ModelConfig::bert_base().with_hidden(2048);
+        let cfg = ModelConfig::bert_base().with_hidden(2048).unwrap();
         assert_eq!(cfg.heads, 32);
         assert_eq!(cfg.intermediate, 8192);
         assert_eq!(cfg.head_dim(), 64);
+    }
+
+    #[test]
+    fn with_hidden_rejects_degenerate_sizes() {
+        let base = ModelConfig::bert_base();
+        // h < 64 would give heads == 0; non-multiples truncate head_dim
+        for bad in [0usize, 32, 100, 96, 1000] {
+            let err = base.with_hidden(bad);
+            assert!(err.is_err(), "h={bad} must be rejected");
+            let msg = format!("{}", err.unwrap_err());
+            assert!(msg.contains("multiple of 64"), "h={bad}: {msg}");
+        }
+        for good in [64usize, 128, 3072] {
+            assert!(base.with_hidden(good).is_ok(), "h={good}");
+        }
     }
 
     #[test]

@@ -75,6 +75,15 @@ impl OptimizationSet {
         Some(s)
     }
 
+    /// Set union: every optimization enabled in either operand.
+    pub fn union(mut self, other: OptimizationSet) -> OptimizationSet {
+        self.inplace_gelu |= other.inplace_gelu;
+        self.inplace_layernorm |= other.inplace_layernorm;
+        self.dropout_recompute |= other.dropout_recompute;
+        self.softmax_outonly |= other.softmax_outonly;
+        self
+    }
+
     /// Number of enabled optimizations.
     pub fn count(&self) -> usize {
         [self.inplace_gelu, self.inplace_layernorm, self.dropout_recompute, self.softmax_outonly]
@@ -140,6 +149,17 @@ mod tests {
         assert_eq!(OptimizationSet::none().count(), 0);
         assert_eq!(OptimizationSet::only("gelu").unwrap().count(), 1);
         assert!(OptimizationSet::only("bogus").is_none());
+    }
+
+    #[test]
+    fn union_is_fieldwise_or() {
+        let g = OptimizationSet::only("gelu").unwrap();
+        let d = OptimizationSet::only("dropout").unwrap();
+        let u = g.union(d);
+        assert!(u.inplace_gelu && u.dropout_recompute);
+        assert_eq!(u.count(), 2);
+        assert_eq!(u.union(u), u);
+        assert_eq!(OptimizationSet::none().union(OptimizationSet::full()), OptimizationSet::full());
     }
 
     #[test]

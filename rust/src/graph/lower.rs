@@ -1,0 +1,745 @@
+//! Lowering rules: `ModelConfig` → typed op graph per block.
+//!
+//! One declarative description of the transformer block (paper Fig 1),
+//! lowered once per (config, lowering, rewrite set) and folded by every
+//! consumer — `memmodel` sums retained bytes, `perfmodel` sums op
+//! censuses, `autotempo` searches per-layer rewrite plans, the sim
+//! backend prices steps through both.
+//!
+//! Architecture differences are **lowering rules**, not inline `if`s:
+//!
+//! * [`Lowering::unfused_attention`] — HF GPT2's unfused attention
+//!   materializes (and autograd retains) the causal-masked scores and
+//!   an fp32 upcast copy; the fused Tempo core doesn't. Default on for
+//!   `ModelKind::Gpt2`, matching the legacy closed form.
+//! * [`Topology::PreLn`] — GPT2's real block order (LN before each
+//!   sub-layer). Re-wires *which* tensors are retained (the block input
+//!   feeds LN1, the residual sum feeds LN2) but the per-class byte
+//!   totals coincide with post-LN under every rewrite subset — asserted
+//!   in the tests below.
+//! * [`Lowering::causal_census`] — decoder-only causal attention
+//!   touches only the lower triangle of every S×S map: the S²-class
+//!   FLOPs and traffic halve. Retained *bytes* do not change (the
+//!   buffers are stored dense). Opt-in: the legacy closed forms (and
+//!   the paper calibration pins) price GPT2 dense.
+//!
+//! All census terms are integer-valued and far below 2⁵³, so f64 folds
+//! are exact in any order — the graph reproduces the legacy closed
+//! forms bit-identically (pinned by `tests/graph_equivalence.rs`).
+
+use crate::config::{ModelConfig, ModelKind, OptimizationSet};
+
+use super::op::{Census, Op, OpKind};
+use super::tensor::{RetainedTensor, RewriteKind, TensorClass};
+
+/// Where the LayerNorms sit relative to the sub-layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// BERT/RoBERTa (and the paper's accounting): residual → LN.
+    PostLn,
+    /// GPT2's real block order: LN → sub-layer → residual.
+    PreLn,
+}
+
+/// Architecture-specific lowering rules for one encoder/decoder block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Lowering {
+    pub topology: Topology,
+    /// HF GPT2 unfused attention: retain 2 extra B·A·S² score copies.
+    pub unfused_attention: bool,
+    /// Halve S²-class FLOPs/traffic (causal lower-triangle work).
+    pub causal_census: bool,
+}
+
+impl Lowering {
+    /// Legacy-compatible defaults: post-LN, dense census; the unfused-
+    /// attention penalty for GPT2 (exactly the old `ModelKind::Gpt2`
+    /// special case, now a lowering rule).
+    pub fn for_model(cfg: &ModelConfig) -> Lowering {
+        Lowering {
+            topology: Topology::PostLn,
+            unfused_attention: cfg.kind == ModelKind::Gpt2,
+            causal_census: false,
+        }
+    }
+
+    /// GPT2 as it really is: pre-LN blocks, unfused HF attention,
+    /// causal (half) S² work.
+    pub fn gpt2_native() -> Lowering {
+        Lowering {
+            topology: Topology::PreLn,
+            unfused_attention: true,
+            causal_census: true,
+        }
+    }
+}
+
+/// A lowered transformer block: ops in dataflow order.
+#[derive(Debug, Clone)]
+pub struct BlockGraph {
+    pub name: &'static str,
+    pub ops: Vec<Op>,
+    pub lowering: Lowering,
+    /// Elements (per batch item) of the block's input tensor — what a
+    /// segment-level checkpoint rewrite stores instead of the inventory.
+    pub input_elems: u64,
+}
+
+/// Folded per-block summary under one rewrite set, at unit batch.
+/// Everything scales linearly in B, so one summary prices any batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockSummary {
+    /// fp32 feature-map elements retained per batch item.
+    pub map_elems: u64,
+    /// 1-byte mask elements retained per batch item.
+    pub mask_elems: u64,
+    /// fp32 per-row statistic elements retained per batch item.
+    pub stat_elems: u64,
+    /// Widest single fp32 map in the block (rewrite-independent: the
+    /// backward working set holds activation *gradients* of the widest
+    /// rows whether or not the forward copy was rewritten away).
+    pub widest_map_elems: u64,
+    /// Block-input elements (checkpoint segment storage).
+    pub input_elems: u64,
+    /// Forward census per batch item.
+    pub fwd: Census,
+    /// Extra backward census per batch item from enabled rewrites.
+    pub overhead: Census,
+}
+
+impl BlockGraph {
+    /// Apply a rewrite set (a pure filter over the superset inventory)
+    /// and fold.
+    pub fn summarize(&self, opts: OptimizationSet) -> BlockSummary {
+        let mut map_elems = 0u64;
+        let mut mask_elems = 0u64;
+        let mut stat_elems = 0u64;
+        let mut widest = 0u64;
+        let mut fwd = Census::ZERO;
+        let mut overhead = Census::ZERO;
+        for op in &self.ops {
+            map_elems += op.retained_elems(TensorClass::F32Map, &opts);
+            mask_elems += op.retained_elems(TensorClass::Mask, &opts);
+            stat_elems += op.retained_elems(TensorClass::RowStat, &opts);
+            for t in &op.retained {
+                if t.class == TensorClass::F32Map {
+                    widest = widest.max(t.elems());
+                }
+            }
+            fwd.add(op.fwd);
+            if let Some((rw, c)) = op.overhead {
+                if rw.enabled(&opts) {
+                    overhead.add(c);
+                }
+            }
+        }
+        BlockSummary {
+            map_elems,
+            mask_elems,
+            stat_elems,
+            widest_map_elems: widest,
+            input_elems: self.input_elems,
+            fwd,
+            overhead,
+        }
+    }
+}
+
+impl BlockSummary {
+    pub fn float_bytes(&self, batch: u64) -> u64 {
+        self.map_elems * batch * 4
+    }
+
+    pub fn mask_bytes(&self, batch: u64) -> u64 {
+        self.mask_elems * batch
+    }
+
+    pub fn stat_bytes(&self, batch: u64) -> u64 {
+        self.stat_elems * batch * 4
+    }
+
+    pub fn total_bytes(&self, batch: u64) -> u64 {
+        self.float_bytes(batch) + self.mask_bytes(batch) + self.stat_bytes(batch)
+    }
+
+    /// Forward census at batch B (exact: integer × integer).
+    pub fn fwd_at(&self, batch: usize) -> Census {
+        self.fwd.scale(batch as f64)
+    }
+
+    /// Rewrite-overhead census at batch B.
+    pub fn overhead_at(&self, batch: usize) -> Census {
+        self.overhead.scale(batch as f64)
+    }
+}
+
+/// Whole-segment checkpointing as a **segment-level** rewrite: instead
+/// of filtering the per-op inventory, the rewrite replaces a block's
+/// entire retained set with its input tensor and pays a re-forward
+/// during backward. The backward live set holds the recomputed block
+/// inventory PLUS the activation gradients flowing through it (≈ the
+/// float volume again) — the doubled transient that caps checkpointing
+/// at long S in Table 2.
+#[derive(Debug, Clone)]
+pub struct SegmentCheckpoint {
+    /// Stored per checkpointed block (elements per batch item).
+    pub stored_elems: u64,
+    /// Baseline inventory bytes per batch item (recompute live set).
+    full_total_per_item: u64,
+    full_float_per_item: u64,
+    /// Re-forward census per batch item (the caller applies the
+    /// recompute-inefficiency factor — a roofline calibration knob).
+    pub recompute_fwd: Census,
+}
+
+impl SegmentCheckpoint {
+    /// Rewrite a block (summarized under `OptimizationSet::none()` —
+    /// checkpointing recomputes the *unoptimized* layer).
+    pub fn of(full: &BlockSummary) -> SegmentCheckpoint {
+        SegmentCheckpoint {
+            stored_elems: full.input_elems,
+            full_total_per_item: full.total_bytes(1),
+            full_float_per_item: full.float_bytes(1),
+            recompute_fwd: full.fwd,
+        }
+    }
+
+    /// Bytes stored per checkpointed block at batch B.
+    pub fn stored_bytes(&self, batch: u64) -> u64 {
+        self.stored_elems * batch * 4
+    }
+
+    /// Transient live set while one block's backward is in flight.
+    pub fn transient_bytes(&self, batch: u64) -> u64 {
+        (self.full_total_per_item + self.full_float_per_item) * batch
+    }
+}
+
+/// Attention core ops, shared by both topologies. `cf` is the causal
+/// census factor (0.5 when only the lower triangle is touched).
+fn attention_core(cfg: &ModelConfig, lowering: Lowering) -> Vec<Op> {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let a = cfg.heads as u64;
+    let ass = a * s * s;
+    let sf = s as f64;
+    let hf = h as f64;
+    let assf = ass as f64;
+    let cf = if lowering.causal_census { 0.5 } else { 1.0 };
+
+    let mut scores_op = Op::new(
+        OpKind::Softmax,
+        "attn.softmax",
+        Census::vector(cf * 3.0 * assf, cf * 12.0 * assf),
+    )
+    .retain(RetainedTensor::removed_by(
+        "attn.scores",
+        vec![a, s, s],
+        TensorClass::F32Map,
+        RewriteKind::SoftmaxOutputOnly,
+    ));
+    if lowering.unfused_attention {
+        // HF GPT2's unfused attention additionally materializes (and
+        // autograd retains) the causal-masked scores and the fp32
+        // upcast copy — both vanish with the output-only softmax, which
+        // implies the fused Tempo core.
+        scores_op = scores_op
+            .retain(RetainedTensor::removed_by(
+                "attn.scores_masked",
+                vec![a, s, s],
+                TensorClass::F32Map,
+                RewriteKind::SoftmaxOutputOnly,
+            ))
+            .retain(RetainedTensor::removed_by(
+                "attn.scores_fp32",
+                vec![a, s, s],
+                TensorClass::F32Map,
+                RewriteKind::SoftmaxOutputOnly,
+            ));
+    }
+    scores_op = scores_op.retain(RetainedTensor::always(
+        "attn.probs",
+        vec![a, s, s],
+        TensorClass::F32Map,
+    ));
+
+    vec![
+        // scores = QKᵀ/√d
+        Op::new(OpKind::Matmul, "attn.scores", Census::matmul(cf * 2.0 * sf * sf * hf)),
+        scores_op,
+        // attention-prob dropout: mask always retained; the dropped map
+        // is discarded and recomputed (one fused multiply in the dV
+        // prologue) under §3.3.
+        Op::new(
+            OpKind::Dropout,
+            "attn.dropout",
+            Census::vector(cf * assf, cf * 8.0 * assf),
+        )
+        .retain(RetainedTensor::always("attn.drop_mask", vec![a, s, s], TensorClass::Mask))
+        .retain(RetainedTensor::removed_by(
+            "attn.probs_dropped",
+            vec![a, s, s],
+            TensorClass::F32Map,
+            RewriteKind::DropoutRecompute,
+        ))
+        .with_overhead(
+            RewriteKind::DropoutRecompute,
+            Census::vector(cf * 2.0 * assf, cf * assf),
+        ),
+        // context = probs·V
+        Op::new(OpKind::Matmul, "attn.pv", Census::matmul(cf * 2.0 * sf * sf * hf))
+            .retain(RetainedTensor::always("attn.context", vec![s, h], TensorClass::F32Map)),
+        // output projection
+        Op::new(OpKind::Matmul, "attn.proj", Census::matmul(2.0 * sf * hf * hf)),
+        // hidden dropout after the projection
+        Op::new(OpKind::Dropout, "attn.proj_dropout", Census::vector(0.0, 4.0 * sf * hf))
+            .retain(RetainedTensor::always("attn.proj_drop_mask", vec![s, h], TensorClass::Mask)),
+    ]
+}
+
+/// QKV projection op; `with_input` additionally retains the block input
+/// (post-LN wiring, where x feeds QKV and the residual directly).
+fn qkv_op(cfg: &ModelConfig, with_input: bool) -> Op {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let sf = s as f64;
+    let hf = h as f64;
+    let mut op = Op::new(OpKind::Matmul, "attn.qkv", Census::matmul(6.0 * sf * hf * hf));
+    if with_input {
+        op = op.retain(RetainedTensor::always("attn.input", vec![s, h], TensorClass::F32Map));
+    }
+    op.retain(RetainedTensor::always("attn.q", vec![s, h], TensorClass::F32Map))
+        .retain(RetainedTensor::always("attn.k", vec![s, h], TensorClass::F32Map))
+        .retain(RetainedTensor::always("attn.v", vec![s, h], TensorClass::F32Map))
+}
+
+/// A LayerNorm op with the §3.2 rewrite wiring. `input_name` documents
+/// *what* the LN input is in this topology (residual sum vs block
+/// input); `retain_output` is false when the output is the next block's
+/// input (counted there).
+fn layernorm_op(
+    cfg: &ModelConfig,
+    name: &'static str,
+    input_name: &'static str,
+    output_name: &'static str,
+    retain_output: bool,
+) -> Op {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let sf = s as f64;
+    let hf = h as f64;
+    let mut op = Op::new(OpKind::LayerNorm, name, Census::vector(2.0 * sf * hf, 8.0 * sf * hf))
+        .retain(RetainedTensor::removed_by(
+            input_name,
+            vec![s, h],
+            TensorClass::F32Map,
+            RewriteKind::InplaceLayerNorm,
+        ))
+        // mean + var retained by stock LN; the in-place variant
+        // reconstructs x̂ from the output and keeps rstd only (App. D)
+        .retain(RetainedTensor::removed_by(
+            "mean_var",
+            vec![2, s],
+            TensorClass::RowStat,
+            RewriteKind::InplaceLayerNorm,
+        ))
+        .retain(RetainedTensor::added_by(
+            "rstd",
+            vec![s],
+            TensorClass::RowStat,
+            RewriteKind::InplaceLayerNorm,
+        ));
+    if retain_output {
+        op = op.retain(RetainedTensor::always(output_name, vec![s, h], TensorClass::F32Map));
+    }
+    op
+}
+
+/// Feed-forward ops (FC1 → GELU → FC2 → dropout), shared by both
+/// topologies.
+fn ffn_ops(cfg: &ModelConfig) -> Vec<Op> {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let i = cfg.intermediate as u64;
+    let sf = s as f64;
+    let hf = h as f64;
+    let if_ = i as f64;
+    vec![
+        Op::new(OpKind::Matmul, "ffn.fc1", Census::matmul(2.0 * sf * hf * if_)),
+        // FC1 output X = GELU input: the §3.1 rewrite swaps the fp32 map
+        // for a 1-byte sign mask and pays the polynomial (deg ≤ 13)
+        // backward over B·S·I.
+        Op::new(OpKind::Gelu, "ffn.gelu", Census::vector(8.0 * sf * if_, 12.0 * sf * if_))
+            .retain(RetainedTensor::removed_by(
+                "ffn.gelu_input",
+                vec![s, i],
+                TensorClass::F32Map,
+                RewriteKind::InplaceGelu,
+            ))
+            .retain(RetainedTensor::added_by(
+                "ffn.gelu_mask",
+                vec![s, i],
+                TensorClass::Mask,
+                RewriteKind::InplaceGelu,
+            ))
+            .retain(RetainedTensor::always("ffn.gelu_output", vec![s, i], TensorClass::F32Map))
+            .with_overhead(
+                RewriteKind::InplaceGelu,
+                Census::vector(26.0 * sf * if_, sf * if_),
+            ),
+        Op::new(OpKind::Matmul, "ffn.fc2", Census::matmul(2.0 * sf * hf * if_)),
+        Op::new(OpKind::Dropout, "ffn.fc2_dropout", Census::vector(0.0, 4.0 * sf * hf))
+            .retain(RetainedTensor::always("ffn.drop_mask", vec![s, h], TensorClass::Mask)),
+    ]
+}
+
+fn residual_op(cfg: &ModelConfig, name: &'static str) -> Op {
+    let sf = cfg.seq_len as f64;
+    let hf = cfg.hidden as f64;
+    Op::new(OpKind::Residual, name, Census::vector(sf * hf, 4.0 * sf * hf))
+}
+
+/// Lower one encoder/decoder block with the model's default rules.
+pub fn encoder_block(cfg: &ModelConfig) -> BlockGraph {
+    encoder_block_with(cfg, Lowering::for_model(cfg))
+}
+
+/// Lower one encoder/decoder block under explicit lowering rules.
+pub fn encoder_block_with(cfg: &ModelConfig, lowering: Lowering) -> BlockGraph {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let mut ops = Vec::new();
+    match lowering.topology {
+        Topology::PostLn => {
+            // x → QKV → attention → proj → dropout → +x → LN1
+            //   → FC1 → GELU → FC2 → dropout → +LN1 → LN2 → next block
+            ops.push(qkv_op(cfg, true));
+            ops.extend(attention_core(cfg, lowering));
+            ops.push(residual_op(cfg, "attn.residual"));
+            // LN1 input is the residual sum; LN1 output feeds FC1.
+            ops.push(layernorm_op(cfg, "ln1", "ln1.input", "ln1.output", true));
+            ops.extend(ffn_ops(cfg));
+            ops.push(residual_op(cfg, "ffn.residual"));
+            // LN2 output is the next block's input — counted there.
+            ops.push(layernorm_op(cfg, "ln2", "ln2.input", "ln2.output", false));
+        }
+        Topology::PreLn => {
+            // x → LN1 → QKV → attention → proj → dropout → +x
+            //   → LN2 → FC1 → GELU → FC2 → dropout → +res → next block
+            // LN1's input IS the block input; its output feeds QKV.
+            ops.push(layernorm_op(cfg, "ln1", "ln1.input", "ln1.output", true));
+            ops.push(qkv_op(cfg, false));
+            ops.extend(attention_core(cfg, lowering));
+            ops.push(residual_op(cfg, "attn.residual"));
+            // LN2 input is the first residual sum; its output feeds FC1.
+            ops.push(layernorm_op(cfg, "ln2", "ln2.input", "ln2.output", true));
+            ops.extend(ffn_ops(cfg));
+            // Block output (second residual sum) is the next block's
+            // input — counted there.
+            ops.push(residual_op(cfg, "ffn.residual"));
+        }
+    }
+    BlockGraph { name: "encoder", ops, lowering, input_elems: s * h }
+}
+
+/// Embedding block (gather-sum → LN → dropout). Census is zero: the
+/// legacy roofline folds embedding traffic into the head estimate, and
+/// the closed form elides the embedding LN's B·S stats as negligible —
+/// the lowering reproduces that accounting exactly.
+pub fn embedding_block(cfg: &ModelConfig) -> BlockGraph {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let ops = vec![
+        Op::new(OpKind::Residual, "emb.sum", Census::ZERO)
+            .retain(RetainedTensor::always("emb.sum_output", vec![s, h], TensorClass::F32Map)),
+        Op::new(OpKind::LayerNorm, "emb.ln", Census::ZERO)
+            .retain(RetainedTensor::removed_by(
+                "emb.ln_input",
+                vec![s, h],
+                TensorClass::F32Map,
+                RewriteKind::InplaceLayerNorm,
+            ))
+            .retain(RetainedTensor::always("emb.ln_output", vec![s, h], TensorClass::F32Map)),
+        Op::new(OpKind::Dropout, "emb.dropout", Census::ZERO)
+            .retain(RetainedTensor::always("emb.drop_mask", vec![s, h], TensorClass::Mask)),
+    ];
+    BlockGraph {
+        name: "embedding",
+        ops,
+        lowering: Lowering::for_model(cfg),
+        input_elems: s * h,
+    }
+}
+
+/// MLM head (transform → GELU → LN → tied decoder → log-softmax). The
+/// B·S·V logits and log-softmax dominate non-encoder memory for real
+/// vocabularies.
+pub fn mlm_head_block(cfg: &ModelConfig) -> BlockGraph {
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let v = cfg.vocab_size as u64;
+    let sf = s as f64;
+    let hf = h as f64;
+    let vf = v as f64;
+    let ops = vec![
+        // transform (H→H); its vector traffic entry also carries the
+        // GELU/LN passes of the head, matching the legacy lumped term.
+        Op::new(
+            OpKind::Matmul,
+            "head.transform",
+            Census {
+                matmul_flops: 2.0 * sf * hf * hf,
+                vector_flops: 0.0,
+                vector_bytes: 24.0 * sf * hf,
+            },
+        )
+        .retain(RetainedTensor::always("head.transform_out", vec![s, h], TensorClass::F32Map)),
+        Op::new(OpKind::Gelu, "head.gelu", Census::ZERO)
+            .retain(RetainedTensor::removed_by(
+                "head.gelu_input",
+                vec![s, h],
+                TensorClass::F32Map,
+                RewriteKind::InplaceGelu,
+            ))
+            .retain(RetainedTensor::added_by(
+                "head.gelu_mask",
+                vec![s, h],
+                TensorClass::Mask,
+                RewriteKind::InplaceGelu,
+            ))
+            .retain(RetainedTensor::always("head.gelu_output", vec![s, h], TensorClass::F32Map)),
+        Op::new(OpKind::LayerNorm, "head.ln", Census::ZERO)
+            .retain(RetainedTensor::removed_by(
+                "head.ln_input",
+                vec![s, h],
+                TensorClass::F32Map,
+                RewriteKind::InplaceLayerNorm,
+            ))
+            .retain(RetainedTensor::always("head.ln_output", vec![s, h], TensorClass::F32Map)),
+        Op::new(OpKind::Matmul, "head.decoder", Census::matmul(2.0 * sf * hf * vf))
+            .retain(RetainedTensor::always("head.logits", vec![s, v], TensorClass::F32Map)),
+        Op::new(OpKind::Softmax, "head.loss", Census::vector(5.0 * sf * vf, 16.0 * sf * vf))
+            .retain(RetainedTensor::always("head.log_softmax", vec![s, v], TensorClass::F32Map)),
+    ];
+    BlockGraph {
+        name: "mlm-head",
+        ops,
+        lowering: Lowering::for_model(cfg),
+        input_elems: s * h,
+    }
+}
+
+/// Classification head (pooled [CLS] → tanh → logits) — tiny; the
+/// legacy closed form sizes all three rows at H.
+pub fn cls_head_block(cfg: &ModelConfig) -> BlockGraph {
+    let h = cfg.hidden as u64;
+    let ops = vec![
+        Op::new(OpKind::Matmul, "cls.pool", Census::ZERO)
+            .retain(RetainedTensor::always("cls.pooled", vec![h], TensorClass::F32Map)),
+        Op::new(OpKind::Gelu, "cls.tanh", Census::ZERO)
+            .retain(RetainedTensor::always("cls.tanh_out", vec![h], TensorClass::F32Map)),
+        Op::new(OpKind::Matmul, "cls.logits", Census::ZERO)
+            .retain(RetainedTensor::always("cls.logits", vec![h], TensorClass::F32Map)),
+    ];
+    BlockGraph {
+        name: "cls-head",
+        ops,
+        lowering: Lowering::for_model(cfg),
+        input_elems: h,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn base() -> ModelConfig {
+        ModelConfig::bert_base().with_seq_len(128)
+    }
+
+    #[test]
+    fn baseline_inventory_matches_fig1_counts() {
+        // 8 B·S·H maps + 3 B·A·S² maps + 2 B·S·I maps, 1 S² mask +
+        // 2 S·H masks, 2 LNs worth of mean/var.
+        let g = encoder_block(&base());
+        let s = g.summarize(OptimizationSet::none());
+        let (sq, h, a, i) = (128u64, 768u64, 12u64, 3072u64);
+        assert_eq!(s.map_elems, 8 * sq * h + 3 * a * sq * sq + 2 * sq * i);
+        assert_eq!(s.mask_elems, a * sq * sq + 2 * sq * h);
+        assert_eq!(s.stat_elems, 2 * 2 * sq);
+        assert_eq!(s.input_elems, sq * h);
+        assert_eq!(s.widest_map_elems, (a * sq * sq).max(sq * i));
+    }
+
+    #[test]
+    fn each_rewrite_touches_its_tensors() {
+        let g = encoder_block(&base());
+        let none = g.summarize(OptimizationSet::none());
+        let (sq, h, a, i) = (128u64, 768u64, 12u64, 3072u64);
+
+        let gelu = g.summarize(OptimizationSet::only("gelu").unwrap());
+        assert_eq!(none.map_elems - gelu.map_elems, sq * i);
+        assert_eq!(gelu.mask_elems - none.mask_elems, sq * i);
+
+        let ln = g.summarize(OptimizationSet::only("layernorm").unwrap());
+        assert_eq!(none.map_elems - ln.map_elems, 2 * sq * h);
+        assert_eq!(ln.stat_elems, 2 * sq); // rstd only, both LNs
+
+        let drop = g.summarize(OptimizationSet::only("dropout").unwrap());
+        assert_eq!(none.map_elems - drop.map_elems, a * sq * sq);
+        assert_eq!(drop.mask_elems, none.mask_elems);
+
+        let sm = g.summarize(OptimizationSet::only("softmax").unwrap());
+        assert_eq!(none.map_elems - sm.map_elems, a * sq * sq);
+    }
+
+    #[test]
+    fn unfused_attention_is_a_lowering_rule_not_a_model_if() {
+        let bert = base();
+        let mut gpt_like = base();
+        gpt_like.kind = crate::config::ModelKind::Gpt2;
+        let (sq, a) = (128u64, 12u64);
+
+        let fused = encoder_block(&bert).summarize(OptimizationSet::none());
+        let unfused = encoder_block(&gpt_like).summarize(OptimizationSet::none());
+        assert_eq!(unfused.map_elems - fused.map_elems, 2 * a * sq * sq);
+
+        // the output-only softmax deletes all three score copies
+        let sm = OptimizationSet::only("softmax").unwrap();
+        assert_eq!(
+            encoder_block(&gpt_like).summarize(sm).map_elems,
+            encoder_block(&bert).summarize(sm).map_elems
+        );
+        // and an explicit lowering overrides the model default
+        let forced = encoder_block_with(
+            &bert,
+            Lowering { unfused_attention: true, ..Lowering::for_model(&bert) },
+        );
+        assert_eq!(forced.summarize(OptimizationSet::none()).map_elems, unfused.map_elems);
+    }
+
+    #[test]
+    fn pre_ln_rewires_but_byte_totals_coincide() {
+        // Pre-LN changes *which* tensors are retained (block input feeds
+        // LN1, residual sum feeds LN2) but the per-class totals match
+        // post-LN under every rewrite subset — both retain 8 B·S·H maps
+        // at baseline and drop the same 2 under in-place LN.
+        let cfg = base();
+        let post = encoder_block_with(
+            &cfg,
+            Lowering { topology: Topology::PostLn, ..Lowering::for_model(&cfg) },
+        );
+        let pre = encoder_block_with(
+            &cfg,
+            Lowering { topology: Topology::PreLn, ..Lowering::for_model(&cfg) },
+        );
+        for opts in OptimizationSet::all_subsets() {
+            let a = post.summarize(opts);
+            let b = pre.summarize(opts);
+            assert_eq!(a.map_elems, b.map_elems, "{opts:?}");
+            assert_eq!(a.mask_elems, b.mask_elems, "{opts:?}");
+            assert_eq!(a.stat_elems, b.stat_elems, "{opts:?}");
+            assert_eq!(a.fwd, b.fwd, "{opts:?}");
+            assert_eq!(a.overhead, b.overhead, "{opts:?}");
+        }
+        // and the tensor *names* really differ: pre-LN has no separate
+        // attn.input (LN1's input is the block input).
+        let names: Vec<&str> =
+            pre.ops.iter().flat_map(|o| o.retained.iter().map(|t| t.name)).collect();
+        assert!(!names.contains(&"attn.input"));
+        assert!(names.contains(&"ln1.input"));
+    }
+
+    #[test]
+    fn causal_census_halves_s2_work_but_not_bytes() {
+        let cfg = base();
+        let dense = encoder_block_with(&cfg, Lowering::for_model(&cfg));
+        let causal = encoder_block_with(
+            &cfg,
+            Lowering { causal_census: true, ..Lowering::for_model(&cfg) },
+        );
+        let d = dense.summarize(OptimizationSet::none());
+        let c = causal.summarize(OptimizationSet::none());
+        // bytes unchanged (dense storage)
+        assert_eq!(d.map_elems, c.map_elems);
+        assert_eq!(d.mask_elems, c.mask_elems);
+        // S²-class census exactly halved: the delta is the S² share
+        let (sq, h, a, i) = (128f64, 768f64, 12f64, 3072f64);
+        let s2_mm = 4.0 * sq * sq * h; // scores + PV
+        let s2_vf = 4.0 * a * sq * sq; // softmax + dropout passes
+        let s2_vb = 20.0 * a * sq * sq;
+        assert_eq!(d.fwd.matmul_flops - c.fwd.matmul_flops, 0.5 * s2_mm);
+        assert_eq!(d.fwd.vector_flops - c.fwd.vector_flops, 0.5 * s2_vf);
+        assert_eq!(d.fwd.vector_bytes - c.fwd.vector_bytes, 0.5 * s2_vb);
+        // non-S² work untouched
+        let shh = 8.0 * sq * h * h + 4.0 * sq * h * i;
+        assert_eq!(c.fwd.matmul_flops, shh + 0.5 * s2_mm);
+        // dropout-recompute overhead halves too (triangle-aware kernel)
+        let full = OptimizationSet::full();
+        let od = dense.summarize(full).overhead;
+        let oc = causal.summarize(full).overhead;
+        assert_eq!(od.vector_flops - oc.vector_flops, 0.5 * 2.0 * a * sq * sq);
+        // GELU overhead (no S² term) identical
+        assert_eq!(od.vector_flops - 2.0 * a * sq * sq, oc.vector_flops - a * sq * sq);
+    }
+
+    #[test]
+    fn gpt2_native_lowering_composes_all_three_rules() {
+        let l = Lowering::gpt2_native();
+        assert_eq!(l.topology, Topology::PreLn);
+        assert!(l.unfused_attention);
+        assert!(l.causal_census);
+        let g = encoder_block_with(&ModelConfig::gpt2(), l);
+        let s = g.summarize(OptimizationSet::none());
+        assert!(s.map_elems > 0 && s.fwd.matmul_flops > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_segment_stores_input_and_doubles_float_transient() {
+        let cfg = base();
+        let full = encoder_block(&cfg).summarize(OptimizationSet::none());
+        let ck = SegmentCheckpoint::of(&full);
+        assert_eq!(ck.stored_elems, 128 * 768);
+        assert_eq!(ck.stored_bytes(4), 4 * 128 * 768 * 4);
+        assert_eq!(ck.transient_bytes(2), full.total_bytes(2) + full.float_bytes(2));
+        assert_eq!(ck.recompute_fwd, full.fwd);
+    }
+
+    #[test]
+    fn superset_tags_are_consistent() {
+        // no tensor is both removed_by and added_by; every added tensor
+        // has a remover-side counterpart story (mask/rstd swaps)
+        for g in [
+            encoder_block(&base()),
+            embedding_block(&base()),
+            mlm_head_block(&base()),
+            cls_head_block(&base()),
+        ] {
+            for op in &g.ops {
+                for t in &op.retained {
+                    assert!(
+                        !(t.removed_by.is_some() && t.added_by.is_some()),
+                        "{}.{} is tagged both ways",
+                        op.name,
+                        t.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn head_and_embedding_inventories_match_legacy_shapes() {
+        let cfg = base();
+        let (sq, h, v) = (128u64, 768u64, 30522u64);
+        let emb = embedding_block(&cfg).summarize(OptimizationSet::none());
+        assert_eq!(emb.map_elems, 3 * sq * h);
+        assert_eq!(emb.mask_elems, sq * h);
+        assert_eq!(emb.stat_elems, 0); // legacy closed form elides these
+        let head = mlm_head_block(&cfg).summarize(OptimizationSet::none());
+        assert_eq!(head.map_elems, 5 * sq * h + 2 * sq * v);
+        let cls = cls_head_block(&cfg).summarize(OptimizationSet::full());
+        assert_eq!(cls.map_elems, 3 * h); // opts don't touch the cls head
+    }
+}

@@ -1,0 +1,169 @@
+//! Memoized block summaries.
+//!
+//! Sweeps re-price thousands of (config, plan, batch) cells — Table 2
+//! alone binary-searches max batch per cell, and Auto-Tempo's fine
+//! search prices every prefix plan. Lowering allocates op/tensor
+//! vectors, so it runs **once** per distinct
+//! `(block kind, dims, lowering, rewrite set)` and the folded
+//! [`BlockSummary`] is cached behind an `Arc`. Batch never enters the
+//! key: every retained tensor and census term scales linearly in B, so
+//! one unit-batch summary prices any batch by multiplication (exact —
+//! all values are integers far below 2⁵³).
+//!
+//! The cache is a process-global `RwLock<HashMap>` shared by all sweep
+//! workers (reads dominate; a miss takes the write lock once). Its size
+//! is bounded by the number of distinct blocks a run prices — sweep
+//! grids, not batches, so a few hundred entries at most.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::config::{ModelConfig, OptimizationSet};
+
+use super::lower::{
+    cls_head_block, embedding_block, encoder_block_with, mlm_head_block, BlockSummary, Lowering,
+    SegmentCheckpoint,
+};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum BlockType {
+    Encoder,
+    Embedding,
+    MlmHead,
+    ClsHead,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct BlockKey {
+    block: BlockType,
+    hidden: usize,
+    heads: usize,
+    seq_len: usize,
+    intermediate: usize,
+    vocab: usize,
+    lowering: Lowering,
+    opts: OptimizationSet,
+}
+
+fn cache() -> &'static RwLock<HashMap<BlockKey, Arc<BlockSummary>>> {
+    static CACHE: OnceLock<RwLock<HashMap<BlockKey, Arc<BlockSummary>>>> = OnceLock::new();
+    CACHE.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+fn key_for(block: BlockType, cfg: &ModelConfig, lowering: Lowering, opts: OptimizationSet) -> BlockKey {
+    BlockKey {
+        block,
+        hidden: cfg.hidden,
+        heads: cfg.heads,
+        seq_len: cfg.seq_len,
+        intermediate: cfg.intermediate,
+        vocab: cfg.vocab_size,
+        lowering,
+        opts,
+    }
+}
+
+fn summary(block: BlockType, cfg: &ModelConfig, lowering: Lowering, opts: OptimizationSet) -> Arc<BlockSummary> {
+    let key = key_for(block, cfg, lowering, opts);
+    if let Some(hit) = cache().read().expect("graph cache poisoned").get(&key) {
+        return Arc::clone(hit);
+    }
+    let graph = match block {
+        BlockType::Encoder => encoder_block_with(cfg, lowering),
+        BlockType::Embedding => embedding_block(cfg),
+        BlockType::MlmHead => mlm_head_block(cfg),
+        BlockType::ClsHead => cls_head_block(cfg),
+    };
+    let built = Arc::new(graph.summarize(opts));
+    let mut w = cache().write().expect("graph cache poisoned");
+    // a racing worker may have built the same key; first insert wins so
+    // every caller shares one Arc
+    Arc::clone(w.entry(key).or_insert(built))
+}
+
+/// Memoized encoder-block summary under the model's default lowering.
+pub fn encoder_summary(cfg: &ModelConfig, opts: OptimizationSet) -> Arc<BlockSummary> {
+    summary(BlockType::Encoder, cfg, Lowering::for_model(cfg), opts)
+}
+
+/// Memoized encoder-block summary under explicit lowering rules.
+pub fn encoder_summary_with(
+    cfg: &ModelConfig,
+    lowering: Lowering,
+    opts: OptimizationSet,
+) -> Arc<BlockSummary> {
+    summary(BlockType::Encoder, cfg, lowering, opts)
+}
+
+/// Memoized embedding-block summary.
+pub fn embedding_summary(cfg: &ModelConfig, opts: OptimizationSet) -> Arc<BlockSummary> {
+    summary(BlockType::Embedding, cfg, Lowering::for_model(cfg), opts)
+}
+
+/// Memoized head summary: MLM (pre-training) or classification
+/// (fine-tuning) head.
+pub fn head_summary(cfg: &ModelConfig, opts: OptimizationSet, mlm: bool) -> Arc<BlockSummary> {
+    let block = if mlm { BlockType::MlmHead } else { BlockType::ClsHead };
+    summary(block, cfg, Lowering::for_model(cfg), opts)
+}
+
+/// Segment-level checkpoint rewrite of the (unoptimized) encoder block.
+pub fn checkpoint_summary(cfg: &ModelConfig) -> SegmentCheckpoint {
+    SegmentCheckpoint::of(&encoder_summary(cfg, OptimizationSet::none()))
+}
+
+/// Number of distinct lowered blocks currently cached (bench/test
+/// introspection).
+pub fn cache_len() -> usize {
+    cache().read().expect("graph cache poisoned").len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn second_lookup_shares_the_same_arc() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let a = encoder_summary(&cfg, OptimizationSet::full());
+        let b = encoder_summary(&cfg, OptimizationSet::full());
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn distinct_opts_and_lowerings_get_distinct_entries() {
+        let cfg = ModelConfig::bert_base();
+        let none = encoder_summary(&cfg, OptimizationSet::none());
+        let full = encoder_summary(&cfg, OptimizationSet::full());
+        assert!(!Arc::ptr_eq(&none, &full));
+        assert!(none.map_elems > full.map_elems);
+        let native = encoder_summary_with(&cfg, Lowering::gpt2_native(), OptimizationSet::none());
+        assert!(native.map_elems != 0);
+        assert!(!Arc::ptr_eq(&none, &native));
+    }
+
+    #[test]
+    fn memoized_summary_equals_fresh_lowering() {
+        let cfg = ModelConfig::bert_mini();
+        for opts in OptimizationSet::all_subsets() {
+            let cached = encoder_summary(&cfg, opts);
+            let fresh = super::super::lower::encoder_block(&cfg).summarize(opts);
+            assert_eq!(*cached, fresh, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn concurrent_lookups_agree() {
+        let cfg = ModelConfig::bert_tiny();
+        let summaries: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(|| encoder_summary(&cfg, OptimizationSet::full())))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for s in &summaries[1..] {
+            assert_eq!(**s, *summaries[0]);
+        }
+    }
+}

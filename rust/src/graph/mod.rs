@@ -1,0 +1,56 @@
+//! Layer-graph IR: one declarative transformer-block description shared
+//! by `memmodel`, `perfmodel`, `autotempo` and the sim backend.
+//!
+//! The paper's whole argument is an inventory of which tensors a
+//! transformer block retains for backward (Fig 1) and what each Tempo
+//! technique does to that inventory (§3.1–3.4). This module is that
+//! inventory, stated **once**:
+//!
+//! * [`lower`] — `ModelConfig` lowers to a typed op graph per block
+//!   (`Matmul`, `Softmax`, `Dropout`, `LayerNorm`, `Gelu`, `Residual`),
+//!   each op annotated with its retained-for-backward tensors (shape ×
+//!   dtype: fp32 map, 1-byte mask, per-row stat) and its forward
+//!   FLOP/traffic census. Architecture differences (GPT2's unfused
+//!   attention, pre-LN topology, causal-attention census) are lowering
+//!   rules, not inline `if`s.
+//! * [`tensor`] — Tempo's four techniques are **graph rewrites**
+//!   ([`RewriteKind`]): in-place GELU swaps a retained fp32 map for a
+//!   mask, output-only softmax deletes the scores tensor, dropout
+//!   recomputation drops a map and adds backward vector work, in-place
+//!   LayerNorm trades mean/var + input for one rstd. Whole-segment
+//!   checkpointing is the block-level rewrite [`SegmentCheckpoint`].
+//! * [`memo`] — summaries are memoized per
+//!   `(block, dims, lowering, rewrite set)` at unit batch (everything
+//!   scales linearly in B), so sweeps that re-price thousands of cells
+//!   fold cached `Arc<BlockSummary>`s instead of re-lowering.
+//! * [`table`] — the Fig 1 reproduction behind `tempo graph`: every
+//!   tensor with shape, dtype, bytes, and which rewrite removed/added
+//!   it.
+//!
+//! Consumers fold, they don't recompute: `memmodel` sums retained
+//! bytes, `perfmodel` sums op censuses, `autotempo` searches per-layer
+//! rewrite plans, and the sim backend prices steps through both. The
+//! folds reproduce the pre-refactor closed forms **bit-identically**
+//! (every census term is an integer far below 2⁵³, so f64 folds are
+//! exact in any order) — pinned by `tests/graph_equivalence.rs` against
+//! the old formulas as golden oracles. Adding an architecture or a
+//! technique is one lowering rule or one rewrite here, priced and
+//! searched everywhere for free — see DESIGN.md §Graph IR.
+
+mod lower;
+mod memo;
+mod op;
+mod table;
+mod tensor;
+
+pub use lower::{
+    cls_head_block, embedding_block, encoder_block, encoder_block_with, mlm_head_block,
+    BlockGraph, BlockSummary, Lowering, SegmentCheckpoint, Topology,
+};
+pub use memo::{
+    cache_len, checkpoint_summary, embedding_summary, encoder_summary, encoder_summary_with,
+    head_summary,
+};
+pub use op::{Census, Op, OpKind};
+pub use table::{block_rows, live_totals, tensor_table, tensor_table_with, ClassTotals, TensorRow};
+pub use tensor::{RetainedTensor, RewriteKind, TensorClass};

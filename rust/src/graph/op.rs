@@ -1,0 +1,155 @@
+//! Typed ops and their forward/backward work censuses.
+
+use crate::config::OptimizationSet;
+
+use super::tensor::{RetainedTensor, RewriteKind, TensorClass};
+
+/// The op vocabulary of a transformer block (paper Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Matmul,
+    Softmax,
+    Dropout,
+    LayerNorm,
+    Gelu,
+    Residual,
+}
+
+impl OpKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Matmul => "matmul",
+            OpKind::Softmax => "softmax",
+            OpKind::Dropout => "dropout",
+            OpKind::LayerNorm => "layernorm",
+            OpKind::Gelu => "gelu",
+            OpKind::Residual => "residual",
+        }
+    }
+}
+
+/// Work census of one op (per batch item).
+///
+/// Every field is an exactly-representable integer in f64 (products of
+/// model dimensions, far below 2⁵³), so folds over ops are exact and
+/// order-independent — this is what lets the graph reproduce the legacy
+/// closed forms *bit-identically* (see `tests/graph_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Census {
+    /// Tensor-core matmul FLOPs.
+    pub matmul_flops: f64,
+    /// CUDA-core elementwise FLOPs.
+    pub vector_flops: f64,
+    /// HBM bytes moved by bandwidth-bound passes.
+    pub vector_bytes: f64,
+}
+
+impl Census {
+    pub const ZERO: Census = Census { matmul_flops: 0.0, vector_flops: 0.0, vector_bytes: 0.0 };
+
+    pub fn matmul(flops: f64) -> Census {
+        Census { matmul_flops: flops, ..Census::ZERO }
+    }
+
+    pub fn vector(flops: f64, bytes: f64) -> Census {
+        Census { matmul_flops: 0.0, vector_flops: flops, vector_bytes: bytes }
+    }
+
+    pub fn add(&mut self, o: Census) {
+        self.matmul_flops += o.matmul_flops;
+        self.vector_flops += o.vector_flops;
+        self.vector_bytes += o.vector_bytes;
+    }
+
+    pub fn scale(mut self, f: f64) -> Census {
+        self.matmul_flops *= f;
+        self.vector_flops *= f;
+        self.vector_bytes *= f;
+        self
+    }
+}
+
+/// One lowered op: kind, the tensors its backward needs (superset form,
+/// see [`RetainedTensor`]), its forward census, and — for rewrites that
+/// trade memory for recompute — the extra backward work the rewrite
+/// adds when enabled.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub kind: OpKind,
+    pub name: &'static str,
+    pub retained: Vec<RetainedTensor>,
+    /// Forward work per batch item (backward ≈ 2× forward is applied at
+    /// the step level, exactly like the legacy closed form).
+    pub fwd: Census,
+    /// Extra backward work when the rewrite is enabled (e.g. the GELU
+    /// polynomial backward, the dropout-recompute multiply).
+    pub overhead: Option<(RewriteKind, Census)>,
+}
+
+impl Op {
+    pub fn new(kind: OpKind, name: &'static str, fwd: Census) -> Op {
+        Op { kind, name, retained: Vec::new(), fwd, overhead: None }
+    }
+
+    pub fn retain(mut self, t: RetainedTensor) -> Op {
+        self.retained.push(t);
+        self
+    }
+
+    pub fn with_overhead(mut self, rw: RewriteKind, c: Census) -> Op {
+        self.overhead = Some((rw, c));
+        self
+    }
+
+    /// Retained elements per batch item of `class` under `opts`.
+    pub fn retained_elems(&self, class: TensorClass, opts: &OptimizationSet) -> u64 {
+        self.retained
+            .iter()
+            .filter(|t| t.class == class && t.live(opts))
+            .map(|t| t.elems())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimizationSet;
+
+    #[test]
+    fn census_fold_is_exact_for_integer_terms() {
+        let mut acc = Census::ZERO;
+        for c in [Census::matmul(6.0e9), Census::vector(3.0, 12.0), Census::vector(1.0, 8.0)] {
+            acc.add(c);
+        }
+        assert_eq!(acc.matmul_flops, 6.0e9);
+        assert_eq!(acc.vector_flops, 4.0);
+        assert_eq!(acc.vector_bytes, 20.0);
+        let s = acc.scale(3.0);
+        assert_eq!(s.vector_bytes, 60.0);
+    }
+
+    #[test]
+    fn op_filters_retained_by_class_and_opts() {
+        let op = Op::new(OpKind::Gelu, "g", Census::ZERO)
+            .retain(RetainedTensor::removed_by(
+                "in",
+                vec![10],
+                TensorClass::F32Map,
+                RewriteKind::InplaceGelu,
+            ))
+            .retain(RetainedTensor::added_by(
+                "mask",
+                vec![10],
+                TensorClass::Mask,
+                RewriteKind::InplaceGelu,
+            ))
+            .retain(RetainedTensor::always("out", vec![10], TensorClass::F32Map));
+        let off = OptimizationSet::none();
+        let on = OptimizationSet::only("gelu").unwrap();
+        assert_eq!(op.retained_elems(TensorClass::F32Map, &off), 20);
+        assert_eq!(op.retained_elems(TensorClass::Mask, &off), 0);
+        assert_eq!(op.retained_elems(TensorClass::F32Map, &on), 10);
+        assert_eq!(op.retained_elems(TensorClass::Mask, &on), 10);
+    }
+}

@@ -1,0 +1,164 @@
+//! Fig 1 reproduction: the per-layer retained-tensor table.
+//!
+//! The IR's debugging surface (`tempo graph <model>`): every tensor the
+//! lowering declares, with its shape, dtype, bytes at the requested
+//! batch, and — when a rewrite set is applied — which rewrite removed
+//! or added it.
+
+use crate::config::{ModelConfig, OptimizationSet};
+
+use super::lower::{encoder_block_with, BlockGraph, Lowering};
+
+/// One row of the retained-tensor table.
+#[derive(Debug, Clone)]
+pub struct TensorRow {
+    /// Owning op, e.g. `attn.softmax`.
+    pub op: &'static str,
+    pub tensor: &'static str,
+    /// `B×…` shape string.
+    pub shape: String,
+    pub dtype: &'static str,
+    /// Bytes this tensor occupies (or would occupy) at the batch.
+    pub bytes: u64,
+    /// Is the tensor actually retained under the applied rewrites?
+    pub live: bool,
+    /// `retained` / `removed by …` / `added by …`.
+    pub status: String,
+}
+
+/// Per-class byte totals of the live tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassTotals {
+    pub float_bytes: u64,
+    pub mask_bytes: u64,
+    pub stat_bytes: u64,
+}
+
+impl ClassTotals {
+    pub fn total(&self) -> u64 {
+        self.float_bytes + self.mask_bytes + self.stat_bytes
+    }
+}
+
+/// Retained-tensor rows of one encoder block under `opts` at `batch`,
+/// using the model's default lowering.
+pub fn tensor_table(cfg: &ModelConfig, opts: OptimizationSet, batch: usize) -> Vec<TensorRow> {
+    tensor_table_with(cfg, Lowering::for_model(cfg), opts, batch)
+}
+
+/// Retained-tensor rows under explicit lowering rules.
+pub fn tensor_table_with(
+    cfg: &ModelConfig,
+    lowering: Lowering,
+    opts: OptimizationSet,
+    batch: usize,
+) -> Vec<TensorRow> {
+    block_rows(&encoder_block_with(cfg, lowering), opts, batch)
+}
+
+/// Rows for an arbitrary lowered block (also used for heads).
+pub fn block_rows(graph: &BlockGraph, opts: OptimizationSet, batch: usize) -> Vec<TensorRow> {
+    let b = batch as u64;
+    let mut rows = Vec::new();
+    for op in &graph.ops {
+        for t in &op.retained {
+            let live = t.live(&opts);
+            // a rewrite-added tensor that the rewrite set never creates
+            // is not part of the story at all — skip it
+            if !live && t.added_by.is_some() {
+                continue;
+            }
+            let status = if let Some(rw) = t.added_by {
+                format!("added by {}", rw.name())
+            } else if let Some(rw) = t.removed_by {
+                if live {
+                    // removable, but the rewrite is off
+                    format!("retained ({} off)", rw.name())
+                } else {
+                    format!("removed by {}", rw.name())
+                }
+            } else {
+                "retained".to_string()
+            };
+            rows.push(TensorRow {
+                op: op.name,
+                tensor: t.name,
+                shape: t.shape_string(),
+                dtype: t.class.dtype_name(),
+                bytes: t.bytes_per_item() * b,
+                live,
+                status,
+            });
+        }
+    }
+    rows
+}
+
+/// Per-class totals over the live rows — the same fold
+/// `memmodel::layer_activation_bytes` performs, so the table and the
+/// capacity model can never disagree.
+pub fn live_totals(graph: &BlockGraph, opts: OptimizationSet, batch: usize) -> ClassTotals {
+    let s = graph.summarize(opts);
+    let b = batch as u64;
+    ClassTotals {
+        float_bytes: s.float_bytes(b),
+        mask_bytes: s.mask_bytes(b),
+        stat_bytes: s.stat_bytes(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::encoder_block;
+    use crate::memmodel::layer_activation_bytes;
+
+    fn base() -> ModelConfig {
+        ModelConfig::bert_base().with_seq_len(128)
+    }
+
+    #[test]
+    fn baseline_table_has_no_rewrite_rows() {
+        let rows = tensor_table(&base(), OptimizationSet::none(), 1);
+        assert!(rows.iter().all(|r| r.live));
+        assert!(rows.iter().any(|r| r.tensor == "attn.scores"));
+        assert!(rows.iter().any(|r| r.tensor == "ffn.gelu_input"));
+        // rewrite-added tensors (mask, rstd) are absent from the
+        // baseline story
+        assert!(!rows.iter().any(|r| r.tensor == "ffn.gelu_mask"));
+        assert!(!rows.iter().any(|r| r.tensor == "rstd"));
+    }
+
+    #[test]
+    fn full_tempo_table_annotates_every_rewrite() {
+        let rows = tensor_table(&base(), OptimizationSet::full(), 4);
+        let status_of = |name: &str| {
+            rows.iter().find(|r| r.tensor == name).map(|r| r.status.clone()).unwrap()
+        };
+        assert_eq!(status_of("attn.scores"), "removed by output-only softmax");
+        assert_eq!(status_of("attn.probs_dropped"), "removed by dropout recompute");
+        assert_eq!(status_of("ffn.gelu_input"), "removed by in-place GELU");
+        assert_eq!(status_of("ffn.gelu_mask"), "added by in-place GELU");
+        assert_eq!(status_of("ln1.input"), "removed by in-place LayerNorm");
+        assert_eq!(status_of("rstd"), "added by in-place LayerNorm");
+        // bytes scale with the requested batch
+        let probs = rows.iter().find(|r| r.tensor == "attn.probs").unwrap();
+        assert_eq!(probs.bytes, 4 * 12 * 128 * 128 * 4);
+        assert_eq!(probs.shape, "B×12×128×128");
+    }
+
+    #[test]
+    fn live_totals_match_the_memmodel_fold() {
+        for opts in OptimizationSet::all_subsets() {
+            for batch in [1usize, 4] {
+                let g = encoder_block(&base());
+                let t = live_totals(&g, opts, batch);
+                let l = layer_activation_bytes(&base(), batch, opts);
+                assert_eq!(t.float_bytes, l.float_bytes, "{opts:?} B={batch}");
+                assert_eq!(t.mask_bytes, l.mask_bytes, "{opts:?} B={batch}");
+                assert_eq!(t.stat_bytes, l.stat_bytes, "{opts:?} B={batch}");
+                assert_eq!(t.total(), l.total());
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Retained-tensor descriptions: what a lowered op stashes for backward.
+//!
+//! Every tensor is declared once, in the *superset* form: the lowering
+//! emits the union of everything any rewrite configuration retains, and
+//! each entry carries which rewrite removes it (`removed_by`) or which
+//! rewrite introduces it (`added_by`). Applying an [`OptimizationSet`]
+//! is then a pure filter — no per-technique arithmetic anywhere.
+
+use crate::config::OptimizationSet;
+
+/// Storage class of a retained tensor (paper §3 accounting, footnote 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorClass {
+    /// fp32 feature map (4 B/element).
+    F32Map,
+    /// 1-byte mask (dropout keep-mask, Tempo's GELU sign mask).
+    Mask,
+    /// Small per-row fp32 statistic (LN mean/var or rstd; 4 B/element).
+    RowStat,
+}
+
+impl TensorClass {
+    pub fn bytes_per_elem(self) -> u64 {
+        match self {
+            TensorClass::F32Map => 4,
+            TensorClass::Mask => 1,
+            TensorClass::RowStat => 4,
+        }
+    }
+
+    pub fn dtype_name(self) -> &'static str {
+        match self {
+            TensorClass::F32Map => "f32",
+            TensorClass::Mask => "u8",
+            TensorClass::RowStat => "f32",
+        }
+    }
+}
+
+/// One of Tempo's four graph rewrites (§3.1–3.4). Whole-segment
+/// checkpointing is a separate, block-level rewrite
+/// ([`super::SegmentCheckpoint`]) — it changes *which blocks* retain
+/// anything, not the per-op inventory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RewriteKind {
+    /// §3.1: swap the retained fp32 GELU input for a 1-byte sign mask.
+    InplaceGelu,
+    /// §3.2: drop LN inputs + mean/var, keep one per-row rstd.
+    InplaceLayerNorm,
+    /// §3.3: drop the dropped-probs map, recompute it in backward.
+    DropoutRecompute,
+    /// §3.4: delete the retained softmax input (scores).
+    SoftmaxOutputOnly,
+}
+
+impl RewriteKind {
+    /// Is this rewrite enabled under `opts`?
+    pub fn enabled(self, opts: &OptimizationSet) -> bool {
+        match self {
+            RewriteKind::InplaceGelu => opts.inplace_gelu,
+            RewriteKind::InplaceLayerNorm => opts.inplace_layernorm,
+            RewriteKind::DropoutRecompute => opts.dropout_recompute,
+            RewriteKind::SoftmaxOutputOnly => opts.softmax_outonly,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RewriteKind::InplaceGelu => "in-place GELU",
+            RewriteKind::InplaceLayerNorm => "in-place LayerNorm",
+            RewriteKind::DropoutRecompute => "dropout recompute",
+            RewriteKind::SoftmaxOutputOnly => "output-only softmax",
+        }
+    }
+}
+
+/// One tensor an op retains for its backward pass.
+///
+/// `dims` are per-batch-item (every retained activation scales linearly
+/// in B — the lowering is done once at unit batch and priced at any
+/// batch by multiplication, which is what makes the summary cache
+/// batch-independent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetainedTensor {
+    pub name: &'static str,
+    /// Per-batch-item dimensions (displayed as `B×d0×d1×…`).
+    pub dims: Vec<u64>,
+    pub class: TensorClass,
+    /// `Some(rw)` — this tensor exists in the baseline inventory and is
+    /// deleted when `rw` is enabled.
+    pub removed_by: Option<RewriteKind>,
+    /// `Some(rw)` — this tensor only exists when `rw` is enabled (e.g.
+    /// the GELU sign mask, the LN rstd).
+    pub added_by: Option<RewriteKind>,
+}
+
+impl RetainedTensor {
+    /// Baseline tensor, retained under every configuration.
+    pub fn always(name: &'static str, dims: Vec<u64>, class: TensorClass) -> Self {
+        RetainedTensor { name, dims, class, removed_by: None, added_by: None }
+    }
+
+    /// Baseline tensor deleted by `rw`.
+    pub fn removed_by(name: &'static str, dims: Vec<u64>, class: TensorClass, rw: RewriteKind) -> Self {
+        RetainedTensor { name, dims, class, removed_by: Some(rw), added_by: None }
+    }
+
+    /// Tensor introduced by `rw` (absent from the baseline inventory).
+    pub fn added_by(name: &'static str, dims: Vec<u64>, class: TensorClass, rw: RewriteKind) -> Self {
+        RetainedTensor { name, dims, class, removed_by: None, added_by: Some(rw) }
+    }
+
+    /// Elements per batch item.
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    /// Bytes per batch item.
+    pub fn bytes_per_item(&self) -> u64 {
+        self.elems() * self.class.bytes_per_elem()
+    }
+
+    /// Is this tensor live (actually retained) under `opts`?
+    pub fn live(&self, opts: &OptimizationSet) -> bool {
+        if let Some(rw) = self.removed_by {
+            if rw.enabled(opts) {
+                return false;
+            }
+        }
+        if let Some(rw) = self.added_by {
+            if !rw.enabled(opts) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Shape rendered with the symbolic batch dimension: `B×A×S×S`.
+    pub fn shape_string(&self) -> String {
+        let mut s = String::from("B");
+        for d in &self.dims {
+            s.push('×');
+            s.push_str(&d.to_string());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_widths_match_paper_accounting() {
+        assert_eq!(TensorClass::F32Map.bytes_per_elem(), 4);
+        assert_eq!(TensorClass::Mask.bytes_per_elem(), 1);
+        assert_eq!(TensorClass::RowStat.bytes_per_elem(), 4);
+    }
+
+    #[test]
+    fn liveness_follows_rewrite_toggles() {
+        let gone = RetainedTensor::removed_by(
+            "x",
+            vec![4, 8],
+            TensorClass::F32Map,
+            RewriteKind::InplaceGelu,
+        );
+        let born = RetainedTensor::added_by(
+            "m",
+            vec![4, 8],
+            TensorClass::Mask,
+            RewriteKind::InplaceGelu,
+        );
+        let off = OptimizationSet::none();
+        let on = OptimizationSet::only("gelu").unwrap();
+        assert!(gone.live(&off) && !gone.live(&on));
+        assert!(!born.live(&off) && born.live(&on));
+        assert_eq!(gone.elems(), 32);
+        assert_eq!(gone.bytes_per_item(), 128);
+        assert_eq!(born.bytes_per_item(), 32);
+    }
+
+    #[test]
+    fn shape_string_prefixes_batch() {
+        let t = RetainedTensor::always("t", vec![12, 512, 512], TensorClass::F32Map);
+        assert_eq!(t.shape_string(), "B×12×512×512");
+    }
+
+    #[test]
+    fn every_rewrite_maps_to_one_toggle() {
+        let all = [
+            RewriteKind::InplaceGelu,
+            RewriteKind::InplaceLayerNorm,
+            RewriteKind::DropoutRecompute,
+            RewriteKind::SoftmaxOutputOnly,
+        ];
+        for rw in all {
+            assert!(!rw.enabled(&OptimizationSet::none()), "{rw:?}");
+            assert!(rw.enabled(&OptimizationSet::full()), "{rw:?}");
+        }
+        // each `only` subset enables exactly one rewrite
+        for which in ["gelu", "layernorm", "dropout", "softmax"] {
+            let opts = OptimizationSet::only(which).unwrap();
+            let n = all.iter().filter(|rw| rw.enabled(&opts)).count();
+            assert_eq!(n, 1, "{which}");
+        }
+    }
+}

@@ -7,7 +7,11 @@
 //! Layer map (see DESIGN.md):
 //! * **L3 (this crate)** — training coordinator, GPU memory-capacity
 //!   simulator, roofline throughput simulator, Auto-Tempo search, report
-//!   harness regenerating every paper table/figure.
+//!   harness regenerating every paper table/figure. All three analytical
+//!   models fold one shared layer-graph IR ([`graph`]): the transformer
+//!   block lowers once to typed ops annotated with retained tensors and
+//!   work censuses, and Tempo's techniques are graph rewrites
+//!   (DESIGN.md §Graph IR).
 //! * **L2/L1 (build-time python)** — JAX BERT with Tempo `custom_vjp`
 //!   layers and Pallas kernels, AOT-lowered to HLO text artifacts.
 //!
@@ -34,6 +38,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod graph;
 pub mod memmodel;
 pub mod perfmodel;
 pub mod report;

@@ -7,6 +7,8 @@
 //!   experiments  — regenerate paper tables/figures (memmodel+perfmodel)
 //!   max-batch    — capacity query for a (model, technique, gpu)
 //!   autotempo    — §5.2 automatic application pass
+//!   graph        — per-layer retained-tensor table (Fig 1) from the
+//!                  layer-graph IR, with rewrite annotations
 //!   artifacts    — list available artifacts (on-disk or builtin sim)
 //!
 //! Execution backend: `--backend sim` (default; deterministic, zero
@@ -44,6 +46,8 @@ USAGE:
   tempo max-batch --model NAME [--seq N] [--gpu 2080ti|v100|a100]
   tempo memory-report --model NAME [--seq N] [--batch N] [--finetune]
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
+  tempo graph [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
+              [--opts gelu,layernorm,dropout,softmax] [--pre-ln] [--causal] [--unfused]
   tempo artifacts [--dir DIR]
 
 Common options:
@@ -141,7 +145,7 @@ fn parse_model(args: &Args) -> tempo::Result<ModelConfig> {
         cfg = cfg.with_seq_len(s.parse().map_err(|_| tempo::Error::Invalid("--seq".into()))?);
     }
     if let Some(h) = args.get("hidden") {
-        cfg = cfg.with_hidden(h.parse().map_err(|_| tempo::Error::Invalid("--hidden".into()))?);
+        cfg = cfg.with_hidden(h.parse().map_err(|_| tempo::Error::Invalid("--hidden".into()))?)?;
     }
     if let Some(l) = args.get("layers") {
         cfg = cfg.with_layers(l.parse().map_err(|_| tempo::Error::Invalid("--layers".into()))?);
@@ -177,6 +181,7 @@ fn run() -> tempo::Result<()> {
         "max-batch" => cmd_max_batch(&args),
         "memory-report" => cmd_memory_report(&args),
         "autotempo" => cmd_autotempo(&args),
+        "graph" => cmd_graph(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             println!("{USAGE}");
@@ -450,6 +455,132 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
                 d.throughput
             );
         }
+    }
+    Ok(())
+}
+
+/// `tempo graph` — the Fig 1 reproduction and the layer-graph IR's
+/// debugging surface: which tensors one encoder layer retains for
+/// backward, and which rewrite removed/added each.
+fn cmd_graph(args: &Args) -> tempo::Result<()> {
+    use tempo::config::OptimizationSet;
+    use tempo::graph::{
+        block_rows, encoder_block_with, live_totals, Lowering, SegmentCheckpoint, Topology,
+    };
+    use tempo::memmodel::layer_activation_bytes;
+    use tempo::report::tensor_rows_table;
+
+    // The in-tree Args parser turns `--causal gpt2` into the option
+    // causal="gpt2" (a bare flag followed by a non-flag token). Recover
+    // both intents: honor the flag AND treat its swallowed value as the
+    // positional model, so flag order never changes the model priced.
+    let mut positional_model = args.positional.get(1).cloned();
+    let mut lowering_flag = |name: &str| -> bool {
+        if args.flag(name) {
+            return true;
+        }
+        if let Some(v) = args.get(name) {
+            if positional_model.is_none() {
+                positional_model = Some(v.to_string());
+            }
+            return true;
+        }
+        false
+    };
+    let want_pre_ln = lowering_flag("pre-ln");
+    let want_causal = lowering_flag("causal");
+    let want_unfused = lowering_flag("unfused");
+
+    // model: positional (`tempo graph gpt2`) or the --model option
+    let mut args = args.clone();
+    if let Some(name) = positional_model {
+        args.options.entry("model".into()).or_insert(name);
+    }
+    let cfg = parse_model(&args)?;
+    let batch = args.get_usize("batch", 1)?;
+
+    // rewrite set: --technique, refined by --opts gelu,layernorm,…
+    let technique = args.get_or("technique", "tempo");
+    let mut opts = match technique.as_str() {
+        "baseline" => OptimizationSet::none(),
+        "tempo" => OptimizationSet::full(),
+        "checkpoint" => OptimizationSet::none(),
+        other => {
+            return Err(tempo::Error::Invalid(format!(
+                "unknown technique '{other}' (baseline|tempo|checkpoint)"
+            )))
+        }
+    };
+    if let Some(list) = args.get("opts") {
+        opts = OptimizationSet::none();
+        for which in list.split(',').filter(|s| !s.is_empty()) {
+            let one = OptimizationSet::only(which).ok_or_else(|| {
+                tempo::Error::Invalid(format!(
+                    "unknown optimization '{which}' (gelu|layernorm|dropout|softmax)"
+                ))
+            })?;
+            opts = opts.union(one);
+        }
+    }
+
+    // lowering rules: model defaults, overridable from the CLI
+    let mut lowering = Lowering::for_model(&cfg);
+    if want_pre_ln {
+        lowering.topology = Topology::PreLn;
+    }
+    if want_causal {
+        lowering.causal_census = true;
+    }
+    if want_unfused {
+        lowering.unfused_attention = true;
+    }
+
+    let graph = encoder_block_with(&cfg, lowering);
+    let t = tensor_rows_table(
+        format!(
+            "Fig 1 — retained tensors, one {} layer @ S={} B={} ({})",
+            cfg.name,
+            cfg.seq_len,
+            batch,
+            opts.label()
+        ),
+        block_rows(&graph, opts, batch),
+    );
+    println!("{}", t.render());
+
+    let totals = live_totals(&graph, opts, batch);
+    println!(
+        "per-layer retained: {:.3} MB fp32 maps + {:.3} MB masks + {:.3} MB stats = {:.3} MB",
+        totals.float_bytes as f64 / 1e6,
+        totals.mask_bytes as f64 / 1e6,
+        totals.stat_bytes as f64 / 1e6,
+        totals.total() as f64 / 1e6,
+    );
+    println!(
+        "encoder total (L={}): {:.3} GB",
+        cfg.layers,
+        cfg.layers as f64 * totals.total() as f64 / 1e9
+    );
+    if lowering == Lowering::for_model(&cfg) {
+        // under the default lowering the table must agree with the
+        // capacity model's fold — say so, as a live cross-check
+        let fold = layer_activation_bytes(&cfg, batch, opts);
+        println!(
+            "memmodel cross-check: {} (fold {} bytes vs table {} bytes)",
+            if fold.total() == totals.total() { "OK" } else { "MISMATCH" },
+            fold.total(),
+            totals.total()
+        );
+    }
+    if technique == "checkpoint" {
+        // same lowering as the table above, so the numbers agree
+        let ck = SegmentCheckpoint::of(&graph.summarize(OptimizationSet::none()));
+        println!(
+            "checkpoint segment rewrite: store only the block input \
+             ({:.3} MB/layer), transient recompute live set {:.3} MB",
+            ck.stored_bytes(batch as u64) as f64 / 1e6,
+            ck.transient_bytes(batch as u64) as f64 / 1e6,
+        );
     }
     Ok(())
 }

@@ -1,6 +1,6 @@
 //! Per-encoder-layer retained-activation inventory (paper Fig 1).
 //!
-//! Every tensor the backward pass needs, per technique. Derived from the
+//! Every tensor the backward pass needs, per technique, for the
 //! HuggingFace BERT encoder layer the paper annotates:
 //!
 //! ```text
@@ -8,10 +8,15 @@
 //!    ─→ PV ─→ proj ─→ dropout ─→ +x → LN1 ─→ FC1(4H) ─→ GELU ─→ FC2
 //!    ─→ dropout ─→ +LN1 → LN2 ─→ next layer
 //! ```
+//!
+//! The inventory itself lives in [`crate::graph`] — one declarative
+//! lowering shared with `perfmodel` and `autotempo`; this module is a
+//! fold over the lowered block's retained tensors. The fold is pinned
+//! bit-identical to the pre-refactor closed form by
+//! `tests/graph_equivalence.rs`.
 
 use crate::config::{ModelConfig, OptimizationSet};
-
-use super::{F32, MASK};
+use crate::graph;
 
 /// Byte totals for one encoder layer at batch B.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,88 +41,12 @@ impl LayerBytes {
 /// (Checkpointing is handled at the model level — it changes *which
 /// layers* retain anything, not the per-layer inventory.)
 pub fn layer_activation_bytes(cfg: &ModelConfig, batch: usize, opts: OptimizationSet) -> LayerBytes {
+    let s = graph::encoder_summary(cfg, opts);
     let b = batch as u64;
-    let s = cfg.seq_len as u64;
-    let h = cfg.hidden as u64;
-    let a = cfg.heads as u64;
-    let i = cfg.intermediate as u64;
-
-    let bsh = b * s * h;
-    let bsi = b * s * i;
-    let bass = b * a * s * s;
-
-    let mut float_elems: u64 = 0;
-    let mut mask_bytes: u64 = 0;
-    let mut stat_bytes: u64 = 0;
-
-    // ---- attention block ---------------------------------------------------
-    // layer input x (consumed by QKV linears and the residual)
-    float_elems += bsh;
-    // Q, K, V projections (inputs to the attention core)
-    float_elems += 3 * bsh;
-    // scores = QKᵀ/√d : the softmax *input*. PyTorch softmax retains it;
-    // the §3.4 output-only softmax discards it.
-    if !opts.softmax_outonly {
-        float_elems += bass;
-        // HF GPT2's unfused attention additionally materializes (and
-        // autograd retains) the causal-masked scores and the fp32
-        // upcast copy — absent once the Tempo fused core is in place.
-        if cfg.kind == crate::config::ModelKind::Gpt2 {
-            float_elems += 2 * bass;
-        }
-    }
-    // softmax output (needed by both softmax bwd and dropout bwd)
-    float_elems += bass;
-    // attention-prob dropout: mask always retained (1 byte)…
-    mask_bytes += bass * MASK;
-    // …and the scaled output (input to the PV matmul) — discarded and
-    // recomputed under §3.3 sub-layer dropout recomputation.
-    if !opts.dropout_recompute {
-        float_elems += bass;
-    }
-    // context = probs·V (input to the output projection)
-    float_elems += bsh;
-    // hidden dropout after the projection: mask + (output folded into the
-    // residual-sum tensor accounted as the LN input below)
-    mask_bytes += bsh * MASK;
-
-    // ---- LayerNorm 1 -------------------------------------------------------
-    // LN input (residual sum). In-place LN reconstructs from the output.
-    if !opts.inplace_layernorm {
-        float_elems += bsh;
-        stat_bytes += 2 * b * s * F32; // mean + var
-    } else {
-        stat_bytes += b * s * F32; // rstd only (App. D)
-    }
-    // LN1 output (input to FC1 — retained by every variant)
-    float_elems += bsh;
-
-    // ---- feed-forward ------------------------------------------------------
-    // FC1 output X = GELU input. In-place GELU replaces it with a mask.
-    if opts.inplace_gelu {
-        mask_bytes += bsi * MASK;
-    } else {
-        float_elems += bsi;
-    }
-    // GELU output Y (input to FC2 — retained by every variant)
-    float_elems += bsi;
-    // hidden dropout after FC2
-    mask_bytes += bsh * MASK;
-
-    // ---- LayerNorm 2 -------------------------------------------------------
-    if !opts.inplace_layernorm {
-        float_elems += bsh;
-        stat_bytes += 2 * b * s * F32;
-    } else {
-        stat_bytes += b * s * F32;
-    }
-    // LN2 output is the next layer's input — counted there (or by the
-    // head for the final layer).
-
     LayerBytes {
-        float_bytes: float_elems * F32,
-        mask_bytes,
-        stat_bytes,
+        float_bytes: s.float_bytes(b),
+        mask_bytes: s.mask_bytes(b),
+        stat_bytes: s.stat_bytes(b),
     }
 }
 
@@ -125,6 +54,7 @@ pub fn layer_activation_bytes(cfg: &ModelConfig, batch: usize, opts: Optimizatio
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::memmodel::{F32, MASK};
 
     fn base_at(s: usize) -> ModelConfig {
         ModelConfig::bert_base().with_seq_len(s)

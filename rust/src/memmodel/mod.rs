@@ -3,7 +3,9 @@
 //! Reproduces the paper's memory results analytically from the Fig 1
 //! tensor inventory: which feature maps each technique retains for the
 //! backward pass, at what width (fp32 activations + 1-byte masks,
-//! matching the paper's accounting in §3 and footnote 3).
+//! matching the paper's accounting in §3 and footnote 3). The inventory
+//! itself is the shared layer-graph IR in [`crate::graph`]; this module
+//! folds lowered blocks into byte totals.
 //!
 //! Outputs:
 //! * Table 2 — max batch per (GPU, seq len, technique)

@@ -1,9 +1,15 @@
 //! Whole-model footprint: model states + activations per technique.
+//!
+//! Every activation number here is a fold over [`crate::graph`] lowered
+//! blocks (encoder, embedding, MLM/classification head); whole-segment
+//! checkpointing is the graph's segment-level rewrite
+//! ([`crate::graph::SegmentCheckpoint`]). No per-technique tensor
+//! arithmetic lives in this module.
 
 use crate::config::{ModelConfig, OptimizationSet, Technique};
+use crate::graph;
 
-use super::layer::layer_activation_bytes;
-use super::{F32, MASK};
+use super::F32;
 
 /// Full memory breakdown at a given batch size (per GPU).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -73,65 +79,44 @@ impl ModelFootprint {
         (p, p, 2 * p)
     }
 
-    /// Embedding-block activations (gather output, LN, dropout mask).
+    /// Embedding-block activations (gather output, LN, dropout mask):
+    /// fold over the lowered embedding block.
     fn embedding_activation_bytes(&self, batch: usize) -> u64 {
-        let b = batch as u64;
-        let s = self.cfg.seq_len as u64;
-        let h = self.cfg.hidden as u64;
-        // summed gather output + LN input (or skipped when in-place) + LN
-        // output + dropout mask
-        let ln_in = if self.opts.inplace_layernorm { 0 } else { b * s * h };
-        (b * s * h + ln_in + b * s * h) * F32 + b * s * h * MASK
+        graph::embedding_summary(&self.cfg, self.opts).total_bytes(batch as u64)
     }
 
-    /// MLM-head activations: transform (H→H) + GELU + LN + the fp32
-    /// logits and their log-softmax, both B·S·V — the head dominates
-    /// non-encoder memory for real vocabularies.
+    /// Head activations — MLM (transform + GELU + LN + the B·S·V logits
+    /// and log-softmax, dominant for real vocabularies) or the tiny
+    /// classification head: fold over the lowered head block.
     fn head_activation_bytes(&self, batch: usize) -> u64 {
-        let b = batch as u64;
-        let s = self.cfg.seq_len as u64;
-        let h = self.cfg.hidden as u64;
-        if !self.mlm_head {
-            // classification: pooled [CLS] (B·H), tanh out, logits — tiny
-            return 3 * b * h * F32;
-        }
-        let v = self.cfg.vocab_size as u64;
-        let gelu_in = if self.opts.inplace_gelu { b * s * h * MASK } else { b * s * h * F32 };
-        let ln_in = if self.opts.inplace_layernorm { 0 } else { b * s * h * F32 };
-        // transform out + gelu out + LN out + logits + log-softmax
-        (3 * b * s * h + 2 * b * s * v) * F32 + gelu_in + ln_in
+        graph::head_summary(&self.cfg, self.opts, self.mlm_head).total_bytes(batch as u64)
     }
 
     /// Full breakdown at batch `b`.
     pub fn breakdown(&self, batch: usize) -> Breakdown {
         let (params, grads, optimizer) = self.state_bytes();
+        let b = batch as u64;
         let layers = self.cfg.layers as u64;
-        let per_layer_full = layer_activation_bytes(&self.cfg, batch, OptimizationSet::none());
-        let per_layer_opt = layer_activation_bytes(&self.cfg, batch, self.opts);
 
         let (encoder, transient) = match self.technique {
             Technique::Checkpoint => {
-                // PyTorch-style: retain only each layer's input, recompute
-                // the layer during backward. The backward live set holds
-                // the recomputed layer inventory PLUS the activation
+                // Segment-level rewrite: retain only each block's input,
+                // recompute the block during backward. The backward live
+                // set holds the recomputed inventory PLUS the activation
                 // gradients flowing through it (≈ the same float volume
                 // again) — this doubled transient is what caps
                 // checkpointing's batch at long S in Table 2.
-                let b = batch as u64;
-                let s = self.cfg.seq_len as u64;
-                let h = self.cfg.hidden as u64;
-                let stored = layers * b * s * h * F32;
-                (stored, per_layer_full.total() + per_layer_full.float_bytes)
+                let ck = graph::checkpoint_summary(&self.cfg);
+                (layers * ck.stored_bytes(b), ck.transient_bytes(b))
             }
             _ => {
-                let stored = layers * per_layer_opt.total();
+                let per_layer = graph::encoder_summary(&self.cfg, self.opts);
+                let stored = layers * per_layer.total_bytes(b);
                 // backward working headroom: activation grads of the
                 // widest rows while one layer's backprop is in flight
-                let b = batch as u64;
-                let s = self.cfg.seq_len as u64;
-                let wide = (b * s * self.cfg.intermediate as u64)
-                    .max(b * self.cfg.heads as u64 * s * s);
-                (stored, 2 * wide * F32)
+                // (rewrite-independent — the gradient rows exist whether
+                // or not the forward copy was rewritten away)
+                (stored, 2 * per_layer.widest_map_elems * b * F32)
             }
         };
 

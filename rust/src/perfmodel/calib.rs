@@ -93,7 +93,7 @@ mod tests {
             (ModelConfig::bert_base(), 3072),
         ] {
             for s in [128usize, 512] {
-                let cfg = base.with_hidden(h).with_seq_len(s);
+                let cfg = base.with_hidden(h).unwrap().with_seq_len(s);
                 let t = throughput_at_max_batch(&cfg, Technique::Tempo, Gpu::A100).seqs_per_s;
                 let b = throughput_at_max_batch(&cfg, Technique::Baseline, Gpu::A100).seqs_per_s;
                 assert!(t > 0.97 * b, "H={h} S={s}: {t:.2} vs {b:.2}");

@@ -5,7 +5,8 @@
 //!
 //! * an op census per encoder layer (matmul FLOPs + vector bytes, fwd
 //!   and bwd, per technique — checkpointing pays a full re-forward,
-//!   Tempo pays the dropout-recompute multiply + polynomial GELU bwd);
+//!   Tempo pays the dropout-recompute multiply + polynomial GELU bwd),
+//!   folded from the shared layer-graph IR in [`crate::graph`];
 //! * a roofline timing model per GPU (tensor-core peak for matmuls,
 //!   HBM bandwidth for elementwise traffic) with a batch-dependent
 //!   utilization saturation curve — small batches under-fill the GPU,

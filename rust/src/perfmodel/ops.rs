@@ -1,6 +1,16 @@
 //! Op census: FLOPs and memory traffic for one training step.
+//!
+//! Per-layer and head work is a fold over [`crate::graph`] lowered
+//! blocks (the same lowering `memmodel` folds for bytes): forward op
+//! censuses sum per block, Tempo's rewrite overheads come from the
+//! rewrites themselves, and checkpointing's re-forward reprices the
+//! lowered block. Only step-level assembly (fwd+bwd factors, optimizer
+//! traffic, the recompute-inefficiency knob) lives here. The fold is
+//! pinned bit-identical to the pre-refactor closed form by
+//! `tests/graph_equivalence.rs`.
 
-use crate::config::{ModelConfig, Technique};
+use crate::config::{ModelConfig, OptimizationSet, Technique};
+use crate::graph;
 
 /// Aggregate work of one training step at batch B.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,64 +46,40 @@ impl OpCensus {
     }
 }
 
-/// Forward-pass census of ONE encoder layer.
+impl From<graph::Census> for OpCensus {
+    fn from(c: graph::Census) -> OpCensus {
+        OpCensus {
+            matmul_flops: c.matmul_flops,
+            vector_flops: c.vector_flops,
+            vector_bytes: c.vector_bytes,
+            state_bytes: 0.0,
+        }
+    }
+}
+
+/// Forward-pass census of ONE encoder layer: fold over the lowered
+/// block's per-op censuses (QKV/scores/PV/proj/FC matmuls, softmax ≈ 3
+/// passes over B·A·S², dropout 2 maps, residuals+LN ≈ 6 passes over
+/// B·S·H, GELU ≈ 3 passes over B·S·I).
 fn layer_forward(cfg: &ModelConfig, batch: usize) -> OpCensus {
-    let b = batch as f64;
-    let s = cfg.seq_len as f64;
-    let h = cfg.hidden as f64;
-    let a = cfg.heads as f64;
-    let i = cfg.intermediate as f64;
-    let bsh = b * s * h;
-    let bass = b * a * s * s;
-
-    // matmuls: QKV (3·2BSH²) + scores (2BS²H) + PV (2BS²H) + proj (2BSH²)
-    //        + FC1/FC2 (2·2BSHI)
-    let matmul = 8.0 * bsh * h + 4.0 * b * s * s * h + 4.0 * bsh * i;
-
-    // vector traffic: each elementwise op reads+writes its maps (fp32).
-    // softmax (~3 passes over BAS²), dropout (2 maps), residuals+LN
-    // (~6 passes over BSH), GELU (2 passes over BSI).
-    let vector_bytes = 4.0 * (5.0 * bass + 8.0 * bsh + 3.0 * (b * s * i));
-    // elementwise FLOPs ≈ a few per element touched
-    let vector_flops = 4.0 * bass + 6.0 * bsh + 8.0 * (b * s * i);
-
-    OpCensus { matmul_flops: matmul, vector_flops, vector_bytes, state_bytes: 0.0 }
+    graph::encoder_summary(cfg, OptimizationSet::none()).fwd_at(batch).into()
 }
 
 /// Extra vector work Tempo's backward adds (the "low overhead" of §3):
-/// the dropout-recompute multiply over the B·A·S² probs and the
-/// polynomial (deg ≤ 13) GELU backward over B·S·I.
+/// the sum of the enabled rewrites' overhead censuses — the
+/// dropout-recompute multiply over the B·A·S² probs and the polynomial
+/// (deg ≤ 13) GELU backward over B·S·I; the in-place LN/softmax
+/// rewrites are traffic-neutral (x̂ re-derived from already-resident
+/// outputs).
 fn tempo_overhead(cfg: &ModelConfig, batch: usize) -> OpCensus {
-    let b = batch as f64;
-    let s = cfg.seq_len as f64;
-    let bass = b * cfg.heads as f64 * s * s;
-    let bsi = b * s * cfg.intermediate as f64;
-    OpCensus {
-        matmul_flops: 0.0,
-        // Horner chain: ~13 FMA/elt on the GELU map; one FMA on probs
-        vector_flops: 26.0 * bsi + 2.0 * bass,
-        // Net NEW traffic only: the dropout recompute fuses into the dV
-        // matmul prologue (read probs 4B + mask 1B instead of the stored
-        // dropped map 4B → +1 B/elt); GELU bwd reads y+mask instead of x
-        // (+1 B/elt); in-place LN re-derives x̂ from y (already resident).
-        vector_bytes: bass * 1.0 + bsi * 1.0,
-        state_bytes: 0.0,
-    }
+    graph::encoder_summary(cfg, OptimizationSet::full()).overhead_at(batch).into()
 }
 
-/// Embedding + MLM-head census (fwd; bwd ≈ 2×, folded by caller).
+/// Embedding + MLM-head census (fwd; bwd ≈ 2×, folded by caller): fold
+/// over the lowered head block (transform 2BSH² + decoder 2BSHV, the
+/// B·S·V loss passes, embedding traffic lumped into the transform row).
 fn head_forward(cfg: &ModelConfig, batch: usize) -> OpCensus {
-    let b = batch as f64;
-    let s = cfg.seq_len as f64;
-    let h = cfg.hidden as f64;
-    let v = cfg.vocab_size as f64;
-    OpCensus {
-        // transform (2BSH²) + decoder (2BSHV)
-        matmul_flops: 2.0 * b * s * h * h + 2.0 * b * s * h * v,
-        vector_flops: 5.0 * b * s * v,
-        vector_bytes: 4.0 * (4.0 * b * s * v + 6.0 * b * s * h),
-        state_bytes: 0.0,
-    }
+    graph::head_summary(cfg, OptimizationSet::none(), true).fwd_at(batch).into()
 }
 
 /// Census of one full training step under `technique`.

@@ -23,6 +23,7 @@ pub struct Experiment {
 /// Every table/figure in the paper's evaluation (+ motivation section).
 pub const ALL_EXPERIMENTS: &[Experiment] = &[
     Experiment { id: "table1", paper_ref: "Table 1", description: "qualitative technique comparison" },
+    Experiment { id: "fig1", paper_ref: "Figure 1", description: "retained-tensor inventory with rewrite annotations" },
     Experiment { id: "fig2", paper_ref: "Figure 2", description: "throughput vs batch size (motivation)" },
     Experiment { id: "fig9", paper_ref: "Figure 9 (App A)", description: "memory breakdown, BERT_BASE B=32 S=128" },
     Experiment { id: "table2", paper_ref: "Table 2", description: "max batch per GPU/seq/technique" },
@@ -59,6 +60,34 @@ fn exp_table1() -> Table {
         t.row(cells);
     }
     t
+}
+
+/// Render retained-tensor rows from the graph IR as a report table
+/// (shared by the `fig1` experiment and `tempo graph`).
+pub fn tensor_rows_table(title: impl Into<String>, rows: Vec<crate::graph::TensorRow>) -> Table {
+    let mut t = Table::new(title, &["op", "tensor", "shape", "dtype", "MB", "status"]);
+    for r in rows {
+        t.row(vec![
+            r.op.to_string(),
+            r.tensor.to_string(),
+            r.shape,
+            r.dtype.to_string(),
+            format!("{:.3}", r.bytes as f64 / 1e6),
+            r.status,
+        ]);
+    }
+    t
+}
+
+fn exp_fig1() -> Table {
+    // Fig 1: the per-layer retained-tensor inventory, from the shared
+    // layer-graph IR, with Tempo's rewrites annotated tensor by tensor.
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let opts = crate::config::OptimizationSet::full();
+    tensor_rows_table(
+        "Fig 1 — retained tensors, one BERT_LARGE layer @ S=512 B=1 (Tempo rewrites annotated)",
+        crate::graph::tensor_table(&cfg, opts, 1),
+    )
 }
 
 fn exp_fig2() -> Table {
@@ -166,11 +195,14 @@ fn exp_fig7() -> Table {
         "Fig 7 — hidden-size ablation (A100), normalized throughput",
         &["config", "seq_len", "technique", "batch", "normalized", "tempo speedup"],
     );
+    let widened = |cfg: ModelConfig, h: usize| {
+        cfg.with_hidden(h).expect("Fig 7 hidden sizes are multiples of 64")
+    };
     let configs = [
         ("BERT_LARGE H=1024", ModelConfig::bert_large()),
-        ("BERT_BASE H=2048", ModelConfig::bert_base().with_hidden(2048)),
-        ("BERT_LARGE H=2048", ModelConfig::bert_large().with_hidden(2048)),
-        ("BERT_BASE H=3072", ModelConfig::bert_base().with_hidden(3072)),
+        ("BERT_BASE H=2048", widened(ModelConfig::bert_base(), 2048)),
+        ("BERT_LARGE H=2048", widened(ModelConfig::bert_large(), 2048)),
+        ("BERT_BASE H=3072", widened(ModelConfig::bert_base(), 3072)),
     ];
     for (name, base_cfg) in configs {
         for s in [128usize, 512] {
@@ -327,6 +359,7 @@ pub fn run_experiments(
 pub fn run_experiment(id: &str) -> Result<Table> {
     let table = match id {
         "table1" => exp_table1(),
+        "fig1" => exp_fig1(),
         "fig2" => exp_fig2(),
         "fig9" => exp_fig9(),
         "table2" => exp_table2(),

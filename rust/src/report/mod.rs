@@ -3,5 +3,7 @@
 mod experiments;
 mod table;
 
-pub use experiments::{run_experiment, run_experiments, Experiment, ALL_EXPERIMENTS};
+pub use experiments::{
+    run_experiment, run_experiments, tensor_rows_table, Experiment, ALL_EXPERIMENTS,
+};
 pub use table::Table;

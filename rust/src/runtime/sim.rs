@@ -22,9 +22,10 @@
 //!
 //! Step *latency* is drawn from the roofline model
 //! ([`crate::perfmodel::step_time`]) and memory from the capacity model
-//! ([`crate::memmodel::ModelFootprint`]), so metrics/throughput numbers
-//! reported by the coordinator match the paper-scale simulators instead
-//! of host wall-clock noise.
+//! ([`crate::memmodel::ModelFootprint`]) — both folds over the shared
+//! layer-graph IR ([`crate::graph`]), memoized per (config, rewrite
+//! set) — so metrics/throughput numbers reported by the coordinator
+//! match the paper-scale simulators instead of host wall-clock noise.
 
 use std::sync::Arc;
 use std::time::Duration;

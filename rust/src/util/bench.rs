@@ -107,6 +107,30 @@ impl BenchHarness {
         &self.results
     }
 
+    /// Write results as a JSON array (machine-readable trajectory
+    /// artifact, e.g. CI's `BENCH_graph.json`).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let rows = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_s", Json::num(r.mean.as_secs_f64())),
+                    ("p50_s", Json::num(r.p50.as_secs_f64())),
+                    ("p95_s", Json::num(r.p95.as_secs_f64())),
+                    ("stddev_s", Json::num(r.stddev.as_secs_f64())),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::arr(rows).pretty())
+    }
+
     /// Write results as CSV (`bench_results/<file>`).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         if let Some(parent) = std::path::Path::new(path).parent() {
@@ -151,6 +175,26 @@ mod tests {
         assert!(r.p50 <= r.p95);
         assert!(r.mean.as_nanos() > 0);
         assert_eq!(h.results().len(), 1);
+    }
+
+    #[test]
+    fn json_emits_parseable_rows() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let mut h = BenchHarness {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            min_time: Duration::ZERO,
+            results: Vec::new(),
+        };
+        h.bench("case", || {});
+        let p = dir.file("out.json");
+        h.write_json(p.to_str().unwrap()).unwrap();
+        let parsed = crate::util::Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        let rows = parsed.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req("name").unwrap().as_str().unwrap(), "case");
+        assert!(rows[0].req("mean_s").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Graph/closed-form equivalence suite.
+//!
+//! The PR that introduced `tempo::graph` replaced three independent
+//! closed-form encodings of the transformer block (memmodel bytes,
+//! perfmodel censuses, autotempo plan pricing) with folds over one
+//! lowered layer graph. This suite pins the refactor: the **pre-refactor
+//! closed forms are copied here verbatim as golden oracles**, and every
+//! graph-derived number must match them *bit-identically* — exact `==`
+//! on u64 bytes and on f64 censuses (every census term is an integer far
+//! below 2⁵³, so f64 arithmetic is exact and fold order cannot perturb
+//! it) — across all presets × batch ∈ {1, 4, 32} × every
+//! `OptimizationSet` subset × every technique.
+
+use tempo::autotempo::LayerPlan;
+use tempo::config::{ModelConfig, ModelKind, OptimizationSet, Technique};
+use tempo::memmodel::{layer_activation_bytes, ModelFootprint};
+use tempo::perfmodel::{step_census, OpCensus};
+
+const F32: u64 = 4;
+const MASK: u64 = 1;
+
+fn presets() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large(),
+        ModelConfig::gpt2(),
+        ModelConfig::roberta_large(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+        // the Fig 7/8 ablation shapes exercise widened/long variants
+        ModelConfig::bert_base().with_hidden(2048).unwrap(),
+        ModelConfig::bert_large().with_layers(12).with_seq_len(1024),
+        ModelConfig::bert_large().with_seq_len(512),
+    ]
+}
+
+const BATCHES: [usize; 3] = [1, 4, 32];
+
+// ---------------------------------------------------------------------------
+// Golden oracle 1: the pre-refactor memmodel::layer closed form.
+// ---------------------------------------------------------------------------
+
+fn oracle_layer_bytes(cfg: &ModelConfig, batch: usize, opts: OptimizationSet) -> (u64, u64, u64) {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let a = cfg.heads as u64;
+    let i = cfg.intermediate as u64;
+    let bsh = b * s * h;
+    let bsi = b * s * i;
+    let bass = b * a * s * s;
+
+    let mut float_elems: u64 = 0;
+    let mut mask_bytes: u64 = 0;
+    let mut stat_bytes: u64 = 0;
+
+    float_elems += bsh; // x
+    float_elems += 3 * bsh; // Q, K, V
+    if !opts.softmax_outonly {
+        float_elems += bass; // scores
+        if cfg.kind == ModelKind::Gpt2 {
+            float_elems += 2 * bass; // HF unfused-attention copies
+        }
+    }
+    float_elems += bass; // softmax output
+    mask_bytes += bass * MASK; // attention dropout mask
+    if !opts.dropout_recompute {
+        float_elems += bass; // dropped probs
+    }
+    float_elems += bsh; // context
+    mask_bytes += bsh * MASK; // hidden dropout mask (proj)
+    if !opts.inplace_layernorm {
+        float_elems += bsh; // LN1 input
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    float_elems += bsh; // LN1 output
+    if opts.inplace_gelu {
+        mask_bytes += bsi * MASK;
+    } else {
+        float_elems += bsi; // GELU input
+    }
+    float_elems += bsi; // GELU output
+    mask_bytes += bsh * MASK; // hidden dropout mask (FC2)
+    if !opts.inplace_layernorm {
+        float_elems += bsh; // LN2 input
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    (float_elems * F32, mask_bytes, stat_bytes)
+}
+
+#[test]
+fn layer_bytes_bit_identical_to_closed_form() {
+    for cfg in presets() {
+        for batch in BATCHES {
+            for opts in OptimizationSet::all_subsets() {
+                let got = layer_activation_bytes(&cfg, batch, opts);
+                let (f, m, st) = oracle_layer_bytes(&cfg, batch, opts);
+                assert_eq!(got.float_bytes, f, "{} B={batch} {opts:?}", cfg.name);
+                assert_eq!(got.mask_bytes, m, "{} B={batch} {opts:?}", cfg.name);
+                assert_eq!(got.stat_bytes, st, "{} B={batch} {opts:?}", cfg.name);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden oracle 2: the pre-refactor perfmodel::ops closed forms.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OracleCensus {
+    matmul_flops: f64,
+    vector_flops: f64,
+    vector_bytes: f64,
+    state_bytes: f64,
+}
+
+impl OracleCensus {
+    fn zero() -> Self {
+        OracleCensus { matmul_flops: 0.0, vector_flops: 0.0, vector_bytes: 0.0, state_bytes: 0.0 }
+    }
+    fn add(&mut self, o: OracleCensus) {
+        self.matmul_flops += o.matmul_flops;
+        self.vector_flops += o.vector_flops;
+        self.vector_bytes += o.vector_bytes;
+        self.state_bytes += o.state_bytes;
+    }
+    fn scale(mut self, f: f64) -> Self {
+        self.matmul_flops *= f;
+        self.vector_flops *= f;
+        self.vector_bytes *= f;
+        self.state_bytes *= f;
+        self
+    }
+}
+
+fn oracle_layer_forward(cfg: &ModelConfig, batch: usize) -> OracleCensus {
+    let b = batch as f64;
+    let s = cfg.seq_len as f64;
+    let h = cfg.hidden as f64;
+    let a = cfg.heads as f64;
+    let i = cfg.intermediate as f64;
+    let bsh = b * s * h;
+    let bass = b * a * s * s;
+    let matmul = 8.0 * bsh * h + 4.0 * b * s * s * h + 4.0 * bsh * i;
+    let vector_bytes = 4.0 * (5.0 * bass + 8.0 * bsh + 3.0 * (b * s * i));
+    let vector_flops = 4.0 * bass + 6.0 * bsh + 8.0 * (b * s * i);
+    OracleCensus { matmul_flops: matmul, vector_flops, vector_bytes, state_bytes: 0.0 }
+}
+
+fn oracle_tempo_overhead(cfg: &ModelConfig, batch: usize) -> OracleCensus {
+    let b = batch as f64;
+    let s = cfg.seq_len as f64;
+    let bass = b * cfg.heads as f64 * s * s;
+    let bsi = b * s * cfg.intermediate as f64;
+    OracleCensus {
+        matmul_flops: 0.0,
+        vector_flops: 26.0 * bsi + 2.0 * bass,
+        vector_bytes: bass * 1.0 + bsi * 1.0,
+        state_bytes: 0.0,
+    }
+}
+
+fn oracle_head_forward(cfg: &ModelConfig, batch: usize) -> OracleCensus {
+    let b = batch as f64;
+    let s = cfg.seq_len as f64;
+    let h = cfg.hidden as f64;
+    let v = cfg.vocab_size as f64;
+    OracleCensus {
+        matmul_flops: 2.0 * b * s * h * h + 2.0 * b * s * h * v,
+        vector_flops: 5.0 * b * s * v,
+        vector_bytes: 4.0 * (4.0 * b * s * v + 6.0 * b * s * h),
+        state_bytes: 0.0,
+    }
+}
+
+fn oracle_step_census(cfg: &ModelConfig, technique: Technique, batch: usize) -> OracleCensus {
+    let layers = cfg.layers as f64;
+    let fwd = oracle_layer_forward(cfg, batch);
+    let mut total = OracleCensus::zero();
+    total.add(fwd.scale(3.0 * layers));
+    total.add(oracle_head_forward(cfg, batch).scale(3.0));
+    match technique {
+        Technique::Checkpoint => {
+            total.add(oracle_layer_forward(cfg, batch).scale(1.25 * layers));
+        }
+        Technique::Tempo => {
+            total.add(oracle_tempo_overhead(cfg, batch).scale(layers));
+        }
+        Technique::Baseline => {}
+    }
+    let p = cfg.param_count() as f64;
+    total.state_bytes += 4.0 * p * 9.0;
+    total
+}
+
+fn assert_census_bits(got: OpCensus, want: OracleCensus, what: &str) {
+    // exact f64 equality on purpose — see the module doc
+    assert_eq!(got.matmul_flops, want.matmul_flops, "{what}: matmul_flops");
+    assert_eq!(got.vector_flops, want.vector_flops, "{what}: vector_flops");
+    assert_eq!(got.vector_bytes, want.vector_bytes, "{what}: vector_bytes");
+    assert_eq!(got.state_bytes, want.state_bytes, "{what}: state_bytes");
+}
+
+#[test]
+fn step_census_bit_identical_to_closed_form() {
+    for cfg in presets() {
+        for batch in BATCHES {
+            for tech in Technique::all() {
+                let got = step_census(&cfg, tech, batch);
+                let want = oracle_step_census(&cfg, tech, batch);
+                assert_census_bits(got, want, &format!("{} {tech:?} B={batch}", cfg.name));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden oracle 3: the pre-refactor memmodel::model embedding / head /
+// checkpoint closed forms, observed through `breakdown()`.
+// ---------------------------------------------------------------------------
+
+fn oracle_embedding_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize) -> u64 {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h };
+    (b * s * h + ln_in + b * s * h) * F32 + b * s * h * MASK
+}
+
+fn oracle_head_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize, mlm: bool) -> u64 {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    if !mlm {
+        return 3 * b * h * F32;
+    }
+    let v = cfg.vocab_size as u64;
+    let gelu_in = if opts.inplace_gelu { b * s * h * MASK } else { b * s * h * F32 };
+    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h * F32 };
+    (3 * b * s * h + 2 * b * s * v) * F32 + gelu_in + ln_in
+}
+
+#[test]
+fn breakdown_other_activations_bit_identical_to_closed_form() {
+    for cfg in presets() {
+        for batch in BATCHES {
+            for opts in OptimizationSet::all_subsets() {
+                for mlm in [true, false] {
+                    let mut fp = ModelFootprint::with_opts(cfg.clone(), opts);
+                    if !mlm {
+                        fp = fp.finetune();
+                    }
+                    let bd = fp.breakdown(batch);
+                    let want = oracle_embedding_bytes(&cfg, opts, batch)
+                        + oracle_head_bytes(&cfg, opts, batch, mlm);
+                    assert_eq!(
+                        bd.other_activations, want,
+                        "{} B={batch} mlm={mlm} {opts:?}",
+                        cfg.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn breakdown_encoder_and_transient_bit_identical_to_closed_form() {
+    for cfg in presets() {
+        for batch in BATCHES {
+            // Baseline / Tempo / arbitrary subsets: encoder = L × layer
+            // fold; transient = 2 × widest activation row.
+            for opts in OptimizationSet::all_subsets() {
+                let bd = ModelFootprint::with_opts(cfg.clone(), opts).breakdown(batch);
+                let (f, m, st) = oracle_layer_bytes(&cfg, batch, opts);
+                assert_eq!(
+                    bd.encoder_activations,
+                    cfg.layers as u64 * (f + m + st),
+                    "{} B={batch} {opts:?}",
+                    cfg.name
+                );
+                let b = batch as u64;
+                let s = cfg.seq_len as u64;
+                let wide =
+                    (b * s * cfg.intermediate as u64).max(b * cfg.heads as u64 * s * s);
+                assert_eq!(bd.transient, 2 * wide * F32, "{} B={batch}", cfg.name);
+            }
+            // Checkpoint: the segment-level rewrite stores only block
+            // inputs; transient = full inventory + its float volume.
+            let bd = ModelFootprint::new(cfg.clone(), Technique::Checkpoint).breakdown(batch);
+            let b = batch as u64;
+            let s = cfg.seq_len as u64;
+            let h = cfg.hidden as u64;
+            assert_eq!(bd.encoder_activations, cfg.layers as u64 * b * s * h * F32, "{}", cfg.name);
+            let (f, m, st) = oracle_layer_bytes(&cfg, batch, OptimizationSet::none());
+            assert_eq!(bd.transient, (f + m + st) + f, "{} B={batch}", cfg.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Auto-Tempo plan pricing: the graph-backed fold must equal the sum of
+// closed-form per-layer inventories for mixed plans.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plan_bytes_bit_identical_for_mixed_plans() {
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let subsets = OptimizationSet::all_subsets();
+    // a deliberately non-uniform plan cycling through all 16 subsets
+    let per_layer: Vec<OptimizationSet> =
+        (0..cfg.layers).map(|l| subsets[l % subsets.len()]).collect();
+    let plan = LayerPlan { per_layer: per_layer.clone() };
+    for batch in BATCHES {
+        let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).breakdown(batch);
+        let oracle_encoder: u64 = per_layer
+            .iter()
+            .map(|o| {
+                let (f, m, s) = oracle_layer_bytes(&cfg, batch, *o);
+                f + m + s
+            })
+            .sum();
+        assert_eq!(
+            plan.total_bytes(&cfg, batch),
+            base.total() - base.encoder_activations + oracle_encoder,
+            "B={batch}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The GPT2 special case is now a lowering rule — and only fires for GPT2.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gpt2_unfused_penalty_preserved_exactly() {
+    let gpt2 = ModelConfig::gpt2();
+    let mut bert_shaped = ModelConfig::gpt2();
+    bert_shaped.kind = ModelKind::Bert;
+    for batch in BATCHES {
+        let with = layer_activation_bytes(&gpt2, batch, OptimizationSet::none());
+        let without = layer_activation_bytes(&bert_shaped, batch, OptimizationSet::none());
+        let b = batch as u64;
+        let bass = b * gpt2.heads as u64 * (gpt2.seq_len as u64).pow(2);
+        assert_eq!(with.float_bytes - without.float_bytes, 2 * bass * F32);
+        // and the output-only softmax deletes the penalty entirely
+        let sm = OptimizationSet::only("softmax").unwrap();
+        assert_eq!(
+            layer_activation_bytes(&gpt2, batch, sm).float_bytes,
+            layer_activation_bytes(&bert_shaped, batch, sm).float_bytes
+        );
+    }
+}
