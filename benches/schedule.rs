@@ -1,0 +1,84 @@
+//! Execution-schedule benches: lowering, liveness-fold and search cost.
+//!
+//! The schedule refactor routes every capacity query through
+//! `graph::schedule_summary` — a memoized, batch-free fold over the
+//! lowered fwd+bwd event timeline. This bench gives that cost a
+//! trajectory next to PR 3's `BENCH_graph.json`: cold lowering (builds
+//! the event/tensor vectors for the whole model chain), the memoized
+//! hot path every sweep cell pays, the full timeline fold at a
+//! concrete batch (what `tempo schedule` renders), and the max-batch
+//! binary search Auto-Tempo and Table 2 run per cell. The sweep-shaped
+//! loop mirrors `BENCH_graph.json`'s `pricing/sweep-16x4` case so the
+//! "memoized schedule pricing stays within ~2× of block-summary
+//! pricing" acceptance bound has a measured artifact. CI uploads the
+//! JSON as `BENCH_schedule.json`.
+
+use tempo::autotempo::fine_search;
+use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
+use tempo::graph::{self, Lowering, SchedulePlan};
+use tempo::memmodel::max_batch;
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let large512 = ModelConfig::bert_large().with_seq_len(512);
+    let lowering = Lowering::for_model(&large512);
+    let tempo_plan = SchedulePlan::for_technique(&large512, Technique::Tempo, true);
+    let ck_plan = SchedulePlan::for_technique(&large512, Technique::Checkpoint, true);
+
+    // cold path: build the whole-model event timeline + batch-free fold
+    h.bench("schedule/lower-cold/bert-large-s512", || {
+        let s = graph::lower_step(&large512, &tempo_plan, lowering);
+        std::hint::black_box(s.summarize_step());
+    });
+    h.bench("schedule/lower-cold-checkpoint/bert-large-s512", || {
+        let s = graph::lower_step(&large512, &ck_plan, lowering);
+        std::hint::black_box(s.summarize_step());
+    });
+
+    // hot path: the memoized Arc lookup every sweep cell pays
+    graph::schedule_summary(&large512, &tempo_plan); // warm
+    h.bench("schedule/summary-memoized/bert-large-s512", || {
+        std::hint::black_box(graph::schedule_summary(&large512, &tempo_plan));
+    });
+
+    // the concrete-batch liveness fold `tempo schedule` renders
+    let schedule = graph::lower_step(&large512, &tempo_plan, lowering);
+    h.bench("schedule/timeline-fold-b8/bert-large-s512", || {
+        std::hint::black_box(schedule.timeline(8).peak_bytes);
+    });
+
+    // Table 2-style cell: max batch binary-searched against the
+    // timeline peak (≈40 memoized peak queries)
+    h.bench("schedule/max-batch-cell/bert-large-s512-2080ti", || {
+        std::hint::black_box(max_batch(&large512, Technique::Tempo, Gpu::Rtx2080Ti));
+    });
+
+    // sweep-shaped loop: 16 subsets × 4 batches priced through the
+    // schedule — the direct counterpart of BENCH_graph.json's
+    // pricing/sweep-16x4 case (acceptance: within ~2× of it)
+    let subsets = OptimizationSet::all_subsets();
+    for &opts in &subsets {
+        graph::schedule_summary(&large512, &SchedulePlan::uniform(&large512, opts, true)); // warm
+    }
+    h.bench("schedule/sweep-16x4/bert-large-s512", || {
+        let mut acc = 0u64;
+        for &opts in &subsets {
+            let s = graph::schedule_summary(&large512, &SchedulePlan::uniform(&large512, opts, true));
+            for batch in [1u64, 4, 8, 16] {
+                acc = acc.wrapping_add(s.peak_bytes(batch));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // end-to-end fine search (binary search over prefix plans, each
+    // priced against its own schedule's peak)
+    h.bench("schedule/fine-search/bert-large-s512-2080ti", || {
+        std::hint::black_box(fine_search(&large512, Gpu::Rtx2080Ti, 3));
+    });
+
+    println!("schedule cache holds {} lowered step schedules", graph::schedule_cache_len());
+    h.write_csv("bench_results/bench_schedule.csv").unwrap();
+    h.write_json("bench_results/BENCH_schedule.json").unwrap();
+}

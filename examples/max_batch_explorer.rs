@@ -61,11 +61,12 @@ fn main() -> tempo::Result<()> {
     for tech in Technique::all() {
         let bd = ModelFootprint::new(cfg.clone(), tech).breakdown(2);
         println!(
-            "  {:<11} total {:>6.2} GB  (acts {:>5.2} GB, states {:>5.2} GB, transient {:>5.2} GB)",
+            "  {:<11} total {:>6.2} GB  (acts {:>5.2} GB, states {:>5.2} GB, {} {:>5.2} GB)",
             tech.name(),
             bd.total() as f64 / 1e9,
             bd.activations() as f64 / 1e9,
             (bd.params + bd.grads + bd.optimizer) as f64 / 1e9,
+            bd.transient_label,
             bd.transient as f64 / 1e9,
         );
     }

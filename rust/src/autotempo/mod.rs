@@ -12,10 +12,11 @@
 //!    surface for the lossy GELU approximation and overheads).
 //!
 //! Profiles come from the analytical memmodel/perfmodel — folds over
-//! the shared layer-graph IR ([`crate::graph`]), so a plan is literally
-//! a per-layer choice of graph rewrites — which is what a compiler pass
-//! would precompute; the same interface could be backed by measured
-//! probes.
+//! the shared layer-graph IR and its execution schedule
+//! ([`crate::graph`]), so a plan is literally a per-layer choice of
+//! graph rewrites and max batch is a binary search against the plan's
+//! liveness-timeline peak — which is what a compiler pass would
+//! precompute; the same interface could be backed by measured probes.
 
 mod search;
 

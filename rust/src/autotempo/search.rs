@@ -1,14 +1,17 @@
 //! Auto-Tempo search policies over the analytical profiles.
 //!
 //! A [`LayerPlan`] is a per-layer *rewrite plan*: which of Tempo's four
-//! graph rewrites each encoder layer applies. Pricing a plan is a fold
-//! over [`crate::graph`] lowered blocks (one memoized summary per
-//! distinct rewrite subset — a 24-layer plan touches at most 16
-//! summaries), so the search never does tensor arithmetic of its own.
+//! graph rewrites each encoder layer applies. Pricing a plan lowers it
+//! to an execution schedule ([`crate::graph::SchedulePlan`]) and reads
+//! the liveness timeline's exact peak (one memoized schedule summary
+//! per distinct plan), so max-batch searches binary-search against the
+//! true high-water instant rather than a static byte sum — the two
+//! coincide bit-identically wherever the old model was correct
+//! (`tests/schedule_equivalence.rs`).
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet, Technique};
-use crate::graph;
-use crate::memmodel::{max_batch, ModelFootprint};
+use crate::graph::{self, SchedulePlan};
+use crate::memmodel::max_batch;
 use crate::perfmodel::throughput_at;
 
 /// Per-layer rewrite-plan assignment (index = encoder layer).
@@ -27,17 +30,13 @@ impl LayerPlan {
         self.per_layer.iter().filter(|s| s.count() > 0).count()
     }
 
-    /// Footprint of the plan at batch `b`: the baseline whole-model
-    /// breakdown with the encoder slice replaced by the exact sum of
-    /// per-layer lowered-block inventories under this plan's rewrites.
+    /// Footprint of the plan at batch `b`: the exact peak of the
+    /// plan's execution-schedule liveness timeline (each layer lowered
+    /// under its own rewrite set; embedding/head at the baseline
+    /// inventory, as always).
     pub fn total_bytes(&self, cfg: &ModelConfig, batch: usize) -> u64 {
-        let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).breakdown(batch);
-        let encoder: u64 = self
-            .per_layer
-            .iter()
-            .map(|set| graph::encoder_summary(cfg, *set).total_bytes(batch as u64))
-            .sum();
-        base.total() - base.encoder_activations + encoder
+        let plan = SchedulePlan::from_per_layer(self.per_layer.clone(), true);
+        graph::schedule_summary(cfg, &plan).peak_bytes(batch as u64)
     }
 }
 

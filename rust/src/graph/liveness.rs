@@ -1,0 +1,276 @@
+//! Liveness folds over a [`StepSchedule`]: the exact peak of the
+//! training step's live-bytes curve, its high-water op, and the
+//! per-class breakdown at that instant.
+//!
+//! Two folds share one walk:
+//!
+//! * [`StepSchedule::timeline`] — the full curve at a concrete batch
+//!   (what `tempo schedule` prints): live bytes sampled at every event,
+//!   *after* the event's allocations and in-op tensors appear and
+//!   *before* its frees run, so an op is charged for everything it
+//!   holds while executing.
+//! * [`StepSchedule::summarize_step`] — the batch-free summary sweeps
+//!   memoize: model states are batch-independent and constant over the
+//!   step, every activation scales linearly in B, so the argmax
+//!   instant is the same for every batch and one unit-batch walk
+//!   prices all of them exactly (`peak(B) = fixed + item·B`, integer ×
+//!   integer).
+//!
+//! `memmodel::ModelFootprint` reads its whole breakdown (including the
+//! once hand-written `transient` row) off [`ScheduleSummary`];
+//! `perfmodel::step_census` reads the folded work census;
+//! `autotempo` binary-searches max batch against
+//! [`ScheduleSummary::peak_bytes`].
+
+use super::op::Census;
+use super::schedule::{EventKind, MemClass, StepSchedule, MEM_CLASS_COUNT};
+
+/// Live-bytes sample at one schedule event (at a concrete batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LivePoint {
+    /// Bytes live while the event runs (its allocs and in-op tensors
+    /// included, its frees not yet applied).
+    pub live_bytes: u64,
+    /// Bytes this event brings into existence (persistent + in-op).
+    pub alloc_bytes: u64,
+    /// Bytes released when the event completes (frees + in-op).
+    pub free_bytes: u64,
+}
+
+/// The full liveness curve of one step at a concrete batch.
+#[derive(Debug, Clone)]
+pub struct LivenessTimeline {
+    /// One sample per schedule event, in order.
+    pub points: Vec<LivePoint>,
+    pub peak_bytes: u64,
+    /// Index (into `points`/the schedule's events) of the first
+    /// high-water sample.
+    pub peak_event: usize,
+}
+
+/// Batch-free fold of a schedule: peak, high-water op, per-class bytes
+/// at the peak, and the step's total work census.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleSummary {
+    /// Batch-independent live bytes (model states; constant over the
+    /// step, so it never moves the argmax).
+    pub fixed_bytes: u64,
+    /// Batch-scaled live bytes at the high-water instant.
+    pub peak_item_bytes: u64,
+    /// Event index of the (first) high-water instant.
+    pub peak_event: usize,
+    /// Per-[`MemClass`] batch-independent bytes at the peak.
+    pub class_fixed: [u64; MEM_CLASS_COUNT],
+    /// Per-[`MemClass`] per-batch-item bytes at the peak.
+    pub class_item: [u64; MEM_CLASS_COUNT],
+    /// What the high-water op is doing — the derived label for the
+    /// breakdown row that used to be the hand-written `transient`.
+    pub high_water: &'static str,
+    /// Total work census per batch item (fwd + bwd + recompute +
+    /// rewrite overheads; optimizer state traffic stays in perfmodel).
+    pub census: Census,
+    /// Number of events in the schedule (bench introspection).
+    pub events: usize,
+}
+
+impl ScheduleSummary {
+    /// Exact peak live bytes at batch `b` (integer × integer).
+    pub fn peak_bytes(&self, batch: u64) -> u64 {
+        self.fixed_bytes + self.peak_item_bytes * batch
+    }
+
+    /// Bytes of one memory class at the high-water instant, at batch
+    /// `b` — the `memmodel::Breakdown` rows.
+    pub fn class_bytes(&self, class: MemClass, batch: u64) -> u64 {
+        let i = class.index();
+        self.class_fixed[i] + self.class_item[i] * batch
+    }
+}
+
+fn high_water_label(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Setup => "model states",
+        EventKind::Forward => "fwd transient",
+        EventKind::Turnaround => "bwd working set",
+        EventKind::Recompute => "ckpt re-forward + grads",
+        EventKind::Backward => "bwd in flight",
+        EventKind::Optimizer => "optimizer step",
+    }
+}
+
+impl StepSchedule {
+    /// Fold the full liveness curve at a concrete batch.
+    pub fn timeline(&self, batch: usize) -> LivenessTimeline {
+        let b = batch as u64;
+        let mut live = 0u64;
+        let mut peak = 0u64;
+        let mut peak_event = 0usize;
+        let mut points = Vec::with_capacity(self.events.len());
+        for (i, e) in self.events.iter().enumerate() {
+            let mut alloc = 0u64;
+            for &id in &e.allocs {
+                alloc += self.tensors[id as usize].bytes_at(b);
+            }
+            let mut inop = 0u64;
+            for &id in &e.inplace {
+                inop += self.tensors[id as usize].bytes_at(b);
+            }
+            let mut freed = 0u64;
+            for &id in &e.frees {
+                freed += self.tensors[id as usize].bytes_at(b);
+            }
+            live += alloc;
+            let inst = live + inop;
+            if inst > peak {
+                peak = inst;
+                peak_event = i;
+            }
+            points.push(LivePoint {
+                live_bytes: inst,
+                alloc_bytes: alloc + inop,
+                free_bytes: freed + inop,
+            });
+            live -= freed;
+        }
+        LivenessTimeline { points, peak_bytes: peak, peak_event }
+    }
+
+    /// Fold the batch-free summary (see module doc for why one walk at
+    /// unit batch prices every batch exactly).
+    pub fn summarize_step(&self) -> ScheduleSummary {
+        let mut fixed = [0u64; MEM_CLASS_COUNT];
+        let mut item = [0u64; MEM_CLASS_COUNT];
+        let mut census = Census::ZERO;
+        let mut best_item = 0u64;
+        let mut best_event = 0usize;
+        let mut best_fixed = [0u64; MEM_CLASS_COUNT];
+        let mut best_classes = [0u64; MEM_CLASS_COUNT];
+        for (i, e) in self.events.iter().enumerate() {
+            for &id in &e.allocs {
+                let t = &self.tensors[id as usize];
+                fixed[t.class.index()] += t.fixed_bytes;
+                item[t.class.index()] += t.item_bytes;
+            }
+            let mut inst = item;
+            for &id in &e.inplace {
+                let t = &self.tensors[id as usize];
+                inst[t.class.index()] += t.item_bytes;
+            }
+            let inst_total: u64 = inst.iter().sum();
+            if inst_total > best_item {
+                best_item = inst_total;
+                best_event = i;
+                best_fixed = fixed;
+                best_classes = inst;
+            }
+            census.add(e.census);
+            for &id in &e.frees {
+                let t = &self.tensors[id as usize];
+                fixed[t.class.index()] -= t.fixed_bytes;
+                item[t.class.index()] -= t.item_bytes;
+            }
+        }
+        debug_assert!(item.iter().all(|&v| v == 0), "activations leak past the step");
+        ScheduleSummary {
+            fixed_bytes: best_fixed.iter().sum(),
+            peak_item_bytes: best_item,
+            peak_event: best_event,
+            class_fixed: best_fixed,
+            class_item: best_classes,
+            high_water: high_water_label(self.events[best_event].kind),
+            census,
+            events: self.events.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, OptimizationSet, Technique};
+    use crate::graph::{lower_step, Lowering, SchedulePlan};
+
+    fn sched(cfg: &ModelConfig, technique: Technique) -> StepSchedule {
+        let plan = SchedulePlan::for_technique(cfg, technique, true);
+        lower_step(cfg, &plan, Lowering::for_model(cfg))
+    }
+
+    #[test]
+    fn timeline_ends_with_states_only() {
+        let cfg = ModelConfig::bert_tiny();
+        for technique in Technique::all() {
+            let s = sched(&cfg, technique);
+            let tl = s.timeline(4);
+            let states = 4 * cfg.param_count() as u64 * 4;
+            // after the optimizer event's frees, only states remain
+            let last = tl.points.last().unwrap();
+            assert_eq!(last.live_bytes - last.free_bytes, states, "{technique:?}");
+        }
+    }
+
+    #[test]
+    fn summary_prices_every_batch_exactly_like_a_fresh_fold() {
+        let cfg = ModelConfig::bert_mini();
+        for technique in Technique::all() {
+            let s = sched(&cfg, technique);
+            let summary = s.summarize_step();
+            for batch in [0usize, 1, 4, 32] {
+                let tl = s.timeline(batch);
+                assert_eq!(
+                    summary.peak_bytes(batch as u64),
+                    tl.peak_bytes,
+                    "{technique:?} B={batch}"
+                );
+            }
+            // the high-water instant is batch-independent
+            assert_eq!(summary.peak_event, s.timeline(7).peak_event, "{technique:?}");
+        }
+    }
+
+    #[test]
+    fn class_rows_sum_to_the_peak() {
+        let cfg = ModelConfig::bert_tiny();
+        for technique in Technique::all() {
+            let plan = SchedulePlan::for_technique(&cfg, technique, true);
+            let summary = lower_step(&cfg, &plan, Lowering::for_model(&cfg)).summarize_step();
+            for b in [1u64, 8] {
+                let sum: u64 = (0..MEM_CLASS_COUNT)
+                    .map(|i| summary.class_fixed[i] + summary.class_item[i] * b)
+                    .sum();
+                assert_eq!(sum, summary.peak_bytes(b), "{technique:?} B={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn high_water_labels_tell_the_technique_story() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let plain = sched(&cfg, Technique::Tempo).summarize_step();
+        assert_eq!(plain.high_water, "bwd working set");
+        let ck = sched(&cfg, Technique::Checkpoint).summarize_step();
+        assert_eq!(ck.high_water, "ckpt re-forward + grads");
+    }
+
+    #[test]
+    fn in_op_tensors_count_at_their_event_only() {
+        let cfg = ModelConfig::bert_tiny();
+        let plan = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let tl = s.timeline(1);
+        // find the first encoder GELU forward: its sample includes the
+        // in-op rewritten input, the next event's does not
+        let idx = s
+            .events
+            .iter()
+            .position(|e| e.name == "ffn.gelu" && e.kind == EventKind::Forward)
+            .unwrap();
+        let inop_bytes: u64 =
+            s.events[idx].inplace.iter().map(|&id| s.tensors[id as usize].bytes_at(1)).sum();
+        assert!(inop_bytes > 0);
+        let next_alloc = tl.points[idx + 1].alloc_bytes;
+        assert_eq!(
+            tl.points[idx + 1].live_bytes,
+            tl.points[idx].live_bytes - inop_bytes + next_alloc
+        );
+    }
+}

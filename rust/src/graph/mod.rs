@@ -26,6 +26,14 @@
 //! * [`table`] — the Fig 1 reproduction behind `tempo graph`: every
 //!   tensor with shape, dtype, bytes, and which rewrite removed/added
 //!   it.
+//! * [`schedule`] + [`liveness`] — the whole-model chain (embedding →
+//!   N blocks → head) lowered to a time-ordered fwd+bwd **event
+//!   timeline** with tensor alloc/free edges; rewrites move frees into
+//!   the op, `SegmentCheckpoint` moves frees to the block exit and
+//!   splices re-forward segments into backward. Peak memory, the step
+//!   census and Auto-Tempo's max-batch search are folds over this one
+//!   schedule, pinned bit-identical to the legacy static sums by
+//!   `tests/schedule_equivalence.rs` (DESIGN.md §Schedule).
 //!
 //! Consumers fold, they don't recompute: `memmodel` sums retained
 //! bytes, `perfmodel` sums op censuses, `autotempo` searches per-layer
@@ -37,9 +45,11 @@
 //! technique is one lowering rule or one rewrite here, priced and
 //! searched everywhere for free — see DESIGN.md §Graph IR.
 
+mod liveness;
 mod lower;
 mod memo;
 mod op;
+mod schedule;
 mod table;
 mod tensor;
 
@@ -51,6 +61,11 @@ pub use memo::{
     cache_len, checkpoint_summary, embedding_summary, encoder_summary, encoder_summary_with,
     head_summary,
 };
+pub use liveness::{LivePoint, LivenessTimeline, ScheduleSummary};
 pub use op::{Census, Op, OpKind};
+pub use schedule::{
+    lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, EventKind, MemClass,
+    SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule, MEM_CLASS_COUNT,
+};
 pub use table::{block_rows, live_totals, tensor_table, tensor_table_with, ClassTotals, TensorRow};
 pub use tensor::{RetainedTensor, RewriteKind, TensorClass};

@@ -1,0 +1,790 @@
+//! Execution schedule: the graph IR lowered to a fwd+bwd op timeline.
+//!
+//! The paper's capacity argument (Fig 9/12, Table 2) is a statement
+//! about the *peak of a liveness timeline* — which tensors are
+//! simultaneously alive at the worst instant of a training step. This
+//! module makes that timeline explicit: [`lower_step`] chains the
+//! lowered blocks (embedding → N encoder blocks → head) into a
+//! time-ordered [`StepSchedule`] of forward and backward op events,
+//! each event carrying `alloc`/`free` edges for the tensors it retains
+//! or releases. Peak memory, the step work census and Auto-Tempo's
+//! max-batch search are all folds over this one schedule
+//! (`liveness.rs` holds the folds).
+//!
+//! Rewrites are **schedule transforms**, not byte arithmetic:
+//!
+//! * An in-place rewrite (GELU/LN/softmax/dropout §3.1–3.4) moves a
+//!   tensor's free *into the op itself*: the tensor still appears on
+//!   the event (the forward really materializes it) but is released
+//!   before the next op runs ([`ScheduleEvent::inplace`]), and the
+//!   replacement tensor (sign mask, rstd) plus the rewrite's backward
+//!   census are spliced into the matching events.
+//! * [`SegmentCheckpoint`](super::SegmentCheckpoint) semantics move
+//!   every free of a block's inventory up to the block's forward exit
+//!   (only the stored input survives) and splice a re-forward segment
+//!   ([`EventKind::Recompute`], priced at the 1.25× recompute-
+//!   inefficiency knob) into the backward, right before the block's
+//!   backward events.
+//!
+//! **Peak-equivalence guarantee.** Under the default semantics the
+//! timeline's peak is *bit-identical* to the legacy static sum
+//! (`params + grads + optimizer + activations + transient`) for every
+//! preset × batch × rewrite subset × technique — pinned by
+//! `tests/schedule_equivalence.rs`:
+//!
+//! * Non-checkpoint: the backward workspace (double-buffered
+//!   activation-gradient rows of the widest encoder map, the old
+//!   `2 × widest` transient) is allocated at the fwd→bwd turnaround,
+//!   while every activation is still retained — that instant *is* the
+//!   static sum.
+//! * Checkpoint: the first segment's re-forward is prefetched under
+//!   the head backward (L2L-style overlap, hiding recompute latency),
+//!   so the head activations and one recomputed inventory genuinely
+//!   coexist — exactly the `full inventory + float volume` transient
+//!   the old closed form charged on top of the head.
+//!
+//! The one *intentional divergence* is opt-in:
+//! [`SchedulePlan::serial_checkpoint`] models PyTorch-style serial
+//! checkpointing (no prefetch), whose true peak is **lower** than the
+//! static sum by exactly `min(head bytes, block inventory)` — the
+//! static model double-charged the head activations and the recompute
+//! live set, which a serial schedule never holds at once. The
+//! equivalence test enumerates and justifies this divergence; the
+//! calibrated defaults (Table 2, §4.2 pins) keep the overlapped
+//! semantics.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::config::{ModelConfig, OptimizationSet, Technique};
+
+use super::liveness::ScheduleSummary;
+use super::lower::{
+    cls_head_block, embedding_block, encoder_block_with, mlm_head_block, BlockGraph, Lowering,
+};
+use super::op::Census;
+
+/// Memory class of a scheduled allocation — the rows of
+/// `memmodel::Breakdown`, now derived from the timeline's high-water
+/// instant instead of hand-written.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemClass {
+    Params,
+    Grads,
+    OptimizerState,
+    /// Encoder-layer retained activations (checkpoint: the stored
+    /// block inputs).
+    EncoderAct,
+    /// Embedding + head activations.
+    OtherAct,
+    /// Backward working set: activation-gradient workspace, in-flight
+    /// recompute inventories, forward transients.
+    Workspace,
+}
+
+/// Number of [`MemClass`] variants (array-indexed folds).
+pub const MEM_CLASS_COUNT: usize = 6;
+
+impl MemClass {
+    pub fn index(self) -> usize {
+        match self {
+            MemClass::Params => 0,
+            MemClass::Grads => 1,
+            MemClass::OptimizerState => 2,
+            MemClass::EncoderAct => 3,
+            MemClass::OtherAct => 4,
+            MemClass::Workspace => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemClass::Params => "params",
+            MemClass::Grads => "grads",
+            MemClass::OptimizerState => "optimizer",
+            MemClass::EncoderAct => "encoder activations",
+            MemClass::OtherAct => "other activations",
+            MemClass::Workspace => "working set",
+        }
+    }
+}
+
+/// Which model segment a schedule event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    /// Model states (params/grads/optimizer), step-lifetime.
+    Setup,
+    Embedding,
+    Encoder(usize),
+    Head,
+    /// Step-level events: turnaround, optimizer step.
+    Step,
+}
+
+impl Segment {
+    pub fn label(self) -> String {
+        match self {
+            Segment::Setup => "model".into(),
+            Segment::Embedding => "emb".into(),
+            Segment::Encoder(l) => format!("enc{l}"),
+            Segment::Head => "head".into(),
+            Segment::Step => "step".into(),
+        }
+    }
+}
+
+/// What a schedule event does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Model-state residency (start of step).
+    Setup,
+    /// Forward op.
+    Forward,
+    /// The fwd→bwd turnaround: the backward workspace is allocated
+    /// here, while every retained activation is still alive — the
+    /// high-water instant of a non-checkpointed step.
+    Turnaround,
+    /// Spliced checkpoint re-forward (priced at the 1.25× recompute-
+    /// inefficiency knob).
+    Recompute,
+    /// Backward op (≈ 2× forward work, plus any rewrite overhead).
+    Backward,
+    /// Optimizer step; releases the backward workspace.
+    Optimizer,
+}
+
+impl EventKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Setup => "setup",
+            EventKind::Forward => "fwd",
+            EventKind::Turnaround => "turn",
+            EventKind::Recompute => "rfwd",
+            EventKind::Backward => "bwd",
+            EventKind::Optimizer => "opt",
+        }
+    }
+}
+
+/// One tensor allocation tracked by the schedule. Activations scale
+/// linearly in batch (`item_bytes`); model states do not
+/// (`fixed_bytes`). Exactly one of the two is nonzero.
+#[derive(Debug, Clone)]
+pub struct SchedTensor {
+    pub name: &'static str,
+    /// Batch-independent bytes (model states).
+    pub fixed_bytes: u64,
+    /// Bytes per batch item (activations, masks, workspaces).
+    pub item_bytes: u64,
+    pub class: MemClass,
+}
+
+impl SchedTensor {
+    pub fn bytes_at(&self, batch: u64) -> u64 {
+        self.fixed_bytes + self.item_bytes * batch
+    }
+}
+
+/// One op event on the timeline.
+#[derive(Debug, Clone)]
+pub struct ScheduleEvent {
+    pub kind: EventKind,
+    pub segment: Segment,
+    pub name: &'static str,
+    /// Tensors allocated by this event that stay live afterwards.
+    pub allocs: Vec<u32>,
+    /// Tensors materialized *and released within this event* — a
+    /// rewrite moved the free into the op itself (in-place GELU/LN,
+    /// output-only softmax, dropout recompute). They count toward this
+    /// event's instantaneous live bytes only.
+    pub inplace: Vec<u32>,
+    /// Tensors released when this event completes (sampled *after*
+    /// the event's own liveness, so a backward op still holds what it
+    /// is about to free).
+    pub frees: Vec<u32>,
+    /// Work census per batch item, with the backward 2× / recompute
+    /// 1.25× factors already applied (every term stays a multiple of
+    /// ¼ far below 2⁵³, so folds remain exact in any order).
+    pub census: Census,
+}
+
+/// The lowered step: a time-ordered event list over a tensor table.
+#[derive(Debug, Clone)]
+pub struct StepSchedule {
+    pub tensors: Vec<SchedTensor>,
+    pub events: Vec<ScheduleEvent>,
+}
+
+/// What to lower: which rewrites each encoder layer applies, what the
+/// embedding/head blocks apply, and whether segment checkpointing
+/// replaces the per-layer inventories.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulePlan {
+    /// Per-encoder-layer rewrite sets (Auto-Tempo's search space).
+    pub per_layer: Vec<OptimizationSet>,
+    /// Rewrites applied to the embedding and head blocks.
+    pub other: OptimizationSet,
+    /// Segment-level checkpointing (per-layer sets are ignored: the
+    /// recompute replays the *unoptimized* block, like the legacy
+    /// model).
+    pub checkpoint: bool,
+    /// MLM head (pre-training, B·S·V logits) vs classification head.
+    pub mlm_head: bool,
+    /// Serial (PyTorch-style) checkpointing: no re-forward prefetch
+    /// under the head backward. The timeline peak then drops below the
+    /// legacy static sum by exactly `min(head, inventory)` — the
+    /// enumerated divergence in `tests/schedule_equivalence.rs`.
+    pub serial_checkpoint: bool,
+}
+
+impl SchedulePlan {
+    /// The plan a top-level technique induces (what
+    /// `memmodel::ModelFootprint::new` prices).
+    pub fn for_technique(cfg: &ModelConfig, technique: Technique, mlm_head: bool) -> SchedulePlan {
+        let opts = match technique {
+            Technique::Tempo => OptimizationSet::full(),
+            _ => OptimizationSet::none(),
+        };
+        SchedulePlan {
+            per_layer: vec![opts; cfg.layers],
+            other: opts,
+            checkpoint: technique == Technique::Checkpoint,
+            mlm_head,
+            serial_checkpoint: false,
+        }
+    }
+
+    /// Uniform rewrite subset on every block (Fig 12 ablations,
+    /// `ModelFootprint::with_opts`).
+    pub fn uniform(cfg: &ModelConfig, opts: OptimizationSet, mlm_head: bool) -> SchedulePlan {
+        SchedulePlan {
+            per_layer: vec![opts; cfg.layers],
+            other: opts,
+            checkpoint: false,
+            mlm_head,
+            serial_checkpoint: false,
+        }
+    }
+
+    /// Auto-Tempo's mixed per-layer plan (embedding/head stay at the
+    /// baseline inventory, like `LayerPlan` pricing always has).
+    pub fn from_per_layer(per_layer: Vec<OptimizationSet>, mlm_head: bool) -> SchedulePlan {
+        SchedulePlan {
+            per_layer,
+            other: OptimizationSet::none(),
+            checkpoint: false,
+            mlm_head,
+            serial_checkpoint: false,
+        }
+    }
+
+    /// Builder: switch to serial (no-prefetch) checkpoint semantics.
+    pub fn serial(mut self) -> SchedulePlan {
+        self.serial_checkpoint = true;
+        self
+    }
+
+    /// `Some(opts)` when every layer applies the same subset (the
+    /// common case; keeps the cache key small).
+    fn uniform_opts(&self) -> Option<OptimizationSet> {
+        let first = self.per_layer.first().copied().unwrap_or_else(OptimizationSet::none);
+        if self.per_layer.iter().all(|o| *o == first) {
+            Some(first)
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable plan label for reports.
+    pub fn label(&self) -> String {
+        let head = if self.mlm_head { "mlm" } else { "cls" };
+        if self.checkpoint {
+            let mode = if self.serial_checkpoint { "serial" } else { "overlapped" };
+            return format!("checkpoint({mode}), {head} head");
+        }
+        match self.uniform_opts() {
+            Some(o) => format!("{}, {head} head", o.label()),
+            None => format!(
+                "mixed plan ({}/{} layers optimized), {head} head",
+                self.per_layer.iter().filter(|o| o.count() > 0).count(),
+                self.per_layer.len()
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Builder {
+    tensors: Vec<SchedTensor>,
+    events: Vec<ScheduleEvent>,
+}
+
+impl Builder {
+    fn tensor(&mut self, name: &'static str, fixed: u64, item: u64, class: MemClass) -> u32 {
+        let id = self.tensors.len() as u32;
+        self.tensors.push(SchedTensor { name, fixed_bytes: fixed, item_bytes: item, class });
+        id
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn event(
+        &mut self,
+        kind: EventKind,
+        segment: Segment,
+        name: &'static str,
+        allocs: Vec<u32>,
+        inplace: Vec<u32>,
+        frees: Vec<u32>,
+        census: Census,
+    ) {
+        self.events.push(ScheduleEvent { kind, segment, name, allocs, inplace, frees, census });
+    }
+
+    /// Forward pass of one block: each op allocates its retained
+    /// tensors; tensors a rewrite deletes become in-place (freed within
+    /// the op — the "free moved earlier" transform). Returns the
+    /// per-op persistent allocation ids for the backward to release.
+    fn forward_block(
+        &mut self,
+        g: &BlockGraph,
+        segment: Segment,
+        opts: OptimizationSet,
+        class: MemClass,
+    ) -> Vec<Vec<u32>> {
+        let mut per_op = Vec::with_capacity(g.ops.len());
+        for op in &g.ops {
+            let mut allocs = Vec::new();
+            let mut inplace = Vec::new();
+            for t in &op.retained {
+                if t.live(&opts) {
+                    allocs.push(self.tensor(t.name, 0, t.bytes_per_item(), class));
+                } else if t.removed_by.is_some() {
+                    // materialized by the forward, released in-op by the
+                    // enabled rewrite (rewrite-added tensors whose
+                    // rewrite is off never exist at all)
+                    inplace.push(self.tensor(t.name, 0, t.bytes_per_item(), MemClass::Workspace));
+                }
+            }
+            self.event(EventKind::Forward, segment, op.name, allocs.clone(), inplace, Vec::new(), op.fwd);
+            per_op.push(allocs);
+        }
+        per_op
+    }
+
+    /// Backward pass of one block: reverse op order, ≈ 2× forward work
+    /// plus any enabled rewrite's recompute overhead; each op releases
+    /// the tensors its forward retained.
+    fn backward_block(
+        &mut self,
+        g: &BlockGraph,
+        segment: Segment,
+        opts: OptimizationSet,
+        per_op: Vec<Vec<u32>>,
+    ) {
+        for (op, ids) in g.ops.iter().zip(per_op).rev() {
+            let mut census = op.fwd.scale(2.0);
+            if let Some((rw, c)) = op.overhead {
+                if rw.enabled(&opts) {
+                    census.add(c);
+                }
+            }
+            self.event(EventKind::Backward, segment, op.name, Vec::new(), Vec::new(), ids, census);
+        }
+    }
+
+    /// Checkpointed forward of one block: the transform stores the
+    /// block input up front, lets the full (unoptimized) inventory
+    /// accumulate through the ops, then moves every inventory free up
+    /// to the block exit. Returns the stored-input tensor id.
+    fn forward_block_checkpoint(&mut self, g: &BlockGraph, segment: Segment) -> u32 {
+        let none = OptimizationSet::none();
+        let stored = self.tensor("ckpt.stored_input", 0, g.input_elems * 4, MemClass::EncoderAct);
+        self.event(EventKind::Forward, segment, "ckpt.store", vec![stored], Vec::new(), Vec::new(), Census::ZERO);
+        let mut inventory = Vec::new();
+        for op in &g.ops {
+            let mut allocs = Vec::new();
+            for t in &op.retained {
+                if t.live(&none) {
+                    allocs.push(self.tensor(t.name, 0, t.bytes_per_item(), MemClass::Workspace));
+                }
+            }
+            inventory.extend(allocs.iter().copied());
+            self.event(EventKind::Forward, segment, op.name, allocs, Vec::new(), Vec::new(), op.fwd);
+        }
+        // frees moved earlier: the whole inventory dies at block exit
+        self.event(EventKind::Forward, segment, "ckpt.discard", Vec::new(), Vec::new(), inventory, Census::ZERO);
+        stored
+    }
+
+    /// Spliced re-forward of a checkpointed block (1.25× the forward
+    /// census: RNG restore, cold kernels, extra copies — the recompute-
+    /// inefficiency knob the roofline always charged). Returns per-op
+    /// allocation ids for the block backward to release.
+    fn recompute_block(&mut self, g: &BlockGraph, segment: Segment) -> Vec<Vec<u32>> {
+        let none = OptimizationSet::none();
+        let mut per_op = Vec::with_capacity(g.ops.len());
+        for op in &g.ops {
+            let mut allocs = Vec::new();
+            for t in &op.retained {
+                if t.live(&none) {
+                    allocs.push(self.tensor(t.name, 0, t.bytes_per_item(), MemClass::Workspace));
+                }
+            }
+            self.event(EventKind::Recompute, segment, op.name, allocs.clone(), Vec::new(), Vec::new(), op.fwd.scale(1.25));
+            per_op.push(allocs);
+        }
+        per_op
+    }
+
+    /// Backward of a checkpointed block over its recomputed inventory;
+    /// the stored input is released with the block's last backward op.
+    fn backward_block_checkpoint(
+        &mut self,
+        g: &BlockGraph,
+        segment: Segment,
+        per_op: Vec<Vec<u32>>,
+        stored: u32,
+    ) {
+        for (i, (op, mut ids)) in g.ops.iter().zip(per_op).enumerate().rev() {
+            if i == 0 {
+                ids.push(stored);
+            }
+            self.event(EventKind::Backward, segment, op.name, Vec::new(), Vec::new(), ids, op.fwd.scale(2.0));
+        }
+    }
+}
+
+/// Lower one full training step of `cfg` under `plan` into a
+/// [`StepSchedule`]: embedding → encoder layers → head forward, the
+/// turnaround workspace, then the mirrored backward (with checkpoint
+/// re-forward segments spliced in where the plan asks for them).
+pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) -> StepSchedule {
+    let mut b = Builder::default();
+    let layer_opts =
+        |l: usize| plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none);
+
+    // model states: resident for the whole step
+    let p_bytes = cfg.param_count() as u64 * 4;
+    let params = b.tensor("params", p_bytes, 0, MemClass::Params);
+    let grads = b.tensor("grads", p_bytes, 0, MemClass::Grads);
+    let opt = b.tensor("adam.m+v", 2 * p_bytes, 0, MemClass::OptimizerState);
+    b.event(
+        EventKind::Setup,
+        Segment::Setup,
+        "step.setup",
+        vec![params, grads, opt],
+        Vec::new(),
+        Vec::new(),
+        Census::ZERO,
+    );
+
+    // forward
+    let emb = embedding_block(cfg);
+    let emb_ids = b.forward_block(&emb, Segment::Embedding, plan.other, MemClass::OtherAct);
+
+    let enc = encoder_block_with(cfg, lowering);
+    let mut plain_ids: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut stored_ids: Vec<u32> = Vec::new();
+    for l in 0..cfg.layers {
+        if plan.checkpoint {
+            stored_ids.push(b.forward_block_checkpoint(&enc, Segment::Encoder(l)));
+        } else {
+            plain_ids.push(b.forward_block(&enc, Segment::Encoder(l), layer_opts(l), MemClass::EncoderAct));
+        }
+    }
+
+    let head = if plan.mlm_head { mlm_head_block(cfg) } else { cls_head_block(cfg) };
+    let head_ids = b.forward_block(&head, Segment::Head, plan.other, MemClass::OtherAct);
+
+    // turnaround: the backward workspace appears while everything is
+    // still retained — the high-water instant of a plain step
+    let full = enc.summarize(OptimizationSet::none());
+    let (ws_name, ws_item) = if plan.checkpoint {
+        // activation gradients flowing through one recomputed block
+        // (≈ its float volume again — Table 2's doubled transient)
+        ("ckpt.grad_workspace", full.float_bytes(1))
+    } else {
+        // double-buffered activation-gradient rows of the widest map
+        ("bwd.workspace", 2 * full.widest_map_elems * 4)
+    };
+    let ws = b.tensor(ws_name, 0, ws_item, MemClass::Workspace);
+    b.event(EventKind::Turnaround, Segment::Step, "bwd.turnaround", vec![ws], Vec::new(), Vec::new(), Census::ZERO);
+
+    // overlapped checkpointing prefetches the top block's re-forward
+    // under the head backward (L2L-style; hides recompute latency and
+    // is what the legacy static sum priced all along)
+    let mut prefetched: Option<Vec<Vec<u32>>> = None;
+    if plan.checkpoint && !plan.serial_checkpoint && cfg.layers > 0 {
+        prefetched = Some(b.recompute_block(&enc, Segment::Encoder(cfg.layers - 1)));
+    }
+
+    // backward
+    b.backward_block(&head, Segment::Head, plan.other, head_ids);
+    for l in (0..cfg.layers).rev() {
+        if plan.checkpoint {
+            let ids = match prefetched.take() {
+                Some(ids) => ids,
+                None => b.recompute_block(&enc, Segment::Encoder(l)),
+            };
+            b.backward_block_checkpoint(&enc, Segment::Encoder(l), ids, stored_ids[l]);
+        } else {
+            b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), plain_ids.pop().expect("per-layer ids"));
+        }
+    }
+    b.backward_block(&emb, Segment::Embedding, plan.other, emb_ids);
+
+    b.event(EventKind::Optimizer, Segment::Step, "optimizer.step", Vec::new(), Vec::new(), vec![ws], Census::ZERO);
+
+    StepSchedule { tensors: b.tensors, events: b.events }
+}
+
+// ---------------------------------------------------------------------------
+// Memoization: sweeps price thousands of (plan, batch) cells; one
+// summary per distinct (dims, lowering, plan) prices any batch (all
+// activations scale linearly in B, states are batch-free, and the
+// argmax instant is batch-independent because the batch-free part of
+// the curve is constant over the step).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum PlanKey {
+    Uniform(OptimizationSet),
+    PerLayer(Vec<OptimizationSet>),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ScheduleKey {
+    hidden: usize,
+    heads: usize,
+    seq_len: usize,
+    intermediate: usize,
+    vocab: usize,
+    max_position: usize,
+    type_vocab: usize,
+    layers: usize,
+    lowering: Lowering,
+    plan: PlanKey,
+    /// Length of the plan's `per_layer` vector. A shorter-than-model
+    /// plan pads the missing layers with `none` in `lower_step`, so an
+    /// all-equal short vector must NOT share a cache entry with the
+    /// true uniform plan of the same subset.
+    plan_layers: usize,
+    other: OptimizationSet,
+    checkpoint: bool,
+    mlm_head: bool,
+    serial_checkpoint: bool,
+}
+
+fn schedule_cache() -> &'static RwLock<HashMap<ScheduleKey, Arc<ScheduleSummary>>> {
+    static CACHE: OnceLock<RwLock<HashMap<ScheduleKey, Arc<ScheduleSummary>>>> = OnceLock::new();
+    CACHE.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Memoized step-schedule summary under the model's default lowering.
+pub fn schedule_summary(cfg: &ModelConfig, plan: &SchedulePlan) -> Arc<ScheduleSummary> {
+    schedule_summary_with(cfg, plan, Lowering::for_model(cfg))
+}
+
+/// Memoized step-schedule summary under explicit lowering rules.
+pub fn schedule_summary_with(
+    cfg: &ModelConfig,
+    plan: &SchedulePlan,
+    lowering: Lowering,
+) -> Arc<ScheduleSummary> {
+    let plan_key = match plan.uniform_opts() {
+        Some(o) => PlanKey::Uniform(o),
+        None => PlanKey::PerLayer(plan.per_layer.clone()),
+    };
+    let key = ScheduleKey {
+        hidden: cfg.hidden,
+        heads: cfg.heads,
+        seq_len: cfg.seq_len,
+        intermediate: cfg.intermediate,
+        vocab: cfg.vocab_size,
+        max_position: cfg.max_position,
+        type_vocab: cfg.type_vocab,
+        layers: cfg.layers,
+        lowering,
+        plan: plan_key,
+        plan_layers: plan.per_layer.len(),
+        other: plan.other,
+        checkpoint: plan.checkpoint,
+        mlm_head: plan.mlm_head,
+        serial_checkpoint: plan.serial_checkpoint,
+    };
+    if let Some(hit) = schedule_cache().read().expect("schedule cache poisoned").get(&key) {
+        return Arc::clone(hit);
+    }
+    let built = Arc::new(lower_step(cfg, plan, lowering).summarize_step());
+    let mut w = schedule_cache().write().expect("schedule cache poisoned");
+    // first insert wins so racing workers share one Arc
+    Arc::clone(w.entry(key).or_insert(built))
+}
+
+/// Number of distinct lowered schedules currently cached (bench/test
+/// introspection).
+pub fn schedule_cache_len() -> usize {
+    schedule_cache().read().expect("schedule cache poisoned").len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::bert_tiny()
+    }
+
+    #[test]
+    fn schedule_is_time_ordered_fwd_then_bwd() {
+        let cfg = tiny();
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let turn = s
+            .events
+            .iter()
+            .position(|e| e.kind == EventKind::Turnaround)
+            .expect("one turnaround");
+        assert!(s.events[..turn]
+            .iter()
+            .all(|e| matches!(e.kind, EventKind::Setup | EventKind::Forward)));
+        assert!(s.events[turn + 1..]
+            .iter()
+            .all(|e| matches!(e.kind, EventKind::Backward | EventKind::Recompute | EventKind::Optimizer)));
+        assert_eq!(s.events.last().unwrap().kind, EventKind::Optimizer);
+    }
+
+    #[test]
+    fn every_alloc_is_freed_exactly_once() {
+        for technique in Technique::all() {
+            let cfg = tiny();
+            let plan = SchedulePlan::for_technique(&cfg, technique, true);
+            let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+            let mut allocated = vec![0u32; s.tensors.len()];
+            let mut freed = vec![0u32; s.tensors.len()];
+            let mut inplace = vec![0u32; s.tensors.len()];
+            for e in &s.events {
+                for &id in &e.allocs {
+                    allocated[id as usize] += 1;
+                }
+                for &id in &e.frees {
+                    freed[id as usize] += 1;
+                }
+                for &id in &e.inplace {
+                    inplace[id as usize] += 1;
+                }
+            }
+            for (id, t) in s.tensors.iter().enumerate() {
+                if inplace[id] > 0 {
+                    // rewritten-away tensors live only inside their op
+                    assert_eq!((allocated[id], freed[id], inplace[id]), (0, 0, 1), "{}", t.name);
+                } else if matches!(t.class, MemClass::Params | MemClass::Grads | MemClass::OptimizerState) {
+                    assert_eq!((allocated[id], freed[id]), (1, 0), "{} persists", t.name);
+                } else {
+                    assert_eq!((allocated[id], freed[id]), (1, 1), "{technique:?} {}", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rewrites_move_frees_into_the_op() {
+        let cfg = tiny();
+        let full = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
+        let s = lower_step(&cfg, &full, Lowering::for_model(&cfg));
+        let gelu_fwd = s
+            .events
+            .iter()
+            .find(|e| e.kind == EventKind::Forward && e.name == "ffn.gelu" && e.segment == Segment::Encoder(0))
+            .expect("gelu fwd event");
+        // the removed fp32 input is in-op; the added mask persists
+        let inplace_names: Vec<&str> =
+            gelu_fwd.inplace.iter().map(|&id| s.tensors[id as usize].name).collect();
+        let alloc_names: Vec<&str> =
+            gelu_fwd.allocs.iter().map(|&id| s.tensors[id as usize].name).collect();
+        assert!(inplace_names.contains(&"ffn.gelu_input"));
+        assert!(alloc_names.contains(&"ffn.gelu_mask"));
+        assert!(alloc_names.contains(&"ffn.gelu_output"));
+        // baseline: no in-op frees anywhere
+        let base = SchedulePlan::uniform(&cfg, OptimizationSet::none(), true);
+        let s0 = lower_step(&cfg, &base, Lowering::for_model(&cfg));
+        assert!(s0.events.iter().all(|e| e.inplace.is_empty()));
+    }
+
+    #[test]
+    fn checkpoint_splices_recompute_and_discards_at_exit() {
+        let cfg = tiny();
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let n_recompute = s.events.iter().filter(|e| e.kind == EventKind::Recompute).count();
+        let ops_per_block = encoder_block_with(&cfg, Lowering::for_model(&cfg)).ops.len();
+        assert_eq!(n_recompute, cfg.layers * ops_per_block);
+        // the prefetched (overlapped) re-forward of the top layer runs
+        // before the head backward
+        let first_rfwd = s.events.iter().position(|e| e.kind == EventKind::Recompute).unwrap();
+        let first_bwd = s.events.iter().position(|e| e.kind == EventKind::Backward).unwrap();
+        assert!(first_rfwd < first_bwd, "overlapped prefetch precedes head bwd");
+        assert_eq!(s.events[first_rfwd].segment, Segment::Encoder(cfg.layers - 1));
+        // serial semantics: head backward comes first
+        let serial = lower_step(&cfg, &plan.clone().serial(), Lowering::for_model(&cfg));
+        let first_rfwd = serial.events.iter().position(|e| e.kind == EventKind::Recompute).unwrap();
+        let first_bwd = serial.events.iter().position(|e| e.kind == EventKind::Backward).unwrap();
+        assert!(first_bwd < first_rfwd, "serial checkpoint recomputes after head bwd");
+        // every block forward ends with the inventory discard
+        let discards = s.events.iter().filter(|e| e.name == "ckpt.discard").count();
+        assert_eq!(discards, cfg.layers);
+    }
+
+    #[test]
+    fn memoized_summary_shares_one_arc_and_matches_fresh() {
+        let cfg = ModelConfig::bert_mini();
+        let plan = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
+        let a = schedule_summary(&cfg, &plan);
+        let b = schedule_summary(&cfg, &plan);
+        assert!(Arc::ptr_eq(&a, &b));
+        let fresh = lower_step(&cfg, &plan, Lowering::for_model(&cfg)).summarize_step();
+        assert_eq!(a.peak_bytes(4), fresh.peak_bytes(4));
+        assert_eq!(a.peak_event, fresh.peak_event);
+    }
+
+    #[test]
+    fn short_uniform_plan_is_not_cached_as_the_full_uniform_plan() {
+        // an all-equal per_layer vector shorter than the model pads the
+        // missing layers with `none`; it must get its own cache entry
+        // (the collapse to a uniform key records the plan length)
+        let cfg = ModelConfig::bert_mini(); // 4 layers
+        let full = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
+        let short = SchedulePlan {
+            per_layer: vec![OptimizationSet::full(); 2],
+            ..full.clone()
+        };
+        let a = schedule_summary(&cfg, &short);
+        let b = schedule_summary(&cfg, &full);
+        assert!(!Arc::ptr_eq(&a, &b));
+        // padded layers retain the baseline inventory, so the short
+        // plan's peak is strictly higher
+        assert!(a.peak_bytes(4) > b.peak_bytes(4));
+        let fresh = lower_step(&cfg, &short, Lowering::for_model(&cfg)).summarize_step();
+        assert_eq!(a.peak_bytes(4), fresh.peak_bytes(4));
+    }
+
+    #[test]
+    fn plan_labels_read_well() {
+        let cfg = tiny();
+        assert!(SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true)
+            .label()
+            .contains("overlapped"));
+        assert!(SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true)
+            .serial()
+            .label()
+            .contains("serial"));
+        let mut per_layer = vec![OptimizationSet::none(); cfg.layers];
+        per_layer[0] = OptimizationSet::full();
+        assert!(SchedulePlan::from_per_layer(per_layer, false).label().contains("mixed"));
+    }
+}

@@ -10,8 +10,10 @@
 //!   harness regenerating every paper table/figure. All three analytical
 //!   models fold one shared layer-graph IR ([`graph`]): the transformer
 //!   block lowers once to typed ops annotated with retained tensors and
-//!   work censuses, and Tempo's techniques are graph rewrites
-//!   (DESIGN.md §Graph IR).
+//!   work censuses, Tempo's techniques are graph rewrites, and the whole
+//!   model chains into a fwd+bwd **execution schedule** whose liveness
+//!   timeline yields exact peak memory, the step census and Auto-Tempo's
+//!   max-batch answers (DESIGN.md §Graph IR, §Schedule).
 //! * **L2/L1 (build-time python)** — JAX BERT with Tempo `custom_vjp`
 //!   layers and Pallas kernels, AOT-lowered to HLO text artifacts.
 //!

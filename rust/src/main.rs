@@ -9,6 +9,9 @@
 //!   autotempo    — §5.2 automatic application pass
 //!   graph        — per-layer retained-tensor table (Fig 1) from the
 //!                  layer-graph IR, with rewrite annotations
+//!   schedule     — fwd+bwd execution timeline with live-bytes per op
+//!                  event and the high-water mark, cross-checked
+//!                  against the capacity model's fold
 //!   artifacts    — list available artifacts (on-disk or builtin sim)
 //!
 //! Execution backend: `--backend sim` (default; deterministic, zero
@@ -48,6 +51,10 @@ USAGE:
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
   tempo graph [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
               [--opts gelu,layernorm,dropout,softmax] [--pre-ln] [--causal] [--unfused]
+              [--json]
+  tempo schedule [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
+              [--opts gelu,layernorm,dropout,softmax] [--finetune] [--serial-checkpoint]
+              [--pre-ln] [--causal] [--unfused] [--json]
   tempo artifacts [--dir DIR]
 
 Common options:
@@ -137,6 +144,24 @@ fn parse_gpu(name: &str) -> tempo::Result<Gpu> {
     }
 }
 
+/// Recover a boolean flag the in-tree Args parser may have mis-parsed
+/// as an option: `--causal gpt2` (a bare flag followed by a non-flag
+/// token) parses as causal="gpt2". Honor the flag AND hand the
+/// swallowed token back as the positional model, so flag order never
+/// changes the model priced (shared by `tempo graph`/`tempo schedule`).
+fn recovered_flag(args: &Args, name: &str, positional_model: &mut Option<String>) -> bool {
+    if args.flag(name) {
+        return true;
+    }
+    if let Some(v) = args.get(name) {
+        if positional_model.is_none() {
+            *positional_model = Some(v.to_string());
+        }
+        return true;
+    }
+    false
+}
+
 fn parse_model(args: &Args) -> tempo::Result<ModelConfig> {
     let name = args.get_or("model", "bert-large");
     let mut cfg = ModelConfig::preset(&name)
@@ -182,6 +207,7 @@ fn run() -> tempo::Result<()> {
         "memory-report" => cmd_memory_report(&args),
         "autotempo" => cmd_autotempo(&args),
         "graph" => cmd_graph(&args),
+        "schedule" => cmd_schedule(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             println!("{USAGE}");
@@ -413,7 +439,7 @@ fn cmd_memory_report(args: &Args) -> tempo::Result<()> {
             ("optimizer", bd.optimizer),
             ("encoder activations", bd.encoder_activations),
             ("other activations", bd.other_activations),
-            ("transient", bd.transient),
+            (bd.transient_label, bd.transient),
         ] {
             println!(
                 "    {:<20} {:>9.3} GB  ({:>5.1}%)",
@@ -470,26 +496,11 @@ fn cmd_graph(args: &Args) -> tempo::Result<()> {
     use tempo::memmodel::layer_activation_bytes;
     use tempo::report::tensor_rows_table;
 
-    // The in-tree Args parser turns `--causal gpt2` into the option
-    // causal="gpt2" (a bare flag followed by a non-flag token). Recover
-    // both intents: honor the flag AND treat its swallowed value as the
-    // positional model, so flag order never changes the model priced.
     let mut positional_model = args.positional.get(1).cloned();
-    let mut lowering_flag = |name: &str| -> bool {
-        if args.flag(name) {
-            return true;
-        }
-        if let Some(v) = args.get(name) {
-            if positional_model.is_none() {
-                positional_model = Some(v.to_string());
-            }
-            return true;
-        }
-        false
-    };
-    let want_pre_ln = lowering_flag("pre-ln");
-    let want_causal = lowering_flag("causal");
-    let want_unfused = lowering_flag("unfused");
+    let want_pre_ln = recovered_flag(args, "pre-ln", &mut positional_model);
+    let want_causal = recovered_flag(args, "causal", &mut positional_model);
+    let want_unfused = recovered_flag(args, "unfused", &mut positional_model);
+    let want_json = recovered_flag(args, "json", &mut positional_model);
 
     // model: positional (`tempo graph gpt2`) or the --model option
     let mut args = args.clone();
@@ -546,9 +557,33 @@ fn cmd_graph(args: &Args) -> tempo::Result<()> {
         ),
         block_rows(&graph, opts, batch),
     );
-    println!("{}", t.render());
-
     let totals = live_totals(&graph, opts, batch);
+
+    if want_json {
+        // machine-readable mode: one JSON document, nothing else on
+        // stdout (round-trips through report::Table::from_json)
+        use tempo::util::Json;
+        let doc = Json::obj(vec![
+            ("model", Json::str(cfg.name.clone())),
+            ("seq_len", Json::num(cfg.seq_len as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("opts", Json::str(opts.label())),
+            ("table", t.to_json()),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("float_bytes", Json::num(totals.float_bytes as f64)),
+                    ("mask_bytes", Json::num(totals.mask_bytes as f64)),
+                    ("stat_bytes", Json::num(totals.stat_bytes as f64)),
+                    ("total_bytes", Json::num(totals.total() as f64)),
+                ]),
+            ),
+        ]);
+        println!("{}", doc.pretty());
+        return Ok(());
+    }
+
+    println!("{}", t.render());
     println!(
         "per-layer retained: {:.3} MB fp32 maps + {:.3} MB masks + {:.3} MB stats = {:.3} MB",
         totals.float_bytes as f64 / 1e6,
@@ -581,6 +616,180 @@ fn cmd_graph(args: &Args) -> tempo::Result<()> {
             ck.stored_bytes(batch as u64) as f64 / 1e6,
             ck.transient_bytes(batch as u64) as f64 / 1e6,
         );
+    }
+    Ok(())
+}
+
+/// `tempo schedule` — the execution-schedule layer's debugging surface
+/// (mirror of `tempo graph`): the fwd+bwd op timeline with per-event
+/// alloc/free/live bytes and the step's high-water mark, cross-checked
+/// live against the capacity model's fold.
+fn cmd_schedule(args: &Args) -> tempo::Result<()> {
+    use tempo::config::OptimizationSet;
+    use tempo::graph::{lower_step, schedule_summary_with, Lowering, SchedulePlan, Topology};
+    use tempo::memmodel::ModelFootprint;
+    use tempo::report::Table;
+    use tempo::util::Json;
+
+    let mut positional_model = args.positional.get(1).cloned();
+    let want_pre_ln = recovered_flag(args, "pre-ln", &mut positional_model);
+    let want_causal = recovered_flag(args, "causal", &mut positional_model);
+    let want_unfused = recovered_flag(args, "unfused", &mut positional_model);
+    let want_json = recovered_flag(args, "json", &mut positional_model);
+    let want_serial = recovered_flag(args, "serial-checkpoint", &mut positional_model);
+    let want_finetune = recovered_flag(args, "finetune", &mut positional_model);
+
+    let mut args = args.clone();
+    if let Some(name) = positional_model {
+        args.options.entry("model".into()).or_insert(name);
+    }
+    let cfg = parse_model(&args)?;
+    let batch = args.get_usize("batch", 1)?;
+    let mlm = !want_finetune;
+
+    let technique_name = args.get_or("technique", "tempo");
+    let technique = match technique_name.as_str() {
+        "baseline" => Technique::Baseline,
+        "tempo" => Technique::Tempo,
+        "checkpoint" => Technique::Checkpoint,
+        other => {
+            return Err(tempo::Error::Invalid(format!(
+                "unknown technique '{other}' (baseline|tempo|checkpoint)"
+            )))
+        }
+    };
+    let mut plan = SchedulePlan::for_technique(&cfg, technique, mlm);
+    let mut custom_opts: Option<OptimizationSet> = None;
+    if let Some(list) = args.get("opts") {
+        if technique == Technique::Checkpoint {
+            return Err(tempo::Error::Invalid(
+                "checkpointing recomputes the unoptimized block; --opts applies to baseline/tempo"
+                    .into(),
+            ));
+        }
+        let mut opts = OptimizationSet::none();
+        for which in list.split(',').filter(|s| !s.is_empty()) {
+            let one = OptimizationSet::only(which).ok_or_else(|| {
+                tempo::Error::Invalid(format!(
+                    "unknown optimization '{which}' (gelu|layernorm|dropout|softmax)"
+                ))
+            })?;
+            opts = opts.union(one);
+        }
+        plan = SchedulePlan::uniform(&cfg, opts, mlm);
+        custom_opts = Some(opts);
+    }
+    if want_serial {
+        plan.serial_checkpoint = true;
+    }
+
+    // lowering rules: model defaults, overridable from the CLI
+    let mut lowering = Lowering::for_model(&cfg);
+    if want_pre_ln {
+        lowering.topology = Topology::PreLn;
+    }
+    if want_causal {
+        lowering.causal_census = true;
+    }
+    if want_unfused {
+        lowering.unfused_attention = true;
+    }
+
+    let schedule = lower_step(&cfg, &plan, lowering);
+    let tl = schedule.timeline(batch);
+    let summary = schedule_summary_with(&cfg, &plan, lowering);
+
+    let mb = |bytes: u64| format!("{:.3}", bytes as f64 / 1e6);
+    let mut t = Table::new(
+        format!(
+            "Execution schedule — {} @ S={} B={} ({})",
+            cfg.name,
+            cfg.seq_len,
+            batch,
+            plan.label()
+        ),
+        &["#", "ev", "segment", "op", "alloc MB", "free MB", "live MB", ""],
+    );
+    for (i, (e, p)) in schedule.events.iter().zip(&tl.points).enumerate() {
+        t.row(vec![
+            i.to_string(),
+            e.kind.label().to_string(),
+            e.segment.label(),
+            e.name.to_string(),
+            mb(p.alloc_bytes),
+            mb(p.free_bytes),
+            mb(p.live_bytes),
+            if i == tl.peak_event { "<- peak".into() } else { String::new() },
+        ]);
+    }
+
+    // the capacity model's fold over the same plan (the live cross-check)
+    let mut fp = match (technique, custom_opts) {
+        (Technique::Checkpoint, _) => ModelFootprint::new(cfg.clone(), Technique::Checkpoint),
+        (_, Some(o)) => ModelFootprint::with_opts(cfg.clone(), o),
+        (tech, None) => ModelFootprint::new(cfg.clone(), tech),
+    };
+    if want_finetune {
+        fp = fp.finetune();
+    }
+    let fold = fp.total_bytes(batch);
+    let default_lowering = lowering == Lowering::for_model(&cfg);
+    let serial_divergence = want_serial && technique == Technique::Checkpoint;
+
+    if want_json {
+        // machine-readable mode: one JSON document, nothing else on
+        // stdout (round-trips through report::Table::from_json)
+        let doc = Json::obj(vec![
+            ("model", Json::str(cfg.name.clone())),
+            ("seq_len", Json::num(cfg.seq_len as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("plan", Json::str(plan.label())),
+            ("peak_bytes", Json::num(tl.peak_bytes as f64)),
+            ("peak_event", Json::num(tl.peak_event as f64)),
+            ("high_water", Json::str(summary.high_water)),
+            // the capacity model always prices the DEFAULT lowering and
+            // the default (overlapped) checkpoint semantics — flag both
+            // so consumers know when peak_bytes may legitimately differ
+            ("memmodel_total_bytes", Json::num(fold as f64)),
+            ("default_lowering", Json::Bool(default_lowering)),
+            ("serial_checkpoint_divergence", Json::Bool(serial_divergence)),
+            ("table", t.to_json()),
+        ]);
+        println!("{}", doc.pretty());
+        return Ok(());
+    }
+
+    println!("{}", t.render());
+    println!(
+        "peak live: {:.3} GB at event {} ({}.{}, {})",
+        tl.peak_bytes as f64 / 1e9,
+        tl.peak_event,
+        schedule.events[tl.peak_event].segment.label(),
+        schedule.events[tl.peak_event].name,
+        summary.high_water,
+    );
+    if default_lowering {
+        if serial_divergence {
+            // the enumerated divergence: serial checkpointing never
+            // holds the head activations and a recompute inventory at
+            // once, so its true peak undercuts the static sum
+            println!(
+                "memmodel static sum: {:.3} GB — serial checkpointing peaks {:.3} MB lower \
+                 (no re-forward prefetch, so the head activations and the recompute \
+                 inventory are never simultaneously live)",
+                fold as f64 / 1e9,
+                (fold - tl.peak_bytes) as f64 / 1e6,
+            );
+        } else {
+            println!(
+                "memmodel cross-check: {} (fold {} bytes vs timeline peak {} bytes)",
+                if fold == tl.peak_bytes { "OK" } else { "MISMATCH" },
+                fold,
+                tl.peak_bytes
+            );
+        }
+    } else {
+        println!("note: lowering overridden; the capacity model prices the default lowering");
     }
     Ok(())
 }

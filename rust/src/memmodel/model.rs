@@ -1,29 +1,40 @@
 //! Whole-model footprint: model states + activations per technique.
 //!
-//! Every activation number here is a fold over [`crate::graph`] lowered
-//! blocks (encoder, embedding, MLM/classification head); whole-segment
-//! checkpointing is the graph's segment-level rewrite
-//! ([`crate::graph::SegmentCheckpoint`]). No per-technique tensor
-//! arithmetic lives in this module.
+//! Every number here is read off the **liveness timeline** of the
+//! lowered execution schedule ([`crate::graph::StepSchedule`]): the
+//! breakdown rows are the per-class live bytes at the step's
+//! high-water instant, and the total *is* the timeline peak. The
+//! once hand-written `transient` heuristic is gone — the backward
+//! working set (activation-gradient workspace, checkpoint recompute
+//! inventory) is an allocation on the schedule like any other, and the
+//! row's label comes from what the high-water op is actually doing.
+//! `tests/schedule_equivalence.rs` pins the peak bit-identical to the
+//! pre-schedule static sum across the full grid.
 
 use crate::config::{ModelConfig, OptimizationSet, Technique};
-use crate::graph;
+use crate::graph::{self, MemClass, SchedulePlan};
 
-use super::F32;
-
-/// Full memory breakdown at a given batch size (per GPU).
+/// Full memory breakdown at a given batch size (per GPU): the
+/// per-class live bytes at the schedule's high-water instant.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Breakdown {
     pub params: u64,
     pub grads: u64,
     pub optimizer: u64,
-    /// Encoder-layer retained activations (Fig 9's dominant slice).
+    /// Encoder-layer retained activations (Fig 9's dominant slice;
+    /// under checkpointing, the stored block inputs).
     pub encoder_activations: u64,
     /// Embedding + MLM-head activations (incl. the B·S·V logits).
     pub other_activations: u64,
-    /// Transient peak during backward of one layer (checkpointing's
-    /// recompute live set; small working headroom otherwise).
+    /// Backward working set live at the peak: activation-gradient
+    /// workspace, plus the in-flight recompute inventory under
+    /// checkpointing. Derived from the timeline, labeled by
+    /// [`Breakdown::transient_label`].
     pub transient: u64,
+    /// What the high-water op is doing (e.g. "bwd working set",
+    /// "ckpt re-forward + grads") — the derived name for the row that
+    /// used to be the hand-written, checkpoint-flavored "transient".
+    pub transient_label: &'static str,
 }
 
 impl Breakdown {
@@ -73,67 +84,36 @@ impl ModelFootprint {
         self
     }
 
-    /// Model states: fp32 params + fp32 grads + Adam (m, v).
-    fn state_bytes(&self) -> (u64, u64, u64) {
-        let p = self.cfg.param_count() as u64 * F32;
-        (p, p, 2 * p)
-    }
-
-    /// Embedding-block activations (gather output, LN, dropout mask):
-    /// fold over the lowered embedding block.
-    fn embedding_activation_bytes(&self, batch: usize) -> u64 {
-        graph::embedding_summary(&self.cfg, self.opts).total_bytes(batch as u64)
-    }
-
-    /// Head activations — MLM (transform + GELU + LN + the B·S·V logits
-    /// and log-softmax, dominant for real vocabularies) or the tiny
-    /// classification head: fold over the lowered head block.
-    fn head_activation_bytes(&self, batch: usize) -> u64 {
-        graph::head_summary(&self.cfg, self.opts, self.mlm_head).total_bytes(batch as u64)
-    }
-
-    /// Full breakdown at batch `b`.
-    pub fn breakdown(&self, batch: usize) -> Breakdown {
-        let (params, grads, optimizer) = self.state_bytes();
-        let b = batch as u64;
-        let layers = self.cfg.layers as u64;
-
-        let (encoder, transient) = match self.technique {
+    /// The execution-schedule plan this footprint prices.
+    pub fn plan(&self) -> SchedulePlan {
+        match self.technique {
             Technique::Checkpoint => {
-                // Segment-level rewrite: retain only each block's input,
-                // recompute the block during backward. The backward live
-                // set holds the recomputed inventory PLUS the activation
-                // gradients flowing through it (≈ the same float volume
-                // again) — this doubled transient is what caps
-                // checkpointing's batch at long S in Table 2.
-                let ck = graph::checkpoint_summary(&self.cfg);
-                (layers * ck.stored_bytes(b), ck.transient_bytes(b))
+                SchedulePlan::for_technique(&self.cfg, Technique::Checkpoint, self.mlm_head)
             }
-            _ => {
-                let per_layer = graph::encoder_summary(&self.cfg, self.opts);
-                let stored = layers * per_layer.total_bytes(b);
-                // backward working headroom: activation grads of the
-                // widest rows while one layer's backprop is in flight
-                // (rewrite-independent — the gradient rows exist whether
-                // or not the forward copy was rewritten away)
-                (stored, 2 * per_layer.widest_map_elems * b * F32)
-            }
-        };
-
-        Breakdown {
-            params,
-            grads,
-            optimizer,
-            encoder_activations: encoder,
-            other_activations: self.embedding_activation_bytes(batch)
-                + self.head_activation_bytes(batch),
-            transient,
+            _ => SchedulePlan::uniform(&self.cfg, self.opts, self.mlm_head),
         }
     }
 
-    /// Total bytes at batch `b`.
+    /// Full breakdown at batch `b`: the per-class live bytes at the
+    /// schedule's high-water instant (memoized per plan; pricing any
+    /// batch is exact integer scaling).
+    pub fn breakdown(&self, batch: usize) -> Breakdown {
+        let s = graph::schedule_summary(&self.cfg, &self.plan());
+        let b = batch as u64;
+        Breakdown {
+            params: s.class_bytes(MemClass::Params, b),
+            grads: s.class_bytes(MemClass::Grads, b),
+            optimizer: s.class_bytes(MemClass::OptimizerState, b),
+            encoder_activations: s.class_bytes(MemClass::EncoderAct, b),
+            other_activations: s.class_bytes(MemClass::OtherAct, b),
+            transient: s.class_bytes(MemClass::Workspace, b),
+            transient_label: s.high_water,
+        }
+    }
+
+    /// Total bytes at batch `b` — the exact timeline peak.
     pub fn total_bytes(&self, batch: usize) -> u64 {
-        self.breakdown(batch).total()
+        graph::schedule_summary(&self.cfg, &self.plan()).peak_bytes(batch as u64)
     }
 }
 
@@ -150,6 +130,26 @@ mod tests {
         assert_eq!(bd.params, p);
         assert_eq!(bd.grads, p);
         assert_eq!(bd.optimizer, 2 * p);
+    }
+
+    #[test]
+    fn total_is_the_sum_of_rows_and_the_timeline_peak() {
+        for tech in Technique::all() {
+            let cfg = ModelConfig::bert_base().with_seq_len(256);
+            let fp = ModelFootprint::new(cfg, tech);
+            let bd = fp.breakdown(8);
+            assert_eq!(bd.total(), fp.total_bytes(8), "{tech:?}");
+        }
+    }
+
+    #[test]
+    fn transient_row_is_labeled_by_the_high_water_op() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).breakdown(4);
+        assert_eq!(base.transient_label, "bwd working set");
+        let ck = ModelFootprint::new(cfg, Technique::Checkpoint).breakdown(4);
+        assert_eq!(ck.transient_label, "ckpt re-forward + grads");
+        assert!(ck.transient > base.transient);
     }
 
     #[test]

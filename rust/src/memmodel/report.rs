@@ -15,7 +15,12 @@ pub struct BreakdownRow {
 
 /// Fig 9 (App. A): GPU memory breakdown for BERT_BASE fine-tuning at
 /// B=32, S=128 — weights / gradients / optimizer / encoder activations /
-/// other activations.
+/// other activations, plus the backward working set. The last row used
+/// to be labeled "transient" (which read as checkpoint-only); it is now
+/// named by the execution schedule's high-water op, so Baseline/Tempo
+/// rows report their true backward working-set headroom ("bwd working
+/// set") and Checkpoint rows the in-flight recompute inventory
+/// ("ckpt re-forward + grads").
 pub fn breakdown_fig9(cfg: &ModelConfig, technique: Technique, batch: usize) -> Vec<BreakdownRow> {
     // Fig 9 profiles the MRPC *fine-tuning* task (classification head).
     let bd = ModelFootprint::new(cfg.clone(), technique).finetune().breakdown(batch);
@@ -27,7 +32,7 @@ pub fn breakdown_fig9(cfg: &ModelConfig, technique: Technique, batch: usize) -> 
         row("optimizer", bd.optimizer),
         row("encoder activations", bd.encoder_activations),
         row("other activations", bd.other_activations),
-        row("transient", bd.transient),
+        row(bd.transient_label, bd.transient),
     ]
 }
 
@@ -77,6 +82,17 @@ mod tests {
         let sum: f64 = rows.iter().map(|r| r.share).sum();
         assert!((sum - 1.0).abs() < 1e-9);
         assert_eq!(rows.len(), 6);
+    }
+
+    #[test]
+    fn fig9_working_set_row_is_derived_not_checkpoint_flavored() {
+        // the old hand-written row was labeled "transient" for every
+        // technique; now the schedule's high-water op names it
+        let cfg = ModelConfig::bert_base().with_seq_len(128);
+        let base = breakdown_fig9(&cfg, Technique::Baseline, 32);
+        assert_eq!(base.last().unwrap().label, "bwd working set");
+        let ck = breakdown_fig9(&cfg, Technique::Checkpoint, 32);
+        assert_eq!(ck.last().unwrap().label, "ckpt re-forward + grads");
     }
 
     #[test]

@@ -1,16 +1,19 @@
 //! Op census: FLOPs and memory traffic for one training step.
 //!
-//! Per-layer and head work is a fold over [`crate::graph`] lowered
-//! blocks (the same lowering `memmodel` folds for bytes): forward op
-//! censuses sum per block, Tempo's rewrite overheads come from the
-//! rewrites themselves, and checkpointing's re-forward reprices the
-//! lowered block. Only step-level assembly (fwd+bwd factors, optimizer
-//! traffic, the recompute-inefficiency knob) lives here. The fold is
-//! pinned bit-identical to the pre-refactor closed form by
-//! `tests/graph_equivalence.rs`.
+//! The census is a fold over the **execution schedule**
+//! ([`crate::graph::StepSchedule`]) — the same fwd+bwd event timeline
+//! the capacity model folds for liveness. Each forward event carries
+//! its op's census, each backward event ≈ 2× forward plus any enabled
+//! rewrite's recompute overhead, and checkpointing's spliced re-forward
+//! events carry the 1.25× recompute-inefficiency factor (RNG-state
+//! restore, cold kernels, extra copies). Every term is a multiple of ¼
+//! far below 2⁵³, so the fold is exact in any order — pinned
+//! bit-identical to the pre-refactor closed form by
+//! `tests/graph_equivalence.rs`. Only the optimizer/gradient state
+//! traffic is added here (it is step-level, not an op event).
 
-use crate::config::{ModelConfig, OptimizationSet, Technique};
-use crate::graph;
+use crate::config::{ModelConfig, Technique};
+use crate::graph::{self, SchedulePlan};
 
 /// Aggregate work of one training step at batch B.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,27 +28,6 @@ pub struct OpCensus {
     pub state_bytes: f64,
 }
 
-impl OpCensus {
-    fn zero() -> Self {
-        OpCensus { matmul_flops: 0.0, vector_flops: 0.0, vector_bytes: 0.0, state_bytes: 0.0 }
-    }
-
-    fn add(&mut self, o: OpCensus) {
-        self.matmul_flops += o.matmul_flops;
-        self.vector_flops += o.vector_flops;
-        self.vector_bytes += o.vector_bytes;
-        self.state_bytes += o.state_bytes;
-    }
-
-    fn scale(mut self, f: f64) -> Self {
-        self.matmul_flops *= f;
-        self.vector_flops *= f;
-        self.vector_bytes *= f;
-        self.state_bytes *= f;
-        self
-    }
-}
-
 impl From<graph::Census> for OpCensus {
     fn from(c: graph::Census) -> OpCensus {
         OpCensus {
@@ -57,53 +39,12 @@ impl From<graph::Census> for OpCensus {
     }
 }
 
-/// Forward-pass census of ONE encoder layer: fold over the lowered
-/// block's per-op censuses (QKV/scores/PV/proj/FC matmuls, softmax ≈ 3
-/// passes over B·A·S², dropout 2 maps, residuals+LN ≈ 6 passes over
-/// B·S·H, GELU ≈ 3 passes over B·S·I).
-fn layer_forward(cfg: &ModelConfig, batch: usize) -> OpCensus {
-    graph::encoder_summary(cfg, OptimizationSet::none()).fwd_at(batch).into()
-}
-
-/// Extra vector work Tempo's backward adds (the "low overhead" of §3):
-/// the sum of the enabled rewrites' overhead censuses — the
-/// dropout-recompute multiply over the B·A·S² probs and the polynomial
-/// (deg ≤ 13) GELU backward over B·S·I; the in-place LN/softmax
-/// rewrites are traffic-neutral (x̂ re-derived from already-resident
-/// outputs).
-fn tempo_overhead(cfg: &ModelConfig, batch: usize) -> OpCensus {
-    graph::encoder_summary(cfg, OptimizationSet::full()).overhead_at(batch).into()
-}
-
-/// Embedding + MLM-head census (fwd; bwd ≈ 2×, folded by caller): fold
-/// over the lowered head block (transform 2BSH² + decoder 2BSHV, the
-/// B·S·V loss passes, embedding traffic lumped into the transform row).
-fn head_forward(cfg: &ModelConfig, batch: usize) -> OpCensus {
-    graph::head_summary(cfg, OptimizationSet::none(), true).fwd_at(batch).into()
-}
-
-/// Census of one full training step under `technique`.
+/// Census of one full training step under `technique`: the schedule's
+/// per-item event fold scaled to batch B, plus optimizer traffic.
 pub fn step_census(cfg: &ModelConfig, technique: Technique, batch: usize) -> OpCensus {
-    let layers = cfg.layers as f64;
-    let fwd = layer_forward(cfg, batch);
-    let mut total = OpCensus::zero();
-    // forward + backward (bwd ≈ 2× fwd work for matmuls and traffic)
-    total.add(fwd.scale(3.0 * layers));
-    total.add(head_forward(cfg, batch).scale(3.0));
-
-    match technique {
-        Technique::Checkpoint => {
-            // full re-forward of every layer during backward; recompute
-            // runs ~25% less efficiently than the autotuned first
-            // forward (RNG-state restore, cold kernels, extra copies)
-            total.add(layer_forward(cfg, batch).scale(1.25 * layers));
-        }
-        Technique::Tempo => {
-            total.add(tempo_overhead(cfg, batch).scale(layers));
-        }
-        Technique::Baseline => {}
-    }
-
+    let plan = SchedulePlan::for_technique(cfg, technique, true);
+    let summary = graph::schedule_summary(cfg, &plan);
+    let mut total: OpCensus = summary.census.scale(batch as f64).into();
     // optimizer: read params+grads+m+v, write params+m+v (fp32), plus
     // DDP all-reduce traffic ≈ 2× grads through HBM
     let p = cfg.param_count() as f64;

@@ -1,4 +1,7 @@
-//! ASCII table printer + CSV emitter (shared by all experiment reports).
+//! ASCII table printer + CSV/JSON emitter (shared by all experiment
+//! reports and the `--json` CLI output modes).
+
+use crate::util::Json;
 
 /// A simple column-aligned table.
 #[derive(Debug, Clone)]
@@ -73,6 +76,50 @@ impl Table {
         out
     }
 
+    /// Machine-readable form (`{"title", "headers", "rows"}`) for the
+    /// CLI `--json` modes; [`Table::from_json`] round-trips it.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a table back out of its [`Table::to_json`] form.
+    pub fn from_json(v: &Json) -> crate::Result<Table> {
+        let title = v.req("title")?.as_str()?.to_string();
+        let headers = v
+            .req("headers")?
+            .as_arr()?
+            .iter()
+            .map(|h| Ok(h.as_str()?.to_string()))
+            .collect::<crate::Result<Vec<String>>>()?;
+        let rows = v
+            .req("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                r.as_arr()?
+                    .iter()
+                    .map(|c| Ok(c.as_str()?.to_string()))
+                    .collect::<crate::Result<Vec<String>>>()
+            })
+            .collect::<crate::Result<Vec<Vec<String>>>>()?;
+        Ok(Table { title, headers, rows })
+    }
+
     /// Write CSV under `bench_results/`.
     pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
         let dir = std::path::Path::new("bench_results");
@@ -99,6 +146,28 @@ mod tests {
         // both value cells start at the same column
         let col = lines[3].find('1').unwrap();
         assert_eq!(lines[4].find('2').unwrap(), col);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut t = Table::new("demo — schedule", &["op", "live MB"]);
+        t.row(vec!["attn.softmax".into(), "12.583".into()]);
+        t.row(vec!["has\"quote,comma".into(), "0".into()]);
+        let text = t.to_json().pretty();
+        let back = Table::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.title, t.title);
+        assert_eq!(back.headers, t.headers);
+        assert_eq!(back.rows, t.rows);
+        // and the re-serialized form is byte-identical
+        assert_eq!(back.to_json().pretty(), text);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_tables() {
+        let v = crate::util::Json::parse(r#"{"title": "x", "headers": ["a"]}"#).unwrap();
+        assert!(Table::from_json(&v).is_err());
+        let v = crate::util::Json::parse(r#"{"title": "x", "headers": ["a"], "rows": [3]}"#).unwrap();
+        assert!(Table::from_json(&v).is_err());
     }
 
     #[test]

@@ -21,17 +21,18 @@
 //!   chance toward ~0.95 for classification.
 //!
 //! Step *latency* is drawn from the roofline model
-//! ([`crate::perfmodel::step_time`]) and memory from the capacity model
-//! ([`crate::memmodel::ModelFootprint`]) — both folds over the shared
-//! layer-graph IR ([`crate::graph`]), memoized per (config, rewrite
-//! set) — so metrics/throughput numbers reported by the coordinator
-//! match the paper-scale simulators instead of host wall-clock noise.
+//! ([`crate::perfmodel::step_time`], a roofline over the execution
+//! schedule's census fold) and memory from the schedule's liveness
+//! timeline ([`crate::graph::schedule_summary`], the exact peak the
+//! capacity model also reports) — both memoized per (config, plan) —
+//! so metrics/throughput numbers reported by the coordinator match the
+//! paper-scale simulators instead of host wall-clock noise.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::{Gpu, ModelConfig, ModelKind, Technique};
-use crate::memmodel::ModelFootprint;
+use crate::graph::{self, SchedulePlan};
 use crate::perfmodel::step_time;
 use crate::runtime::artifact::{Artifact, Manifest};
 use crate::runtime::backend::{Backend, Entry, Program};
@@ -69,15 +70,15 @@ impl SimBackend {
         SimBackend { gpu }
     }
 
-    /// Capacity-model footprint of one training step of this artifact
-    /// (bytes per GPU), drawn from `memmodel`.
+    /// Peak live bytes of one training step of this artifact (per
+    /// GPU): the exact high-water mark of the execution schedule's
+    /// liveness timeline (identical to `memmodel::ModelFootprint`,
+    /// which folds the same schedule).
     pub fn modeled_memory_bytes(&self, artifact: &Artifact) -> u64 {
         let m = &artifact.manifest;
-        let mut fp = ModelFootprint::new(model_config(m), technique(m));
-        if m.task == "cls" {
-            fp = fp.finetune();
-        }
-        fp.breakdown(m.batch_size).total()
+        let cfg = model_config(m);
+        let plan = SchedulePlan::for_technique(&cfg, technique(m), m.task != "cls");
+        graph::schedule_summary(&cfg, &plan).peak_bytes(m.batch_size as u64)
     }
 }
 
@@ -443,6 +444,19 @@ mod tests {
         );
         assert!((dt.as_secs_f64() - expect).abs() < 1e-12);
         assert!(b.modeled_memory_bytes(&a) > 0);
+    }
+
+    #[test]
+    fn modeled_memory_is_the_schedule_peak() {
+        // the sim's memory number is the exact liveness-timeline peak —
+        // identical to the capacity model, which folds the same schedule
+        let b = SimBackend::new();
+        for name in ["bert_tiny_baseline", "bert_tiny_checkpoint", "bert_tiny_tempo"] {
+            let a = tiny_artifact(name);
+            let m = &a.manifest;
+            let fp = crate::memmodel::ModelFootprint::new(model_config(m), technique(m));
+            assert_eq!(b.modeled_memory_bytes(&a), fp.total_bytes(m.batch_size), "{name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,98 @@
+//! `--json` CLI round-trip: `tempo graph --json` and `tempo schedule
+//! --json` each emit a single JSON document whose embedded table
+//! round-trips through `report::Table::from_json` and whose totals
+//! match the library folds bit-for-bit.
+
+use std::process::Command;
+
+use tempo::config::{ModelConfig, OptimizationSet};
+use tempo::report::Table;
+use tempo::util::Json;
+
+fn run(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_tempo"))
+        .args(args)
+        .output()
+        .expect("spawn tempo binary");
+    assert!(
+        out.status.success(),
+        "tempo {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+#[test]
+fn graph_json_round_trips_and_matches_the_fold() {
+    let text = run(&["graph", "bert-tiny", "--json", "--batch", "2"]);
+    let doc = Json::parse(&text).expect("graph --json emits one JSON document");
+    assert_eq!(doc.req("model").unwrap().as_str().unwrap(), "bert-tiny");
+    assert_eq!(doc.req("batch").unwrap().as_usize().unwrap(), 2);
+
+    // table round-trip: parse → from_json → to_json is stable
+    let table = Table::from_json(doc.req("table").unwrap()).unwrap();
+    assert!(!table.rows.is_empty());
+    let reparsed = Json::parse(&table.to_json().pretty()).unwrap();
+    assert_eq!(Table::from_json(&reparsed).unwrap().rows, table.rows);
+
+    // totals agree with the library fold (default technique = tempo)
+    let expect = tempo::memmodel::layer_activation_bytes(
+        &ModelConfig::bert_tiny(),
+        2,
+        OptimizationSet::full(),
+    );
+    let totals = doc.req("totals").unwrap();
+    assert_eq!(
+        totals.req("total_bytes").unwrap().as_f64().unwrap() as u64,
+        expect.total()
+    );
+    assert_eq!(
+        totals.req("float_bytes").unwrap().as_f64().unwrap() as u64,
+        expect.float_bytes
+    );
+}
+
+#[test]
+fn schedule_json_round_trips_and_matches_memmodel() {
+    let text =
+        run(&["schedule", "bert-tiny", "--json", "--batch", "4", "--technique", "checkpoint"]);
+    let doc = Json::parse(&text).expect("schedule --json emits one JSON document");
+
+    // the timeline peak IS the capacity model's total (default,
+    // overlapped checkpoint semantics)
+    let peak = doc.req("peak_bytes").unwrap().as_f64().unwrap() as u64;
+    let fold = doc.req("memmodel_total_bytes").unwrap().as_f64().unwrap() as u64;
+    assert_eq!(peak, fold);
+    assert_eq!(doc.req("high_water").unwrap().as_str().unwrap(), "ckpt re-forward + grads");
+
+    // table round-trip, with exactly one peak-marked event row
+    let table = Table::from_json(doc.req("table").unwrap()).unwrap();
+    assert_eq!(table.headers.len(), 8);
+    let marked: Vec<usize> = table
+        .rows
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r[7] == "<- peak")
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(marked.len(), 1);
+    assert_eq!(marked[0], doc.req("peak_event").unwrap().as_usize().unwrap());
+    let reparsed = Json::parse(&table.to_json().pretty()).unwrap();
+    assert_eq!(Table::from_json(&reparsed).unwrap().rows, table.rows);
+}
+
+#[test]
+fn schedule_text_mode_cross_checks_against_memmodel() {
+    for technique in ["baseline", "tempo", "checkpoint"] {
+        let text = run(&["schedule", "bert-tiny", "--technique", technique]);
+        assert!(
+            text.contains("memmodel cross-check: OK"),
+            "--technique {technique}: {}",
+            text.lines().last().unwrap_or("")
+        );
+        assert!(text.contains("<- peak"));
+    }
+    // serial checkpointing prints the enumerated divergence instead
+    let text = run(&["schedule", "bert-tiny", "--technique", "checkpoint", "--serial-checkpoint"]);
+    assert!(text.contains("serial checkpointing peaks"));
+}

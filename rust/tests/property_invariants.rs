@@ -6,6 +6,7 @@
 
 use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
 use tempo::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
+use tempo::graph::{schedule_summary, SchedulePlan};
 use tempo::memmodel::{layer_activation_bytes, max_batch, ModelFootprint};
 use tempo::perfmodel::step_time;
 use tempo::tensor::Rng;
@@ -51,6 +52,55 @@ fn prop_tempo_never_increases_footprint() {
         }
         let full = layer_activation_bytes(&cfg, b, OptimizationSet::full()).total();
         assert!(full < base, "case {i}: full tempo saved nothing");
+    });
+}
+
+/// Timeline peak of a uniform rewrite plan at batch `b`.
+fn timeline_peak(cfg: &ModelConfig, opts: OptimizationSet, b: usize) -> u64 {
+    schedule_summary(cfg, &SchedulePlan::uniform(cfg, opts, true)).peak_bytes(b as u64)
+}
+
+#[test]
+fn prop_rewrites_never_increase_timeline_peak() {
+    // Adding any rewrite to an OptimizationSet never *increases* the
+    // execution-schedule timeline peak at fixed (config, batch): every
+    // rewrite either deletes a retained tensor or swaps it for a
+    // strictly narrower one, and the backward workspace is sized by the
+    // widest map whether or not its forward copy was rewritten away.
+    let one_of = ["gelu", "layernorm", "dropout", "softmax"];
+
+    // every preset × all 16 subsets × each missing rewrite
+    let presets = [
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large(),
+        ModelConfig::gpt2(),
+        ModelConfig::roberta_large(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+    ];
+    for cfg in &presets {
+        for opts in OptimizationSet::all_subsets() {
+            let base = timeline_peak(cfg, opts, 4);
+            for which in one_of {
+                let bigger = opts.union(OptimizationSet::only(which).unwrap());
+                let v = timeline_peak(cfg, bigger, 4);
+                assert!(v <= base, "{}: {opts:?} + {which} grew {v} > {base}", cfg.name);
+            }
+        }
+    }
+
+    // and seeded-random shapes/batches, property-test style
+    cases(40, 9, |rng, i| {
+        let cfg = random_config(rng);
+        let b = rng.range(1, 13);
+        for opts in OptimizationSet::all_subsets() {
+            let base = timeline_peak(&cfg, opts, b);
+            for which in one_of {
+                let bigger = opts.union(OptimizationSet::only(which).unwrap());
+                let v = timeline_peak(&cfg, bigger, b);
+                assert!(v <= base, "case {i}: {cfg:?} B={b} {opts:?} + {which} grew");
+            }
+        }
     });
 }
 

@@ -1,0 +1,442 @@
+//! Schedule/closed-form equivalence suite.
+//!
+//! The execution-schedule PR replaced the static byte sum
+//! (`params + grads + optimizer + activations + hand-written transient`)
+//! with the exact peak of a liveness timeline folded over the lowered
+//! fwd+bwd op schedule. This suite pins that refactor: the
+//! **pre-schedule closed forms are copied here verbatim as golden
+//! oracles**, and the timeline peak must equal them *bit-identically*
+//! (exact `==` on u64 bytes) across all presets × batch ∈ {1, 4, 32} ×
+//! every `OptimizationSet` subset × every technique × both heads.
+//!
+//! ## The divergence list
+//!
+//! Exactly ONE intentional divergence exists, and it is opt-in:
+//!
+//! * **Serial checkpointing** ([`SchedulePlan::serial_checkpoint`],
+//!   PyTorch-style `torch.utils.checkpoint`: no re-forward prefetch).
+//!   The static sum charged the head activations AND one block's
+//!   recompute live set simultaneously; a serial schedule frees the
+//!   head's B·S·V logits during the head backward *before* the first
+//!   re-forward segment is spliced in, so its true peak undercuts the
+//!   static sum by exactly `min(head bytes, block inventory bytes)`.
+//!   The static sum **over-counted** serial checkpointing's true peak.
+//!
+//! The *default* checkpoint schedule prefetches the top block's
+//! re-forward under the head backward (L2L-style overlap, which hides
+//! recompute latency) — under that execution order the head and one
+//! recomputed inventory genuinely coexist, which is why the legacy
+//! static sum was correct and why Table 2 / §4.2 calibration pins stay
+//! untouched. `calibration_paper.rs` remains green unchanged.
+
+use tempo::autotempo::LayerPlan;
+use tempo::config::{Gpu, ModelConfig, ModelKind, OptimizationSet, Technique};
+use tempo::graph::{lower_step, schedule_summary, EventKind, Lowering, MemClass, SchedulePlan};
+use tempo::memmodel::{max_batch, ModelFootprint};
+
+const F32: u64 = 4;
+const MASK: u64 = 1;
+
+fn presets() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large(),
+        ModelConfig::gpt2(),
+        ModelConfig::roberta_large(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+        // the Fig 7/8 ablation shapes exercise widened/long variants
+        ModelConfig::bert_base().with_hidden(2048).unwrap(),
+        ModelConfig::bert_large().with_layers(12).with_seq_len(1024),
+        ModelConfig::bert_large().with_seq_len(512),
+    ]
+}
+
+const BATCHES: [usize; 3] = [1, 4, 32];
+
+// ---------------------------------------------------------------------------
+// Golden oracles: the pre-schedule closed forms, verbatim.
+// ---------------------------------------------------------------------------
+
+/// Per-encoder-layer (float, mask, stat) bytes — the pre-refactor
+/// `memmodel::layer` closed form.
+fn oracle_layer_bytes(cfg: &ModelConfig, batch: usize, opts: OptimizationSet) -> (u64, u64, u64) {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let a = cfg.heads as u64;
+    let i = cfg.intermediate as u64;
+    let bsh = b * s * h;
+    let bsi = b * s * i;
+    let bass = b * a * s * s;
+
+    let mut float_elems: u64 = 0;
+    let mut mask_bytes: u64 = 0;
+    let mut stat_bytes: u64 = 0;
+
+    float_elems += bsh; // x
+    float_elems += 3 * bsh; // Q, K, V
+    if !opts.softmax_outonly {
+        float_elems += bass; // scores
+        if cfg.kind == ModelKind::Gpt2 {
+            float_elems += 2 * bass; // HF unfused-attention copies
+        }
+    }
+    float_elems += bass; // softmax output
+    mask_bytes += bass * MASK; // attention dropout mask
+    if !opts.dropout_recompute {
+        float_elems += bass; // dropped probs
+    }
+    float_elems += bsh; // context
+    mask_bytes += bsh * MASK; // hidden dropout mask (proj)
+    if !opts.inplace_layernorm {
+        float_elems += bsh; // LN1 input
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    float_elems += bsh; // LN1 output
+    if opts.inplace_gelu {
+        mask_bytes += bsi * MASK;
+    } else {
+        float_elems += bsi; // GELU input
+    }
+    float_elems += bsi; // GELU output
+    mask_bytes += bsh * MASK; // hidden dropout mask (FC2)
+    if !opts.inplace_layernorm {
+        float_elems += bsh; // LN2 input
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    (float_elems * F32, mask_bytes, stat_bytes)
+}
+
+fn oracle_embedding_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize) -> u64 {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h };
+    (b * s * h + ln_in + b * s * h) * F32 + b * s * h * MASK
+}
+
+fn oracle_head_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize, mlm: bool) -> u64 {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    if !mlm {
+        return 3 * b * h * F32;
+    }
+    let v = cfg.vocab_size as u64;
+    let gelu_in = if opts.inplace_gelu { b * s * h * MASK } else { b * s * h * F32 };
+    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h * F32 };
+    (3 * b * s * h + 2 * b * s * v) * F32 + gelu_in + ln_in
+}
+
+/// fp32 params + fp32 grads + Adam (m, v).
+fn oracle_states(cfg: &ModelConfig) -> u64 {
+    4 * cfg.param_count() as u64 * F32
+}
+
+/// The pre-schedule `Breakdown::total()` for Baseline/Tempo/subsets:
+/// static sum with the hand-written `2 × widest` transient.
+fn oracle_total_plain(cfg: &ModelConfig, opts: OptimizationSet, batch: usize, mlm: bool) -> u64 {
+    let (f, m, st) = oracle_layer_bytes(cfg, batch, opts);
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let wide = (b * s * cfg.intermediate as u64).max(b * cfg.heads as u64 * s * s);
+    oracle_states(cfg)
+        + cfg.layers as u64 * (f + m + st)
+        + oracle_embedding_bytes(cfg, opts, batch)
+        + oracle_head_bytes(cfg, opts, batch, mlm)
+        + 2 * wide * F32
+}
+
+/// The pre-schedule `Breakdown::total()` for Checkpoint: stored block
+/// inputs plus the hand-written `inventory + float volume` transient.
+fn oracle_total_checkpoint(cfg: &ModelConfig, batch: usize, mlm: bool) -> u64 {
+    let none = OptimizationSet::none();
+    let (f, m, st) = oracle_layer_bytes(cfg, batch, none);
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    oracle_states(cfg)
+        + cfg.layers as u64 * b * s * h * F32
+        + oracle_embedding_bytes(cfg, none, batch)
+        + oracle_head_bytes(cfg, none, batch, mlm)
+        + (f + m + st)
+        + f
+}
+
+fn peak(cfg: &ModelConfig, plan: &SchedulePlan, batch: usize) -> u64 {
+    schedule_summary(cfg, plan).peak_bytes(batch as u64)
+}
+
+// ---------------------------------------------------------------------------
+// The pin: timeline peak ≡ static sum, everywhere, bit-identically.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn timeline_peak_bit_identical_to_static_sum_for_every_rewrite_subset() {
+    for cfg in presets() {
+        for batch in BATCHES {
+            for mlm in [true, false] {
+                for opts in OptimizationSet::all_subsets() {
+                    let plan = SchedulePlan::uniform(&cfg, opts, mlm);
+                    assert_eq!(
+                        peak(&cfg, &plan, batch),
+                        oracle_total_plain(&cfg, opts, batch, mlm),
+                        "{} B={batch} mlm={mlm} {opts:?}",
+                        cfg.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn timeline_peak_bit_identical_to_static_sum_for_checkpoint() {
+    // the default (overlapped) checkpoint schedule prefetches the top
+    // block's re-forward under the head backward, so the high-water
+    // instant holds head + stored inputs + one recomputed inventory +
+    // the gradient workspace — exactly the legacy static sum
+    for cfg in presets() {
+        for batch in BATCHES {
+            for mlm in [true, false] {
+                let plan = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, mlm);
+                assert_eq!(
+                    peak(&cfg, &plan, batch),
+                    oracle_total_checkpoint(&cfg, batch, mlm),
+                    "{} B={batch} mlm={mlm}",
+                    cfg.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn techniques_map_onto_the_subset_grid() {
+    // Baseline ≡ the empty subset, Tempo ≡ the full subset — the
+    // technique plans price identically to their subset plans.
+    for cfg in [ModelConfig::bert_large().with_seq_len(512), ModelConfig::bert_tiny()] {
+        for batch in BATCHES {
+            let base = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+            assert_eq!(
+                peak(&cfg, &base, batch),
+                oracle_total_plain(&cfg, OptimizationSet::none(), batch, true)
+            );
+            let tempo = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
+            assert_eq!(
+                peak(&cfg, &tempo, batch),
+                oracle_total_plain(&cfg, OptimizationSet::full(), batch, true)
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The enumerated divergence list. One entry:
+//
+//   1. Serial checkpointing (opt-in `serial_checkpoint`): the static
+//      sum over-counted the true peak by min(head, block inventory),
+//      because without the re-forward prefetch the head activations
+//      and the recompute live set are never simultaneously alive —
+//      the head backward frees the B·S·V logits first.
+//
+// Nothing else diverges: the serial flag is a no-op for plain plans.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn divergence_1_serial_checkpoint_undercuts_static_sum_by_min_head_inventory() {
+    let none = OptimizationSet::none();
+    for cfg in presets() {
+        for batch in BATCHES {
+            for mlm in [true, false] {
+                let serial =
+                    SchedulePlan::for_technique(&cfg, Technique::Checkpoint, mlm).serial();
+                let got = peak(&cfg, &serial, batch);
+                let static_sum = oracle_total_checkpoint(&cfg, batch, mlm);
+                let (f, m, st) = oracle_layer_bytes(&cfg, batch, none);
+                let inventory = f + m + st;
+                let head = oracle_head_bytes(&cfg, none, batch, mlm);
+                assert_eq!(
+                    static_sum - got,
+                    head.min(inventory),
+                    "{} B={batch} mlm={mlm}: serial-checkpoint divergence",
+                    cfg.name
+                );
+                assert!(got < static_sum, "{}: divergence must be an over-count", cfg.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn serial_flag_is_a_noop_without_checkpointing() {
+    for cfg in [ModelConfig::bert_base(), ModelConfig::bert_tiny()] {
+        for opts in [OptimizationSet::none(), OptimizationSet::full()] {
+            let plan = SchedulePlan::uniform(&cfg, opts, true);
+            let serial = plan.clone().serial();
+            for batch in BATCHES {
+                assert_eq!(peak(&cfg, &plan, batch), peak(&cfg, &serial, batch));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Breakdown rows are the timeline's class decomposition.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn breakdown_rows_are_the_timeline_classes_and_sum_to_the_peak() {
+    for cfg in [ModelConfig::bert_large().with_seq_len(512), ModelConfig::bert_mini()] {
+        for tech in Technique::all() {
+            for batch in [1usize, 8] {
+                let fp = ModelFootprint::new(cfg.clone(), tech);
+                let bd = fp.breakdown(batch);
+                let s = schedule_summary(&cfg, &fp.plan());
+                let b = batch as u64;
+                assert_eq!(bd.params, s.class_bytes(MemClass::Params, b));
+                assert_eq!(bd.encoder_activations, s.class_bytes(MemClass::EncoderAct, b));
+                assert_eq!(bd.other_activations, s.class_bytes(MemClass::OtherAct, b));
+                assert_eq!(bd.transient, s.class_bytes(MemClass::Workspace, b));
+                assert_eq!(bd.total(), s.peak_bytes(b), "{tech:?} B={batch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_zero_collapses_to_model_states() {
+    for cfg in [ModelConfig::bert_base(), ModelConfig::bert_tiny()] {
+        for tech in Technique::all() {
+            let fp = ModelFootprint::new(cfg.clone(), tech);
+            assert_eq!(fp.total_bytes(0), oracle_states(&cfg), "{tech:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The memoized summary prices every batch exactly like a fresh fold,
+// and the high-water instant is where the semantics say it is.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn memoized_summary_equals_fresh_timeline_at_every_batch() {
+    let cfg = ModelConfig::bert_mini();
+    let lowering = Lowering::for_model(&cfg);
+    for tech in Technique::all() {
+        let plan = SchedulePlan::for_technique(&cfg, tech, true);
+        let summary = schedule_summary(&cfg, &plan);
+        let schedule = lower_step(&cfg, &plan, lowering);
+        for batch in BATCHES {
+            let tl = schedule.timeline(batch);
+            assert_eq!(summary.peak_bytes(batch as u64), tl.peak_bytes, "{tech:?} B={batch}");
+            assert_eq!(summary.peak_event, tl.peak_event, "{tech:?} B={batch}");
+        }
+    }
+}
+
+#[test]
+fn high_water_lands_where_the_semantics_say() {
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let lowering = Lowering::for_model(&cfg);
+    // plain step: the fwd→bwd turnaround, everything retained + workspace
+    let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
+    let s = lower_step(&cfg, &plan, lowering);
+    let tl = s.timeline(4);
+    assert_eq!(s.events[tl.peak_event].kind, EventKind::Turnaround);
+    // overlapped checkpoint: inside the prefetched re-forward segment
+    let ck = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+    let s = lower_step(&cfg, &ck, lowering);
+    let tl = s.timeline(4);
+    assert_eq!(s.events[tl.peak_event].kind, EventKind::Recompute);
+    // and the prefetch precedes the first backward event
+    let first_bwd = s.events.iter().position(|e| e.kind == EventKind::Backward).unwrap();
+    assert!(tl.peak_event < first_bwd);
+}
+
+// ---------------------------------------------------------------------------
+// Auto-Tempo agreement: max batch binary-searched against the timeline
+// peak equals the capacity search on the paper presets, and mixed
+// per-layer plans price as the sum of their layers.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn max_batch_against_timeline_peak_agrees_with_capacity_search() {
+    for s in [128usize, 512] {
+        let cfg = ModelConfig::bert_large().with_seq_len(s);
+        for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
+            let budget = gpu.spec().usable_bytes();
+            for tech in Technique::all() {
+                let fit = max_batch(&cfg, tech, gpu);
+                let plan = SchedulePlan::for_technique(&cfg, tech, true);
+                let at_max = peak(&cfg, &plan, fit.max_batch);
+                let over = peak(&cfg, &plan, fit.max_batch + 1);
+                assert!(at_max <= budget, "{tech:?} S={s} {gpu:?}");
+                assert!(over > budget, "{tech:?} S={s} {gpu:?}");
+                assert_eq!(at_max, fit.bytes_at_max);
+                assert_eq!(over, fit.bytes_over);
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_layer_plans_price_bit_identically_through_the_schedule() {
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let subsets = OptimizationSet::all_subsets();
+    let per_layer: Vec<OptimizationSet> =
+        (0..cfg.layers).map(|l| subsets[l % subsets.len()]).collect();
+    let plan = LayerPlan { per_layer: per_layer.clone() };
+    let none = OptimizationSet::none();
+    for batch in BATCHES {
+        let b = batch as u64;
+        let s = cfg.seq_len as u64;
+        let wide = (b * s * cfg.intermediate as u64).max(b * cfg.heads as u64 * s * s);
+        let oracle: u64 = oracle_states(&cfg)
+            + per_layer
+                .iter()
+                .map(|o| {
+                    let (f, m, st) = oracle_layer_bytes(&cfg, batch, *o);
+                    f + m + st
+                })
+                .sum::<u64>()
+            + oracle_embedding_bytes(&cfg, none, batch)
+            + oracle_head_bytes(&cfg, none, batch, true)
+            + 2 * wide * F32;
+        assert_eq!(plan.total_bytes(&cfg, batch), oracle, "B={batch}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timeline well-formedness: the schedule is a closed system.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn timeline_is_well_formed_for_every_technique() {
+    for cfg in [ModelConfig::bert_tiny(), ModelConfig::gpt2()] {
+        for tech in Technique::all() {
+            for mlm in [true, false] {
+                let plan = SchedulePlan::for_technique(&cfg, tech, mlm);
+                let schedule = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+                // (u64 underflow in the fold would panic in debug builds)
+                let tl = schedule.timeline(3);
+                assert_eq!(tl.points.len(), schedule.events.len());
+                // after the last event's frees, only model states remain
+                let last = tl.points.last().unwrap();
+                assert_eq!(
+                    last.live_bytes - last.free_bytes,
+                    oracle_states(&cfg),
+                    "{tech:?} mlm={mlm} leaks activations past the step"
+                );
+                // the peak is one of the sampled points
+                assert_eq!(tl.points[tl.peak_event].live_bytes, tl.peak_bytes);
+                assert!(tl.points.iter().all(|p| p.live_bytes <= tl.peak_bytes));
+            }
+        }
+    }
+}
