@@ -60,9 +60,9 @@ fn main() {
     });
 
     // mixed per-layer plan pricing (Auto-Tempo's inner loop)
-    let plan = LayerPlan {
-        per_layer: (0..large512.layers).map(|l| subsets[l % subsets.len()]).collect(),
-    };
+    let plan = LayerPlan::rewrites_only(
+        (0..large512.layers).map(|l| subsets[l % subsets.len()]).collect(),
+    );
     h.bench("pricing/mixed-plan/bert-large-s512", || {
         std::hint::black_box(plan.total_bytes(&large512, 4));
     });

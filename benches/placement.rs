@@ -1,0 +1,78 @@
+//! Placement-search benches: the joint (rewrite ∪ checkpoint) search
+//! cost next to the schedule layer it folds.
+//!
+//! The joint search enumerates ~1.1k canonical candidate plans on
+//! BERT-LARGE, summarizes each once (memoized per distinct plan —
+//! DESIGN.md §Schedule), dominance-prunes before pricing, and
+//! binary-searches max batch only for the survivors. This bench gives
+//! each stage a trajectory: the memoized steady-state search (what a
+//! sweep pays per cell), the same search with pruning disabled (the
+//! cost the dominance rule removes), and the uniform-family baseline.
+//! CI uploads the JSON as `BENCH_placement.json` and gates the
+//! steady-state joint search against `BENCH_schedule.json`'s
+//! lower-cold case so a memoization or pruning regression fails the
+//! leg rather than silently multiplying sweep cost.
+
+use tempo::autotempo::{placement_search, placement_search_with, PlacementMode};
+use tempo::config::{Gpu, ModelConfig};
+use tempo::graph;
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let large512 = ModelConfig::bert_large().with_seq_len(512);
+
+    // steady state: summaries memoized after the warmup iterations —
+    // the per-cell cost a placement sweep actually pays
+    h.bench("placement/joint-search/bert-large-s512-2080ti", || {
+        std::hint::black_box(placement_search(
+            &large512,
+            Gpu::Rtx2080Ti,
+            PlacementMode::Joint,
+            None,
+        ));
+    });
+
+    // target-mode search (clamped-throughput objective)
+    h.bench("placement/joint-search-target8/bert-large-s512-2080ti", || {
+        std::hint::black_box(placement_search(
+            &large512,
+            Gpu::Rtx2080Ti,
+            PlacementMode::Joint,
+            Some(8),
+        ));
+    });
+
+    // pruning disabled: every candidate pays the max-batch binary
+    // search — the work the dominance rule exists to avoid
+    h.bench("placement/joint-search-nopruning/bert-large-s512-2080ti", || {
+        std::hint::black_box(placement_search_with(
+            &large512,
+            Gpu::Rtx2080Ti,
+            PlacementMode::Joint,
+            None,
+            false,
+        ));
+    });
+
+    // the pre-placement family, for scale
+    h.bench("placement/uniform-search/bert-large-s512-2080ti", || {
+        std::hint::black_box(placement_search(
+            &large512,
+            Gpu::Rtx2080Ti,
+            PlacementMode::Uniform,
+            None,
+        ));
+    });
+
+    let d = placement_search(&large512, Gpu::Rtx2080Ti, PlacementMode::Joint, None);
+    println!(
+        "joint search funnel: {} candidates, {} pruned, {} priced; schedule cache holds {} plans",
+        d.stats.enumerated,
+        d.stats.pruned,
+        d.stats.priced,
+        graph::schedule_cache_len()
+    );
+    h.write_csv("bench_results/bench_placement.csv").unwrap();
+    h.write_json("bench_results/BENCH_placement.json").unwrap();
+}

@@ -17,7 +17,18 @@
 //! graph rewrites and max batch is a binary search against the plan's
 //! liveness-timeline peak — which is what a compiler pass would
 //! precompute; the same interface could be backed by measured probes.
+//!
+//! A third policy generalizes both: [`placement_search`] runs a
+//! **joint** search over per-layer `(rewrite subset, checkpoint arm)`
+//! assignments — the paper's rewrites *and* `SegmentCheckpoint`
+//! placement in one objective — with dominance pruning over the
+//! memoized schedule summaries (`tempo autotempo --placement joint`,
+//! `tempo placement`; DESIGN.md §Placement).
 
+mod placement;
 mod search;
 
+pub use placement::{
+    placement_search, placement_search_with, PlacementDecision, PlacementMode, PruneStats,
+};
 pub use search::{coarse_pass, fine_search, plan_throughput, AutoTempoDecision, LayerPlan};

@@ -1,48 +1,101 @@
 //! Auto-Tempo search policies over the analytical profiles.
 //!
-//! A [`LayerPlan`] is a per-layer *rewrite plan*: which of Tempo's four
-//! graph rewrites each encoder layer applies. Pricing a plan lowers it
-//! to an execution schedule ([`crate::graph::SchedulePlan`]) and reads
-//! the liveness timeline's exact peak (one memoized schedule summary
-//! per distinct plan), so max-batch searches binary-search against the
-//! true high-water instant rather than a static byte sum — the two
-//! coincide bit-identically wherever the old model was correct
-//! (`tests/schedule_equivalence.rs`).
+//! A [`LayerPlan`] is a per-layer *placement*: which of Tempo's four
+//! graph rewrites each encoder layer applies, and which checkpoint arm
+//! ([`CkptMode`]) it takes. Pricing a plan lowers it to an execution
+//! schedule ([`crate::graph::SchedulePlan`]) and reads the liveness
+//! timeline's exact peak (one memoized schedule summary per distinct
+//! plan), so max-batch searches binary-search against the true
+//! high-water instant rather than a static byte sum — the two coincide
+//! bit-identically wherever the old model was correct
+//! (`tests/schedule_equivalence.rs`). The joint (rewrites ∪
+//! checkpoint) search over this space lives in
+//! [`super::placement_search`].
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet, Technique};
-use crate::graph::{self, SchedulePlan};
-use crate::memmodel::max_batch;
+use crate::graph::{CkptMode, SchedulePlan};
+use crate::memmodel::{max_batch, max_batch_for_plan};
 use crate::perfmodel::throughput_at;
 
-/// Per-layer rewrite-plan assignment (index = encoder layer).
+/// Per-layer placement assignment (index = encoder layer): a rewrite
+/// subset plus a checkpoint arm per layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
+    /// Rewrite subset per encoder layer (ignored on checkpointed
+    /// layers: the recompute replays the unoptimized block).
     pub per_layer: Vec<OptimizationSet>,
+    /// Checkpoint arm per encoder layer.
+    pub ckpt: Vec<CkptMode>,
 }
 
 impl LayerPlan {
+    /// Uniform rewrite plan: `set` on every layer, no checkpointing.
     pub fn uniform(layers: usize, set: OptimizationSet) -> Self {
-        LayerPlan { per_layer: vec![set; layers] }
+        LayerPlan { per_layer: vec![set; layers], ckpt: vec![CkptMode::None; layers] }
     }
 
-    /// Number of layers with any optimization applied.
+    /// Checkpoint-free plan from per-layer rewrite sets (the legacy
+    /// `LayerPlan` shape; `fine_search`'s prefix plans).
+    pub fn rewrites_only(per_layer: Vec<OptimizationSet>) -> Self {
+        let n = per_layer.len();
+        LayerPlan { per_layer, ckpt: vec![CkptMode::None; n] }
+    }
+
+    /// Uniform checkpoint placement: `mode` on every layer, rewrites
+    /// off (the recompute replays the unoptimized block anyway).
+    pub fn uniform_checkpoint(layers: usize, mode: CkptMode) -> Self {
+        LayerPlan { per_layer: vec![OptimizationSet::none(); layers], ckpt: vec![mode; layers] }
+    }
+
+    /// The checkpoint arm layer `l` takes (missing entries pad to
+    /// [`CkptMode::None`]).
+    pub fn ckpt_mode(&self, l: usize) -> CkptMode {
+        self.ckpt.get(l).copied().unwrap_or(CkptMode::None)
+    }
+
+    /// Number of non-checkpointed layers with any rewrite applied.
     pub fn applied_layers(&self) -> usize {
-        self.per_layer.iter().filter(|s| s.count() > 0).count()
+        self.per_layer
+            .iter()
+            .enumerate()
+            .filter(|(l, s)| s.count() > 0 && !self.ckpt_mode(*l).is_checkpoint())
+            .count()
+    }
+
+    /// Number of checkpointed layers.
+    pub fn checkpointed_layers(&self) -> usize {
+        self.ckpt.iter().filter(|m| m.is_checkpoint()).count()
+    }
+
+    /// Total enabled rewrites across non-checkpointed layers (the
+    /// "lossy surface" the searches minimize on ties).
+    pub fn rewrite_surface(&self) -> usize {
+        self.per_layer
+            .iter()
+            .enumerate()
+            .filter(|(l, _)| !self.ckpt_mode(*l).is_checkpoint())
+            .map(|(_, s)| s.count())
+            .sum()
+    }
+
+    /// The execution-schedule plan this placement lowers to
+    /// (embedding/head at the baseline inventory, as always; MLM head).
+    pub fn schedule_plan(&self) -> SchedulePlan {
+        SchedulePlan::from_placement(self.per_layer.clone(), self.ckpt.clone(), true)
     }
 
     /// Footprint of the plan at batch `b`: the exact peak of the
     /// plan's execution-schedule liveness timeline (each layer lowered
-    /// under its own rewrite set; embedding/head at the baseline
-    /// inventory, as always).
+    /// under its own rewrite set and checkpoint arm).
     pub fn total_bytes(&self, cfg: &ModelConfig, batch: usize) -> u64 {
-        let plan = SchedulePlan::from_per_layer(self.per_layer.clone(), true);
-        graph::schedule_summary(cfg, &plan).peak_bytes(batch as u64)
+        crate::graph::schedule_summary(cfg, &self.schedule_plan()).peak_bytes(batch as u64)
     }
 }
 
 /// Outcome of an Auto-Tempo pass.
 #[derive(Debug, Clone)]
 pub struct AutoTempoDecision {
+    /// The chosen per-layer plan.
     pub plan: LayerPlan,
     /// Max batch under the plan.
     pub max_batch: usize,
@@ -53,25 +106,7 @@ pub struct AutoTempoDecision {
 }
 
 fn plan_max_batch(cfg: &ModelConfig, plan: &LayerPlan, gpu: Gpu) -> usize {
-    let budget = gpu.spec().usable_bytes();
-    let fits = |b: usize| b == 0 || plan.total_bytes(cfg, b) <= budget;
-    if !fits(1) {
-        return 0;
-    }
-    let (mut lo, mut hi) = (1usize, 2usize);
-    while fits(hi) && hi < 1 << 20 {
-        lo = hi;
-        hi *= 2;
-    }
-    while hi - lo > 1 {
-        let mid = (lo + hi) / 2;
-        if fits(mid) {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    lo
+    max_batch_for_plan(cfg, &plan.schedule_plan(), gpu).max_batch
 }
 
 /// Coarse policy: all-or-nothing, decided by a quick profile.
@@ -140,7 +175,7 @@ pub fn fine_search(cfg: &ModelConfig, gpu: Gpu, target_batch: usize) -> AutoTemp
         for set in per_layer.iter_mut().take(k) {
             *set = OptimizationSet::full();
         }
-        LayerPlan { per_layer }
+        LayerPlan::rewrites_only(per_layer)
     };
     let fits = |k: usize| plan_max_batch(cfg, &plan_for(k), gpu) >= target_batch;
     let decide = |k: usize, rationale: String| {
@@ -308,7 +343,7 @@ mod tests {
             for set in per_layer.iter_mut().take(k) {
                 *set = OptimizationSet::full();
             }
-            let plan = LayerPlan { per_layer };
+            let plan = LayerPlan::rewrites_only(per_layer);
             let bytes = plan.total_bytes(&cfg, 2);
             assert!(bytes < prev, "k={k}");
             prev = bytes;

@@ -8,12 +8,16 @@
 /// The paper's evaluation GPUs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Gpu {
+    /// RTX 2080 Ti (11 GB GDDR6, PCIe ring).
     Rtx2080Ti,
+    /// V100 SXM2 (16 GB HBM2, NVLink).
     V100,
+    /// A100 (40 GB, single-GPU ablation box).
     A100,
 }
 
 impl Gpu {
+    /// Display name (`2080Ti`, `V100`, `A100`).
     pub fn name(self) -> &'static str {
         match self {
             Gpu::Rtx2080Ti => "2080Ti",
@@ -22,6 +26,7 @@ impl Gpu {
         }
     }
 
+    /// Static hardware description for the capacity/roofline models.
     pub fn spec(self) -> GpuSpec {
         match self {
             // 2080 Ti: 11 GB GDDR6, 616 GB/s, ~108 TFLOPS fp16 tensor
@@ -64,6 +69,7 @@ impl Gpu {
         }
     }
 
+    /// The paper's three test platforms, smallest memory first.
     pub fn all() -> [Gpu; 3] {
         [Gpu::Rtx2080Ti, Gpu::V100, Gpu::A100]
     }
@@ -75,6 +81,7 @@ const GIB: u64 = 1024 * 1024 * 1024;
 /// perfmodel (roofline).
 #[derive(Debug, Clone, Copy)]
 pub struct GpuSpec {
+    /// Which GPU this spec describes.
     pub gpu: Gpu,
     /// Total device memory.
     pub mem_bytes: u64,

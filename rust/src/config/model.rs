@@ -11,12 +11,16 @@
 /// learned positions; GPT2 uses causal attention, same memory shape).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelKind {
+    /// BERT-style bidirectional encoder (fused-attention lowering).
     Bert,
+    /// GPT2-style decoder (HF unfused-attention lowering by default).
     Gpt2,
+    /// RoBERTa (BERT-shaped; different vocab/positions).
     Roberta,
 }
 
 impl ModelKind {
+    /// Short family name (artifact/manifest naming).
     pub fn name(self) -> &'static str {
         match self {
             ModelKind::Bert => "bert",
@@ -29,7 +33,9 @@ impl ModelKind {
 /// Model hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Preset name (builders append suffixes, e.g. `bert-large-s512`).
     pub name: String,
+    /// Architectural family (drives the default lowering rules).
     pub kind: ModelKind,
     /// Hidden size H.
     pub hidden: usize,
@@ -41,9 +47,13 @@ pub struct ModelConfig {
     pub seq_len: usize,
     /// FFN inner size (4H for the standard Transformer).
     pub intermediate: usize,
+    /// Vocabulary size V (the B·S·V head terms).
     pub vocab_size: usize,
+    /// Learned position-embedding count.
     pub max_position: usize,
+    /// Token-type (segment) vocabulary size.
     pub type_vocab: usize,
+    /// Dropout probability (data/PRNG side; memory model is p-free).
     pub dropout_p: f64,
 }
 
@@ -101,6 +111,7 @@ impl ModelConfig {
 
     // ---- presets -----------------------------------------------------------
 
+    /// BERT-BASE (H=768, L=12; Table 2, Fig 9).
     pub fn bert_base() -> ModelConfig {
         ModelConfig {
             name: "bert-base".into(),
@@ -117,6 +128,7 @@ impl ModelConfig {
         }
     }
 
+    /// BERT-LARGE (H=1024, L=24; the paper's flagship).
     pub fn bert_large() -> ModelConfig {
         ModelConfig {
             name: "bert-large".into(),
@@ -185,6 +197,7 @@ impl ModelConfig {
         }
     }
 
+    /// 4-layer scaled-down config (CPU testbed; small-model tests).
     pub fn bert_mini() -> ModelConfig {
         ModelConfig {
             name: "bert-mini".into(),

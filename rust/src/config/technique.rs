@@ -14,6 +14,7 @@ pub enum Technique {
 }
 
 impl Technique {
+    /// Display name (Table 2 / figure row labels).
     pub fn name(self) -> &'static str {
         match self {
             Technique::Baseline => "Baseline",
@@ -22,6 +23,7 @@ impl Technique {
         }
     }
 
+    /// The three compared methods, in the paper's presentation order.
     pub fn all() -> [Technique; 3] {
         [Technique::Baseline, Technique::Checkpoint, Technique::Tempo]
     }
@@ -105,6 +107,7 @@ impl OptimizationSet {
             .collect()
     }
 
+    /// Compact label for tables (`tempo(all)`, `none`, `gelu+drop`…).
     pub fn label(&self) -> String {
         if *self == Self::full() {
             return "tempo(all)".into();

@@ -7,8 +7,11 @@ use crate::{Error, Result};
 pub struct TrainingConfig {
     /// Artifact name (see `artifacts/index.json`).
     pub artifact: String,
+    /// Total optimizer steps.
     pub steps: usize,
+    /// Linear-warmup steps before `peak_lr` is reached.
     pub warmup_steps: usize,
+    /// Peak learning rate (top of the warmup ramp).
     pub peak_lr: f64,
     /// Seed for data generation and the in-graph dropout PRNG.
     pub seed: u64,

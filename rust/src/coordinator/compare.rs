@@ -18,7 +18,9 @@ use super::trainer::{Trainer, TrainerOptions};
 /// One variant's loss trajectory.
 #[derive(Debug, Clone)]
 pub struct LossCurve {
+    /// Artifact (variant) name.
     pub artifact: String,
+    /// Per-step training losses.
     pub losses: Vec<f64>,
 }
 

@@ -80,6 +80,28 @@ impl ExperimentEngine {
     /// holds cell `i`'s result regardless of completion order. A cell
     /// that returns `Err` (or panics) fills its slot with the error and
     /// the sweep continues.
+    ///
+    /// The DESIGN.md §Concurrency contract, executable — slot
+    /// stability and failing-cell isolation:
+    ///
+    /// ```
+    /// use tempo::coordinator::ExperimentEngine;
+    ///
+    /// let engine = ExperimentEngine::new(4);
+    /// let cells = engine.run_cells(8, |i| {
+    ///     if i == 3 {
+    ///         Err(tempo::Error::Backend("cell 3 failed".into()))
+    ///     } else {
+    ///         Ok(i * i)
+    ///     }
+    /// });
+    /// // slot i == cell i, for every --jobs setting
+    /// assert_eq!(cells.len(), 8);
+    /// assert_eq!(*cells[2].as_ref().unwrap(), 4);
+    /// assert_eq!(*cells[7].as_ref().unwrap(), 49);
+    /// // the failing cell fills its own slot; the sweep completed
+    /// assert!(cells[3].is_err());
+    /// ```
     pub fn run_cells<T, F>(&self, n: usize, f: F) -> Vec<Result<T>>
     where
         T: Send,

@@ -30,6 +30,7 @@ pub(crate) const EVAL_SEED_SALT: u64 = 0xE7A1;
 /// Accuracy trajectory of one trial.
 #[derive(Debug, Clone)]
 pub struct TrialCurve {
+    /// The trial's fully-folded seed.
     pub seed: u64,
     /// accuracy after each eval point
     pub accuracy: Vec<f64>,
@@ -38,6 +39,7 @@ pub struct TrialCurve {
 /// Aggregated fine-tuning result for one artifact.
 #[derive(Debug, Clone)]
 pub struct FinetuneResult {
+    /// Artifact name the trials ran on.
     pub artifact: String,
     /// Successful trials, in trial order.
     pub trials: Vec<TrialCurve>,

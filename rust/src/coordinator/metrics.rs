@@ -7,9 +7,13 @@ use crate::tensor::OnlineStats;
 /// One logged training step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepRecord {
+    /// Global step counter.
     pub step: i64,
+    /// Training loss at this step.
     pub loss: f64,
+    /// Learning rate applied.
     pub lr: f64,
+    /// Wall-clock (or modeled) step latency.
     pub step_time: Duration,
 }
 
@@ -24,6 +28,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Empty metrics for a run at `batch_size`.
     pub fn new(batch_size: usize) -> Self {
         Metrics {
             records: Vec::new(),
@@ -44,14 +49,17 @@ impl Metrics {
         self.records.push(rec);
     }
 
+    /// All recorded steps, in order.
     pub fn records(&self) -> &[StepRecord] {
         &self.records
     }
 
+    /// Exponential-moving-average loss, if any step was recorded.
     pub fn ema_loss(&self) -> Option<f64> {
         self.ema_loss
     }
 
+    /// Loss of the most recent step.
     pub fn last_loss(&self) -> Option<f64> {
         self.records.last().map(|r| r.loss)
     }
@@ -66,6 +74,7 @@ impl Metrics {
         }
     }
 
+    /// Mean step latency across recorded steps.
     pub fn mean_step_time(&self) -> Duration {
         Duration::from_secs_f64(self.step_stats.mean())
     }

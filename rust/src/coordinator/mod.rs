@@ -3,11 +3,13 @@
 //! (sim by default, PJRT under `--features pjrt`).
 //!
 //! * [`Trainer`] — the training loop (schedule, metrics, checkpoints).
-//! * [`engine`] — the concurrent experiment engine: sweeps fan out
-//!   across a scoped-thread pool with deterministic, grid-ordered
-//!   results and per-cell error capture (DESIGN.md §Concurrency).
-//! * [`compare`] — baseline-vs-tempo loss-curve runs (Fig 6a analogue).
-//! * [`finetune`] — MRPC-analogue classification trials (Fig 6b).
+//! * [`ExperimentEngine`] — the concurrent experiment engine: sweeps
+//!   fan out across a scoped-thread pool with deterministic,
+//!   grid-ordered results and per-cell error capture (DESIGN.md
+//!   §Concurrency; `run_cells`'s doctest shows the contract).
+//! * [`compare_variants`] — baseline-vs-tempo loss-curve runs (Fig 6a
+//!   analogue).
+//! * [`finetune_trials`] — MRPC-analogue classification trials (Fig 6b).
 
 mod compare;
 mod engine;

@@ -155,6 +155,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
         &self.artifact
     }
 
+    /// Rolling metrics of the run so far.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }

@@ -7,11 +7,15 @@
 
 use crate::tensor::Rng;
 
-/// Reserved special token ids (BERT conventions).
+/// Reserved padding token id (BERT conventions).
 pub const PAD: i32 = 0;
+/// `[CLS]` token id.
 pub const CLS: i32 = 1;
+/// `[SEP]` token id.
 pub const SEP: i32 = 2;
+/// `[MASK]` token id.
 pub const MASK: i32 = 3;
+/// `[UNK]` token id (reserved; the synthetic corpus never emits it).
 #[allow(dead_code)]
 pub const UNK: i32 = 4;
 /// First ordinary vocabulary id.
@@ -20,6 +24,7 @@ pub const FIRST_WORD: i32 = 5;
 /// Corpus generation parameters.
 #[derive(Debug, Clone)]
 pub struct CorpusConfig {
+    /// Vocabulary size (including the reserved special ids).
     pub vocab_size: usize,
     /// Zipf exponent (≈1 for natural language).
     pub zipf_s: f64,
@@ -45,6 +50,7 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// Seeded corpus with a precomputed cumulative Zipf table.
     pub fn new(cfg: CorpusConfig, seed: u64) -> Self {
         let n_words = cfg.vocab_size - FIRST_WORD as usize;
         let mut cumw = Vec::with_capacity(n_words);
@@ -56,6 +62,7 @@ impl Corpus {
         Corpus { cfg, cumw, seed }
     }
 
+    /// The configured vocabulary size.
     pub fn vocab_size(&self) -> usize {
         self.cfg.vocab_size
     }

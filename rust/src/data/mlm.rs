@@ -12,6 +12,7 @@ pub struct MlmConfig {
     pub mask_prob: f64,
     /// Of the selected: replaced by [MASK] (0.8), random (0.1), kept (0.1).
     pub replace_mask: f64,
+    /// Of the selected: replaced by a random token.
     pub replace_random: f64,
 }
 
@@ -24,9 +25,13 @@ impl Default for MlmConfig {
 /// One MLM training batch in the artifact ABI layout.
 #[derive(Debug, Clone)]
 pub struct MlmBatch {
+    /// `B×S` token ids (with `[MASK]`/random substitutions applied).
     pub input_ids: HostTensor,
+    /// `B×S` segment ids (all zero for single-sentence MLM).
     pub token_type_ids: HostTensor,
+    /// `B×S` attention mask (1 = real token, 0 = padding).
     pub attention_mask: HostTensor,
+    /// `B×S` MLM labels (-100 on unmasked positions).
     pub labels: HostTensor,
 }
 
@@ -47,6 +52,7 @@ pub struct MlmBatcher {
 }
 
 impl MlmBatcher {
+    /// Seeded batcher over `corpus` with the ABI's batch/sequence shape.
     pub fn new(corpus: Corpus, cfg: MlmConfig, batch_size: usize, seq_len: usize, seed: u64) -> Self {
         MlmBatcher { corpus, cfg, batch_size, seq_len, rng: Rng::new(seed) }
     }

@@ -20,15 +20,20 @@ use crate::Result;
 /// One classification batch (labels packed in column 0, ABI with cls task).
 #[derive(Debug, Clone)]
 pub struct PairBatch {
+    /// `B×S` token ids (`[CLS] a [SEP] b [SEP]`).
     pub input_ids: HostTensor,
+    /// `B×S` segment ids (0 for sentence a, 1 for sentence b).
     pub token_type_ids: HostTensor,
+    /// `B×S` attention mask (1 = real token, 0 = padding).
     pub attention_mask: HostTensor,
+    /// Labels packed in column 0 of a `B×S` tensor (the cls ABI).
     pub labels: HostTensor,
     /// Plain copy of the per-row labels for host-side accuracy checks.
     pub label_vec: Vec<i32>,
 }
 
 impl PairBatch {
+    /// The four tensors in manifest `batch_inputs` order.
     pub fn tensors(&self) -> [&HostTensor; 4] {
         [&self.input_ids, &self.token_type_ids, &self.attention_mask, &self.labels]
     }
@@ -45,6 +50,7 @@ pub struct PairTask {
 }
 
 impl PairTask {
+    /// Seeded pair generator with the ABI's batch/sequence shape.
     pub fn new(corpus: Corpus, batch_size: usize, seq_len: usize, seed: u64) -> Self {
         PairTask { corpus, batch_size, seq_len, rng: Rng::new(seed), noise: 0.2 }
     }

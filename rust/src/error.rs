@@ -19,6 +19,7 @@ pub enum Error {
     Invalid(String),
 }
 
+/// Crate-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;
 
 impl fmt::Display for Error {

@@ -42,6 +42,7 @@ pub struct LivePoint {
 pub struct LivenessTimeline {
     /// One sample per schedule event, in order.
     pub points: Vec<LivePoint>,
+    /// The curve's maximum (the step's true footprint).
     pub peak_bytes: u64,
     /// Index (into `points`/the schedule's events) of the first
     /// high-water sample.

@@ -44,6 +44,7 @@ pub enum Topology {
 /// Architecture-specific lowering rules for one encoder/decoder block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Lowering {
+    /// Where the LayerNorms sit (post-LN BERT vs pre-LN GPT2).
     pub topology: Topology,
     /// HF GPT2 unfused attention: retain 2 extra B·A·S² score copies.
     pub unfused_attention: bool,
@@ -77,8 +78,11 @@ impl Lowering {
 /// A lowered transformer block: ops in dataflow order.
 #[derive(Debug, Clone)]
 pub struct BlockGraph {
+    /// Block kind (`encoder` / `embedding` / `mlm-head` / `cls-head`).
     pub name: &'static str,
+    /// Ops in dataflow order.
     pub ops: Vec<Op>,
+    /// The lowering rules this block was built under.
     pub lowering: Lowering,
     /// Elements (per batch item) of the block's input tensor — what a
     /// segment-level checkpoint rewrite stores instead of the inventory.
@@ -146,18 +150,22 @@ impl BlockGraph {
 }
 
 impl BlockSummary {
+    /// Retained fp32 feature-map bytes at batch B.
     pub fn float_bytes(&self, batch: u64) -> u64 {
         self.map_elems * batch * 4
     }
 
+    /// Retained 1-byte-mask bytes at batch B.
     pub fn mask_bytes(&self, batch: u64) -> u64 {
         self.mask_elems * batch
     }
 
+    /// Retained per-row-statistic bytes at batch B.
     pub fn stat_bytes(&self, batch: u64) -> u64 {
         self.stat_elems * batch * 4
     }
 
+    /// All retained bytes at batch B.
     pub fn total_bytes(&self, batch: u64) -> u64 {
         self.float_bytes(batch) + self.mask_bytes(batch) + self.stat_bytes(batch)
     }

@@ -6,27 +6,27 @@
 //! technique does to that inventory (§3.1–3.4). This module is that
 //! inventory, stated **once**:
 //!
-//! * [`lower`] — `ModelConfig` lowers to a typed op graph per block
+//! * `lower` — `ModelConfig` lowers to a typed op graph per block
 //!   (`Matmul`, `Softmax`, `Dropout`, `LayerNorm`, `Gelu`, `Residual`),
 //!   each op annotated with its retained-for-backward tensors (shape ×
 //!   dtype: fp32 map, 1-byte mask, per-row stat) and its forward
 //!   FLOP/traffic census. Architecture differences (GPT2's unfused
 //!   attention, pre-LN topology, causal-attention census) are lowering
 //!   rules, not inline `if`s.
-//! * [`tensor`] — Tempo's four techniques are **graph rewrites**
+//! * `tensor` — Tempo's four techniques are **graph rewrites**
 //!   ([`RewriteKind`]): in-place GELU swaps a retained fp32 map for a
 //!   mask, output-only softmax deletes the scores tensor, dropout
 //!   recomputation drops a map and adds backward vector work, in-place
 //!   LayerNorm trades mean/var + input for one rstd. Whole-segment
 //!   checkpointing is the block-level rewrite [`SegmentCheckpoint`].
-//! * [`memo`] — summaries are memoized per
+//! * `memo` — summaries are memoized per
 //!   `(block, dims, lowering, rewrite set)` at unit batch (everything
 //!   scales linearly in B), so sweeps that re-price thousands of cells
 //!   fold cached `Arc<BlockSummary>`s instead of re-lowering.
-//! * [`table`] — the Fig 1 reproduction behind `tempo graph`: every
+//! * `table` — the Fig 1 reproduction behind `tempo graph`: every
 //!   tensor with shape, dtype, bytes, and which rewrite removed/added
 //!   it.
-//! * [`schedule`] + [`liveness`] — the whole-model chain (embedding →
+//! * `schedule` + `liveness` — the whole-model chain (embedding →
 //!   N blocks → head) lowered to a time-ordered fwd+bwd **event
 //!   timeline** with tensor alloc/free edges; rewrites move frees into
 //!   the op, `SegmentCheckpoint` moves frees to the block exit and
@@ -64,8 +64,8 @@ pub use memo::{
 pub use liveness::{LivePoint, LivenessTimeline, ScheduleSummary};
 pub use op::{Census, Op, OpKind};
 pub use schedule::{
-    lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, EventKind, MemClass,
-    SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule, MEM_CLASS_COUNT,
+    lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, CkptMode, EventKind,
+    MemClass, SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule, MEM_CLASS_COUNT,
 };
 pub use table::{block_rows, live_totals, tensor_table, tensor_table_with, ClassTotals, TensorRow};
 pub use tensor::{RetainedTensor, RewriteKind, TensorClass};

@@ -6,6 +6,7 @@ use super::tensor::{RetainedTensor, RewriteKind, TensorClass};
 
 /// The op vocabulary of a transformer block (paper Fig 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // variants are the standard transformer op names
 pub enum OpKind {
     Matmul,
     Softmax,
@@ -16,6 +17,7 @@ pub enum OpKind {
 }
 
 impl OpKind {
+    /// Lower-case op-kind name.
     pub fn name(self) -> &'static str {
         match self {
             OpKind::Matmul => "matmul",
@@ -45,22 +47,27 @@ pub struct Census {
 }
 
 impl Census {
+    /// The zero census (no work).
     pub const ZERO: Census = Census { matmul_flops: 0.0, vector_flops: 0.0, vector_bytes: 0.0 };
 
+    /// Pure tensor-core work.
     pub fn matmul(flops: f64) -> Census {
         Census { matmul_flops: flops, ..Census::ZERO }
     }
 
+    /// Pure elementwise work (FLOPs + HBM traffic).
     pub fn vector(flops: f64, bytes: f64) -> Census {
         Census { matmul_flops: 0.0, vector_flops: flops, vector_bytes: bytes }
     }
 
+    /// Componentwise accumulate.
     pub fn add(&mut self, o: Census) {
         self.matmul_flops += o.matmul_flops;
         self.vector_flops += o.vector_flops;
         self.vector_bytes += o.vector_bytes;
     }
 
+    /// Componentwise scale (batch, backward 2×, recompute 1.25×).
     pub fn scale(mut self, f: f64) -> Census {
         self.matmul_flops *= f;
         self.vector_flops *= f;
@@ -75,8 +82,11 @@ impl Census {
 /// adds when enabled.
 #[derive(Debug, Clone)]
 pub struct Op {
+    /// Op vocabulary entry.
     pub kind: OpKind,
+    /// Instance name in dataflow order, e.g. `ffn.gelu`.
     pub name: &'static str,
+    /// Superset retained-tensor inventory (filtered by rewrite sets).
     pub retained: Vec<RetainedTensor>,
     /// Forward work per batch item (backward ≈ 2× forward is applied at
     /// the step level, exactly like the legacy closed form).
@@ -87,15 +97,18 @@ pub struct Op {
 }
 
 impl Op {
+    /// A new op with its forward census and an empty inventory.
     pub fn new(kind: OpKind, name: &'static str, fwd: Census) -> Op {
         Op { kind, name, retained: Vec::new(), fwd, overhead: None }
     }
 
+    /// Builder: add a retained tensor.
     pub fn retain(mut self, t: RetainedTensor) -> Op {
         self.retained.push(t);
         self
     }
 
+    /// Builder: attach a rewrite's extra backward census.
     pub fn with_overhead(mut self, rw: RewriteKind, c: Census) -> Op {
         self.overhead = Some((rw, c));
         self

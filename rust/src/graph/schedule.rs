@@ -43,8 +43,8 @@
 //!   coexist — exactly the `full inventory + float volume` transient
 //!   the old closed form charged on top of the head.
 //!
-//! The one *intentional divergence* is opt-in:
-//! [`SchedulePlan::serial_checkpoint`] models PyTorch-style serial
+//! The one *intentional divergence* is opt-in: [`CkptMode::Serial`]
+//! (via [`SchedulePlan::serial`]) models PyTorch-style serial
 //! checkpointing (no prefetch), whose true peak is **lower** than the
 //! static sum by exactly `min(head bytes, block inventory)` — the
 //! static model double-charged the head activations and the recompute
@@ -52,6 +52,19 @@
 //! equivalence test enumerates and justifies this divergence; the
 //! calibrated defaults (Table 2, §4.2 pins) keep the overlapped
 //! semantics.
+//!
+//! **Per-layer placement.** Checkpointing is a per-layer arm, not a
+//! whole-model switch: every encoder layer independently carries a
+//! [`CkptMode`] (`None` | `Overlapped` | `Serial`) next to its rewrite
+//! subset, so one plan can checkpoint the bottom blocks and leave
+//! rewrites on the rest — the joint search space Auto-Tempo's
+//! placement pass explores (`autotempo::placement`, DESIGN.md
+//! §Placement). An `Overlapped` layer's re-forward is hoisted above the
+//! *preceding* segment's backward (the L2L-style prefetch) unless that
+//! segment is itself checkpointed — the model keeps a single re-forward
+//! buffer, never a pipeline of them — while a `Serial` layer recomputes
+//! strictly in place. Uniform plans reproduce the legacy `checkpoint:
+//! bool` semantics bit-identically.
 
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -69,8 +82,11 @@ use super::op::Census;
 /// instant instead of hand-written.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemClass {
+    /// fp32 parameters.
     Params,
+    /// fp32 gradients.
     Grads,
+    /// Adam `m`+`v` state.
     OptimizerState,
     /// Encoder-layer retained activations (checkpoint: the stored
     /// block inputs).
@@ -86,6 +102,7 @@ pub enum MemClass {
 pub const MEM_CLASS_COUNT: usize = 6;
 
 impl MemClass {
+    /// Stable array index for fold accumulators.
     pub fn index(self) -> usize {
         match self {
             MemClass::Params => 0,
@@ -97,6 +114,7 @@ impl MemClass {
         }
     }
 
+    /// Breakdown-row label.
     pub fn name(self) -> &'static str {
         match self {
             MemClass::Params => "params",
@@ -114,14 +132,18 @@ impl MemClass {
 pub enum Segment {
     /// Model states (params/grads/optimizer), step-lifetime.
     Setup,
+    /// The embedding block.
     Embedding,
+    /// Encoder layer `l`.
     Encoder(usize),
+    /// The MLM/classification head.
     Head,
     /// Step-level events: turnaround, optimizer step.
     Step,
 }
 
 impl Segment {
+    /// Compact segment label (`emb`, `enc3`, `head`, …).
     pub fn label(self) -> String {
         match self {
             Segment::Setup => "model".into(),
@@ -154,6 +176,7 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Compact event label for the schedule table.
     pub fn label(self) -> &'static str {
         match self {
             EventKind::Setup => "setup",
@@ -171,15 +194,18 @@ impl EventKind {
 /// (`fixed_bytes`). Exactly one of the two is nonzero.
 #[derive(Debug, Clone)]
 pub struct SchedTensor {
+    /// Tensor name (matches the IR's retained-tensor names).
     pub name: &'static str,
     /// Batch-independent bytes (model states).
     pub fixed_bytes: u64,
     /// Bytes per batch item (activations, masks, workspaces).
     pub item_bytes: u64,
+    /// Memory class this allocation folds into.
     pub class: MemClass,
 }
 
 impl SchedTensor {
+    /// Bytes at a concrete batch (`fixed + item·B`, exact).
     pub fn bytes_at(&self, batch: u64) -> u64 {
         self.fixed_bytes + self.item_bytes * batch
     }
@@ -188,8 +214,11 @@ impl SchedTensor {
 /// One op event on the timeline.
 #[derive(Debug, Clone)]
 pub struct ScheduleEvent {
+    /// What the event does (fwd/bwd/recompute/…).
     pub kind: EventKind,
+    /// Which model segment it belongs to.
     pub segment: Segment,
+    /// Op name (matches the IR's op names).
     pub name: &'static str,
     /// Tensors allocated by this event that stay live afterwards.
     pub allocs: Vec<u32>,
@@ -211,47 +240,82 @@ pub struct ScheduleEvent {
 /// The lowered step: a time-ordered event list over a tensor table.
 #[derive(Debug, Clone)]
 pub struct StepSchedule {
+    /// Every allocation the step makes, indexed by the events' ids.
     pub tensors: Vec<SchedTensor>,
+    /// The time-ordered event list.
     pub events: Vec<ScheduleEvent>,
 }
 
-/// What to lower: which rewrites each encoder layer applies, what the
-/// embedding/head blocks apply, and whether segment checkpointing
-/// replaces the per-layer inventories.
+/// Per-layer checkpoint arm: how (and whether) one encoder layer's
+/// inventory is replaced by the `SegmentCheckpoint` transform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CkptMode {
+    /// No checkpointing — the layer retains its (possibly rewritten)
+    /// inventory until its backward.
+    None,
+    /// L2L-style checkpointing: the re-forward is prefetched under the
+    /// preceding segment's backward (hides recompute latency; one
+    /// recomputed inventory coexists with that segment's live set).
+    Overlapped,
+    /// PyTorch-style checkpointing: the re-forward runs strictly before
+    /// the layer's own backward. Lower peak than `Overlapped` (the
+    /// enumerated divergence in `tests/schedule_equivalence.rs`), same
+    /// work census.
+    Serial,
+}
+
+impl CkptMode {
+    /// Whether this arm applies the segment-checkpoint transform.
+    pub fn is_checkpoint(self) -> bool {
+        self != CkptMode::None
+    }
+
+    /// Short arm label for plan tables (`-` / `overlap` / `serial`).
+    pub fn label(self) -> &'static str {
+        match self {
+            CkptMode::None => "-",
+            CkptMode::Overlapped => "overlap",
+            CkptMode::Serial => "serial",
+        }
+    }
+}
+
+/// What to lower: which rewrites each encoder layer applies, which
+/// checkpoint arm each layer takes, and what the embedding/head blocks
+/// apply.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulePlan {
     /// Per-encoder-layer rewrite sets (Auto-Tempo's search space).
+    /// Shorter-than-model vectors pad the missing layers with
+    /// `OptimizationSet::none()`.
     pub per_layer: Vec<OptimizationSet>,
+    /// Per-encoder-layer checkpoint arm. A checkpointed layer ignores
+    /// its rewrite set: the recompute replays the *unoptimized* block,
+    /// like the legacy whole-model checkpoint. Shorter-than-model
+    /// vectors pad the missing layers with [`CkptMode::None`].
+    pub ckpt: Vec<CkptMode>,
     /// Rewrites applied to the embedding and head blocks.
     pub other: OptimizationSet,
-    /// Segment-level checkpointing (per-layer sets are ignored: the
-    /// recompute replays the *unoptimized* block, like the legacy
-    /// model).
-    pub checkpoint: bool,
     /// MLM head (pre-training, B·S·V logits) vs classification head.
     pub mlm_head: bool,
-    /// Serial (PyTorch-style) checkpointing: no re-forward prefetch
-    /// under the head backward. The timeline peak then drops below the
-    /// legacy static sum by exactly `min(head, inventory)` — the
-    /// enumerated divergence in `tests/schedule_equivalence.rs`.
-    pub serial_checkpoint: bool,
 }
 
 impl SchedulePlan {
     /// The plan a top-level technique induces (what
-    /// `memmodel::ModelFootprint::new` prices).
+    /// `memmodel::ModelFootprint::new` prices). `Technique::Checkpoint`
+    /// is the uniform [`CkptMode::Overlapped`] placement — the legacy
+    /// semantics the Table 2 / §4.2 calibration pins price.
     pub fn for_technique(cfg: &ModelConfig, technique: Technique, mlm_head: bool) -> SchedulePlan {
         let opts = match technique {
             Technique::Tempo => OptimizationSet::full(),
             _ => OptimizationSet::none(),
         };
-        SchedulePlan {
-            per_layer: vec![opts; cfg.layers],
-            other: opts,
-            checkpoint: technique == Technique::Checkpoint,
-            mlm_head,
-            serial_checkpoint: false,
-        }
+        let ckpt = if technique == Technique::Checkpoint {
+            vec![CkptMode::Overlapped; cfg.layers]
+        } else {
+            Vec::new()
+        };
+        SchedulePlan { per_layer: vec![opts; cfg.layers], ckpt, other: opts, mlm_head }
     }
 
     /// Uniform rewrite subset on every block (Fig 12 ablations,
@@ -259,29 +323,53 @@ impl SchedulePlan {
     pub fn uniform(cfg: &ModelConfig, opts: OptimizationSet, mlm_head: bool) -> SchedulePlan {
         SchedulePlan {
             per_layer: vec![opts; cfg.layers],
+            ckpt: Vec::new(),
             other: opts,
-            checkpoint: false,
             mlm_head,
-            serial_checkpoint: false,
         }
     }
 
-    /// Auto-Tempo's mixed per-layer plan (embedding/head stay at the
-    /// baseline inventory, like `LayerPlan` pricing always has).
+    /// Auto-Tempo's mixed per-layer rewrite plan (embedding/head stay
+    /// at the baseline inventory, like `LayerPlan` pricing always has).
     pub fn from_per_layer(per_layer: Vec<OptimizationSet>, mlm_head: bool) -> SchedulePlan {
-        SchedulePlan {
-            per_layer,
-            other: OptimizationSet::none(),
-            checkpoint: false,
-            mlm_head,
-            serial_checkpoint: false,
-        }
+        Self::from_placement(per_layer, Vec::new(), mlm_head)
     }
 
-    /// Builder: switch to serial (no-prefetch) checkpoint semantics.
+    /// A full joint placement: per-layer rewrite sets plus per-layer
+    /// checkpoint arms (embedding/head stay at the baseline inventory).
+    pub fn from_placement(
+        per_layer: Vec<OptimizationSet>,
+        ckpt: Vec<CkptMode>,
+        mlm_head: bool,
+    ) -> SchedulePlan {
+        SchedulePlan { per_layer, ckpt, other: OptimizationSet::none(), mlm_head }
+    }
+
+    /// Builder: switch every overlapped layer to serial (no-prefetch)
+    /// checkpoint semantics. A no-op on checkpoint-free plans.
     pub fn serial(mut self) -> SchedulePlan {
-        self.serial_checkpoint = true;
+        for m in &mut self.ckpt {
+            if *m == CkptMode::Overlapped {
+                *m = CkptMode::Serial;
+            }
+        }
         self
+    }
+
+    /// The checkpoint arm layer `l` takes (missing entries pad to
+    /// [`CkptMode::None`]).
+    pub fn ckpt_mode(&self, l: usize) -> CkptMode {
+        self.ckpt.get(l).copied().unwrap_or(CkptMode::None)
+    }
+
+    /// Whether any layer applies the segment-checkpoint transform.
+    pub fn any_checkpoint(&self) -> bool {
+        self.ckpt.iter().any(|m| m.is_checkpoint())
+    }
+
+    /// Number of checkpointed layers.
+    pub fn checkpointed_layers(&self) -> usize {
+        self.ckpt.iter().filter(|m| m.is_checkpoint()).count()
     }
 
     /// `Some(opts)` when every layer applies the same subset (the
@@ -298,9 +386,25 @@ impl SchedulePlan {
     /// Human-readable plan label for reports.
     pub fn label(&self) -> String {
         let head = if self.mlm_head { "mlm" } else { "cls" };
-        if self.checkpoint {
-            let mode = if self.serial_checkpoint { "serial" } else { "overlapped" };
+        let layers = self.per_layer.len().max(self.ckpt.len());
+        let n_ckpt = self.checkpointed_layers();
+        if n_ckpt > 0 && n_ckpt == layers {
+            let mode = if self.ckpt.iter().all(|m| *m == CkptMode::Serial) {
+                "serial"
+            } else {
+                "overlapped"
+            };
             return format!("checkpoint({mode}), {head} head");
+        }
+        if n_ckpt > 0 {
+            return format!(
+                "mixed placement ({}/{layers} layers optimized, {n_ckpt} checkpointed), {head} head",
+                self.per_layer
+                    .iter()
+                    .zip((0..layers).map(|l| self.ckpt_mode(l)))
+                    .filter(|(o, m)| o.count() > 0 && !m.is_checkpoint())
+                    .count(),
+            );
         }
         match self.uniform_opts() {
             Some(o) => format!("{}, {head} head", o.label()),
@@ -461,11 +565,21 @@ impl Builder {
 /// Lower one full training step of `cfg` under `plan` into a
 /// [`StepSchedule`]: embedding → encoder layers → head forward, the
 /// turnaround workspace, then the mirrored backward (with checkpoint
-/// re-forward segments spliced in where the plan asks for them).
+/// re-forward segments spliced in where the plan's per-layer
+/// [`CkptMode`] arms ask for them).
 pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) -> StepSchedule {
+    /// Forward bookkeeping for one encoder layer: either the per-op
+    /// retained-tensor ids of a plain layer, or the stored-input id of
+    /// a checkpointed one.
+    enum LayerFwd {
+        Plain(Vec<Vec<u32>>),
+        Ckpt(u32),
+    }
+
     let mut b = Builder::default();
     let layer_opts =
         |l: usize| plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none);
+    let mode = |l: usize| plan.ckpt_mode(l);
 
     // model states: resident for the whole step
     let p_bytes = cfg.param_count() as u64 * 4;
@@ -487,13 +601,17 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     let emb_ids = b.forward_block(&emb, Segment::Embedding, plan.other, MemClass::OtherAct);
 
     let enc = encoder_block_with(cfg, lowering);
-    let mut plain_ids: Vec<Vec<Vec<u32>>> = Vec::new();
-    let mut stored_ids: Vec<u32> = Vec::new();
+    let mut fwd_ids: Vec<LayerFwd> = Vec::with_capacity(cfg.layers);
     for l in 0..cfg.layers {
-        if plan.checkpoint {
-            stored_ids.push(b.forward_block_checkpoint(&enc, Segment::Encoder(l)));
+        if mode(l).is_checkpoint() {
+            fwd_ids.push(LayerFwd::Ckpt(b.forward_block_checkpoint(&enc, Segment::Encoder(l))));
         } else {
-            plain_ids.push(b.forward_block(&enc, Segment::Encoder(l), layer_opts(l), MemClass::EncoderAct));
+            fwd_ids.push(LayerFwd::Plain(b.forward_block(
+                &enc,
+                Segment::Encoder(l),
+                layer_opts(l),
+                MemClass::EncoderAct,
+            )));
         }
     }
 
@@ -503,10 +621,18 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     // turnaround: the backward workspace appears while everything is
     // still retained — the high-water instant of a plain step
     let full = enc.summarize(OptimizationSet::none());
-    let (ws_name, ws_item) = if plan.checkpoint {
+    // scan the *resolved* layers only (0..cfg.layers): entries of an
+    // over-long ckpt vector must not leak into the lowering, or the
+    // schedule would diverge from its resolved-semantics cache key
+    let any_ckpt = (0..cfg.layers).any(|l| mode(l).is_checkpoint());
+    let (ws_name, ws_item) = if any_ckpt {
         // activation gradients flowing through one recomputed block
-        // (≈ its float volume again — Table 2's doubled transient)
-        ("ckpt.grad_workspace", full.float_bytes(1))
+        // (≈ its float volume again — Table 2's doubled transient).
+        // The float volume always covers the plain layers' 2×-widest
+        // double buffer (the block retains at least two maps of the
+        // widest width), so one shared workspace serves a mixed
+        // placement; `max` keeps that explicit.
+        ("ckpt.grad_workspace", full.float_bytes(1).max(2 * full.widest_map_elems * 4))
     } else {
         // double-buffered activation-gradient rows of the widest map
         ("bwd.workspace", 2 * full.widest_map_elems * 4)
@@ -514,25 +640,45 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     let ws = b.tensor(ws_name, 0, ws_item, MemClass::Workspace);
     b.event(EventKind::Turnaround, Segment::Step, "bwd.turnaround", vec![ws], Vec::new(), Vec::new(), Census::ZERO);
 
-    // overlapped checkpointing prefetches the top block's re-forward
-    // under the head backward (L2L-style; hides recompute latency and
-    // is what the legacy static sum priced all along)
-    let mut prefetched: Option<Vec<Vec<u32>>> = None;
-    if plan.checkpoint && !plan.serial_checkpoint && cfg.layers > 0 {
-        prefetched = Some(b.recompute_block(&enc, Segment::Encoder(cfg.layers - 1)));
+    // An `Overlapped` layer's re-forward is hoisted above the preceding
+    // segment's backward (head, or the plain layer above it) — the
+    // L2L-style prefetch that hides recompute latency and is what the
+    // legacy static sum priced all along. A checkpointed layer never
+    // prefetches the layer below it: the model keeps a single
+    // re-forward buffer, never a pipeline of recomputed inventories.
+    let mut pending: Option<(usize, Vec<Vec<u32>>)> = None;
+    if cfg.layers > 0 && mode(cfg.layers - 1) == CkptMode::Overlapped {
+        let top = cfg.layers - 1;
+        pending = Some((top, b.recompute_block(&enc, Segment::Encoder(top))));
     }
 
     // backward
     b.backward_block(&head, Segment::Head, plan.other, head_ids);
     for l in (0..cfg.layers).rev() {
-        if plan.checkpoint {
-            let ids = match prefetched.take() {
-                Some(ids) => ids,
-                None => b.recompute_block(&enc, Segment::Encoder(l)),
-            };
-            b.backward_block_checkpoint(&enc, Segment::Encoder(l), ids, stored_ids[l]);
-        } else {
-            b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), plain_ids.pop().expect("per-layer ids"));
+        match fwd_ids.pop().expect("per-layer forward ids") {
+            LayerFwd::Plain(ids) => {
+                if l > 0 && mode(l - 1) == CkptMode::Overlapped && pending.is_none() {
+                    // prefetch the overlapped layer below under this
+                    // plain layer's backward
+                    pending = Some((l - 1, b.recompute_block(&enc, Segment::Encoder(l - 1))));
+                }
+                b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), ids);
+            }
+            LayerFwd::Ckpt(stored) => {
+                let ids = match pending.take() {
+                    // a pending prefetch is always one segment deep, so
+                    // it can only belong to this layer
+                    Some((pl, ids)) => {
+                        debug_assert_eq!(pl, l, "prefetch is one segment deep");
+                        ids
+                    }
+                    // not prefetched (serial arm, or the segment above
+                    // was itself checkpointed): recompute in place,
+                    // right before this layer's backward
+                    None => b.recompute_block(&enc, Segment::Encoder(l)),
+                };
+                b.backward_block_checkpoint(&enc, Segment::Encoder(l), ids, stored);
+            }
         }
     }
     b.backward_block(&emb, Segment::Embedding, plan.other, emb_ids);
@@ -550,10 +696,16 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
 // the curve is constant over the step).
 // ---------------------------------------------------------------------------
 
+/// The plan's *resolved* per-layer semantics — exactly what
+/// `lower_step` sees after padding short vectors: one
+/// `(rewrite set, checkpoint arm)` pair per model layer. Keying on the
+/// resolution (not the representation) lets every spelling of the same
+/// placement share one cache entry, and collapses the common uniform
+/// case to a single pair.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 enum PlanKey {
-    Uniform(OptimizationSet),
-    PerLayer(Vec<OptimizationSet>),
+    Uniform(OptimizationSet, CkptMode),
+    PerLayer(Vec<(OptimizationSet, CkptMode)>),
 }
 
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -568,15 +720,8 @@ struct ScheduleKey {
     layers: usize,
     lowering: Lowering,
     plan: PlanKey,
-    /// Length of the plan's `per_layer` vector. A shorter-than-model
-    /// plan pads the missing layers with `none` in `lower_step`, so an
-    /// all-equal short vector must NOT share a cache entry with the
-    /// true uniform plan of the same subset.
-    plan_layers: usize,
     other: OptimizationSet,
-    checkpoint: bool,
     mlm_head: bool,
-    serial_checkpoint: bool,
 }
 
 fn schedule_cache() -> &'static RwLock<HashMap<ScheduleKey, Arc<ScheduleSummary>>> {
@@ -595,9 +740,18 @@ pub fn schedule_summary_with(
     plan: &SchedulePlan,
     lowering: Lowering,
 ) -> Arc<ScheduleSummary> {
-    let plan_key = match plan.uniform_opts() {
-        Some(o) => PlanKey::Uniform(o),
-        None => PlanKey::PerLayer(plan.per_layer.clone()),
+    let resolved: Vec<(OptimizationSet, CkptMode)> = (0..cfg.layers)
+        .map(|l| {
+            (
+                plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none),
+                plan.ckpt_mode(l),
+            )
+        })
+        .collect();
+    let plan_key = match resolved.first().copied() {
+        None => PlanKey::Uniform(OptimizationSet::none(), CkptMode::None),
+        Some(first) if resolved.iter().all(|p| *p == first) => PlanKey::Uniform(first.0, first.1),
+        _ => PlanKey::PerLayer(resolved),
     };
     let key = ScheduleKey {
         hidden: cfg.hidden,
@@ -610,11 +764,8 @@ pub fn schedule_summary_with(
         layers: cfg.layers,
         lowering,
         plan: plan_key,
-        plan_layers: plan.per_layer.len(),
         other: plan.other,
-        checkpoint: plan.checkpoint,
         mlm_head: plan.mlm_head,
-        serial_checkpoint: plan.serial_checkpoint,
     };
     if let Some(hit) = schedule_cache().read().expect("schedule cache poisoned").get(&key) {
         return Arc::clone(hit);
@@ -756,7 +907,8 @@ mod tests {
     fn short_uniform_plan_is_not_cached_as_the_full_uniform_plan() {
         // an all-equal per_layer vector shorter than the model pads the
         // missing layers with `none`; it must get its own cache entry
-        // (the collapse to a uniform key records the plan length)
+        // (the key holds the plan's *resolved* per-layer semantics, and
+        // the padded resolution is not uniform)
         let cfg = ModelConfig::bert_mini(); // 4 layers
         let full = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
         let short = SchedulePlan {
@@ -774,6 +926,27 @@ mod tests {
     }
 
     #[test]
+    fn over_long_ckpt_vector_does_not_leak_into_the_lowering() {
+        // a ckpt vector sized for a bigger model: entries beyond the
+        // model's layers are ignored by the lowering, so the plan
+        // lowers (and caches) exactly like the checkpoint-free plan
+        // its resolved semantics name
+        let cfg = tiny(); // 2 layers
+        let long = SchedulePlan {
+            ckpt: vec![CkptMode::None, CkptMode::None, CkptMode::Overlapped],
+            ..SchedulePlan::uniform(&cfg, OptimizationSet::none(), true)
+        };
+        let plain = SchedulePlan::uniform(&cfg, OptimizationSet::none(), true);
+        let a = schedule_summary(&cfg, &long);
+        let b = schedule_summary(&cfg, &plain);
+        assert!(Arc::ptr_eq(&a, &b), "same resolved semantics share one cache entry");
+        let fresh = lower_step(&cfg, &long, Lowering::for_model(&cfg)).summarize_step();
+        assert_eq!(a.peak_bytes(4), fresh.peak_bytes(4));
+        assert_eq!(a.events, fresh.events);
+        assert_eq!(fresh.high_water, "bwd working set");
+    }
+
+    #[test]
     fn plan_labels_read_well() {
         let cfg = tiny();
         assert!(SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true)
@@ -786,5 +959,153 @@ mod tests {
         let mut per_layer = vec![OptimizationSet::none(); cfg.layers];
         per_layer[0] = OptimizationSet::full();
         assert!(SchedulePlan::from_per_layer(per_layer, false).label().contains("mixed"));
+        // a joint placement names both counts
+        let mut ckpt = vec![CkptMode::None; cfg.layers];
+        ckpt[0] = CkptMode::Serial;
+        let mut per_layer = vec![OptimizationSet::full(); cfg.layers];
+        per_layer[0] = OptimizationSet::none();
+        let label = SchedulePlan::from_placement(per_layer, ckpt, true).label();
+        assert!(label.contains("mixed placement"), "{label}");
+        assert!(label.contains("1 checkpointed"), "{label}");
+    }
+
+    #[test]
+    fn mixed_placement_lowers_each_layer_under_its_own_arm() {
+        // bottom layer checkpointed, top layer plain: the forward holds
+        // one ckpt.store + one plain inventory, and the backward splices
+        // exactly one recompute segment
+        let cfg = tiny(); // 2 layers
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); cfg.layers],
+            vec![CkptMode::Serial, CkptMode::None],
+            true,
+        );
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let stores = s.events.iter().filter(|e| e.name == "ckpt.store").count();
+        assert_eq!(stores, 1);
+        let ops_per_block = encoder_block_with(&cfg, Lowering::for_model(&cfg)).ops.len();
+        let n_recompute = s.events.iter().filter(|e| e.kind == EventKind::Recompute).count();
+        assert_eq!(n_recompute, ops_per_block);
+        // the plain layer's rewrites still apply (in-op frees exist in
+        // its segment; none in the checkpointed layer's forward)
+        assert!(s
+            .events
+            .iter()
+            .any(|e| e.segment == Segment::Encoder(1) && !e.inplace.is_empty()));
+        assert!(s
+            .events
+            .iter()
+            .filter(|e| e.segment == Segment::Encoder(0) && e.kind == EventKind::Forward)
+            .all(|e| e.inplace.is_empty()));
+    }
+
+    #[test]
+    fn overlapped_arm_prefetches_under_the_preceding_plain_backward() {
+        // layer 0 overlapped, layer 1 plain: the recompute must be
+        // emitted after the turnaround but BEFORE layer 1's backward
+        let cfg = tiny();
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            vec![CkptMode::Overlapped, CkptMode::None],
+            true,
+        );
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let first_rfwd = s.events.iter().position(|e| e.kind == EventKind::Recompute).unwrap();
+        let first_enc1_bwd = s
+            .events
+            .iter()
+            .position(|e| e.kind == EventKind::Backward && e.segment == Segment::Encoder(1))
+            .unwrap();
+        assert!(first_rfwd < first_enc1_bwd, "overlapped prefetch precedes the plain backward");
+        // serial arm: the recompute waits until after layer 1's backward
+        let serial = plan.serial();
+        let s = lower_step(&cfg, &serial, Lowering::for_model(&cfg));
+        let first_rfwd = s.events.iter().position(|e| e.kind == EventKind::Recompute).unwrap();
+        let last_enc1_bwd = s
+            .events
+            .iter()
+            .rposition(|e| e.kind == EventKind::Backward && e.segment == Segment::Encoder(1))
+            .unwrap();
+        assert!(first_rfwd > last_enc1_bwd, "serial recompute follows the plain backward");
+        // and the serial placement's peak is never above the overlapped one
+        let over = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            vec![CkptMode::Overlapped, CkptMode::None],
+            true,
+        );
+        assert!(
+            schedule_summary(&cfg, &serial).peak_bytes(4)
+                <= schedule_summary(&cfg, &over).peak_bytes(4)
+        );
+    }
+
+    #[test]
+    fn checkpointed_layers_never_pipeline_recomputes() {
+        // two adjacent overlapped layers: only the top one is
+        // prefetched (under the head backward); the lower one
+        // recomputes after the top layer's backward completes — at most
+        // one recomputed inventory is ever in flight
+        let cfg = tiny();
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            vec![CkptMode::Overlapped; cfg.layers],
+            true,
+        );
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let enc0_rfwd = s
+            .events
+            .iter()
+            .position(|e| e.kind == EventKind::Recompute && e.segment == Segment::Encoder(0))
+            .unwrap();
+        let last_enc1_bwd = s
+            .events
+            .iter()
+            .rposition(|e| e.kind == EventKind::Backward && e.segment == Segment::Encoder(1))
+            .unwrap();
+        assert!(enc0_rfwd > last_enc1_bwd);
+    }
+
+    #[test]
+    fn mixed_placement_allocs_are_freed_exactly_once() {
+        let cfg = ModelConfig::bert_mini(); // 4 layers
+        let plan = SchedulePlan::from_placement(
+            vec![
+                OptimizationSet::none(),
+                OptimizationSet::full(),
+                OptimizationSet::none(),
+                OptimizationSet::only("gelu").unwrap(),
+            ],
+            vec![CkptMode::Serial, CkptMode::None, CkptMode::Overlapped, CkptMode::None],
+            true,
+        );
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let mut allocated = vec![0u32; s.tensors.len()];
+        let mut freed = vec![0u32; s.tensors.len()];
+        let mut inplace = vec![0u32; s.tensors.len()];
+        for e in &s.events {
+            for &id in &e.allocs {
+                allocated[id as usize] += 1;
+            }
+            for &id in &e.frees {
+                freed[id as usize] += 1;
+            }
+            for &id in &e.inplace {
+                inplace[id as usize] += 1;
+            }
+        }
+        for (id, t) in s.tensors.iter().enumerate() {
+            if inplace[id] > 0 {
+                assert_eq!((allocated[id], freed[id], inplace[id]), (0, 0, 1), "{}", t.name);
+            } else if matches!(t.class, MemClass::Params | MemClass::Grads | MemClass::OptimizerState) {
+                assert_eq!((allocated[id], freed[id]), (1, 0), "{} persists", t.name);
+            } else {
+                assert_eq!((allocated[id], freed[id]), (1, 1), "{}", t.name);
+            }
+        }
+        // and the memoized summary matches a fresh fold at every batch
+        let summary = schedule_summary(&cfg, &plan);
+        for batch in [1usize, 4, 32] {
+            assert_eq!(summary.peak_bytes(batch as u64), s.timeline(batch).peak_bytes);
+        }
     }
 }

@@ -14,9 +14,11 @@ use super::lower::{encoder_block_with, BlockGraph, Lowering};
 pub struct TensorRow {
     /// Owning op, e.g. `attn.softmax`.
     pub op: &'static str,
+    /// Tensor name, e.g. `attn.scores`.
     pub tensor: &'static str,
     /// `B×…` shape string.
     pub shape: String,
+    /// Display dtype (`f32` / `u8`).
     pub dtype: &'static str,
     /// Bytes this tensor occupies (or would occupy) at the batch.
     pub bytes: u64,
@@ -29,12 +31,16 @@ pub struct TensorRow {
 /// Per-class byte totals of the live tensors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ClassTotals {
+    /// fp32 feature-map bytes.
     pub float_bytes: u64,
+    /// 1-byte mask bytes.
     pub mask_bytes: u64,
+    /// Per-row statistic bytes.
     pub stat_bytes: u64,
 }
 
 impl ClassTotals {
+    /// All live bytes (maps + masks + stats).
     pub fn total(&self) -> u64 {
         self.float_bytes + self.mask_bytes + self.stat_bytes
     }

@@ -20,6 +20,7 @@ pub enum TensorClass {
 }
 
 impl TensorClass {
+    /// Storage width in bytes per element.
     pub fn bytes_per_elem(self) -> u64 {
         match self {
             TensorClass::F32Map => 4,
@@ -28,6 +29,7 @@ impl TensorClass {
         }
     }
 
+    /// Display dtype for the Fig 1 table (`f32` / `u8`).
     pub fn dtype_name(self) -> &'static str {
         match self {
             TensorClass::F32Map => "f32",
@@ -64,6 +66,7 @@ impl RewriteKind {
         }
     }
 
+    /// Human-readable rewrite name (paper §3 terminology).
     pub fn name(self) -> &'static str {
         match self {
             RewriteKind::InplaceGelu => "in-place GELU",
@@ -82,9 +85,11 @@ impl RewriteKind {
 /// batch-independent).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RetainedTensor {
+    /// Tensor name, e.g. `attn.scores`.
     pub name: &'static str,
     /// Per-batch-item dimensions (displayed as `B×d0×d1×…`).
     pub dims: Vec<u64>,
+    /// Storage class (fp32 map / mask / per-row stat).
     pub class: TensorClass,
     /// `Some(rw)` — this tensor exists in the baseline inventory and is
     /// deleted when `rw` is enabled.

@@ -35,6 +35,8 @@
 //! All `xla::` usage compiles only under `--features pjrt`
 //! (`runtime::pjrt` is the single module that touches it).
 
+#![warn(missing_docs)]
+
 pub mod autotempo;
 pub mod config;
 pub mod coordinator;

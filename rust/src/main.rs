@@ -6,7 +6,10 @@
 //!   finetune     — MRPC-analogue classification trials (Fig 6b)
 //!   experiments  — regenerate paper tables/figures (memmodel+perfmodel)
 //!   max-batch    — capacity query for a (model, technique, gpu)
-//!   autotempo    — §5.2 automatic application pass
+//!   autotempo    — §5.2 automatic application pass (`--placement
+//!                  uniform|joint` switches to the placement search)
+//!   placement    — joint (rewrite ∪ checkpoint) placement search,
+//!                  printed as a per-layer plan table
 //!   graph        — per-layer retained-tensor table (Fig 1) from the
 //!                  layer-graph IR, with rewrite annotations
 //!   schedule     — fwd+bwd execution timeline with live-bytes per op
@@ -49,6 +52,9 @@ USAGE:
   tempo max-batch --model NAME [--seq N] [--gpu 2080ti|v100|a100]
   tempo memory-report --model NAME [--seq N] [--batch N] [--finetune]
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
+                  [--placement uniform|joint]
+  tempo placement [MODEL] [--seq N] [--gpu NAME] [--target-batch N]
+                  [--placement uniform|joint] [--json]
   tempo graph [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
               [--opts gelu,layernorm,dropout,softmax] [--pre-ln] [--causal] [--unfused]
               [--json]
@@ -206,6 +212,7 @@ fn run() -> tempo::Result<()> {
         "max-batch" => cmd_max_batch(&args),
         "memory-report" => cmd_memory_report(&args),
         "autotempo" => cmd_autotempo(&args),
+        "placement" => cmd_placement(&args),
         "graph" => cmd_graph(&args),
         "schedule" => cmd_schedule(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -453,9 +460,45 @@ fn cmd_memory_report(args: &Args) -> tempo::Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--placement uniform|joint` option.
+fn parse_placement(name: &str) -> tempo::Result<tempo::autotempo::PlacementMode> {
+    tempo::autotempo::PlacementMode::parse(name).ok_or_else(|| {
+        tempo::Error::Invalid(format!("unknown placement mode '{name}' (uniform|joint)"))
+    })
+}
+
+/// Parse the shared optional `--target-batch N`.
+fn parse_target_batch(args: &Args) -> tempo::Result<Option<usize>> {
+    match args.get("target-batch") {
+        None => Ok(None),
+        Some(tb) => tb
+            .parse()
+            .map(Some)
+            .map_err(|_| tempo::Error::Invalid("--target-batch expects an integer".into())),
+    }
+}
+
 fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
     let cfg = parse_model(args)?;
     let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
+    if let Some(mode_name) = args.get("placement") {
+        // joint (rewrite ∪ checkpoint) placement search — §Placement
+        let mode = parse_placement(mode_name)?;
+        let target = parse_target_batch(args)?;
+        let d = tempo::autotempo::placement_search(&cfg, gpu, mode, target);
+        println!("placement search: {}", d.rationale);
+        println!(
+            "  plan: rewrites on {}/{} layers, {} checkpointed, max batch {}, {:.2} seq/s at B={}",
+            d.plan.applied_layers(),
+            cfg.layers,
+            d.plan.checkpointed_layers(),
+            d.max_batch,
+            d.throughput,
+            d.eval_batch,
+        );
+        println!("  (`tempo placement` prints the chosen per-layer plan as a table)");
+        return Ok(());
+    }
     match args.get("target-batch") {
         None => {
             let d = coarse_pass(&cfg, gpu);
@@ -482,6 +525,96 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `tempo placement` — the joint-placement search's debugging surface:
+/// run the (rewrite ∪ checkpoint) placement search and print the
+/// chosen per-layer plan as a table, with the capacity model's
+/// breakdown of the winning plan.
+fn cmd_placement(args: &Args) -> tempo::Result<()> {
+    use tempo::autotempo::{placement_search, PlacementMode};
+    use tempo::config::OptimizationSet;
+    use tempo::memmodel::plan_breakdown;
+    use tempo::report::Table;
+    use tempo::util::Json;
+
+    let mut positional_model = args.positional.get(1).cloned();
+    let want_json = recovered_flag(args, "json", &mut positional_model);
+
+    let mut args = args.clone();
+    if let Some(name) = positional_model {
+        args.options.entry("model".into()).or_insert(name);
+    }
+    let cfg = parse_model(&args)?;
+    let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
+    let target = parse_target_batch(&args)?;
+    let mode = match args.get("placement") {
+        None => PlacementMode::Joint,
+        Some(name) => parse_placement(name)?,
+    };
+
+    let d = placement_search(&cfg, gpu, mode, target);
+    let mut t = Table::new(
+        format!(
+            "Placement — {} @ S={} on {} ({} search)",
+            cfg.name,
+            cfg.seq_len,
+            gpu.name(),
+            mode.name()
+        ),
+        &["layer", "rewrites", "checkpoint"],
+    );
+    for l in 0..cfg.layers {
+        let ckpt = d.plan.ckpt_mode(l);
+        t.row(vec![
+            format!("enc{l}"),
+            if ckpt.is_checkpoint() {
+                "(recomputed)".into()
+            } else {
+                d.plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none).label()
+            },
+            ckpt.label().to_string(),
+        ]);
+    }
+    // breakdown of the winning plan at its max batch (B=1 when nothing fits)
+    let bd = plan_breakdown(&cfg, &d.plan.schedule_plan(), d.max_batch.max(1));
+
+    if want_json {
+        // machine-readable mode: one JSON document, nothing else on
+        // stdout (round-trips through report::Table::from_json)
+        let doc = Json::obj(vec![
+            ("model", Json::str(cfg.name.clone())),
+            ("seq_len", Json::num(cfg.seq_len as f64)),
+            ("gpu", Json::str(gpu.name())),
+            ("mode", Json::str(mode.name())),
+            ("max_batch", Json::num(d.max_batch as f64)),
+            ("eval_batch", Json::num(d.eval_batch as f64)),
+            ("throughput_seqs_per_s", Json::num(d.throughput)),
+            ("checkpointed_layers", Json::num(d.plan.checkpointed_layers() as f64)),
+            ("applied_layers", Json::num(d.plan.applied_layers() as f64)),
+            ("candidates", Json::num(d.stats.enumerated as f64)),
+            ("pruned_dominated", Json::num(d.stats.pruned as f64)),
+            ("priced", Json::num(d.stats.priced as f64)),
+            ("peak_bytes", Json::num(bd.total() as f64)),
+            ("high_water", Json::str(bd.transient_label)),
+            ("table", t.to_json()),
+        ]);
+        println!("{}", doc.pretty());
+        return Ok(());
+    }
+
+    println!("{}", t.render());
+    println!("{}", d.rationale);
+    println!(
+        "max batch {} ({:.2} seq/s at B={}); peak {:.3} GB at B={}, high water: {}",
+        d.max_batch,
+        d.throughput,
+        d.eval_batch,
+        bd.total() as f64 / 1e9,
+        d.max_batch.max(1),
+        bd.transient_label,
+    );
     Ok(())
 }
 
@@ -680,7 +813,7 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
         custom_opts = Some(opts);
     }
     if want_serial {
-        plan.serial_checkpoint = true;
+        plan = plan.serial();
     }
 
     // lowering rules: model defaults, overridable from the CLI

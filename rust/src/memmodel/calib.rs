@@ -21,10 +21,15 @@ use super::fit::max_batch;
 /// One Table 2 cell: model prediction next to the paper's measurement.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// GPU platform of this cell.
     pub gpu: Gpu,
+    /// Technique of this cell.
     pub technique: Technique,
+    /// Sequence length of this cell.
     pub seq_len: usize,
+    /// The analytical model's max batch.
     pub model_batch: usize,
+    /// The paper's measured max batch.
     pub paper_batch: usize,
 }
 

@@ -1,12 +1,16 @@
-//! Capacity fit: largest batch that fits a GPU (Table 2 generator).
+//! Capacity fit: largest batch that fits a GPU (Table 2 generator, and
+//! the max-batch leg of Auto-Tempo's placement search).
 
 use crate::config::{Gpu, ModelConfig, Technique};
+use crate::graph::{self, SchedulePlan};
 
 use super::model::ModelFootprint;
 
 /// Result of a max-batch search.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FitResult {
+    /// Largest batch whose footprint fits the GPU (0 when even B=1
+    /// overflows).
     pub max_batch: usize,
     /// Bytes used at that batch.
     pub bytes_at_max: u64,
@@ -14,18 +18,13 @@ pub struct FitResult {
     pub bytes_over: u64,
 }
 
-/// Largest per-GPU batch size whose footprint fits `gpu`'s usable memory.
-///
-/// Footprint is monotone in B, so a doubling search + binary refine
-/// suffices. Returns batch 0 if even B=1 does not fit (the paper's
-/// "BERT at S=512 does not fit a 12 GB GPU at batch 1" observation).
-pub fn max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu) -> FitResult {
-    let fp = ModelFootprint::new(cfg.clone(), technique);
-    let budget = gpu.spec().usable_bytes();
-    let fits = |b: usize| b == 0 || fp.total_bytes(b) <= budget;
-
+/// Doubling search + binary refine over a monotone byte curve: the
+/// shared core of every max-batch query (`total(b)` is the modeled
+/// footprint at batch `b`).
+fn fit_curve(budget: u64, total: impl Fn(usize) -> u64) -> FitResult {
+    let fits = |b: usize| b == 0 || total(b) <= budget;
     if !fits(1) {
-        return FitResult { max_batch: 0, bytes_at_max: fp.total_bytes(0), bytes_over: fp.total_bytes(1) };
+        return FitResult { max_batch: 0, bytes_at_max: total(0), bytes_over: total(1) };
     }
     let mut lo = 1usize;
     let mut hi = 2usize;
@@ -44,11 +43,27 @@ pub fn max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu) -> FitResult
             hi = mid;
         }
     }
-    FitResult {
-        max_batch: lo,
-        bytes_at_max: fp.total_bytes(lo),
-        bytes_over: fp.total_bytes(lo + 1),
-    }
+    FitResult { max_batch: lo, bytes_at_max: total(lo), bytes_over: total(lo + 1) }
+}
+
+/// Largest per-GPU batch size whose footprint fits `gpu`'s usable memory.
+///
+/// Footprint is monotone in B, so a doubling search + binary refine
+/// suffices. Returns batch 0 if even B=1 does not fit (the paper's
+/// "BERT at S=512 does not fit a 12 GB GPU at batch 1" observation).
+pub fn max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu) -> FitResult {
+    let fp = ModelFootprint::new(cfg.clone(), technique);
+    fit_curve(gpu.spec().usable_bytes(), |b| fp.total_bytes(b))
+}
+
+/// Largest per-GPU batch size for an arbitrary execution-schedule plan
+/// (the pricing leg of Auto-Tempo's joint placement search): the same
+/// doubling + binary refine, binary-searched against the plan's exact
+/// liveness-timeline peak (one memoized schedule summary per distinct
+/// plan — every probe is an integer multiply).
+pub fn max_batch_for_plan(cfg: &ModelConfig, plan: &SchedulePlan, gpu: Gpu) -> FitResult {
+    let summary = graph::schedule_summary(cfg, plan);
+    fit_curve(gpu.spec().usable_bytes(), |b| summary.peak_bytes(b as u64))
 }
 
 #[cfg(test)]
@@ -83,6 +98,31 @@ mod tests {
             let big = max_batch(&large(512), t, Gpu::A100).max_batch;
             assert!(big > small, "{t:?}");
         }
+    }
+
+    #[test]
+    fn plan_fit_agrees_with_technique_fit() {
+        // the plan-shaped search binary-searches the same peak the
+        // footprint fold reports, so technique plans must agree exactly
+        let cfg = large(512);
+        for t in Technique::all() {
+            let plan = SchedulePlan::for_technique(&cfg, t, true);
+            assert_eq!(
+                max_batch_for_plan(&cfg, &plan, Gpu::Rtx2080Ti),
+                max_batch(&cfg, t, Gpu::Rtx2080Ti),
+                "{t:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn serial_placement_fits_at_least_as_much_as_overlapped() {
+        let cfg = large(512);
+        let over = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+        let serial = over.clone().serial();
+        let b_over = max_batch_for_plan(&cfg, &over, Gpu::Rtx2080Ti).max_batch;
+        let b_serial = max_batch_for_plan(&cfg, &serial, Gpu::Rtx2080Ti).max_batch;
+        assert!(b_serial >= b_over, "{b_serial} !>= {b_over}");
     }
 
     #[test]

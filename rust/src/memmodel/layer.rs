@@ -30,6 +30,7 @@ pub struct LayerBytes {
 }
 
 impl LayerBytes {
+    /// All retained bytes (maps + masks + stats).
     pub fn total(&self) -> u64 {
         self.float_bytes + self.mask_bytes + self.stat_bytes
     }

@@ -24,10 +24,12 @@ mod model;
 mod report;
 
 pub use calib::{gb_at_b15, table2, Table2Row, PAPER_GB_AT_B15, PAPER_TABLE2};
-pub use fit::{max_batch, FitResult};
+pub use fit::{max_batch, max_batch_for_plan, FitResult};
 pub use layer::{layer_activation_bytes, LayerBytes};
-pub use model::{Breakdown, ModelFootprint};
+pub use model::{plan_breakdown, Breakdown, ModelFootprint};
 pub use report::{ablation_fig12, breakdown_fig9, AblationRow, BreakdownRow};
 
+/// Bytes per fp32 element (the paper's activation accounting).
 pub const F32: u64 = 4;
+/// Bytes per 1-byte mask element (footnote 3's int8 masks).
 pub const MASK: u64 = 1;

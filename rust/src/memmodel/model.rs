@@ -18,8 +18,11 @@ use crate::graph::{self, MemClass, SchedulePlan};
 /// per-class live bytes at the schedule's high-water instant.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Breakdown {
+    /// fp32 parameter bytes.
     pub params: u64,
+    /// fp32 gradient bytes.
     pub grads: u64,
+    /// Adam `m`+`v` state bytes.
     pub optimizer: u64,
     /// Encoder-layer retained activations (Fig 9's dominant slice;
     /// under checkpointing, the stored block inputs).
@@ -38,6 +41,7 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// Sum of every row — the exact liveness-timeline peak.
     pub fn total(&self) -> u64 {
         self.params
             + self.grads
@@ -47,6 +51,7 @@ impl Breakdown {
             + self.transient
     }
 
+    /// Encoder + other activation bytes at the peak.
     pub fn activations(&self) -> u64 {
         self.encoder_activations + self.other_activations
     }
@@ -55,7 +60,9 @@ impl Breakdown {
 /// Footprint calculator for one (model, technique) pair.
 #[derive(Debug, Clone)]
 pub struct ModelFootprint {
+    /// Model being priced.
     pub cfg: ModelConfig,
+    /// Technique being priced.
     pub technique: Technique,
     /// Fine-grained toggles (ignored for Baseline/Checkpoint).
     pub opts: OptimizationSet,
@@ -65,6 +72,7 @@ pub struct ModelFootprint {
 }
 
 impl ModelFootprint {
+    /// Footprint of `cfg` under a top-level technique (MLM head).
     pub fn new(cfg: ModelConfig, technique: Technique) -> Self {
         let opts = match technique {
             Technique::Tempo => OptimizationSet::full(),
@@ -98,22 +106,31 @@ impl ModelFootprint {
     /// schedule's high-water instant (memoized per plan; pricing any
     /// batch is exact integer scaling).
     pub fn breakdown(&self, batch: usize) -> Breakdown {
-        let s = graph::schedule_summary(&self.cfg, &self.plan());
-        let b = batch as u64;
-        Breakdown {
-            params: s.class_bytes(MemClass::Params, b),
-            grads: s.class_bytes(MemClass::Grads, b),
-            optimizer: s.class_bytes(MemClass::OptimizerState, b),
-            encoder_activations: s.class_bytes(MemClass::EncoderAct, b),
-            other_activations: s.class_bytes(MemClass::OtherAct, b),
-            transient: s.class_bytes(MemClass::Workspace, b),
-            transient_label: s.high_water,
-        }
+        plan_breakdown(&self.cfg, &self.plan(), batch)
     }
 
     /// Total bytes at batch `b` — the exact timeline peak.
     pub fn total_bytes(&self, batch: usize) -> u64 {
         graph::schedule_summary(&self.cfg, &self.plan()).peak_bytes(batch as u64)
+    }
+}
+
+/// Breakdown of an arbitrary execution-schedule plan — the per-class
+/// live bytes at the plan's high-water instant, labeled by what that
+/// op is doing. [`ModelFootprint::breakdown`] is this fold over the
+/// technique-induced plan; Auto-Tempo's placement report calls it with
+/// mixed per-layer placements.
+pub fn plan_breakdown(cfg: &ModelConfig, plan: &SchedulePlan, batch: usize) -> Breakdown {
+    let s = graph::schedule_summary(cfg, plan);
+    let b = batch as u64;
+    Breakdown {
+        params: s.class_bytes(MemClass::Params, b),
+        grads: s.class_bytes(MemClass::Grads, b),
+        optimizer: s.class_bytes(MemClass::OptimizerState, b),
+        encoder_activations: s.class_bytes(MemClass::EncoderAct, b),
+        other_activations: s.class_bytes(MemClass::OtherAct, b),
+        transient: s.class_bytes(MemClass::Workspace, b),
+        transient_label: s.high_water,
     }
 }
 

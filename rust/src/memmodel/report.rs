@@ -8,8 +8,11 @@ use super::model::ModelFootprint;
 /// One slice of the Fig 9 breakdown pie.
 #[derive(Debug, Clone)]
 pub struct BreakdownRow {
+    /// Row label (weights / gradients / … / high-water working set).
     pub label: &'static str,
+    /// Bytes in this slice.
     pub bytes: u64,
+    /// Fraction of the total footprint.
     pub share: f64,
 }
 
@@ -40,7 +43,9 @@ pub fn breakdown_fig9(cfg: &ModelConfig, technique: Technique, batch: usize) -> 
 /// encoder-layer footprint reduced, at one sequence length.
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// Sequence length of this ablation point.
     pub seq_len: usize,
+    /// Which single optimization is toggled on.
     pub optimization: &'static str,
     /// Fraction of the baseline per-layer footprint this optimization
     /// removes (the paper's y-axis).

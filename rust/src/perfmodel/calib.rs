@@ -11,8 +11,11 @@ use super::throughput::throughput_at_max_batch;
 /// One speedup claim from the paper.
 #[derive(Debug, Clone)]
 pub struct SpeedupCheck {
+    /// Which headline claim this row checks.
     pub claim: &'static str,
+    /// The paper's reported speedup factor.
     pub paper: f64,
+    /// The roofline model's speedup factor.
     pub model: f64,
 }
 

@@ -21,6 +21,6 @@ mod ops;
 mod roofline;
 mod throughput;
 
-pub use ops::{step_census, OpCensus};
-pub use roofline::{step_time, utilization};
-pub use throughput::{throughput_at, throughput_at_max_batch, ThroughputPoint};
+pub use ops::{plan_census, step_census, OpCensus};
+pub use roofline::{plan_step_time, step_time, utilization};
+pub use throughput::{plan_throughput_at, throughput_at, throughput_at_max_batch, ThroughputPoint};

@@ -39,17 +39,26 @@ impl From<graph::Census> for OpCensus {
     }
 }
 
-/// Census of one full training step under `technique`: the schedule's
-/// per-item event fold scaled to batch B, plus optimizer traffic.
-pub fn step_census(cfg: &ModelConfig, technique: Technique, batch: usize) -> OpCensus {
-    let plan = SchedulePlan::for_technique(cfg, technique, true);
-    let summary = graph::schedule_summary(cfg, &plan);
+/// Census of one full training step under an arbitrary
+/// execution-schedule plan: the schedule's per-item event fold scaled
+/// to batch B, plus optimizer traffic. Checkpointed layers carry their
+/// spliced 1.25×-priced re-forward events; rewritten layers carry
+/// their backward recompute overheads — recompute pricing is the
+/// schedule fold itself, not a side formula.
+pub fn plan_census(cfg: &ModelConfig, plan: &SchedulePlan, batch: usize) -> OpCensus {
+    let summary = graph::schedule_summary(cfg, plan);
     let mut total: OpCensus = summary.census.scale(batch as f64).into();
     // optimizer: read params+grads+m+v, write params+m+v (fp32), plus
     // DDP all-reduce traffic ≈ 2× grads through HBM
     let p = cfg.param_count() as f64;
     total.state_bytes += 4.0 * p * 9.0;
     total
+}
+
+/// Census of one full training step under `technique` — [`plan_census`]
+/// over the technique-induced uniform plan.
+pub fn step_census(cfg: &ModelConfig, technique: Technique, batch: usize) -> OpCensus {
+    plan_census(cfg, &SchedulePlan::for_technique(cfg, technique, true), batch)
 }
 
 #[cfg(test)]

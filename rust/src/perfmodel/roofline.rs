@@ -1,8 +1,9 @@
 //! Roofline timing: census → seconds, with batch-utilization saturation.
 
 use crate::config::{GpuSpec, ModelConfig, Technique};
+use crate::graph::SchedulePlan;
 
-use super::ops::step_census;
+use super::ops::{plan_census, step_census, OpCensus};
 
 /// Tensor-core utilization as a function of in-flight tokens.
 ///
@@ -39,12 +40,11 @@ fn allreduce_exposure() -> f64 {
 /// Calibrated default all-reduce exposure.
 pub const AR_EXPOSE_DEFAULT: f64 = 0.05;
 
-/// Seconds for one training step of `cfg` under `technique` at batch B.
-pub fn step_time(cfg: &ModelConfig, technique: Technique, spec: &GpuSpec, batch: usize) -> f64 {
-    if batch == 0 {
-        return f64::INFINITY;
-    }
-    let census = step_census(cfg, technique, batch);
+/// Roofline pricing of a step census: the shared core of
+/// [`step_time`] and [`plan_step_time`] (affine in the census, so the
+/// technique path and the plan path price identical censuses to
+/// identical seconds).
+fn census_time(cfg: &ModelConfig, census: &OpCensus, spec: &GpuSpec, batch: usize) -> f64 {
     let tokens = (batch * cfg.seq_len) as f64;
     let util = utilization(spec, tokens);
 
@@ -64,6 +64,27 @@ pub fn step_time(cfg: &ModelConfig, technique: Technique, spec: &GpuSpec, batch:
 
     // matmul and vector work overlap poorly in practice; sum them
     t_matmul + t_vector + t_state + t_fixed + t_allreduce
+}
+
+/// Seconds for one training step of `cfg` under `technique` at batch B.
+pub fn step_time(cfg: &ModelConfig, technique: Technique, spec: &GpuSpec, batch: usize) -> f64 {
+    if batch == 0 {
+        return f64::INFINITY;
+    }
+    census_time(cfg, &step_census(cfg, technique, batch), spec, batch)
+}
+
+/// Seconds for one training step under an arbitrary execution-schedule
+/// plan at batch B — the roofline over [`plan_census`]'s schedule fold,
+/// so mixed placements (per-layer rewrites + checkpoint arms) price
+/// their recompute and rewrite overheads exactly where the timeline
+/// splices them. Bit-identical to [`step_time`] on technique-induced
+/// plans.
+pub fn plan_step_time(cfg: &ModelConfig, plan: &SchedulePlan, spec: &GpuSpec, batch: usize) -> f64 {
+    if batch == 0 {
+        return f64::INFINITY;
+    }
+    census_time(cfg, &plan_census(cfg, plan, batch), spec, batch)
 }
 
 #[cfg(test)]

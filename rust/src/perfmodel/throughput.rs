@@ -8,9 +8,13 @@ use super::roofline::step_time;
 /// One throughput measurement (one bar in Fig 5/7/8, one point in Fig 2).
 #[derive(Debug, Clone)]
 pub struct ThroughputPoint {
+    /// Technique being measured.
     pub technique: Technique,
+    /// GPU platform.
     pub gpu: Gpu,
+    /// Sequence length.
     pub seq_len: usize,
+    /// Per-GPU batch size.
     pub batch: usize,
     /// sequences per second (per GPU).
     pub seqs_per_s: f64,
@@ -33,6 +37,22 @@ pub fn throughput_at(cfg: &ModelConfig, technique: Technique, gpu: Gpu, batch: u
 pub fn throughput_at_max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu) -> ThroughputPoint {
     let b = max_batch(cfg, technique, gpu).max_batch;
     throughput_at(cfg, technique, gpu, b)
+}
+
+/// Throughput (sequences/s) of an arbitrary execution-schedule plan at
+/// an explicit batch — the roofline over the plan's own schedule
+/// census (Auto-Tempo's placement search prices every candidate plan
+/// through this).
+pub fn plan_throughput_at(
+    cfg: &ModelConfig,
+    plan: &crate::graph::SchedulePlan,
+    gpu: Gpu,
+    batch: usize,
+) -> f64 {
+    if batch == 0 {
+        return 0.0;
+    }
+    batch as f64 / super::roofline::plan_step_time(cfg, plan, &gpu.spec(), batch)
 }
 
 #[cfg(test)]

@@ -15,8 +15,11 @@ use super::table::Table;
 /// A regenerable experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct Experiment {
+    /// CLI id (`tempo experiments --id <id>`; also the CSV file name).
     pub id: &'static str,
+    /// Which paper table/figure this regenerates.
     pub paper_ref: &'static str,
+    /// One-line description for listings.
     pub description: &'static str,
 }
 

@@ -6,12 +6,16 @@ use crate::util::Json;
 /// A simple column-aligned table.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table title (rendered as `== title ==`).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (one cell per header).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -20,6 +24,7 @@ impl Table {
         }
     }
 
+    /// Append a data row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) {
         debug_assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells);

@@ -18,8 +18,11 @@ use crate::{Error, Result};
 /// One parameter/batch leaf: name, shape, dtype.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LeafSpec {
+    /// Leaf name (e.g. `bert/embeddings/word_embeddings`).
     pub name: String,
+    /// Row-major shape.
     pub shape: Vec<usize>,
+    /// Manifest dtype string (`float32` / `int32`).
     pub dtype: String,
 }
 
@@ -46,14 +49,23 @@ impl LeafSpec {
 /// and the sim backend's capacity/roofline reconstruction).
 #[derive(Debug, Clone)]
 pub struct ManifestConfig {
+    /// Model-config name.
     pub name: String,
+    /// Vocabulary size V.
     pub vocab_size: usize,
+    /// Hidden size H.
     pub hidden: usize,
+    /// Encoder layers L.
     pub layers: usize,
+    /// Attention heads A.
     pub heads: usize,
+    /// Sequence length S.
     pub seq_len: usize,
+    /// FFN inner size.
     pub intermediate: usize,
+    /// Dropout probability.
     pub dropout_p: f64,
+    /// Classification classes (cls task; 0 for MLM).
     pub num_classes: usize,
     /// Position-embedding table size (older manifests omit it; defaults
     /// to `max(seq_len, 512)`).
@@ -65,24 +77,36 @@ pub struct ManifestConfig {
 /// Files within an artifact directory.
 #[derive(Debug, Clone)]
 pub struct ManifestFiles {
+    /// `init` HLO text file name.
     pub init: String,
+    /// `step` HLO text file name.
     pub step: String,
+    /// `eval` HLO text file name.
     pub eval: String,
 }
 
 /// Parsed `manifest.json` (or a synthesized builtin equivalent).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact name (e.g. `bert_tiny_tempo`).
     pub name: String,
+    /// Task (`mlm` | `cls`).
     pub task: String,
+    /// Variant (`baseline` | `checkpoint` | `tempo`).
     pub variant: String,
     /// Kernel path the artifact was lowered with ("jnp" | "pallas").
     pub impl_name: String,
+    /// Per-step batch size the executables were lowered for.
     pub batch_size: usize,
+    /// Model hyperparameters echo.
     pub config: ManifestConfig,
+    /// Number of parameter leaves (n; the step ABI carries 3n).
     pub n_param_leaves: usize,
+    /// Parameter-leaf specs, in flat ABI order.
     pub params: Vec<LeafSpec>,
+    /// Batch-input specs, in ABI order.
     pub batch_inputs: Vec<LeafSpec>,
+    /// HLO file names (on-disk artifacts).
     pub files: ManifestFiles,
 }
 
@@ -267,6 +291,7 @@ impl Manifest {
 pub struct Artifact {
     /// `None` for synthetic builtin artifacts (sim backend only).
     pub dir: Option<PathBuf>,
+    /// The (parsed or synthesized) manifest.
     pub manifest: Manifest,
 }
 
@@ -309,14 +334,17 @@ impl Artifact {
         }
     }
 
+    /// Path of the `init` HLO text file.
     pub fn init_path(&self) -> Result<PathBuf> {
         self.file(&self.manifest.files.init)
     }
 
+    /// Path of the `step` HLO text file.
     pub fn step_path(&self) -> Result<PathBuf> {
         self.file(&self.manifest.files.step)
     }
 
+    /// Path of the `eval` HLO text file.
     pub fn eval_path(&self) -> Result<PathBuf> {
         self.file(&self.manifest.files.eval)
     }
@@ -325,8 +353,11 @@ impl Artifact {
 /// One `artifacts/index.json` listing entry.
 #[derive(Debug, Clone)]
 pub struct IndexEntry {
+    /// Artifact name.
     pub name: String,
+    /// Directory (relative to the index root).
     pub dir: String,
+    /// Parameter-leaf count, for quick listings.
     pub n_param_leaves: usize,
 }
 
@@ -410,6 +441,7 @@ impl ArtifactIndex {
         Err(Error::Invalid(format!("unknown artifact {name}")))
     }
 
+    /// Every artifact name this index can open.
     pub fn names(&self) -> Vec<&str> {
         self.entries
             .iter()

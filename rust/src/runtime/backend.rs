@@ -37,6 +37,7 @@ pub enum Entry {
 }
 
 impl Entry {
+    /// Entry-point name (`init` / `step` / `eval`).
     pub fn name(self) -> &'static str {
         match self {
             Entry::Init => "init",
@@ -76,6 +77,28 @@ pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Prepare one entry point of an artifact for repeated execution.
+    ///
+    /// The DESIGN.md §Backends contract, executable (the sim backend
+    /// runs this from a fresh checkout with zero artifacts):
+    ///
+    /// ```
+    /// use tempo::runtime::{ArtifactIndex, Backend, Entry, Program, SimBackend};
+    /// use tempo::tensor::HostTensor;
+    ///
+    /// let backend = SimBackend::new();
+    /// let artifact = ArtifactIndex::builtin().open("bert_tiny_tempo")?;
+    /// let init = backend.prepare(&artifact, Entry::Init)?;
+    ///
+    /// // init(seed) -> params ++ m ++ v : 3n flat device leaves
+    /// let seed = backend.upload(&HostTensor::scalar_i32(42))?;
+    /// let state = init.run(&[&seed])?;
+    /// assert_eq!(state.len(), 3 * artifact.manifest.n_param_leaves);
+    ///
+    /// // host <-> device round-trip is the backend's other half
+    /// let leaf0 = backend.download(&state[0])?;
+    /// assert_eq!(leaf0.shape(), &artifact.manifest.params[0].shape[..]);
+    /// # Ok::<(), tempo::Error>(())
+    /// ```
     fn prepare(&self, artifact: &Artifact, entry: Entry) -> Result<Arc<Self::Prog>>;
 
     /// Host tensor → device value.

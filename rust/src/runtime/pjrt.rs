@@ -179,10 +179,12 @@ impl PjrtBackend {
         PjrtBackend { rt }
     }
 
+    /// The underlying PJRT runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.rt.platform()
     }

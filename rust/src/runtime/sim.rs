@@ -61,6 +61,8 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Sim backend modeling the default GPU (2080 Ti, the paper's
+    /// smallest-memory platform).
     pub fn new() -> Self {
         SimBackend { gpu: Gpu::Rtx2080Ti }
     }
@@ -78,7 +80,39 @@ impl SimBackend {
         let m = &artifact.manifest;
         let cfg = model_config(m);
         let plan = SchedulePlan::for_technique(&cfg, technique(m), m.task != "cls");
-        graph::schedule_summary(&cfg, &plan).peak_bytes(m.batch_size as u64)
+        self.modeled_memory_bytes_for_plan(artifact, &plan)
+    }
+
+    /// Peak live bytes of one training step under an arbitrary
+    /// execution-schedule plan (e.g. a joint placement chosen by
+    /// `autotempo::placement_search`) at the artifact's batch size —
+    /// the same liveness-timeline fold the capacity model reports.
+    pub fn modeled_memory_bytes_for_plan(&self, artifact: &Artifact, plan: &SchedulePlan) -> u64 {
+        let cfg = model_config(&artifact.manifest);
+        graph::schedule_summary(&cfg, plan).peak_bytes(artifact.manifest.batch_size as u64)
+    }
+
+    /// Modeled step latency under an arbitrary execution-schedule plan
+    /// at the artifact's batch size — the roofline over the plan's own
+    /// schedule census (mirrors [`Backend::modeled_step_time`], which
+    /// prices the technique-induced plan).
+    pub fn modeled_step_time_for_plan(
+        &self,
+        artifact: &Artifact,
+        plan: &SchedulePlan,
+    ) -> Option<Duration> {
+        let cfg = model_config(&artifact.manifest);
+        let t = crate::perfmodel::plan_step_time(
+            &cfg,
+            plan,
+            &self.gpu.spec(),
+            artifact.manifest.batch_size,
+        );
+        if t.is_finite() && t > 0.0 {
+            Some(Duration::from_secs_f64(t))
+        } else {
+            None
+        }
     }
 }
 
@@ -457,6 +491,21 @@ mod tests {
             let fp = crate::memmodel::ModelFootprint::new(model_config(m), technique(m));
             assert_eq!(b.modeled_memory_bytes(&a), fp.total_bytes(m.batch_size), "{name}");
         }
+    }
+
+    #[test]
+    fn plan_shaped_pricing_matches_the_technique_path() {
+        let b = SimBackend::new();
+        let a = tiny_artifact("bert_tiny_checkpoint");
+        let m = &a.manifest;
+        let cfg = model_config(m);
+        let plan = SchedulePlan::for_technique(&cfg, technique(m), m.task != "cls");
+        assert_eq!(b.modeled_memory_bytes_for_plan(&a, &plan), b.modeled_memory_bytes(&a));
+        let dt = b.modeled_step_time_for_plan(&a, &plan).unwrap();
+        assert_eq!(dt, b.modeled_step_time(&a).unwrap());
+        // a serial placement of the same plan never needs more memory
+        let serial = plan.clone().serial();
+        assert!(b.modeled_memory_bytes_for_plan(&a, &serial) <= b.modeled_memory_bytes(&a));
     }
 
     #[test]

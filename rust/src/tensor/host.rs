@@ -6,7 +6,9 @@ use crate::{Error, Result};
 /// Element type of a [`HostTensor`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -28,8 +30,11 @@ impl Dtype {
 
 /// A dense row-major tensor on the host.
 #[derive(Debug, Clone, PartialEq)]
+#[allow(missing_docs)] // variant fields mirror the Dtype variants
 pub enum HostTensor {
+    /// f32 payload with row-major shape.
     F32 { shape: Vec<usize>, data: Vec<f32> },
+    /// i32 payload with row-major shape.
     I32 { shape: Vec<usize>, data: Vec<i32> },
 }
 
@@ -81,12 +86,14 @@ impl HostTensor {
         HostTensor::I32 { shape: vec![], data: vec![v] }
     }
 
+    /// The row-major shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
         }
     }
 
+    /// The element type.
     pub fn dtype(&self) -> Dtype {
         match self {
             HostTensor::F32 { .. } => Dtype::F32,
@@ -94,6 +101,7 @@ impl HostTensor {
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32 { data, .. } => data.len(),
@@ -101,6 +109,7 @@ impl HostTensor {
         }
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -28,10 +28,12 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -41,14 +43,17 @@ impl OnlineStats {
         self.max = self.max.max(x);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Population variance (0 for < 2 samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -57,14 +62,17 @@ impl OnlineStats {
         }
     }
 
+    /// Population standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen (∞ when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.max
     }

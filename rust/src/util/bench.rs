@@ -11,11 +11,17 @@ use crate::tensor::stats;
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name (e.g. `schedule/lower-cold/bert-large-s512`).
     pub name: String,
+    /// Timed iterations executed.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Iteration-time standard deviation.
     pub stddev: Duration,
 }
 
@@ -32,9 +38,13 @@ impl BenchResult {
 
 /// Bench driver with configurable budgets.
 pub struct BenchHarness {
+    /// Untimed warmup iterations per case.
     pub warmup_iters: usize,
+    /// Minimum timed iterations per case.
     pub min_iters: usize,
+    /// Hard cap on timed iterations per case.
     pub max_iters: usize,
+    /// Minimum wall-clock budget per case.
     pub min_time: Duration,
     results: Vec<BenchResult>,
 }
@@ -52,6 +62,7 @@ impl Default for BenchHarness {
 }
 
 impl BenchHarness {
+    /// Default budgets (3 warmup, ≥10 iters, ≥300 ms per case).
     pub fn new() -> Self {
         Self::default()
     }
@@ -103,6 +114,7 @@ impl BenchHarness {
         res
     }
 
+    /// All recorded case results, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -9,8 +9,11 @@ use crate::{Error, Result};
 /// Parsed command-line arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments, in order (subcommand first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` tokens.
     pub flags: Vec<String>,
     /// Option keys that were consumed via a typed getter (for unknown-key
     /// diagnostics).
@@ -51,20 +54,24 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.known.borrow_mut().insert(name.to_string());
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.known.borrow_mut().insert(name.to_string());
         self.options.get(name).map(String::as_str)
     }
 
+    /// Option value with a default.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer option with a default.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -74,6 +81,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),

@@ -13,29 +13,39 @@ use crate::{Error, Result};
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (kept as f64; manifests stay inside 2⁵³).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- constructors -----------------------------------------------------
 
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from values.
     pub fn arr(items: Vec<Json>) -> Json {
         Json::Arr(items)
     }
 
+    /// Number value.
     pub fn num(v: impl Into<f64>) -> Json {
         Json::Num(v.into())
     }
 
+    /// String value.
     pub fn str(v: impl Into<String>) -> Json {
         Json::Str(v.into())
     }
@@ -56,6 +66,7 @@ impl Json {
             .ok_or_else(|| Error::Parse(format!("missing field '{key}'")))
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -63,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -70,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -78,6 +91,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// The value as a boolean.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -85,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),

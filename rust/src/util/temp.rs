@@ -27,6 +27,7 @@ impl TempDir {
         Ok(TempDir { path })
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &Path {
         &self.path
     }

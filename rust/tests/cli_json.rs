@@ -82,6 +82,37 @@ fn schedule_json_round_trips_and_matches_memmodel() {
 }
 
 #[test]
+fn placement_json_round_trips_and_matches_the_search() {
+    let text = run(&["placement", "bert-tiny", "--json", "--gpu", "2080ti"]);
+    let doc = Json::parse(&text).expect("placement --json emits one JSON document");
+    assert_eq!(doc.req("model").unwrap().as_str().unwrap(), "bert-tiny");
+    assert_eq!(doc.req("mode").unwrap().as_str().unwrap(), "joint");
+
+    // one table row per encoder layer, round-tripping cleanly
+    let table = Table::from_json(doc.req("table").unwrap()).unwrap();
+    assert_eq!(table.rows.len(), ModelConfig::bert_tiny().layers);
+    let reparsed = Json::parse(&table.to_json().pretty()).unwrap();
+    assert_eq!(Table::from_json(&reparsed).unwrap().rows, table.rows);
+
+    // numbers agree with the library search
+    let d = tempo::autotempo::placement_search(
+        &ModelConfig::bert_tiny(),
+        tempo::config::Gpu::Rtx2080Ti,
+        tempo::autotempo::PlacementMode::Joint,
+        None,
+    );
+    assert_eq!(doc.req("max_batch").unwrap().as_usize().unwrap(), d.max_batch);
+    assert_eq!(
+        doc.req("checkpointed_layers").unwrap().as_usize().unwrap(),
+        d.plan.checkpointed_layers()
+    );
+    assert_eq!(
+        doc.req("candidates").unwrap().as_usize().unwrap(),
+        d.stats.enumerated
+    );
+}
+
+#[test]
 fn schedule_text_mode_cross_checks_against_memmodel() {
     for technique in ["baseline", "tempo", "checkpoint"] {
         let text = run(&["schedule", "bert-tiny", "--technique", technique]);

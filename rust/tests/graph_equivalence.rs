@@ -315,7 +315,7 @@ fn plan_bytes_bit_identical_for_mixed_plans() {
     // a deliberately non-uniform plan cycling through all 16 subsets
     let per_layer: Vec<OptimizationSet> =
         (0..cfg.layers).map(|l| subsets[l % subsets.len()]).collect();
-    let plan = LayerPlan { per_layer: per_layer.clone() };
+    let plan = LayerPlan::rewrites_only(per_layer.clone());
     for batch in BATCHES {
         let base = ModelFootprint::new(cfg.clone(), Technique::Baseline).breakdown(batch);
         let oracle_encoder: u64 = per_layer

@@ -34,12 +34,12 @@ fn random_config(rng: &mut Rng) -> ModelConfig {
     }
 }
 
-/// A random per-layer optimization assignment.
+/// A random per-layer optimization assignment (checkpoint-free).
 fn random_plan(rng: &mut Rng, layers: usize) -> LayerPlan {
     let subsets = OptimizationSet::all_subsets();
-    LayerPlan {
-        per_layer: (0..layers).map(|_| subsets[rng.below(subsets.len())]).collect(),
-    }
+    LayerPlan::rewrites_only(
+        (0..layers).map(|_| subsets[rng.below(subsets.len())]).collect(),
+    )
 }
 
 /// The single-optimization toggles in a fixed order.

@@ -13,8 +13,9 @@
 //!
 //! Exactly ONE intentional divergence exists, and it is opt-in:
 //!
-//! * **Serial checkpointing** ([`SchedulePlan::serial_checkpoint`],
-//!   PyTorch-style `torch.utils.checkpoint`: no re-forward prefetch).
+//! * **Serial checkpointing** (`CkptMode::Serial` via
+//!   `SchedulePlan::serial`, PyTorch-style `torch.utils.checkpoint`:
+//!   no re-forward prefetch).
 //!   The static sum charged the head activations AND one block's
 //!   recompute live set simultaneously; a serial schedule frees the
 //!   head's B·S·V logits during the head backward *before* the first
@@ -239,7 +240,7 @@ fn techniques_map_onto_the_subset_grid() {
 // ---------------------------------------------------------------------------
 // The enumerated divergence list. One entry:
 //
-//   1. Serial checkpointing (opt-in `serial_checkpoint`): the static
+//   1. Serial checkpointing (opt-in `CkptMode::Serial`): the static
 //      sum over-counted the true peak by min(head, block inventory),
 //      because without the re-forward prefetch the head activations
 //      and the recompute live set are never simultaneously alive —
@@ -391,7 +392,7 @@ fn mixed_layer_plans_price_bit_identically_through_the_schedule() {
     let subsets = OptimizationSet::all_subsets();
     let per_layer: Vec<OptimizationSet> =
         (0..cfg.layers).map(|l| subsets[l % subsets.len()]).collect();
-    let plan = LayerPlan { per_layer: per_layer.clone() };
+    let plan = LayerPlan::rewrites_only(per_layer.clone());
     let none = OptimizationSet::none();
     for batch in BATCHES {
         let b = batch as u64;
