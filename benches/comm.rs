@@ -1,0 +1,60 @@
+//! Comm-lane benches: the lane-priced step fold next to the exposure
+//! trajectory it models.
+//!
+//! `plan_lane_times` is the hot inner call of every priced sweep cell
+//! (throughput curves, Auto-Tempo pricing, the sim backend), so its
+//! cost is benched per rig. Alongside the timings, the harness records
+//! the modeled exposure trajectory — exposed collective milliseconds
+//! versus batch on each multi-device rig — which is the quantity the
+//! paper's §4.2 amortization argument is about: the collective is
+//! batch-independent, the backward is not, so exposure must fall as
+//! batch grows down to the embedding-bucket floor. CI uploads the JSON
+//! as `BENCH_comm.json` and gates on its presence.
+
+use tempo::config::{Gpu, ModelConfig, Technique};
+use tempo::graph::SchedulePlan;
+use tempo::perfmodel::plan_lane_times;
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+
+    // the fold itself: per-cell pricing cost on each paper rig
+    for (name, cfg) in [
+        ("bert-large-s128", ModelConfig::bert_large().with_seq_len(128)),
+        ("bert-large-s512", ModelConfig::bert_large().with_seq_len(512)),
+    ] {
+        let base = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+        let over = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+        for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
+            let spec = gpu.spec();
+            h.bench(&format!("comm/lane-times-baseline/{name}-{}", gpu.name()), || {
+                std::hint::black_box(plan_lane_times(&cfg, &base, &spec, 8));
+            });
+            h.bench(&format!("comm/lane-times-overlapped/{name}-{}", gpu.name()), || {
+                std::hint::black_box(plan_lane_times(&cfg, &over, &spec, 8));
+            });
+        }
+    }
+
+    // the modeled trajectory: exposure amortizes with batch on the
+    // multi-device rigs (the embedding tail bucket is the floor)
+    for gpu in [Gpu::Rtx2080Ti, Gpu::V100] {
+        let spec = gpu.spec();
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+        println!("exposure trajectory on {} ×{}:", gpu.name(), spec.devices);
+        for b in [1usize, 2, 4, 8, 16] {
+            let lt = plan_lane_times(&cfg, &plan, &spec, b);
+            println!(
+                "  B={b:>2}: all-reduce {:7.3} ms, exposed {:7.3} ms, step {:7.3} ms",
+                lt.comm_total * 1e3,
+                lt.comm_exposed * 1e3,
+                lt.step * 1e3,
+            );
+        }
+    }
+
+    h.write_csv("bench_results/bench_comm.csv").unwrap();
+    h.write_json("bench_results/BENCH_comm.json").unwrap();
+}

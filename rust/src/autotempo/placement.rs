@@ -34,36 +34,57 @@
 //! Candidates are first summarized (one memoized
 //! [`ScheduleSummary`](crate::graph::ScheduleSummary) per distinct
 //! plan — the §Schedule memoization contract is what makes enumerating
-//! ~1k plans cheap), then **pruned before pricing**: plan Q is
-//! dominated when some plan P has per-item peak ≤ Q's and a work
-//! census ≤ Q's componentwise. The roofline is a positive-weighted sum
-//! of the census, so P's throughput is ≥ Q's at every batch and P's
-//! max batch is ≥ Q's — Q can never win any selection objective, and
-//! pruning it is lossless (pinned against exhaustive pricing in
-//! `tests/placement_search.rs`). Only survivors pay the max-batch
-//! binary search and throughput pricing; [`PruneStats`] reports the
-//! funnel.
+//! ~1k plans cheap), then **pruned before pricing**. The lane-aware
+//! roofline prices a plan as `t(effective census · B) + constants +
+//! exposed(B)`, where the *effective census* is the schedule census
+//! minus the prefetch-hidden credit (`total − OVERLAP_EFF · hidden`)
+//! and the exposed collective time is a fold over the gradient
+//! buckets' compute tails. Plan Q is therefore dominated when some
+//! plan P has, componentwise:
+//!
+//! * per-item peak ≤ Q's (P's max batch is ≥ Q's), and
+//! * effective census ≤ Q's (P's compute lane is faster at every
+//!   batch — the roofline is a positive-weighted sum), and
+//! * for every gradient bucket, *pre-readiness* effective census
+//!   (`eff − tail`) ≤ Q's — by linearity this bounds P's exposure by
+//!   Q's exposure plus exactly the compute P already saved, so P's
+//!   *step* is ≤ Q's at every batch even where the collective is
+//!   exposed.
+//!
+//! Q can then never win any selection objective and pruning it is
+//! lossless (pinned against exhaustive pricing in
+//! `tests/placement_search.rs`). Strictness is counted on the first
+//! two conditions only — the bucket condition is a qualifier, so
+//! exposure-equal exact ties are all kept for the tie-breaks. Only
+//! survivors pay the max-batch binary search and throughput pricing;
+//! [`PruneStats`] reports the funnel.
 //!
 //! Throughput ties break toward the **lower peak** first (a
 //! zero-overhead rewrite like output-only softmax or in-place
 //! LayerNorm is a free win and is always taken), then toward **fewer
 //! checkpointed layers**, then the smaller rewrite surface: equal peak
-//! and equal census mean the extra checkpoints buy nothing, and
-//! recompute surface (like the lossy GELU surface) is pure risk. This
-//! order is also what makes the strict-domination prune lossless — a
-//! pruned plan loses to its dominator at every stage of the
-//! comparison. One consequence the tests pin: with equal census and a
-//! strictly lower peak, [`CkptMode::Serial`] dominates
-//! [`CkptMode::Overlapped`] — the model charges overlap's prefetch
-//! co-residency but (deliberately, matching the roofline's
-//! latency-blind census fold) not its latency savings.
+//! and equal effective census mean the extra checkpoints buy nothing,
+//! and recompute surface (like the lossy GELU surface) is pure risk.
+//!
+//! Under the pre-lane latency-blind fold, [`CkptMode::Serial`]
+//! strictly dominated [`CkptMode::Overlapped`] (equal census, lower
+//! peak) and overlap never survived the prune. That is no longer true:
+//! an `Overlapped` arm's hidden prefetch gives it a strictly *smaller
+//! effective census* than its `Serial` twin, while `Serial` keeps the
+//! strictly lower peak — the two are incomparable, both survive, and
+//! the exposure fold decides at pricing time. Where memory allows the
+//! overlapped arm's batch, its hidden recompute genuinely buys
+//! throughput and the search now selects it
+//! (`tests/lane_exposure.rs` pins the divergence); capacity-bound
+//! queries still land on `Serial`, whose lower peak fits more
+//! sequences.
 
 use std::sync::Arc;
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet};
-use crate::graph::{self, CkptMode, ScheduleSummary};
+use crate::graph::{self, Census, CkptMode, ScheduleSummary};
 use crate::memmodel::max_batch_for_plan;
-use crate::perfmodel::plan_throughput_at;
+use crate::perfmodel::{plan_throughput_at, OVERLAP_EFF};
 
 use super::search::LayerPlan;
 
@@ -203,33 +224,74 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
     out
 }
 
-/// `true` when `a`'s summary dominates `b`'s: peak ≤ and census ≤
-/// componentwise. (Both plans share the same batch-free state bytes,
-/// so the per-item peak ordering is the peak ordering at every batch.)
-fn dominates(a: &ScheduleSummary, b: &ScheduleSummary) -> bool {
-    a.peak_item_bytes <= b.peak_item_bytes
-        && a.census.matmul_flops <= b.census.matmul_flops
-        && a.census.vector_flops <= b.census.vector_flops
-        && a.census.vector_bytes <= b.census.vector_bytes
+/// Pre-computed dominance key of one candidate (see module docs):
+/// per-item peak, the *effective* census the compute lane prices
+/// (`total − OVERLAP_EFF · hidden`), and — per gradient bucket — the
+/// pre-readiness effective census `eff − tail`, which by the roofline's
+/// linearity bounds how much more collective time this plan can leave
+/// exposed than a plan with smaller pre-readiness census.
+struct DomKey {
+    peak_item: u64,
+    eff: Census,
+    pre_readiness: Vec<Census>,
 }
 
-/// Strict version: dominates with at least one strict inequality.
-fn strictly_dominates(a: &ScheduleSummary, b: &ScheduleSummary) -> bool {
-    dominates(a, b)
-        && (a.peak_item_bytes < b.peak_item_bytes
-            || a.census.matmul_flops < b.census.matmul_flops
-            || a.census.vector_flops < b.census.vector_flops
-            || a.census.vector_bytes < b.census.vector_bytes)
+/// Componentwise census difference. Exact in f64: every component is
+/// an integer below 2⁵³ and `OVERLAP_EFF` is a power of two, so the
+/// keys (and hence the prune) are deterministic.
+fn census_sub(a: Census, b: Census) -> Census {
+    Census {
+        matmul_flops: a.matmul_flops - b.matmul_flops,
+        vector_flops: a.vector_flops - b.vector_flops,
+        vector_bytes: a.vector_bytes - b.vector_bytes,
+    }
+}
+
+/// Componentwise `a ≤ b`.
+fn census_le(a: &Census, b: &Census) -> bool {
+    a.matmul_flops <= b.matmul_flops
+        && a.vector_flops <= b.vector_flops
+        && a.vector_bytes <= b.vector_bytes
+}
+
+fn dom_key(s: &ScheduleSummary) -> DomKey {
+    let eff = census_sub(s.census, s.lanes.hidden.scale(OVERLAP_EFF));
+    let pre_readiness =
+        s.lanes.buckets.iter().map(|bk| census_sub(eff, bk.tail)).collect();
+    DomKey { peak_item: s.peak_item_bytes, eff, pre_readiness }
+}
+
+/// `true` when `a` dominates `b`: peak ≤, effective census ≤
+/// componentwise, and per-bucket pre-readiness census ≤ componentwise.
+/// Together these make `a`'s priced step ≤ `b`'s at every batch on
+/// every rig (see module docs for the exposure-bound argument; both
+/// plans share the same batch-free state bytes and the same bucket
+/// bytes, so peak and collective durations need no further terms).
+fn dominates(a: &DomKey, b: &DomKey) -> bool {
+    a.peak_item <= b.peak_item
+        && census_le(&a.eff, &b.eff)
+        && a.pre_readiness.len() == b.pre_readiness.len()
+        && a.pre_readiness.iter().zip(&b.pre_readiness).all(|(x, y)| census_le(x, y))
+}
+
+/// Strict version: dominates with at least one strict inequality on
+/// peak or effective census. The bucket condition stays a non-strict
+/// qualifier — two plans equal on peak and effective census are both
+/// kept regardless of their exposure, so the selection tie-breaks see
+/// every exact tie.
+fn strictly_dominates(a: &DomKey, b: &DomKey) -> bool {
+    dominates(a, b) && (a.peak_item < b.peak_item || a.eff != b.eff)
 }
 
 /// Drop every candidate strictly dominated by another (O(n²) over ~1k
-/// summaries — each comparison is four scalar reads). Exact-tie plans
-/// are all kept: the selection tie-breaks (fewer checkpoints, smaller
-/// rewrite surface, enumeration order) must see them.
+/// keys — each comparison is a handful of scalar reads). Exact-tie
+/// plans are all kept: the selection tie-breaks (fewer checkpoints,
+/// smaller rewrite surface, enumeration order) must see them.
 fn prune_dominated(cands: Vec<Summarized>) -> Vec<Summarized> {
-    let keep: Vec<bool> = cands
+    let keys: Vec<DomKey> = cands.iter().map(|c| dom_key(&c.summary)).collect();
+    let keep: Vec<bool> = keys
         .iter()
-        .map(|q| !cands.iter().any(|p| strictly_dominates(&p.summary, &q.summary)))
+        .map(|q| !keys.iter().any(|p| strictly_dominates(p, q)))
         .collect();
     cands
         .into_iter()
@@ -414,6 +476,43 @@ mod tests {
         // no duplicate canonical candidates
         for (i, a) in joint.iter().enumerate() {
             assert!(!joint[i + 1..].contains(a), "duplicate candidate {a:?}");
+        }
+    }
+
+    #[test]
+    fn both_checkpoint_modes_survive_the_lane_aware_prune() {
+        // pre-lane pricing pruned every Overlapped arm here (equal
+        // census, strictly higher peak than its Serial twin); with the
+        // hidden-prefetch credit the two arms are incomparable — Serial
+        // keeps the lower peak, Overlapped the smaller effective
+        // census — and both must reach pricing
+        let cfg = ModelConfig::bert_mini();
+        let n = cfg.layers;
+        let over = LayerPlan::uniform_checkpoint(n, CkptMode::Overlapped);
+        let serial = LayerPlan::uniform_checkpoint(n, CkptMode::Serial);
+        let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
+        let (ko, ks) = (key(&over), key(&serial));
+        assert!(ks.peak_item < ko.peak_item, "serial must hold the lower peak");
+        assert!(
+            census_le(&ko.eff, &ks.eff) && ko.eff != ks.eff,
+            "overlap must hold the smaller effective census"
+        );
+        assert!(!strictly_dominates(&ks, &ko), "serial no longer dominates overlap");
+        assert!(!strictly_dominates(&ko, &ks), "overlap must not dominate serial either");
+
+        let summarized = candidates(&cfg, PlacementMode::Uniform)
+            .into_iter()
+            .map(|plan| {
+                let summary = graph::schedule_summary(&cfg, &plan.schedule_plan());
+                Summarized { plan, summary }
+            })
+            .collect();
+        let survivors = prune_dominated(summarized);
+        for want in [&over, &serial] {
+            assert!(
+                survivors.iter().any(|s| s.plan == *want),
+                "{want:?} was pruned from the uniform family"
+            );
         }
     }
 

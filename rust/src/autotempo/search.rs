@@ -143,11 +143,16 @@ pub fn coarse_pass(cfg: &ModelConfig, gpu: Gpu) -> AutoTempoDecision {
 /// Throughput (seqs/s) of a prefix plan with `applied` of `cfg.layers`
 /// layers tempo-ized, at batch `batch`.
 ///
-/// The roofline `step_time` is affine in the op census, and Tempo's
+/// The roofline's compute lane is affine in the op census, and Tempo's
 /// census delta is per-layer linear, so interpolating the two uniform
-/// endpoints by the applied fraction is *exact* for prefix plans —
-/// `applied = 0` reproduces the Baseline number and `applied = layers`
-/// the Tempo number bit-for-bit.
+/// endpoints by the applied fraction reproduces the endpoints
+/// bit-for-bit (`applied = 0` ≡ Baseline, `applied = layers` ≡ Tempo)
+/// and is exact for prefix plans on single-device rigs. On multi-device
+/// rigs the exposed-collective term is a max-fold over the gradient
+/// buckets rather than affine in the census, so intermediate prefixes
+/// are a tight linear approximation there; the joint
+/// [`super::placement_search`] prices candidate plans exactly through
+/// [`crate::perfmodel::plan_throughput_at`] instead.
 pub fn plan_throughput(cfg: &ModelConfig, gpu: Gpu, applied: usize, batch: usize) -> f64 {
     if batch == 0 {
         return 0.0;

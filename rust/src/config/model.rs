@@ -66,12 +66,26 @@ impl ModelConfig {
     /// Total parameter count (embeddings + encoder + MLM head, fp32
     /// element count — multiply by dtype width for bytes).
     pub fn param_count(&self) -> usize {
+        let (emb, per_layer, mlm) = self.param_count_split();
+        emb + self.layers * per_layer + mlm
+    }
+
+    /// Per-segment parameter counts `(embedding, per encoder layer,
+    /// MLM head)` — the gradient-bucket granularity of the comm lane.
+    ///
+    /// The three terms sum exactly to [`param_count`](Self::param_count)
+    /// (`emb + layers·per_layer + head`), so the bucketed all-reduce
+    /// moves exactly the same interconnect bytes as a monolithic one.
+    /// The embedding bucket carries the tied vocabulary matrix, making
+    /// it the largest — and it becomes ready only at the very end of
+    /// backward, which is what keeps part of the collective exposed.
+    pub fn param_count_split(&self) -> (usize, usize, usize) {
         let h = self.hidden;
         let emb = (self.vocab_size + self.max_position + self.type_vocab) * h + 2 * h;
         // per layer: QKV+O (4 h² + 4h), FFN (2·h·i + i + h), 2 LN (4h)
         let per_layer = 4 * h * h + 4 * h + 2 * h * self.intermediate + self.intermediate + h + 4 * h;
         let mlm = h * h + h + 2 * h + self.vocab_size; // transform + LN + tied decoder bias
-        emb + self.layers * per_layer + mlm
+        (emb, per_layer, mlm)
     }
 
     /// Builder: override the sequence length (phase 1 vs phase 2).
@@ -242,6 +256,18 @@ mod tests {
     fn bert_large_param_count_is_about_335m() {
         let n = ModelConfig::bert_large().param_count();
         assert!((320_000_000..350_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn param_split_sums_to_param_count() {
+        for cfg in [ModelConfig::bert_base(), ModelConfig::bert_large(),
+                    ModelConfig::gpt2(), ModelConfig::roberta_large(),
+                    ModelConfig::bert_tiny(), ModelConfig::bert_mini()] {
+            let (emb, per_layer, head) = cfg.param_count_split();
+            assert_eq!(emb + cfg.layers * per_layer + head, cfg.param_count(), "{}", cfg.name);
+            // the tied-vocab embedding bucket is the largest single bucket
+            assert!(emb > per_layer && emb > head, "{}", cfg.name);
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! [`ScheduleSummary::peak_bytes`].
 
 use super::op::Census;
-use super::schedule::{EventKind, MemClass, StepSchedule, MEM_CLASS_COUNT};
+use super::schedule::{EventKind, Lane, MemClass, Segment, StepSchedule, MEM_CLASS_COUNT};
 
 /// Live-bytes sample at one schedule event (at a concrete batch).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +49,45 @@ pub struct LivenessTimeline {
     pub peak_event: usize,
 }
 
+/// One comm-lane gradient bucket as the exposure fold sees it: its
+/// interconnect payload and the compute census still ahead of the step
+/// when the bucket becomes ready (its segment's last backward op
+/// completes). The tail is what the collective can hide under — a
+/// bucket with an empty tail (the embedding bucket) is pure exposed
+/// time on a multi-device rig.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommBucket {
+    /// Which segment's gradients this bucket carries.
+    pub segment: Segment,
+    /// Interconnect payload in bytes (fp32 gradients).
+    pub bytes: u64,
+    /// Per-batch-item compute census issued *after* this bucket is
+    /// ready (all lanes — in-flight recompute work also covers comm).
+    pub tail: Census,
+}
+
+/// The concurrency profile of a schedule: what the latency fold
+/// (`perfmodel::plan_lane_times`) needs beyond the scalar census.
+///
+/// Liveness (peak bytes) is lane-blind; this profile is the *time*
+/// side of the lanes — how much prefetched recompute work can hide
+/// under the covering backward, and when each gradient bucket's
+/// all-reduce can start relative to the remaining backward compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneProfile {
+    /// Per-item census of all [`Lane::Prefetch`] events (hoisted
+    /// overlapped re-forwards).
+    pub prefetch: Census,
+    /// The part of `prefetch` that fits under its covering backward
+    /// window, componentwise per resource (`min(prefetch, cover)` per
+    /// prefetch pair) — the recompute work an overlap-aware roofline
+    /// does not charge on the critical path.
+    pub hidden: Census,
+    /// Gradient buckets in readiness order (mirrors
+    /// `StepSchedule::grad_buckets`), each with its compute tail.
+    pub buckets: Vec<CommBucket>,
+}
+
 /// Batch-free fold of a schedule: peak, high-water op, per-class bytes
 /// at the peak, and the step's total work census.
 #[derive(Debug, Clone, PartialEq)]
@@ -72,6 +111,9 @@ pub struct ScheduleSummary {
     pub census: Census,
     /// Number of events in the schedule (bench introspection).
     pub events: usize,
+    /// Concurrency profile: prefetch-hidden work and comm-bucket tails
+    /// for the exposure fold. Empty/zero on single-lane schedules.
+    pub lanes: LaneProfile,
 }
 
 impl ScheduleSummary {
@@ -181,7 +223,91 @@ impl StepSchedule {
             high_water: high_water_label(self.events[best_event].kind),
             census,
             events: self.events.len(),
+            lanes: self.lane_profile(),
         }
+    }
+
+    /// Fold the concurrency profile: per-resource prefetch hiding and
+    /// per-bucket compute tails (see [`LaneProfile`]).
+    pub fn lane_profile(&self) -> LaneProfile {
+        // census strictly after each event (suffix sums, exact folds)
+        let mut tail_after = vec![Census::ZERO; self.events.len() + 1];
+        for i in (0..self.events.len()).rev() {
+            let mut acc = tail_after[i + 1];
+            acc.add(self.events[i].census);
+            tail_after[i] = acc;
+        }
+
+        // prefetch pairs: a contiguous run of Prefetch events for
+        // segment `s` hides under the compute events that follow it, up
+        // to (not including) the first Backward op of `s` itself — the
+        // covering window the hoist placed it under. The lowering keeps
+        // at most one prefetch in flight (the one-segment-deep
+        // invariant), so a simple state machine folds every pair.
+        let mut prefetch = Census::ZERO;
+        let mut hidden = Census::ZERO;
+        let mut run: Option<(Segment, Census)> = None; // open prefetch run
+        let mut covering: Option<(Segment, Census, Census)> = None; // (seg, p, cover)
+        for e in &self.events {
+            match e.lane {
+                Lane::Prefetch => {
+                    prefetch.add(e.census);
+                    match &mut run {
+                        Some((seg, p)) if *seg == e.segment => p.add(e.census),
+                        _ => run = Some((e.segment, e.census)),
+                    }
+                }
+                Lane::Compute => {
+                    if let Some((seg, p)) = run.take() {
+                        if let Some((_, p2, c2)) = covering.take() {
+                            hidden.add(min_census(p2, c2));
+                        }
+                        covering = Some((seg, p, Census::ZERO));
+                    }
+                    if let Some((seg, p, cover)) = &mut covering {
+                        if e.kind == EventKind::Backward && e.segment == *seg {
+                            // the prefetched layer's own backward starts:
+                            // the window is over; credit the overlap per
+                            // resource (min of demand and cover)
+                            hidden.add(min_census(*p, *cover));
+                            covering = None;
+                        } else {
+                            cover.add(e.census);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((_, p, cover)) = covering {
+            hidden.add(min_census(p, cover));
+        }
+
+        // bucket tails: compute census after each segment's last
+        // backward op (when that bucket's gradients are final)
+        let buckets = self
+            .grad_buckets
+            .iter()
+            .map(|&(segment, bytes)| {
+                let tail = self
+                    .events
+                    .iter()
+                    .rposition(|e| e.kind == EventKind::Backward && e.segment == segment)
+                    .map(|i| tail_after[i + 1])
+                    .unwrap_or(Census::ZERO);
+                CommBucket { segment, bytes, tail }
+            })
+            .collect();
+
+        LaneProfile { prefetch, hidden, buckets }
+    }
+}
+
+/// Componentwise minimum of two censuses (per-resource overlap).
+fn min_census(a: Census, b: Census) -> Census {
+    Census {
+        matmul_flops: a.matmul_flops.min(b.matmul_flops),
+        vector_flops: a.vector_flops.min(b.vector_flops),
+        vector_bytes: a.vector_bytes.min(b.vector_bytes),
     }
 }
 
@@ -250,6 +376,58 @@ mod tests {
         assert_eq!(plain.high_water, "bwd working set");
         let ck = sched(&cfg, Technique::Checkpoint).summarize_step();
         assert_eq!(ck.high_water, "ckpt re-forward + grads");
+    }
+
+    #[test]
+    fn lane_profile_hides_nothing_without_prefetches() {
+        let cfg = ModelConfig::bert_mini();
+        for technique in [Technique::Baseline, Technique::Tempo] {
+            let lanes = sched(&cfg, technique).summarize_step().lanes;
+            assert_eq!(lanes.prefetch, Census::ZERO, "{technique:?}");
+            assert_eq!(lanes.hidden, Census::ZERO, "{technique:?}");
+        }
+        // serial checkpointing recomputes in place: still nothing hidden
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true).serial();
+        let lanes = lower_step(&cfg, &plan, Lowering::for_model(&cfg)).summarize_step().lanes;
+        assert_eq!(lanes.prefetch, Census::ZERO);
+        assert_eq!(lanes.hidden, Census::ZERO);
+    }
+
+    #[test]
+    fn lane_profile_bounds_hidden_by_prefetch() {
+        let cfg = ModelConfig::bert_mini();
+        let lanes = sched(&cfg, Technique::Checkpoint).summarize_step().lanes;
+        // the top layer's re-forward is hoisted under the head backward
+        assert!(lanes.prefetch.matmul_flops > 0.0);
+        assert!(lanes.hidden.matmul_flops > 0.0, "head bwd covers some recompute");
+        for (h, p) in [
+            (lanes.hidden.matmul_flops, lanes.prefetch.matmul_flops),
+            (lanes.hidden.vector_flops, lanes.prefetch.vector_flops),
+            (lanes.hidden.vector_bytes, lanes.prefetch.vector_bytes),
+        ] {
+            assert!(h >= 0.0 && h <= p, "hidden {h} out of [0, {p}]");
+        }
+    }
+
+    #[test]
+    fn bucket_tails_shrink_along_readiness_order() {
+        let cfg = ModelConfig::bert_mini();
+        for technique in Technique::all() {
+            let lanes = sched(&cfg, technique).summarize_step().lanes;
+            assert_eq!(lanes.buckets.len(), cfg.layers + 2, "{technique:?}");
+            // later-ready buckets have less compute left to hide under
+            for w in lanes.buckets.windows(2) {
+                assert!(w[0].tail.matmul_flops >= w[1].tail.matmul_flops, "{technique:?}");
+                assert!(w[0].tail.vector_flops >= w[1].tail.vector_flops, "{technique:?}");
+                assert!(w[0].tail.vector_bytes >= w[1].tail.vector_bytes, "{technique:?}");
+            }
+            // the embedding bucket is ready at the end of backward: its
+            // tail is empty (the optimizer event carries no census), so
+            // its collective is pure exposed time on a multi-device rig
+            let emb = lanes.buckets.last().unwrap();
+            assert_eq!(emb.segment, crate::graph::Segment::Embedding, "{technique:?}");
+            assert_eq!(emb.tail, Census::ZERO, "{technique:?}");
+        }
     }
 
     #[test]

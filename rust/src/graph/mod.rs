@@ -61,11 +61,12 @@ pub use memo::{
     cache_len, checkpoint_summary, embedding_summary, encoder_summary, encoder_summary_with,
     head_summary,
 };
-pub use liveness::{LivePoint, LivenessTimeline, ScheduleSummary};
+pub use liveness::{CommBucket, LaneProfile, LivePoint, LivenessTimeline, ScheduleSummary};
 pub use op::{Census, Op, OpKind};
 pub use schedule::{
     lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, CkptMode, EventKind,
-    MemClass, SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule, MEM_CLASS_COUNT,
+    Lane, MemClass, SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule,
+    MEM_CLASS_COUNT,
 };
 pub use table::{block_rows, live_totals, tensor_table, tensor_table_with, ClassTotals, TensorRow};
 pub use tensor::{RetainedTensor, RewriteKind, TensorClass};

@@ -65,6 +65,24 @@
 //! buffer, never a pipeline of them — while a `Serial` layer recomputes
 //! strictly in place. Uniform plans reproduce the legacy `checkpoint:
 //! bool` semantics bit-identically.
+//!
+//! **Lanes (DESIGN.md §Lanes).** The timeline is no longer one stream:
+//! every event carries a [`Lane`] tag. [`Lane::Compute`] is the serial
+//! stream (today's timeline, unchanged); [`Lane::Prefetch`] marks the
+//! hoisted `Overlapped` re-forwards that run concurrently under the
+//! preceding segment's backward. The comm lane is *data*, not events:
+//! [`StepSchedule::grad_buckets`] lists the bucketed gradient
+//! all-reduce in readiness order (head first, encoder top-down,
+//! embedding last — the tied-vocab bucket is both the largest and the
+//! last ready). Collective events hold no device memory beyond the
+//! resident `grads` tensor, so the liveness fold never sees them; the
+//! roofline's exposure fold (`perfmodel::plan_lane_times`) prices them
+//! against the concurrent backward. Data-parallel replicas execute the
+//! same SPMD timeline, so "one timeline per device" is this schedule ×
+//! `GpuSpec::devices`, and every peak is a per-device peak. A
+//! single-device/no-collective configuration has an empty comm lane
+//! and lowers to the bit-identical pre-lane timeline (same events,
+//! peak and census).
 
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -155,6 +173,26 @@ impl Segment {
     }
 }
 
+/// Which concurrent lane a schedule event occupies.
+///
+/// The schedule models a step as concurrent streams, not one serial
+/// tape: the compute lane is the classic timeline, while prefetched
+/// checkpoint re-forwards ([`CkptMode::Overlapped`]) issue on a second
+/// stream under the preceding segment's backward. Liveness folds are
+/// lane-blind (a tensor's bytes are live whichever lane allocated
+/// them); only the latency fold (`perfmodel::plan_lane_times`) treats
+/// lanes as concurrent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// The serial compute stream (forward, backward, in-place
+    /// recompute, optimizer).
+    Compute,
+    /// The overlap stream: an `Overlapped` layer's re-forward hoisted
+    /// under the preceding segment's backward, which (partially) hides
+    /// its latency.
+    Prefetch,
+}
+
 /// What a schedule event does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
@@ -235,15 +273,27 @@ pub struct ScheduleEvent {
     /// 1.25× factors already applied (every term stays a multiple of
     /// ¼ far below 2⁵³, so folds remain exact in any order).
     pub census: Census,
+    /// Which concurrent lane the event issues on ([`Lane::Compute`]
+    /// unless it is a hoisted `Overlapped` re-forward).
+    pub lane: Lane,
 }
 
-/// The lowered step: a time-ordered event list over a tensor table.
+/// The lowered step: a time-ordered event list over a tensor table,
+/// plus the comm lane's gradient buckets.
 #[derive(Debug, Clone)]
 pub struct StepSchedule {
     /// Every allocation the step makes, indexed by the events' ids.
     pub tensors: Vec<SchedTensor>,
     /// The time-ordered event list.
     pub events: Vec<ScheduleEvent>,
+    /// The comm lane: bucketed gradient all-reduce in readiness order
+    /// (head, encoder top-down, embedding last), each with its
+    /// interconnect payload in bytes (fp32 gradients). Bucket bytes sum
+    /// exactly to `4·param_count`; the buckets hold no device memory of
+    /// their own (the resident `grads` tensor is the payload), so the
+    /// liveness fold ignores them and only the exposure fold
+    /// (`perfmodel::plan_lane_times`) prices them.
+    pub grad_buckets: Vec<(Segment, u64)>,
 }
 
 /// Per-layer checkpoint arm: how (and whether) one encoder layer's
@@ -445,7 +495,16 @@ impl Builder {
         frees: Vec<u32>,
         census: Census,
     ) {
-        self.events.push(ScheduleEvent { kind, segment, name, allocs, inplace, frees, census });
+        self.events.push(ScheduleEvent {
+            kind,
+            segment,
+            name,
+            allocs,
+            inplace,
+            frees,
+            census,
+            lane: Lane::Compute,
+        });
     }
 
     /// Forward pass of one block: each op allocates its retained
@@ -526,9 +585,11 @@ impl Builder {
 
     /// Spliced re-forward of a checkpointed block (1.25× the forward
     /// census: RNG restore, cold kernels, extra copies — the recompute-
-    /// inefficiency knob the roofline always charged). Returns per-op
+    /// inefficiency knob the roofline always charged). `lane` is
+    /// [`Lane::Prefetch`] for hoisted (overlapped) re-forwards and
+    /// [`Lane::Compute`] for in-place (serial) ones. Returns per-op
     /// allocation ids for the block backward to release.
-    fn recompute_block(&mut self, g: &BlockGraph, segment: Segment) -> Vec<Vec<u32>> {
+    fn recompute_block(&mut self, g: &BlockGraph, segment: Segment, lane: Lane) -> Vec<Vec<u32>> {
         let none = OptimizationSet::none();
         let mut per_op = Vec::with_capacity(g.ops.len());
         for op in &g.ops {
@@ -538,7 +599,16 @@ impl Builder {
                     allocs.push(self.tensor(t.name, 0, t.bytes_per_item(), MemClass::Workspace));
                 }
             }
-            self.event(EventKind::Recompute, segment, op.name, allocs.clone(), Vec::new(), Vec::new(), op.fwd.scale(1.25));
+            self.events.push(ScheduleEvent {
+                kind: EventKind::Recompute,
+                segment,
+                name: op.name,
+                allocs: allocs.clone(),
+                inplace: Vec::new(),
+                frees: Vec::new(),
+                census: op.fwd.scale(1.25),
+                lane,
+            });
             per_op.push(allocs);
         }
         per_op
@@ -649,7 +719,7 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     let mut pending: Option<(usize, Vec<Vec<u32>>)> = None;
     if cfg.layers > 0 && mode(cfg.layers - 1) == CkptMode::Overlapped {
         let top = cfg.layers - 1;
-        pending = Some((top, b.recompute_block(&enc, Segment::Encoder(top))));
+        pending = Some((top, b.recompute_block(&enc, Segment::Encoder(top), Lane::Prefetch)));
     }
 
     // backward
@@ -660,22 +730,30 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
                 if l > 0 && mode(l - 1) == CkptMode::Overlapped && pending.is_none() {
                     // prefetch the overlapped layer below under this
                     // plain layer's backward
-                    pending = Some((l - 1, b.recompute_block(&enc, Segment::Encoder(l - 1))));
+                    pending =
+                        Some((l - 1, b.recompute_block(&enc, Segment::Encoder(l - 1), Lane::Prefetch)));
                 }
                 b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), ids);
             }
             LayerFwd::Ckpt(stored) => {
                 let ids = match pending.take() {
                     // a pending prefetch is always one segment deep, so
-                    // it can only belong to this layer
+                    // it can only belong to this layer; a violation
+                    // would splice the recomputed inventory into the
+                    // wrong layer's backward and silently mis-order the
+                    // timeline, so this holds in release builds too
                     Some((pl, ids)) => {
-                        debug_assert_eq!(pl, l, "prefetch is one segment deep");
+                        assert_eq!(
+                            pl, l,
+                            "prefetch invariant violated: pending re-forward for layer {pl} \
+                             consumed by layer {l} (prefetch must be one segment deep)"
+                        );
                         ids
                     }
                     // not prefetched (serial arm, or the segment above
                     // was itself checkpointed): recompute in place,
                     // right before this layer's backward
-                    None => b.recompute_block(&enc, Segment::Encoder(l)),
+                    None => b.recompute_block(&enc, Segment::Encoder(l), Lane::Compute),
                 };
                 b.backward_block_checkpoint(&enc, Segment::Encoder(l), ids, stored);
             }
@@ -685,7 +763,20 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
 
     b.event(EventKind::Optimizer, Segment::Step, "optimizer.step", Vec::new(), Vec::new(), vec![ws], Census::ZERO);
 
-    StepSchedule { tensors: b.tensors, events: b.events }
+    // the comm lane: gradient buckets in readiness order — a bucket
+    // becomes ready when its segment's last backward op completes, so
+    // the head fires first, the encoder drains top-down, and the
+    // embedding bucket (the tied vocabulary matrix, the largest) is
+    // ready only at the very end of backward
+    let (emb_params, layer_params, head_params) = cfg.param_count_split();
+    let mut grad_buckets = Vec::with_capacity(cfg.layers + 2);
+    grad_buckets.push((Segment::Head, head_params as u64 * 4));
+    for l in (0..cfg.layers).rev() {
+        grad_buckets.push((Segment::Encoder(l), layer_params as u64 * 4));
+    }
+    grad_buckets.push((Segment::Embedding, emb_params as u64 * 4));
+
+    StepSchedule { tensors: b.tensors, events: b.events, grad_buckets }
 }
 
 // ---------------------------------------------------------------------------
@@ -1063,6 +1154,145 @@ mod tests {
             .rposition(|e| e.kind == EventKind::Backward && e.segment == Segment::Encoder(1))
             .unwrap();
         assert!(enc0_rfwd > last_enc1_bwd);
+    }
+
+    #[test]
+    fn lanes_tag_hoisted_prefetches_only() {
+        let cfg = tiny();
+        // overlapped uniform: the top layer's re-forward is hoisted
+        // (Prefetch lane); the in-place recomputes below stay Compute
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        for e in &s.events {
+            if e.lane == Lane::Prefetch {
+                assert_eq!(e.kind, EventKind::Recompute, "{}", e.name);
+                assert_eq!(e.segment, Segment::Encoder(cfg.layers - 1));
+            }
+        }
+        assert!(s.events.iter().any(|e| e.lane == Lane::Prefetch));
+        assert!(s
+            .events
+            .iter()
+            .any(|e| e.kind == EventKind::Recompute && e.lane == Lane::Compute));
+        // serial uniform: nothing is hoisted, every event is Compute
+        let serial = lower_step(&cfg, &plan.serial(), Lowering::for_model(&cfg));
+        assert!(serial.events.iter().all(|e| e.lane == Lane::Compute));
+        // a prefetch-lane event always precedes its own segment's
+        // backward (it hides under the *preceding* segment's backward)
+        let pf = s
+            .events
+            .iter()
+            .position(|e| e.lane == Lane::Prefetch)
+            .unwrap();
+        let own_bwd = s
+            .events
+            .iter()
+            .position(|e| {
+                e.kind == EventKind::Backward && e.segment == Segment::Encoder(cfg.layers - 1)
+            })
+            .unwrap();
+        assert!(pf < own_bwd);
+    }
+
+    #[test]
+    fn grad_buckets_cover_every_parameter_in_readiness_order() {
+        let cfg = ModelConfig::bert_mini();
+        let plan = SchedulePlan::uniform(&cfg, OptimizationSet::none(), true);
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        assert_eq!(s.grad_buckets.len(), cfg.layers + 2);
+        assert_eq!(s.grad_buckets.first().unwrap().0, Segment::Head);
+        assert_eq!(s.grad_buckets.last().unwrap().0, Segment::Embedding);
+        // encoder buckets drain top-down between head and embedding
+        for (i, l) in (0..cfg.layers).rev().enumerate() {
+            assert_eq!(s.grad_buckets[1 + i].0, Segment::Encoder(l));
+        }
+        let total: u64 = s.grad_buckets.iter().map(|(_, b)| b).sum();
+        assert_eq!(total, cfg.param_count() as u64 * 4);
+        // readiness order matches the backward's actual segment order:
+        // each bucket's last backward event is later than the previous
+        // bucket's
+        let last_bwd = |seg: Segment| {
+            s.events
+                .iter()
+                .rposition(|e| e.kind == EventKind::Backward && e.segment == seg)
+                .unwrap_or_else(|| panic!("no backward for {seg:?}"))
+        };
+        let mut prev = 0usize;
+        for &(seg, _) in &s.grad_buckets {
+            let at = last_bwd(seg);
+            assert!(at >= prev, "{seg:?} ready out of order");
+            prev = at;
+        }
+    }
+
+    #[test]
+    fn prefetch_invariant_holds_across_all_mixed_placements() {
+        // ISSUE 6 satellite: the one-segment-deep prefetch check is a
+        // real (release-mode) assert now. Exhaustively lower every
+        // 3^4 per-layer arm combination on the 4-layer model: each one
+        // must lower cleanly, keep at most one recomputed inventory in
+        // flight, and place every prefetch-lane event after the
+        // turnaround and before its own segment's backward.
+        let cfg = ModelConfig::bert_mini();
+        let arms = [CkptMode::None, CkptMode::Overlapped, CkptMode::Serial];
+        for a in arms {
+            for bm in arms {
+                for c in arms {
+                    for d in arms {
+                        let plan = SchedulePlan::from_placement(
+                            vec![OptimizationSet::full(); cfg.layers],
+                            vec![a, bm, c, d],
+                            true,
+                        );
+                        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+                        let turn = s
+                            .events
+                            .iter()
+                            .position(|e| e.kind == EventKind::Turnaround)
+                            .unwrap();
+                        for (i, e) in s.events.iter().enumerate() {
+                            if e.lane == Lane::Prefetch {
+                                assert!(i > turn, "prefetch before turnaround");
+                                assert_eq!(e.kind, EventKind::Recompute);
+                                let own_bwd = s
+                                    .events
+                                    .iter()
+                                    .position(|x| {
+                                        x.kind == EventKind::Backward && x.segment == e.segment
+                                    })
+                                    .unwrap();
+                                assert!(
+                                    i < own_bwd,
+                                    "{:?}: prefetch after its own backward",
+                                    (a, bm, c, d)
+                                );
+                            }
+                        }
+                        // never two recomputed inventories in flight:
+                        // between any two recompute runs of different
+                        // segments there is a backward that retires the
+                        // first (the single re-forward buffer contract)
+                        let rfwd_segs: Vec<Segment> = s
+                            .events
+                            .iter()
+                            .filter(|e| e.kind == EventKind::Recompute)
+                            .map(|e| e.segment)
+                            .collect();
+                        let mut runs: Vec<Segment> = Vec::new();
+                        for seg in rfwd_segs {
+                            if runs.last() != Some(&seg) {
+                                assert!(
+                                    !runs.contains(&seg),
+                                    "{:?}: recompute runs of {seg:?} interleave",
+                                    (a, bm, c, d)
+                                );
+                                runs.push(seg);
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -60,7 +60,7 @@ USAGE:
               [--json]
   tempo schedule [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
               [--opts gelu,layernorm,dropout,softmax] [--finetune] [--serial-checkpoint]
-              [--pre-ln] [--causal] [--unfused] [--json]
+              [--pre-ln] [--causal] [--unfused] [--gpu NAME] [--devices N] [--json]
   tempo artifacts [--dir DIR]
 
 Common options:
@@ -202,6 +202,9 @@ fn training_config(args: &Args) -> tempo::Result<TrainingConfig> {
 }
 
 fn run() -> tempo::Result<()> {
+    // fail fast on malformed model knobs (TEMPO_UTIL_K etc.) instead of
+    // panicking mid-sweep on the first priced cell
+    tempo::perfmodel::validate_env_knobs()?;
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
@@ -587,6 +590,9 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
             ("model", Json::str(cfg.name.clone())),
             ("seq_len", Json::num(cfg.seq_len as f64)),
             ("gpu", Json::str(gpu.name())),
+            // SPMD replicas: the plan, batch and peak below are all
+            // per device; only the comm lane couples the devices
+            ("devices", Json::num(gpu.spec().devices as f64)),
             ("mode", Json::str(mode.name())),
             ("max_batch", Json::num(d.max_batch as f64)),
             ("eval_batch", Json::num(d.eval_batch as f64)),
@@ -607,12 +613,15 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
     println!("{}", t.render());
     println!("{}", d.rationale);
     println!(
-        "max batch {} ({:.2} seq/s at B={}); peak {:.3} GB at B={}, high water: {}",
+        "max batch {} per device ({:.2} seq/s at B={}); per-device peak {:.3} GB at B={} \
+         on {} ×{}, high water: {}",
         d.max_batch,
         d.throughput,
         d.eval_batch,
         bd.total() as f64 / 1e9,
         d.max_batch.max(1),
+        gpu.name(),
+        gpu.spec().devices,
         bd.transient_label,
     );
     Ok(())
@@ -832,6 +841,14 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
     let tl = schedule.timeline(batch);
     let summary = schedule_summary_with(&cfg, &plan, lowering);
 
+    // comm lane: the data-parallel rig this schedule would run on —
+    // one timeline replica per device, gradient buckets on the comm
+    // lane (`--devices 1` turns the collective off entirely)
+    let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
+    let spec = gpu.spec().with_devices(args.get_usize("devices", gpu.spec().devices)?);
+    let lanes =
+        (batch > 0).then(|| tempo::perfmodel::plan_lane_times(&cfg, &plan, &spec, batch));
+
     let mb = |bytes: u64| format!("{:.3}", bytes as f64 / 1e6);
     let mut t = Table::new(
         format!(
@@ -872,11 +889,15 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
     if want_json {
         // machine-readable mode: one JSON document, nothing else on
         // stdout (round-trips through report::Table::from_json)
-        let doc = Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::str(cfg.name.clone())),
             ("seq_len", Json::num(cfg.seq_len as f64)),
             ("batch", Json::num(batch as f64)),
             ("plan", Json::str(plan.label())),
+            ("gpu", Json::str(gpu.name())),
+            // per-device peak: every replica holds the full state
+            ("devices", Json::num(spec.devices as f64)),
+            ("grad_buckets", Json::num(schedule.grad_buckets.len() as f64)),
             ("peak_bytes", Json::num(tl.peak_bytes as f64)),
             ("peak_event", Json::num(tl.peak_event as f64)),
             ("high_water", Json::str(summary.high_water)),
@@ -886,8 +907,16 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
             ("memmodel_total_bytes", Json::num(fold as f64)),
             ("default_lowering", Json::Bool(default_lowering)),
             ("serial_checkpoint_divergence", Json::Bool(serial_divergence)),
-            ("table", t.to_json()),
-        ]);
+        ];
+        if let Some(lt) = lanes {
+            // lane pricing (default lowering, like the capacity model)
+            fields.push(("step_s", Json::num(lt.step)));
+            fields.push(("comm_total_s", Json::num(lt.comm_total)));
+            fields.push(("comm_exposed_s", Json::num(lt.comm_exposed)));
+            fields.push(("hidden_recompute_s", Json::num(lt.hidden_recompute)));
+        }
+        fields.push(("table", t.to_json()));
+        let doc = Json::obj(fields);
         println!("{}", doc.pretty());
         return Ok(());
     }
@@ -922,7 +951,39 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
             );
         }
     } else {
-        println!("note: lowering overridden; the capacity model prices the default lowering");
+        println!(
+            "note: lowering overridden; the capacity and lane models price the default lowering"
+        );
+    }
+    if let Some(lt) = lanes {
+        if spec.devices > 1 && spec.allreduce_bw.is_some() {
+            println!(
+                "comm lane on {} ×{}: {} grad buckets, all-reduce {:.2} ms/step, {:.2} ms exposed \
+                 beyond backward; per-device step {:.2} ms ({:.2} ms compute{})",
+                gpu.name(),
+                spec.devices,
+                schedule.grad_buckets.len(),
+                lt.comm_total * 1e3,
+                lt.comm_exposed * 1e3,
+                lt.step * 1e3,
+                lt.compute * 1e3,
+                if lt.hidden_recompute > 0.0 {
+                    format!(
+                        ", {:.2} ms recompute hidden under covering backward",
+                        lt.hidden_recompute * 1e3
+                    )
+                } else {
+                    String::new()
+                },
+            );
+        } else {
+            println!(
+                "comm lane on {} ×{}: single-device rig — no collective traffic; step {:.2} ms",
+                gpu.name(),
+                spec.devices,
+                lt.step * 1e3
+            );
+        }
     }
     Ok(())
 }

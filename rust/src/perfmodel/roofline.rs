@@ -1,9 +1,86 @@
-//! Roofline timing: census → seconds, with batch-utilization saturation.
+//! Roofline timing: census → seconds, with batch-utilization saturation
+//! and a lane-aware exposure fold for the comm lane (DESIGN.md §Lanes).
+//!
+//! The step is priced as concurrent lanes, not one serial tape:
+//!
+//! * **Compute lane** — the schedule's census (fwd + bwd + recompute +
+//!   rewrite overheads) on the classic roofline, *minus* the prefetched
+//!   recompute work that hides under its covering backward window
+//!   ([`crate::graph::LaneProfile::hidden`], derated by
+//!   [`OVERLAP_EFF`]) — overlapped checkpoint arms genuinely buy
+//!   latency here, which is what lets `placement_search` prefer them
+//!   over serial arms when memory allows.
+//! * **Comm lane** — the bucketed DDP gradient all-reduce
+//!   (`StepSchedule::grad_buckets`, ring factor `2(n−1)/n` over
+//!   [`crate::config::GpuSpec::allreduce_bw`]). Each bucket starts when
+//!   its segment's last backward completes; the **exposure fold**
+//!   charges only the collective time not hidden under the remaining
+//!   backward compute: `exposed = max(0, maxᵢ(Dᵢ − lagᵢ))`, where `Dᵢ`
+//!   is the comm work left at bucket `i`'s readiness and `lagᵢ` the
+//!   compute seconds still ahead of it. The embedding bucket (tied
+//!   vocab matrix — largest, last ready) has zero lag, so a multi-device
+//!   step always pays at least its tail; larger batches grow the lags
+//!   and amortize the rest — the paper's §4.2 argument for why bigger
+//!   batches win on the PCIe rig.
+//!
+//! Setting `TEMPO_AR_EXPOSE` opts back into the legacy scalar-exposure
+//! model (a fixed fraction of `2·grad_bytes/bw`, no overlap credit) for
+//! calibration A/B sweeps. Both knobs are parsed once and malformed
+//! values are a hard error (see [`validate_env_knobs`]).
+
+use std::sync::OnceLock;
 
 use crate::config::{GpuSpec, ModelConfig, Technique};
-use crate::graph::SchedulePlan;
+use crate::graph::{schedule_summary, Census, SchedulePlan};
 
-use super::ops::{plan_census, step_census, OpCensus};
+use super::ops::{plan_census, OpCensus};
+
+/// Parse an optional f64 env knob once; malformed values are a hard
+/// error (panic with the knob's name — [`validate_env_knobs`] turns the
+/// same condition into a clean startup error in the CLI).
+fn parse_knob(name: &'static str) -> Option<f64> {
+    match std::env::var(name) {
+        Ok(v) => match v.parse::<f64>() {
+            Ok(x) if x.is_finite() => Some(x),
+            _ => panic!(
+                "invalid {name}={v:?}: expected a finite number — fix or unset the variable"
+            ),
+        },
+        Err(_) => None,
+    }
+}
+
+/// `TEMPO_UTIL_K` (half-saturation override), parsed once per process.
+fn util_k_base() -> f64 {
+    static K: OnceLock<f64> = OnceLock::new();
+    *K.get_or_init(|| parse_knob("TEMPO_UTIL_K").unwrap_or(K_TOKENS_DEFAULT))
+}
+
+/// `TEMPO_AR_EXPOSE` (legacy scalar-exposure escape hatch), parsed once
+/// per process. `None` = unset = the lane-aware exposure fold.
+fn legacy_exposure() -> Option<f64> {
+    static E: OnceLock<Option<f64>> = OnceLock::new();
+    *E.get_or_init(|| parse_knob("TEMPO_AR_EXPOSE"))
+}
+
+/// Validate the calibration env knobs (`TEMPO_UTIL_K`,
+/// `TEMPO_AR_EXPOSE`) without touching the process-wide caches: a
+/// malformed value (`TEMPO_UTIL_K=abc`) returns `Err` so `main` can
+/// fail at startup with a clean diagnostic instead of a mid-sweep
+/// panic. Library callers that skip this check hit the same condition
+/// as a panic at first use — never a silent fallback to the default.
+pub fn validate_env_knobs() -> crate::Result<()> {
+    for name in ["TEMPO_UTIL_K", "TEMPO_AR_EXPOSE"] {
+        if let Ok(v) = std::env::var(name) {
+            if !matches!(v.parse::<f64>(), Ok(x) if x.is_finite()) {
+                return Err(crate::Error::Invalid(format!(
+                    "invalid {name}={v:?}: expected a finite number — fix or unset the variable"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
 
 /// Tensor-core utilization as a function of in-flight tokens.
 ///
@@ -14,12 +91,9 @@ use super::ops::{plan_census, step_census, OpCensus};
 pub fn utilization(spec: &GpuSpec, tokens: f64) -> f64 {
     // half-saturation in tokens, scaled by device width (wider GPUs need
     // more parallelism to fill). TEMPO_UTIL_K overrides for calibration
-    // sweeps (perfmodel::calib documents the chosen default).
-    let k_base = std::env::var("TEMPO_UTIL_K")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(K_TOKENS_DEFAULT);
-    let k = k_base * (spec.peak_matmul_flops / 53.8e12).powf(1.6);
+    // sweeps (perfmodel::calib documents the chosen default); the knob
+    // is parsed once, not per call — this is the hot pricing path.
+    let k = util_k_base() * (spec.peak_matmul_flops / 53.8e12).powf(1.6);
     let u = tokens / (tokens + k);
     // floor: even B=1 keeps some pipelines busy
     0.08 + 0.92 * u
@@ -29,41 +103,137 @@ pub fn utilization(spec: &GpuSpec, tokens: f64) -> f64 {
 /// the paper's Fig 5 speedup annotations (see perfmodel::calib tests).
 pub const K_TOKENS_DEFAULT: f64 = 60.0;
 
-/// Fraction of the ring all-reduce NOT hidden by backward overlap.
-fn allreduce_exposure() -> f64 {
-    std::env::var("TEMPO_AR_EXPOSE")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(AR_EXPOSE_DEFAULT)
+/// Stream-packing efficiency of prefetched recompute under its covering
+/// backward window. An overlapped re-forward shares SMs and memory
+/// bandwidth with the backward it hides under — concurrent streams only
+/// slot work into each other's bubbles (memory-bound phases idle the
+/// tensor cores and vice versa), so only this fraction of the
+/// overlappable census ([`crate::graph::LaneProfile::hidden`], already
+/// capped by the covering window) is genuinely bought back. Calibrated
+/// jointly with the Fig 5 bands: high enough that `Overlapped` arms
+/// beat `Serial` wherever a covering window exists, low enough that
+/// uniform checkpointing keeps its Fig 2 recompute penalty.
+pub const OVERLAP_EFF: f64 = 0.25;
+
+/// Lane-priced timing of one training step (seconds). The fields are
+/// the decomposition `step = compute + comm_exposed`; `hidden_recompute`
+/// and `comm_total − comm_exposed` are the concurrency wins the
+/// single-lane model could not see.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneTimes {
+    /// Compute-lane seconds: census + optimizer state traffic + fixed
+    /// overhead, with the prefetch-hidden recompute already credited.
+    pub compute: f64,
+    /// Seconds of prefetched (overlapped-checkpoint) recompute work
+    /// hidden under its covering backward window (the overlappable
+    /// census × [`OVERLAP_EFF`]) — subtracted from `compute` relative
+    /// to a serial single-lane fold.
+    pub hidden_recompute: f64,
+    /// Total collective seconds on the comm lane (every gradient
+    /// bucket, ring all-reduce). Zero when `allreduce_bw` is `None` or
+    /// `devices == 1`.
+    pub comm_total: f64,
+    /// Collective seconds *not* hidden under concurrent backward
+    /// compute — what the step actually waits on. In
+    /// `[0, comm_total]`, monotone in `allreduce_bw`⁻¹.
+    pub comm_exposed: f64,
+    /// End-to-end step seconds (`compute + comm_exposed`).
+    pub step: f64,
 }
 
-/// Calibrated default all-reduce exposure.
-pub const AR_EXPOSE_DEFAULT: f64 = 0.05;
+/// Compute-lane seconds of a batch-scaled census (no state/fixed/comm
+/// terms) — the affine core every lane shares.
+fn census_seconds(c: Census, spec: &GpuSpec, util: f64) -> f64 {
+    c.matmul_flops / (spec.peak_matmul_flops * util)
+        + c.vector_flops / (spec.peak_vector_flops * 0.6)
+        + c.vector_bytes / (spec.bandwidth * 0.75)
+}
 
-/// Roofline pricing of a step census: the shared core of
-/// [`step_time`] and [`plan_step_time`] (affine in the census, so the
-/// technique path and the plan path price identical censuses to
-/// identical seconds).
-fn census_time(cfg: &ModelConfig, census: &OpCensus, spec: &GpuSpec, batch: usize) -> f64 {
-    let tokens = (batch * cfg.seq_len) as f64;
-    let util = utilization(spec, tokens);
-
+/// Roofline seconds of a full step census (matmul + vector + state
+/// streams; the legacy single-lane compute fold).
+fn opcensus_seconds(census: &OpCensus, spec: &GpuSpec, util: f64) -> f64 {
     let t_matmul = census.matmul_flops / (spec.peak_matmul_flops * util);
     let t_vector = census.vector_flops / (spec.peak_vector_flops * 0.6)
         + census.vector_bytes / (spec.bandwidth * 0.75);
     let t_state = census.state_bytes / (spec.bandwidth * 0.75);
+    t_matmul + t_vector + t_state
+}
+
+/// Price one training step of `cfg` under `plan` on `spec` at batch B,
+/// lane by lane — the exposure fold behind [`plan_step_time`].
+///
+/// The single-device / no-collective configuration (`devices == 1` or
+/// `allreduce_bw: None`) has `comm_total == comm_exposed == 0`; a plan
+/// without overlapped checkpoint arms additionally has
+/// `hidden_recompute == 0`, which makes `step` the plain single-lane
+/// census fold.
+pub fn plan_lane_times(
+    cfg: &ModelConfig,
+    plan: &SchedulePlan,
+    spec: &GpuSpec,
+    batch: usize,
+) -> LaneTimes {
+    let b = batch as f64;
+    let tokens = b * cfg.seq_len as f64;
+    let util = utilization(spec, tokens);
+    let total = plan_census(cfg, plan, batch);
+    let total_s = opcensus_seconds(&total, spec, util);
     // fixed per-step overhead: launches, host loop
     let t_fixed = 0.7e-3 + cfg.layers as f64 * 60.0e-6;
-    // DDP gradient all-reduce: a batch-independent per-step cost that
-    // larger batches amortize (ring all-reduce moves ~2× the gradient
-    // bytes; DDP bucketing overlaps roughly half of it with backward).
-    let t_allreduce = match spec.allreduce_bw {
-        Some(bw) => allreduce_exposure() * 2.0 * (cfg.param_count() as f64 * 4.0) / bw,
-        None => 0.0,
+
+    if let Some(expose) = legacy_exposure() {
+        // legacy scalar model: no overlap credit, a fixed fraction of
+        // the ring all-reduce exposed regardless of the backward shape
+        // (and regardless of `devices` — the pre-lane model had no
+        // device count, so the escape hatch must not consult it)
+        let comm_total = match spec.allreduce_bw {
+            Some(bw) => 2.0 * (cfg.param_count() as f64 * 4.0) / bw,
+            None => 0.0,
+        };
+        let comm_exposed = expose * comm_total;
+        let compute = total_s + t_fixed;
+        return LaneTimes {
+            compute,
+            hidden_recompute: 0.0,
+            comm_total,
+            comm_exposed,
+            step: compute + comm_exposed,
+        };
+    }
+
+    let summary = schedule_summary(cfg, plan);
+    let hidden_s = OVERLAP_EFF * census_seconds(summary.lanes.hidden.scale(b), spec, util);
+    let compute = total_s - hidden_s + t_fixed;
+
+    let (comm_total, comm_exposed) = match spec.allreduce_bw {
+        Some(bw) if spec.devices > 1 => {
+            // ring all-reduce: each device moves 2(n−1)/n of the bucket
+            let ring = 2.0 * (spec.devices as f64 - 1.0) / spec.devices as f64;
+            let durs: Vec<f64> =
+                summary.lanes.buckets.iter().map(|bk| ring * bk.bytes as f64 / bw).collect();
+            let total_comm: f64 = durs.iter().sum();
+            // exposed = max(0, maxᵢ(Dᵢ − lagᵢ)): Dᵢ is the serialized
+            // comm work remaining when bucket i becomes ready, lagᵢ the
+            // compute seconds still ahead of the step at that instant
+            let mut exposed = 0.0f64;
+            let mut remaining = total_comm;
+            for (bk, d) in summary.lanes.buckets.iter().zip(&durs) {
+                let lag = census_seconds(bk.tail.scale(b), spec, util);
+                exposed = exposed.max(remaining - lag);
+                remaining -= d;
+            }
+            (total_comm, exposed.max(0.0))
+        }
+        _ => (0.0, 0.0),
     };
 
-    // matmul and vector work overlap poorly in practice; sum them
-    t_matmul + t_vector + t_state + t_fixed + t_allreduce
+    LaneTimes {
+        compute,
+        hidden_recompute: hidden_s,
+        comm_total,
+        comm_exposed,
+        step: compute + comm_exposed,
+    }
 }
 
 /// Seconds for one training step of `cfg` under `technique` at batch B.
@@ -71,26 +241,27 @@ pub fn step_time(cfg: &ModelConfig, technique: Technique, spec: &GpuSpec, batch:
     if batch == 0 {
         return f64::INFINITY;
     }
-    census_time(cfg, &step_census(cfg, technique, batch), spec, batch)
+    plan_lane_times(cfg, &SchedulePlan::for_technique(cfg, technique, true), spec, batch).step
 }
 
 /// Seconds for one training step under an arbitrary execution-schedule
-/// plan at batch B — the roofline over [`plan_census`]'s schedule fold,
-/// so mixed placements (per-layer rewrites + checkpoint arms) price
-/// their recompute and rewrite overheads exactly where the timeline
-/// splices them. Bit-identical to [`step_time`] on technique-induced
-/// plans.
+/// plan at batch B — the exposure fold over the schedule's lanes, so
+/// mixed placements (per-layer rewrites + checkpoint arms) price their
+/// recompute, overlap hiding and collective exposure exactly where the
+/// timeline puts them. Bit-identical to [`step_time`] on
+/// technique-induced plans (one pricing path).
 pub fn plan_step_time(cfg: &ModelConfig, plan: &SchedulePlan, spec: &GpuSpec, batch: usize) -> f64 {
     if batch == 0 {
         return f64::INFINITY;
     }
-    census_time(cfg, &plan_census(cfg, plan, batch), spec, batch)
+    plan_lane_times(cfg, plan, spec, batch).step
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{Gpu, ModelConfig};
+    use crate::graph::CkptMode;
 
     #[test]
     fn utilization_monotone_saturating() {
@@ -159,5 +330,73 @@ mod tests {
     fn zero_batch_is_infinite() {
         let cfg = ModelConfig::bert_large();
         assert!(step_time(&cfg, Technique::Baseline, &Gpu::V100.spec(), 0).is_infinite());
+    }
+
+    #[test]
+    fn lane_times_decompose_the_step() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+        for gpu in Gpu::all() {
+            let lt = plan_lane_times(&cfg, &plan, &gpu.spec(), 4);
+            assert_eq!(lt.step, lt.compute + lt.comm_exposed, "{}", gpu.name());
+            assert!(lt.comm_exposed >= 0.0 && lt.comm_exposed <= lt.comm_total, "{}", gpu.name());
+            assert_eq!(lt.hidden_recompute, 0.0, "no prefetches in a plain plan");
+        }
+        // the single-GPU box has an empty comm lane
+        let solo = plan_lane_times(&cfg, &plan, &Gpu::A100.spec(), 4);
+        assert_eq!(solo.comm_total, 0.0);
+        assert_eq!(solo.comm_exposed, 0.0);
+        assert_eq!(solo.step, solo.compute);
+        // and so does any rig demoted to one device
+        let demoted = plan_lane_times(&cfg, &plan, &Gpu::Rtx2080Ti.spec().with_devices(1), 4);
+        assert_eq!(demoted.comm_total, 0.0);
+        assert_eq!(demoted.comm_exposed, 0.0);
+    }
+
+    #[test]
+    fn exposure_shrinks_as_batch_grows() {
+        // bigger batches stretch the backward, hiding more of the
+        // (batch-independent) collective — the amortization the paper
+        // leans on for the PCIe rig
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+        let spec = Gpu::Rtx2080Ti.spec();
+        let mut prev = f64::INFINITY;
+        for b in [1usize, 2, 4, 8] {
+            let e = plan_lane_times(&cfg, &plan, &spec, b).comm_exposed;
+            assert!(e <= prev, "B={b}: exposure rose");
+            assert!(e > 0.0, "B={b}: the embedding tail bucket is never fully hidden");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn overlapped_checkpoint_prices_below_serial_at_equal_batch() {
+        // the tentpole divergence: equal census, but the overlapped
+        // arm's prefetched re-forward hides under the head backward
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let over = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+        let serial = over.clone().serial();
+        for gpu in Gpu::all() {
+            let spec = gpu.spec();
+            let t_over = plan_lane_times(&cfg, &over, &spec, 4);
+            let t_serial = plan_lane_times(&cfg, &serial, &spec, 4);
+            assert!(t_over.hidden_recompute > 0.0, "{}", gpu.name());
+            assert_eq!(t_serial.hidden_recompute, 0.0, "{}", gpu.name());
+            assert!(t_over.step < t_serial.step, "{}", gpu.name());
+        }
+        // bottom-c mixed placements diverge the same way
+        let mut ckpt = vec![CkptMode::None; cfg.layers];
+        ckpt[0] = CkptMode::Overlapped;
+        let over = SchedulePlan::from_placement(
+            vec![crate::config::OptimizationSet::full(); cfg.layers],
+            ckpt,
+            true,
+        );
+        let serial = over.clone().serial();
+        let spec = Gpu::Rtx2080Ti.spec();
+        assert!(
+            plan_step_time(&cfg, &over, &spec, 4) < plan_step_time(&cfg, &serial, &spec, 4)
+        );
     }
 }

@@ -40,9 +40,11 @@ pub fn throughput_at_max_batch(cfg: &ModelConfig, technique: Technique, gpu: Gpu
 }
 
 /// Throughput (sequences/s) of an arbitrary execution-schedule plan at
-/// an explicit batch — the roofline over the plan's own schedule
-/// census (Auto-Tempo's placement search prices every candidate plan
-/// through this).
+/// an explicit batch — the lane-aware roofline over the plan's own
+/// schedule summary: compute lane (census minus the hidden-prefetch
+/// credit) plus the exposed collective time on multi-device rigs
+/// (Auto-Tempo's placement search prices every candidate plan through
+/// this).
 pub fn plan_throughput_at(
     cfg: &ModelConfig,
     plan: &crate::graph::SchedulePlan,

@@ -21,8 +21,9 @@
 //!   chance toward ~0.95 for classification.
 //!
 //! Step *latency* is drawn from the roofline model
-//! ([`crate::perfmodel::step_time`], a roofline over the execution
-//! schedule's census fold) and memory from the schedule's liveness
+//! ([`crate::perfmodel::step_time`], the lane-aware roofline over the
+//! execution schedule — compute lane plus any exposed collective time
+//! on the modeled rig) and memory from the schedule's liveness
 //! timeline ([`crate::graph::schedule_summary`], the exact peak the
 //! capacity model also reports) — both memoized per (config, plan) —
 //! so metrics/throughput numbers reported by the coordinator match the

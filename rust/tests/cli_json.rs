@@ -113,6 +113,32 @@ fn placement_json_round_trips_and_matches_the_search() {
 }
 
 #[test]
+fn schedule_reports_the_comm_lane() {
+    // default rig: 4×2080Ti — bucketed gradient all-reduce on the comm
+    // lane, one bucket per parameter segment (L encoders + head + emb)
+    let text = run(&["schedule", "bert-tiny", "--json", "--batch", "4"]);
+    let doc = Json::parse(&text).expect("schedule --json emits one JSON document");
+    let layers = ModelConfig::bert_tiny().layers;
+    assert_eq!(doc.req("devices").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(doc.req("grad_buckets").unwrap().as_usize().unwrap(), layers + 2);
+    let total = doc.req("comm_total_s").unwrap().as_f64().unwrap();
+    let exposed = doc.req("comm_exposed_s").unwrap().as_f64().unwrap();
+    let step = doc.req("step_s").unwrap().as_f64().unwrap();
+    assert!(total > 0.0, "4-way PCIe rig must pay collective time");
+    assert!((0.0..=total).contains(&exposed), "exposed {exposed} ∉ [0, {total}]");
+    assert!(step > 0.0 && step.is_finite());
+
+    // --devices 1 turns the collective off entirely
+    let text = run(&["schedule", "bert-tiny", "--json", "--batch", "4", "--devices", "1"]);
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.req("devices").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(doc.req("comm_total_s").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(doc.req("comm_exposed_s").unwrap().as_f64().unwrap(), 0.0);
+    let text = run(&["schedule", "bert-tiny", "--devices", "1"]);
+    assert!(text.contains("single-device rig"), "text mode should say so");
+}
+
+#[test]
 fn schedule_text_mode_cross_checks_against_memmodel() {
     for technique in ["baseline", "tempo", "checkpoint"] {
         let text = run(&["schedule", "bert-tiny", "--technique", technique]);

@@ -1,0 +1,107 @@
+//! Environment-knob contract (DESIGN.md §Lanes): `TEMPO_UTIL_K` and
+//! `TEMPO_AR_EXPOSE` are parsed **once per process** (`OnceLock`), a
+//! malformed value is a startup error rather than a per-call panic,
+//! and `TEMPO_AR_EXPOSE` reproduces the legacy latency-blind pricing
+//! exactly.
+//!
+//! All in-process env mutation lives in ONE test — tests in a binary
+//! run on parallel threads, and the whole point of the cache is that
+//! the first read wins for the process lifetime. The other tests spawn
+//! the `tempo` binary, so each probe gets a fresh cache.
+
+use std::process::Command;
+
+use tempo::config::{Gpu, ModelConfig, Technique};
+use tempo::graph::SchedulePlan;
+use tempo::perfmodel::{plan_lane_times, utilization, validate_env_knobs};
+
+#[test]
+fn knobs_parse_once_and_legacy_exposure_reprices_the_old_model() {
+    // both knobs set BEFORE the first pricing call in this process
+    std::env::set_var("TEMPO_UTIL_K", "80.0");
+    std::env::set_var("TEMPO_AR_EXPOSE", "0.3");
+    assert!(validate_env_knobs().is_ok(), "well-formed knobs must validate");
+
+    // --- TEMPO_UTIL_K is read once, then cached ---
+    let spec = Gpu::V100.spec();
+    let u1 = utilization(&spec, 2048.0);
+    std::env::set_var("TEMPO_UTIL_K", "20.0");
+    let u2 = utilization(&spec, 2048.0);
+    assert_eq!(u1, u2, "knob changed mid-process must not change pricing");
+    std::env::remove_var("TEMPO_UTIL_K");
+    assert_eq!(u1, utilization(&spec, 2048.0), "unset mid-process must not either");
+
+    // --- TEMPO_AR_EXPOSE: the legacy escape hatch prices the old
+    // latency-blind model exactly: a flat `expose` fraction of the flat
+    // 2·(4·params)/bw all-reduce, no hidden-recompute credit, and no
+    // devices gate (the old model had no devices concept) ---
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+    let gpu = Gpu::Rtx2080Ti.spec();
+    let bw = gpu.allreduce_bw.unwrap();
+    let lt = plan_lane_times(&cfg, &plan, &gpu, 4);
+    let expect_total = 2.0 * (cfg.param_count() as f64 * 4.0) / bw;
+    assert_eq!(lt.comm_total, expect_total, "legacy flat all-reduce total");
+    assert_eq!(lt.comm_exposed, 0.3 * expect_total, "legacy flat exposure fraction");
+    assert_eq!(lt.hidden_recompute, 0.0, "legacy pricing credits no hidden recompute");
+    assert_eq!(lt.step, lt.compute + lt.comm_exposed);
+    let ckpt = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+    assert_eq!(
+        plan_lane_times(&cfg, &ckpt, &gpu, 4).hidden_recompute,
+        0.0,
+        "even overlapped plans hide nothing under the legacy model"
+    );
+    let solo = plan_lane_times(&cfg, &plan, &gpu.with_devices(1), 4);
+    assert_eq!(solo.comm_exposed, lt.comm_exposed, "legacy pricing ignores the devices knob");
+    std::env::remove_var("TEMPO_AR_EXPOSE");
+}
+
+fn tempo_cmd() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_tempo"));
+    c.env_remove("TEMPO_UTIL_K").env_remove("TEMPO_AR_EXPOSE");
+    c
+}
+
+#[test]
+fn malformed_knob_is_a_startup_error() {
+    for (knob, value) in [("TEMPO_UTIL_K", "abc"), ("TEMPO_AR_EXPOSE", "0.3.5")] {
+        let out = tempo_cmd()
+            .args(["max-batch", "--model", "bert-tiny"])
+            .env(knob, value)
+            .output()
+            .expect("spawn tempo binary");
+        assert!(!out.status.success(), "{knob}={value} must fail startup validation");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(knob), "{knob}: stderr should name the knob, got: {err}");
+    }
+    // well-formed values pass the same gate
+    let out = tempo_cmd()
+        .args(["max-batch", "--model", "bert-tiny"])
+        .env("TEMPO_UTIL_K", "75.5")
+        .env("TEMPO_AR_EXPOSE", "0.15")
+        .output()
+        .expect("spawn tempo binary");
+    assert!(
+        out.status.success(),
+        "valid knobs rejected: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn sweeps_stay_jobs_invariant_with_knobs_set() {
+    // the concurrency contract (DESIGN.md §Concurrency) must survive
+    // knob-driven pricing: stdout is bit-identical for every --jobs
+    // value with the cached knobs in effect
+    let run = |jobs: &str| {
+        let out = tempo_cmd()
+            .args(["compare", "--steps", "12", "--jobs", jobs])
+            .env("TEMPO_UTIL_K", "80.0")
+            .env("TEMPO_AR_EXPOSE", "0.15")
+            .output()
+            .expect("spawn tempo binary");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        out.stdout
+    };
+    assert_eq!(run("1"), run("4"), "--jobs 4 stdout diverged from --jobs 1");
+}

@@ -1,0 +1,95 @@
+//! Acceptance pin for the lane-aware roofline (DESIGN.md §Lanes): the
+//! joint placement search selects an `Overlapped` checkpoint arm that
+//! the pre-lane latency-blind census fold priced as strictly dominated
+//! by its `Serial` twin — equal census, strictly lower peak — so the
+//! old model could never have picked it. The lane-level explanation is
+//! asserted alongside: the overlapped arm hides recompute under the
+//! covering backward while the collective (same buckets, same bytes,
+//! same link) is unchanged, so its step is strictly shorter.
+
+use tempo::autotempo::{placement_search, PlacementMode};
+use tempo::config::{Gpu, ModelConfig, Technique};
+use tempo::graph::{schedule_summary, CkptMode};
+use tempo::memmodel::max_batch;
+use tempo::perfmodel::{plan_lane_times, plan_throughput_at};
+
+#[test]
+fn search_picks_an_overlapped_arm_the_latency_blind_fold_rejected() {
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let gpu = Gpu::Rtx2080Ti;
+    let spec = gpu.spec();
+    assert!(
+        spec.allreduce_bw.is_some() && spec.devices > 1,
+        "the pin needs a rig with a collective to hide"
+    );
+
+    // targets only checkpointing can reach: above every rewrite-only
+    // plan's max batch, within the uniform (overlapped) checkpoint max
+    let lo = max_batch(&cfg, Technique::Tempo, gpu).max_batch + 1;
+    let hi = max_batch(&cfg, Technique::Checkpoint, gpu).max_batch;
+    assert!(lo <= hi, "no checkpoint-only target range ({lo}..={hi})");
+
+    let step = ((hi - lo) / 12).max(1);
+    let found = (lo..=hi).step_by(step).find_map(|target| {
+        let d = placement_search(&cfg, gpu, PlacementMode::Joint, Some(target));
+        (d.max_batch >= target && d.plan.ckpt.iter().any(|m| *m == CkptMode::Overlapped))
+            .then_some(d)
+    });
+    let d = found.expect("no target in the checkpoint-only range selected an Overlapped arm");
+
+    // its Serial twin: same rewrites, same checkpointed layers
+    let mut twin = d.plan.clone();
+    for m in twin.ckpt.iter_mut() {
+        if *m == CkptMode::Overlapped {
+            *m = CkptMode::Serial;
+        }
+    }
+
+    // what the pre-lane fold saw: identical work census, and the twin
+    // holding the strictly lower peak — i.e. Serial strictly dominated
+    // this plan, and it was pruned before pricing could ever choose it
+    let s_over = schedule_summary(&cfg, &d.plan.schedule_plan());
+    let s_twin = schedule_summary(&cfg, &twin.schedule_plan());
+    assert_eq!(s_over.census, s_twin.census, "twins must do identical census work");
+    assert!(
+        s_over.peak_item_bytes > s_twin.peak_item_bytes,
+        "overlap must pay prefetch co-residency"
+    );
+
+    // the lane-level explanation of why the new model disagrees
+    let b = d.eval_batch;
+    assert!(b > 0);
+    let lt_over = plan_lane_times(&cfg, &d.plan.schedule_plan(), &spec, b);
+    let lt_twin = plan_lane_times(&cfg, &twin.schedule_plan(), &spec, b);
+    assert!(lt_over.hidden_recompute > 0.0, "chosen plan must hide recompute");
+    assert_eq!(lt_twin.hidden_recompute, 0.0, "a serial twin hides nothing");
+    assert_eq!(lt_over.comm_total, lt_twin.comm_total, "same gradient bytes, same link");
+    assert!(
+        lt_over.step < lt_twin.step,
+        "hidden recompute must shorten the step: {} !< {}",
+        lt_over.step,
+        lt_twin.step
+    );
+    let thr_twin = plan_throughput_at(&cfg, &twin.schedule_plan(), gpu, b);
+    assert!(
+        d.throughput > thr_twin,
+        "selection objective: overlapped {} !> serial twin {}",
+        d.throughput,
+        thr_twin
+    );
+}
+
+#[test]
+fn capacity_queries_still_prefer_the_serial_arm() {
+    // the flip is pricing-driven, not unconditional: with no target the
+    // objective is max batch, where Serial's lower peak wins — the
+    // lane-aware prune keeps both arms alive precisely so each
+    // objective can pick its own winner
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let d = placement_search(&cfg, Gpu::Rtx2080Ti, PlacementMode::Joint, None);
+    assert!(
+        d.plan.ckpt.iter().all(|m| *m != CkptMode::Overlapped),
+        "capacity mode picked an overlapped arm: {}",
+        d.rationale
+    );
+}

@@ -8,7 +8,7 @@ use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
 use tempo::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
 use tempo::graph::{schedule_summary, SchedulePlan};
 use tempo::memmodel::{layer_activation_bytes, max_batch, ModelFootprint};
-use tempo::perfmodel::step_time;
+use tempo::perfmodel::{plan_lane_times, step_time};
 use tempo::tensor::Rng;
 use tempo::util::Json;
 
@@ -234,6 +234,96 @@ fn prop_json_roundtrip_random_documents() {
         let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {i}: {e}\n{text}"));
         assert_eq!(back, doc, "case {i}");
     });
+}
+
+#[test]
+fn prop_exposure_bounded_by_collective_total() {
+    // the exposure fold can never expose more than the collective
+    // itself takes, never goes negative, and the two lanes decompose
+    // the step exactly
+    cases(60, 10, |rng, i| {
+        let cfg = random_config(rng);
+        let gpu = Gpu::all()[rng.below(3)];
+        let tech = Technique::all()[rng.below(3)];
+        let b = rng.range(1, 16);
+        let plan = SchedulePlan::for_technique(&cfg, tech, true);
+        let lt = plan_lane_times(&cfg, &plan, &gpu.spec(), b);
+        assert!(
+            lt.comm_exposed >= 0.0 && lt.comm_exposed <= lt.comm_total,
+            "case {i}: exposed {} ∉ [0, {}]",
+            lt.comm_exposed,
+            lt.comm_total
+        );
+        assert_eq!(lt.step, lt.compute + lt.comm_exposed, "case {i}: lanes must sum to the step");
+        assert!(lt.hidden_recompute >= 0.0, "case {i}");
+        let spec = gpu.spec();
+        if spec.allreduce_bw.is_none() || spec.devices == 1 {
+            assert_eq!(lt.comm_total, 0.0, "case {i}: no-collective rig priced comm");
+        } else {
+            assert!(lt.comm_total > 0.0, "case {i}: multi-device rig must pay the all-reduce");
+        }
+    });
+}
+
+#[test]
+fn prop_exposure_monotone_in_interconnect_slowness() {
+    // halving the all-reduce bandwidth lengthens every bucket, so the
+    // collective total strictly grows and the exposed residual never
+    // shrinks (the backward lags it hides behind are bandwidth-free)
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
+    for b in [1usize, 4] {
+        let mut prev_total = f64::INFINITY;
+        let mut prev_exposed = f64::INFINITY;
+        for bw in [5.0e9, 10.0e9, 25.0e9, 55.0e9, 300.0e9] {
+            let mut spec = Gpu::V100.spec();
+            spec.allreduce_bw = Some(bw);
+            let lt = plan_lane_times(&cfg, &plan, &spec, b);
+            assert!(lt.comm_total < prev_total, "bw {bw} B={b}: total not strictly decreasing");
+            assert!(
+                lt.comm_exposed <= prev_exposed,
+                "bw {bw} B={b}: exposed grew as the link sped up"
+            );
+            prev_total = lt.comm_total;
+            prev_exposed = lt.comm_exposed;
+        }
+    }
+}
+
+#[test]
+fn single_device_lane_times_are_the_pre_lane_compute_timeline() {
+    // the comm lane is strictly additive: a 1-device rig prices exactly
+    // as its compute lane, and widening the rig never changes the
+    // compute lane (peak and census live in the schedule summary, which
+    // never sees the rig at all) — the tentpole's backward-compat pin
+    let presets = [
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large(),
+        ModelConfig::gpt2(),
+        ModelConfig::roberta_large(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+    ];
+    for cfg in &presets {
+        for tech in Technique::all() {
+            let plan = SchedulePlan::for_technique(cfg, tech, true);
+            for b in [1usize, 4, 32] {
+                for gpu in Gpu::all() {
+                    let spec = gpu.spec();
+                    let solo = spec.with_devices(1);
+                    let l1 = plan_lane_times(cfg, &plan, &solo, b);
+                    let ln = plan_lane_times(cfg, &plan, &spec, b);
+                    let ctx = format!("{} {tech:?} B={b} {}", cfg.name, gpu.name());
+                    assert_eq!(l1.comm_total, 0.0, "{ctx}");
+                    assert_eq!(l1.comm_exposed, 0.0, "{ctx}");
+                    assert_eq!(l1.step, l1.compute, "{ctx}: solo step must be pure compute");
+                    assert_eq!(l1.compute, ln.compute, "{ctx}: rig width leaked into compute");
+                    assert_eq!(l1.hidden_recompute, ln.hidden_recompute, "{ctx}");
+                    assert!(ln.step >= l1.step, "{ctx}: adding devices made the step faster");
+                }
+            }
+        }
+    }
 }
 
 #[test]
