@@ -1,0 +1,85 @@
+//! Offload benches: the residency frontier across the three plan
+//! families, on the paper's three rigs.
+//!
+//! For each rig × flagship config the harness records (a) the cost of
+//! pricing an all-offload plan through `plan_lane_times` — the host
+//! lane adds two transfer folds per offloaded layer to the hot pricing
+//! path, and the joint search now prices hundreds of offload
+//! candidates per query — and (b) the modeled frontier itself: max
+//! batch and step time at max batch for rewrites-only, uniform serial
+//! checkpointing, all-offload, and the joint `placement_search` winner.
+//! The frontier is the ISSUE 7 claim in numbers: offload holds
+//! near-constant device-side activation memory, so its max batch tops
+//! the checkpoint families on the memory-bound rigs while its exposed
+//! host-link tail prices the throughput cost of getting there. CI
+//! uploads the JSON as `BENCH_offload.json` and gates on its presence.
+
+use tempo::autotempo::{placement_search, LayerPlan, PlacementMode};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet};
+use tempo::graph::{CkptStyle, Residency, SchedulePlan};
+use tempo::memmodel::max_batch_for_plan;
+use tempo::perfmodel::{plan_lane_times, plan_step_time};
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let n = cfg.layers;
+
+    // the plan families on the frontier
+    let rewrites = LayerPlan::uniform(n, OptimizationSet::full()).schedule_plan();
+    let serial = LayerPlan::uniform_checkpoint(n, CkptStyle::Serial).schedule_plan();
+    let offload = SchedulePlan::from_placement(
+        vec![OptimizationSet::full(); n],
+        vec![Residency::Offload; n],
+        true,
+    );
+
+    // pricing cost: the host-lane fold next to the offload-free fold
+    for gpu in [Gpu::Rtx2080Ti, Gpu::V100, Gpu::A100] {
+        let spec = gpu.spec();
+        h.bench(&format!("offload/lane-times-rewrites/{}", gpu.name()), || {
+            std::hint::black_box(plan_lane_times(&cfg, &rewrites, &spec, 8));
+        });
+        h.bench(&format!("offload/lane-times-all-offload/{}", gpu.name()), || {
+            std::hint::black_box(plan_lane_times(&cfg, &offload, &spec, 8));
+        });
+    }
+
+    // the joint search with the offload arms in the candidate family —
+    // the end-to-end cost a capacity query now pays
+    for gpu in [Gpu::Rtx2080Ti, Gpu::V100, Gpu::A100] {
+        h.bench(&format!("offload/joint-capacity-search/{}", gpu.name()), || {
+            std::hint::black_box(placement_search(&cfg, gpu, PlacementMode::Joint, None));
+        });
+    }
+
+    // the modeled frontier: max batch and step time at max batch per
+    // family per rig (the numbers behind the README worked example)
+    for gpu in [Gpu::Rtx2080Ti, Gpu::V100, Gpu::A100] {
+        let spec = gpu.spec();
+        let joint = placement_search(&cfg, gpu, PlacementMode::Joint, None);
+        println!("residency frontier on {} ({} layers, S=512):", gpu.name(), n);
+        for (family, plan) in [
+            ("rewrites", &rewrites),
+            ("serial-ckpt", &serial),
+            ("all-offload", &offload),
+            ("joint-winner", &joint.plan.schedule_plan()),
+        ] {
+            let fit = max_batch_for_plan(&cfg, plan, gpu);
+            let step = if fit.max_batch > 0 {
+                plan_step_time(&cfg, plan, &spec, fit.max_batch)
+            } else {
+                f64::INFINITY
+            };
+            println!(
+                "  {family:>12}: max batch {:>3}, step at max {:8.1} ms",
+                fit.max_batch,
+                step * 1e3,
+            );
+        }
+    }
+
+    h.write_csv("bench_results/bench_offload.csv").unwrap();
+    h.write_json("bench_results/BENCH_offload.json").unwrap();
+}

@@ -1,33 +1,43 @@
-//! Joint (rewrite ∪ checkpoint) placement search over the execution
-//! schedule.
+//! Joint (rewrite ∪ checkpoint ∪ offload) placement search over the
+//! execution schedule.
 //!
 //! The paper's headline "up to 2× batch" numbers come from combining
 //! the drop-in rewrites *with* checkpointing; where you checkpoint
 //! matters as much as whether (Pudipeddi et al.'s layer-to-layer
 //! execution is the limiting case of "checkpoint everything, stream
-//! the rest"). [`placement_search`] therefore searches over per-layer
-//! `(rewrite subset, CkptMode)` assignments — 16 × 3 arms per layer —
-//! instead of `fine_search`'s rewrite subsets alone.
+//! the rest" — and its host-streaming arm is now literal:
+//! [`Residency::Offload`]). [`placement_search`] therefore searches
+//! over per-layer `(rewrite subset, Residency)` assignments — 16 × 4
+//! arms per layer — instead of `fine_search`'s rewrite subsets alone.
 //!
 //! ## Candidate family
 //!
-//! The raw space (48ⁿ assignments) is intractable and almost entirely
+//! The raw space (64ⁿ assignments) is intractable and almost entirely
 //! redundant: encoder layers are interchangeable blocks, so a plan's
 //! price depends on the *multiset* of arms (plus which checkpointed
 //! layer sits topmost, which the canonical layouts below fix). The
 //! search enumerates the canonical two-knob family
 //!
 //! * **prefix rewrite plans** — subset `s` on the first `j` layers,
-//!   baseline on the rest (the shape `fine_search` walks), and
-//! * **joint plans** — checkpoint arm `m ∈ {Overlapped, Serial}` on
-//!   the *bottom* `c` layers, subset `s` on the remaining top layers.
-//!   Bottom placement is canonical because a bottom block's re-forward
-//!   runs after the layers above have already freed their inventories,
-//!   so it never pays the prefetch co-residency the top placement does.
+//!   baseline on the rest (the shape `fine_search` walks),
+//! * **joint checkpoint plans** — checkpoint arm
+//!   `m ∈ {Overlapped, Serial}` on the *bottom* `c` layers, subset `s`
+//!   on the remaining top layers. Bottom placement is canonical
+//!   because a bottom block's re-forward runs after the layers above
+//!   have already freed their inventories, so it never pays the
+//!   prefetch co-residency the top placement does, and
+//! * **joint offload plans** — [`Residency::Offload`] on the bottom
+//!   `c` layers with subset `s` on *every* layer: rewrites run on
+//!   offloaded layers too and shrink the bytes they ship, so the two
+//!   axes compose rather than exclude. Bottom placement is canonical
+//!   here as well — bottom stores get the longest forward windows to
+//!   drain under, and the first load inherits the deepest backward
+//!   cover.
 //!
-//! Every uniform plan (all 16 subsets, both uniform checkpoint modes)
-//! is a member, so the joint search can never return a plan worse than
-//! the best uniform one (`tests/placement_search.rs` pins this).
+//! Every uniform plan (all 16 subsets, both uniform checkpoint modes,
+//! all 16 uniform-offload plans) is a member, so the joint search can
+//! never return a plan worse than the best uniform one
+//! (`tests/placement_search.rs` pins this).
 //!
 //! ## Dominance pruning
 //!
@@ -49,40 +59,54 @@
 //!   (`eff − tail`) ≤ Q's — by linearity this bounds P's exposure by
 //!   Q's exposure plus exactly the compute P already saved, so P's
 //!   *step* is ≤ Q's at every batch even where the collective is
-//!   exposed.
+//!   exposed, and
+//! * for every host-link transfer (stores then loads, in tape order):
+//!   payload bytes ≤ Q's *and* covering-window census ≥ Q's. Transfer
+//!   durations are linear in bytes and window drains linear in the
+//!   cover, so each of P's per-window unhidden tails — and the
+//!   carrying store lag, a monotone fold over exactly those pairs —
+//!   is ≤ Q's at every batch and every host bandwidth. Plans with
+//!   *different* host-transfer shapes (different counts) are
+//!   incomparable and both survive, so the prune stays lossless
+//!   without modeling cross-shape exposure.
 //!
 //! Q can then never win any selection objective and pruning it is
 //! lossless (pinned against exhaustive pricing in
 //! `tests/placement_search.rs`). Strictness is counted on the first
-//! two conditions only — the bucket condition is a qualifier, so
-//! exposure-equal exact ties are all kept for the tie-breaks. Only
-//! survivors pay the max-batch binary search and throughput pricing;
-//! [`PruneStats`] reports the funnel.
+//! two conditions only — the bucket and host conditions are
+//! qualifiers, so exposure-equal exact ties are all kept for the
+//! tie-breaks. Only survivors pay the max-batch binary search and
+//! throughput pricing; [`PruneStats`] reports the funnel.
 //!
 //! Throughput ties break toward the **lower peak** first (a
 //! zero-overhead rewrite like output-only softmax or in-place
 //! LayerNorm is a free win and is always taken), then toward **fewer
-//! checkpointed layers**, then the smaller rewrite surface: equal peak
-//! and equal effective census mean the extra checkpoints buy nothing,
-//! and recompute surface (like the lossy GELU surface) is pure risk.
+//! checkpointed layers**, then **fewer offloaded layers**, then the
+//! smaller rewrite surface: equal peak and equal effective census mean
+//! the extra checkpoints buy nothing, host traffic that buys nothing
+//! is pure PCIe risk, and recompute surface (like the lossy GELU
+//! surface) is pure risk.
 //!
-//! Under the pre-lane latency-blind fold, [`CkptMode::Serial`]
-//! strictly dominated [`CkptMode::Overlapped`] (equal census, lower
-//! peak) and overlap never survived the prune. That is no longer true:
-//! an `Overlapped` arm's hidden prefetch gives it a strictly *smaller
+//! Under the pre-lane latency-blind fold, `Serial` checkpointing
+//! strictly dominated `Overlapped` (equal census, lower peak) and
+//! overlap never survived the prune. That is no longer true: an
+//! `Overlapped` arm's hidden prefetch gives it a strictly *smaller
 //! effective census* than its `Serial` twin, while `Serial` keeps the
 //! strictly lower peak — the two are incomparable, both survive, and
 //! the exposure fold decides at pricing time. Where memory allows the
 //! overlapped arm's batch, its hidden recompute genuinely buys
 //! throughput and the search now selects it
-//! (`tests/lane_exposure.rs` pins the divergence); capacity-bound
-//! queries still land on `Serial`, whose lower peak fits more
-//! sequences.
+//! (`tests/lane_exposure.rs` pins the divergence). Offload arms play
+//! the same game one level up: an offloaded layer keeps the serial
+//! arm's step-shaped census (no recompute at all) at a near-resident
+//! peak, so capacity queries that used to land on all-`Serial` now
+//! land on offload placements — at the priced cost of the unhidden
+//! host-transfer tail.
 
 use std::sync::Arc;
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet};
-use crate::graph::{self, Census, CkptMode, ScheduleSummary};
+use crate::graph::{self, Census, CkptStyle, Residency, ScheduleSummary};
 use crate::memmodel::max_batch_for_plan;
 use crate::perfmodel::{plan_throughput_at, OVERLAP_EFF};
 
@@ -94,9 +118,9 @@ pub enum PlacementMode {
     /// Uniform plans only: one rewrite subset (or one checkpoint mode)
     /// on every layer — the pre-placement search space.
     Uniform,
-    /// The joint per-layer family: checkpoint arms on the bottom
-    /// layers, rewrite subsets on the rest (plus every prefix rewrite
-    /// plan).
+    /// The joint per-layer family: checkpoint or offload arms on the
+    /// bottom layers, rewrite subsets on the rest (plus every prefix
+    /// rewrite plan).
     Joint,
 }
 
@@ -165,12 +189,13 @@ struct Scored {
     eval_batch: usize,
     throughput: f64,
     ckpt_layers: usize,
+    offload_layers: usize,
     rewrite_surface: usize,
 }
 
 /// The canonical candidate family (see module docs). Deduplicated:
-/// the all-baseline plan appears once, and `c == layers` joint plans
-/// (no plain layers left) once per checkpoint mode.
+/// the all-baseline plan appears once, and `c == layers` joint
+/// checkpoint plans (no plain layers left) once per checkpoint style.
 fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
     let n = cfg.layers;
     let subsets = OptimizationSet::all_subsets();
@@ -181,8 +206,11 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
             for &s in &subsets {
                 out.push(LayerPlan::uniform(n, s));
             }
-            for m in [CkptMode::Overlapped, CkptMode::Serial] {
-                out.push(LayerPlan::uniform_checkpoint(n, m));
+            for style in [CkptStyle::Overlapped, CkptStyle::Serial] {
+                out.push(LayerPlan::uniform_checkpoint(n, style));
+            }
+            for &s in &subsets {
+                out.push(LayerPlan::uniform_offload(n, s));
             }
         }
         PlacementMode::Joint => {
@@ -200,12 +228,13 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
                     out.push(LayerPlan::rewrites_only(per_layer));
                 }
             }
-            // joint plans: ckpt arm m on the bottom c layers, s above
-            for m in [CkptMode::Overlapped, CkptMode::Serial] {
+            // joint checkpoint plans: style on the bottom c layers, s
+            // above (rewrites are moot on checkpointed layers)
+            for style in [CkptStyle::Overlapped, CkptStyle::Serial] {
                 for c in 1..=n {
-                    let mut ckpt = vec![CkptMode::None; n];
-                    for arm in ckpt.iter_mut().take(c) {
-                        *arm = m;
+                    let mut residency = vec![Residency::Resident; n];
+                    for arm in residency.iter_mut().take(c) {
+                        *arm = Residency::Checkpoint(style);
                     }
                     for &s in &subsets {
                         if c == n && s != none {
@@ -215,8 +244,21 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
                         for set in per_layer.iter_mut().skip(c) {
                             *set = s;
                         }
-                        out.push(LayerPlan { per_layer, ckpt: ckpt.clone() });
+                        out.push(LayerPlan { per_layer, residency: residency.clone() });
                     }
+                }
+            }
+            // joint offload plans: stream the bottom c layers, subset s
+            // on every layer — rewrites shrink what offloaded layers
+            // ship, so the axes compose (c == n are the uniform-offload
+            // plans, keeping joint ⊇ uniform)
+            for c in 1..=n {
+                let mut residency = vec![Residency::Resident; n];
+                for arm in residency.iter_mut().take(c) {
+                    *arm = Residency::Offload;
+                }
+                for &s in &subsets {
+                    out.push(LayerPlan { per_layer: vec![s; n], residency: residency.clone() });
                 }
             }
         }
@@ -226,14 +268,18 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
 
 /// Pre-computed dominance key of one candidate (see module docs):
 /// per-item peak, the *effective* census the compute lane prices
-/// (`total − OVERLAP_EFF · hidden`), and — per gradient bucket — the
-/// pre-readiness effective census `eff − tail`, which by the roofline's
-/// linearity bounds how much more collective time this plan can leave
-/// exposed than a plan with smaller pre-readiness census.
+/// (`total − OVERLAP_EFF · hidden`), per gradient bucket the
+/// pre-readiness effective census `eff − tail` (which by the
+/// roofline's linearity bounds how much more collective time this plan
+/// can leave exposed than a plan with smaller pre-readiness census),
+/// and per host-link transfer its `(bytes, cover)` pair (stores then
+/// loads, in tape order) — smaller payloads under larger covering
+/// windows expose less host time at every batch and bandwidth.
 struct DomKey {
     peak_item: u64,
     eff: Census,
     pre_readiness: Vec<Census>,
+    host: Vec<(u64, Census)>,
 }
 
 /// Componentwise census difference. Exact in f64: every component is
@@ -258,27 +304,42 @@ fn dom_key(s: &ScheduleSummary) -> DomKey {
     let eff = census_sub(s.census, s.lanes.hidden.scale(OVERLAP_EFF));
     let pre_readiness =
         s.lanes.buckets.iter().map(|bk| census_sub(eff, bk.tail)).collect();
-    DomKey { peak_item: s.peak_item_bytes, eff, pre_readiness }
+    let host = s
+        .lanes
+        .stores
+        .iter()
+        .chain(s.lanes.loads.iter())
+        .map(|t| (t.bytes, t.cover))
+        .collect();
+    DomKey { peak_item: s.peak_item_bytes, eff, pre_readiness, host }
 }
 
 /// `true` when `a` dominates `b`: peak ≤, effective census ≤
-/// componentwise, and per-bucket pre-readiness census ≤ componentwise.
+/// componentwise, per-bucket pre-readiness census ≤ componentwise, and
+/// per host transfer: payload ≤ with covering window ≥ componentwise.
 /// Together these make `a`'s priced step ≤ `b`'s at every batch on
 /// every rig (see module docs for the exposure-bound argument; both
 /// plans share the same batch-free state bytes and the same bucket
 /// bytes, so peak and collective durations need no further terms).
+/// Plans with differently-shaped host lanes (different transfer
+/// counts) are incomparable by construction.
 fn dominates(a: &DomKey, b: &DomKey) -> bool {
     a.peak_item <= b.peak_item
         && census_le(&a.eff, &b.eff)
         && a.pre_readiness.len() == b.pre_readiness.len()
         && a.pre_readiness.iter().zip(&b.pre_readiness).all(|(x, y)| census_le(x, y))
+        && a.host.len() == b.host.len()
+        && a.host
+            .iter()
+            .zip(&b.host)
+            .all(|((ab, ac), (bb, bc))| ab <= bb && census_le(bc, ac))
 }
 
 /// Strict version: dominates with at least one strict inequality on
-/// peak or effective census. The bucket condition stays a non-strict
-/// qualifier — two plans equal on peak and effective census are both
-/// kept regardless of their exposure, so the selection tie-breaks see
-/// every exact tie.
+/// peak or effective census. The bucket and host conditions stay
+/// non-strict qualifiers — two plans equal on peak and effective
+/// census are both kept regardless of their exposure, so the selection
+/// tie-breaks see every exact tie.
 fn strictly_dominates(a: &DomKey, b: &DomKey) -> bool {
     dominates(a, b) && (a.peak_item < b.peak_item || a.eff != b.eff)
 }
@@ -335,10 +396,13 @@ fn tie_break(a: &Scored, b: &Scored) -> bool {
     if a.ckpt_layers != b.ckpt_layers {
         return a.ckpt_layers < b.ckpt_layers;
     }
+    if a.offload_layers != b.offload_layers {
+        return a.offload_layers < b.offload_layers;
+    }
     a.rewrite_surface < b.rewrite_surface
 }
 
-/// Joint placement search: pick the per-layer `(rewrites, CkptMode)`
+/// Joint placement search: pick the per-layer `(rewrites, Residency)`
 /// placement that maximizes the modeled max batch (or, given
 /// `target_batch`, reaches it at the highest modeled throughput).
 /// Dominance pruning is enabled; [`placement_search_with`] exposes the
@@ -399,6 +463,7 @@ pub fn placement_search_with(
             eval_batch,
             throughput: plan_throughput_at(cfg, &splan, gpu, eval_batch),
             ckpt_layers: plan.checkpointed_layers(),
+            offload_layers: plan.offloaded_layers(),
             rewrite_surface: plan.rewrite_surface(),
             plan,
         };
@@ -418,12 +483,13 @@ pub fn placement_search_with(
     );
     let rationale = match target_batch {
         Some(t) if best.max_batch >= t => format!(
-            "{} search: batch {} reachable at {:.2} seq/s with {} checkpointed layer(s) + \
-             rewrites on {} ({funnel})",
+            "{} search: batch {} reachable at {:.2} seq/s with {} checkpointed + {} \
+             offloaded layer(s) + rewrites on {} ({funnel})",
             mode.name(),
             t,
             best.throughput,
             best.ckpt_layers,
+            best.offload_layers,
             best.plan.applied_layers(),
         ),
         Some(t) => format!(
@@ -433,11 +499,12 @@ pub fn placement_search_with(
             best.max_batch,
         ),
         None => format!(
-            "{} search: max batch {} with {} checkpointed layer(s) + rewrites on {} \
-             ({funnel})",
+            "{} search: max batch {} with {} checkpointed + {} offloaded layer(s) + \
+             rewrites on {} ({funnel})",
             mode.name(),
             best.max_batch,
             best.ckpt_layers,
+            best.offload_layers,
             best.plan.applied_layers(),
         ),
     };
@@ -458,12 +525,19 @@ mod tests {
     use crate::memmodel::max_batch;
 
     #[test]
-    fn uniform_candidates_cover_all_subsets_and_both_ckpt_modes() {
+    fn uniform_candidates_cover_all_subsets_and_every_residency_arm() {
         let cfg = ModelConfig::bert_mini();
         let c = candidates(&cfg, PlacementMode::Uniform);
-        assert_eq!(c.len(), 18);
+        // 16 rewrite subsets + 2 uniform checkpoint styles + 16
+        // uniform-offload plans (offloaded layers keep their rewrites)
+        assert_eq!(c.len(), 34);
         assert!(c.iter().any(|p| p.checkpointed_layers() == cfg.layers
-            && p.ckpt.iter().all(|m| *m == CkptMode::Serial)));
+            && p.residency.iter().all(|m| *m == Residency::Checkpoint(CkptStyle::Serial))));
+        assert_eq!(
+            c.iter().filter(|p| p.offloaded_layers() == cfg.layers).count(),
+            16,
+            "one uniform-offload plan per rewrite subset"
+        );
     }
 
     #[test]
@@ -488,8 +562,8 @@ mod tests {
         // census — and both must reach pricing
         let cfg = ModelConfig::bert_mini();
         let n = cfg.layers;
-        let over = LayerPlan::uniform_checkpoint(n, CkptMode::Overlapped);
-        let serial = LayerPlan::uniform_checkpoint(n, CkptMode::Serial);
+        let over = LayerPlan::uniform_checkpoint(n, CkptStyle::Overlapped);
+        let serial = LayerPlan::uniform_checkpoint(n, CkptStyle::Serial);
         let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
         let (ko, ks) = (key(&over), key(&serial));
         assert!(ks.peak_item < ko.peak_item, "serial must hold the lower peak");
@@ -513,6 +587,44 @@ mod tests {
                 survivors.iter().any(|s| s.plan == *want),
                 "{want:?} was pruned from the uniform family"
             );
+        }
+    }
+
+    #[test]
+    fn offload_plans_are_incomparable_across_host_lane_shapes() {
+        // an offload plan has a non-empty host lane; any plan with a
+        // differently-shaped host lane (including every offload-free
+        // plan) must be incomparable to it, so both reach pricing and
+        // the bandwidth-dependent exposure decides
+        let cfg = ModelConfig::bert_mini();
+        let n = cfg.layers;
+        let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
+        let off = key(&LayerPlan::uniform_offload(n, OptimizationSet::none()));
+        let serial = key(&LayerPlan::uniform_checkpoint(n, CkptStyle::Serial));
+        assert_eq!(off.host.len(), 2 * n, "one store + one load per offloaded layer");
+        assert!(serial.host.is_empty());
+        assert!(!strictly_dominates(&off, &serial));
+        assert!(!strictly_dominates(&serial, &off));
+        // fewer offloaded layers → different host shape → incomparable
+        let mut residency = vec![Residency::Offload; n];
+        residency[n - 1] = Residency::Resident;
+        let partial =
+            key(&LayerPlan { per_layer: vec![OptimizationSet::none(); n], residency });
+        assert!(!strictly_dominates(&partial, &off));
+        assert!(!strictly_dominates(&off, &partial));
+    }
+
+    #[test]
+    fn rewrites_shrink_what_an_offloaded_layer_ships() {
+        // the compose-don't-exclude claim: the full rewrite set on an
+        // all-offload plan strictly reduces every store's payload
+        let cfg = ModelConfig::bert_mini();
+        let n = cfg.layers;
+        let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
+        let plain = key(&LayerPlan::uniform_offload(n, OptimizationSet::none()));
+        let rewritten = key(&LayerPlan::uniform_offload(n, OptimizationSet::full()));
+        for (i, ((pb, _), (rb, _))) in plain.host.iter().zip(&rewritten.host).enumerate() {
+            assert!(rb < pb, "transfer {i}: rewritten {rb} !< plain {pb}");
         }
     }
 

@@ -1,70 +1,90 @@
 //! Auto-Tempo search policies over the analytical profiles.
 //!
 //! A [`LayerPlan`] is a per-layer *placement*: which of Tempo's four
-//! graph rewrites each encoder layer applies, and which checkpoint arm
-//! ([`CkptMode`]) it takes. Pricing a plan lowers it to an execution
-//! schedule ([`crate::graph::SchedulePlan`]) and reads the liveness
-//! timeline's exact peak (one memoized schedule summary per distinct
-//! plan), so max-batch searches binary-search against the true
-//! high-water instant rather than a static byte sum — the two coincide
+//! graph rewrites each encoder layer applies, and which residency arm
+//! ([`Residency`]: resident, checkpointed, or host-offloaded) it
+//! takes. Pricing a plan lowers it to an execution schedule
+//! ([`crate::graph::SchedulePlan`]) and reads the liveness timeline's
+//! exact peak (one memoized schedule summary per distinct plan), so
+//! max-batch searches binary-search against the true high-water
+//! instant rather than a static byte sum — the two coincide
 //! bit-identically wherever the old model was correct
 //! (`tests/schedule_equivalence.rs`). The joint (rewrites ∪
-//! checkpoint) search over this space lives in
+//! checkpoint ∪ offload) search over this space lives in
 //! [`super::placement_search`].
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet, Technique};
-use crate::graph::{CkptMode, SchedulePlan};
+use crate::graph::{CkptStyle, Residency, SchedulePlan};
 use crate::memmodel::{max_batch, max_batch_for_plan};
 use crate::perfmodel::throughput_at;
 
 /// Per-layer placement assignment (index = encoder layer): a rewrite
-/// subset plus a checkpoint arm per layer.
+/// subset plus a residency arm per layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
     /// Rewrite subset per encoder layer (ignored on checkpointed
-    /// layers: the recompute replays the unoptimized block).
+    /// layers — the recompute replays the unoptimized block — but
+    /// *honored* on offloaded layers, where rewrites shrink the bytes
+    /// shipped over the host link).
     pub per_layer: Vec<OptimizationSet>,
-    /// Checkpoint arm per encoder layer.
-    pub ckpt: Vec<CkptMode>,
+    /// Residency arm per encoder layer.
+    pub residency: Vec<Residency>,
 }
 
 impl LayerPlan {
-    /// Uniform rewrite plan: `set` on every layer, no checkpointing.
+    /// Uniform rewrite plan: `set` on every layer, everything resident.
     pub fn uniform(layers: usize, set: OptimizationSet) -> Self {
-        LayerPlan { per_layer: vec![set; layers], ckpt: vec![CkptMode::None; layers] }
+        LayerPlan { per_layer: vec![set; layers], residency: vec![Residency::Resident; layers] }
     }
 
-    /// Checkpoint-free plan from per-layer rewrite sets (the legacy
+    /// Residency-free plan from per-layer rewrite sets (the legacy
     /// `LayerPlan` shape; `fine_search`'s prefix plans).
     pub fn rewrites_only(per_layer: Vec<OptimizationSet>) -> Self {
         let n = per_layer.len();
-        LayerPlan { per_layer, ckpt: vec![CkptMode::None; n] }
+        LayerPlan { per_layer, residency: vec![Residency::Resident; n] }
     }
 
-    /// Uniform checkpoint placement: `mode` on every layer, rewrites
-    /// off (the recompute replays the unoptimized block anyway).
-    pub fn uniform_checkpoint(layers: usize, mode: CkptMode) -> Self {
-        LayerPlan { per_layer: vec![OptimizationSet::none(); layers], ckpt: vec![mode; layers] }
+    /// Uniform checkpoint placement: `style` checkpointing on every
+    /// layer, rewrites off (the recompute replays the unoptimized
+    /// block anyway).
+    pub fn uniform_checkpoint(layers: usize, style: CkptStyle) -> Self {
+        LayerPlan {
+            per_layer: vec![OptimizationSet::none(); layers],
+            residency: vec![Residency::Checkpoint(style); layers],
+        }
     }
 
-    /// The checkpoint arm layer `l` takes (missing entries pad to
-    /// [`CkptMode::None`]).
-    pub fn ckpt_mode(&self, l: usize) -> CkptMode {
-        self.ckpt.get(l).copied().unwrap_or(CkptMode::None)
+    /// Uniform offload placement: every layer streamed to the host,
+    /// with `set` rewrites shrinking what each layer ships.
+    pub fn uniform_offload(layers: usize, set: OptimizationSet) -> Self {
+        LayerPlan { per_layer: vec![set; layers], residency: vec![Residency::Offload; layers] }
     }
 
-    /// Number of non-checkpointed layers with any rewrite applied.
+    /// The residency arm layer `l` takes (missing entries pad to
+    /// [`Residency::Resident`]).
+    pub fn residency(&self, l: usize) -> Residency {
+        self.residency.get(l).copied().unwrap_or(Residency::Resident)
+    }
+
+    /// Number of non-checkpointed layers with any rewrite applied
+    /// (offloaded layers count: their rewrites run and shrink the
+    /// shipped bytes).
     pub fn applied_layers(&self) -> usize {
         self.per_layer
             .iter()
             .enumerate()
-            .filter(|(l, s)| s.count() > 0 && !self.ckpt_mode(*l).is_checkpoint())
+            .filter(|(l, s)| s.count() > 0 && !self.residency(*l).is_checkpoint())
             .count()
     }
 
     /// Number of checkpointed layers.
     pub fn checkpointed_layers(&self) -> usize {
-        self.ckpt.iter().filter(|m| m.is_checkpoint()).count()
+        self.residency.iter().filter(|m| m.is_checkpoint()).count()
+    }
+
+    /// Number of host-offloaded layers.
+    pub fn offloaded_layers(&self) -> usize {
+        self.residency.iter().filter(|m| m.is_offload()).count()
     }
 
     /// Total enabled rewrites across non-checkpointed layers (the
@@ -73,7 +93,7 @@ impl LayerPlan {
         self.per_layer
             .iter()
             .enumerate()
-            .filter(|(l, _)| !self.ckpt_mode(*l).is_checkpoint())
+            .filter(|(l, _)| !self.residency(*l).is_checkpoint())
             .map(|(_, s)| s.count())
             .sum()
     }
@@ -81,7 +101,7 @@ impl LayerPlan {
     /// The execution-schedule plan this placement lowers to
     /// (embedding/head at the baseline inventory, as always; MLM head).
     pub fn schedule_plan(&self) -> SchedulePlan {
-        SchedulePlan::from_placement(self.per_layer.clone(), self.ckpt.clone(), true)
+        SchedulePlan::from_placement(self.per_layer.clone(), self.residency.clone(), true)
     }
 
     /// Footprint of the plan at batch `b`: the exact peak of the

@@ -48,6 +48,9 @@ impl Gpu {
                 // deliberately above the ~9 GB/s single-link rate.
                 allreduce_bw: Some(25.0e9),
                 devices: 4,
+                // PCIe v3 x16: ~12 GB/s effective h2d/d2h with pinned
+                // buffers (the L2L offload lane).
+                host_link_bw: 12.0e9,
             },
             // V100 (SXM2 16 GB): 900 GB/s HBM2, 125 TFLOPS fp16 tensor.
             Gpu::V100 => GpuSpec {
@@ -60,6 +63,9 @@ impl Gpu {
                 // NVLink (p3.8xlarge): ~55 GB/s effective all-reduce
                 allreduce_bw: Some(55.0e9),
                 devices: 4,
+                // p3-class hosts feed the GPUs over PCIe v3 (NVLink is
+                // GPU↔GPU only): ~10 GB/s achieved in the h2d direction.
+                host_link_bw: 10.0e9,
             },
             // A100 40 GB: 1555 GB/s, 312 TFLOPS bf16 tensor.
             Gpu::A100 => GpuSpec {
@@ -72,6 +78,9 @@ impl Gpu {
                 // single-GPU ablation platform: no gradient sync
                 allreduce_bw: None,
                 devices: 1,
+                // PCIe v4 x16 host link on the A100 box: ~25 GB/s
+                // effective.
+                host_link_bw: 25.0e9,
             },
         }
     }
@@ -111,6 +120,12 @@ pub struct GpuSpec {
     /// Each device holds a full replica, so peak memory is per device;
     /// `devices == 1` means no collective traffic at all.
     pub devices: usize,
+    /// Effective host↔device link bandwidth (bytes/s) for the L2L
+    /// offload lane — achieved pinned-buffer DMA rate, not the bus
+    /// peak. Per device: each replica streams its own activations over
+    /// its own link, so offload traffic does not contend across the
+    /// rig. `TEMPO_HOST_BW` overrides it at startup.
+    pub host_link_bw: f64,
 }
 
 impl GpuSpec {
@@ -187,6 +202,17 @@ mod tests {
         assert_eq!(solo.mem_bytes, Gpu::V100.spec().mem_bytes);
         // degenerate n=0 clamps to a single device
         assert_eq!(Gpu::V100.spec().with_devices(0).devices, 1);
+    }
+
+    #[test]
+    fn host_links_are_an_order_slower_than_device_memory() {
+        for g in Gpu::all() {
+            let s = g.spec();
+            assert!(s.host_link_bw > 0.0, "{}", g.name());
+            // the L2L premise: PCIe is ~50× slower than HBM/GDDR, so
+            // offload only pays when the backward can cover the DMA
+            assert!(s.host_link_bw < s.bandwidth / 10.0, "{}", g.name());
+        }
     }
 
     #[test]

@@ -66,13 +66,32 @@ pub struct CommBucket {
     pub tail: Census,
 }
 
+/// One host-link transfer (an offload `Store` or `Load`) as the
+/// exposure fold sees it: its PCIe payload and the compute-lane
+/// census of the window the DMA can hide under before its in-tape
+/// deadline. Stores drain during the forward that follows them;
+/// loads drain during the backward window since the previous load
+/// (or the turnaround). Prefetch-lane recompute does not cover host
+/// traffic — both contend for the same covering compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTransfer {
+    /// Which layer's retained inventory this transfer carries.
+    pub segment: Segment,
+    /// Per-batch-item payload in bytes (the layer's shipped
+    /// activations after rewrites shrink them).
+    pub bytes: u64,
+    /// Per-item compute-lane census of the covering window.
+    pub cover: Census,
+}
+
 /// The concurrency profile of a schedule: what the latency fold
 /// (`perfmodel::plan_lane_times`) needs beyond the scalar census.
 ///
 /// Liveness (peak bytes) is lane-blind; this profile is the *time*
 /// side of the lanes — how much prefetched recompute work can hide
-/// under the covering backward, and when each gradient bucket's
-/// all-reduce can start relative to the remaining backward compute.
+/// under the covering backward, when each gradient bucket's
+/// all-reduce can start relative to the remaining backward compute,
+/// and how much compute each host-link transfer can drain under.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LaneProfile {
     /// Per-item census of all [`Lane::Prefetch`] events (hoisted
@@ -86,6 +105,14 @@ pub struct LaneProfile {
     /// Gradient buckets in readiness order (mirrors
     /// `StepSchedule::grad_buckets`), each with its compute tail.
     pub buckets: Vec<CommBucket>,
+    /// Host-link store transfers in tape order (forward phase), each
+    /// covered by the forward compute up to the next store or the
+    /// turnaround. Empty on offload-free schedules.
+    pub stores: Vec<HostTransfer>,
+    /// Host-link load transfers in tape order (backward phase), each
+    /// covered by the backward compute since the previous load (or
+    /// the turnaround). Empty on offload-free schedules.
+    pub loads: Vec<HostTransfer>,
 }
 
 /// Batch-free fold of a schedule: peak, high-water op, per-class bytes
@@ -138,6 +165,10 @@ fn high_water_label(kind: EventKind) -> &'static str {
         EventKind::Recompute => "ckpt re-forward + grads",
         EventKind::Backward => "bwd in flight",
         EventKind::Optimizer => "optimizer step",
+        // a Store only frees, so the previous sample ties or beats it;
+        // a Load materializes the reloaded inventory under backward
+        EventKind::Store => "offload store",
+        EventKind::Load => "offload load + bwd in flight",
     }
 }
 
@@ -248,6 +279,18 @@ impl StepSchedule {
         let mut hidden = Census::ZERO;
         let mut run: Option<(Segment, Census)> = None; // open prefetch run
         let mut covering: Option<(Segment, Census, Census)> = None; // (seg, p, cover)
+
+        // host-link transfers: stores drain under the forward compute
+        // up to the next store (or the turnaround); loads drain under
+        // the backward compute since the previous load (or the
+        // turnaround). Tape position is the completion deadline — the
+        // fold only records the covering window, `plan_lane_times`
+        // prices the unhidden tail.
+        let mut stores: Vec<HostTransfer> = Vec::new();
+        let mut loads: Vec<HostTransfer> = Vec::new();
+        let mut store_open = false;
+        let mut load_cover = Census::ZERO;
+        let mut past_turn = false;
         for e in &self.events {
             match e.lane {
                 Lane::Prefetch => {
@@ -257,7 +300,40 @@ impl StepSchedule {
                         _ => run = Some((e.segment, e.census)),
                     }
                 }
+                Lane::HostLink => match e.kind {
+                    EventKind::Store => {
+                        let bytes: u64 = e
+                            .frees
+                            .iter()
+                            .map(|&id| self.tensors[id as usize].item_bytes)
+                            .sum();
+                        stores.push(HostTransfer { segment: e.segment, bytes, cover: Census::ZERO });
+                        store_open = true;
+                    }
+                    EventKind::Load => {
+                        let bytes: u64 = e
+                            .allocs
+                            .iter()
+                            .map(|&id| self.tensors[id as usize].item_bytes)
+                            .sum();
+                        loads.push(HostTransfer { segment: e.segment, bytes, cover: load_cover });
+                        load_cover = Census::ZERO;
+                    }
+                    _ => {}
+                },
                 Lane::Compute => {
+                    if e.kind == EventKind::Turnaround {
+                        store_open = false;
+                        past_turn = true;
+                    }
+                    if store_open {
+                        if let Some(t) = stores.last_mut() {
+                            t.cover.add(e.census);
+                        }
+                    }
+                    if past_turn {
+                        load_cover.add(e.census);
+                    }
                     if let Some((seg, p)) = run.take() {
                         if let Some((_, p2, c2)) = covering.take() {
                             hidden.add(min_census(p2, c2));
@@ -298,7 +374,7 @@ impl StepSchedule {
             })
             .collect();
 
-        LaneProfile { prefetch, hidden, buckets }
+        LaneProfile { prefetch, hidden, buckets, stores, loads }
     }
 }
 
@@ -391,6 +467,40 @@ mod tests {
         let lanes = lower_step(&cfg, &plan, Lowering::for_model(&cfg)).summarize_step().lanes;
         assert_eq!(lanes.prefetch, Census::ZERO);
         assert_eq!(lanes.hidden, Census::ZERO);
+        // no offload arm anywhere above: the host lane is silent
+        assert!(lanes.stores.is_empty() && lanes.loads.is_empty());
+    }
+
+    #[test]
+    fn host_transfers_carry_their_covering_windows() {
+        use crate::graph::Residency;
+        let cfg = ModelConfig::bert_tiny();
+        let n = cfg.layers;
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); n],
+            vec![Residency::Offload; n],
+            true,
+        );
+        let lanes = lower_step(&cfg, &plan, Lowering::for_model(&cfg)).summarize_step().lanes;
+        assert_eq!(lanes.stores.len(), n);
+        assert_eq!(lanes.loads.len(), n);
+        // round trip: every byte shipped out comes back in
+        let out: u64 = lanes.stores.iter().map(|t| t.bytes).sum();
+        let back: u64 = lanes.loads.iter().map(|t| t.bytes).sum();
+        assert_eq!(out, back);
+        // every store except the last is covered by at least the next
+        // layer's forward; the last store's window runs to turnaround
+        for t in &lanes.stores {
+            assert!(t.bytes > 0, "{:?} ships nothing", t.segment);
+        }
+        for t in lanes.stores.iter().take(n - 1) {
+            assert!(t.cover.matmul_flops > 0.0, "{:?} store uncovered", t.segment);
+        }
+        // the first load (top layer) hides under the head backward;
+        // later loads hide under the previous layer's backward
+        for t in &lanes.loads {
+            assert!(t.cover.matmul_flops > 0.0, "{:?} load uncovered", t.segment);
+        }
     }
 
     #[test]

@@ -61,11 +61,13 @@ pub use memo::{
     cache_len, checkpoint_summary, embedding_summary, encoder_summary, encoder_summary_with,
     head_summary,
 };
-pub use liveness::{CommBucket, LaneProfile, LivePoint, LivenessTimeline, ScheduleSummary};
+pub use liveness::{
+    CommBucket, HostTransfer, LaneProfile, LivePoint, LivenessTimeline, ScheduleSummary,
+};
 pub use op::{Census, Op, OpKind};
 pub use schedule::{
-    lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, CkptMode, EventKind,
-    Lane, MemClass, SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule,
+    lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, CkptStyle, EventKind,
+    Lane, MemClass, Residency, SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule,
     MEM_CLASS_COUNT,
 };
 pub use table::{block_rows, live_totals, tensor_table, tensor_table_with, ClassTotals, TensorRow};

@@ -43,7 +43,7 @@
 //!   coexist — exactly the `full inventory + float volume` transient
 //!   the old closed form charged on top of the head.
 //!
-//! The one *intentional divergence* is opt-in: [`CkptMode::Serial`]
+//! The one *intentional divergence* is opt-in: [`CkptStyle::Serial`]
 //! (via [`SchedulePlan::serial`]) models PyTorch-style serial
 //! checkpointing (no prefetch), whose true peak is **lower** than the
 //! static sum by exactly `min(head bytes, block inventory)` — the
@@ -53,18 +53,37 @@
 //! calibrated defaults (Table 2, §4.2 pins) keep the overlapped
 //! semantics.
 //!
-//! **Per-layer placement.** Checkpointing is a per-layer arm, not a
-//! whole-model switch: every encoder layer independently carries a
-//! [`CkptMode`] (`None` | `Overlapped` | `Serial`) next to its rewrite
-//! subset, so one plan can checkpoint the bottom blocks and leave
-//! rewrites on the rest — the joint search space Auto-Tempo's
-//! placement pass explores (`autotempo::placement`, DESIGN.md
-//! §Placement). An `Overlapped` layer's re-forward is hoisted above the
-//! *preceding* segment's backward (the L2L-style prefetch) unless that
-//! segment is itself checkpointed — the model keeps a single re-forward
-//! buffer, never a pipeline of them — while a `Serial` layer recomputes
-//! strictly in place. Uniform plans reproduce the legacy `checkpoint:
-//! bool` semantics bit-identically.
+//! **Per-layer placement.** Where a layer's inventory lives is a
+//! per-layer arm, not a whole-model switch: every encoder layer
+//! independently carries a [`Residency`] (`Resident` |
+//! `Checkpoint(Overlapped | Serial)` | `Offload`) next to its rewrite
+//! subset, so one plan can checkpoint the bottom blocks, offload the
+//! middle and leave rewrites on the rest — the joint search space
+//! Auto-Tempo's placement pass explores (`autotempo::placement`,
+//! DESIGN.md §Placement). An `Overlapped` layer's re-forward is hoisted
+//! above the *preceding* segment's backward (the L2L-style prefetch)
+//! unless that segment is itself checkpointed — the model keeps a
+//! single re-forward buffer, never a pipeline of them — while a
+//! `Serial` layer recomputes strictly in place. Uniform plans reproduce
+//! the legacy `checkpoint: bool` semantics bit-identically.
+//!
+//! **Offload (L2L host streaming).** An [`Residency::Offload`] layer
+//! forwards exactly like a resident one — its rewrite subset still
+//! applies, shrinking the bytes it ships — then emits one
+//! [`EventKind::Store`] on [`Lane::HostLink`] whose `frees` release the
+//! layer's entire retained inventory: *frees at store completion*, the
+//! Pudipeddi et al. constant-memory discipline. In the backward, one
+//! [`EventKind::Load`] re-allocates a fresh inventory of the same
+//! shapes immediately before the layer's own backward. The tape
+//! position of a host-link event is the transfer's **completion
+//! deadline**, not its start: the DMA runs concurrently with the
+//! compute ahead of it (the store against the remaining forward, the
+//! load against the covering backward window), which is where the
+//! latency fold (`perfmodel::plan_lane_times`) credits the overlap and
+//! charges only the unhidden tail. Liveness stays lane-blind, so
+//! placing the load at its deadline — rather than hoisting it like an
+//! `Overlapped` recompute — means converting a layer to `Offload`
+//! shrinks the live set at every instant of the step.
 //!
 //! **Lanes (DESIGN.md §Lanes).** The timeline is no longer one stream:
 //! every event carries a [`Lane`] tag. [`Lane::Compute`] is the serial
@@ -176,9 +195,10 @@ impl Segment {
 /// Which concurrent lane a schedule event occupies.
 ///
 /// The schedule models a step as concurrent streams, not one serial
-/// tape: the compute lane is the classic timeline, while prefetched
-/// checkpoint re-forwards ([`CkptMode::Overlapped`]) issue on a second
-/// stream under the preceding segment's backward. Liveness folds are
+/// tape: the compute lane is the classic timeline, prefetched
+/// checkpoint re-forwards ([`CkptStyle::Overlapped`]) issue on a second
+/// stream under the preceding segment's backward, and offloaded
+/// layers' store/load DMAs ride the host link. Liveness folds are
 /// lane-blind (a tensor's bytes are live whichever lane allocated
 /// them); only the latency fold (`perfmodel::plan_lane_times`) treats
 /// lanes as concurrent.
@@ -191,6 +211,22 @@ pub enum Lane {
     /// under the preceding segment's backward, which (partially) hides
     /// its latency.
     Prefetch,
+    /// The host-link (PCIe/NVLink-host) DMA stream: an `Offload`
+    /// layer's inventory store after its forward and load before its
+    /// backward ([`GpuSpec::host_link_bw`](crate::config::GpuSpec)).
+    HostLink,
+}
+
+impl Lane {
+    /// Stable lane tag for tables and JSON output (`compute` /
+    /// `prefetch` / `host`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Lane::Compute => "compute",
+            Lane::Prefetch => "prefetch",
+            Lane::HostLink => "host",
+        }
+    }
 }
 
 /// What a schedule event does.
@@ -211,6 +247,14 @@ pub enum EventKind {
     Backward,
     /// Optimizer step; releases the backward workspace.
     Optimizer,
+    /// Offload store DMA on [`Lane::HostLink`]: ships an `Offload`
+    /// layer's inventory to host memory; its `frees` release that
+    /// inventory (frees at store completion).
+    Store,
+    /// Offload load DMA on [`Lane::HostLink`]: re-materializes an
+    /// `Offload` layer's inventory right before the layer's backward;
+    /// the tape position is the transfer's completion deadline.
+    Load,
 }
 
 impl EventKind {
@@ -223,6 +267,8 @@ impl EventKind {
             EventKind::Recompute => "rfwd",
             EventKind::Backward => "bwd",
             EventKind::Optimizer => "opt",
+            EventKind::Store => "store",
+            EventKind::Load => "load",
         }
     }
 }
@@ -296,13 +342,10 @@ pub struct StepSchedule {
     pub grad_buckets: Vec<(Segment, u64)>,
 }
 
-/// Per-layer checkpoint arm: how (and whether) one encoder layer's
-/// inventory is replaced by the `SegmentCheckpoint` transform.
+/// Checkpoint scheduling style: where a checkpointed layer's
+/// re-forward runs relative to the surrounding backward.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum CkptMode {
-    /// No checkpointing — the layer retains its (possibly rewritten)
-    /// inventory until its backward.
-    None,
+pub enum CkptStyle {
     /// L2L-style checkpointing: the re-forward is prefetched under the
     /// preceding segment's backward (hides recompute latency; one
     /// recomputed inventory coexists with that segment's live set).
@@ -314,24 +357,50 @@ pub enum CkptMode {
     Serial,
 }
 
-impl CkptMode {
+/// Per-layer residency arm: where one encoder layer's retained
+/// inventory lives between its forward and its backward. The general
+/// axis `placement_search` explores jointly with the rewrite subsets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Residency {
+    /// On-device — the layer retains its (possibly rewritten)
+    /// inventory until its backward.
+    Resident,
+    /// Discarded and recomputed: the `SegmentCheckpoint` transform,
+    /// with the given re-forward scheduling style.
+    Checkpoint(CkptStyle),
+    /// Streamed to host memory over [`Lane::HostLink`] after the
+    /// layer's forward ([`EventKind::Store`], frees at store
+    /// completion) and re-materialized before its backward
+    /// ([`EventKind::Load`]). The rewrite subset still applies — it
+    /// shrinks the bytes shipped each way.
+    Offload,
+}
+
+impl Residency {
     /// Whether this arm applies the segment-checkpoint transform.
     pub fn is_checkpoint(self) -> bool {
-        self != CkptMode::None
+        matches!(self, Residency::Checkpoint(_))
     }
 
-    /// Short arm label for plan tables (`-` / `overlap` / `serial`).
+    /// Whether this arm streams the inventory over the host link.
+    pub fn is_offload(self) -> bool {
+        self == Residency::Offload
+    }
+
+    /// Short arm label for plan tables
+    /// (`-` / `overlap` / `serial` / `offload`).
     pub fn label(self) -> &'static str {
         match self {
-            CkptMode::None => "-",
-            CkptMode::Overlapped => "overlap",
-            CkptMode::Serial => "serial",
+            Residency::Resident => "-",
+            Residency::Checkpoint(CkptStyle::Overlapped) => "overlap",
+            Residency::Checkpoint(CkptStyle::Serial) => "serial",
+            Residency::Offload => "offload",
         }
     }
 }
 
 /// What to lower: which rewrites each encoder layer applies, which
-/// checkpoint arm each layer takes, and what the embedding/head blocks
+/// residency arm each layer takes, and what the embedding/head blocks
 /// apply.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulePlan {
@@ -339,11 +408,12 @@ pub struct SchedulePlan {
     /// Shorter-than-model vectors pad the missing layers with
     /// `OptimizationSet::none()`.
     pub per_layer: Vec<OptimizationSet>,
-    /// Per-encoder-layer checkpoint arm. A checkpointed layer ignores
-    /// its rewrite set: the recompute replays the *unoptimized* block,
-    /// like the legacy whole-model checkpoint. Shorter-than-model
-    /// vectors pad the missing layers with [`CkptMode::None`].
-    pub ckpt: Vec<CkptMode>,
+    /// Per-encoder-layer residency arm. A checkpointed layer ignores
+    /// its rewrite set (the recompute replays the *unoptimized* block,
+    /// like the legacy whole-model checkpoint); an offloaded layer
+    /// keeps it (rewrites shrink the shipped bytes). Shorter-than-model
+    /// vectors pad the missing layers with [`Residency::Resident`].
+    pub residency: Vec<Residency>,
     /// Rewrites applied to the embedding and head blocks.
     pub other: OptimizationSet,
     /// MLM head (pre-training, B·S·V logits) vs classification head.
@@ -353,19 +423,19 @@ pub struct SchedulePlan {
 impl SchedulePlan {
     /// The plan a top-level technique induces (what
     /// `memmodel::ModelFootprint::new` prices). `Technique::Checkpoint`
-    /// is the uniform [`CkptMode::Overlapped`] placement — the legacy
+    /// is the uniform [`CkptStyle::Overlapped`] placement — the legacy
     /// semantics the Table 2 / §4.2 calibration pins price.
     pub fn for_technique(cfg: &ModelConfig, technique: Technique, mlm_head: bool) -> SchedulePlan {
         let opts = match technique {
             Technique::Tempo => OptimizationSet::full(),
             _ => OptimizationSet::none(),
         };
-        let ckpt = if technique == Technique::Checkpoint {
-            vec![CkptMode::Overlapped; cfg.layers]
+        let residency = if technique == Technique::Checkpoint {
+            vec![Residency::Checkpoint(CkptStyle::Overlapped); cfg.layers]
         } else {
             Vec::new()
         };
-        SchedulePlan { per_layer: vec![opts; cfg.layers], ckpt, other: opts, mlm_head }
+        SchedulePlan { per_layer: vec![opts; cfg.layers], residency, other: opts, mlm_head }
     }
 
     /// Uniform rewrite subset on every block (Fig 12 ablations,
@@ -373,7 +443,7 @@ impl SchedulePlan {
     pub fn uniform(cfg: &ModelConfig, opts: OptimizationSet, mlm_head: bool) -> SchedulePlan {
         SchedulePlan {
             per_layer: vec![opts; cfg.layers],
-            ckpt: Vec::new(),
+            residency: Vec::new(),
             other: opts,
             mlm_head,
         }
@@ -386,40 +456,50 @@ impl SchedulePlan {
     }
 
     /// A full joint placement: per-layer rewrite sets plus per-layer
-    /// checkpoint arms (embedding/head stay at the baseline inventory).
+    /// residency arms (embedding/head stay at the baseline inventory).
     pub fn from_placement(
         per_layer: Vec<OptimizationSet>,
-        ckpt: Vec<CkptMode>,
+        residency: Vec<Residency>,
         mlm_head: bool,
     ) -> SchedulePlan {
-        SchedulePlan { per_layer, ckpt, other: OptimizationSet::none(), mlm_head }
+        SchedulePlan { per_layer, residency, other: OptimizationSet::none(), mlm_head }
     }
 
     /// Builder: switch every overlapped layer to serial (no-prefetch)
     /// checkpoint semantics. A no-op on checkpoint-free plans.
     pub fn serial(mut self) -> SchedulePlan {
-        for m in &mut self.ckpt {
-            if *m == CkptMode::Overlapped {
-                *m = CkptMode::Serial;
+        for m in &mut self.residency {
+            if *m == Residency::Checkpoint(CkptStyle::Overlapped) {
+                *m = Residency::Checkpoint(CkptStyle::Serial);
             }
         }
         self
     }
 
-    /// The checkpoint arm layer `l` takes (missing entries pad to
-    /// [`CkptMode::None`]).
-    pub fn ckpt_mode(&self, l: usize) -> CkptMode {
-        self.ckpt.get(l).copied().unwrap_or(CkptMode::None)
+    /// The residency arm layer `l` takes (missing entries pad to
+    /// [`Residency::Resident`]).
+    pub fn residency(&self, l: usize) -> Residency {
+        self.residency.get(l).copied().unwrap_or(Residency::Resident)
     }
 
     /// Whether any layer applies the segment-checkpoint transform.
     pub fn any_checkpoint(&self) -> bool {
-        self.ckpt.iter().any(|m| m.is_checkpoint())
+        self.residency.iter().any(|m| m.is_checkpoint())
+    }
+
+    /// Whether any layer streams its inventory over the host link.
+    pub fn any_offload(&self) -> bool {
+        self.residency.iter().any(|m| m.is_offload())
     }
 
     /// Number of checkpointed layers.
     pub fn checkpointed_layers(&self) -> usize {
-        self.ckpt.iter().filter(|m| m.is_checkpoint()).count()
+        self.residency.iter().filter(|m| m.is_checkpoint()).count()
+    }
+
+    /// Number of offloaded layers.
+    pub fn offloaded_layers(&self) -> usize {
+        self.residency.iter().filter(|m| m.is_offload()).count()
     }
 
     /// `Some(opts)` when every layer applies the same subset (the
@@ -436,22 +516,28 @@ impl SchedulePlan {
     /// Human-readable plan label for reports.
     pub fn label(&self) -> String {
         let head = if self.mlm_head { "mlm" } else { "cls" };
-        let layers = self.per_layer.len().max(self.ckpt.len());
+        let layers = self.per_layer.len().max(self.residency.len());
         let n_ckpt = self.checkpointed_layers();
+        let n_off = self.offloaded_layers();
+        if n_off > 0 && n_off == layers {
+            return format!("offload, {head} head");
+        }
         if n_ckpt > 0 && n_ckpt == layers {
-            let mode = if self.ckpt.iter().all(|m| *m == CkptMode::Serial) {
+            let mode = if self.residency.iter().all(|m| *m == Residency::Checkpoint(CkptStyle::Serial)) {
                 "serial"
             } else {
                 "overlapped"
             };
             return format!("checkpoint({mode}), {head} head");
         }
-        if n_ckpt > 0 {
+        if n_ckpt > 0 || n_off > 0 {
+            let offload_note =
+                if n_off > 0 { format!(", {n_off} offloaded") } else { String::new() };
             return format!(
-                "mixed placement ({}/{layers} layers optimized, {n_ckpt} checkpointed), {head} head",
+                "mixed placement ({}/{layers} layers optimized, {n_ckpt} checkpointed{offload_note}), {head} head",
                 self.per_layer
                     .iter()
-                    .zip((0..layers).map(|l| self.ckpt_mode(l)))
+                    .zip((0..layers).map(|l| self.residency(l)))
                     .filter(|(o, m)| o.count() > 0 && !m.is_checkpoint())
                     .count(),
             );
@@ -614,6 +700,51 @@ impl Builder {
         per_op
     }
 
+    /// Offload store: one DMA on the host link that ships the layer's
+    /// whole retained inventory to host memory; its `frees` release
+    /// every persistent id the forward allocated (frees at store
+    /// completion). The tape position is the transfer's completion
+    /// deadline — the DMA itself overlaps the remaining forward.
+    fn offload_store(&mut self, segment: Segment, per_op: &[Vec<u32>]) {
+        let frees: Vec<u32> = per_op.iter().flatten().copied().collect();
+        self.events.push(ScheduleEvent {
+            kind: EventKind::Store,
+            segment,
+            name: "offload.store",
+            allocs: Vec::new(),
+            inplace: Vec::new(),
+            frees,
+            census: Census::ZERO,
+            lane: Lane::HostLink,
+        });
+    }
+
+    /// Offload load: re-materialize the layer's inventory from host
+    /// memory right before its backward. Fresh ids mirror the shipped
+    /// tensors' shapes (the in-flight copy is backward working set, so
+    /// it folds into [`MemClass::Workspace`]); the per-op structure is
+    /// returned so the plain backward releases them op by op.
+    fn offload_load(&mut self, segment: Segment, specs: &[Vec<(&'static str, u64)>]) -> Vec<Vec<u32>> {
+        let per_op: Vec<Vec<u32>> = specs
+            .iter()
+            .map(|ops| {
+                ops.iter().map(|&(name, item)| self.tensor(name, 0, item, MemClass::Workspace)).collect()
+            })
+            .collect();
+        let allocs: Vec<u32> = per_op.iter().flatten().copied().collect();
+        self.events.push(ScheduleEvent {
+            kind: EventKind::Load,
+            segment,
+            name: "offload.load",
+            allocs,
+            inplace: Vec::new(),
+            frees: Vec::new(),
+            census: Census::ZERO,
+            lane: Lane::HostLink,
+        });
+        per_op
+    }
+
     /// Backward of a checkpointed block over its recomputed inventory;
     /// the stored input is released with the block's last backward op.
     fn backward_block_checkpoint(
@@ -635,21 +766,23 @@ impl Builder {
 /// Lower one full training step of `cfg` under `plan` into a
 /// [`StepSchedule`]: embedding → encoder layers → head forward, the
 /// turnaround workspace, then the mirrored backward (with checkpoint
-/// re-forward segments spliced in where the plan's per-layer
-/// [`CkptMode`] arms ask for them).
+/// re-forward segments and offload store/load DMAs spliced in where
+/// the plan's per-layer [`Residency`] arms ask for them).
 pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) -> StepSchedule {
-    /// Forward bookkeeping for one encoder layer: either the per-op
-    /// retained-tensor ids of a plain layer, or the stored-input id of
-    /// a checkpointed one.
+    /// Forward bookkeeping for one encoder layer: the per-op
+    /// retained-tensor ids of a plain layer, the stored-input id of a
+    /// checkpointed one, or the shipped tensor shapes (per-op
+    /// `(name, item_bytes)`) of an offloaded one.
     enum LayerFwd {
         Plain(Vec<Vec<u32>>),
         Ckpt(u32),
+        Offload(Vec<Vec<(&'static str, u64)>>),
     }
 
     let mut b = Builder::default();
     let layer_opts =
         |l: usize| plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none);
-    let mode = |l: usize| plan.ckpt_mode(l);
+    let mode = |l: usize| plan.residency(l);
 
     // model states: resident for the whole step
     let p_bytes = cfg.param_count() as u64 * 4;
@@ -673,15 +806,38 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     let enc = encoder_block_with(cfg, lowering);
     let mut fwd_ids: Vec<LayerFwd> = Vec::with_capacity(cfg.layers);
     for l in 0..cfg.layers {
-        if mode(l).is_checkpoint() {
-            fwd_ids.push(LayerFwd::Ckpt(b.forward_block_checkpoint(&enc, Segment::Encoder(l))));
-        } else {
-            fwd_ids.push(LayerFwd::Plain(b.forward_block(
-                &enc,
-                Segment::Encoder(l),
-                layer_opts(l),
-                MemClass::EncoderAct,
-            )));
+        match mode(l) {
+            Residency::Checkpoint(_) => {
+                fwd_ids.push(LayerFwd::Ckpt(b.forward_block_checkpoint(&enc, Segment::Encoder(l))));
+            }
+            Residency::Offload => {
+                // forwards exactly like a resident layer (the rewrite
+                // subset applies, shrinking the shipped bytes), then one
+                // store DMA frees the whole retained inventory
+                let per_op =
+                    b.forward_block(&enc, Segment::Encoder(l), layer_opts(l), MemClass::EncoderAct);
+                let specs: Vec<Vec<(&'static str, u64)>> = per_op
+                    .iter()
+                    .map(|ids| {
+                        ids.iter()
+                            .map(|&id| {
+                                let t = &b.tensors[id as usize];
+                                (t.name, t.item_bytes)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                b.offload_store(Segment::Encoder(l), &per_op);
+                fwd_ids.push(LayerFwd::Offload(specs));
+            }
+            Residency::Resident => {
+                fwd_ids.push(LayerFwd::Plain(b.forward_block(
+                    &enc,
+                    Segment::Encoder(l),
+                    layer_opts(l),
+                    MemClass::EncoderAct,
+                )));
+            }
         }
     }
 
@@ -717,7 +873,7 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     // prefetches the layer below it: the model keeps a single
     // re-forward buffer, never a pipeline of recomputed inventories.
     let mut pending: Option<(usize, Vec<Vec<u32>>)> = None;
-    if cfg.layers > 0 && mode(cfg.layers - 1) == CkptMode::Overlapped {
+    if cfg.layers > 0 && mode(cfg.layers - 1) == Residency::Checkpoint(CkptStyle::Overlapped) {
         let top = cfg.layers - 1;
         pending = Some((top, b.recompute_block(&enc, Segment::Encoder(top), Lane::Prefetch)));
     }
@@ -727,12 +883,24 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     for l in (0..cfg.layers).rev() {
         match fwd_ids.pop().expect("per-layer forward ids") {
             LayerFwd::Plain(ids) => {
-                if l > 0 && mode(l - 1) == CkptMode::Overlapped && pending.is_none() {
+                if l > 0
+                    && mode(l - 1) == Residency::Checkpoint(CkptStyle::Overlapped)
+                    && pending.is_none()
+                {
                     // prefetch the overlapped layer below under this
                     // plain layer's backward
                     pending =
                         Some((l - 1, b.recompute_block(&enc, Segment::Encoder(l - 1), Lane::Prefetch)));
                 }
+                b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), ids);
+            }
+            LayerFwd::Offload(specs) => {
+                // the load's tape position is its completion deadline:
+                // the DMA overlapped the backward above; the inventory
+                // only becomes device-resident here, right before the
+                // layer's own backward (liveness never sees a deeper
+                // co-residency than the resident twin held)
+                let ids = b.offload_load(Segment::Encoder(l), &specs);
                 b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), ids);
             }
             LayerFwd::Ckpt(stored) => {
@@ -789,14 +957,14 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
 
 /// The plan's *resolved* per-layer semantics — exactly what
 /// `lower_step` sees after padding short vectors: one
-/// `(rewrite set, checkpoint arm)` pair per model layer. Keying on the
+/// `(rewrite set, residency arm)` pair per model layer. Keying on the
 /// resolution (not the representation) lets every spelling of the same
 /// placement share one cache entry, and collapses the common uniform
 /// case to a single pair.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 enum PlanKey {
-    Uniform(OptimizationSet, CkptMode),
-    PerLayer(Vec<(OptimizationSet, CkptMode)>),
+    Uniform(OptimizationSet, Residency),
+    PerLayer(Vec<(OptimizationSet, Residency)>),
 }
 
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -831,16 +999,16 @@ pub fn schedule_summary_with(
     plan: &SchedulePlan,
     lowering: Lowering,
 ) -> Arc<ScheduleSummary> {
-    let resolved: Vec<(OptimizationSet, CkptMode)> = (0..cfg.layers)
+    let resolved: Vec<(OptimizationSet, Residency)> = (0..cfg.layers)
         .map(|l| {
             (
                 plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none),
-                plan.ckpt_mode(l),
+                plan.residency(l),
             )
         })
         .collect();
     let plan_key = match resolved.first().copied() {
-        None => PlanKey::Uniform(OptimizationSet::none(), CkptMode::None),
+        None => PlanKey::Uniform(OptimizationSet::none(), Residency::Resident),
         Some(first) if resolved.iter().all(|p| *p == first) => PlanKey::Uniform(first.0, first.1),
         _ => PlanKey::PerLayer(resolved),
     };
@@ -1024,7 +1192,11 @@ mod tests {
         // its resolved semantics name
         let cfg = tiny(); // 2 layers
         let long = SchedulePlan {
-            ckpt: vec![CkptMode::None, CkptMode::None, CkptMode::Overlapped],
+            residency: vec![
+                Residency::Resident,
+                Residency::Resident,
+                Residency::Checkpoint(CkptStyle::Overlapped),
+            ],
             ..SchedulePlan::uniform(&cfg, OptimizationSet::none(), true)
         };
         let plain = SchedulePlan::uniform(&cfg, OptimizationSet::none(), true);
@@ -1051,13 +1223,30 @@ mod tests {
         per_layer[0] = OptimizationSet::full();
         assert!(SchedulePlan::from_per_layer(per_layer, false).label().contains("mixed"));
         // a joint placement names both counts
-        let mut ckpt = vec![CkptMode::None; cfg.layers];
-        ckpt[0] = CkptMode::Serial;
+        let mut residency = vec![Residency::Resident; cfg.layers];
+        residency[0] = Residency::Checkpoint(CkptStyle::Serial);
         let mut per_layer = vec![OptimizationSet::full(); cfg.layers];
         per_layer[0] = OptimizationSet::none();
-        let label = SchedulePlan::from_placement(per_layer, ckpt, true).label();
+        let label = SchedulePlan::from_placement(per_layer, residency, true).label();
         assert!(label.contains("mixed placement"), "{label}");
         assert!(label.contains("1 checkpointed"), "{label}");
+        // offload arms name themselves too
+        let label = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); cfg.layers],
+            vec![Residency::Offload; cfg.layers],
+            true,
+        )
+        .label();
+        assert!(label.contains("offload"), "{label}");
+        let mut residency = vec![Residency::Resident; cfg.layers];
+        residency[0] = Residency::Offload;
+        let label = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); cfg.layers],
+            residency,
+            true,
+        )
+        .label();
+        assert!(label.contains("1 offloaded"), "{label}");
     }
 
     #[test]
@@ -1068,7 +1257,7 @@ mod tests {
         let cfg = tiny(); // 2 layers
         let plan = SchedulePlan::from_placement(
             vec![OptimizationSet::full(); cfg.layers],
-            vec![CkptMode::Serial, CkptMode::None],
+            vec![Residency::Checkpoint(CkptStyle::Serial), Residency::Resident],
             true,
         );
         let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
@@ -1097,7 +1286,7 @@ mod tests {
         let cfg = tiny();
         let plan = SchedulePlan::from_placement(
             vec![OptimizationSet::none(); cfg.layers],
-            vec![CkptMode::Overlapped, CkptMode::None],
+            vec![Residency::Checkpoint(CkptStyle::Overlapped), Residency::Resident],
             true,
         );
         let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
@@ -1121,7 +1310,7 @@ mod tests {
         // and the serial placement's peak is never above the overlapped one
         let over = SchedulePlan::from_placement(
             vec![OptimizationSet::none(); cfg.layers],
-            vec![CkptMode::Overlapped, CkptMode::None],
+            vec![Residency::Checkpoint(CkptStyle::Overlapped), Residency::Resident],
             true,
         );
         assert!(
@@ -1139,7 +1328,7 @@ mod tests {
         let cfg = tiny();
         let plan = SchedulePlan::from_placement(
             vec![OptimizationSet::none(); cfg.layers],
-            vec![CkptMode::Overlapped; cfg.layers],
+            vec![Residency::Checkpoint(CkptStyle::Overlapped); cfg.layers],
             true,
         );
         let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
@@ -1154,6 +1343,83 @@ mod tests {
             .rposition(|e| e.kind == EventKind::Backward && e.segment == Segment::Encoder(1))
             .unwrap();
         assert!(enc0_rfwd > last_enc1_bwd);
+    }
+
+    #[test]
+    fn offload_stores_free_at_completion_and_loads_meet_their_deadline() {
+        let cfg = tiny();
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); cfg.layers],
+            vec![Residency::Offload; cfg.layers],
+            true,
+        );
+        let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+        let stores: Vec<usize> = (0..s.events.len())
+            .filter(|&i| s.events[i].kind == EventKind::Store)
+            .collect();
+        let loads: Vec<usize> = (0..s.events.len())
+            .filter(|&i| s.events[i].kind == EventKind::Load)
+            .collect();
+        assert_eq!(stores.len(), cfg.layers);
+        assert_eq!(loads.len(), cfg.layers);
+        let shipped = |seg: Segment, ids: &[u32]| -> u64 {
+            assert!(!ids.is_empty(), "{seg:?}: empty transfer");
+            ids.iter().map(|&id| s.tensors[id as usize].item_bytes).sum()
+        };
+        for &i in &stores {
+            let e = &s.events[i];
+            // a DMA holds no device memory of its own and does no
+            // compute-lane work; its frees are the whole inventory the
+            // segment's forward retained (frees at store completion)
+            assert_eq!(e.lane, Lane::HostLink);
+            assert!(e.allocs.is_empty() && e.inplace.is_empty());
+            assert_eq!(e.census, Census::ZERO);
+            let fwd_persistent: Vec<u32> = s
+                .events
+                .iter()
+                .filter(|x| x.kind == EventKind::Forward && x.segment == e.segment)
+                .flat_map(|x| x.allocs.iter().copied())
+                .collect();
+            assert_eq!(e.frees, fwd_persistent, "{:?}", e.segment);
+        }
+        for (&i, &j) in loads.iter().zip(&stores) {
+            let e = &s.events[i];
+            assert_eq!(e.lane, Lane::HostLink);
+            assert!(e.frees.is_empty() && e.inplace.is_empty());
+            // the load's tape position is its completion deadline:
+            // immediately before its own segment's first backward op
+            let own_bwd = s
+                .events
+                .iter()
+                .position(|x| x.kind == EventKind::Backward && x.segment == e.segment)
+                .unwrap();
+            assert_eq!(i + 1, own_bwd, "{:?}", e.segment);
+            // round trip: the load re-materializes exactly the bytes
+            // the store shipped
+            let st = &s.events[j];
+            assert_eq!(st.segment, e.segment);
+            assert_eq!(shipped(e.segment, &st.frees), shipped(e.segment, &e.allocs));
+        }
+        // rewrites compose: the full subset ships strictly fewer bytes
+        // than the baseline inventory
+        let base = lower_step(
+            &cfg,
+            &SchedulePlan::from_placement(
+                vec![OptimizationSet::none(); cfg.layers],
+                vec![Residency::Offload; cfg.layers],
+                true,
+            ),
+            Lowering::for_model(&cfg),
+        );
+        let total_shipped = |sched: &StepSchedule| -> u64 {
+            sched
+                .events
+                .iter()
+                .filter(|e| e.kind == EventKind::Store)
+                .flat_map(|e| e.frees.iter().map(|&id| sched.tensors[id as usize].item_bytes))
+                .sum()
+        };
+        assert!(total_shipped(&s) < total_shipped(&base));
     }
 
     #[test]
@@ -1229,12 +1495,17 @@ mod tests {
     fn prefetch_invariant_holds_across_all_mixed_placements() {
         // ISSUE 6 satellite: the one-segment-deep prefetch check is a
         // real (release-mode) assert now. Exhaustively lower every
-        // 3^4 per-layer arm combination on the 4-layer model: each one
+        // 4^4 per-layer arm combination on the 4-layer model: each one
         // must lower cleanly, keep at most one recomputed inventory in
         // flight, and place every prefetch-lane event after the
         // turnaround and before its own segment's backward.
         let cfg = ModelConfig::bert_mini();
-        let arms = [CkptMode::None, CkptMode::Overlapped, CkptMode::Serial];
+        let arms = [
+            Residency::Resident,
+            Residency::Checkpoint(CkptStyle::Overlapped),
+            Residency::Checkpoint(CkptStyle::Serial),
+            Residency::Offload,
+        ];
         for a in arms {
             for bm in arms {
                 for c in arms {
@@ -1305,7 +1576,12 @@ mod tests {
                 OptimizationSet::none(),
                 OptimizationSet::only("gelu").unwrap(),
             ],
-            vec![CkptMode::Serial, CkptMode::None, CkptMode::Overlapped, CkptMode::None],
+            vec![
+                Residency::Checkpoint(CkptStyle::Serial),
+                Residency::Resident,
+                Residency::Checkpoint(CkptStyle::Overlapped),
+                Residency::Offload,
+            ],
             true,
         );
         let s = lower_step(&cfg, &plan, Lowering::for_model(&cfg));

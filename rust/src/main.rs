@@ -491,10 +491,12 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
         let d = tempo::autotempo::placement_search(&cfg, gpu, mode, target);
         println!("placement search: {}", d.rationale);
         println!(
-            "  plan: rewrites on {}/{} layers, {} checkpointed, max batch {}, {:.2} seq/s at B={}",
+            "  plan: rewrites on {}/{} layers, {} checkpointed, {} offloaded, max batch {}, \
+             {:.2} seq/s at B={}",
             d.plan.applied_layers(),
             cfg.layers,
             d.plan.checkpointed_layers(),
+            d.plan.offloaded_layers(),
             d.max_batch,
             d.throughput,
             d.eval_batch,
@@ -532,8 +534,8 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
 }
 
 /// `tempo placement` — the joint-placement search's debugging surface:
-/// run the (rewrite ∪ checkpoint) placement search and print the
-/// chosen per-layer plan as a table, with the capacity model's
+/// run the (rewrite ∪ checkpoint ∪ offload) placement search and print
+/// the chosen per-layer plan as a table, with the capacity model's
 /// breakdown of the winning plan.
 fn cmd_placement(args: &Args) -> tempo::Result<()> {
     use tempo::autotempo::{placement_search, PlacementMode};
@@ -566,18 +568,21 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
             gpu.name(),
             mode.name()
         ),
-        &["layer", "rewrites", "checkpoint"],
+        &["layer", "rewrites", "residency"],
     );
     for l in 0..cfg.layers {
-        let ckpt = d.plan.ckpt_mode(l);
+        let res = d.plan.residency(l);
         t.row(vec![
             format!("enc{l}"),
-            if ckpt.is_checkpoint() {
+            // checkpointed layers replay the unoptimized block, so
+            // their rewrite column shows the recompute; offloaded
+            // layers run their rewrites (they shrink the shipped bytes)
+            if res.is_checkpoint() {
                 "(recomputed)".into()
             } else {
                 d.plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none).label()
             },
-            ckpt.label().to_string(),
+            res.label().to_string(),
         ]);
     }
     // breakdown of the winning plan at its max batch (B=1 when nothing fits)
@@ -598,6 +603,7 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
             ("eval_batch", Json::num(d.eval_batch as f64)),
             ("throughput_seqs_per_s", Json::num(d.throughput)),
             ("checkpointed_layers", Json::num(d.plan.checkpointed_layers() as f64)),
+            ("offloaded_layers", Json::num(d.plan.offloaded_layers() as f64)),
             ("applied_layers", Json::num(d.plan.applied_layers() as f64)),
             ("candidates", Json::num(d.stats.enumerated as f64)),
             ("pruned_dominated", Json::num(d.stats.pruned as f64)),
@@ -858,12 +864,13 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
             batch,
             plan.label()
         ),
-        &["#", "ev", "segment", "op", "alloc MB", "free MB", "live MB", ""],
+        &["#", "ev", "lane", "segment", "op", "alloc MB", "free MB", "live MB", ""],
     );
     for (i, (e, p)) in schedule.events.iter().zip(&tl.points).enumerate() {
         t.row(vec![
             i.to_string(),
             e.kind.label().to_string(),
+            e.lane.label().to_string(),
             e.segment.label(),
             e.name.to_string(),
             mb(p.alloc_bytes),
@@ -914,6 +921,8 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
             fields.push(("comm_total_s", Json::num(lt.comm_total)));
             fields.push(("comm_exposed_s", Json::num(lt.comm_exposed)));
             fields.push(("hidden_recompute_s", Json::num(lt.hidden_recompute)));
+            fields.push(("host_total_s", Json::num(lt.host_total)));
+            fields.push(("host_exposed_s", Json::num(lt.host_exposed)));
         }
         fields.push(("table", t.to_json()));
         let doc = Json::obj(fields);
@@ -982,6 +991,15 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
                 gpu.name(),
                 spec.devices,
                 lt.step * 1e3
+            );
+        }
+        if lt.host_total > 0.0 {
+            println!(
+                "host lane on {}: {:.2} ms of offload DMA per step over the host link, \
+                 {:.2} ms exposed beyond the covering compute windows",
+                gpu.name(),
+                lt.host_total * 1e3,
+                lt.host_exposed * 1e3,
             );
         }
     }

@@ -24,6 +24,6 @@ mod throughput;
 pub use ops::{plan_census, step_census, OpCensus};
 pub use roofline::{
     plan_lane_times, plan_step_time, step_time, utilization, validate_env_knobs, LaneTimes,
-    OVERLAP_EFF,
+    KNOBS, OVERLAP_EFF,
 };
 pub use throughput::{plan_throughput_at, throughput_at, throughput_at_max_batch, ThroughputPoint};

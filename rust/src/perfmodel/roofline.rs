@@ -22,11 +22,23 @@
 //!   step always pays at least its tail; larger batches grow the lags
 //!   and amortize the rest — the paper's §4.2 argument for why bigger
 //!   batches win on the PCIe rig.
+//! * **Host lane** — L2L offload traffic
+//!   ([`crate::graph::LaneProfile::stores`]/`loads`) over
+//!   [`crate::config::GpuSpec::host_link_bw`]. A store's deadline is
+//!   the turnaround (its bytes must be off-device before the backward
+//!   needs them gone), so store exposure is a carrying-lag fold over
+//!   the forward: `lag ← max(0, lag + dᵢ − coverᵢ)`, paid once at the
+//!   turnaround. A load's deadline is its own tape position (right
+//!   before the layer's backward), so each load pays its own tail
+//!   `max(0, dᵢ − coverᵢ)` — the DMA runs under the covering backward
+//!   window and only the unhidden remainder lengthens the step.
 //!
 //! Setting `TEMPO_AR_EXPOSE` opts back into the legacy scalar-exposure
-//! model (a fixed fraction of `2·grad_bytes/bw`, no overlap credit) for
-//! calibration A/B sweeps. Both knobs are parsed once and malformed
-//! values are a hard error (see [`validate_env_knobs`]).
+//! model (a fixed fraction of `2·grad_bytes/bw`, no overlap credit,
+//! host lane silent) for calibration A/B sweeps; `TEMPO_HOST_BW`
+//! overrides the rig's host-link bandwidth. All knobs live in
+//! [`KNOBS`], are parsed once, and malformed values are a hard error
+//! (see [`validate_env_knobs`]).
 
 use std::sync::OnceLock;
 
@@ -34,6 +46,18 @@ use crate::config::{GpuSpec, ModelConfig, Technique};
 use crate::graph::{schedule_summary, Census, SchedulePlan};
 
 use super::ops::{plan_census, OpCensus};
+
+/// `TEMPO_UTIL_K`: utilization half-saturation override (tokens).
+const KNOB_UTIL_K: &str = "TEMPO_UTIL_K";
+/// `TEMPO_AR_EXPOSE`: legacy scalar-exposure escape hatch (fraction).
+const KNOB_AR_EXPOSE: &str = "TEMPO_AR_EXPOSE";
+/// `TEMPO_HOST_BW`: host-link bandwidth override (bytes/s).
+const KNOB_HOST_BW: &str = "TEMPO_HOST_BW";
+
+/// The calibration env knobs, in one place: [`validate_env_knobs`] and
+/// the `OnceLock` getters iterate/name this same list, so a knob cannot
+/// be validated under one name and parsed under another.
+pub const KNOBS: [&str; 3] = [KNOB_UTIL_K, KNOB_AR_EXPOSE, KNOB_HOST_BW];
 
 /// Parse an optional f64 env knob once; malformed values are a hard
 /// error (panic with the knob's name — [`validate_env_knobs`] turns the
@@ -53,24 +77,31 @@ fn parse_knob(name: &'static str) -> Option<f64> {
 /// `TEMPO_UTIL_K` (half-saturation override), parsed once per process.
 fn util_k_base() -> f64 {
     static K: OnceLock<f64> = OnceLock::new();
-    *K.get_or_init(|| parse_knob("TEMPO_UTIL_K").unwrap_or(K_TOKENS_DEFAULT))
+    *K.get_or_init(|| parse_knob(KNOB_UTIL_K).unwrap_or(K_TOKENS_DEFAULT))
 }
 
 /// `TEMPO_AR_EXPOSE` (legacy scalar-exposure escape hatch), parsed once
 /// per process. `None` = unset = the lane-aware exposure fold.
 fn legacy_exposure() -> Option<f64> {
     static E: OnceLock<Option<f64>> = OnceLock::new();
-    *E.get_or_init(|| parse_knob("TEMPO_AR_EXPOSE"))
+    *E.get_or_init(|| parse_knob(KNOB_AR_EXPOSE))
 }
 
-/// Validate the calibration env knobs (`TEMPO_UTIL_K`,
-/// `TEMPO_AR_EXPOSE`) without touching the process-wide caches: a
-/// malformed value (`TEMPO_UTIL_K=abc`) returns `Err` so `main` can
-/// fail at startup with a clean diagnostic instead of a mid-sweep
-/// panic. Library callers that skip this check hit the same condition
-/// as a panic at first use — never a silent fallback to the default.
+/// `TEMPO_HOST_BW` (host-link bandwidth override, bytes/s), parsed once
+/// per process. `None` = unset = the rig's `host_link_bw`.
+fn host_bw_override() -> Option<f64> {
+    static H: OnceLock<Option<f64>> = OnceLock::new();
+    *H.get_or_init(|| parse_knob(KNOB_HOST_BW))
+}
+
+/// Validate the calibration env knobs ([`KNOBS`]) without touching the
+/// process-wide caches: a malformed value (`TEMPO_UTIL_K=abc`) returns
+/// `Err` so `main` can fail at startup with a clean diagnostic instead
+/// of a mid-sweep panic. Library callers that skip this check hit the
+/// same condition as a panic at first use — never a silent fallback to
+/// the default.
 pub fn validate_env_knobs() -> crate::Result<()> {
-    for name in ["TEMPO_UTIL_K", "TEMPO_AR_EXPOSE"] {
+    for name in KNOBS {
         if let Ok(v) = std::env::var(name) {
             if !matches!(v.parse::<f64>(), Ok(x) if x.is_finite()) {
                 return Err(crate::Error::Invalid(format!(
@@ -116,8 +147,9 @@ pub const K_TOKENS_DEFAULT: f64 = 60.0;
 pub const OVERLAP_EFF: f64 = 0.25;
 
 /// Lane-priced timing of one training step (seconds). The fields are
-/// the decomposition `step = compute + comm_exposed`; `hidden_recompute`
-/// and `comm_total − comm_exposed` are the concurrency wins the
+/// the decomposition `step = compute + comm_exposed + host_exposed`;
+/// `hidden_recompute`, `comm_total − comm_exposed` and
+/// `host_total − host_exposed` are the concurrency wins the
 /// single-lane model could not see.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LaneTimes {
@@ -137,7 +169,16 @@ pub struct LaneTimes {
     /// compute — what the step actually waits on. In
     /// `[0, comm_total]`, monotone in `allreduce_bw`⁻¹.
     pub comm_exposed: f64,
-    /// End-to-end step seconds (`compute + comm_exposed`).
+    /// Total host-link DMA seconds (every offload store and load over
+    /// `host_link_bw`). Zero on offload-free plans.
+    pub host_total: f64,
+    /// Host-link seconds *not* hidden under the covering compute
+    /// windows — the carrying store lag at the turnaround plus each
+    /// load's unhidden tail. In `[0, host_total]`; exactly zero as
+    /// `host_link_bw → ∞`.
+    pub host_exposed: f64,
+    /// End-to-end step seconds (`compute + comm_exposed +
+    /// host_exposed`).
     pub step: f64,
 }
 
@@ -197,6 +238,8 @@ pub fn plan_lane_times(
             hidden_recompute: 0.0,
             comm_total,
             comm_exposed,
+            host_total: 0.0,
+            host_exposed: 0.0,
             step: compute + comm_exposed,
         };
     }
@@ -227,12 +270,38 @@ pub fn plan_lane_times(
         _ => (0.0, 0.0),
     };
 
+    // host lane: offload stores/loads over the (per-device) host link.
+    // Stores share one deadline — the turnaround — so their exposure is
+    // a carrying lag the covering forward windows drain; each load's
+    // deadline is its own tape position, so its unhidden tail is paid
+    // per window. Offload-free plans have empty transfer lists and land
+    // on exactly (0.0, 0.0).
+    let host_bw = host_bw_override().unwrap_or(spec.host_link_bw);
+    let mut host_total = 0.0f64;
+    let mut store_lag = 0.0f64;
+    for t in &summary.lanes.stores {
+        let d = t.bytes as f64 * b / host_bw;
+        let c = census_seconds(t.cover.scale(b), spec, util);
+        host_total += d;
+        store_lag = (store_lag + d - c).max(0.0);
+    }
+    let mut load_exposed = 0.0f64;
+    for t in &summary.lanes.loads {
+        let d = t.bytes as f64 * b / host_bw;
+        let c = census_seconds(t.cover.scale(b), spec, util);
+        host_total += d;
+        load_exposed += (d - c).max(0.0);
+    }
+    let host_exposed = store_lag + load_exposed;
+
     LaneTimes {
         compute,
         hidden_recompute: hidden_s,
         comm_total,
         comm_exposed,
-        step: compute + comm_exposed,
+        host_total,
+        host_exposed,
+        step: compute + comm_exposed + host_exposed,
     }
 }
 
@@ -261,7 +330,7 @@ pub fn plan_step_time(cfg: &ModelConfig, plan: &SchedulePlan, spec: &GpuSpec, ba
 mod tests {
     use super::*;
     use crate::config::{Gpu, ModelConfig};
-    use crate::graph::CkptMode;
+    use crate::graph::{CkptStyle, Residency};
 
     #[test]
     fn utilization_monotone_saturating() {
@@ -338,9 +407,11 @@ mod tests {
         let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
         for gpu in Gpu::all() {
             let lt = plan_lane_times(&cfg, &plan, &gpu.spec(), 4);
-            assert_eq!(lt.step, lt.compute + lt.comm_exposed, "{}", gpu.name());
+            assert_eq!(lt.step, lt.compute + lt.comm_exposed + lt.host_exposed, "{}", gpu.name());
             assert!(lt.comm_exposed >= 0.0 && lt.comm_exposed <= lt.comm_total, "{}", gpu.name());
             assert_eq!(lt.hidden_recompute, 0.0, "no prefetches in a plain plan");
+            assert_eq!(lt.host_total, 0.0, "no offload arms in a plain plan");
+            assert_eq!(lt.host_exposed, 0.0, "no offload arms in a plain plan");
         }
         // the single-GPU box has an empty comm lane
         let solo = plan_lane_times(&cfg, &plan, &Gpu::A100.spec(), 4);
@@ -386,11 +457,11 @@ mod tests {
             assert!(t_over.step < t_serial.step, "{}", gpu.name());
         }
         // bottom-c mixed placements diverge the same way
-        let mut ckpt = vec![CkptMode::None; cfg.layers];
-        ckpt[0] = CkptMode::Overlapped;
+        let mut residency = vec![Residency::Resident; cfg.layers];
+        residency[0] = Residency::Checkpoint(CkptStyle::Overlapped);
         let over = SchedulePlan::from_placement(
             vec![crate::config::OptimizationSet::full(); cfg.layers],
-            ckpt,
+            residency,
             true,
         );
         let serial = over.clone().serial();
@@ -398,5 +469,26 @@ mod tests {
         assert!(
             plan_step_time(&cfg, &over, &spec, 4) < plan_step_time(&cfg, &serial, &spec, 4)
         );
+    }
+
+    #[test]
+    fn offload_exposure_is_bounded_and_the_transfer_total_is_physical() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let n = cfg.layers;
+        let plan = SchedulePlan::from_placement(
+            vec![crate::config::OptimizationSet::none(); n],
+            vec![Residency::Offload; n],
+            true,
+        );
+        let spec = Gpu::Rtx2080Ti.spec();
+        let lt = plan_lane_times(&cfg, &plan, &spec, 4);
+        assert!(lt.host_total > 0.0);
+        assert!(lt.host_exposed >= 0.0 && lt.host_exposed <= lt.host_total);
+        assert_eq!(lt.step, lt.compute + lt.comm_exposed + lt.host_exposed);
+        // the total is the shipped bytes over the link, out and back
+        let summary = schedule_summary(&cfg, &plan);
+        let shipped: u64 = summary.lanes.stores.iter().map(|t| t.bytes).sum();
+        let expect = 2.0 * shipped as f64 * 4.0 / spec.host_link_bw;
+        assert!((lt.host_total - expect).abs() < 1e-12 * expect.max(1.0));
     }
 }

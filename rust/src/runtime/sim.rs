@@ -86,16 +86,20 @@ impl SimBackend {
 
     /// Peak live bytes of one training step under an arbitrary
     /// execution-schedule plan (e.g. a joint placement chosen by
-    /// `autotempo::placement_search`) at the artifact's batch size —
-    /// the same liveness-timeline fold the capacity model reports.
+    /// `autotempo::placement_search`, including per-layer
+    /// checkpoint/offload residency arms) at the artifact's batch size
+    /// — the same liveness-timeline fold the capacity model reports.
+    /// Offloaded layers free their inventory at store completion, so
+    /// their retained bytes never reach this peak.
     pub fn modeled_memory_bytes_for_plan(&self, artifact: &Artifact, plan: &SchedulePlan) -> u64 {
         let cfg = model_config(&artifact.manifest);
         graph::schedule_summary(&cfg, plan).peak_bytes(artifact.manifest.batch_size as u64)
     }
 
     /// Modeled step latency under an arbitrary execution-schedule plan
-    /// at the artifact's batch size — the roofline over the plan's own
-    /// schedule census (mirrors [`Backend::modeled_step_time`], which
+    /// at the artifact's batch size — the lane-aware roofline over the
+    /// plan's own schedule census, including any exposed host-link
+    /// offload tail (mirrors [`Backend::modeled_step_time`], which
     /// prices the technique-induced plan).
     pub fn modeled_step_time_for_plan(
         &self,

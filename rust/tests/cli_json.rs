@@ -67,18 +67,43 @@ fn schedule_json_round_trips_and_matches_memmodel() {
 
     // table round-trip, with exactly one peak-marked event row
     let table = Table::from_json(doc.req("table").unwrap()).unwrap();
-    assert_eq!(table.headers.len(), 8);
+    assert_eq!(table.headers.len(), 9);
     let marked: Vec<usize> = table
         .rows
         .iter()
         .enumerate()
-        .filter(|(_, r)| r[7] == "<- peak")
+        .filter(|(_, r)| r[8] == "<- peak")
         .map(|(i, _)| i)
         .collect();
     assert_eq!(marked.len(), 1);
     assert_eq!(marked[0], doc.req("peak_event").unwrap().as_usize().unwrap());
     let reparsed = Json::parse(&table.to_json().pretty()).unwrap();
     assert_eq!(Table::from_json(&reparsed).unwrap().rows, table.rows);
+
+    // the lane column round-trips through Lane::label(): every row
+    // carries one of the three canonical tags, and an overlapped
+    // checkpoint timeline uses both device lanes
+    let lane_col = table.headers.iter().position(|h| h == "lane").expect("lane header");
+    assert_eq!(lane_col, 2);
+    for r in &table.rows {
+        assert!(
+            ["compute", "prefetch", "host"].contains(&r[lane_col].as_str()),
+            "unknown lane tag {:?}",
+            r[lane_col]
+        );
+    }
+    assert!(table.rows.iter().any(|r| r[lane_col] == "prefetch"));
+}
+
+#[test]
+fn schedule_json_reports_the_host_lane() {
+    // the JSON document always carries the host-lane seconds; the CLI's
+    // technique plans are offload-free, so both must be exactly zero
+    let text = run(&["schedule", "bert-tiny", "--json", "--batch", "4"]);
+    let doc = Json::parse(&text).expect("schedule --json emits one JSON document");
+    // offload-free plans price a zero host lane
+    assert_eq!(doc.req("host_total_s").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(doc.req("host_exposed_s").unwrap().as_f64().unwrap(), 0.0);
 }
 
 #[test]

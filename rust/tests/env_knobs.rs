@@ -1,6 +1,7 @@
-//! Environment-knob contract (DESIGN.md §Lanes): `TEMPO_UTIL_K` and
-//! `TEMPO_AR_EXPOSE` are parsed **once per process** (`OnceLock`), a
-//! malformed value is a startup error rather than a per-call panic,
+//! Environment-knob contract (DESIGN.md §Lanes): `TEMPO_UTIL_K`,
+//! `TEMPO_AR_EXPOSE` and `TEMPO_HOST_BW` are parsed **once per
+//! process** (`OnceLock`), a malformed value is a startup error
+//! rather than a per-call panic,
 //! and `TEMPO_AR_EXPOSE` reproduces the legacy latency-blind pricing
 //! exactly.
 //!
@@ -58,13 +59,19 @@ fn knobs_parse_once_and_legacy_exposure_reprices_the_old_model() {
 
 fn tempo_cmd() -> Command {
     let mut c = Command::new(env!("CARGO_BIN_EXE_tempo"));
-    c.env_remove("TEMPO_UTIL_K").env_remove("TEMPO_AR_EXPOSE");
+    c.env_remove("TEMPO_UTIL_K")
+        .env_remove("TEMPO_AR_EXPOSE")
+        .env_remove("TEMPO_HOST_BW");
     c
 }
 
 #[test]
 fn malformed_knob_is_a_startup_error() {
-    for (knob, value) in [("TEMPO_UTIL_K", "abc"), ("TEMPO_AR_EXPOSE", "0.3.5")] {
+    for (knob, value) in [
+        ("TEMPO_UTIL_K", "abc"),
+        ("TEMPO_AR_EXPOSE", "0.3.5"),
+        ("TEMPO_HOST_BW", "fast"),
+    ] {
         let out = tempo_cmd()
             .args(["max-batch", "--model", "bert-tiny"])
             .env(knob, value)

@@ -9,7 +9,7 @@
 
 use tempo::autotempo::{placement_search, PlacementMode};
 use tempo::config::{Gpu, ModelConfig, Technique};
-use tempo::graph::{schedule_summary, CkptMode};
+use tempo::graph::{schedule_summary, CkptStyle, Residency};
 use tempo::memmodel::max_batch;
 use tempo::perfmodel::{plan_lane_times, plan_throughput_at};
 
@@ -32,16 +32,17 @@ fn search_picks_an_overlapped_arm_the_latency_blind_fold_rejected() {
     let step = ((hi - lo) / 12).max(1);
     let found = (lo..=hi).step_by(step).find_map(|target| {
         let d = placement_search(&cfg, gpu, PlacementMode::Joint, Some(target));
-        (d.max_batch >= target && d.plan.ckpt.iter().any(|m| *m == CkptMode::Overlapped))
+        (d.max_batch >= target
+            && d.plan.residency.iter().any(|m| *m == Residency::Checkpoint(CkptStyle::Overlapped)))
             .then_some(d)
     });
     let d = found.expect("no target in the checkpoint-only range selected an Overlapped arm");
 
     // its Serial twin: same rewrites, same checkpointed layers
     let mut twin = d.plan.clone();
-    for m in twin.ckpt.iter_mut() {
-        if *m == CkptMode::Overlapped {
-            *m = CkptMode::Serial;
+    for m in twin.residency.iter_mut() {
+        if *m == Residency::Checkpoint(CkptStyle::Overlapped) {
+            *m = Residency::Checkpoint(CkptStyle::Serial);
         }
     }
 
@@ -80,15 +81,18 @@ fn search_picks_an_overlapped_arm_the_latency_blind_fold_rejected() {
 }
 
 #[test]
-fn capacity_queries_still_prefer_the_serial_arm() {
+fn capacity_queries_never_pay_prefetch_co_residency() {
     // the flip is pricing-driven, not unconditional: with no target the
-    // objective is max batch, where Serial's lower peak wins — the
-    // lane-aware prune keeps both arms alive precisely so each
-    // objective can pick its own winner
+    // objective is max batch, where lower peaks win (Serial's
+    // min(head, inventory) divergence, and now Offload's
+    // free-at-store-completion inventory) — the lane-aware prune keeps
+    // every arm alive precisely so each objective can pick its own
+    // winner, and an Overlapped arm's prefetch co-residency can never
+    // be part of a capacity winner
     let cfg = ModelConfig::bert_large().with_seq_len(512);
     let d = placement_search(&cfg, Gpu::Rtx2080Ti, PlacementMode::Joint, None);
     assert!(
-        d.plan.ckpt.iter().all(|m| *m != CkptMode::Overlapped),
+        d.plan.residency.iter().all(|m| *m != Residency::Checkpoint(CkptStyle::Overlapped)),
         "capacity mode picked an overlapped arm: {}",
         d.rationale
     );

@@ -11,16 +11,23 @@
 //!    order, so the pruned search and the exhaustive (`prune: false`)
 //!    search reach the *same* decision. Pinned exhaustively on the
 //!    4-layer `bert-mini`.
-//! 3. **The serial-vs-overlapped divergence flows through the search**
-//!    — `tests/schedule_equivalence.rs` pins that serial checkpointing
-//!    peaks exactly `min(head, inventory)` below the overlapped
-//!    schedule; the search sees the same delta, so a memory-bound
-//!    capacity query picks the all-serial placement and its peak
-//!    undercuts the overlapped uniform plan by exactly that amount.
+//! 3. **The offload arm wins memory-bound capacity queries** — host
+//!    offload retains no per-layer activation inventory on the device
+//!    (stores free at completion, loads land just-in-time before each
+//!    layer's backward), so its peak undercuts even serial
+//!    checkpointing's stored-input floor. On the paper's memory-bound
+//!    flagship (bert-large @ S=512 on the 11 GB card) the joint search
+//!    must report a strictly higher max batch than the best
+//!    rewrite+checkpoint plan — the ISSUE 7 acceptance pin.
+//! 4. **The serial-vs-overlapped divergence flows through the plan
+//!    axis** — `tests/schedule_equivalence.rs` pins that serial
+//!    checkpointing peaks exactly `min(head, inventory)` below the
+//!    overlapped schedule; the same delta shows through the uniform
+//!    plans the search enumerates.
 
 use tempo::autotempo::{placement_search, placement_search_with, LayerPlan, PlacementMode};
 use tempo::config::{Gpu, ModelConfig, OptimizationSet};
-use tempo::graph::{encoder_summary, head_summary, CkptMode};
+use tempo::graph::{encoder_summary, head_summary, CkptStyle, Residency};
 use tempo::memmodel::{max_batch, max_batch_for_plan};
 
 fn presets() -> Vec<ModelConfig> {
@@ -120,49 +127,57 @@ fn dominance_pruning_is_lossless_on_the_small_model() {
 }
 
 #[test]
-fn memory_bound_capacity_query_picks_the_serial_placement() {
+fn memory_bound_capacity_query_is_won_by_an_offload_arm() {
     // bert-large @ S=512 on the 11 GB card is the paper's memory-bound
-    // flagship: stored-input-only retention wins, and the serial arm's
-    // lower peak beats the overlapped arm (equal census, no modeled
-    // latency credit for the prefetch)
+    // flagship. Serial checkpointing still retains each layer's stored
+    // input on the device; offload ships even that over the host link
+    // and frees it at store completion, so the offload arm's max batch
+    // strictly exceeds the best rewrite+checkpoint plan's — the ISSUE 7
+    // acceptance criterion.
     let cfg = ModelConfig::bert_large().with_seq_len(512);
-    let d = placement_search(&cfg, Gpu::Rtx2080Ti, PlacementMode::Joint, None);
-    assert_eq!(
-        d.plan,
-        LayerPlan::uniform_checkpoint(cfg.layers, CkptMode::Serial),
-        "{}",
+    let gpu = Gpu::Rtx2080Ti;
+    let d = placement_search(&cfg, gpu, PlacementMode::Joint, None);
+    assert!(
+        d.plan.residency.iter().any(|m| *m == Residency::Offload),
+        "capacity winner carries no offload arm: {}",
         d.rationale
     );
 
-    // ≥ both uniform checkpoint modes, and ≥ every technique
-    let serial = LayerPlan::uniform_checkpoint(cfg.layers, CkptMode::Serial);
-    let over = LayerPlan::uniform_checkpoint(cfg.layers, CkptMode::Overlapped);
-    let b_serial =
-        max_batch_for_plan(&cfg, &serial.schedule_plan(), Gpu::Rtx2080Ti).max_batch;
-    let b_over = max_batch_for_plan(&cfg, &over.schedule_plan(), Gpu::Rtx2080Ti).max_batch;
-    assert_eq!(d.max_batch, b_serial);
-    assert!(b_serial >= b_over);
+    // strictly above the best checkpoint-only uniform plan (either style)
+    let serial = LayerPlan::uniform_checkpoint(cfg.layers, CkptStyle::Serial);
+    let over = LayerPlan::uniform_checkpoint(cfg.layers, CkptStyle::Overlapped);
+    let b_serial = max_batch_for_plan(&cfg, &serial.schedule_plan(), gpu).max_batch;
+    let b_over = max_batch_for_plan(&cfg, &over.schedule_plan(), gpu).max_batch;
+    assert!(
+        d.max_batch > b_serial.max(b_over),
+        "offload {} !> checkpoint uniform {} / {}  ({})",
+        d.max_batch,
+        b_serial,
+        b_over,
+        d.rationale
+    );
+    // ... and ≥ every single-technique plan
     for t in tempo::config::Technique::all() {
-        assert!(d.max_batch >= max_batch(&cfg, t, Gpu::Rtx2080Ti).max_batch, "{t:?}");
+        assert!(d.max_batch >= max_batch(&cfg, t, gpu).max_batch, "{t:?}");
     }
 }
 
 #[test]
-fn serial_divergence_flows_through_the_search_path() {
-    // the chosen all-serial plan undercuts the overlapped uniform plan
+fn serial_divergence_flows_through_the_plan_axis() {
+    // the all-serial uniform plan undercuts the overlapped uniform plan
     // by exactly min(head bytes, block inventory) — the enumerated
-    // divergence of tests/schedule_equivalence.rs, now surfaced by the
-    // search instead of a hand-built plan
+    // divergence of tests/schedule_equivalence.rs, surfaced through the
+    // same LayerPlan constructors the search enumerates
     let cfg = ModelConfig::bert_large().with_seq_len(512);
-    let d = placement_search(&cfg, Gpu::Rtx2080Ti, PlacementMode::Joint, None);
-    let over = LayerPlan::uniform_checkpoint(cfg.layers, CkptMode::Overlapped);
+    let serial = LayerPlan::uniform_checkpoint(cfg.layers, CkptStyle::Serial);
+    let over = LayerPlan::uniform_checkpoint(cfg.layers, CkptStyle::Overlapped);
     let none = OptimizationSet::none();
     for batch in [1usize, 4, 32] {
         let b = batch as u64;
         let inventory = encoder_summary(&cfg, none).total_bytes(b);
         let head = head_summary(&cfg, none, true).total_bytes(b);
         assert_eq!(
-            over.total_bytes(&cfg, batch) - d.plan.total_bytes(&cfg, batch),
+            over.total_bytes(&cfg, batch) - serial.total_bytes(&cfg, batch),
             head.min(inventory),
             "B={batch}"
         );

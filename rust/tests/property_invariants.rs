@@ -6,7 +6,7 @@
 
 use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
 use tempo::data::{Corpus, CorpusConfig, MlmBatcher, MlmConfig};
-use tempo::graph::{schedule_summary, SchedulePlan};
+use tempo::graph::{schedule_summary, CkptStyle, Residency, SchedulePlan};
 use tempo::memmodel::{layer_activation_bytes, max_batch, ModelFootprint};
 use tempo::perfmodel::{plan_lane_times, step_time};
 use tempo::tensor::Rng;
@@ -254,7 +254,11 @@ fn prop_exposure_bounded_by_collective_total() {
             lt.comm_exposed,
             lt.comm_total
         );
-        assert_eq!(lt.step, lt.compute + lt.comm_exposed, "case {i}: lanes must sum to the step");
+        assert_eq!(
+            lt.step,
+            lt.compute + lt.comm_exposed + lt.host_exposed,
+            "case {i}: lanes must sum to the step"
+        );
         assert!(lt.hidden_recompute >= 0.0, "case {i}");
         let spec = gpu.spec();
         if spec.allreduce_bw.is_none() || spec.devices == 1 {
@@ -320,6 +324,140 @@ fn single_device_lane_times_are_the_pre_lane_compute_timeline() {
                     assert_eq!(l1.compute, ln.compute, "{ctx}: rig width leaked into compute");
                     assert_eq!(l1.hidden_recompute, ln.hidden_recompute, "{ctx}");
                     assert!(ln.step >= l1.step, "{ctx}: adding devices made the step faster");
+                }
+            }
+        }
+    }
+}
+
+/// A uniform-residency plan with no rewrites on any layer.
+fn residency_plan(cfg: &ModelConfig, residency: Vec<Residency>) -> SchedulePlan {
+    SchedulePlan::from_placement(vec![OptimizationSet::none(); cfg.layers], residency, true)
+}
+
+#[test]
+fn prop_offload_peak_never_above_serial_checkpoint() {
+    // serial checkpointing still retains each layer's stored input on
+    // the device; offload frees even that at store completion and its
+    // loads land in-place right before each layer's backward, so at
+    // equal batch the all-offload timeline can never peak above the
+    // all-serial one
+    let presets = [
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large().with_seq_len(512),
+        ModelConfig::gpt2(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+    ];
+    let check = |cfg: &ModelConfig, b: u64| {
+        let n = cfg.layers;
+        let off = residency_plan(cfg, vec![Residency::Offload; n]);
+        let ser = residency_plan(cfg, vec![Residency::Checkpoint(CkptStyle::Serial); n]);
+        let p_off = schedule_summary(cfg, &off).peak_bytes(b);
+        let p_ser = schedule_summary(cfg, &ser).peak_bytes(b);
+        assert!(p_off <= p_ser, "{} B={b}: offload {p_off} > serial {p_ser}", cfg.name);
+    };
+    for cfg in &presets {
+        for b in [1u64, 4, 32] {
+            check(cfg, b);
+        }
+    }
+    cases(40, 11, |rng, _| {
+        let cfg = random_config(rng);
+        check(&cfg, rng.range(1, 17) as u64);
+    });
+}
+
+#[test]
+fn prop_offload_peak_monotone_in_offloaded_layers() {
+    // offloading one more bottom layer only removes retained inventory
+    // from the device timeline (the load is charged in place, where the
+    // layer's own backward transient already lives), so the peak is
+    // monotone non-increasing in the number of offloaded layers
+    let presets = [ModelConfig::bert_mini(), ModelConfig::bert_base(), ModelConfig::bert_tiny()];
+    for cfg in &presets {
+        let n = cfg.layers;
+        for b in [1u64, 4, 32] {
+            let mut prev = u64::MAX;
+            for c in 0..=n {
+                let mut residency = vec![Residency::Resident; n];
+                for arm in residency.iter_mut().take(c) {
+                    *arm = Residency::Offload;
+                }
+                let peak = schedule_summary(cfg, &residency_plan(cfg, residency)).peak_bytes(b);
+                assert!(
+                    peak <= prev,
+                    "{} B={b}: offloading layer {c} raised the peak {prev} -> {peak}",
+                    cfg.name
+                );
+                prev = peak;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_infinite_host_link_converges_to_no_offload_compute() {
+    // as the host link speeds up, every transfer window's exposure
+    // max(0, d - cover) collapses to zero, and the offload plan's step
+    // converges to its resident twin's pure compute time (same census,
+    // no recompute, no retained-inventory difference in *time*)
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let n = cfg.layers;
+    let off = residency_plan(&cfg, vec![Residency::Offload; n]);
+    let res = residency_plan(&cfg, vec![Residency::Resident; n]);
+    let mut spec = Gpu::Rtx2080Ti.spec().with_devices(1);
+    spec.host_link_bw = 1.0e30;
+    for b in [1usize, 4, 32] {
+        let lt_off = plan_lane_times(&cfg, &off, &spec, b);
+        let lt_res = plan_lane_times(&cfg, &res, &spec, b);
+        assert!(lt_off.host_total > 0.0, "B={b}: offload plan must ship bytes");
+        assert!(lt_off.host_total < 1.0e-12, "B={b}: infinite link still takes time");
+        assert!(
+            lt_off.host_exposed <= lt_off.host_total,
+            "B={b}: exposed beyond the transfer total"
+        );
+        assert_eq!(lt_res.step, lt_res.compute, "B={b}: solo resident step is pure compute");
+        let diff = (lt_off.step - lt_res.compute).abs();
+        assert!(
+            diff <= 1.0e-9 * lt_res.compute,
+            "B={b}: offload step {} did not converge to compute {}",
+            lt_off.step,
+            lt_res.compute
+        );
+    }
+}
+
+#[test]
+fn prop_offload_free_plans_price_a_zero_host_lane() {
+    // the residency refactor is invisible to every plan that does not
+    // offload: the host lane prices to exactly 0.0 and the step
+    // decomposition collapses to the pre-refactor two-lane form
+    // (bit-identity against the PR 6 fold is pinned in
+    // tests/residency_equivalence.rs)
+    let presets = [
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large().with_seq_len(512),
+        ModelConfig::gpt2(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+    ];
+    for cfg in &presets {
+        let n = cfg.layers;
+        let mut plans: Vec<SchedulePlan> = Technique::all()
+            .iter()
+            .map(|&t| SchedulePlan::for_technique(cfg, t, true))
+            .collect();
+        plans.push(residency_plan(cfg, vec![Residency::Checkpoint(CkptStyle::Serial); n]));
+        for plan in &plans {
+            assert!(!plan.any_offload());
+            for b in [1usize, 4, 32] {
+                for gpu in Gpu::all() {
+                    let lt = plan_lane_times(cfg, plan, &gpu.spec(), b);
+                    let ctx = format!("{} B={b} {}", cfg.name, gpu.name());
+                    assert_eq!(lt.host_total, 0.0, "{ctx}");
+                    assert_eq!(lt.host_exposed, 0.0, "{ctx}");
+                    assert_eq!(lt.step, lt.compute + lt.comm_exposed, "{ctx}");
                 }
             }
         }

@@ -1,0 +1,156 @@
+//! ISSUE 7 tentpole pin: the `CkptMode → Residency` refactor is
+//! **invisible** to every offload-free plan. This file embeds the PR 6
+//! `plan_lane_times` fold verbatim as a golden oracle — same
+//! expressions, same association order, so equality below is float
+//! *bit*-identity, not tolerance — and checks every offload-free plan
+//! family the search can produce against it across presets × rigs ×
+//! batches. A plan that offloads nothing must price exactly as it did
+//! before the host lane existed, and its timeline peak must be the
+//! same schedule the pre-refactor lowering produced.
+//!
+//! (The style of `tests/schedule_equivalence.rs`: an independently
+//! written model of the old behavior, not a snapshot of numbers.)
+
+use tempo::config::{Gpu, GpuSpec, ModelConfig, OptimizationSet, Technique};
+use tempo::graph::{schedule_summary, Census, CkptStyle, Residency, SchedulePlan};
+use tempo::perfmodel::{plan_census, plan_lane_times, utilization, OpCensus, OVERLAP_EFF};
+
+/// PR 6 compute-lane core: seconds of a batch-scaled census.
+fn census_seconds(c: Census, spec: &GpuSpec, util: f64) -> f64 {
+    c.matmul_flops / (spec.peak_matmul_flops * util)
+        + c.vector_flops / (spec.peak_vector_flops * 0.6)
+        + c.vector_bytes / (spec.bandwidth * 0.75)
+}
+
+/// PR 6 full-step census fold (matmul + vector + state streams).
+fn opcensus_seconds(census: &OpCensus, spec: &GpuSpec, util: f64) -> f64 {
+    let t_matmul = census.matmul_flops / (spec.peak_matmul_flops * util);
+    let t_vector = census.vector_flops / (spec.peak_vector_flops * 0.6)
+        + census.vector_bytes / (spec.bandwidth * 0.75);
+    let t_state = census.state_bytes / (spec.bandwidth * 0.75);
+    t_matmul + t_vector + t_state
+}
+
+/// The PR 6 lane fold, verbatim: compute lane with the prefetch-hidden
+/// credit, bucketed ring all-reduce with the carrying exposure fold,
+/// and nothing else — the host lane did not exist.
+/// Returns `(compute, hidden_recompute, comm_total, comm_exposed, step)`.
+fn pr6_lane_times(
+    cfg: &ModelConfig,
+    plan: &SchedulePlan,
+    spec: &GpuSpec,
+    batch: usize,
+) -> (f64, f64, f64, f64, f64) {
+    let b = batch as f64;
+    let tokens = b * cfg.seq_len as f64;
+    let util = utilization(spec, tokens);
+    let total = plan_census(cfg, plan, batch);
+    let total_s = opcensus_seconds(&total, spec, util);
+    let t_fixed = 0.7e-3 + cfg.layers as f64 * 60.0e-6;
+
+    let summary = schedule_summary(cfg, plan);
+    let hidden_s = OVERLAP_EFF * census_seconds(summary.lanes.hidden.scale(b), spec, util);
+    let compute = total_s - hidden_s + t_fixed;
+
+    let (comm_total, comm_exposed) = match spec.allreduce_bw {
+        Some(bw) if spec.devices > 1 => {
+            let ring = 2.0 * (spec.devices as f64 - 1.0) / spec.devices as f64;
+            let durs: Vec<f64> =
+                summary.lanes.buckets.iter().map(|bk| ring * bk.bytes as f64 / bw).collect();
+            let total_comm: f64 = durs.iter().sum();
+            let mut exposed = 0.0f64;
+            let mut remaining = total_comm;
+            for (bk, d) in summary.lanes.buckets.iter().zip(&durs) {
+                let lag = census_seconds(bk.tail.scale(b), spec, util);
+                exposed = exposed.max(remaining - lag);
+                remaining -= d;
+            }
+            (total_comm, exposed.max(0.0))
+        }
+        _ => (0.0, 0.0),
+    };
+
+    (compute, hidden_s, comm_total, comm_exposed, compute + comm_exposed)
+}
+
+fn presets() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large().with_seq_len(512),
+        ModelConfig::gpt2(),
+    ]
+}
+
+/// Every offload-free plan family: the three technique plans, their
+/// serial twins, uniform rewrite plans, and mixed per-layer placements
+/// with both checkpoint styles.
+fn offload_free_plans(cfg: &ModelConfig) -> Vec<SchedulePlan> {
+    let n = cfg.layers;
+    let mut plans = Vec::new();
+    for t in Technique::all() {
+        let p = SchedulePlan::for_technique(cfg, t, true);
+        plans.push(p.clone().serial());
+        plans.push(p);
+    }
+    plans.push(SchedulePlan::uniform(cfg, OptimizationSet::none(), true));
+    // mixed placement: rewrites everywhere, bottom half checkpointed in
+    // alternating styles — the shape the joint search emits
+    let mut residency = vec![Residency::Resident; n];
+    for (l, arm) in residency.iter_mut().enumerate().take(n / 2 + 1) {
+        *arm = if l % 2 == 0 {
+            Residency::Checkpoint(CkptStyle::Overlapped)
+        } else {
+            Residency::Checkpoint(CkptStyle::Serial)
+        };
+    }
+    plans.push(SchedulePlan::from_placement(
+        vec![OptimizationSet::full(); n],
+        residency,
+        true,
+    ));
+    plans
+}
+
+#[test]
+fn offload_free_plans_price_bit_identically_to_the_pr6_fold() {
+    for cfg in presets() {
+        for plan in offload_free_plans(&cfg) {
+            assert!(!plan.any_offload(), "{}: fixture leaked an offload arm", cfg.name);
+            for gpu in Gpu::all() {
+                let spec = gpu.spec();
+                for b in [1usize, 4, 32] {
+                    let lt = plan_lane_times(&cfg, &plan, &spec, b);
+                    let (compute, hidden, comm_total, comm_exposed, step) =
+                        pr6_lane_times(&cfg, &plan, &spec, b);
+                    let ctx =
+                        format!("{} {} B={b} plan={}", cfg.name, gpu.name(), plan.label());
+                    assert_eq!(lt.compute, compute, "{ctx}");
+                    assert_eq!(lt.hidden_recompute, hidden, "{ctx}");
+                    assert_eq!(lt.comm_total, comm_total, "{ctx}");
+                    assert_eq!(lt.comm_exposed, comm_exposed, "{ctx}");
+                    assert_eq!(lt.host_total, 0.0, "{ctx}");
+                    assert_eq!(lt.host_exposed, 0.0, "{ctx}");
+                    assert_eq!(lt.step, step, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn offload_free_timelines_have_no_host_lane_events() {
+    // the lowering side of the same pin: a plan with no Offload arm
+    // produces a schedule whose host-lane transfer lists are empty, so
+    // the peak, the high-water event and every liveness fold are the
+    // PR 6 schedule's — there is no event the old lowering would not
+    // have emitted
+    for cfg in presets() {
+        for plan in offload_free_plans(&cfg) {
+            let s = schedule_summary(&cfg, &plan);
+            assert!(s.lanes.stores.is_empty(), "{} {}", cfg.name, plan.label());
+            assert!(s.lanes.loads.is_empty(), "{} {}", cfg.name, plan.label());
+        }
+    }
+}

@@ -13,7 +13,7 @@
 //!
 //! Exactly ONE intentional divergence exists, and it is opt-in:
 //!
-//! * **Serial checkpointing** (`CkptMode::Serial` via
+//! * **Serial checkpointing** (`Residency::Checkpoint(CkptStyle::Serial)` via
 //!   `SchedulePlan::serial`, PyTorch-style `torch.utils.checkpoint`:
 //!   no re-forward prefetch).
 //!   The static sum charged the head activations AND one block's
@@ -240,7 +240,7 @@ fn techniques_map_onto_the_subset_grid() {
 // ---------------------------------------------------------------------------
 // The enumerated divergence list. One entry:
 //
-//   1. Serial checkpointing (opt-in `CkptMode::Serial`): the static
+//   1. Serial checkpointing (opt-in `CkptStyle::Serial`): the static
 //      sum over-counted the true peak by min(head, block inventory),
 //      because without the re-forward prefetch the head activations
 //      and the recompute live set are never simultaneously alive —
