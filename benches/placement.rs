@@ -1,21 +1,27 @@
-//! Placement-search benches: the joint (rewrite ∪ checkpoint) search
-//! cost next to the schedule layer it folds.
+//! Placement-search benches: the joint (rewrite ∪ checkpoint ∪
+//! offload) search cost next to the schedule layer it folds.
 //!
-//! The joint search enumerates ~1.1k canonical candidate plans on
+//! The joint search enumerates ~1.5k canonical candidate plans on
 //! BERT-LARGE, summarizes each once (memoized per distinct plan —
 //! DESIGN.md §Schedule), dominance-prunes before pricing, and
 //! binary-searches max batch only for the survivors. This bench gives
 //! each stage a trajectory: the memoized steady-state search (what a
 //! sweep pays per cell), the same search with pruning disabled (the
-//! cost the dominance rule removes), and the uniform-family baseline.
-//! CI uploads the JSON as `BENCH_placement.json` and gates the
-//! steady-state joint search against `BENCH_schedule.json`'s
-//! lower-cold case so a memoization or pruning regression fails the
-//! leg rather than silently multiplying sweep cost.
+//! cost the dominance rule removes), the uniform-family baseline, the
+//! cold-cache search (what the first sweep cell pays), and the
+//! incremental-pricing pair — one plan priced by the full
+//! `lower_step` fold vs composed from the segment-chunk cache
+//! (DESIGN.md §Schedule "Segment summaries"). CI uploads the JSON as
+//! `BENCH_placement.json` (cache hit/miss counters annotated onto the
+//! steady-state row) and gates the steady-state joint search against
+//! `BENCH_schedule.json`'s lower-cold case AND the full-fold/composed
+//! ratio at ≥ 10× so a memoization, chunking or pruning regression
+//! fails the leg rather than silently multiplying sweep cost.
 
-use tempo::autotempo::{placement_search, placement_search_with, PlacementMode};
-use tempo::config::{Gpu, ModelConfig};
-use tempo::graph;
+use tempo::autotempo::{placement_search, placement_search_jobs, placement_search_with, PlacementMode};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet};
+use tempo::coordinator::ExperimentEngine;
+use tempo::graph::{self, CkptStyle, Lowering, Residency, SchedulePlan};
 use tempo::util::BenchHarness;
 
 fn main() {
@@ -24,7 +30,7 @@ fn main() {
 
     // steady state: summaries memoized after the warmup iterations —
     // the per-cell cost a placement sweep actually pays
-    h.bench("placement/joint-search/bert-large-s512-2080ti", || {
+    let steady = h.bench("placement/joint-search/bert-large-s512-2080ti", || {
         std::hint::black_box(placement_search(
             &large512,
             Gpu::Rtx2080Ti,
@@ -65,6 +71,61 @@ fn main() {
         ));
     });
 
+    // cold caches: what the FIRST sweep cell pays — every donor plan
+    // re-lowered, every composition re-folded
+    h.bench("placement/joint-search-cold/bert-large-s512-2080ti", || {
+        graph::clear_plan_caches();
+        std::hint::black_box(placement_search(
+            &large512,
+            Gpu::Rtx2080Ti,
+            PlacementMode::Joint,
+            None,
+        ));
+    });
+
+    // the incremental-pricing pair, on one representative mixed
+    // placement (offload the bottom third, checkpoint the middle,
+    // rewrites everywhere): the full event-tape fold vs the composed
+    // segment-chunk fold that prices the same plan bit-identically
+    let mixed = {
+        let n = large512.layers;
+        let mut residency = vec![Residency::Resident; n];
+        for (l, r) in residency.iter_mut().enumerate() {
+            if l < n / 3 {
+                *r = Residency::Offload;
+            } else if l < 2 * n / 3 {
+                *r = Residency::Checkpoint(CkptStyle::Overlapped);
+            }
+        }
+        SchedulePlan::from_placement(vec![OptimizationSet::full(); n], residency, true)
+    };
+    let fullfold = h.bench("placement/price-fullfold/bert-large-s512", || {
+        std::hint::black_box(
+            graph::lower_step(&large512, &mixed, Lowering::for_model(&large512)).summarize_step(),
+        );
+    });
+    // re-price through the warm chunk cache: drop only the whole-plan
+    // summary each iteration, so every pass pays the O(layers)
+    // recombine — the cost of re-pricing an arm after a mutation
+    let composed = h.bench("placement/price-composed/bert-large-s512", || {
+        graph::clear_schedule_cache();
+        std::hint::black_box(graph::schedule_summary(&large512, &mixed));
+    });
+
+    // the same steady-state search across 4 workers (bit-identical
+    // winner — tests/incremental_pricing.rs pins it)
+    let engine4 = ExperimentEngine::new(4);
+    let par4 = h.bench("placement/joint-search-j4/bert-large-s512-2080ti", || {
+        std::hint::black_box(placement_search_jobs(
+            &large512,
+            Gpu::Rtx2080Ti,
+            PlacementMode::Joint,
+            None,
+            true,
+            &engine4,
+        ));
+    });
+
     let d = placement_search(&large512, Gpu::Rtx2080Ti, PlacementMode::Joint, None);
     println!(
         "joint search funnel: {} candidates, {} pruned, {} priced; schedule cache holds {} plans",
@@ -73,6 +134,27 @@ fn main() {
         d.stats.priced,
         graph::schedule_cache_len()
     );
+    let speedup = fullfold.mean.as_secs_f64() / composed.mean.as_secs_f64();
+    println!(
+        "incremental pricing: full fold {:.3?} vs composed {:.3?} — {speedup:.1}x (CI gates >= 10x)",
+        fullfold.mean, composed.mean
+    );
+    println!(
+        "parallel search: jobs-1 {:.3?} vs jobs-4 {:.3?} — {:.2}x (informational; \
+         scaling depends on the runner's cores)",
+        steady.mean,
+        par4.mean,
+        steady.mean.as_secs_f64() / par4.mean.as_secs_f64()
+    );
+
+    // cache counters ride on the steady-state row in the JSON artifact
+    for (name, s) in graph::cache_stats() {
+        let row = "placement/joint-search/bert-large-s512-2080ti";
+        h.annotate(row, &format!("cache_{name}_entries"), s.entries as f64);
+        h.annotate(row, &format!("cache_{name}_hits"), s.hits as f64);
+        h.annotate(row, &format!("cache_{name}_misses"), s.misses as f64);
+        h.annotate(row, &format!("cache_{name}_approx_bytes"), s.approx_bytes as f64);
+    }
     h.write_csv("bench_results/bench_placement.csv").unwrap();
     h.write_json("bench_results/BENCH_placement.json").unwrap();
 }

@@ -29,6 +29,7 @@ mod placement;
 mod search;
 
 pub use placement::{
-    placement_search, placement_search_with, PlacementDecision, PlacementMode, PruneStats,
+    placement_search, placement_search_jobs, placement_search_with, PlacementDecision,
+    PlacementMode, PruneStats,
 };
 pub use search::{coarse_pass, fine_search, plan_throughput, AutoTempoDecision, LayerPlan};

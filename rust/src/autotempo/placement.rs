@@ -103,9 +103,11 @@
 //! land on offload placements — at the priced cost of the unhidden
 //! host-transfer tail.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::config::{Gpu, ModelConfig, OptimizationSet};
+use crate::coordinator::ExperimentEngine;
 use crate::graph::{self, Census, CkptStyle, Residency, ScheduleSummary};
 use crate::memmodel::max_batch_for_plan;
 use crate::perfmodel::{plan_throughput_at, OVERLAP_EFF};
@@ -275,11 +277,53 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
 /// and per host-link transfer its `(bytes, cover)` pair (stores then
 /// loads, in tape order) — smaller payloads under larger covering
 /// windows expose less host time at every batch and bandwidth.
+/// Keys hold *interned* slices: many candidates share identical
+/// readiness vectors and host-transfer shapes (every offload-free plan
+/// has the empty host slice; same-census twins share buckets), so the
+/// per-search [`Interner`] hands out one shared allocation per
+/// distinct vector instead of cloning a fresh `Vec` into every key.
+/// `dominates` then short-circuits shared slices by pointer before
+/// reading a single element.
 struct DomKey {
     peak_item: u64,
     eff: Census,
-    pre_readiness: Vec<Census>,
-    host: Vec<(u64, Census)>,
+    pre_readiness: Arc<[Census]>,
+    host: Arc<[(u64, Census)]>,
+}
+
+/// Per-search deduplication of dominance-key vectors. [`Census`] holds
+/// `f64`s (no `Eq`/`Hash`), so vectors are keyed by their exact bit
+/// patterns — the folds that produce them are bit-deterministic, which
+/// makes bit-equality the right identity here.
+#[derive(Default)]
+struct Interner {
+    readiness: HashMap<Vec<u64>, Arc<[Census]>>,
+    host: HashMap<Vec<u64>, Arc<[(u64, Census)]>>,
+}
+
+fn census_bits(c: &Census, out: &mut Vec<u64>) {
+    out.push(c.matmul_flops.to_bits());
+    out.push(c.vector_flops.to_bits());
+    out.push(c.vector_bytes.to_bits());
+}
+
+impl Interner {
+    fn readiness(&mut self, v: Vec<Census>) -> Arc<[Census]> {
+        let mut bits = Vec::with_capacity(3 * v.len());
+        for c in &v {
+            census_bits(c, &mut bits);
+        }
+        Arc::clone(self.readiness.entry(bits).or_insert_with(|| v.into()))
+    }
+
+    fn host(&mut self, v: Vec<(u64, Census)>) -> Arc<[(u64, Census)]> {
+        let mut bits = Vec::with_capacity(4 * v.len());
+        for (b, c) in &v {
+            bits.push(*b);
+            census_bits(c, &mut bits);
+        }
+        Arc::clone(self.host.entry(bits).or_insert_with(|| v.into()))
+    }
 }
 
 /// Componentwise census difference. Exact in f64: every component is
@@ -300,7 +344,7 @@ fn census_le(a: &Census, b: &Census) -> bool {
         && a.vector_bytes <= b.vector_bytes
 }
 
-fn dom_key(s: &ScheduleSummary) -> DomKey {
+fn dom_key(s: &ScheduleSummary, interner: &mut Interner) -> DomKey {
     let eff = census_sub(s.census, s.lanes.hidden.scale(OVERLAP_EFF));
     let pre_readiness =
         s.lanes.buckets.iter().map(|bk| census_sub(eff, bk.tail)).collect();
@@ -311,7 +355,12 @@ fn dom_key(s: &ScheduleSummary) -> DomKey {
         .chain(s.lanes.loads.iter())
         .map(|t| (t.bytes, t.cover))
         .collect();
-    DomKey { peak_item: s.peak_item_bytes, eff, pre_readiness, host }
+    DomKey {
+        peak_item: s.peak_item_bytes,
+        eff,
+        pre_readiness: interner.readiness(pre_readiness),
+        host: interner.host(host),
+    }
 }
 
 /// `true` when `a` dominates `b`: peak ≤, effective census ≤
@@ -324,15 +373,19 @@ fn dom_key(s: &ScheduleSummary) -> DomKey {
 /// Plans with differently-shaped host lanes (different transfer
 /// counts) are incomparable by construction.
 fn dominates(a: &DomKey, b: &DomKey) -> bool {
+    // interned slices: pointer equality means element equality, and an
+    // equal vector always satisfies its own componentwise conditions
     a.peak_item <= b.peak_item
         && census_le(&a.eff, &b.eff)
         && a.pre_readiness.len() == b.pre_readiness.len()
-        && a.pre_readiness.iter().zip(&b.pre_readiness).all(|(x, y)| census_le(x, y))
+        && (Arc::ptr_eq(&a.pre_readiness, &b.pre_readiness)
+            || a.pre_readiness.iter().zip(b.pre_readiness.iter()).all(|(x, y)| census_le(x, y)))
         && a.host.len() == b.host.len()
-        && a.host
-            .iter()
-            .zip(&b.host)
-            .all(|((ab, ac), (bb, bc))| ab <= bb && census_le(bc, ac))
+        && (Arc::ptr_eq(&a.host, &b.host)
+            || a.host
+                .iter()
+                .zip(b.host.iter())
+                .all(|((ab, ac), (bb, bc))| ab <= bb && census_le(bc, ac)))
 }
 
 /// Strict version: dominates with at least one strict inequality on
@@ -349,7 +402,8 @@ fn strictly_dominates(a: &DomKey, b: &DomKey) -> bool {
 /// plans are all kept: the selection tie-breaks (fewer checkpoints,
 /// smaller rewrite surface, enumeration order) must see them.
 fn prune_dominated(cands: Vec<Summarized>) -> Vec<Summarized> {
-    let keys: Vec<DomKey> = cands.iter().map(|c| dom_key(&c.summary)).collect();
+    let mut interner = Interner::default();
+    let keys: Vec<DomKey> = cands.iter().map(|c| dom_key(&c.summary, &mut interner)).collect();
     let keep: Vec<bool> = keys
         .iter()
         .map(|q| !keys.iter().any(|p| strictly_dominates(p, q)))
@@ -428,14 +482,38 @@ pub fn placement_search_with(
     target_batch: Option<usize>,
     prune: bool,
 ) -> PlacementDecision {
+    placement_search_jobs(cfg, gpu, mode, target_batch, prune, &ExperimentEngine::serial())
+}
+
+/// [`placement_search_with`] across an [`ExperimentEngine`] worker
+/// pool (`tempo placement --jobs N|auto`). Candidate summarization and
+/// survivor pricing fan out as grid cells with slot-stable collection
+/// (the PR 2 pattern); the dominance prune and the selection fold stay
+/// serial in enumeration order. The winner is **bit-identical** to the
+/// serial search at any job count: every cell is a pure function of
+/// its candidate, the shared summary caches are first-insert-wins (so
+/// worker interleaving never changes a value), and the reduction reads
+/// the slots in enumeration order (`tests/incremental_pricing.rs` pins
+/// jobs-4 ≡ jobs-1).
+pub fn placement_search_jobs(
+    cfg: &ModelConfig,
+    gpu: Gpu,
+    mode: PlacementMode,
+    target_batch: Option<usize>,
+    prune: bool,
+    engine: &ExperimentEngine,
+) -> PlacementDecision {
     let cands = candidates(cfg, mode);
     let enumerated = cands.len();
 
+    let summaries = engine
+        .run_cells(cands.len(), |i| Ok(graph::schedule_summary(cfg, &cands[i].schedule_plan())));
     let summarized: Vec<Summarized> = cands
         .into_iter()
-        .map(|plan| {
-            let summary = graph::schedule_summary(cfg, &plan.schedule_plan());
-            Summarized { plan, summary }
+        .zip(summaries)
+        .map(|(plan, summary)| Summarized {
+            plan,
+            summary: summary.expect("placement summarize cell"),
         })
         .collect();
 
@@ -446,22 +524,27 @@ pub fn placement_search_with(
         priced: survivors.len(),
     };
 
-    let mut best: Option<Scored> = None;
-    for Summarized { plan, summary } in survivors {
-        // one lowered plan per candidate: the max-batch search and the
-        // throughput pricing both hit the summary this plan already
-        // holds (memoized), so this loop is cache lookups + arithmetic
-        let splan = plan.schedule_plan();
+    // price the survivors as cells too: the max-batch search and the
+    // throughput pricing both hit the summary each plan already holds
+    // (memoized), so every cell is cache lookups + arithmetic
+    let priced = engine.run_cells(survivors.len(), |i| {
+        let splan = survivors[i].plan.schedule_plan();
         let fit = max_batch_for_plan(cfg, &splan, gpu);
         let eval_batch = match target_batch {
             Some(t) => t.min(fit.max_batch),
             None => fit.max_batch,
         };
+        Ok((fit.max_batch, eval_batch, plan_throughput_at(cfg, &splan, gpu, eval_batch)))
+    });
+
+    let mut best: Option<Scored> = None;
+    for (Summarized { plan, summary }, cell) in survivors.into_iter().zip(priced) {
+        let (max_batch, eval_batch, throughput) = cell.expect("placement pricing cell");
         let scored = Scored {
             peak_item: summary.peak_item_bytes,
-            max_batch: fit.max_batch,
+            max_batch,
             eval_batch,
-            throughput: plan_throughput_at(cfg, &splan, gpu, eval_batch),
+            throughput,
             ckpt_layers: plan.checkpointed_layers(),
             offload_layers: plan.offloaded_layers(),
             rewrite_surface: plan.rewrite_surface(),
@@ -564,7 +647,9 @@ mod tests {
         let n = cfg.layers;
         let over = LayerPlan::uniform_checkpoint(n, CkptStyle::Overlapped);
         let serial = LayerPlan::uniform_checkpoint(n, CkptStyle::Serial);
-        let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
+        let mut interner = Interner::default();
+        let mut key =
+            |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()), &mut interner);
         let (ko, ks) = (key(&over), key(&serial));
         assert!(ks.peak_item < ko.peak_item, "serial must hold the lower peak");
         assert!(
@@ -598,7 +683,9 @@ mod tests {
         // the bandwidth-dependent exposure decides
         let cfg = ModelConfig::bert_mini();
         let n = cfg.layers;
-        let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
+        let mut interner = Interner::default();
+        let mut key =
+            |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()), &mut interner);
         let off = key(&LayerPlan::uniform_offload(n, OptimizationSet::none()));
         let serial = key(&LayerPlan::uniform_checkpoint(n, CkptStyle::Serial));
         assert_eq!(off.host.len(), 2 * n, "one store + one load per offloaded layer");
@@ -620,10 +707,12 @@ mod tests {
         // all-offload plan strictly reduces every store's payload
         let cfg = ModelConfig::bert_mini();
         let n = cfg.layers;
-        let key = |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()));
+        let mut interner = Interner::default();
+        let mut key =
+            |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()), &mut interner);
         let plain = key(&LayerPlan::uniform_offload(n, OptimizationSet::none()));
         let rewritten = key(&LayerPlan::uniform_offload(n, OptimizationSet::full()));
-        for (i, ((pb, _), (rb, _))) in plain.host.iter().zip(&rewritten.host).enumerate() {
+        for (i, ((pb, _), (rb, _))) in plain.host.iter().zip(rewritten.host.iter()).enumerate() {
             assert!(rb < pb, "transfer {i}: rewritten {rb} !< plain {pb}");
         }
     }

@@ -157,7 +157,10 @@ impl ScheduleSummary {
     }
 }
 
-fn high_water_label(kind: EventKind) -> &'static str {
+/// Breakdown-row label for a high-water event kind. Shared with the
+/// segment composer (`graph::segment`), which must derive the same
+/// label from a chunk-local best event.
+pub(crate) fn high_water_label(kind: EventKind) -> &'static str {
     match kind {
         EventKind::Setup => "model states",
         EventKind::Forward => "fwd transient",
@@ -379,7 +382,8 @@ impl StepSchedule {
 }
 
 /// Componentwise minimum of two censuses (per-resource overlap).
-fn min_census(a: Census, b: Census) -> Census {
+/// Shared with the segment composer's hidden-work recombine.
+pub(crate) fn min_census(a: Census, b: Census) -> Census {
     Census {
         matmul_flops: a.matmul_flops.min(b.matmul_flops),
         vector_flops: a.vector_flops.min(b.vector_flops),

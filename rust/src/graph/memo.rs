@@ -10,12 +10,15 @@
 //! one unit-batch summary prices any batch by multiplication (exact —
 //! all values are integers far below 2⁵³).
 //!
-//! The cache is a process-global `RwLock<HashMap>` shared by all sweep
-//! workers (reads dominate; a miss takes the write lock once). Its size
-//! is bounded by the number of distinct blocks a run prices — sweep
-//! grids, not batches, so a few hundred entries at most.
+//! The cache is a process-global [`BoundedCache`] shared by all sweep
+//! workers (reads dominate; a miss takes the write lock once). Size is
+//! bounded by two-generation rotation — see the type's docs — and the
+//! hit/miss/bytes counters surface via [`block_cache_stats`]
+//! (`tempo placement --stats`, `BENCH_placement.json`).
 
 use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::config::{ModelConfig, OptimizationSet};
@@ -24,6 +27,145 @@ use super::lower::{
     cls_head_block, embedding_block, encoder_block_with, mlm_head_block, BlockSummary, Lowering,
     SegmentCheckpoint,
 };
+
+/// Hit/miss/size counters of one process-global memo cache, as
+/// `tempo placement --stats` and the placement-bench annotations
+/// report them (see [`crate::graph::cache_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Distinct entries currently resident (both generations).
+    pub entries: usize,
+    /// Lookups answered from the cache since process start.
+    pub hits: u64,
+    /// Lookups that missed and had to build (and insert) a fresh value.
+    pub misses: u64,
+    /// Approximate heap footprint of the resident values, in bytes.
+    pub approx_bytes: u64,
+}
+
+struct Generations<K, V> {
+    current: HashMap<K, Arc<V>>,
+    previous: HashMap<K, Arc<V>>,
+}
+
+/// A bounded process-global memo cache with two-generation eviction.
+///
+/// Unbounded `RwLock<HashMap>` memoization was fine while a process
+/// priced one sweep grid, but a long-lived planner (ROADMAP's
+/// "planning as a service") accumulates every distinct plan it ever
+/// saw. This cache keeps at most two generations of `cap` entries:
+/// when the current generation fills, it *becomes* the previous one
+/// (whose entries survive and are promoted back on their next hit)
+/// and the old previous generation is dropped wholesale — O(1)
+/// amortized eviction, no per-entry LRU bookkeeping, and anything
+/// referenced within the last two generations stays resident. Hits
+/// return the shared `Arc`, and a racing build is resolved
+/// first-insert-wins so every caller still shares one value.
+pub(crate) struct BoundedCache<K, V> {
+    gens: RwLock<Generations<K, V>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Eq + Hash, V> BoundedCache<K, V> {
+    pub(crate) fn new(cap: usize) -> Self {
+        BoundedCache {
+            gens: RwLock::new(Generations { current: HashMap::new(), previous: HashMap::new() }),
+            cap: cap.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up; a hit in the previous generation promotes the
+    /// entry back into the current one.
+    pub(crate) fn get(&self, key: &K) -> Option<Arc<V>> {
+        {
+            let g = self.gens.read().expect("memo cache poisoned");
+            if let Some(v) = g.current.get(key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(Arc::clone(v));
+            }
+            if !g.previous.contains_key(key) {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+        // promotion takes the write lock; re-check both generations
+        // under it (a racing promote or rotation may have moved the
+        // entry either way in between)
+        let mut g = self.gens.write().expect("memo cache poisoned");
+        if let Some(v) = g.current.get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Arc::clone(v));
+        }
+        match g.previous.remove_entry(key) {
+            Some((k, v)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let out = Arc::clone(&v);
+                Self::rotate_if_full(&mut g, self.cap);
+                g.current.insert(k, v);
+                Some(out)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert `value` unless a racing worker got there first — the
+    /// first insert wins, and the winning `Arc` is returned either way.
+    pub(crate) fn insert(&self, key: K, value: Arc<V>) -> Arc<V> {
+        let mut g = self.gens.write().expect("memo cache poisoned");
+        if let Some(v) = g.current.get(&key) {
+            return Arc::clone(v);
+        }
+        if let Some((k, v)) = g.previous.remove_entry(&key) {
+            let out = Arc::clone(&v);
+            Self::rotate_if_full(&mut g, self.cap);
+            g.current.insert(k, v);
+            return out;
+        }
+        Self::rotate_if_full(&mut g, self.cap);
+        g.current.insert(key, Arc::clone(&value));
+        value
+    }
+
+    fn rotate_if_full(g: &mut Generations<K, V>, cap: usize) {
+        if g.current.len() >= cap {
+            g.previous = std::mem::take(&mut g.current);
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        let g = self.gens.read().expect("memo cache poisoned");
+        g.current.len() + g.previous.len()
+    }
+
+    /// Drop every entry (the bench cold legs); the hit/miss counters
+    /// keep counting across clears.
+    pub(crate) fn clear(&self) {
+        let mut g = self.gens.write().expect("memo cache poisoned");
+        g.current.clear();
+        g.previous.clear();
+    }
+
+    /// Snapshot the counters, pricing each resident value through
+    /// `bytes_of` — an O(entries) walk, so stats surfaces only.
+    pub(crate) fn stats(&self, bytes_of: impl Fn(&V) -> usize) -> CacheStats {
+        let g = self.gens.read().expect("memo cache poisoned");
+        let approx: usize =
+            g.current.values().chain(g.previous.values()).map(|v| bytes_of(v)).sum();
+        CacheStats {
+            entries: g.current.len() + g.previous.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            approx_bytes: approx as u64,
+        }
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 enum BlockType {
@@ -45,9 +187,14 @@ struct BlockKey {
     opts: OptimizationSet,
 }
 
-fn cache() -> &'static RwLock<HashMap<BlockKey, Arc<BlockSummary>>> {
-    static CACHE: OnceLock<RwLock<HashMap<BlockKey, Arc<BlockSummary>>>> = OnceLock::new();
-    CACHE.get_or_init(|| RwLock::new(HashMap::new()))
+/// Distinct blocks a process realistically prices at once: preset ×
+/// sweep grids land in the low hundreds, so two generations of this
+/// never rotate mid-search.
+const BLOCK_CACHE_CAP: usize = 2048;
+
+fn cache() -> &'static BoundedCache<BlockKey, BlockSummary> {
+    static CACHE: OnceLock<BoundedCache<BlockKey, BlockSummary>> = OnceLock::new();
+    CACHE.get_or_init(|| BoundedCache::new(BLOCK_CACHE_CAP))
 }
 
 fn key_for(block: BlockType, cfg: &ModelConfig, lowering: Lowering, opts: OptimizationSet) -> BlockKey {
@@ -65,8 +212,8 @@ fn key_for(block: BlockType, cfg: &ModelConfig, lowering: Lowering, opts: Optimi
 
 fn summary(block: BlockType, cfg: &ModelConfig, lowering: Lowering, opts: OptimizationSet) -> Arc<BlockSummary> {
     let key = key_for(block, cfg, lowering, opts);
-    if let Some(hit) = cache().read().expect("graph cache poisoned").get(&key) {
-        return Arc::clone(hit);
+    if let Some(hit) = cache().get(&key) {
+        return hit;
     }
     let graph = match block {
         BlockType::Encoder => encoder_block_with(cfg, lowering),
@@ -74,11 +221,7 @@ fn summary(block: BlockType, cfg: &ModelConfig, lowering: Lowering, opts: Optimi
         BlockType::MlmHead => mlm_head_block(cfg),
         BlockType::ClsHead => cls_head_block(cfg),
     };
-    let built = Arc::new(graph.summarize(opts));
-    let mut w = cache().write().expect("graph cache poisoned");
-    // a racing worker may have built the same key; first insert wins so
-    // every caller shares one Arc
-    Arc::clone(w.entry(key).or_insert(built))
+    cache().insert(key, Arc::new(graph.summarize(opts)))
 }
 
 /// Memoized encoder-block summary under the model's default lowering.
@@ -115,7 +258,14 @@ pub fn checkpoint_summary(cfg: &ModelConfig) -> SegmentCheckpoint {
 /// Number of distinct lowered blocks currently cached (bench/test
 /// introspection).
 pub fn cache_len() -> usize {
-    cache().read().expect("graph cache poisoned").len()
+    cache().len()
+}
+
+/// Counters of the block-summary memo cache (`tempo placement
+/// --stats`; a [`BlockSummary`] is plain data, so its footprint is its
+/// struct size).
+pub fn block_cache_stats() -> CacheStats {
+    cache().stats(|_| std::mem::size_of::<BlockSummary>())
 }
 
 #[cfg(test)]
@@ -151,6 +301,40 @@ mod tests {
             let fresh = super::super::lower::encoder_block(&cfg).summarize(opts);
             assert_eq!(*cached, fresh, "{opts:?}");
         }
+    }
+
+    #[test]
+    fn bounded_cache_rotates_generations_and_counts() {
+        let cache: BoundedCache<usize, usize> = BoundedCache::new(2);
+        for k in 0..2 {
+            assert!(cache.get(&k).is_none());
+            cache.insert(k, Arc::new(k));
+        }
+        // current is full: the next fresh insert rotates it out
+        assert!(cache.get(&5).is_none());
+        cache.insert(5, Arc::new(5));
+        assert_eq!(cache.len(), 3, "rotated generation stays resident");
+        // a hit in the previous generation promotes the entry...
+        assert_eq!(*cache.get(&0).unwrap(), 0);
+        // ...so the next rotation drops only what never came back
+        cache.insert(6, Arc::new(6));
+        cache.insert(7, Arc::new(7));
+        assert!(cache.get(&1).is_none(), "two generations without a hit evicts");
+        assert!(cache.get(&0).is_some(), "promoted entry survives the rotation");
+        let stats = cache.stats(|_| 8);
+        assert_eq!(stats.approx_bytes, 8 * stats.entries as u64);
+        assert!(stats.hits >= 2 && stats.misses >= 4, "{stats:?}");
+        cache.clear();
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn first_insert_wins_the_racing_build() {
+        let cache: BoundedCache<u32, u32> = BoundedCache::new(8);
+        let first = cache.insert(1, Arc::new(10));
+        let second = cache.insert(1, Arc::new(99));
+        assert!(Arc::ptr_eq(&first, &second));
+        assert_eq!(*cache.get(&1).unwrap(), 10);
     }
 
     #[test]

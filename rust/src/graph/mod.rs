@@ -50,6 +50,7 @@ mod lower;
 mod memo;
 mod op;
 mod schedule;
+mod segment;
 mod table;
 mod tensor;
 
@@ -58,17 +59,38 @@ pub use lower::{
     BlockGraph, BlockSummary, Lowering, SegmentCheckpoint, Topology,
 };
 pub use memo::{
-    cache_len, checkpoint_summary, embedding_summary, encoder_summary, encoder_summary_with,
-    head_summary,
+    block_cache_stats, cache_len, checkpoint_summary, embedding_summary, encoder_summary,
+    encoder_summary_with, head_summary, CacheStats,
 };
 pub use liveness::{
     CommBucket, HostTransfer, LaneProfile, LivePoint, LivenessTimeline, ScheduleSummary,
 };
 pub use op::{Census, Op, OpKind};
 pub use schedule::{
-    lower_step, schedule_cache_len, schedule_summary, schedule_summary_with, CkptStyle, EventKind,
-    Lane, MemClass, Residency, SchedTensor, ScheduleEvent, SchedulePlan, Segment, StepSchedule,
-    MEM_CLASS_COUNT,
+    clear_schedule_cache, lower_step, schedule_cache_len, schedule_cache_stats, schedule_summary,
+    schedule_summary_with, CkptStyle, EventKind, Lane, MemClass, Residency, SchedTensor,
+    ScheduleEvent, SchedulePlan, Segment, StepSchedule, MEM_CLASS_COUNT,
 };
 pub use table::{block_rows, live_totals, tensor_table, tensor_table_with, ClassTotals, TensorRow};
 pub use tensor::{RetainedTensor, RewriteKind, TensorClass};
+
+/// Hit/miss/size counters of every process-global plan-pricing cache,
+/// in pricing order: `block` (per-block summaries), `schedule`
+/// (whole-plan summaries), `chunk` (per-segment chunk summaries the
+/// compositional pricer folds). Surfaced by `tempo placement --stats`
+/// and annotated into the bench JSON.
+pub fn cache_stats() -> Vec<(&'static str, CacheStats)> {
+    vec![
+        ("block", block_cache_stats()),
+        ("schedule", schedule_cache_stats()),
+        ("chunk", segment::chunk_cache_stats()),
+    ]
+}
+
+/// Drop every cached plan-pricing summary (schedule + chunk caches) —
+/// cold-start benchmarking. Block summaries are left in place: they
+/// belong to the IR layer, not the plan pricer.
+pub fn clear_plan_caches() {
+    clear_schedule_cache();
+    segment::clear_chunk_cache();
+}

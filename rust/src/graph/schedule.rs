@@ -103,12 +103,12 @@
 //! and lowers to the bit-identical pre-lane timeline (same events,
 //! peak and census).
 
-use std::collections::HashMap;
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, OnceLock};
 
 use crate::config::{ModelConfig, OptimizationSet, Technique};
 
-use super::liveness::ScheduleSummary;
+use super::liveness::{CommBucket, HostTransfer, ScheduleSummary};
+use super::memo::{BoundedCache, CacheStats};
 use super::lower::{
     cls_head_block, embedding_block, encoder_block_with, mlm_head_block, BlockGraph, Lowering,
 };
@@ -983,9 +983,14 @@ struct ScheduleKey {
     mlm_head: bool,
 }
 
-fn schedule_cache() -> &'static RwLock<HashMap<ScheduleKey, Arc<ScheduleSummary>>> {
-    static CACHE: OnceLock<RwLock<HashMap<ScheduleKey, Arc<ScheduleSummary>>>> = OnceLock::new();
-    CACHE.get_or_init(|| RwLock::new(HashMap::new()))
+/// Generation-bounded summary cache: placement sweeps touch thousands
+/// of arms, but two retained generations of this size keep every arm
+/// of the active search warm (a BERT-LARGE joint family is ~1.5k).
+const SCHEDULE_CACHE_CAP: usize = 8192;
+
+fn schedule_cache() -> &'static BoundedCache<ScheduleKey, ScheduleSummary> {
+    static CACHE: OnceLock<BoundedCache<ScheduleKey, ScheduleSummary>> = OnceLock::new();
+    CACHE.get_or_init(|| BoundedCache::new(SCHEDULE_CACHE_CAP))
 }
 
 /// Memoized step-schedule summary under the model's default lowering.
@@ -1010,7 +1015,7 @@ pub fn schedule_summary_with(
     let plan_key = match resolved.first().copied() {
         None => PlanKey::Uniform(OptimizationSet::none(), Residency::Resident),
         Some(first) if resolved.iter().all(|p| *p == first) => PlanKey::Uniform(first.0, first.1),
-        _ => PlanKey::PerLayer(resolved),
+        _ => PlanKey::PerLayer(resolved.clone()),
     };
     let key = ScheduleKey {
         hidden: cfg.hidden,
@@ -1026,19 +1031,40 @@ pub fn schedule_summary_with(
         other: plan.other,
         mlm_head: plan.mlm_head,
     };
-    if let Some(hit) = schedule_cache().read().expect("schedule cache poisoned").get(&key) {
-        return Arc::clone(hit);
+    if let Some(hit) = schedule_cache().get(&key) {
+        return hit;
     }
-    let built = Arc::new(lower_step(cfg, plan, lowering).summarize_step());
-    let mut w = schedule_cache().write().expect("schedule cache poisoned");
+    // compose the summary from cached per-chunk summaries — the
+    // donor-sliced fold in `graph::segment`, bit-identical to
+    // `lower_step(cfg, plan, lowering).summarize_step()` (the oracle
+    // `tests/incremental_pricing.rs` pins) at a fraction of the cost
+    let built =
+        Arc::new(super::segment::composed_summary(cfg, &resolved, plan.other, plan.mlm_head, lowering));
     // first insert wins so racing workers share one Arc
-    Arc::clone(w.entry(key).or_insert(built))
+    schedule_cache().insert(key, built)
 }
 
 /// Number of distinct lowered schedules currently cached (bench/test
 /// introspection).
 pub fn schedule_cache_len() -> usize {
-    schedule_cache().read().expect("schedule cache poisoned").len()
+    schedule_cache().len()
+}
+
+/// Hit/miss/size counters of the schedule-summary cache
+/// (`tempo placement --stats`, bench annotations).
+pub fn schedule_cache_stats() -> CacheStats {
+    schedule_cache().stats(|s| {
+        std::mem::size_of::<ScheduleSummary>()
+            + s.lanes.buckets.len() * std::mem::size_of::<CommBucket>()
+            + (s.lanes.stores.len() + s.lanes.loads.len()) * std::mem::size_of::<HostTransfer>()
+    })
+}
+
+/// Drop every cached schedule summary (cold-start benchmarking; the
+/// per-chunk cache is cleared separately via
+/// [`clear_plan_caches`](super::clear_plan_caches)).
+pub fn clear_schedule_cache() {
+    schedule_cache().clear();
 }
 
 #[cfg(test)]

@@ -1,0 +1,761 @@
+//! Compositional plan pricing: per-chunk schedule summaries that
+//! recombine to the exact [`ScheduleSummary`] the full
+//! [`lower_step`] + `summarize_step` fold computes.
+//!
+//! **Why.** `placement_search` prices ~1.5k joint arms on BERT-LARGE,
+//! and neighbouring arms differ in exactly one layer's
+//! `(rewrites, residency)` pair — yet each arm used to pay a full
+//! O(L)-event lowering + liveness fold. This module factors the step
+//! timeline at its natural seams (setup | embedding fwd | one chunk
+//! per encoder layer per phase | head | turnaround | prefetch runs |
+//! backward mirror | optimizer) into [`ChunkSummary`] values that form
+//! a **monoid under concatenation**: each chunk carries its net
+//! per-class live-byte deltas, its first-strict-max prefix peak
+//! *relative to chunk entry* (total, per-class item/fixed snapshots,
+//! event kind and offset), its work census split by lane, and its
+//! host-link payloads. Folding L chunk summaries left-to-right
+//! reproduces the full fold's peak, high-water op, per-class
+//! breakdown, census, and the whole [`LaneProfile`] (prefetch/hidden
+//! pairs, bucket tails as suffix sums at chunk boundaries, store/load
+//! covering windows) — bit-identically, because every census term is
+//! a multiple of ¼ far below 2⁵³ so f64 folds are exact in any order,
+//! and byte accounting is integer arithmetic.
+//!
+//! **What composes and what can't.** A chunk's *contents* depend only
+//! on (model dims, lowering, the layer's own rewrite set, its
+//! residency arm, and for the turnaround/optimizer whether *any*
+//! layer checkpoints) — never on the other layers' arms. What does
+//! depend on the neighbours is the chunk *sequence*: which prefetch
+//! runs exist and whether a checkpointed layer's re-forward is
+//! prefetched or in-place is decided by [`build_pieces`], a pure
+//! replay of `lower_step`'s one-deep pending-prefetch state machine.
+//! So the per-arm work is O(L) cache lookups + an O(L) recombine; the
+//! expensive lowering runs once per *distinct chunk shape*, not per
+//! plan.
+//!
+//! **Memo contract (donor slicing).** Chunks are never synthesized
+//! from scratch: on a cache miss the module lowers a small *donor*
+//! plan (a uniform placement whose timeline exhibits the requested
+//! [`ChunkKind`]) through the real `lower_step`, slices the donor's
+//! event stream at piece boundaries, folds every slice, and inserts
+//! them all into a process-global bounded cache keyed by
+//! (dims, lowering, embedding/head rewrites, head kind, chunk kind).
+//! Equality with the full fold is therefore structural — the chunks
+//! *are* real lowering output — and `tests/incremental_pricing.rs`
+//! plus the in-file tests pin it across presets and random per-layer
+//! mutations. The joint family needs only ~34 donors (one per
+//! distinct uniform arm) to cover all ~1.5k candidates.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::config::{ModelConfig, OptimizationSet};
+
+use super::liveness::{
+    high_water_label, min_census, CommBucket, HostTransfer, LaneProfile, ScheduleSummary,
+};
+use super::lower::Lowering;
+use super::memo::{BoundedCache, CacheStats};
+use super::op::Census;
+use super::schedule::{
+    lower_step, CkptStyle, EventKind, Lane, Residency, SchedTensor, ScheduleEvent, SchedulePlan,
+    Segment, StepSchedule, MEM_CLASS_COUNT,
+};
+
+/// The distinct chunk shapes a step timeline is built from. Two chunks
+/// with the same kind (under the same dims/lowering/other/head) are
+/// byte-identical regardless of which layer index they serve — layer
+/// position enters only through the piece [`Role`], never the summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum ChunkKind {
+    /// The step-setup event (params/grads/optimizer states).
+    Setup,
+    /// Embedding block forward.
+    EmbFwd,
+    /// One resident encoder layer's forward under its rewrite set.
+    LayerFwdPlain(OptimizationSet),
+    /// One checkpointed layer's forward (store input, full inventory,
+    /// discard at exit). Rewrites are ignored by the transform.
+    LayerFwdCkpt,
+    /// One offloaded layer's forward + its store DMA (rewrites shrink
+    /// the shipped bytes).
+    LayerFwdOffload(OptimizationSet),
+    /// Head block forward.
+    HeadFwd,
+    /// The fwd→bwd turnaround; the workspace shape depends on whether
+    /// any layer in the plan checkpoints.
+    Turnaround {
+        /// Whether the plan checkpoints at least one layer.
+        any_ckpt: bool,
+    },
+    /// A hoisted `Overlapped` re-forward run on the prefetch lane.
+    PrefetchRun,
+    /// Head block backward.
+    HeadBwd,
+    /// One resident layer's backward under its rewrite set.
+    LayerBwdPlain(OptimizationSet),
+    /// A checkpointed layer's backward consuming a prefetched
+    /// re-forward (the recompute ran earlier, on the prefetch lane).
+    LayerBwdCkptPrefetched,
+    /// A checkpointed layer's in-place recompute + backward (serial
+    /// style, or an overlapped arm whose upstream neighbour could not
+    /// host the prefetch).
+    LayerBwdCkptInPlace,
+    /// One offloaded layer's load DMA + backward.
+    LayerBwdOffload(OptimizationSet),
+    /// Embedding block backward.
+    EmbBwd,
+    /// The optimizer step (frees the turnaround workspace, whose shape
+    /// depends on `any_ckpt`).
+    Optimizer {
+        /// Whether the plan checkpoints at least one layer.
+        any_ckpt: bool,
+    },
+}
+
+/// Cache key: everything a chunk's contents depend on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ChunkKey {
+    hidden: usize,
+    heads: usize,
+    seq_len: usize,
+    intermediate: usize,
+    vocab: usize,
+    max_position: usize,
+    type_vocab: usize,
+    layers: usize,
+    lowering: Lowering,
+    other: OptimizationSet,
+    mlm_head: bool,
+    kind: ChunkKind,
+}
+
+fn chunk_key(
+    cfg: &ModelConfig,
+    other: OptimizationSet,
+    mlm_head: bool,
+    lowering: Lowering,
+    kind: ChunkKind,
+) -> ChunkKey {
+    ChunkKey {
+        hidden: cfg.hidden,
+        heads: cfg.heads,
+        seq_len: cfg.seq_len,
+        intermediate: cfg.intermediate,
+        vocab: cfg.vocab_size,
+        max_position: cfg.max_position,
+        type_vocab: cfg.type_vocab,
+        layers: cfg.layers,
+        lowering,
+        other,
+        mlm_head,
+        kind,
+    }
+}
+
+/// One chunk's contribution to every fold the full walk computes —
+/// the monoid element. All byte accounting is *relative to chunk
+/// entry* (signed: backward chunks free tensors allocated in earlier
+/// chunks), which is what makes concatenation associative.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ChunkSummary {
+    /// Number of schedule events in the chunk.
+    events: usize,
+    /// Net per-class per-item live-byte delta (allocs − frees).
+    delta_item: [i64; MEM_CLASS_COUNT],
+    /// Net per-class fixed live-byte delta.
+    delta_fixed: [i64; MEM_CLASS_COUNT],
+    /// First-strict-max prefix peak of the per-item instantaneous
+    /// total, relative to chunk entry (can be negative).
+    best_rel_total: i64,
+    /// Chunk-local event index of that peak.
+    best_event: usize,
+    /// Per-class per-item instantaneous vector at the peak (includes
+    /// in-op tensors), relative to chunk entry.
+    best_rel_item: [i64; MEM_CLASS_COUNT],
+    /// Per-class fixed vector at the peak, relative to chunk entry.
+    best_rel_fixed: [i64; MEM_CLASS_COUNT],
+    /// Event kind at the peak (the high-water label source).
+    best_kind: EventKind,
+    /// Work census over all lanes (what `ScheduleSummary::census`
+    /// accumulates).
+    census_total: Census,
+    /// Compute-lane census only (store/load covering windows).
+    census_compute: Census,
+    /// Prefetch-lane census only (hidden-work pairing).
+    census_prefetch: Census,
+    /// Host-link bytes shipped out by this chunk's `Store`s.
+    store_bytes: u64,
+    /// Host-link bytes shipped back by this chunk's `Load`s.
+    load_bytes: u64,
+}
+
+/// Fold one contiguous event slice into its chunk summary. This is
+/// `summarize_step`'s inner loop re-based to the chunk entry, plus the
+/// lane splits `lane_profile` needs.
+fn fold_chunk(tensors: &[SchedTensor], events: &[ScheduleEvent]) -> ChunkSummary {
+    let mut rel_item = [0i64; MEM_CLASS_COUNT];
+    let mut rel_fixed = [0i64; MEM_CLASS_COUNT];
+    let mut have_best = false;
+    let mut best_rel_total = 0i64;
+    let mut best_event = 0usize;
+    let mut best_rel_item = [0i64; MEM_CLASS_COUNT];
+    let mut best_rel_fixed = [0i64; MEM_CLASS_COUNT];
+    let mut best_kind = EventKind::Setup;
+    let mut census_total = Census::ZERO;
+    let mut census_compute = Census::ZERO;
+    let mut census_prefetch = Census::ZERO;
+    let mut store_bytes = 0u64;
+    let mut load_bytes = 0u64;
+    for (i, e) in events.iter().enumerate() {
+        for &id in &e.allocs {
+            let t = &tensors[id as usize];
+            rel_fixed[t.class.index()] += t.fixed_bytes as i64;
+            rel_item[t.class.index()] += t.item_bytes as i64;
+        }
+        let mut inst = rel_item;
+        for &id in &e.inplace {
+            let t = &tensors[id as usize];
+            inst[t.class.index()] += t.item_bytes as i64;
+        }
+        let inst_total: i64 = inst.iter().sum();
+        // first strict max, seeded by the first event (the relative
+        // peak can be negative in backward chunks)
+        if !have_best || inst_total > best_rel_total {
+            have_best = true;
+            best_rel_total = inst_total;
+            best_event = i;
+            best_rel_item = inst;
+            best_rel_fixed = rel_fixed;
+            best_kind = e.kind;
+        }
+        census_total.add(e.census);
+        match e.lane {
+            Lane::Compute => census_compute.add(e.census),
+            Lane::Prefetch => census_prefetch.add(e.census),
+            Lane::HostLink => {}
+        }
+        match e.kind {
+            EventKind::Store => {
+                store_bytes +=
+                    e.frees.iter().map(|&id| tensors[id as usize].item_bytes).sum::<u64>();
+            }
+            EventKind::Load => {
+                load_bytes +=
+                    e.allocs.iter().map(|&id| tensors[id as usize].item_bytes).sum::<u64>();
+            }
+            _ => {}
+        }
+        for &id in &e.frees {
+            let t = &tensors[id as usize];
+            rel_fixed[t.class.index()] -= t.fixed_bytes as i64;
+            rel_item[t.class.index()] -= t.item_bytes as i64;
+        }
+    }
+    assert!(have_best, "a chunk holds at least one event");
+    ChunkSummary {
+        events: events.len(),
+        delta_item: rel_item,
+        delta_fixed: rel_fixed,
+        best_rel_total,
+        best_event,
+        best_rel_item,
+        best_rel_fixed,
+        best_kind,
+        census_total,
+        census_compute,
+        census_prefetch,
+        store_bytes,
+        load_bytes,
+    }
+}
+
+/// Where a chunk sits in the step — the position-dependent half the
+/// summary deliberately does not carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    /// The setup event.
+    Setup,
+    /// Embedding forward.
+    EmbFwd,
+    /// Encoder layer `l` forward.
+    LayerFwd(usize),
+    /// Head forward.
+    HeadFwd,
+    /// The turnaround event.
+    Turnaround,
+    /// Hoisted re-forward for layer `target`.
+    Prefetch {
+        /// The layer whose inventory the run recomputes.
+        target: usize,
+    },
+    /// Head backward.
+    HeadBwd,
+    /// Encoder layer `l` backward (incl. any in-place recompute or
+    /// load DMA).
+    LayerBwd(usize),
+    /// Embedding backward.
+    EmbBwd,
+    /// The optimizer event.
+    Optimizer,
+}
+
+/// One slot of a plan's chunk sequence.
+#[derive(Debug, Clone, Copy)]
+struct Piece {
+    kind: ChunkKind,
+    role: Role,
+}
+
+/// Replay `lower_step`'s structure for a resolved plan: which chunk
+/// kinds appear, in what order, serving which layer. This mirrors the
+/// lowering's one-deep pending-prefetch state machine exactly — an
+/// `Overlapped` layer prefetches under the preceding segment's
+/// backward only when that segment is the head or a resident layer
+/// and no other prefetch is in flight; otherwise it recomputes in
+/// place.
+fn build_pieces(layers: usize, resolved: &[(OptimizationSet, Residency)]) -> Vec<Piece> {
+    debug_assert_eq!(resolved.len(), layers);
+    let opts = |l: usize| resolved[l].0;
+    let mode = |l: usize| resolved[l].1;
+    let any_ckpt = resolved.iter().any(|&(_, r)| r.is_checkpoint());
+
+    let mut pieces = Vec::with_capacity(2 * layers + 8);
+    pieces.push(Piece { kind: ChunkKind::Setup, role: Role::Setup });
+    pieces.push(Piece { kind: ChunkKind::EmbFwd, role: Role::EmbFwd });
+    for l in 0..layers {
+        let kind = match mode(l) {
+            Residency::Checkpoint(_) => ChunkKind::LayerFwdCkpt,
+            Residency::Offload => ChunkKind::LayerFwdOffload(opts(l)),
+            Residency::Resident => ChunkKind::LayerFwdPlain(opts(l)),
+        };
+        pieces.push(Piece { kind, role: Role::LayerFwd(l) });
+    }
+    pieces.push(Piece { kind: ChunkKind::HeadFwd, role: Role::HeadFwd });
+    pieces.push(Piece { kind: ChunkKind::Turnaround { any_ckpt }, role: Role::Turnaround });
+
+    let mut pending: Option<usize> = None;
+    if layers > 0 && mode(layers - 1) == Residency::Checkpoint(CkptStyle::Overlapped) {
+        let top = layers - 1;
+        pieces.push(Piece { kind: ChunkKind::PrefetchRun, role: Role::Prefetch { target: top } });
+        pending = Some(top);
+    }
+    pieces.push(Piece { kind: ChunkKind::HeadBwd, role: Role::HeadBwd });
+    for l in (0..layers).rev() {
+        match mode(l) {
+            Residency::Resident => {
+                if l > 0
+                    && mode(l - 1) == Residency::Checkpoint(CkptStyle::Overlapped)
+                    && pending.is_none()
+                {
+                    pieces.push(Piece {
+                        kind: ChunkKind::PrefetchRun,
+                        role: Role::Prefetch { target: l - 1 },
+                    });
+                    pending = Some(l - 1);
+                }
+                pieces.push(Piece { kind: ChunkKind::LayerBwdPlain(opts(l)), role: Role::LayerBwd(l) });
+            }
+            Residency::Offload => {
+                pieces
+                    .push(Piece { kind: ChunkKind::LayerBwdOffload(opts(l)), role: Role::LayerBwd(l) });
+            }
+            Residency::Checkpoint(_) => {
+                let kind = match pending.take() {
+                    Some(pl) => {
+                        debug_assert_eq!(pl, l, "prefetch must be one segment deep");
+                        ChunkKind::LayerBwdCkptPrefetched
+                    }
+                    None => ChunkKind::LayerBwdCkptInPlace,
+                };
+                pieces.push(Piece { kind, role: Role::LayerBwd(l) });
+            }
+        }
+    }
+    pieces.push(Piece { kind: ChunkKind::EmbBwd, role: Role::EmbBwd });
+    pieces.push(Piece { kind: ChunkKind::Optimizer { any_ckpt }, role: Role::Optimizer });
+    pieces
+}
+
+/// Whether an event belongs to a piece. Adjacent pieces always differ
+/// under this predicate (different segment, or compute vs prefetch
+/// lane), so greedy sequential consumption slices unambiguously.
+fn piece_matches(p: &Piece, e: &ScheduleEvent) -> bool {
+    match p.role {
+        Role::Setup => e.segment == Segment::Setup,
+        Role::EmbFwd | Role::EmbBwd => e.segment == Segment::Embedding,
+        Role::LayerFwd(l) | Role::LayerBwd(l) => e.segment == Segment::Encoder(l),
+        Role::HeadFwd | Role::HeadBwd => e.segment == Segment::Head,
+        Role::Turnaround | Role::Optimizer => e.segment == Segment::Step,
+        Role::Prefetch { target } => {
+            e.lane == Lane::Prefetch && e.segment == Segment::Encoder(target)
+        }
+    }
+}
+
+/// Slice a lowered step into per-piece chunk summaries. Consumes the
+/// event stream greedily piece by piece and asserts full coverage.
+fn slice_step(s: &StepSchedule, pieces: &[Piece]) -> Vec<ChunkSummary> {
+    let mut out = Vec::with_capacity(pieces.len());
+    let mut i = 0usize;
+    for p in pieces {
+        let start = i;
+        while i < s.events.len() && piece_matches(p, &s.events[i]) {
+            i += 1;
+        }
+        assert!(i > start, "empty chunk for {:?}/{:?}", p.kind, p.role);
+        out.push(fold_chunk(&s.tensors, &s.events[start..i]));
+    }
+    assert_eq!(i, s.events.len(), "donor events not fully consumed");
+    out
+}
+
+/// The uniform (rewrites, residency) arm whose lowering exhibits a
+/// given chunk kind.
+fn donor_arm(kind: ChunkKind) -> (OptimizationSet, Residency) {
+    let none = OptimizationSet::none();
+    match kind {
+        ChunkKind::Setup
+        | ChunkKind::EmbFwd
+        | ChunkKind::HeadFwd
+        | ChunkKind::HeadBwd
+        | ChunkKind::EmbBwd
+        | ChunkKind::Turnaround { any_ckpt: false }
+        | ChunkKind::Optimizer { any_ckpt: false } => (none, Residency::Resident),
+        ChunkKind::LayerFwdPlain(s) | ChunkKind::LayerBwdPlain(s) => (s, Residency::Resident),
+        ChunkKind::LayerFwdCkpt
+        | ChunkKind::PrefetchRun
+        | ChunkKind::LayerBwdCkptPrefetched
+        | ChunkKind::Turnaround { any_ckpt: true }
+        | ChunkKind::Optimizer { any_ckpt: true } => {
+            (none, Residency::Checkpoint(CkptStyle::Overlapped))
+        }
+        ChunkKind::LayerBwdCkptInPlace => (none, Residency::Checkpoint(CkptStyle::Serial)),
+        ChunkKind::LayerFwdOffload(s) | ChunkKind::LayerBwdOffload(s) => (s, Residency::Offload),
+    }
+}
+
+const CHUNK_CACHE_CAP: usize = 8192;
+
+fn cache() -> &'static BoundedCache<ChunkKey, ChunkSummary> {
+    static CACHE: OnceLock<BoundedCache<ChunkKey, ChunkSummary>> = OnceLock::new();
+    CACHE.get_or_init(|| BoundedCache::new(CHUNK_CACHE_CAP))
+}
+
+/// Hit/miss/size counters of the chunk cache (`tempo placement
+/// --stats`, bench annotations).
+pub(crate) fn chunk_cache_stats() -> CacheStats {
+    cache().stats(|_| std::mem::size_of::<ChunkSummary>())
+}
+
+/// Drop every cached chunk (cold-start benchmarking).
+pub(crate) fn clear_chunk_cache() {
+    cache().clear();
+}
+
+/// Fetch one chunk, lowering and slicing its donor plan on a miss.
+/// Every chunk the donor exhibits is inserted (first insert wins), so
+/// one donor lowering typically satisfies many future kinds.
+fn chunk(
+    cfg: &ModelConfig,
+    other: OptimizationSet,
+    mlm_head: bool,
+    lowering: Lowering,
+    kind: ChunkKind,
+) -> Arc<ChunkSummary> {
+    let key = chunk_key(cfg, other, mlm_head, lowering, kind);
+    if let Some(hit) = cache().get(&key) {
+        return hit;
+    }
+    let (opts, res) = donor_arm(kind);
+    let donor = SchedulePlan {
+        per_layer: vec![opts; cfg.layers],
+        residency: vec![res; cfg.layers],
+        other,
+        mlm_head,
+    };
+    let donor_resolved: Vec<(OptimizationSet, Residency)> =
+        (0..cfg.layers).map(|_| (opts, res)).collect();
+    let donor_pieces = build_pieces(cfg.layers, &donor_resolved);
+    let lowered = lower_step(cfg, &donor, lowering);
+    let sliced = slice_step(&lowered, &donor_pieces);
+    let mut wanted: Option<Arc<ChunkSummary>> = None;
+    for (p, c) in donor_pieces.iter().zip(sliced) {
+        let k = chunk_key(cfg, other, mlm_head, lowering, p.kind);
+        let shared = cache().insert(k, Arc::new(c));
+        // same-kind chunks are byte-identical wherever they appear
+        debug_assert_eq!(*shared, c, "duplicate chunk diverged: {:?}", p.kind);
+        if p.kind == kind {
+            wanted = Some(shared);
+        }
+    }
+    wanted.expect("donor plan exhibits the requested chunk kind")
+}
+
+/// Price a resolved plan by composing cached chunk summaries —
+/// bit-identical to `lower_step(cfg, plan, lowering).summarize_step()`
+/// (the oracle `tests/incremental_pricing.rs` pins), at O(L) lookups +
+/// one O(L) recombine per call instead of a full lowering.
+pub(crate) fn composed_summary(
+    cfg: &ModelConfig,
+    resolved: &[(OptimizationSet, Residency)],
+    other: OptimizationSet,
+    mlm_head: bool,
+    lowering: Lowering,
+) -> ScheduleSummary {
+    let pieces = build_pieces(cfg.layers, resolved);
+    let chunks: Vec<Arc<ChunkSummary>> =
+        pieces.iter().map(|p| chunk(cfg, other, mlm_head, lowering, p.kind)).collect();
+
+    // --- peak / classes / census / events (summarize_step replay) ---
+    let mut base_item = [0i64; MEM_CLASS_COUNT];
+    let mut base_fixed = [0i64; MEM_CLASS_COUNT];
+    let mut base_total = 0i64;
+    let mut census = Census::ZERO;
+    let mut events = 0usize;
+    // init mirrors summarize_step exactly: zero peak at event 0, whose
+    // kind is the setup event's (never beaten only on an empty model)
+    let mut best_total = 0i64;
+    let mut best_event = 0usize;
+    let mut best_item = [0i64; MEM_CLASS_COUNT];
+    let mut best_fixed = [0i64; MEM_CLASS_COUNT];
+    let mut best_kind = EventKind::Setup;
+    for c in &chunks {
+        // within a chunk the base is constant, so the chunk's local
+        // first-strict-max is the global first-strict-max candidate;
+        // strict `>` across chunks keeps the earliest on ties
+        let cand = base_total + c.best_rel_total;
+        if cand > best_total {
+            best_total = cand;
+            best_event = events + c.best_event;
+            for k in 0..MEM_CLASS_COUNT {
+                best_item[k] = base_item[k] + c.best_rel_item[k];
+                best_fixed[k] = base_fixed[k] + c.best_rel_fixed[k];
+            }
+            best_kind = c.best_kind;
+        }
+        census.add(c.census_total);
+        events += c.events;
+        for k in 0..MEM_CLASS_COUNT {
+            base_item[k] += c.delta_item[k];
+            base_fixed[k] += c.delta_fixed[k];
+        }
+        base_total += c.delta_item.iter().sum::<i64>();
+    }
+    debug_assert!(base_item.iter().all(|&v| v == 0), "activations leak past the step");
+    let to_u64 = |v: [i64; MEM_CLASS_COUNT]| -> [u64; MEM_CLASS_COUNT] {
+        let mut out = [0u64; MEM_CLASS_COUNT];
+        for (o, &x) in out.iter_mut().zip(v.iter()) {
+            debug_assert!(x >= 0, "negative class bytes at the peak");
+            *o = x as u64;
+        }
+        out
+    };
+    let class_fixed = to_u64(best_fixed);
+    let class_item = to_u64(best_item);
+
+    ScheduleSummary {
+        fixed_bytes: class_fixed.iter().sum(),
+        peak_item_bytes: best_total as u64,
+        peak_event: best_event,
+        class_fixed,
+        class_item,
+        high_water: high_water_label(best_kind),
+        census,
+        events,
+        lanes: compose_lanes(cfg, &pieces, &chunks),
+    }
+}
+
+/// Recombine the chunk sequence into the exact [`LaneProfile`] the
+/// full `lane_profile` walk computes.
+fn compose_lanes(
+    cfg: &ModelConfig,
+    pieces: &[Piece],
+    chunks: &[Arc<ChunkSummary>],
+) -> LaneProfile {
+    let n = pieces.len();
+
+    // prefetch/hidden: a run's covering window is exactly the next
+    // chunk's compute (the head backward or the hoisting resident
+    // layer's backward) — the chunk after that opens with the target's
+    // own backward, which closes the window before contributing
+    let mut prefetch = Census::ZERO;
+    let mut hidden = Census::ZERO;
+    for i in 0..n {
+        if matches!(pieces[i].role, Role::Prefetch { .. }) {
+            prefetch.add(chunks[i].census_prefetch);
+            hidden.add(min_census(chunks[i].census_prefetch, chunks[i + 1].census_compute));
+        }
+    }
+
+    // bucket tails: every backward chunk ends with its segment's last
+    // Backward event, so the full fold's suffix-at-event is our
+    // suffix-at-chunk-boundary
+    let mut suffix = vec![Census::ZERO; n + 1];
+    for i in (0..n).rev() {
+        let mut acc = suffix[i + 1];
+        acc.add(chunks[i].census_total);
+        suffix[i] = acc;
+    }
+    let mut head_bwd = 0usize;
+    let mut emb_bwd = 0usize;
+    let mut layer_bwd = vec![0usize; cfg.layers];
+    for (i, p) in pieces.iter().enumerate() {
+        match p.role {
+            Role::HeadBwd => head_bwd = i,
+            Role::LayerBwd(l) => layer_bwd[l] = i,
+            Role::EmbBwd => emb_bwd = i,
+            _ => {}
+        }
+    }
+    let (emb_params, layer_params, head_params) = cfg.param_count_split();
+    let mut buckets = Vec::with_capacity(cfg.layers + 2);
+    buckets.push(CommBucket {
+        segment: Segment::Head,
+        bytes: head_params as u64 * 4,
+        tail: suffix[head_bwd + 1],
+    });
+    for l in (0..cfg.layers).rev() {
+        buckets.push(CommBucket {
+            segment: Segment::Encoder(l),
+            bytes: layer_params as u64 * 4,
+            tail: suffix[layer_bwd[l] + 1],
+        });
+    }
+    buckets.push(CommBucket {
+        segment: Segment::Embedding,
+        bytes: emb_params as u64 * 4,
+        tail: suffix[emb_bwd + 1],
+    });
+
+    // stores: a store DMA sits last in its layer's forward chunk, so a
+    // chunk's compute accrues to the *previous* open store window and
+    // the window closes at the turnaround
+    let mut stores: Vec<HostTransfer> = Vec::new();
+    for (i, p) in pieces.iter().enumerate() {
+        if p.role == Role::Turnaround {
+            break;
+        }
+        if let Some(last) = stores.last_mut() {
+            last.cover.add(chunks[i].census_compute);
+        }
+        if let (ChunkKind::LayerFwdOffload(_), Role::LayerFwd(l)) = (p.kind, p.role) {
+            stores.push(HostTransfer {
+                segment: Segment::Encoder(l),
+                bytes: chunks[i].store_bytes,
+                cover: Census::ZERO,
+            });
+        }
+    }
+
+    // loads: a load DMA opens its layer's backward chunk, so it is
+    // covered by the compute accumulated since the previous load (or
+    // the turnaround) and its own chunk's backward seeds the next
+    // window
+    let mut loads: Vec<HostTransfer> = Vec::new();
+    let mut load_cover = Census::ZERO;
+    let mut past_turn = false;
+    for (i, p) in pieces.iter().enumerate() {
+        if p.role == Role::Turnaround {
+            past_turn = true;
+            continue;
+        }
+        if !past_turn {
+            continue;
+        }
+        if let (ChunkKind::LayerBwdOffload(_), Role::LayerBwd(l)) = (p.kind, p.role) {
+            loads.push(HostTransfer {
+                segment: Segment::Encoder(l),
+                bytes: chunks[i].load_bytes,
+                cover: load_cover,
+            });
+            load_cover = chunks[i].census_compute;
+        } else {
+            load_cover.add(chunks[i].census_compute);
+        }
+    }
+
+    LaneProfile { prefetch, hidden, buckets, stores, loads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Technique;
+
+    fn resolve(plan: &SchedulePlan, layers: usize) -> Vec<(OptimizationSet, Residency)> {
+        (0..layers)
+            .map(|l| {
+                (
+                    plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none),
+                    plan.residency(l),
+                )
+            })
+            .collect()
+    }
+
+    fn assert_composed_matches(cfg: &ModelConfig, plan: &SchedulePlan) {
+        let lowering = Lowering::for_model(cfg);
+        let resolved = resolve(plan, cfg.layers);
+        let composed = composed_summary(cfg, &resolved, plan.other, plan.mlm_head, lowering);
+        let full = lower_step(cfg, plan, lowering).summarize_step();
+        assert_eq!(composed, full, "composed summary diverged for {}", plan.label());
+    }
+
+    #[test]
+    fn composed_matches_full_fold_on_uniform_plans() {
+        let cfg = ModelConfig::bert_tiny();
+        for technique in Technique::all() {
+            let plan = SchedulePlan::for_technique(&cfg, technique, true);
+            assert_composed_matches(&cfg, &plan);
+        }
+        // serial checkpointing and the classification head too
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, false).serial();
+        assert_composed_matches(&cfg, &plan);
+    }
+
+    #[test]
+    fn composed_matches_full_fold_on_a_mixed_placement() {
+        let cfg = ModelConfig::bert_mini();
+        assert!(cfg.layers >= 4, "need one layer per residency arm");
+        let mut per_layer = vec![OptimizationSet::none(); cfg.layers];
+        per_layer[0] = OptimizationSet::full();
+        per_layer[3] = OptimizationSet { inplace_gelu: true, ..OptimizationSet::none() };
+        let mut residency = vec![Residency::Resident; cfg.layers];
+        residency[1] = Residency::Checkpoint(CkptStyle::Overlapped);
+        residency[2] = Residency::Checkpoint(CkptStyle::Serial);
+        residency[3] = Residency::Offload;
+        let plan = SchedulePlan::from_placement(per_layer, residency, true);
+        assert_composed_matches(&cfg, &plan);
+    }
+
+    #[test]
+    fn composed_matches_when_the_top_layer_prefetches() {
+        // top-layer Overlapped exercises the pre-head prefetch hoist;
+        // stacked Overlapped exercises the in-place fallback
+        let cfg = ModelConfig::bert_mini();
+        let mut residency = vec![Residency::Checkpoint(CkptStyle::Overlapped); cfg.layers];
+        residency[1] = Residency::Resident;
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); cfg.layers],
+            residency,
+            true,
+        );
+        assert_composed_matches(&cfg, &plan);
+    }
+
+    #[test]
+    fn chunk_cache_serves_repeat_compositions() {
+        let cfg = ModelConfig::bert_tiny();
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
+        let resolved = resolve(&plan, cfg.layers);
+        let lowering = Lowering::for_model(&cfg);
+        let a = composed_summary(&cfg, &resolved, plan.other, plan.mlm_head, lowering);
+        let before = chunk_cache_stats();
+        let b = composed_summary(&cfg, &resolved, plan.other, plan.mlm_head, lowering);
+        let after = chunk_cache_stats();
+        assert_eq!(a, b);
+        assert!(after.entries >= 1);
+        assert!(after.hits > before.hits, "second composition must hit the cache");
+    }
+}

@@ -54,7 +54,7 @@ USAGE:
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
                   [--placement uniform|joint]
   tempo placement [MODEL] [--seq N] [--gpu NAME] [--target-batch N]
-                  [--placement uniform|joint] [--json]
+                  [--placement uniform|joint] [--jobs N|auto] [--stats] [--json]
   tempo graph [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
               [--opts gelu,layernorm,dropout,softmax] [--pre-ln] [--causal] [--unfused]
               [--json]
@@ -67,7 +67,8 @@ Common options:
   --backend sim|pjrt   execution engine (default: sim; pjrt requires the
                        `pjrt` cargo feature and on-disk artifacts)
   --jobs N|auto        worker threads for compare/finetune/experiments
-                       sweeps (default: auto = one per core; stdout is
+                       sweeps and the placement/autotempo candidate
+                       search (default: auto = one per core; results are
                        bit-identical for every N — see DESIGN.md
                        §Concurrency)
   --verbose            per-step progress lines in compare/finetune
@@ -488,7 +489,8 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
         // joint (rewrite ∪ checkpoint) placement search — §Placement
         let mode = parse_placement(mode_name)?;
         let target = parse_target_batch(args)?;
-        let d = tempo::autotempo::placement_search(&cfg, gpu, mode, target);
+        let engine = engine_from_args(args)?;
+        let d = tempo::autotempo::placement_search_jobs(&cfg, gpu, mode, target, true, &engine);
         println!("placement search: {}", d.rationale);
         println!(
             "  plan: rewrites on {}/{} layers, {} checkpointed, {} offloaded, max batch {}, \
@@ -538,7 +540,7 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
 /// the chosen per-layer plan as a table, with the capacity model's
 /// breakdown of the winning plan.
 fn cmd_placement(args: &Args) -> tempo::Result<()> {
-    use tempo::autotempo::{placement_search, PlacementMode};
+    use tempo::autotempo::{placement_search_jobs, PlacementMode};
     use tempo::config::OptimizationSet;
     use tempo::memmodel::plan_breakdown;
     use tempo::report::Table;
@@ -546,6 +548,7 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
 
     let mut positional_model = args.positional.get(1).cloned();
     let want_json = recovered_flag(args, "json", &mut positional_model);
+    let want_stats = recovered_flag(args, "stats", &mut positional_model);
 
     let mut args = args.clone();
     if let Some(name) = positional_model {
@@ -554,12 +557,13 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
     let cfg = parse_model(&args)?;
     let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
     let target = parse_target_batch(&args)?;
+    let engine = engine_from_args(&args)?;
     let mode = match args.get("placement") {
         None => PlacementMode::Joint,
         Some(name) => parse_placement(name)?,
     };
 
-    let d = placement_search(&cfg, gpu, mode, target);
+    let d = placement_search_jobs(&cfg, gpu, mode, target, true, &engine);
     let mut t = Table::new(
         format!(
             "Placement — {} @ S={} on {} ({} search)",
@@ -591,7 +595,7 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
     if want_json {
         // machine-readable mode: one JSON document, nothing else on
         // stdout (round-trips through report::Table::from_json)
-        let doc = Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::str(cfg.name.clone())),
             ("seq_len", Json::num(cfg.seq_len as f64)),
             ("gpu", Json::str(gpu.name())),
@@ -610,8 +614,26 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
             ("priced", Json::num(d.stats.priced as f64)),
             ("peak_bytes", Json::num(bd.total() as f64)),
             ("high_water", Json::str(bd.transient_label)),
-            ("table", t.to_json()),
-        ]);
+        ];
+        if want_stats {
+            let caches = tempo::graph::cache_stats()
+                .into_iter()
+                .map(|(name, s)| {
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("entries", Json::num(s.entries as f64)),
+                            ("hits", Json::num(s.hits as f64)),
+                            ("misses", Json::num(s.misses as f64)),
+                            ("approx_bytes", Json::num(s.approx_bytes as f64)),
+                        ]),
+                    )
+                })
+                .collect();
+            fields.push(("caches", Json::obj(caches)));
+        }
+        fields.push(("table", t.to_json()));
+        let doc = Json::obj(fields);
         println!("{}", doc.pretty());
         return Ok(());
     }
@@ -630,6 +652,21 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
         gpu.spec().devices,
         bd.transient_label,
     );
+    if want_stats {
+        // hit/miss/size counters of the plan-pricing caches the search
+        // just exercised (process-global; hit counts depend on --jobs
+        // interleaving, which is why the decision — pinned jobs-
+        // invariant — never reads them)
+        for (name, s) in tempo::graph::cache_stats() {
+            println!(
+                "cache {name}: {} entries, {} hits, {} misses, ~{:.1} KB resident",
+                s.entries,
+                s.hits,
+                s.misses,
+                s.approx_bytes as f64 / 1e3,
+            );
+        }
+    }
     Ok(())
 }
 

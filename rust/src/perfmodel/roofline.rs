@@ -47,28 +47,57 @@ use crate::graph::{schedule_summary, Census, SchedulePlan};
 
 use super::ops::{plan_census, OpCensus};
 
+/// One calibration env knob: its variable name, the accepted-range text
+/// every diagnostic quotes, and the predicate a parsed value must
+/// satisfy. [`parse_knob`] (the hot-path panic) and
+/// [`validate_env_knobs`] (the clean startup error) share the spec, so
+/// a knob cannot be accepted by one and rejected by the other — or
+/// described differently in their two messages.
+#[derive(Clone, Copy)]
+struct KnobSpec {
+    name: &'static str,
+    accepts: &'static str,
+    ok: fn(f64) -> bool,
+}
+
 /// `TEMPO_UTIL_K`: utilization half-saturation override (tokens).
-const KNOB_UTIL_K: &str = "TEMPO_UTIL_K";
+const UTIL_K_SPEC: KnobSpec = KnobSpec {
+    name: "TEMPO_UTIL_K",
+    accepts: "a finite token count > 0",
+    ok: |x| x.is_finite() && x > 0.0,
+};
 /// `TEMPO_AR_EXPOSE`: legacy scalar-exposure escape hatch (fraction).
-const KNOB_AR_EXPOSE: &str = "TEMPO_AR_EXPOSE";
+const AR_EXPOSE_SPEC: KnobSpec = KnobSpec {
+    name: "TEMPO_AR_EXPOSE",
+    accepts: "a finite exposure fraction >= 0",
+    ok: |x| x.is_finite() && x >= 0.0,
+};
 /// `TEMPO_HOST_BW`: host-link bandwidth override (bytes/s).
-const KNOB_HOST_BW: &str = "TEMPO_HOST_BW";
+const HOST_BW_SPEC: KnobSpec = KnobSpec {
+    name: "TEMPO_HOST_BW",
+    accepts: "a finite bandwidth in bytes/s > 0",
+    ok: |x| x.is_finite() && x > 0.0,
+};
+
+/// Every knob spec, in one place — [`validate_env_knobs`] iterates this
+/// list and the `OnceLock` getters parse through the same entries.
+const KNOB_SPECS: [KnobSpec; 3] = [UTIL_K_SPEC, AR_EXPOSE_SPEC, HOST_BW_SPEC];
 
 /// The calibration env knobs, in one place: [`validate_env_knobs`] and
 /// the `OnceLock` getters iterate/name this same list, so a knob cannot
 /// be validated under one name and parsed under another.
-pub const KNOBS: [&str; 3] = [KNOB_UTIL_K, KNOB_AR_EXPOSE, KNOB_HOST_BW];
+pub const KNOBS: [&str; 3] = [UTIL_K_SPEC.name, AR_EXPOSE_SPEC.name, HOST_BW_SPEC.name];
 
-/// Parse an optional f64 env knob once; malformed values are a hard
-/// error (panic with the knob's name — [`validate_env_knobs`] turns the
-/// same condition into a clean startup error in the CLI).
-fn parse_knob(name: &'static str) -> Option<f64> {
+/// Parse an optional f64 env knob once; malformed or out-of-range
+/// values are a hard error (panic naming the knob and its accepted
+/// range — [`validate_env_knobs`] turns the same condition into a clean
+/// startup error in the CLI).
+fn parse_knob(spec: &KnobSpec) -> Option<f64> {
+    let KnobSpec { name, accepts, ok } = *spec;
     match std::env::var(name) {
         Ok(v) => match v.parse::<f64>() {
-            Ok(x) if x.is_finite() => Some(x),
-            _ => panic!(
-                "invalid {name}={v:?}: expected a finite number — fix or unset the variable"
-            ),
+            Ok(x) if ok(x) => Some(x),
+            _ => panic!("invalid {name}={v:?}: expected {accepts} — fix or unset the variable"),
         },
         Err(_) => None,
     }
@@ -77,35 +106,37 @@ fn parse_knob(name: &'static str) -> Option<f64> {
 /// `TEMPO_UTIL_K` (half-saturation override), parsed once per process.
 fn util_k_base() -> f64 {
     static K: OnceLock<f64> = OnceLock::new();
-    *K.get_or_init(|| parse_knob(KNOB_UTIL_K).unwrap_or(K_TOKENS_DEFAULT))
+    *K.get_or_init(|| parse_knob(&UTIL_K_SPEC).unwrap_or(K_TOKENS_DEFAULT))
 }
 
 /// `TEMPO_AR_EXPOSE` (legacy scalar-exposure escape hatch), parsed once
 /// per process. `None` = unset = the lane-aware exposure fold.
 fn legacy_exposure() -> Option<f64> {
     static E: OnceLock<Option<f64>> = OnceLock::new();
-    *E.get_or_init(|| parse_knob(KNOB_AR_EXPOSE))
+    *E.get_or_init(|| parse_knob(&AR_EXPOSE_SPEC))
 }
 
 /// `TEMPO_HOST_BW` (host-link bandwidth override, bytes/s), parsed once
 /// per process. `None` = unset = the rig's `host_link_bw`.
 fn host_bw_override() -> Option<f64> {
     static H: OnceLock<Option<f64>> = OnceLock::new();
-    *H.get_or_init(|| parse_knob(KNOB_HOST_BW))
+    *H.get_or_init(|| parse_knob(&HOST_BW_SPEC))
 }
 
 /// Validate the calibration env knobs ([`KNOBS`]) without touching the
-/// process-wide caches: a malformed value (`TEMPO_UTIL_K=abc`) returns
-/// `Err` so `main` can fail at startup with a clean diagnostic instead
-/// of a mid-sweep panic. Library callers that skip this check hit the
-/// same condition as a panic at first use — never a silent fallback to
-/// the default.
+/// process-wide caches: a malformed or out-of-range value
+/// (`TEMPO_UTIL_K=abc`, `TEMPO_HOST_BW=0`) returns `Err` naming the
+/// knob **and its accepted range** so `main` can fail at startup with a
+/// clean actionable diagnostic instead of a mid-sweep panic. Library
+/// callers that skip this check hit the same condition as a panic at
+/// first use — never a silent fallback to the default.
 pub fn validate_env_knobs() -> crate::Result<()> {
-    for name in KNOBS {
+    for spec in &KNOB_SPECS {
+        let KnobSpec { name, accepts, ok } = *spec;
         if let Ok(v) = std::env::var(name) {
-            if !matches!(v.parse::<f64>(), Ok(x) if x.is_finite()) {
+            if !matches!(v.parse::<f64>(), Ok(x) if ok(x)) {
                 return Err(crate::Error::Invalid(format!(
-                    "invalid {name}={v:?}: expected a finite number — fix or unset the variable"
+                    "invalid {name}={v:?}: expected {accepts} — fix or unset the variable"
                 )));
             }
         }

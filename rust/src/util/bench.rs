@@ -4,6 +4,7 @@
 //! count and a minimum wall budget are met; reports mean/p50/p95/stddev.
 //! Used by the `benches/*.rs` targets (harness = false).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::tensor::stats;
@@ -47,6 +48,7 @@ pub struct BenchHarness {
     /// Minimum wall-clock budget per case.
     pub min_time: Duration,
     results: Vec<BenchResult>,
+    annotations: BTreeMap<String, Vec<(String, f64)>>,
 }
 
 impl Default for BenchHarness {
@@ -57,6 +59,7 @@ impl Default for BenchHarness {
             max_iters: 10_000,
             min_time: Duration::from_millis(300),
             results: Vec::new(),
+            annotations: BTreeMap::new(),
         }
     }
 }
@@ -74,8 +77,18 @@ impl BenchHarness {
             min_iters: 3,
             max_iters: 50,
             min_time: Duration::from_millis(500),
-            results: Vec::new(),
+            ..Self::default()
         }
+    }
+
+    /// Attach an extra numeric field to the named case's JSON row —
+    /// e.g. cache hit/miss counters next to the timing they explain.
+    /// Rows keep their `name`/`mean_s` core (CI's parser requires
+    /// those); [`write_csv`](Self::write_csv) output is unchanged.
+    /// Annotating a name no [`bench`](Self::bench) call recorded is
+    /// silently never emitted.
+    pub fn annotate(&mut self, name: &str, key: &str, value: f64) {
+        self.annotations.entry(name.to_string()).or_default().push((key.to_string(), value));
     }
 
     /// Time `f` and record under `name`. Returns the result.
@@ -130,14 +143,20 @@ impl BenchHarness {
             .results
             .iter()
             .map(|r| {
-                Json::obj(vec![
+                let mut pairs = vec![
                     ("name", Json::str(r.name.clone())),
                     ("iters", Json::num(r.iters as f64)),
                     ("mean_s", Json::num(r.mean.as_secs_f64())),
                     ("p50_s", Json::num(r.p50.as_secs_f64())),
                     ("p95_s", Json::num(r.p95.as_secs_f64())),
                     ("stddev_s", Json::num(r.stddev.as_secs_f64())),
-                ])
+                ];
+                if let Some(extras) = self.annotations.get(&r.name) {
+                    for (k, v) in extras {
+                        pairs.push((k.as_str(), Json::num(*v)));
+                    }
+                }
+                Json::obj(pairs)
             })
             .collect();
         std::fs::write(path, Json::arr(rows).pretty())
@@ -175,7 +194,7 @@ mod tests {
             min_iters: 5,
             max_iters: 20,
             min_time: Duration::from_millis(1),
-            results: Vec::new(),
+            ..BenchHarness::default()
         };
         let mut x = 0u64;
         let r = h.bench("spin", || {
@@ -197,7 +216,7 @@ mod tests {
             min_iters: 2,
             max_iters: 2,
             min_time: Duration::ZERO,
-            results: Vec::new(),
+            ..BenchHarness::default()
         };
         h.bench("case", || {});
         let p = dir.file("out.json");
@@ -210,6 +229,41 @@ mod tests {
     }
 
     #[test]
+    fn annotations_ride_on_their_named_row_only() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let mut h = BenchHarness {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time: Duration::ZERO,
+            ..BenchHarness::default()
+        };
+        h.bench("plain", || {});
+        h.bench("annotated", || {});
+        h.annotate("annotated", "cache_hits", 7.0);
+        h.annotate("annotated", "cache_misses", 2.0);
+        h.annotate("never-ran", "ghost", 1.0);
+        let p = dir.file("out.json");
+        h.write_json(p.to_str().unwrap()).unwrap();
+        let parsed = crate::util::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let rows = parsed.as_arr().unwrap();
+        assert_eq!(rows.len(), 2, "annotating a name that never ran adds no row");
+        assert!(rows[0].get("cache_hits").is_none(), "extras stay on their named row");
+        assert_eq!(rows[1].req("cache_hits").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(rows[1].req("cache_misses").unwrap().as_f64().unwrap(), 2.0);
+        for row in rows {
+            // the CI parser's contract: every row keeps name + mean_s
+            assert!(row.req("name").is_ok() && row.req("mean_s").is_ok());
+        }
+
+        // CSV output ignores annotations entirely
+        let c = dir.file("out.csv");
+        h.write_csv(c.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(c).unwrap();
+        assert!(!text.contains("cache_hits"));
+    }
+
+    #[test]
     fn csv_emits_rows() {
         let dir = crate::util::TempDir::new().unwrap();
         let mut h = BenchHarness {
@@ -217,7 +271,7 @@ mod tests {
             min_iters: 2,
             max_iters: 2,
             min_time: Duration::ZERO,
-            results: Vec::new(),
+            ..BenchHarness::default()
         };
         h.bench("a", || {});
         let p = dir.file("out.csv");

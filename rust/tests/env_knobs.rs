@@ -68,9 +68,16 @@ fn tempo_cmd() -> Command {
 #[test]
 fn malformed_knob_is_a_startup_error() {
     for (knob, value) in [
+        // unparseable
         ("TEMPO_UTIL_K", "abc"),
         ("TEMPO_AR_EXPOSE", "0.3.5"),
         ("TEMPO_HOST_BW", "fast"),
+        // parseable but out of the knob's accepted range
+        ("TEMPO_UTIL_K", "0"),
+        ("TEMPO_UTIL_K", "inf"),
+        ("TEMPO_AR_EXPOSE", "-0.1"),
+        ("TEMPO_HOST_BW", "-1e9"),
+        ("TEMPO_HOST_BW", "NaN"),
     ] {
         let out = tempo_cmd()
             .args(["max-batch", "--model", "bert-tiny"])
@@ -80,6 +87,10 @@ fn malformed_knob_is_a_startup_error() {
         assert!(!out.status.success(), "{knob}={value} must fail startup validation");
         let err = String::from_utf8_lossy(&out.stderr);
         assert!(err.contains(knob), "{knob}: stderr should name the knob, got: {err}");
+        assert!(
+            err.contains("expected a finite"),
+            "{knob}={value}: stderr should state the accepted range, got: {err}"
+        );
     }
     // well-formed values pass the same gate
     let out = tempo_cmd()

@@ -1,0 +1,132 @@
+//! Incremental-pricing contract (DESIGN.md §Schedule "Segment
+//! summaries"): the composed segment-chunk fold behind
+//! `graph::schedule_summary` must reproduce the full
+//! `lower_step(..).summarize_step()` event-tape fold **bit-identically**
+//! on every plan in the joint family — peak and high-water op, the
+//! per-class byte vectors, the work census, and the lane profile that
+//! feeds `plan_lane_times` and the placement search's dominance keys.
+//! A random walk over per-layer arm mutations exercises exactly the
+//! re-pricing pattern the search's O(Δ-layer) claim rests on: each step
+//! changes one layer's `(rewrite subset, Residency)` arm and re-prices
+//! through the warm chunk cache.
+//!
+//! The second contract: `placement_search_jobs` is bit-identical to the
+//! serial search at any worker count (parallel summarize/price cells,
+//! serial prune + selection fold in enumeration order).
+
+use tempo::autotempo::{placement_search_jobs, PlacementMode};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet};
+use tempo::coordinator::ExperimentEngine;
+use tempo::graph::{self, CkptStyle, Lowering, Residency, SchedulePlan};
+use tempo::perfmodel::plan_lane_times;
+
+/// Deterministic PCG-style LCG — no rand dependency, reproducible
+/// failures.
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Every per-layer residency arm the joint family places.
+const ARMS: [Residency; 4] = [
+    Residency::Resident,
+    Residency::Checkpoint(CkptStyle::Overlapped),
+    Residency::Checkpoint(CkptStyle::Serial),
+    Residency::Offload,
+];
+
+fn random_plan(layers: usize, rng: &mut u64) -> (Vec<OptimizationSet>, Vec<Residency>) {
+    let subsets = OptimizationSet::all_subsets();
+    let per_layer =
+        (0..layers).map(|_| subsets[(lcg(rng) as usize) % subsets.len()]).collect();
+    let residency = (0..layers).map(|_| ARMS[(lcg(rng) as usize) % ARMS.len()]).collect();
+    (per_layer, residency)
+}
+
+#[test]
+fn composed_pricing_matches_the_full_fold_under_random_arm_mutations() {
+    for cfg in [ModelConfig::bert_tiny(), ModelConfig::bert_mini()] {
+        let lowering = Lowering::for_model(&cfg);
+        let mut rng: u64 = 0x7e3b_0a11 + cfg.layers as u64;
+        let (mut per_layer, mut residency) = random_plan(cfg.layers, &mut rng);
+        for step in 0..40 {
+            let plan = SchedulePlan::from_placement(per_layer.clone(), residency.clone(), true);
+            let composed = graph::schedule_summary(&cfg, &plan);
+            let full = graph::lower_step(&cfg, &plan, lowering).summarize_step();
+            // full PartialEq: peak/high-water/class vectors/census/
+            // events/lanes — everything `plan_lane_times` and the
+            // dominance keys are computed from
+            assert_eq!(*composed, full, "{} walk step {step}: composed != full fold", cfg.name);
+            for b in [1usize, 4, 32] {
+                assert_eq!(
+                    composed.peak_bytes(b),
+                    full.peak_bytes(b),
+                    "{} walk step {step}: peak diverges at B={b}",
+                    cfg.name
+                );
+            }
+            // mutate ONE layer's arm — the O(Δ-layer) re-pricing shape
+            let l = (lcg(&mut rng) as usize) % cfg.layers;
+            if lcg(&mut rng) % 2 == 0 {
+                let subsets = OptimizationSet::all_subsets();
+                per_layer[l] = subsets[(lcg(&mut rng) as usize) % subsets.len()];
+            } else {
+                residency[l] = ARMS[(lcg(&mut rng) as usize) % ARMS.len()];
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_pricing_through_the_composed_summary_is_deterministic() {
+    // the composed summary feeds plan_lane_times; pin that pricing a
+    // random mixed plan is bit-stable across repeat calls on every rig
+    // shape × batch the property matrix cares about
+    let cfg = ModelConfig::bert_mini();
+    let mut rng: u64 = 0xfeed_f00d;
+    let (per_layer, residency) = random_plan(cfg.layers, &mut rng);
+    let plan = SchedulePlan::from_placement(per_layer, residency, true);
+    for gpu in Gpu::all() {
+        for devices in [1usize, 4] {
+            let spec = gpu.spec().with_devices(devices);
+            for b in [1usize, 4, 32] {
+                let lt = plan_lane_times(&cfg, &plan, &spec, b);
+                assert!(lt.step.is_finite(), "{} x{devices} B={b}", gpu.name());
+                assert_eq!(
+                    lt.step,
+                    lt.compute + lt.comm_exposed + lt.host_exposed,
+                    "{} x{devices} B={b}: lanes must decompose the step",
+                    gpu.name()
+                );
+                let again = plan_lane_times(&cfg, &plan, &spec, b);
+                assert_eq!(lt, again, "{} x{devices} B={b}: repeat pricing diverged", gpu.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_placement_search_is_bit_identical_to_serial() {
+    let cfg = ModelConfig::bert_mini();
+    let serial = ExperimentEngine::new(1);
+    let par = ExperimentEngine::new(4);
+    for (mode, target) in [
+        (PlacementMode::Uniform, None),
+        (PlacementMode::Joint, None),
+        (PlacementMode::Joint, Some(8)),
+    ] {
+        let a = placement_search_jobs(&cfg, Gpu::Rtx2080Ti, mode, target, true, &serial);
+        let b = placement_search_jobs(&cfg, Gpu::Rtx2080Ti, mode, target, true, &par);
+        let what = format!("{} target={target:?}", mode.name());
+        assert_eq!(a.plan, b.plan, "{what}: winners diverged");
+        assert_eq!(a.max_batch, b.max_batch, "{what}");
+        assert_eq!(a.eval_batch, b.eval_batch, "{what}");
+        assert_eq!(
+            a.throughput.to_bits(),
+            b.throughput.to_bits(),
+            "{what}: throughput must match to the bit"
+        );
+        assert_eq!(a.rationale, b.rationale, "{what}");
+        assert_eq!(a.stats, b.stats, "{what}: the prune funnel is jobs-invariant");
+    }
+}
