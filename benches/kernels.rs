@@ -1,0 +1,129 @@
+//! Numeric-kernel benches: per-kernel ns/element and the thread-scaling
+//! trajectory of the band/chunk-parallel execution paths.
+//!
+//! Every kernel is timed twice — on the serial engine and on an engine
+//! sized to the host's cores — over buffers large enough that the
+//! per-band dispatch overhead amortizes (DESIGN.md §Kernels). CI
+//! uploads the JSON as `BENCH_kernels.json` and gates the best
+//! serial/parallel speedup at ≥ 2× on the multi-core runner, so a
+//! parallelism regression (kernels silently serializing, band sizing
+//! pessimized) fails the leg instead of just slowing the backend down.
+//! The end-to-end rows time a full kernel-backend training step at the
+//! measured probe's toy dims — the unit `tempo autotempo --probe
+//! measured` replays per candidate.
+
+use tempo::autotempo::probe_config;
+use tempo::config::{ModelConfig, Technique};
+use tempo::coordinator::ExperimentEngine;
+use tempo::graph::SchedulePlan;
+use tempo::kernels::{gelu_bwd, gelu_fwd, layernorm_bwd, layernorm_fwd, matmul, softmax_fwd, LN_EPS};
+use tempo::runtime::{init_params, step_trace, Manifest, StepBatch};
+use tempo::tensor::Rng;
+
+fn randf(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f64() as f32) * 2.0 - 1.0).collect()
+}
+
+fn main() {
+    let mut h = tempo::util::BenchHarness::heavy();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = ExperimentEngine::serial();
+    let par = ExperimentEngine::new(threads);
+    let mut rng = Rng::new(0xBE7C);
+
+    // engines paired per kernel: (row suffix, engine)
+    let engines: [(&str, &ExperimentEngine); 2] = [("serial", &serial), ("par", &par)];
+
+    // matmul 512x256 · 256x256 — the band-parallel workhorse
+    let (m, k, n) = (512usize, 256usize, 256usize);
+    let a = randf(&mut rng, m * k);
+    let b = randf(&mut rng, k * n);
+    for (tag, e) in engines {
+        let r = h.bench(&format!("kernels/matmul-512x256x256/{tag}"), || {
+            std::hint::black_box(matmul(e, &a, &b, m, k, n));
+        });
+        h.annotate(&r.name, "ns_per_mac", r.mean.as_nanos() as f64 / (m * k * n) as f64);
+    }
+
+    // GELU fwd/bwd over 4M elements — the chunk-parallel path
+    let gx = randf(&mut rng, 1 << 22);
+    let gdy = randf(&mut rng, 1 << 22);
+    for (tag, e) in engines {
+        let r = h.bench(&format!("kernels/gelu-fwd-4m/{tag}"), || {
+            std::hint::black_box(gelu_fwd(e, &gx));
+        });
+        h.annotate(&r.name, "ns_per_elem", r.mean.as_nanos() as f64 / gx.len() as f64);
+        let r = h.bench(&format!("kernels/gelu-bwd-4m/{tag}"), || {
+            std::hint::black_box(gelu_bwd(e, &gdy, &gx));
+        });
+        h.annotate(&r.name, "ns_per_elem", r.mean.as_nanos() as f64 / gx.len() as f64);
+    }
+
+    // LayerNorm 4096x768 fwd + output-based bwd — band-parallel rows
+    let (rows, cols) = (4096usize, 768usize);
+    let lx = randf(&mut rng, rows * cols);
+    let ldy = randf(&mut rng, rows * cols);
+    let gamma = vec![1.0f32; cols];
+    let beta = vec![0.0f32; cols];
+    let f = layernorm_fwd(&serial, &lx, &gamma, &beta, rows, cols, LN_EPS);
+    for (tag, e) in engines {
+        let r = h.bench(&format!("kernels/layernorm-fwd-4096x768/{tag}"), || {
+            std::hint::black_box(layernorm_fwd(e, &lx, &gamma, &beta, rows, cols, LN_EPS));
+        });
+        h.annotate(&r.name, "ns_per_elem", r.mean.as_nanos() as f64 / lx.len() as f64);
+        let r = h.bench(&format!("kernels/layernorm-bwd-4096x768/{tag}"), || {
+            std::hint::black_box(layernorm_bwd(e, &ldy, &f.y, &gamma, &beta, &f.rstd, rows, cols));
+        });
+        h.annotate(&r.name, "ns_per_elem", r.mean.as_nanos() as f64 / lx.len() as f64);
+    }
+
+    // softmax 4096x512 — the attention-probability shape
+    let (srows, scols) = (4096usize, 512usize);
+    let sx = randf(&mut rng, srows * scols);
+    for (tag, e) in engines {
+        let r = h.bench(&format!("kernels/softmax-fwd-4096x512/{tag}"), || {
+            std::hint::black_box(softmax_fwd(e, &sx, srows, scols));
+        });
+        h.annotate(&r.name, "ns_per_elem", r.mean.as_nanos() as f64 / sx.len() as f64);
+    }
+
+    // end to end: one kernel-backend training step at the probe dims —
+    // the unit the measured Auto-Tempo probe replays per candidate
+    let cfg = probe_config(&ModelConfig::bert_tiny());
+    let manifest = Manifest::synthetic("bench_kernels", "mlm", "tempo", "kernel", 2, &cfg, 2);
+    let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
+    let batch = StepBatch::synthetic(&manifest, 5);
+    let mut params = init_params(&manifest, 11);
+    for (tag, e) in engines {
+        h.bench(&format!("kernels/step-probe-bert-tiny/{tag}"), || {
+            std::hint::black_box(
+                step_trace(&manifest, &plan, e, &mut params, &batch, 0, 21, 1e-3).unwrap(),
+            );
+        });
+    }
+
+    let by_name: std::collections::BTreeMap<String, f64> =
+        h.results().iter().map(|r| (r.name.clone(), r.mean.as_secs_f64())).collect();
+    let mut best = 0.0f64;
+    for case in [
+        "kernels/matmul-512x256x256",
+        "kernels/gelu-fwd-4m",
+        "kernels/layernorm-fwd-4096x768",
+        "kernels/softmax-fwd-4096x512",
+    ] {
+        let s = by_name[&format!("{case}/serial")];
+        let p = by_name[&format!("{case}/par")];
+        let speedup = s / p;
+        best = best.max(speedup);
+        println!("{case}: {speedup:.2}x over serial at {threads} threads");
+        h.annotate(&format!("{case}/par"), "speedup_vs_serial", speedup);
+        h.annotate(&format!("{case}/par"), "threads", threads as f64);
+    }
+    println!(
+        "best parallel speedup: {best:.2}x at {threads} threads \
+         (CI gates >= 2x on its multi-core runner)"
+    );
+
+    h.write_csv("bench_results/bench_kernels.csv").unwrap();
+    h.write_json("bench_results/BENCH_kernels.json").unwrap();
+}

@@ -24,12 +24,22 @@
 //! placement in one objective — with dominance pruning over the
 //! memoized schedule summaries (`tempo autotempo --placement joint`,
 //! `tempo placement`; DESIGN.md §Placement).
+//!
+//! Finally, [`measured_probe`] backs the interface with *measured*
+//! profiles: it re-ranks the analytically best candidates by real
+//! wall-clock step time and metered peak bytes on the kernel backend
+//! at a shrunken probe config, reporting per-plan model-vs-measured
+//! calibration drift (`tempo autotempo --probe measured`).
 
 mod placement;
+mod probe;
 mod search;
 
 pub use placement::{
     placement_search, placement_search_jobs, placement_search_with, PlacementDecision,
     PlacementMode, PruneStats,
+};
+pub use probe::{
+    measured_probe, probe_config, ProbeReport, ProbeRow, PROBE_BATCH, PROBE_STEPS,
 };
 pub use search::{coarse_pass, fine_search, plan_throughput, AutoTempoDecision, LayerPlan};

@@ -1,0 +1,322 @@
+//! Measured-probe Auto-Tempo: re-rank analytic candidates by *executed*
+//! step time and peak bytes on the kernel backend.
+//!
+//! The analytic policies ([`super::coarse_pass`], [`super::fine_search`],
+//! [`super::placement_search`]) trust the roofline and liveness models
+//! end to end. The measured probe closes the loop the paper sketches
+//! ("the same interface could be backed by measured probes"): rank a
+//! family of candidate placements analytically, take the top K, shrink
+//! the model to a probe config (same structure, toy dims), run real
+//! training steps through [`crate::runtime::step_trace`], and re-rank
+//! by wall-clock step time — reporting per-plan calibration drift
+//! between the models' predictions and the measurements
+//! ([`crate::perfmodel::calib::DriftRow`]).
+//!
+//! Two kinds of drift are reported per plan:
+//!
+//! * **Step time** is compared in *relative* terms — each column is
+//!   normalized to its fastest measured candidate — because the
+//!   roofline prices a GPU while the kernels run on host cores; only
+//!   the shape of the ranking is comparable across the two.
+//! * **Peak bytes** are compared *directly*: the interpreter meters the
+//!   same buffers the liveness timeline prices, so the two columns
+//!   share units and should agree closely.
+
+use std::time::Instant;
+
+use crate::config::{Gpu, ModelConfig, OptimizationSet};
+use crate::coordinator::ExperimentEngine;
+use crate::graph::CkptStyle;
+use crate::memmodel::max_batch_for_plan;
+use crate::perfmodel::calib::DriftRow;
+use crate::perfmodel::{plan_step_time, plan_throughput_at};
+use crate::runtime::{init_params, step_trace, Manifest, StepBatch, StepTrace};
+use crate::{Error, Result};
+
+use super::search::{AutoTempoDecision, LayerPlan};
+
+/// Per-device batch size every probe run executes.
+pub const PROBE_BATCH: usize = 2;
+
+/// Timed steps per candidate (after one untimed warmup step).
+pub const PROBE_STEPS: usize = 2;
+
+/// The shrunken stand-in [`measured_probe`] executes: the full config's
+/// structure (topology family, dropout rate) at toy dims, with the
+/// layer count capped at two — enough depth for the inter-layer
+/// effects (checkpoint hoisting, offload turnaround) without paying
+/// full-depth wall clock.
+pub fn probe_config(cfg: &ModelConfig) -> ModelConfig {
+    let mut p = cfg.clone();
+    p.name = format!("{}-probe", cfg.name);
+    p.hidden = 64;
+    p.heads = 2;
+    p.seq_len = 16;
+    p.intermediate = 128;
+    p.vocab_size = 256;
+    p.max_position = 32;
+    p.type_vocab = p.type_vocab.clamp(1, 2);
+    p.layers = cfg.layers.clamp(1, 2);
+    p
+}
+
+/// The uniform-family candidate placements the probe considers, built
+/// at `layers` encoder layers. Labels are stable across layer counts,
+/// so the full-config and probe-config instantiations pair up by
+/// index.
+fn candidates(layers: usize) -> Vec<(&'static str, LayerPlan)> {
+    let only = |w: &str| OptimizationSet::only(w).expect("known rewrite name");
+    let mut front = vec![OptimizationSet::none(); layers];
+    for set in front.iter_mut().take(layers.div_ceil(2)) {
+        *set = OptimizationSet::full();
+    }
+    vec![
+        ("baseline", LayerPlan::uniform(layers, OptimizationSet::none())),
+        ("tempo", LayerPlan::uniform(layers, OptimizationSet::full())),
+        ("gelu", LayerPlan::uniform(layers, only("gelu"))),
+        ("layernorm", LayerPlan::uniform(layers, only("layernorm"))),
+        ("dropout", LayerPlan::uniform(layers, only("dropout"))),
+        ("softmax", LayerPlan::uniform(layers, only("softmax"))),
+        ("tempo-front-half", LayerPlan::rewrites_only(front)),
+        ("ckpt-overlapped", LayerPlan::uniform_checkpoint(layers, CkptStyle::Overlapped)),
+        ("ckpt-serial", LayerPlan::uniform_checkpoint(layers, CkptStyle::Serial)),
+        ("offload-tempo", LayerPlan::uniform_offload(layers, OptimizationSet::full())),
+    ]
+}
+
+/// One measured candidate, with its calibration drift rows.
+#[derive(Debug, Clone)]
+pub struct ProbeRow {
+    /// Candidate label (uniform-family name).
+    pub label: &'static str,
+    /// The candidate instantiated at the *full* config's layer count.
+    pub plan: LayerPlan,
+    /// 0-based position in the analytic ranking the probe started from.
+    pub analytic_rank: usize,
+    /// Mean wall-clock seconds per training step on the kernel backend.
+    pub measured_step_s: f64,
+    /// Roofline step seconds for the probe config (a GPU prediction —
+    /// only comparable to `measured_step_s` in relative terms).
+    pub modeled_step_s: f64,
+    /// High-water live bytes the interpreter actually held.
+    pub measured_peak_bytes: u64,
+    /// The liveness timeline's predicted peak for the same plan/batch.
+    pub modeled_peak_bytes: u64,
+    /// Host-stash high water (offload plans; 0 otherwise).
+    pub host_peak_bytes: u64,
+    /// Final training loss of the probe run (finite ⇒ numerics sane).
+    pub loss: f64,
+    /// Relative step-time drift: both columns normalized to their
+    /// fastest measured candidate (see the module docs).
+    pub time_drift: DriftRow,
+    /// Peak-bytes drift (directly comparable units).
+    pub peak_drift: DriftRow,
+}
+
+/// Outcome of [`measured_probe`].
+#[derive(Debug, Clone)]
+pub struct ProbeReport {
+    /// The shrunken config the measurements ran on.
+    pub probe_cfg: ModelConfig,
+    /// Number of candidate placements the analytic pass ranked.
+    pub candidates: usize,
+    /// Measured candidates, fastest wall clock first.
+    pub rows: Vec<ProbeRow>,
+    /// The measured winner mapped back onto the full config, with max
+    /// batch and throughput re-priced analytically at full dims.
+    pub decision: AutoTempoDecision,
+}
+
+/// Run the measured probe: rank the candidate family analytically at
+/// the full config, execute the top `top_k` on the kernel backend at
+/// the probe config ([`PROBE_STEPS`] timed steps each, one warmup),
+/// and re-rank by measured step time.
+pub fn measured_probe(
+    cfg: &ModelConfig,
+    gpu: Gpu,
+    top_k: usize,
+    seed: u64,
+    engine: &ExperimentEngine,
+) -> Result<ProbeReport> {
+    if top_k == 0 {
+        return Err(Error::Invalid("--top must be at least 1".into()));
+    }
+    let full = candidates(cfg.layers);
+
+    // Analytic pass: price every candidate at its own max batch — the
+    // objective the analytic searches optimize.
+    let mut ranked: Vec<(usize, f64)> = full
+        .iter()
+        .enumerate()
+        .map(|(i, (_, plan))| {
+            let sp = plan.schedule_plan();
+            let b = max_batch_for_plan(cfg, &sp, gpu).max_batch.max(1);
+            (i, plan_throughput_at(cfg, &sp, gpu, b))
+        })
+        .collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    let k = top_k.min(ranked.len());
+
+    // Measured pass at the probe config.
+    let pcfg = probe_config(cfg);
+    let probe_plans = candidates(pcfg.layers);
+    let spec = gpu.spec();
+    struct Meas {
+        idx: usize,
+        analytic_rank: usize,
+        measured_s: f64,
+        modeled_s: f64,
+        trace: StepTrace,
+    }
+    let mut meas = Vec::with_capacity(k);
+    for (analytic_rank, &(idx, _)) in ranked.iter().take(k).enumerate() {
+        let label = full[idx].0;
+        let plan = probe_plans[idx].1.schedule_plan();
+        let manifest = Manifest::synthetic(
+            &format!("probe_{label}"),
+            "mlm",
+            label,
+            "kernel",
+            PROBE_BATCH,
+            &pcfg,
+            2,
+        );
+        let mut params = init_params(&manifest, seed);
+        let batch = StepBatch::synthetic(&manifest, seed);
+        // warmup step: page in every buffer shape before the clock runs
+        let mut trace = step_trace(&manifest, &plan, engine, &mut params, &batch, 0, seed, 1e-3)?;
+        let t0 = Instant::now();
+        for s in 0..PROBE_STEPS {
+            trace =
+                step_trace(&manifest, &plan, engine, &mut params, &batch, (s + 1) as i64, seed, 1e-3)?;
+        }
+        let measured_s = t0.elapsed().as_secs_f64() / PROBE_STEPS as f64;
+        let modeled_s = plan_step_time(&pcfg, &plan, &spec, PROBE_BATCH);
+        meas.push(Meas { idx, analytic_rank, measured_s, modeled_s, trace });
+    }
+
+    // Normalize the time columns to their fastest candidate so the
+    // drift compares ranking shape, not GPU-vs-host absolute scale.
+    let min_meas = meas.iter().map(|m| m.measured_s).fold(f64::INFINITY, f64::min);
+    let min_model = meas.iter().map(|m| m.modeled_s).fold(f64::INFINITY, f64::min);
+    let mut rows: Vec<ProbeRow> = meas
+        .into_iter()
+        .map(|m| {
+            let label = full[m.idx].0;
+            ProbeRow {
+                label,
+                plan: full[m.idx].1.clone(),
+                analytic_rank: m.analytic_rank,
+                measured_step_s: m.measured_s,
+                modeled_step_s: m.modeled_s,
+                measured_peak_bytes: m.trace.measured_peak_bytes,
+                modeled_peak_bytes: m.trace.modeled_peak_bytes,
+                host_peak_bytes: m.trace.host_peak_bytes,
+                loss: m.trace.loss,
+                time_drift: DriftRow {
+                    plan: label.to_string(),
+                    quantity: "step time (relative)",
+                    modeled: m.modeled_s / min_model,
+                    measured: m.measured_s / min_meas,
+                },
+                peak_drift: DriftRow {
+                    plan: label.to_string(),
+                    quantity: "peak bytes",
+                    modeled: m.trace.modeled_peak_bytes as f64,
+                    measured: m.trace.measured_peak_bytes as f64,
+                },
+            }
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        a.measured_step_s.total_cmp(&b.measured_step_s).then(a.analytic_rank.cmp(&b.analytic_rank))
+    });
+
+    // Map the measured winner back onto the full config.
+    let best = &rows[0];
+    let sp = best.plan.schedule_plan();
+    let b = max_batch_for_plan(cfg, &sp, gpu).max_batch;
+    let decision = AutoTempoDecision {
+        plan: best.plan.clone(),
+        max_batch: b,
+        throughput: plan_throughput_at(cfg, &sp, gpu, b.max(1)),
+        rationale: format!(
+            "measured probe: '{}' fastest of {k} measured candidates \
+             ({:.3} ms/step at {}, analytic rank {}, peak drift {:+.1}%)",
+            best.label,
+            best.measured_step_s * 1e3,
+            pcfg.name,
+            best.analytic_rank + 1,
+            best.peak_drift.drift_pct(),
+        ),
+    };
+    Ok(ProbeReport { probe_cfg: pcfg, candidates: full.len(), rows, decision })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_config_shrinks_every_axis() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let p = probe_config(&cfg);
+        assert_eq!(p.hidden, 64);
+        assert_eq!(p.layers, 2);
+        assert_eq!(p.seq_len, 16);
+        assert_eq!(p.vocab_size, 256);
+        assert_eq!(p.hidden % p.heads, 0);
+        assert!(p.max_position >= p.seq_len);
+        assert!(p.name.ends_with("-probe"));
+    }
+
+    #[test]
+    fn candidate_family_covers_all_residency_arms() {
+        let c = candidates(4);
+        assert!(c.iter().any(|(_, p)| p.checkpointed_layers() == 4));
+        assert!(c.iter().any(|(_, p)| p.offloaded_layers() == 4));
+        assert!(c.iter().any(|(_, p)| p.applied_layers() == 4));
+        assert!(c.iter().any(|(_, p)| p.applied_layers() == 0 && p.checkpointed_layers() == 0));
+        // labels are unique — they key the drift report
+        let mut labels: Vec<_> = c.iter().map(|(l, _)| *l).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), c.len());
+    }
+
+    #[test]
+    fn measured_probe_ranks_by_wall_clock_and_reports_drift() {
+        let cfg = ModelConfig::bert_tiny();
+        let engine = ExperimentEngine::serial();
+        let r = measured_probe(&cfg, Gpu::Rtx2080Ti, 3, 7, &engine).unwrap();
+        assert_eq!(r.candidates, 10);
+        assert_eq!(r.rows.len(), 3);
+        for w in r.rows.windows(2) {
+            assert!(w[0].measured_step_s <= w[1].measured_step_s);
+        }
+        let mut saw_rel_one = false;
+        for row in &r.rows {
+            assert!(row.loss.is_finite(), "{}: loss {}", row.label, row.loss);
+            assert!(row.measured_step_s > 0.0 && row.modeled_step_s > 0.0);
+            assert!(row.measured_peak_bytes > 0 && row.modeled_peak_bytes > 0);
+            assert!(row.time_drift.ratio().is_finite());
+            // the interpreter meters the same banks and buffers the
+            // liveness timeline prices — the columns must stay in the
+            // same ballpark at probe dims
+            let ratio = row.peak_drift.ratio();
+            assert!((0.2..5.0).contains(&ratio), "{}: peak ratio {ratio}", row.label);
+            saw_rel_one |= row.time_drift.measured == 1.0;
+        }
+        // exactly the fastest measured candidate normalizes to 1.0
+        assert!(saw_rel_one);
+        assert_eq!(r.decision.plan.per_layer.len(), cfg.layers);
+        assert!(r.decision.throughput > 0.0);
+        assert!(r.decision.rationale.contains("measured probe"));
+    }
+
+    #[test]
+    fn measured_probe_rejects_zero_top_k() {
+        let cfg = ModelConfig::bert_tiny();
+        assert!(measured_probe(&cfg, Gpu::V100, 0, 1, &ExperimentEngine::serial()).is_err());
+    }
+}

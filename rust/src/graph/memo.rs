@@ -43,6 +43,25 @@ pub struct CacheStats {
     pub approx_bytes: u64,
 }
 
+impl CacheStats {
+    /// Counters scoped to the work done since `baseline` was
+    /// snapshotted: the monotone `hits`/`misses` columns become deltas
+    /// (saturating, so a stale baseline cannot underflow), while
+    /// `entries`/`approx_bytes` stay absolute — they describe what is
+    /// resident *now*, not a rate. `tempo placement --stats` and the
+    /// placement bench report these scoped rows so one search's cache
+    /// behaviour is readable even late in a long-lived process (see
+    /// [`crate::graph::cache_stats_since`]).
+    pub fn since(&self, baseline: &CacheStats) -> CacheStats {
+        CacheStats {
+            entries: self.entries,
+            hits: self.hits.saturating_sub(baseline.hits),
+            misses: self.misses.saturating_sub(baseline.misses),
+            approx_bytes: self.approx_bytes,
+        }
+    }
+}
+
 struct Generations<K, V> {
     current: HashMap<K, Arc<V>>,
     previous: HashMap<K, Arc<V>>,
@@ -326,6 +345,20 @@ mod tests {
         assert!(stats.hits >= 2 && stats.misses >= 4, "{stats:?}");
         cache.clear();
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn since_scopes_the_monotone_counters_only() {
+        let base = CacheStats { entries: 3, hits: 10, misses: 4, approx_bytes: 96 };
+        let now = CacheStats { entries: 5, hits: 25, misses: 7, approx_bytes: 160 };
+        let scoped = now.since(&base);
+        assert_eq!(scoped.hits, 15);
+        assert_eq!(scoped.misses, 3);
+        assert_eq!(scoped.entries, 5, "entries stay absolute");
+        assert_eq!(scoped.approx_bytes, 160, "bytes stay absolute");
+        // a stale (future) baseline saturates instead of wrapping
+        let stale = base.since(&now);
+        assert_eq!((stale.hits, stale.misses), (0, 0));
     }
 
     #[test]

@@ -87,6 +87,25 @@ pub fn cache_stats() -> Vec<(&'static str, CacheStats)> {
     ]
 }
 
+/// [`cache_stats`] scoped to the work done since `baseline` (an earlier
+/// [`cache_stats`] snapshot): hit/miss counters become deltas via
+/// [`CacheStats::since`], entry/byte columns stay absolute. Caches
+/// missing from the baseline (e.g. one added after the snapshot was
+/// serialized) are reported against a zero baseline.
+pub fn cache_stats_since(baseline: &[(&'static str, CacheStats)]) -> Vec<(&'static str, CacheStats)> {
+    cache_stats()
+        .into_iter()
+        .map(|(name, now)| {
+            let base = baseline
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, s)| *s)
+                .unwrap_or_default();
+            (name, now.since(&base))
+        })
+        .collect()
+}
+
 /// Drop every cached plan-pricing summary (schedule + chunk caches) —
 /// cold-start benchmarking. Block summaries are left in place: they
 /// belong to the IR layer, not the plan pricer.

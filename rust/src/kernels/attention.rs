@@ -1,0 +1,324 @@
+//! Multi-head attention kernels over `[B, S, H]` row-major buffers
+//! (head `a` owns columns `[a·D, (a+1)·D)`), plus the fused
+//! single-pass forward.
+//!
+//! The composed kernels mirror the tape's op granularity
+//! (`attn.scores` → `attn.softmax` → `attn.dropout` → `attn.pv`) so
+//! the interpreter can retain/free exactly what the plan says; the
+//! fused forward collapses score+softmax+context into one pass over a
+//! single `S`-float scratch row per output row — the shape of the
+//! Tempo fused core whose memory the output-only softmax models — and
+//! is tolerance-tested against the composed path. Padding positions
+//! get an additive `−1e9` score bias before the softmax, matching the
+//! BERT additive-mask convention.
+//!
+//! Everything parallelizes over output rows in fixed bands; the i/j
+//! reductions inside dk/dv run serially in index order, so results are
+//! bit-identical across `--jobs` counts.
+
+use crate::coordinator::ExperimentEngine;
+
+use super::{axpy, dot, fill_rows};
+
+/// Additive score bias applied at padding positions.
+pub const MASK_BIAS: f32 = -1e9;
+
+/// Attention problem sizes.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnDims {
+    /// Batch size B.
+    pub batch: usize,
+    /// Head count A.
+    pub heads: usize,
+    /// Sequence length S.
+    pub seq: usize,
+    /// Per-head width D = H/A.
+    pub head_dim: usize,
+}
+
+impl AttnDims {
+    /// Hidden width H = A·D.
+    pub fn hidden(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Score scale 1/√D.
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+}
+
+#[inline]
+fn bias(attn_mask: Option<&[i32]>, b: usize, j: usize, seq: usize) -> f32 {
+    match attn_mask {
+        Some(m) if m[b * seq + j] == 0 => MASK_BIAS,
+        _ => 0.0,
+    }
+}
+
+/// Masked, scaled scores `QKᵀ/√D + bias → [B, A, S, S]`.
+pub fn attn_scores(
+    engine: &ExperimentEngine,
+    q: &[f32],
+    k: &[f32],
+    attn_mask: Option<&[i32]>,
+    d: AttnDims,
+) -> Vec<f32> {
+    let (s, dd, h) = (d.seq, d.head_dim, d.hidden());
+    let scale = d.scale();
+    fill_rows(engine, d.batch * d.heads * s, s, |row, out| {
+        let i = row % s;
+        let a = (row / s) % d.heads;
+        let b = row / (s * d.heads);
+        let qr = &q[(b * s + i) * h + a * dd..][..dd];
+        for (j, o) in out.iter_mut().enumerate() {
+            let kr = &k[(b * s + j) * h + a * dd..][..dd];
+            *o = dot(qr, kr) * scale + bias(attn_mask, b, j, s);
+        }
+    })
+}
+
+/// Backward of [`attn_scores`]: `(dQ, dK)`, both `[B, S, H]`. The mask
+/// bias is additive, so it vanishes from the gradient.
+pub fn attn_scores_bwd(
+    engine: &ExperimentEngine,
+    dscores: &[f32],
+    q: &[f32],
+    k: &[f32],
+    d: AttnDims,
+) -> (Vec<f32>, Vec<f32>) {
+    let (s, dd, h) = (d.seq, d.head_dim, d.hidden());
+    let scale = d.scale();
+    let dq = fill_rows(engine, d.batch * s, h, |row, out| {
+        let (b, i) = (row / s, row % s);
+        for a in 0..d.heads {
+            let ds = &dscores[((b * d.heads + a) * s + i) * s..][..s];
+            let o = &mut out[a * dd..(a + 1) * dd];
+            for (j, &dv) in ds.iter().enumerate() {
+                axpy(o, dv * scale, &k[(b * s + j) * h + a * dd..][..dd]);
+            }
+        }
+    });
+    let dk = fill_rows(engine, d.batch * s, h, |row, out| {
+        let (b, j) = (row / s, row % s);
+        for a in 0..d.heads {
+            let o = &mut out[a * dd..(a + 1) * dd];
+            for i in 0..s {
+                let dv = dscores[((b * d.heads + a) * s + i) * s + j];
+                axpy(o, dv * scale, &q[(b * s + i) * h + a * dd..][..dd]);
+            }
+        }
+    });
+    (dq, dk)
+}
+
+/// Context `probs·V`: `[B, A, S, S] × [B, S, H] → [B, S, H]`.
+pub fn attn_context(
+    engine: &ExperimentEngine,
+    probs: &[f32],
+    v: &[f32],
+    d: AttnDims,
+) -> Vec<f32> {
+    let (s, dd, h) = (d.seq, d.head_dim, d.hidden());
+    fill_rows(engine, d.batch * s, h, |row, out| {
+        let (b, i) = (row / s, row % s);
+        for a in 0..d.heads {
+            let pr = &probs[((b * d.heads + a) * s + i) * s..][..s];
+            let o = &mut out[a * dd..(a + 1) * dd];
+            for (j, &p) in pr.iter().enumerate() {
+                axpy(o, p, &v[(b * s + j) * h + a * dd..][..dd]);
+            }
+        }
+    })
+}
+
+/// Backward of [`attn_context`]: `(dprobs [B,A,S,S], dV [B,S,H])`.
+pub fn attn_context_bwd(
+    engine: &ExperimentEngine,
+    dctx: &[f32],
+    probs: &[f32],
+    v: &[f32],
+    d: AttnDims,
+) -> (Vec<f32>, Vec<f32>) {
+    let (s, dd, h) = (d.seq, d.head_dim, d.hidden());
+    let dprobs = fill_rows(engine, d.batch * d.heads * s, s, |row, out| {
+        let i = row % s;
+        let a = (row / s) % d.heads;
+        let b = row / (s * d.heads);
+        let dr = &dctx[(b * s + i) * h + a * dd..][..dd];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(dr, &v[(b * s + j) * h + a * dd..][..dd]);
+        }
+    });
+    let dv = fill_rows(engine, d.batch * s, h, |row, out| {
+        let (b, j) = (row / s, row % s);
+        for a in 0..d.heads {
+            let o = &mut out[a * dd..(a + 1) * dd];
+            for i in 0..s {
+                let p = probs[((b * d.heads + a) * s + i) * s + j];
+                axpy(o, p, &dctx[(b * s + i) * h + a * dd..][..dd]);
+            }
+        }
+    });
+    (dprobs, dv)
+}
+
+/// Fused attention forward: scores, max-subtracted softmax and context
+/// in one pass per output row, never materializing the `[B, A, S, S]`
+/// map (dropout disabled — the composed path owns the training
+/// semantics; this is the memory shape the §3.4 rewrite prices).
+pub fn attention_fwd(
+    engine: &ExperimentEngine,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    attn_mask: Option<&[i32]>,
+    d: AttnDims,
+) -> Vec<f32> {
+    let (s, dd, h) = (d.seq, d.head_dim, d.hidden());
+    let scale = d.scale();
+    fill_rows(engine, d.batch * s, h, |row, out| {
+        let (b, i) = (row / s, row % s);
+        let mut srow = vec![0f32; s];
+        for a in 0..d.heads {
+            let qr = &q[(b * s + i) * h + a * dd..][..dd];
+            let mut m = f32::NEG_INFINITY;
+            for (j, sv) in srow.iter_mut().enumerate() {
+                let kr = &k[(b * s + j) * h + a * dd..][..dd];
+                *sv = dot(qr, kr) * scale + bias(attn_mask, b, j, s);
+                m = m.max(*sv);
+            }
+            let mut z = 0f64;
+            for sv in srow.iter_mut() {
+                let e = f64::from(*sv - m).exp();
+                *sv = e as f32;
+                z += e;
+            }
+            let inv = (1.0 / z) as f32;
+            let o = &mut out[a * dd..(a + 1) * dd];
+            for (j, &p) in srow.iter().enumerate() {
+                axpy(o, p * inv, &v[(b * s + j) * h + a * dd..][..dd]);
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::norm::softmax_fwd;
+    use crate::tensor::Rng;
+
+    fn dims() -> AttnDims {
+        AttnDims { batch: 2, heads: 3, seq: 7, head_dim: 4 }
+    }
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn fused_forward_matches_composed_path() {
+        let d = dims();
+        let (n, sc) = (d.batch * d.seq * d.hidden(), d.batch * d.heads * d.seq);
+        let mut rng = Rng::new(9);
+        let q = randn(&mut rng, n);
+        let k = randn(&mut rng, n);
+        let v = randn(&mut rng, n);
+        let mut mask = vec![1i32; d.batch * d.seq];
+        mask[5] = 0; // one padding slot in batch 0
+        let e1 = ExperimentEngine::serial();
+        let scores = attn_scores(&e1, &q, &k, Some(&mask), d);
+        let probs = softmax_fwd(&e1, &scores, sc, d.seq);
+        let composed = attn_context(&e1, &probs, &v, d);
+        let fused = attention_fwd(&e1, &q, &k, &v, Some(&mask), d);
+        for (a, b) in fused.iter().zip(&composed) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(fused, attention_fwd(&ExperimentEngine::new(4), &q, &k, &v, Some(&mask), d));
+        // masked position gets ~zero probability everywhere
+        for row in 0..sc {
+            if row / (d.seq * d.heads) == 0 {
+                assert!(probs[row * d.seq + 5] < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn context_bwd_matches_finite_differences() {
+        let d = dims();
+        let (n, sc) = (d.batch * d.seq * d.hidden(), d.batch * d.heads * d.seq);
+        let mut rng = Rng::new(10);
+        let probs = {
+            let x = randn(&mut rng, sc * d.seq);
+            softmax_fwd(&ExperimentEngine::serial(), &x, sc, d.seq)
+        };
+        let v = randn(&mut rng, n);
+        let dctx = randn(&mut rng, n);
+        let e = ExperimentEngine::serial();
+        let (dprobs, dv) = attn_context_bwd(&e, &dctx, &probs, &v, d);
+        let loss = |probs: &[f32], v: &[f32]| -> f64 {
+            attn_context(&e, probs, v, d)
+                .iter()
+                .zip(&dctx)
+                .map(|(&a, &b)| f64::from(a) * f64::from(b))
+                .sum()
+        };
+        let h = 1e-3f32;
+        for &idx in &[0usize, 17, n - 1] {
+            let mut vp = v.clone();
+            vp[idx] += h;
+            let mut vm = v.clone();
+            vm[idx] -= h;
+            let fd = ((loss(&probs, &vp) - loss(&probs, &vm)) / (2.0 * f64::from(h))) as f32;
+            assert!((dv[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()), "dv[{idx}]={} fd={fd}", dv[idx]);
+        }
+        for &idx in &[3usize, sc * d.seq - 2] {
+            let mut pp = probs.clone();
+            pp[idx] += h;
+            let mut pm = probs.clone();
+            pm[idx] -= h;
+            let fd = ((loss(&pp, &v) - loss(&pm, &v)) / (2.0 * f64::from(h))) as f32;
+            assert!(
+                (dprobs[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()),
+                "dprobs[{idx}]={} fd={fd}",
+                dprobs[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn scores_bwd_matches_finite_differences() {
+        let d = dims();
+        let n = d.batch * d.seq * d.hidden();
+        let sc = d.batch * d.heads * d.seq;
+        let mut rng = Rng::new(12);
+        let q = randn(&mut rng, n);
+        let k = randn(&mut rng, n);
+        let ds = randn(&mut rng, sc * d.seq);
+        let e = ExperimentEngine::serial();
+        let (dq, dk) = attn_scores_bwd(&e, &ds, &q, &k, d);
+        let loss = |q: &[f32], k: &[f32]| -> f64 {
+            attn_scores(&e, q, k, None, d)
+                .iter()
+                .zip(&ds)
+                .map(|(&a, &b)| f64::from(a) * f64::from(b))
+                .sum()
+        };
+        let h = 1e-3f32;
+        for &idx in &[0usize, n / 2, n - 1] {
+            let mut qp = q.clone();
+            qp[idx] += h;
+            let mut qm = q.clone();
+            qm[idx] -= h;
+            let fd = ((loss(&qp, &k) - loss(&qm, &k)) / (2.0 * f64::from(h))) as f32;
+            assert!((dq[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()), "dq[{idx}]={} fd={fd}", dq[idx]);
+            let mut kp = k.clone();
+            kp[idx] += h;
+            let mut km = k.clone();
+            km[idx] -= h;
+            let fd = ((loss(&q, &kp) - loss(&q, &km)) / (2.0 * f64::from(h))) as f32;
+            assert!((dk[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()), "dk[{idx}]={} fd={fd}", dk[idx]);
+        }
+    }
+}

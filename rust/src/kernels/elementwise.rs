@@ -1,0 +1,147 @@
+//! Flat elementwise kernels: the GELU map (with the §3.1 in-place
+//! backward), seeded dropout, residual adds and scaling.
+//!
+//! All of these chunk the tensor into fixed [`CHUNK_ELEMS`] spans and
+//! fan the chunks out on the engine. Dropout's randomness is keyed
+//! `(op_seed, chunk_index, offset)` — a per-chunk SplitMix64 stream
+//! forked from the op seed — so a mask depends only on the seed and
+//! the element position, never on worker count, tape position or plan
+//! shape. That single property carries the backend's determinism and
+//! cross-plan parity contracts (DESIGN.md §Kernels).
+//!
+//! [`CHUNK_ELEMS`]: super::CHUNK_ELEMS
+
+use crate::coordinator::ExperimentEngine;
+use crate::tensor::Rng;
+
+use super::{map_elems, math, run_chunks};
+
+/// Fused GELU forward: `(y, mask)` with the paper's one-byte mask
+/// recording `x ≥ x*` (footnote 3). The input is then recoverable per
+/// branch, which is what lets the in-place rewrite discard it.
+pub fn gelu_fwd(engine: &ExperimentEngine, x: &[f32]) -> (Vec<f32>, Vec<u8>) {
+    let chunks = run_chunks(engine, x.len(), |_, start, len| {
+        let span = &x[start..start + len];
+        let mut y = Vec::with_capacity(len);
+        let mut m = Vec::with_capacity(len);
+        for &v in span {
+            y.push(math::gelu(f64::from(v)) as f32);
+            m.push(u8::from(f64::from(v) >= math::XSTAR));
+        }
+        (y, m)
+    });
+    let mut y = Vec::with_capacity(x.len());
+    let mut m = Vec::with_capacity(x.len());
+    for (cy, cm) in chunks {
+        y.extend_from_slice(&cy);
+        m.extend_from_slice(&cm);
+    }
+    (y, m)
+}
+
+/// Stock GELU backward from the retained *input*: `dx = dy·GELU′(x)`.
+pub fn gelu_bwd(engine: &ExperimentEngine, dy: &[f32], x: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), x.len());
+    map_elems(engine, dy, |i, d| (f64::from(d) * math::gelu_grad(f64::from(x[i]))) as f32)
+}
+
+/// In-place GELU backward from `(y, mask)` alone (§3.1):
+/// `dx = dy · g(y, m)` with `g = GELU′ ∘ GELU⁻¹` evaluated by exact
+/// Newton inversion ([`math::gelu_out_grad`]) rather than the paper's
+/// lossy polynomial table.
+pub fn gelu_bwd_inplace(engine: &ExperimentEngine, dy: &[f32], y: &[f32], mask: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), y.len());
+    debug_assert_eq!(dy.len(), mask.len());
+    map_elems(engine, dy, |i, d| {
+        (f64::from(d) * math::gelu_out_grad(f64::from(y[i]), mask[i] != 0)) as f32
+    })
+}
+
+/// Seeded dropout mask (1 = keep), Bernoulli(1−p) per element.
+/// Deterministic in `(op_seed, element index)` only.
+pub fn dropout_mask(engine: &ExperimentEngine, len: usize, p: f32, op_seed: u64) -> Vec<u8> {
+    let chunks = run_chunks(engine, len, |c, _, n| {
+        let mut rng = Rng::new(op_seed).fork(c as u64);
+        let mut m = Vec::with_capacity(n);
+        for _ in 0..n {
+            m.push(u8::from(rng.next_f64() >= f64::from(p)));
+        }
+        m
+    });
+    let mut out = Vec::with_capacity(len);
+    for c in chunks {
+        out.extend_from_slice(&c);
+    }
+    out
+}
+
+/// Apply a dropout mask with inverted-scaling: `y = x·m/(1−p)`. The
+/// same map is the dropout backward (applied to `dy`), and the §3.3
+/// recompute of a discarded dropped tensor — all three call sites run
+/// identical arithmetic, so recomputed values are bit-equal to the
+/// originals.
+pub fn dropout_apply(engine: &ExperimentEngine, x: &[f32], mask: &[u8], p: f32) -> Vec<f32> {
+    debug_assert_eq!(x.len(), mask.len());
+    let scale = 1.0 / (1.0 - p);
+    map_elems(engine, x, |i, v| if mask[i] != 0 { v * scale } else { 0.0 })
+}
+
+/// Elementwise residual add `a + b`.
+pub fn add(engine: &ExperimentEngine, a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    map_elems(engine, a, |i, v| v + b[i])
+}
+
+/// Elementwise scale `s·x`.
+pub fn scale(engine: &ExperimentEngine, x: &[f32], s: f32) -> Vec<f32> {
+    map_elems(engine, x, |_, v| v * s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_inplace_backward_matches_input_backward() {
+        let e = ExperimentEngine::serial();
+        let x: Vec<f32> = (0..4000).map(|i| -6.0 + 12.0 * i as f32 / 3999.0).collect();
+        let dy = vec![1.0f32; x.len()];
+        let (y, m) = gelu_fwd(&e, &x);
+        let from_input = gelu_bwd(&e, &dy, &x);
+        let from_output = gelu_bwd_inplace(&e, &dy, &y, &m);
+        for (i, (&a, &b)) in from_input.iter().zip(&from_output).enumerate() {
+            if f64::from(x[i]) <= math::X_LO_CLAMP {
+                assert_eq!(b, 0.0, "clamp region returns exactly 0");
+                assert!(a.abs() < 6e-4, "clamped derivative was tiny anyway");
+            } else {
+                // f32 rounding of y softens the inversion near the
+                // minimum; elsewhere the branches agree tightly
+                assert!((a - b).abs() < 2e-4, "x={} {a} vs {b}", x[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn dropout_mask_is_positional_and_jobs_invariant() {
+        let e1 = ExperimentEngine::serial();
+        let e4 = ExperimentEngine::new(4);
+        let n = super::super::CHUNK_ELEMS * 2 + 100;
+        let m1 = dropout_mask(&e1, n, 0.25, 0xDEAD);
+        assert_eq!(m1, dropout_mask(&e4, n, 0.25, 0xDEAD));
+        assert_ne!(m1, dropout_mask(&e1, n, 0.25, 0xBEEF), "seed matters");
+        // a shorter tensor shares its prefix (positional streams)
+        let short = dropout_mask(&e1, 100, 0.25, 0xDEAD);
+        assert_eq!(&m1[..100], &short[..]);
+        let keep = m1.iter().filter(|&&b| b != 0).count() as f64 / n as f64;
+        assert!((keep - 0.75).abs() < 0.02, "keep rate {keep}");
+    }
+
+    #[test]
+    fn dropout_apply_scales_survivors() {
+        let e = ExperimentEngine::serial();
+        let x = vec![2.0f32; 8];
+        let mask = vec![1, 0, 1, 0, 1, 1, 0, 1];
+        let y = dropout_apply(&e, &x, &mask, 0.5);
+        assert_eq!(y, vec![4.0, 0.0, 4.0, 0.0, 4.0, 4.0, 0.0, 4.0]);
+    }
+}

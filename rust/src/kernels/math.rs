@@ -1,0 +1,207 @@
+//! Scalar f64 math for the GELU family: `erf`, GELU, its derivative,
+//! and the *output-side* inversion that the §3.1 in-place rewrite
+//! needs to run its backward from `(y, mask)` alone.
+//!
+//! `std` ships no `erf`, and the crate takes no dependencies, so the
+//! error function is implemented here via the positive-term Kummer
+//! series — every term has the same sign, so there is no cancellation
+//! and the result is accurate to a few ulps across the whole useful
+//! range (|x| < 6; beyond that `erf` is ±1 to ~2e-17).
+//!
+//! Where the paper (Appendix F.1) approximates the backward factor
+//! `g(y, m) = GELU′(GELU⁻¹(y, m))` with lossy degree-≤13 polynomials,
+//! this CPU implementation inverts GELU *exactly* with a safeguarded
+//! Newton iteration (bisection fallback, bracketed per mask branch) —
+//! a handful of f64 transcendental evaluations per element, which is
+//! cheap on a CPU and removes the approximation-error axis from the
+//! gradient-parity tests. The paper's clamp semantics are kept: on the
+//! drop branch, inputs left of [`X_LO_CLAMP`] have |GELU′| < 6e-4 and
+//! the backward factor is 0.
+
+/// GELU minimum abscissa x\* — the root of GELU′, solved by bisection
+/// in f64 (matches `python/compile/kernels/gelu.py::XSTAR`). The
+/// forward mask records `x ≥ XSTAR`; GELU is one-to-one on each side.
+pub const XSTAR: f64 = -0.751_791_524_693_564_47;
+
+/// GELU(x\*) — the minimum value y\* (`gelu.py::YSTAR`).
+pub const YSTAR: f64 = -0.169_971_207_479_903_69;
+
+/// Drop-branch clamp: for `x ≤ −4` the derivative magnitude is below
+/// 6e-4 and the in-place backward returns 0 (paper Appendix F.1).
+pub const X_LO_CLAMP: f64 = -4.0;
+
+/// GELU([`X_LO_CLAMP`]): drop-branch outputs above this value came
+/// from the clamp region, so their backward factor is 0.
+pub const GELU_AT_X_LO: f64 = -1.266_849_673_324_799_1e-4;
+
+/// Error function.
+///
+/// Kummer-series form `erf(x) = 2/√π · e^(−x²) · Σₙ x^(2n+1)·2ⁿ/(2n+1)!!`
+/// — all terms positive, so no cancellation at any `x`.
+pub fn erf(x: f64) -> f64 {
+    let ax = x.abs();
+    if ax == 0.0 {
+        return x;
+    }
+    if ax >= 6.0 {
+        // |erfc| < 3e-17: saturated at f64 precision.
+        return 1.0f64.copysign(x);
+    }
+    let x2 = ax * ax;
+    let mut term = ax;
+    let mut sum = ax;
+    let mut n = 0u32;
+    while term > sum * 1e-18 && n < 400 {
+        n += 1;
+        term *= 2.0 * x2 / (2.0 * f64::from(n) + 1.0);
+        sum += term;
+    }
+    let r = 2.0 / std::f64::consts::PI.sqrt() * (-x2).exp() * sum;
+    r.copysign(x)
+}
+
+/// Standard normal CDF Φ(x).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x * std::f64::consts::FRAC_1_SQRT_2))
+}
+
+/// Standard normal PDF φ(x).
+pub fn norm_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Exact (erf-based) GELU: `x · Φ(x)`.
+pub fn gelu(x: f64) -> f64 {
+    x * norm_cdf(x)
+}
+
+/// GELU derivative: `Φ(x) + x · φ(x)`.
+pub fn gelu_grad(x: f64) -> f64 {
+    norm_cdf(x) + x * norm_pdf(x)
+}
+
+/// Invert `y = GELU(x)` on the branch selected by `keep` (the forward
+/// mask `x ≥ x*`). Safeguarded Newton: the bracket shrinks every
+/// iteration (bisection step whenever Newton leaves it), so the loop
+/// always converges; Newton makes it quadratic near the root.
+pub fn gelu_invert(y: f64, keep: bool) -> f64 {
+    if y <= YSTAR {
+        // At (or, after f32 rounding, fractionally below) the minimum.
+        return XSTAR;
+    }
+    if keep {
+        // Increasing branch [x*, ∞). gelu(x) ≥ x + y* gives the bracket.
+        let hi = if y > 1.0 { y - YSTAR } else { 1.2 };
+        solve(y, XSTAR, hi, true)
+    } else {
+        // Decreasing branch (−∞, x*]; the clamp region never reaches
+        // the solver (callers check GELU_AT_X_LO first), but keep the
+        // bracket defensive.
+        if y >= GELU_AT_X_LO {
+            return X_LO_CLAMP;
+        }
+        solve(y, X_LO_CLAMP, XSTAR, false)
+    }
+}
+
+/// The in-place GELU backward factor `g(y, m) = GELU′(GELU⁻¹(y, m))`,
+/// with the paper's drop-branch clamp (`x ≤ −4 → 0`).
+pub fn gelu_out_grad(y: f64, keep: bool) -> f64 {
+    if y <= YSTAR {
+        return 0.0; // the minimum itself: GELU′(x*) = 0
+    }
+    if keep {
+        gelu_grad(gelu_invert(y, true))
+    } else if y >= GELU_AT_X_LO {
+        0.0 // clamp region (Appendix F.1)
+    } else {
+        gelu_grad(gelu_invert(y, false))
+    }
+}
+
+fn solve(y: f64, mut lo: f64, mut hi: f64, increasing: bool) -> f64 {
+    let mut x = 0.5 * (lo + hi);
+    for _ in 0..80 {
+        let f = gelu(x) - y;
+        if f == 0.0 {
+            return x;
+        }
+        if (f > 0.0) == increasing {
+            hi = x;
+        } else {
+            lo = x;
+        }
+        let d = gelu_grad(x);
+        let newton = x - f / d;
+        x = if newton.is_finite() && newton > lo && newton < hi {
+            newton
+        } else {
+            0.5 * (lo + hi)
+        };
+        if hi - lo <= f64::EPSILON * (1.0 + x.abs()) {
+            break;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_matches_known_values() {
+        // Reference values from the f64 math library (15+ digits).
+        let cases = [
+            (0.5, 0.520_499_877_813_046_5),
+            (1.0, 0.842_700_792_949_714_9),
+            (2.0, 0.995_322_265_018_952_7),
+            (-1.5, -0.966_105_146_475_310_7),
+            (4.0, 0.999_999_984_582_742_1),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 1e-14, "erf({x}) = {} want {want}", erf(x));
+        }
+        assert_eq!(erf(7.0), 1.0);
+        assert_eq!(erf(-7.0), -1.0);
+        assert_eq!(erf(0.0), 0.0);
+    }
+
+    #[test]
+    fn gelu_minimum_constants_are_consistent() {
+        // x* is the root of GELU′ and y* its value.
+        assert!(gelu_grad(XSTAR).abs() < 1e-12);
+        assert!((gelu(XSTAR) - YSTAR).abs() < 1e-15);
+        assert!((gelu(X_LO_CLAMP) - GELU_AT_X_LO).abs() < 1e-18);
+    }
+
+    #[test]
+    fn invert_round_trips_both_branches() {
+        for i in 0..200 {
+            // keep branch: x ∈ [x*, 8]
+            let x = XSTAR + (8.0 - XSTAR) * f64::from(i) / 199.0;
+            let xi = gelu_invert(gelu(x), true);
+            assert!((xi - x).abs() < 1e-9 * (1.0 + x.abs()), "keep x={x} xi={xi}");
+            // drop branch: x ∈ [−4, x*]
+            let x = X_LO_CLAMP + (XSTAR - X_LO_CLAMP) * f64::from(i) / 199.0;
+            let xi = gelu_invert(gelu(x), false);
+            assert!((xi - x).abs() < 1e-6 * (1.0 + x.abs()), "drop x={x} xi={xi}");
+        }
+    }
+
+    #[test]
+    fn out_grad_matches_direct_derivative() {
+        for i in 0..400 {
+            let x = -3.9 + 10.0 * f64::from(i) / 399.0;
+            let keep = x >= XSTAR;
+            let g = gelu_out_grad(gelu(x), keep);
+            assert!(
+                (g - gelu_grad(x)).abs() < 1e-7,
+                "x={x} g={g} direct={}",
+                gelu_grad(x)
+            );
+        }
+        // clamp region: factor pinned to zero
+        assert_eq!(gelu_out_grad(gelu(-5.0), false), 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Dense f32 GEMM in the three orientations a training step needs:
+//! `A·B` (forward), `A·Bᵀ` (activation gradients against a stored
+//! weight, and QKᵀ scores), and `Aᵀ·B` (weight gradients). All three
+//! parallelize over *output* rows in fixed [`BAND_ROWS`] bands, so the
+//! result is bit-identical for every `--jobs` setting; inner loops are
+//! contiguous-slice axpy/dot forms that LLVM autovectorizes 8-wide.
+//!
+//! [`BAND_ROWS`]: super::BAND_ROWS
+
+use crate::coordinator::ExperimentEngine;
+
+use super::{axpy, dot, fill_rows};
+
+/// `A[m,k] · B[k,n] → [m,n]`.
+pub fn matmul(engine: &ExperimentEngine, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_bias(engine, a, b, None, m, k, n)
+}
+
+/// `A[m,k] · B[k,n] (+ bias[n]) → [m,n]` — the fused forward form.
+///
+/// Row-parallel: each output row walks A's row once and accumulates
+/// axpy over B's rows (the `ikj` order — unit-stride streaming through
+/// both operands).
+pub fn matmul_bias(
+    engine: &ExperimentEngine,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    fill_rows(engine, m, n, |i, out| {
+        if let Some(bs) = bias {
+            out.copy_from_slice(bs);
+        }
+        let ar = &a[i * k..(i + 1) * k];
+        for (l, &av) in ar.iter().enumerate() {
+            axpy(out, av, &b[l * n..(l + 1) * n]);
+        }
+    })
+}
+
+/// `A[m,k] · B[n,k]ᵀ → [m,n]` — rows-times-rows dot products.
+///
+/// The backward's dX = dY·Wᵀ uses this against the stored row-major
+/// weight; attention's QKᵀ uses it per head.
+pub fn matmul_bt(
+    engine: &ExperimentEngine,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    fill_rows(engine, m, n, |i, out| {
+        let ar = &a[i * k..(i + 1) * k];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(ar, &b[j * k..(j + 1) * k]);
+        }
+    })
+}
+
+/// `A[m,k]ᵀ · B[m,n] → [k,n]` — the weight-gradient form dW = Xᵀ·dY.
+///
+/// Parallel over the k output rows; the m-sum inside each row runs
+/// serially in index order, so the reduction is deterministic across
+/// worker counts.
+pub fn matmul_at(
+    engine: &ExperimentEngine,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    fill_rows(engine, k, n, |i, out| {
+        for l in 0..m {
+            axpy(out, a[l * k + i], &b[l * n..(l + 1) * n]);
+        }
+    })
+}
+
+/// Bias gradient: column sums of `dY[m,n] → [n]`. Serial in row order
+/// (the whole reduction is one pass; parallel bands would buy nothing
+/// on a vector this small and the order must stay fixed anyway).
+pub fn bias_grad(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    let mut out = vec![0f32; n];
+    for l in 0..m {
+        for (o, &v) in out.iter_mut().zip(&dy[l * n..(l + 1) * n]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                for l in 0..k {
+                    s += a[i * k + l] * b[l * n + j];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_orientations_match_naive_and_jobs() {
+        let (m, k, n) = (67, 33, 29);
+        let mut rng = crate::tensor::Rng::new(7);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let e1 = ExperimentEngine::serial();
+        let e4 = ExperimentEngine::new(4);
+
+        let ab = matmul(&e1, &a, &b, m, k, n);
+        close(&ab, &naive(&a, &b, m, k, n));
+        assert_eq!(ab, matmul(&e4, &a, &b, m, k, n), "jobs-invariant");
+
+        // A·Bᵀ against the transposed operand
+        let bt: Vec<f32> = {
+            let mut t = vec![0f32; n * k];
+            for l in 0..k {
+                for j in 0..n {
+                    t[j * k + l] = b[l * n + j];
+                }
+            }
+            t
+        };
+        let ab2 = matmul_bt(&e1, &a, &bt, m, k, n);
+        close(&ab2, &naive(&a, &b, m, k, n));
+        assert_eq!(ab2, matmul_bt(&e4, &a, &bt, m, k, n));
+
+        // Aᵀ·B: compare against naive on the transposed A
+        let at: Vec<f32> = {
+            let mut t = vec![0f32; k * m];
+            for i in 0..m {
+                for l in 0..k {
+                    t[l * m + i] = a[i * k + l];
+                }
+            }
+            t
+        };
+        let c: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let atc = matmul_at(&e1, &a, &c, m, k, n);
+        close(&atc, &naive(&at, &c, k, m, n));
+        assert_eq!(atc, matmul_at(&e4, &a, &c, m, k, n));
+    }
+
+    #[test]
+    fn bias_rides_on_the_forward() {
+        let (m, k, n) = (3, 4, 5);
+        let a = vec![1f32; m * k];
+        let b = vec![2f32; k * n];
+        let bias: Vec<f32> = (0..n).map(|j| j as f32).collect();
+        let out = matmul_bias(&ExperimentEngine::serial(), &a, &b, Some(&bias), m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(out[i * n + j], 8.0 + j as f32);
+            }
+        }
+        assert_eq!(bias_grad(&out, m, n), vec![24.0, 27.0, 30.0, 33.0, 36.0]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Real CPU kernels for the graph IR — the numeric layer under
+//! [`crate::runtime::KernelBackend`].
+//!
+//! Every kernel here follows the same execution contract
+//! (DESIGN.md §Kernels):
+//!
+//! * **f32 storage, wide accumulation.** Activations and parameters
+//!   live in `f32` slices; dot products accumulate in 8 parallel f32
+//!   lanes (folded once at the end) and row statistics / transcendental
+//!   math run in `f64`, so the single rounding step happens at the
+//!   final store.
+//! * **Portable chunked SIMD.** Inner loops are written as chunked
+//!   8-wide slice iterations (`chunks_exact(8)` / `zip` over contiguous
+//!   slices) that LLVM autovectorizes on any target — no intrinsics,
+//!   no feature gates.
+//! * **Fixed-grain parallelism.** Work splits into *fixed-size* bands
+//!   ([`BAND_ROWS`] output rows, or [`CHUNK_ELEMS`] elements for flat
+//!   elementwise maps) fanned out on the
+//!   [`ExperimentEngine`](crate::coordinator::ExperimentEngine)
+//!   scoped-thread pool. The grain never depends on the worker count
+//!   and cross-band reductions are folded serially in band order, so
+//!   every kernel is **bit-identical across `--jobs` settings** — the
+//!   same contract the sweep engine gives the coordinator
+//!   (DESIGN.md §Concurrency).
+//!
+//! Module map: [`math`] (scalar `erf`/GELU family and the output-side
+//! GELU inversion the §3.1 in-place rewrite needs), [`matmul`] (dense
+//! GEMM in the three orientations training needs), [`norm`]
+//! (LayerNorm and softmax, forward and output-based backward per
+//! §3.2/§3.4), [`elementwise`] (GELU maps, seeded dropout, residual
+//! adds), [`attention`] (the per-head score/context kernels and the
+//! fused single-pass forward).
+
+pub mod attention;
+pub mod elementwise;
+pub mod math;
+pub mod matmul;
+pub mod norm;
+
+pub use attention::{
+    attention_fwd, attn_context, attn_context_bwd, attn_scores, attn_scores_bwd, AttnDims,
+};
+pub use elementwise::{
+    add, dropout_apply, dropout_mask, gelu_bwd, gelu_bwd_inplace, gelu_fwd, scale,
+};
+pub use matmul::{bias_grad, matmul, matmul_at, matmul_bias, matmul_bt};
+pub use norm::{
+    layernorm_bwd, layernorm_fwd, rstd_from_var, softmax_bwd, softmax_fwd, LayerNormBwd,
+    LayerNormFwd, LN_EPS,
+};
+
+use crate::coordinator::ExperimentEngine;
+
+/// Fixed row band: the parallel grain for row-parallel kernels.
+/// Deliberately independent of the worker count so banded reductions
+/// stay bit-stable across `--jobs` settings.
+pub const BAND_ROWS: usize = 64;
+
+/// Fixed element chunk for flat elementwise kernels (and the grain of
+/// their per-chunk dropout RNG streams).
+pub const CHUNK_ELEMS: usize = 4096;
+
+/// Split `rows` into [`BAND_ROWS`]-sized bands and run
+/// `f(first_row, band_rows)` across the engine's pool; slot `i` of the
+/// result is band `i`'s output regardless of completion order.
+pub fn run_bands<T: Send>(
+    engine: &ExperimentEngine,
+    rows: usize,
+    f: impl Fn(usize, usize) -> T + Sync,
+) -> Vec<T> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let bands = rows.div_ceil(BAND_ROWS);
+    engine
+        .run_cells(bands, |b| {
+            let r0 = b * BAND_ROWS;
+            Ok(f(r0, (rows - r0).min(BAND_ROWS)))
+        })
+        .into_iter()
+        .map(|r| r.expect("kernel bands are infallible"))
+        .collect()
+}
+
+/// Split a flat length into [`CHUNK_ELEMS`]-sized chunks and run
+/// `f(chunk_index, start, len)` across the pool (slot-stable).
+pub fn run_chunks<T: Send>(
+    engine: &ExperimentEngine,
+    len: usize,
+    f: impl Fn(usize, usize, usize) -> T + Sync,
+) -> Vec<T> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let chunks = len.div_ceil(CHUNK_ELEMS);
+    engine
+        .run_cells(chunks, |c| {
+            let start = c * CHUNK_ELEMS;
+            Ok(f(c, start, (len - start).min(CHUNK_ELEMS)))
+        })
+        .into_iter()
+        .map(|r| r.expect("kernel chunks are infallible"))
+        .collect()
+}
+
+/// Allocate a zeroed `rows × cols` matrix and fill it band-parallel;
+/// `f(row, out_row)` writes one output row.
+pub fn fill_rows(
+    engine: &ExperimentEngine,
+    rows: usize,
+    cols: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) -> Vec<f32> {
+    let bands = run_bands(engine, rows, |r0, n| {
+        let mut chunk = vec![0f32; n * cols];
+        for (j, row) in chunk.chunks_exact_mut(cols).enumerate() {
+            f(r0 + j, row);
+        }
+        chunk
+    });
+    let mut out = Vec::with_capacity(rows * cols);
+    for band in bands {
+        out.extend_from_slice(&band);
+    }
+    out
+}
+
+/// Map a flat f32 slice chunk-parallel through `f(index, value)`.
+pub fn map_elems(
+    engine: &ExperimentEngine,
+    x: &[f32],
+    f: impl Fn(usize, f32) -> f32 + Sync,
+) -> Vec<f32> {
+    let chunks = run_chunks(engine, x.len(), |_, start, len| {
+        x[start..start + len]
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| f(start + j, v))
+            .collect::<Vec<f32>>()
+    });
+    let mut out = Vec::with_capacity(x.len());
+    for chunk in chunks {
+        out.extend_from_slice(&chunk);
+    }
+    out
+}
+
+/// Chunked 8-lane dot product: deterministic (fixed association,
+/// independent of thread count) and autovectorizable.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for j in 0..8 {
+            acc[j] += xa[j] * xb[j];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    for (&xa, &xb) in ca.remainder().iter().zip(cb.remainder()) {
+        s += xa * xb;
+    }
+    s
+}
+
+/// `out[i] += s * x[i]` over contiguous slices (axpy; autovectorizes).
+#[inline]
+pub fn axpy(out: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += s * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_cover_rows_exactly_once() {
+        let engine = ExperimentEngine::new(3);
+        let spans = run_bands(&engine, 2 * BAND_ROWS + 7, |r0, n| (r0, n));
+        assert_eq!(spans, vec![(0, BAND_ROWS), (BAND_ROWS, BAND_ROWS), (2 * BAND_ROWS, 7)]);
+        assert!(run_bands(&engine, 0, |r0, n| (r0, n)).is_empty());
+    }
+
+    #[test]
+    fn fill_rows_matches_serial_for_any_jobs() {
+        let rows = BAND_ROWS + 9;
+        let cols = 5;
+        let f = |i: usize, out: &mut [f32]| {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = (i * cols + j) as f32;
+            }
+        };
+        let serial = fill_rows(&ExperimentEngine::serial(), rows, cols, f);
+        let par = fill_rows(&ExperimentEngine::new(4), rows, cols, f);
+        assert_eq!(serial, par);
+        assert_eq!(serial.len(), rows * cols);
+        assert_eq!(serial[rows * cols - 1], (rows * cols - 1) as f32);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        let a: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 19];
+        let expect: f32 = 2.0 * (0..19).sum::<i32>() as f32;
+        assert_eq!(dot(&a, &b), expect);
+    }
+}

@@ -1,0 +1,362 @@
+//! LayerNorm and softmax kernels — forward plus the *output-based*
+//! backwards the Tempo rewrites rely on.
+//!
+//! LayerNorm backward always reconstructs `x̂ = (y − β)/γ` from the
+//! output (Appendix D): that is exactly the §3.2 in-place rewrite, and
+//! using it unconditionally means stock and rewritten plans execute the
+//! same instruction stream — gradient parity between them is bit-exact
+//! by construction (the stock plan merely *retains more*; see
+//! DESIGN.md §Kernels). Softmax backward likewise needs only the
+//! output: `dx = (dy − Σ dy·y)·y` (§3.4).
+//!
+//! Rows are independent, so both kernels band-parallelize over rows;
+//! the dγ/dβ cross-row reductions are computed as per-band partials and
+//! folded serially in band order (bit-stable across `--jobs`). Row
+//! statistics accumulate in f64.
+
+use crate::coordinator::ExperimentEngine;
+
+use super::run_bands;
+
+/// HuggingFace BERT LayerNorm epsilon (`layernorm.py::EPS_DEFAULT`).
+pub const LN_EPS: f64 = 1e-12;
+
+/// LayerNorm forward products: the normalized output plus the per-row
+/// statistics in both retention flavors (stock keeps `mean`+`var`, the
+/// in-place rewrite keeps `rstd` only — the backend stores whichever
+/// the plan says and the backward needs only `rstd` either way).
+pub struct LayerNormFwd {
+    /// `y = (x − μ)·rstd·γ + β`, `rows × cols`.
+    pub y: Vec<f32>,
+    /// Per-row mean μ.
+    pub mean: Vec<f32>,
+    /// Per-row (biased) variance.
+    pub var: Vec<f32>,
+    /// Per-row `1/√(var + eps)`.
+    pub rstd: Vec<f32>,
+}
+
+/// LayerNorm backward products.
+pub struct LayerNormBwd {
+    /// Input gradient, `rows × cols`.
+    pub dx: Vec<f32>,
+    /// Scale gradient, `cols`.
+    pub dgamma: Vec<f32>,
+    /// Shift gradient, `cols`.
+    pub dbeta: Vec<f32>,
+}
+
+/// Fused LayerNorm forward over `rows × cols`.
+pub fn layernorm_fwd(
+    engine: &ExperimentEngine,
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    eps: f64,
+) -> LayerNormFwd {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(gamma.len(), cols);
+    debug_assert_eq!(beta.len(), cols);
+    struct Band {
+        y: Vec<f32>,
+        mean: Vec<f32>,
+        var: Vec<f32>,
+        rstd: Vec<f32>,
+    }
+    let bands = run_bands(engine, rows, |r0, n| {
+        let mut band = Band {
+            y: vec![0f32; n * cols],
+            mean: vec![0f32; n],
+            var: vec![0f32; n],
+            rstd: vec![0f32; n],
+        };
+        for j in 0..n {
+            let row = &x[(r0 + j) * cols..(r0 + j + 1) * cols];
+            let mut s = 0f64;
+            for &v in row {
+                s += f64::from(v);
+            }
+            let mu = s / cols as f64;
+            let mut vs = 0f64;
+            for &v in row {
+                let d = f64::from(v) - mu;
+                vs += d * d;
+            }
+            // Round the variance to f32 *first* and derive rstd from
+            // that rounding: a stock plan stores `var` and recomputes
+            // rstd in backward ([`rstd_from_var`]), an in-place plan
+            // stores rstd directly — deriving both from the same f32
+            // keeps the two plans' backwards bit-identical.
+            let var = (vs / cols as f64) as f32;
+            let rstd = 1.0 / (f64::from(var) + eps).sqrt();
+            band.mean[j] = mu as f32;
+            band.var[j] = var;
+            band.rstd[j] = rstd as f32;
+            let out = &mut band.y[j * cols..(j + 1) * cols];
+            for ((o, &v), (&g, &b)) in out.iter_mut().zip(row).zip(gamma.iter().zip(beta)) {
+                *o = ((f64::from(v) - mu) * rstd) as f32 * g + b;
+            }
+        }
+        band
+    });
+    let mut out = LayerNormFwd {
+        y: Vec::with_capacity(rows * cols),
+        mean: Vec::with_capacity(rows),
+        var: Vec::with_capacity(rows),
+        rstd: Vec::with_capacity(rows),
+    };
+    for b in bands {
+        out.y.extend_from_slice(&b.y);
+        out.mean.extend_from_slice(&b.mean);
+        out.var.extend_from_slice(&b.var);
+        out.rstd.extend_from_slice(&b.rstd);
+    }
+    out
+}
+
+/// Recover per-row `rstd` from a stored f32 variance — bit-identical
+/// to the `rstd` [`layernorm_fwd`] produced, because the forward also
+/// derives it from the f32-rounded variance.
+pub fn rstd_from_var(var: &[f32], eps: f64) -> Vec<f32> {
+    var.iter().map(|&v| (1.0 / (f64::from(v) + eps).sqrt()) as f32).collect()
+}
+
+/// Output-based LayerNorm backward (Appendix D):
+/// `x̂ = (y − β)/γ`, `g = dy·γ`,
+/// `dx = (g − mean(g·x̂)·x̂ − mean(g))·rstd`,
+/// `dγ = Σ_rows dy·x̂`, `dβ = Σ_rows dy`.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_bwd(
+    engine: &ExperimentEngine,
+    dy: &[f32],
+    y: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rstd: &[f32],
+    rows: usize,
+    cols: usize,
+) -> LayerNormBwd {
+    debug_assert_eq!(dy.len(), rows * cols);
+    debug_assert_eq!(y.len(), rows * cols);
+    debug_assert_eq!(rstd.len(), rows);
+    let bands = run_bands(engine, rows, |r0, n| {
+        let mut dx = vec![0f32; n * cols];
+        let mut dgamma = vec![0f32; cols];
+        let mut dbeta = vec![0f32; cols];
+        let mut xhat = vec![0f32; cols];
+        let mut g = vec![0f32; cols];
+        for j in 0..n {
+            let yr = &y[(r0 + j) * cols..(r0 + j + 1) * cols];
+            let dyr = &dy[(r0 + j) * cols..(r0 + j + 1) * cols];
+            let r = f64::from(rstd[r0 + j]);
+            for (((xh, gv), (&yv, &dyv)), (&gm, &bt)) in xhat
+                .iter_mut()
+                .zip(g.iter_mut())
+                .zip(yr.iter().zip(dyr))
+                .zip(gamma.iter().zip(beta))
+            {
+                *xh = (yv - bt) / gm;
+                *gv = dyv * gm;
+            }
+            let mut sg = 0f64;
+            let mut sgx = 0f64;
+            for (&gv, &xh) in g.iter().zip(&xhat) {
+                sg += f64::from(gv);
+                sgx += f64::from(gv) * f64::from(xh);
+            }
+            let mean_g = sg / cols as f64;
+            let mean_gx = sgx / cols as f64;
+            let out = &mut dx[j * cols..(j + 1) * cols];
+            for ((o, (&gv, &xh)), (dg, (db, &dyv))) in out
+                .iter_mut()
+                .zip(g.iter().zip(&xhat))
+                .zip(dgamma.iter_mut().zip(dbeta.iter_mut().zip(dyr)))
+            {
+                *o = ((f64::from(gv) - mean_gx * f64::from(xh) - mean_g) * r) as f32;
+                *dg += dyv * xh;
+                *db += dyv;
+            }
+        }
+        (dx, dgamma, dbeta)
+    });
+    let mut out = LayerNormBwd {
+        dx: Vec::with_capacity(rows * cols),
+        dgamma: vec![0f32; cols],
+        dbeta: vec![0f32; cols],
+    };
+    // Fold the per-band partials in band order: the reduction tree is
+    // fixed by BAND_ROWS, never by the worker count.
+    for (dx, dgamma, dbeta) in bands {
+        out.dx.extend_from_slice(&dx);
+        for (o, v) in out.dgamma.iter_mut().zip(dgamma) {
+            *o += v;
+        }
+        for (o, v) in out.dbeta.iter_mut().zip(dbeta) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Row-wise max-subtracted softmax over `rows × cols`.
+pub fn softmax_fwd(engine: &ExperimentEngine, x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * cols);
+    super::fill_rows(engine, rows, cols, |i, out| {
+        let row = &x[i * cols..(i + 1) * cols];
+        let mut m = f32::NEG_INFINITY;
+        for &v in row {
+            m = m.max(v);
+        }
+        let mut s = 0f64;
+        for (o, &v) in out.iter_mut().zip(row) {
+            let e = f64::from(v - m).exp();
+            *o = e as f32;
+            s += e;
+        }
+        let inv = (1.0 / s) as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    })
+}
+
+/// Output-only softmax backward: `dx = (dy − Σ dy·y)·y` per row (§3.4
+/// — the input is never needed, so it is never retained).
+pub fn softmax_bwd(
+    engine: &ExperimentEngine,
+    dy: &[f32],
+    y: &[f32],
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), rows * cols);
+    debug_assert_eq!(y.len(), rows * cols);
+    super::fill_rows(engine, rows, cols, |i, out| {
+        let yr = &y[i * cols..(i + 1) * cols];
+        let dyr = &dy[i * cols..(i + 1) * cols];
+        let mut s = 0f64;
+        for (&dyv, &yv) in dyr.iter().zip(yr) {
+            s += f64::from(dyv) * f64::from(yv);
+        }
+        let sf = s as f32;
+        for ((o, &dyv), &yv) in out.iter_mut().zip(dyr).zip(yr) {
+            *o = (dyv - sf) * yv;
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn layernorm_normalizes_and_is_jobs_invariant() {
+        let (rows, cols) = (70, 33);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 2.0 + 0.5) as f32).collect();
+        let gamma: Vec<f32> = (0..cols).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let beta: Vec<f32> = (0..cols).map(|_| 0.1 * rng.normal() as f32).collect();
+        let e1 = ExperimentEngine::serial();
+        let f = layernorm_fwd(&e1, &x, &gamma, &beta, rows, cols, LN_EPS);
+        // each row of (y − β)/γ has ~zero mean and ~unit variance
+        for i in 0..rows {
+            let mut s = 0f64;
+            let mut s2 = 0f64;
+            for j in 0..cols {
+                let xh = f64::from((f.y[i * cols + j] - beta[j]) / gamma[j]);
+                s += xh;
+                s2 += xh * xh;
+            }
+            assert!((s / cols as f64).abs() < 1e-5);
+            assert!((s2 / cols as f64 - 1.0).abs() < 1e-4);
+        }
+        let f4 = layernorm_fwd(&ExperimentEngine::new(4), &x, &gamma, &beta, rows, cols, LN_EPS);
+        assert_eq!(f.y, f4.y);
+        assert_eq!(f.rstd, f4.rstd);
+
+        let dy: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let b1 = layernorm_bwd(&e1, &dy, &f.y, &gamma, &beta, &f.rstd, rows, cols);
+        let b4 =
+            layernorm_bwd(&ExperimentEngine::new(4), &dy, &f.y, &gamma, &beta, &f.rstd, rows, cols);
+        assert_eq!(b1.dx, b4.dx);
+        assert_eq!(b1.dgamma, b4.dgamma);
+        assert_eq!(b1.dbeta, b4.dbeta);
+        // dβ is the plain column sum
+        let mut db = vec![0f32; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                db[j] += dy[i * cols + j];
+            }
+        }
+        for (a, b) in b1.dbeta.iter().zip(&db) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rstd_recomputed_from_stored_var_is_bit_identical() {
+        let (rows, cols) = (19, 21);
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let gamma = vec![1.0f32; cols];
+        let beta = vec![0.0f32; cols];
+        let f = layernorm_fwd(&ExperimentEngine::serial(), &x, &gamma, &beta, rows, cols, LN_EPS);
+        assert_eq!(rstd_from_var(&f.var, LN_EPS), f.rstd);
+    }
+
+    #[test]
+    fn layernorm_bwd_matches_finite_differences() {
+        let (rows, cols) = (4, 9);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let gamma = vec![1.0f32; cols];
+        let beta = vec![0.0f32; cols];
+        let dy: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let e = ExperimentEngine::serial();
+        let f = layernorm_fwd(&e, &x, &gamma, &beta, rows, cols, LN_EPS);
+        let b = layernorm_bwd(&e, &dy, &f.y, &gamma, &beta, &f.rstd, rows, cols);
+        // loss = Σ dy·y; check ∂loss/∂x by central differences
+        let h = 1e-3f32;
+        for &idx in &[0usize, 5, 17, rows * cols - 1] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let yp = layernorm_fwd(&e, &xp, &gamma, &beta, rows, cols, LN_EPS).y;
+            let ym = layernorm_fwd(&e, &xm, &gamma, &beta, rows, cols, LN_EPS).y;
+            let lp: f64 = yp.iter().zip(&dy).map(|(&a, &b)| f64::from(a) * f64::from(b)).sum();
+            let lm: f64 = ym.iter().zip(&dy).map(|(&a, &b)| f64::from(a) * f64::from(b)).sum();
+            let fd = ((lp - lm) / (2.0 * f64::from(h))) as f32;
+            assert!(
+                (b.dx[idx] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dx[{idx}] = {} vs fd {fd}",
+                b.dx[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_bwd_is_orthogonal_to_ones() {
+        let (rows, cols) = (65, 17);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..rows * cols).map(|_| (3.0 * rng.normal()) as f32).collect();
+        let e1 = ExperimentEngine::serial();
+        let y = softmax_fwd(&e1, &x, rows, cols);
+        assert_eq!(y, softmax_fwd(&ExperimentEngine::new(4), &x, rows, cols));
+        for i in 0..rows {
+            let s: f64 = y[i * cols..(i + 1) * cols].iter().map(|&v| f64::from(v)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        let dy: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let dx = softmax_bwd(&e1, &dy, &y, rows, cols);
+        assert_eq!(dx, softmax_bwd(&ExperimentEngine::new(4), &dy, &y, rows, cols));
+        // softmax Jacobian rows are orthogonal to 1: Σ_j dx_j ≈ 0
+        for i in 0..rows {
+            let s: f64 = dx[i * cols..(i + 1) * cols].iter().map(|&v| f64::from(v)).sum();
+            assert!(s.abs() < 1e-4, "row {i} sums to {s}");
+        }
+    }
+}

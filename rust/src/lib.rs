@@ -43,6 +43,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod graph;
+pub mod kernels;
 pub mod memmodel;
 pub mod perfmodel;
 pub mod report;

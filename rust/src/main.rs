@@ -53,6 +53,7 @@ USAGE:
   tempo memory-report --model NAME [--seq N] [--batch N] [--finetune]
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
                   [--placement uniform|joint]
+                  [--probe measured] [--top K] [--seed N]
   tempo placement [MODEL] [--seq N] [--gpu NAME] [--target-batch N]
                   [--placement uniform|joint] [--jobs N|auto] [--stats] [--json]
   tempo graph [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
@@ -485,6 +486,63 @@ fn parse_target_batch(args: &Args) -> tempo::Result<Option<usize>> {
 fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
     let cfg = parse_model(args)?;
     let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
+    if let Some(probe) = args.get("probe") {
+        // measured probe: execute the analytically best candidates on
+        // the kernel backend and re-rank by wall clock — §Kernels
+        if probe != "measured" {
+            return Err(tempo::Error::Invalid(format!(
+                "unknown probe mode '{probe}' (supported: measured)"
+            )));
+        }
+        let top = args.get_usize("top", 3)?;
+        let seed = args.get_usize("seed", 42)? as u64;
+        let engine = engine_from_args(args)?;
+        let r = tempo::autotempo::measured_probe(&cfg, gpu, top, seed, &engine)?;
+        println!(
+            "measured probe: ran top {} of {} candidates at {} \
+             (H={} S={} L={} B={}, {} timed steps each)",
+            r.rows.len(),
+            r.candidates,
+            r.probe_cfg.name,
+            r.probe_cfg.hidden,
+            r.probe_cfg.seq_len,
+            r.probe_cfg.layers,
+            tempo::autotempo::PROBE_BATCH,
+            tempo::autotempo::PROBE_STEPS,
+        );
+        for (i, row) in r.rows.iter().enumerate() {
+            println!(
+                "  {}. {:<16} {:>8.3} ms/step  peak {:>7.3} MB (model {:>7.3} MB, drift {:>+6.1}%)  \
+                 rel-time drift {:>+6.1}%  analytic rank {}{}",
+                i + 1,
+                row.label,
+                row.measured_step_s * 1e3,
+                row.measured_peak_bytes as f64 / 1e6,
+                row.modeled_peak_bytes as f64 / 1e6,
+                row.peak_drift.drift_pct(),
+                row.time_drift.drift_pct(),
+                row.analytic_rank + 1,
+                if row.host_peak_bytes > 0 {
+                    format!(", host stash {:.3} MB", row.host_peak_bytes as f64 / 1e6)
+                } else {
+                    String::new()
+                },
+            );
+        }
+        let d = &r.decision;
+        println!("{}", d.rationale);
+        println!(
+            "  plan at full dims: rewrites on {}/{} layers, {} checkpointed, {} offloaded, \
+             max batch {}, {:.2} seq/s",
+            d.plan.applied_layers(),
+            cfg.layers,
+            d.plan.checkpointed_layers(),
+            d.plan.offloaded_layers(),
+            d.max_batch,
+            d.throughput,
+        );
+        return Ok(());
+    }
     if let Some(mode_name) = args.get("placement") {
         // joint (rewrite ∪ checkpoint) placement search — §Placement
         let mode = parse_placement(mode_name)?;
@@ -563,6 +621,9 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
         Some(name) => parse_placement(name)?,
     };
 
+    // snapshot the plan-pricing cache counters so --stats reports this
+    // search's hits/misses, not the process-lifetime totals
+    let cache_baseline = want_stats.then(tempo::graph::cache_stats);
     let d = placement_search_jobs(&cfg, gpu, mode, target, true, &engine);
     let mut t = Table::new(
         format!(
@@ -615,8 +676,8 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
             ("peak_bytes", Json::num(bd.total() as f64)),
             ("high_water", Json::str(bd.transient_label)),
         ];
-        if want_stats {
-            let caches = tempo::graph::cache_stats()
+        if let Some(base) = &cache_baseline {
+            let caches = tempo::graph::cache_stats_since(base)
                 .into_iter()
                 .map(|(name, s)| {
                     (
@@ -652,12 +713,12 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
         gpu.spec().devices,
         bd.transient_label,
     );
-    if want_stats {
-        // hit/miss/size counters of the plan-pricing caches the search
-        // just exercised (process-global; hit counts depend on --jobs
+    if let Some(base) = &cache_baseline {
+        // hit/miss counters of the plan-pricing caches scoped to the
+        // search this command just ran (hit counts depend on --jobs
         // interleaving, which is why the decision — pinned jobs-
         // invariant — never reads them)
-        for (name, s) in tempo::graph::cache_stats() {
+        for (name, s) in tempo::graph::cache_stats_since(base) {
             println!(
                 "cache {name}: {} entries, {} hits, {} misses, ~{:.1} KB resident",
                 s.entries,

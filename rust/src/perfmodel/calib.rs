@@ -8,6 +8,42 @@ use crate::config::{Gpu, ModelConfig, Technique};
 
 use super::throughput::throughput_at_max_batch;
 
+/// One model-vs-measured calibration row from the measured probe
+/// (`tempo autotempo --probe measured`): what the analytic models
+/// predicted for a quantity versus what the kernel backend measured.
+///
+/// Step-time rows carry *normalized* columns (each divided by its
+/// fastest candidate) since the roofline prices a GPU while the
+/// kernels run on host cores; peak-bytes rows compare raw bytes.
+#[derive(Debug, Clone)]
+pub struct DriftRow {
+    /// Candidate plan label the row belongs to.
+    pub plan: String,
+    /// Which quantity is compared (`"step time (relative)"`,
+    /// `"peak bytes"`).
+    pub quantity: &'static str,
+    /// The analytic model's value.
+    pub modeled: f64,
+    /// The value the kernel backend measured.
+    pub measured: f64,
+}
+
+impl DriftRow {
+    /// `measured / modeled` — 1.0 means perfectly calibrated.
+    pub fn ratio(&self) -> f64 {
+        if self.modeled == 0.0 {
+            f64::INFINITY
+        } else {
+            self.measured / self.modeled
+        }
+    }
+
+    /// Signed drift percentage (positive = measurement above model).
+    pub fn drift_pct(&self) -> f64 {
+        100.0 * (self.ratio() - 1.0)
+    }
+}
+
 /// One speedup claim from the paper.
 #[derive(Debug, Clone)]
 pub struct SpeedupCheck {
@@ -61,6 +97,15 @@ pub fn paper_speedup_checks() -> Vec<SpeedupCheck> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn drift_row_math() {
+        let r = DriftRow { plan: "tempo".into(), quantity: "peak bytes", modeled: 100.0, measured: 110.0 };
+        assert!((r.ratio() - 1.1).abs() < 1e-12);
+        assert!((r.drift_pct() - 10.0).abs() < 1e-9);
+        let z = DriftRow { plan: "x".into(), quantity: "peak bytes", modeled: 0.0, measured: 1.0 };
+        assert!(z.ratio().is_infinite());
+    }
 
     #[test]
     fn all_headline_speedups_have_the_right_sign() {

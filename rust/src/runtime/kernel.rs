@@ -1,0 +1,1972 @@
+//! Numeric CPU execution of the graph IR: [`KernelBackend`] interprets
+//! the lowered [`StepSchedule`] tape with the real kernels in
+//! [`crate::kernels`].
+//!
+//! Where [`super::SimBackend`] *prices* a plan analytically, this
+//! backend *runs* it: every [`ScheduleEvent`] dispatches to real
+//! forward/backward math, tensors are materialized and freed exactly
+//! where the liveness timeline says they are, and the rewrite subset in
+//! the [`SchedulePlan`] changes **what is stored**, not what is
+//! computed:
+//!
+//! * in-place GELU keeps the 1-byte sign mask and inverts the output in
+//!   backward ([`crate::kernels::gelu_bwd_inplace`]);
+//! * in-place LayerNorm keeps only per-row `rstd` and runs the
+//!   output-based backward;
+//! * dropout recompute keeps the mask and replays the cheap apply in
+//!   backward;
+//! * softmax output-only drops the score matrix (softmax backward never
+//!   needed it);
+//! * [`Residency::Checkpoint`] re-forwards the layer from its stored
+//!   input at the tape's `Recompute` events; [`Residency::Offload`]
+//!   round-trips the layer's inventory through a host-side stash at the
+//!   `Store`/`Load` events.
+//!
+//! Every kernel is bit-deterministic across worker counts and dropout
+//! seeds are positional (derived from `(segment, op)` — never from tape
+//! position), so a checkpointed replay or a rewritten plan reproduces
+//! the stock plan's gradients bit-for-bit except where GELU inversion
+//! legitimately rounds (see `tests/kernel_rewrite_parity.rs`).
+//!
+//! The interpreter also meters itself: after every event it samples
+//! live bytes (params/grads/Adam + every buffer it holds) and reports
+//! the high-water mark next to the analytic
+//! [`schedule_summary`](crate::graph::schedule_summary) peak — the
+//! measured probe `tempo autotempo --probe measured` is built on this.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{ModelConfig, OptimizationSet};
+use crate::coordinator::ExperimentEngine;
+use crate::graph::{
+    lower_step, schedule_summary, EventKind, Lowering, Residency, SchedulePlan, ScheduleEvent,
+    Segment, StepSchedule, Topology,
+};
+use crate::kernels::{
+    add, attention_fwd, attn_context, attn_context_bwd, attn_scores, attn_scores_bwd, bias_grad,
+    dropout_apply, dropout_mask, fill_rows, gelu_bwd, gelu_bwd_inplace, gelu_fwd, layernorm_bwd,
+    layernorm_fwd, map_elems, matmul, matmul_at, matmul_bias, matmul_bt, rstd_from_var,
+    softmax_bwd, softmax_fwd, AttnDims, LN_EPS,
+};
+use crate::runtime::{Artifact, Backend, Entry, Manifest, Program};
+use crate::tensor::{mix64, HostTensor, Rng};
+use crate::{Error, Result};
+
+use super::sim::{model_config, technique};
+
+/// Salt folded into the user seed for parameter init draws (distinct
+/// from the sim backend's stream on purpose: real kernels want real
+/// LayerNorm gains, see [`init_params`]).
+const SALT_KERNEL_INIT: u64 = 0x4b52_4e4c_5f49_4e49;
+
+/// Salt for [`StepBatch::synthetic`] draws.
+const SALT_KERNEL_BATCH: u64 = 0x4b52_4e4c_5f42_4154;
+
+/// Weight init scale (matches the sim backend / BERT convention).
+const INIT_STD: f64 = 0.02;
+
+/// Adam hyper-parameters baked into the step ABI (β₁, β₂, ε).
+const ADAM: (f64, f64, f64) = (0.9, 0.999, 1e-8);
+
+/// Numeric execution backend: runs `init`/`step`/`eval` with real CPU
+/// kernels by interpreting the lowered schedule tape.
+///
+/// Construction picks the worker count (kernels parallelize across row
+/// bands) and optionally pins a [`SchedulePlan`]; by default the plan
+/// is derived from the manifest variant exactly like the analytic
+/// models derive theirs, so `baseline`/`checkpoint`/`tempo` manifests
+/// execute the corresponding schedules.
+#[derive(Debug, Clone, Default)]
+pub struct KernelBackend {
+    jobs: usize,
+    plan: Option<SchedulePlan>,
+}
+
+impl KernelBackend {
+    /// Backend with the auto-detected worker count.
+    pub fn new() -> Self {
+        KernelBackend { jobs: ExperimentEngine::auto().jobs(), plan: None }
+    }
+
+    /// Backend with an explicit worker count (0 → auto).
+    pub fn with_jobs(jobs: usize) -> Self {
+        let jobs = if jobs == 0 { ExperimentEngine::auto().jobs() } else { jobs };
+        KernelBackend { jobs, plan: None }
+    }
+
+    /// Pin the schedule plan instead of deriving it from the manifest
+    /// variant (the measured probe executes candidate plans this way).
+    pub fn with_plan(mut self, plan: SchedulePlan) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+}
+
+impl Backend for KernelBackend {
+    type Value = Arc<HostTensor>;
+    type Prog = KernelProgram;
+
+    fn name(&self) -> &'static str {
+        "kernel"
+    }
+
+    fn prepare(&self, artifact: &Artifact, entry: Entry) -> Result<Arc<KernelProgram>> {
+        let m = artifact.manifest.clone();
+        let cfg = model_config(&m);
+        let lowering = Lowering::for_model(&cfg);
+        if lowering.unfused_attention || matches!(lowering.topology, Topology::PreLn) {
+            return Err(Error::Backend(format!(
+                "kernel backend only executes fused post-LN lowerings (manifest {})",
+                m.name
+            )));
+        }
+        let plan = match &self.plan {
+            Some(p) => p.clone(),
+            None => SchedulePlan::for_technique(&cfg, technique(&m), m.task != "cls"),
+        };
+        Ok(Arc::new(KernelProgram {
+            manifest: m,
+            entry,
+            plan,
+            engine: ExperimentEngine::new(self.jobs),
+        }))
+    }
+
+    fn upload(&self, host: &HostTensor) -> Result<Arc<HostTensor>> {
+        Ok(Arc::new(host.clone()))
+    }
+
+    fn download(&self, value: &Arc<HostTensor>) -> Result<HostTensor> {
+        Ok(value.as_ref().clone())
+    }
+}
+
+/// One prepared entry point of the kernel backend.
+#[derive(Debug)]
+pub struct KernelProgram {
+    manifest: Manifest,
+    entry: Entry,
+    plan: SchedulePlan,
+    engine: ExperimentEngine,
+}
+
+impl Program for KernelProgram {
+    type Value = Arc<HostTensor>;
+
+    fn run(&self, inputs: &[&Arc<HostTensor>]) -> Result<Vec<Arc<HostTensor>>> {
+        match self.entry {
+            Entry::Init => self.run_init(inputs),
+            Entry::Step => self.run_step(inputs),
+            Entry::Eval => self.run_eval(inputs),
+        }
+    }
+}
+
+impl KernelProgram {
+    fn check_arity(&self, got: usize, want: usize) -> Result<()> {
+        if got != want {
+            return Err(Error::Abi(format!(
+                "kernel {} for {}: got {} inputs, expected {}",
+                self.entry.name(),
+                self.manifest.name,
+                got,
+                want
+            )));
+        }
+        Ok(())
+    }
+
+    fn run_init(&self, inputs: &[&Arc<HostTensor>]) -> Result<Vec<Arc<HostTensor>>> {
+        self.check_arity(inputs.len(), 1)?;
+        let seed = scalar_i32(inputs[0])? as u64;
+        let params = init_params(&self.manifest, seed);
+        let mut out = Vec::with_capacity(3 * self.manifest.n_param_leaves);
+        for (spec, data) in self.manifest.params.iter().zip(&params) {
+            out.push(Arc::new(HostTensor::f32(spec.shape.clone(), data.clone())?));
+        }
+        for _ in 0..2 {
+            for spec in &self.manifest.params {
+                out.push(Arc::new(HostTensor::f32(
+                    spec.shape.clone(),
+                    vec![0f32; spec.numel()],
+                )?));
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_step(&self, inputs: &[&Arc<HostTensor>]) -> Result<Vec<Arc<HostTensor>>> {
+        let m = &self.manifest;
+        let n = m.n_param_leaves;
+        self.check_arity(inputs.len(), 3 * n + 7)?;
+        let leaves = |base: usize| -> Result<Vec<Vec<f32>>> {
+            (0..n).map(|i| Ok(inputs[base + i].as_f32()?.to_vec())).collect()
+        };
+        let params = leaves(0)?;
+        let m_state = leaves(n)?;
+        let v_state = leaves(2 * n)?;
+        let batch = StepBatch::parse(m, &inputs[3 * n..3 * n + 4])?;
+        let step = scalar_i32(inputs[3 * n + 4])? as i64;
+        let seed = scalar_i32(inputs[3 * n + 5])? as u64;
+        let lr = scalar_f32(inputs[3 * n + 6])?;
+
+        let cfg = model_config(m);
+        let tape = lower_step(&cfg, &self.plan, Lowering::for_model(&cfg));
+        let mut interp =
+            Interp::new(m, &cfg, &self.plan, &self.engine, &batch, params, m_state, v_state)?;
+        interp.run(&tape, step, seed, lr)?;
+
+        let mut out = Vec::with_capacity(3 * n + 1);
+        for bank in [&interp.params, &interp.m_state, &interp.v_state] {
+            for (spec, data) in m.params.iter().zip(bank) {
+                out.push(Arc::new(HostTensor::f32(spec.shape.clone(), data.clone())?));
+            }
+        }
+        out.push(Arc::new(HostTensor::scalar_f32(interp.loss as f32)));
+        Ok(out)
+    }
+
+    fn run_eval(&self, inputs: &[&Arc<HostTensor>]) -> Result<Vec<Arc<HostTensor>>> {
+        let m = &self.manifest;
+        let n = m.n_param_leaves;
+        self.check_arity(inputs.len(), n + 5)?;
+        let params: Vec<Vec<f32>> =
+            (0..n).map(|i| Ok(inputs[i].as_f32()?.to_vec())).collect::<Result<_>>()?;
+        let batch = StepBatch::parse(m, &inputs[n..n + 4])?;
+        let (loss, metric) = eval_forward(m, &self.engine, &params, &batch)?;
+        Ok(vec![
+            Arc::new(HostTensor::scalar_f32(loss as f32)),
+            Arc::new(HostTensor::scalar_f32(metric as f32)),
+        ])
+    }
+}
+
+fn scalar_i32(t: &HostTensor) -> Result<i32> {
+    t.as_i32()?.first().copied().ok_or_else(|| Error::Abi("empty scalar input".into()))
+}
+
+fn scalar_f32(t: &HostTensor) -> Result<f32> {
+    t.as_f32()?.first().copied().ok_or_else(|| Error::Abi("empty scalar input".into()))
+}
+
+/// Deterministic parameter init for the numeric backend: LayerNorm
+/// gains start at 1, every bias/shift at 0, and weight matrices draw
+/// `N(0, 0.02²)` from a per-leaf forked stream — so the §3.2
+/// output-based LayerNorm backward divides by O(1) gains from step 0.
+pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<Vec<f32>> {
+    let mut root = Rng::new(seed ^ SALT_KERNEL_INIT);
+    manifest
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let n = spec.numel();
+            if spec.name.ends_with("gamma") {
+                vec![1f32; n]
+            } else if spec.name.ends_with("beta")
+                || spec.name.ends_with("_b")
+                || spec.name.ends_with(".b")
+                || spec.name.ends_with("bias")
+            {
+                vec![0f32; n]
+            } else {
+                let mut rng = root.fork(i as u64);
+                (0..n).map(|_| (INIT_STD * rng.normal()) as f32).collect()
+            }
+        })
+        .collect()
+}
+
+/// One training batch in the step ABI's four-leaf layout.
+#[derive(Debug, Clone)]
+pub struct StepBatch {
+    /// Token ids, `[B, S]` row-major.
+    pub input_ids: Vec<i32>,
+    /// Segment/type ids, `[B, S]`.
+    pub token_type_ids: Vec<i32>,
+    /// Attention mask (1 = attend), `[B, S]`.
+    pub attention_mask: Vec<i32>,
+    /// MLM targets (−1 = unlabeled) or classification labels, `[B, S]`.
+    pub labels: Vec<i32>,
+}
+
+impl StepBatch {
+    fn parse(m: &Manifest, inputs: &[&Arc<HostTensor>]) -> Result<StepBatch> {
+        let want = m.batch_size * m.config.seq_len;
+        let field = |i: usize, name: &str| -> Result<Vec<i32>> {
+            let v = inputs[i].as_i32()?;
+            if v.len() != want {
+                return Err(Error::Abi(format!(
+                    "kernel batch leaf {name}: got {} elements, expected {want}",
+                    v.len()
+                )));
+            }
+            Ok(v.to_vec())
+        };
+        Ok(StepBatch {
+            input_ids: field(0, "input_ids")?,
+            token_type_ids: field(1, "token_type_ids")?,
+            attention_mask: field(2, "attention_mask")?,
+            labels: field(3, "labels")?,
+        })
+    }
+
+    /// Deterministic synthetic batch for tests and the measured probe:
+    /// full attention, ~15% MLM label density (cls manifests read
+    /// column 0 as the class label).
+    pub fn synthetic(m: &Manifest, seed: u64) -> StepBatch {
+        let c = &m.config;
+        let n = m.batch_size * c.seq_len;
+        let mut rng = Rng::new(seed ^ SALT_KERNEL_BATCH);
+        let mut b = StepBatch {
+            input_ids: Vec::with_capacity(n),
+            token_type_ids: Vec::with_capacity(n),
+            attention_mask: vec![1; n],
+            labels: Vec::with_capacity(n),
+        };
+        let classes = c.num_classes.max(2);
+        for _ in 0..n {
+            b.input_ids.push(rng.below(c.vocab_size) as i32);
+            b.token_type_ids.push(rng.below(c.type_vocab.max(1)) as i32);
+            let label = if m.task == "cls" {
+                rng.below(classes) as i32
+            } else if rng.coin(0.15) {
+                rng.below(c.vocab_size) as i32
+            } else {
+                -1
+            };
+            b.labels.push(label);
+        }
+        b
+    }
+}
+
+/// What one metered training step observed — the measured probe's raw
+/// material and the rewrite-parity tests' gradient source.
+#[derive(Debug)]
+pub struct StepTrace {
+    /// Scalar training loss.
+    pub loss: f64,
+    /// Per-leaf parameter gradients (manifest leaf order), taken
+    /// before the optimizer update.
+    pub grads: Vec<Vec<f32>>,
+    /// High-water device-side live bytes actually held by the
+    /// interpreter (params/grads/Adam plus every activation buffer).
+    pub measured_peak_bytes: u64,
+    /// The analytic timeline's peak for the same plan and batch.
+    pub modeled_peak_bytes: u64,
+    /// High-water bytes parked in the host stash by offload plans.
+    pub host_peak_bytes: u64,
+}
+
+/// Run one metered training step outside the `Program` ABI: used by the
+/// rewrite-parity tests (gradient access) and the measured probe
+/// (peak/wall-clock access). Parameters are updated in place.
+#[allow(clippy::too_many_arguments)]
+pub fn step_trace(
+    manifest: &Manifest,
+    plan: &SchedulePlan,
+    engine: &ExperimentEngine,
+    params: &mut Vec<Vec<f32>>,
+    batch: &StepBatch,
+    step: i64,
+    seed: u64,
+    lr: f32,
+) -> Result<StepTrace> {
+    let cfg = model_config(manifest);
+    let zeros: Vec<Vec<f32>> = manifest.params.iter().map(|s| vec![0f32; s.numel()]).collect();
+    let tape = lower_step(&cfg, plan, Lowering::for_model(&cfg));
+    let mut interp = Interp::new(
+        manifest,
+        &cfg,
+        plan,
+        engine,
+        batch,
+        std::mem::take(params),
+        zeros.clone(),
+        zeros,
+    )?;
+    interp.run(&tape, step, seed, lr)?;
+    let modeled = schedule_summary(&cfg, plan).peak_bytes(manifest.batch_size as u64);
+    *params = interp.params;
+    Ok(StepTrace {
+        loss: interp.loss,
+        grads: interp.grads,
+        measured_peak_bytes: interp.peak_bytes,
+        modeled_peak_bytes: modeled,
+        host_peak_bytes: interp.host_peak_bytes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tape interpreter
+// ---------------------------------------------------------------------------
+
+/// Segment key usable in hash maps (Segment itself doesn't hash).
+fn seg_key(seg: Segment) -> (u8, u32) {
+    match seg {
+        Segment::Setup => (0, 0),
+        Segment::Embedding => (1, 0),
+        Segment::Encoder(l) => (2, l as u32),
+        Segment::Head => (3, 0),
+        Segment::Step => (4, 0),
+    }
+}
+
+/// FNV-1a over a byte string (op-seed derivation; stable, no deps).
+fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stored buffer: activation values or a 1-byte mask.
+#[derive(Debug)]
+enum Buf {
+    F(Vec<f32>),
+    M(Vec<u8>),
+}
+
+impl Buf {
+    fn bytes(&self) -> u64 {
+        match self {
+            Buf::F(v) => 4 * v.len() as u64,
+            Buf::M(v) => v.len() as u64,
+        }
+    }
+}
+
+/// Store key: (segment kind, layer, op name, tensor name). Keyed by op
+/// because `ln1`/`ln2` in one segment both retain tensors literally
+/// named `mean_var`/`rstd`.
+type StoreKey = (u8, u32, &'static str, &'static str);
+
+/// The retained-tensor store with a running byte meter.
+#[derive(Debug, Default)]
+struct Store {
+    map: HashMap<StoreKey, Buf>,
+    bytes: u64,
+}
+
+impl Store {
+    fn put(&mut self, key: StoreKey, buf: Buf) {
+        self.bytes += buf.bytes();
+        if let Some(old) = self.map.insert(key, buf) {
+            self.bytes -= old.bytes();
+        }
+    }
+
+    fn take(&mut self, key: &StoreKey) -> Option<Buf> {
+        let buf = self.map.remove(key)?;
+        self.bytes -= buf.bytes();
+        Some(buf)
+    }
+
+    fn has(&self, key: &StoreKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Remove every entry of `(seg, op)` — mirrors a backward event's
+    /// frees of its forward twin's allocations.
+    fn free_op(&mut self, seg: (u8, u32), op: &str) {
+        let keys: Vec<StoreKey> =
+            self.map.keys().filter(|k| (k.0, k.1) == seg && k.2 == op).copied().collect();
+        for k in keys {
+            self.take(&k);
+        }
+    }
+
+    /// Drain a whole segment (keep the checkpoint-stored input if
+    /// `keep_ckpt`) — `ckpt.discard` and the offload store DMA.
+    fn drain_segment(&mut self, seg: (u8, u32), keep_ckpt: bool) -> Vec<(StoreKey, Buf)> {
+        let keys: Vec<StoreKey> = self
+            .map
+            .keys()
+            .filter(|k| (k.0, k.1) == seg && !(keep_ckpt && k.2 == "ckpt"))
+            .copied()
+            .collect();
+        keys.into_iter().map(|k| { let b = self.take(&k).expect("key listed"); (k, b) }).collect()
+    }
+}
+
+/// One step's interpreter state.
+struct Interp<'a> {
+    plan: &'a SchedulePlan,
+    engine: &'a ExperimentEngine,
+    batch: &'a StepBatch,
+    bsz: usize,
+    seq: usize,
+    hid: usize,
+    inter: usize,
+    vocab: usize,
+    heads: usize,
+    p_drop: f32,
+    leaf_idx: HashMap<String, usize>,
+    params: Vec<Vec<f32>>,
+    grads: Vec<Vec<f32>>,
+    m_state: Vec<Vec<f32>>,
+    v_state: Vec<Vec<f32>>,
+    store: Store,
+    host: HashMap<(u8, u32), Vec<(StoreKey, Buf)>>,
+    flow: HashMap<&'static str, Vec<f32>>,
+    bwdf: HashMap<&'static str, Vec<f32>>,
+    xcur: Vec<f32>,
+    gcur: Vec<f32>,
+    vcur: Vec<f32>,
+    head_input: Vec<f32>,
+    loss: f64,
+    step: i64,
+    lr: f32,
+    step_seed: u64,
+    fixed_bytes: u64,
+    host_bytes: u64,
+    peak_bytes: u64,
+    host_peak_bytes: u64,
+}
+
+impl<'a> Interp<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        m: &'a Manifest,
+        cfg: &ModelConfig,
+        plan: &'a SchedulePlan,
+        engine: &'a ExperimentEngine,
+        batch: &'a StepBatch,
+        params: Vec<Vec<f32>>,
+        m_state: Vec<Vec<f32>>,
+        v_state: Vec<Vec<f32>>,
+    ) -> Result<Interp<'a>> {
+        if cfg.hidden % cfg.heads.max(1) != 0 {
+            return Err(Error::Invalid(format!(
+                "kernel backend: heads {} must divide hidden {}",
+                cfg.heads, cfg.hidden
+            )));
+        }
+        let leaf_idx: HashMap<String, usize> =
+            m.params.iter().enumerate().map(|(i, s)| (s.name.clone(), i)).collect();
+        let grads: Vec<Vec<f32>> = m.params.iter().map(|s| vec![0f32; s.numel()]).collect();
+        let total: u64 = m.params.iter().map(|s| 4 * s.numel() as u64).sum();
+        Ok(Interp {
+            plan,
+            engine,
+            batch,
+            bsz: m.batch_size,
+            seq: cfg.seq_len,
+            hid: cfg.hidden,
+            inter: cfg.intermediate,
+            vocab: cfg.vocab_size,
+            heads: cfg.heads,
+            p_drop: cfg.dropout_p as f32,
+            leaf_idx,
+            params,
+            grads,
+            m_state,
+            v_state,
+            store: Store::default(),
+            host: HashMap::new(),
+            flow: HashMap::new(),
+            bwdf: HashMap::new(),
+            xcur: Vec::new(),
+            gcur: Vec::new(),
+            vcur: Vec::new(),
+            head_input: Vec::new(),
+            loss: 0.0,
+            step: 0,
+            lr: 0.0,
+            step_seed: 0,
+            fixed_bytes: 4 * total,
+            host_bytes: 0,
+            peak_bytes: 0,
+            host_peak_bytes: 0,
+        })
+    }
+
+    fn run(&mut self, tape: &StepSchedule, step: i64, seed: u64, lr: f32) -> Result<()> {
+        self.step = step;
+        self.lr = lr;
+        self.step_seed = mix64(seed ^ mix64(step as u64));
+        for e in &tape.events {
+            self.exec_event(e)?;
+            self.sample();
+        }
+        Ok(())
+    }
+
+    // -- bookkeeping --------------------------------------------------------
+
+    fn sample(&mut self) {
+        let held = |m: &HashMap<&'static str, Vec<f32>>| -> u64 {
+            m.values().map(|v| 4 * v.len() as u64).sum()
+        };
+        let live = self.fixed_bytes
+            + self.store.bytes
+            + held(&self.flow)
+            + held(&self.bwdf)
+            + 4 * (self.xcur.len() + self.gcur.len() + self.vcur.len() + self.head_input.len())
+                as u64;
+        self.peak_bytes = self.peak_bytes.max(live);
+        self.host_peak_bytes = self.host_peak_bytes.max(self.host_bytes);
+    }
+
+    fn leaf(&self, name: &str) -> Result<usize> {
+        self.leaf_idx
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::Abi(format!("kernel backend: no parameter leaf named {name}")))
+    }
+
+    fn layer_leaf(&self, l: u32, suffix: &str) -> Result<usize> {
+        self.leaf(&format!("encoder.{l}.{suffix}"))
+    }
+
+    fn add_grad(&mut self, idx: usize, dv: &[f32]) {
+        for (g, &d) in self.grads[idx].iter_mut().zip(dv) {
+            *g += d;
+        }
+    }
+
+    /// Per-op dropout seed: positional in `(segment, op)` — identical
+    /// across plans, tape layouts and worker counts, so checkpoint
+    /// replays regenerate the forward's exact mask.
+    fn op_seed(&self, seg: Segment, op: &str) -> u64 {
+        let (k, l) = seg_key(seg);
+        let tag = fnv1a(
+            [k]
+                .into_iter()
+                .chain(l.to_le_bytes())
+                .chain([0xff])
+                .chain(op.bytes()),
+        );
+        mix64(self.step_seed ^ tag)
+    }
+
+    fn dims(&self) -> AttnDims {
+        AttnDims {
+            batch: self.bsz,
+            heads: self.heads,
+            seq: self.seq,
+            head_dim: self.hid / self.heads,
+        }
+    }
+
+    /// Effective rewrite subset for a forward event: recomputes and
+    /// checkpointed layers store the stock (`none`) inventory — the
+    /// checkpoint transform replaces the rewrites for that layer.
+    fn eff_opts(&self, seg: Segment, recompute: bool) -> OptimizationSet {
+        match seg {
+            Segment::Encoder(l) => {
+                if recompute || matches!(self.plan.residency(l), Residency::Checkpoint(_)) {
+                    OptimizationSet::none()
+                } else {
+                    self.plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none)
+                }
+            }
+            _ => self.plan.other,
+        }
+    }
+
+    fn store_f(&self, seg: Segment, op: &'static str, name: &'static str) -> Result<Vec<f32>> {
+        let (k, l) = seg_key(seg);
+        match self.store.map.get(&(k, l, op, name)) {
+            Some(Buf::F(v)) => Ok(v.clone()),
+            _ => Err(Error::Backend(format!(
+                "kernel store: missing f32 tensor {name} of op {op} in {}",
+                seg.label()
+            ))),
+        }
+    }
+
+    fn store_m(&self, seg: Segment, op: &'static str, name: &'static str) -> Result<Vec<u8>> {
+        let (k, l) = seg_key(seg);
+        match self.store.map.get(&(k, l, op, name)) {
+            Some(Buf::M(v)) => Ok(v.clone()),
+            _ => Err(Error::Backend(format!(
+                "kernel store: missing mask {name} of op {op} in {}",
+                seg.label()
+            ))),
+        }
+    }
+
+    fn put(&mut self, seg: Segment, op: &'static str, name: &'static str, buf: Buf) {
+        let (k, l) = seg_key(seg);
+        self.store.put((k, l, op, name), buf);
+    }
+
+    fn has(&self, seg: Segment, op: &'static str, name: &'static str) -> bool {
+        let (k, l) = seg_key(seg);
+        self.store.has(&(k, l, op, name))
+    }
+
+    fn free_op(&mut self, seg: Segment, op: &str) {
+        self.store.free_op(seg_key(seg), op);
+    }
+
+    fn flow_take(&mut self, name: &'static str) -> Result<Vec<f32>> {
+        self.flow
+            .remove(name)
+            .ok_or_else(|| Error::Backend(format!("kernel dataflow: missing edge {name}")))
+    }
+
+    fn bwdf_take(&mut self, name: &'static str) -> Result<Vec<f32>> {
+        self.bwdf
+            .remove(name)
+            .ok_or_else(|| Error::Backend(format!("kernel backward dataflow: missing {name}")))
+    }
+
+    // -- event dispatch -----------------------------------------------------
+
+    fn exec_event(&mut self, e: &ScheduleEvent) -> Result<()> {
+        match e.kind {
+            EventKind::Setup | EventKind::Turnaround => Ok(()),
+            EventKind::Forward => match e.name {
+                "ckpt.store" => {
+                    let x = self.xcur.clone();
+                    self.put(e.segment, "ckpt", "ckpt.stored_input", Buf::F(x));
+                    Ok(())
+                }
+                "ckpt.discard" => {
+                    self.store.drain_segment(seg_key(e.segment), true);
+                    Ok(())
+                }
+                _ => self.forward_op(e.segment, e.name, false),
+            },
+            EventKind::Recompute => self.forward_op(e.segment, e.name, true),
+            EventKind::Store => {
+                let moved = self.store.drain_segment(seg_key(e.segment), false);
+                let bytes: u64 = moved.iter().map(|(_, b)| b.bytes()).sum();
+                self.host_bytes += bytes;
+                self.host.insert(seg_key(e.segment), moved);
+                Ok(())
+            }
+            EventKind::Load => {
+                let moved = self.host.remove(&seg_key(e.segment)).ok_or_else(|| {
+                    Error::Backend(format!("kernel offload: nothing stashed for {}", e.segment.label()))
+                })?;
+                for (k, b) in moved {
+                    self.host_bytes -= b.bytes();
+                    self.store.put(k, b);
+                }
+                Ok(())
+            }
+            EventKind::Backward => self.backward_op(e.segment, e.name),
+            EventKind::Optimizer => {
+                self.adam();
+                Ok(())
+            }
+        }
+    }
+
+    // -- forward ops --------------------------------------------------------
+
+    fn forward_op(&mut self, seg: Segment, name: &'static str, recompute: bool) -> Result<()> {
+        match seg {
+            Segment::Embedding => self.fwd_embedding(name),
+            Segment::Encoder(l) => self.fwd_encoder(seg, l as u32, name, recompute),
+            Segment::Head => self.fwd_head(name),
+            _ => Err(Error::Backend(format!(
+                "kernel backend: unexpected forward op {name} in {}",
+                seg.label()
+            ))),
+        }
+    }
+
+    fn fwd_embedding(&mut self, name: &'static str) -> Result<()> {
+        let seg = Segment::Embedding;
+        let opts = self.plan.other;
+        let (bs, h) = (self.bsz * self.seq, self.hid);
+        match name {
+            "emb.sum" => {
+                let wi = self.leaf("embeddings.word")?;
+                let pi = self.leaf("embeddings.position")?;
+                let ti = self.leaf("embeddings.token_type")?;
+                let (word, pos, tok) = (&self.params[wi], &self.params[pi], &self.params[ti]);
+                let (vocab, seq) = (self.vocab as i32, self.seq);
+                let tv = (self.params[ti].len() / h) as i32;
+                let (ids, tts) = (&self.batch.input_ids, &self.batch.token_type_ids);
+                let x = fill_rows(self.engine, bs, h, |row, out| {
+                    let id = ids[row].rem_euclid(vocab) as usize;
+                    let s = row % seq;
+                    let tt = tts[row].rem_euclid(tv) as usize;
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = word[id * h + j] + pos[s * h + j] + tok[tt * h + j];
+                    }
+                });
+                self.put(seg, "emb.sum", "emb.sum_output", Buf::F(x.clone()));
+                self.xcur = x;
+            }
+            "emb.ln" => {
+                let x = std::mem::take(&mut self.xcur);
+                let gi = self.leaf("embeddings.ln.gamma")?;
+                let bi = self.leaf("embeddings.ln.beta")?;
+                let f = layernorm_fwd(
+                    self.engine,
+                    &x,
+                    &self.params[gi],
+                    &self.params[bi],
+                    bs,
+                    h,
+                    LN_EPS,
+                );
+                if !opts.inplace_layernorm {
+                    self.put(seg, "emb.ln", "emb.ln_input", Buf::F(x));
+                }
+                self.put(seg, "emb.ln", "emb.ln_output", Buf::F(f.y.clone()));
+                self.xcur = f.y;
+            }
+            "emb.dropout" => {
+                let mask = dropout_mask(
+                    self.engine,
+                    bs * h,
+                    self.p_drop,
+                    self.op_seed(seg, "emb.dropout"),
+                );
+                self.xcur = dropout_apply(self.engine, &self.xcur, &mask, self.p_drop);
+                self.put(seg, "emb.dropout", "emb.drop_mask", Buf::M(mask));
+            }
+            _ => {
+                return Err(Error::Backend(format!("kernel backend: unknown embedding op {name}")))
+            }
+        }
+        Ok(())
+    }
+
+    fn fwd_encoder(
+        &mut self,
+        seg: Segment,
+        l: u32,
+        name: &'static str,
+        recompute: bool,
+    ) -> Result<()> {
+        let opts = self.eff_opts(seg, recompute);
+        let (bs, h, inter) = (self.bsz * self.seq, self.hid, self.inter);
+        let srows = self.bsz * self.heads * self.seq;
+        match name {
+            "attn.qkv" => {
+                let x = if recompute {
+                    self.store_f(seg, "ckpt", "ckpt.stored_input")?
+                } else {
+                    std::mem::take(&mut self.xcur)
+                };
+                for (wn, bn, out) in [
+                    ("attn.q_w", "attn.q_b", "attn.q"),
+                    ("attn.k_w", "attn.k_b", "attn.k"),
+                    ("attn.v_w", "attn.v_b", "attn.v"),
+                ] {
+                    let wi = self.layer_leaf(l, wn)?;
+                    let bi = self.layer_leaf(l, bn)?;
+                    let y = matmul_bias(
+                        self.engine,
+                        &x,
+                        &self.params[wi],
+                        Some(&self.params[bi]),
+                        bs,
+                        h,
+                        h,
+                    );
+                    self.put(seg, "attn.qkv", out, Buf::F(y));
+                }
+                self.put(seg, "attn.qkv", "attn.input", Buf::F(x));
+            }
+            "attn.scores" => {
+                let q = self.store_f(seg, "attn.qkv", "attn.q")?;
+                let k = self.store_f(seg, "attn.qkv", "attn.k")?;
+                let scores =
+                    attn_scores(self.engine, &q, &k, Some(&self.batch.attention_mask), self.dims());
+                self.flow.insert("scores", scores);
+            }
+            "attn.softmax" => {
+                let scores = self.flow_take("scores")?;
+                let probs = softmax_fwd(self.engine, &scores, srows, self.seq);
+                if !opts.softmax_outonly {
+                    self.put(seg, "attn.softmax", "attn.scores", Buf::F(scores));
+                }
+                self.put(seg, "attn.softmax", "attn.probs", Buf::F(probs));
+            }
+            "attn.dropout" => {
+                let probs = self.store_f(seg, "attn.softmax", "attn.probs")?;
+                let mask = dropout_mask(
+                    self.engine,
+                    probs.len(),
+                    self.p_drop,
+                    self.op_seed(seg, "attn.dropout"),
+                );
+                let dropped = dropout_apply(self.engine, &probs, &mask, self.p_drop);
+                self.put(seg, "attn.dropout", "attn.drop_mask", Buf::M(mask));
+                if opts.dropout_recompute {
+                    self.flow.insert("probs_dropped", dropped);
+                } else {
+                    self.put(seg, "attn.dropout", "attn.probs_dropped", Buf::F(dropped));
+                }
+            }
+            "attn.pv" => {
+                let dropped = match self.flow.remove("probs_dropped") {
+                    Some(x) => x,
+                    None => self.store_f(seg, "attn.dropout", "attn.probs_dropped")?,
+                };
+                let v = self.store_f(seg, "attn.qkv", "attn.v")?;
+                let ctx = attn_context(self.engine, &dropped, &v, self.dims());
+                self.put(seg, "attn.pv", "attn.context", Buf::F(ctx));
+            }
+            "attn.proj" => {
+                let ctx = self.store_f(seg, "attn.pv", "attn.context")?;
+                let wi = self.layer_leaf(l, "attn.out_w")?;
+                let bi = self.layer_leaf(l, "attn.out_b")?;
+                let proj = matmul_bias(
+                    self.engine,
+                    &ctx,
+                    &self.params[wi],
+                    Some(&self.params[bi]),
+                    bs,
+                    h,
+                    h,
+                );
+                self.flow.insert("proj", proj);
+            }
+            "attn.proj_dropout" => {
+                let proj = self.flow_take("proj")?;
+                let mask = dropout_mask(
+                    self.engine,
+                    proj.len(),
+                    self.p_drop,
+                    self.op_seed(seg, "attn.proj_dropout"),
+                );
+                let dropped = dropout_apply(self.engine, &proj, &mask, self.p_drop);
+                self.put(seg, "attn.proj_dropout", "attn.proj_drop_mask", Buf::M(mask));
+                self.flow.insert("proj_dropped", dropped);
+            }
+            "attn.residual" => {
+                let dropped = self.flow_take("proj_dropped")?;
+                let x = self.store_f(seg, "attn.qkv", "attn.input")?;
+                let res = add(self.engine, &dropped, &x);
+                self.flow.insert("res1", res);
+            }
+            "ln1" => {
+                let res1 = self.flow_take("res1")?;
+                let gi = self.layer_leaf(l, "attn.ln.gamma")?;
+                let bi = self.layer_leaf(l, "attn.ln.beta")?;
+                let f = layernorm_fwd(
+                    self.engine,
+                    &res1,
+                    &self.params[gi],
+                    &self.params[bi],
+                    bs,
+                    h,
+                    LN_EPS,
+                );
+                if opts.inplace_layernorm {
+                    self.put(seg, "ln1", "rstd", Buf::F(f.rstd));
+                } else {
+                    self.put(seg, "ln1", "ln1.input", Buf::F(res1));
+                    let mut mv = f.mean;
+                    mv.extend_from_slice(&f.var);
+                    self.put(seg, "ln1", "mean_var", Buf::F(mv));
+                }
+                self.put(seg, "ln1", "ln1.output", Buf::F(f.y));
+            }
+            "ffn.fc1" => {
+                let a = self.store_f(seg, "ln1", "ln1.output")?;
+                let wi = self.layer_leaf(l, "ffn.in_w")?;
+                let bi = self.layer_leaf(l, "ffn.in_b")?;
+                let fc1 = matmul_bias(
+                    self.engine,
+                    &a,
+                    &self.params[wi],
+                    Some(&self.params[bi]),
+                    bs,
+                    h,
+                    inter,
+                );
+                self.flow.insert("fc1", fc1);
+            }
+            "ffn.gelu" => {
+                let fc1 = self.flow_take("fc1")?;
+                let (y, mask) = gelu_fwd(self.engine, &fc1);
+                if opts.inplace_gelu {
+                    self.put(seg, "ffn.gelu", "ffn.gelu_mask", Buf::M(mask));
+                } else {
+                    self.put(seg, "ffn.gelu", "ffn.gelu_input", Buf::F(fc1));
+                }
+                self.put(seg, "ffn.gelu", "ffn.gelu_output", Buf::F(y));
+            }
+            "ffn.fc2" => {
+                let a = self.store_f(seg, "ffn.gelu", "ffn.gelu_output")?;
+                let wi = self.layer_leaf(l, "ffn.out_w")?;
+                let bi = self.layer_leaf(l, "ffn.out_b")?;
+                let fc2 = matmul_bias(
+                    self.engine,
+                    &a,
+                    &self.params[wi],
+                    Some(&self.params[bi]),
+                    bs,
+                    inter,
+                    h,
+                );
+                self.flow.insert("fc2", fc2);
+            }
+            "ffn.fc2_dropout" => {
+                let fc2 = self.flow_take("fc2")?;
+                let mask = dropout_mask(
+                    self.engine,
+                    fc2.len(),
+                    self.p_drop,
+                    self.op_seed(seg, "ffn.fc2_dropout"),
+                );
+                let dropped = dropout_apply(self.engine, &fc2, &mask, self.p_drop);
+                self.put(seg, "ffn.fc2_dropout", "ffn.drop_mask", Buf::M(mask));
+                self.flow.insert("fc2d", dropped);
+            }
+            "ffn.residual" => {
+                let dropped = self.flow_take("fc2d")?;
+                let a = self.store_f(seg, "ln1", "ln1.output")?;
+                let res = add(self.engine, &dropped, &a);
+                self.flow.insert("res2", res);
+            }
+            "ln2" => {
+                let res2 = self.flow_take("res2")?;
+                let gi = self.layer_leaf(l, "ffn.ln.gamma")?;
+                let bi = self.layer_leaf(l, "ffn.ln.beta")?;
+                let f = layernorm_fwd(
+                    self.engine,
+                    &res2,
+                    &self.params[gi],
+                    &self.params[bi],
+                    bs,
+                    h,
+                    LN_EPS,
+                );
+                if opts.inplace_layernorm {
+                    self.put(seg, "ln2", "rstd", Buf::F(f.rstd));
+                } else {
+                    self.put(seg, "ln2", "ln2.input", Buf::F(res2));
+                    let mut mv = f.mean;
+                    mv.extend_from_slice(&f.var);
+                    self.put(seg, "ln2", "mean_var", Buf::F(mv));
+                }
+                if !recompute {
+                    self.xcur = f.y;
+                }
+            }
+            _ => {
+                return Err(Error::Backend(format!(
+                    "kernel backend: unknown encoder op {name}"
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    fn fwd_head(&mut self, name: &'static str) -> Result<()> {
+        let seg = Segment::Head;
+        let opts = self.plan.other;
+        let (bs, h, v) = (self.bsz * self.seq, self.hid, self.vocab);
+        match name {
+            "head.transform" => {
+                self.head_input = std::mem::take(&mut self.xcur);
+                let wi = self.leaf("mlm.transform_w")?;
+                let bi = self.leaf("mlm.transform_b")?;
+                let t = matmul_bias(
+                    self.engine,
+                    &self.head_input,
+                    &self.params[wi],
+                    Some(&self.params[bi]),
+                    bs,
+                    h,
+                    h,
+                );
+                self.put(seg, "head.transform", "head.transform_out", Buf::F(t));
+            }
+            "head.gelu" => {
+                let t = self.store_f(seg, "head.transform", "head.transform_out")?;
+                let (y, mask) = gelu_fwd(self.engine, &t);
+                if opts.inplace_gelu {
+                    self.put(seg, "head.gelu", "head.gelu_mask", Buf::M(mask));
+                } else {
+                    self.put(seg, "head.gelu", "head.gelu_input", Buf::F(t));
+                }
+                self.put(seg, "head.gelu", "head.gelu_output", Buf::F(y));
+            }
+            "head.ln" => {
+                let x = self.store_f(seg, "head.gelu", "head.gelu_output")?;
+                let gi = self.leaf("mlm.ln.gamma")?;
+                let bi = self.leaf("mlm.ln.beta")?;
+                let f = layernorm_fwd(
+                    self.engine,
+                    &x,
+                    &self.params[gi],
+                    &self.params[bi],
+                    bs,
+                    h,
+                    LN_EPS,
+                );
+                if !opts.inplace_layernorm {
+                    self.put(seg, "head.ln", "head.ln_input", Buf::F(x));
+                }
+                self.put(seg, "head.ln", "head.ln_output", Buf::F(f.y));
+            }
+            "head.decoder" => {
+                let x = self.store_f(seg, "head.ln", "head.ln_output")?;
+                let wi = self.leaf("embeddings.word")?;
+                let bi = self.leaf("mlm.decoder_bias")?;
+                let mut logits = matmul_bt(self.engine, &x, &self.params[wi], bs, h, v);
+                let bias = &self.params[bi];
+                for row in logits.chunks_exact_mut(v) {
+                    for (o, &b) in row.iter_mut().zip(bias) {
+                        *o += b;
+                    }
+                }
+                self.put(seg, "head.decoder", "head.logits", Buf::F(logits));
+            }
+            "head.loss" => {
+                let logits = self.store_f(seg, "head.decoder", "head.logits")?;
+                let ls = log_softmax_rows(self.engine, &logits, bs, v);
+                let (mut acc, mut cnt) = (0f64, 0u64);
+                for (row, &label) in self.batch.labels.iter().enumerate() {
+                    if label >= 0 {
+                        let idx = label.rem_euclid(v as i32) as usize;
+                        acc -= f64::from(ls[row * v + idx]);
+                        cnt += 1;
+                    }
+                }
+                self.loss = if cnt > 0 { acc / cnt as f64 } else { 0.0 };
+                self.put(seg, "head.loss", "head.log_softmax", Buf::F(ls));
+            }
+            "cls.pool" => {
+                self.head_input = std::mem::take(&mut self.xcur);
+                let wi = self.leaf("pooler.w")?;
+                let bi = self.leaf("pooler.b")?;
+                let x0 = gather_first_tokens(&self.head_input, self.bsz, self.seq, h);
+                let pooled = matmul_bias(
+                    self.engine,
+                    &x0,
+                    &self.params[wi],
+                    Some(&self.params[bi]),
+                    self.bsz,
+                    h,
+                    h,
+                );
+                self.put(seg, "cls.pool", "cls.pooled", Buf::F(pooled));
+            }
+            "cls.tanh" => {
+                let pooled = self.store_f(seg, "cls.pool", "cls.pooled")?;
+                let t = map_elems(self.engine, &pooled, |_, x| f64::from(x).tanh() as f32);
+                self.put(seg, "cls.tanh", "cls.tanh_out", Buf::F(t));
+            }
+            "cls.logits" => {
+                let t = self.store_f(seg, "cls.tanh", "cls.tanh_out")?;
+                let wi = self.leaf("classifier.w")?;
+                let bi = self.leaf("classifier.b")?;
+                let classes = self.params[bi].len();
+                let logits = matmul_bias(
+                    self.engine,
+                    &t,
+                    &self.params[wi],
+                    Some(&self.params[bi]),
+                    self.bsz,
+                    h,
+                    classes,
+                );
+                let ls = log_softmax_rows(self.engine, &logits, self.bsz, classes);
+                let mut acc = 0f64;
+                for b in 0..self.bsz {
+                    let label =
+                        self.batch.labels[b * self.seq].rem_euclid(classes as i32) as usize;
+                    acc -= f64::from(ls[b * classes + label]);
+                }
+                self.loss = acc / self.bsz as f64;
+                self.put(seg, "cls.logits", "cls.logits", Buf::F(logits));
+            }
+            _ => {
+                return Err(Error::Backend(format!("kernel backend: unknown head op {name}")))
+            }
+        }
+        Ok(())
+    }
+
+    // -- backward ops -------------------------------------------------------
+
+    /// Per-row rstd for a LayerNorm backward: stored directly by the
+    /// in-place rewrite, else recomputed from the stored `mean_var`
+    /// pair — bit-identical by construction (forward derives rstd from
+    /// the f32-rounded variance).
+    fn ln_rstd(&self, seg: Segment, op: &'static str, rows: usize) -> Result<Vec<f32>> {
+        if self.has(seg, op, "rstd") {
+            return self.store_f(seg, op, "rstd");
+        }
+        let mv = self.store_f(seg, op, "mean_var")?;
+        if mv.len() != 2 * rows {
+            return Err(Error::Backend(format!(
+                "kernel store: mean_var of {op} has {} elements, expected {}",
+                mv.len(),
+                2 * rows
+            )));
+        }
+        Ok(rstd_from_var(&mv[rows..], LN_EPS))
+    }
+
+    fn backward_op(&mut self, seg: Segment, name: &'static str) -> Result<()> {
+        match seg {
+            Segment::Embedding => self.bwd_embedding(name),
+            Segment::Encoder(l) => self.bwd_encoder(seg, l as u32, name),
+            Segment::Head => self.bwd_head(name),
+            _ => Err(Error::Backend(format!(
+                "kernel backend: unexpected backward op {name} in {}",
+                seg.label()
+            ))),
+        }
+    }
+
+    fn bwd_encoder(&mut self, seg: Segment, l: u32, name: &'static str) -> Result<()> {
+        let (bs, h, inter) = (self.bsz * self.seq, self.hid, self.inter);
+        let srows = self.bsz * self.heads * self.seq;
+        match name {
+            "ln2" => {
+                let y = std::mem::take(&mut self.vcur);
+                let rstd = self.ln_rstd(seg, "ln2", bs)?;
+                let gi = self.layer_leaf(l, "ffn.ln.gamma")?;
+                let bi = self.layer_leaf(l, "ffn.ln.beta")?;
+                let g = std::mem::take(&mut self.gcur);
+                let b = layernorm_bwd(
+                    self.engine,
+                    &g,
+                    &y,
+                    &self.params[gi],
+                    &self.params[bi],
+                    &rstd,
+                    bs,
+                    h,
+                );
+                self.add_grad(gi, &b.dgamma);
+                self.add_grad(bi, &b.dbeta);
+                self.gcur = b.dx;
+            }
+            "ffn.residual" => {
+                self.bwdf.insert("res_ln1", self.gcur.clone());
+            }
+            "ffn.fc2_dropout" => {
+                let mask = self.store_m(seg, "ffn.fc2_dropout", "ffn.drop_mask")?;
+                self.gcur = dropout_apply(self.engine, &self.gcur, &mask, self.p_drop);
+            }
+            "ffn.fc2" => {
+                let a = self.store_f(seg, "ffn.gelu", "ffn.gelu_output")?;
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.layer_leaf(l, "ffn.out_w")?;
+                let bi = self.layer_leaf(l, "ffn.out_b")?;
+                let dw = matmul_at(self.engine, &a, &g, bs, inter, h);
+                let db = bias_grad(&g, bs, h);
+                let dx = matmul_bt(self.engine, &g, &self.params[wi], bs, h, inter);
+                self.add_grad(wi, &dw);
+                self.add_grad(bi, &db);
+                self.gcur = dx;
+            }
+            "ffn.gelu" => {
+                let g = std::mem::take(&mut self.gcur);
+                self.gcur = if self.has(seg, "ffn.gelu", "ffn.gelu_input") {
+                    let x = self.store_f(seg, "ffn.gelu", "ffn.gelu_input")?;
+                    gelu_bwd(self.engine, &g, &x)
+                } else {
+                    let y = self.store_f(seg, "ffn.gelu", "ffn.gelu_output")?;
+                    let mask = self.store_m(seg, "ffn.gelu", "ffn.gelu_mask")?;
+                    gelu_bwd_inplace(self.engine, &g, &y, &mask)
+                };
+            }
+            "ffn.fc1" => {
+                let a = self.store_f(seg, "ln1", "ln1.output")?;
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.layer_leaf(l, "ffn.in_w")?;
+                let bi = self.layer_leaf(l, "ffn.in_b")?;
+                let dw = matmul_at(self.engine, &a, &g, bs, h, inter);
+                let db = bias_grad(&g, bs, inter);
+                let dx = matmul_bt(self.engine, &g, &self.params[wi], bs, inter, h);
+                self.add_grad(wi, &dw);
+                self.add_grad(bi, &db);
+                let res = self.bwdf_take("res_ln1")?;
+                self.gcur = add(self.engine, &dx, &res);
+            }
+            "ln1" => {
+                let y = self.store_f(seg, "ln1", "ln1.output")?;
+                let rstd = self.ln_rstd(seg, "ln1", bs)?;
+                let gi = self.layer_leaf(l, "attn.ln.gamma")?;
+                let bi = self.layer_leaf(l, "attn.ln.beta")?;
+                let g = std::mem::take(&mut self.gcur);
+                let b = layernorm_bwd(
+                    self.engine,
+                    &g,
+                    &y,
+                    &self.params[gi],
+                    &self.params[bi],
+                    &rstd,
+                    bs,
+                    h,
+                );
+                self.add_grad(gi, &b.dgamma);
+                self.add_grad(bi, &b.dbeta);
+                self.gcur = b.dx;
+            }
+            "attn.residual" => {
+                self.bwdf.insert("res_x", self.gcur.clone());
+            }
+            "attn.proj_dropout" => {
+                let mask = self.store_m(seg, "attn.proj_dropout", "attn.proj_drop_mask")?;
+                self.gcur = dropout_apply(self.engine, &self.gcur, &mask, self.p_drop);
+            }
+            "attn.proj" => {
+                let ctx = self.store_f(seg, "attn.pv", "attn.context")?;
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.layer_leaf(l, "attn.out_w")?;
+                let bi = self.layer_leaf(l, "attn.out_b")?;
+                let dw = matmul_at(self.engine, &ctx, &g, bs, h, h);
+                let db = bias_grad(&g, bs, h);
+                let dx = matmul_bt(self.engine, &g, &self.params[wi], bs, h, h);
+                self.add_grad(wi, &dw);
+                self.add_grad(bi, &db);
+                self.gcur = dx;
+            }
+            "attn.pv" => {
+                let dropped = if self.has(seg, "attn.dropout", "attn.probs_dropped") {
+                    self.store_f(seg, "attn.dropout", "attn.probs_dropped")?
+                } else {
+                    // §3.3 dropout recompute: replay the cheap apply
+                    // from the kept probs + mask (bit-identical).
+                    let probs = self.store_f(seg, "attn.softmax", "attn.probs")?;
+                    let mask = self.store_m(seg, "attn.dropout", "attn.drop_mask")?;
+                    dropout_apply(self.engine, &probs, &mask, self.p_drop)
+                };
+                let v = self.store_f(seg, "attn.qkv", "attn.v")?;
+                let g = std::mem::take(&mut self.gcur);
+                let (dprobs, dv) = attn_context_bwd(self.engine, &g, &dropped, &v, self.dims());
+                self.bwdf.insert("dv", dv);
+                self.gcur = dprobs;
+            }
+            "attn.dropout" => {
+                let mask = self.store_m(seg, "attn.dropout", "attn.drop_mask")?;
+                self.gcur = dropout_apply(self.engine, &self.gcur, &mask, self.p_drop);
+            }
+            "attn.softmax" => {
+                let probs = self.store_f(seg, "attn.softmax", "attn.probs")?;
+                let g = std::mem::take(&mut self.gcur);
+                self.gcur = softmax_bwd(self.engine, &g, &probs, srows, self.seq);
+            }
+            "attn.scores" => {
+                let q = self.store_f(seg, "attn.qkv", "attn.q")?;
+                let k = self.store_f(seg, "attn.qkv", "attn.k")?;
+                let g = std::mem::take(&mut self.gcur);
+                let (dq, dk) = attn_scores_bwd(self.engine, &g, &q, &k, self.dims());
+                self.bwdf.insert("dq", dq);
+                self.bwdf.insert("dk", dk);
+            }
+            "attn.qkv" => {
+                let x = self.store_f(seg, "attn.qkv", "attn.input")?;
+                let mut total = self.bwdf_take("res_x")?;
+                for (dn, wn, bn) in [
+                    ("dq", "attn.q_w", "attn.q_b"),
+                    ("dk", "attn.k_w", "attn.k_b"),
+                    ("dv", "attn.v_w", "attn.v_b"),
+                ] {
+                    let dg = self.bwdf_take(dn)?;
+                    let wi = self.layer_leaf(l, wn)?;
+                    let bi = self.layer_leaf(l, bn)?;
+                    let dw = matmul_at(self.engine, &x, &dg, bs, h, h);
+                    let db = bias_grad(&dg, bs, h);
+                    let dx = matmul_bt(self.engine, &dg, &self.params[wi], bs, h, h);
+                    self.add_grad(wi, &dw);
+                    self.add_grad(bi, &db);
+                    total = add(self.engine, &total, &dx);
+                }
+                self.gcur = total;
+                // The layer input IS the lower segment's ln2 output —
+                // stash its value before the frees take it (the lower
+                // LN backward is output-based).
+                self.vcur = x;
+                let (k, li) = seg_key(seg);
+                self.store.take(&(k, li, "ckpt", "ckpt.stored_input"));
+            }
+            _ => {
+                return Err(Error::Backend(format!(
+                    "kernel backend: unknown encoder backward op {name}"
+                )))
+            }
+        }
+        self.free_op(seg, name);
+        Ok(())
+    }
+
+    fn bwd_embedding(&mut self, name: &'static str) -> Result<()> {
+        let seg = Segment::Embedding;
+        let (bs, h) = (self.bsz * self.seq, self.hid);
+        match name {
+            "emb.dropout" => {
+                self.vcur = Vec::new();
+                let mask = self.store_m(seg, "emb.dropout", "emb.drop_mask")?;
+                self.gcur = dropout_apply(self.engine, &self.gcur, &mask, self.p_drop);
+            }
+            "emb.ln" => {
+                let y = self.store_f(seg, "emb.ln", "emb.ln_output")?;
+                let x = self.store_f(seg, "emb.sum", "emb.sum_output")?;
+                let gi = self.leaf("embeddings.ln.gamma")?;
+                let bi = self.leaf("embeddings.ln.beta")?;
+                // Stats are always recomputed here (the tape never
+                // retains them for the embedding LN) — bit-identical to
+                // the forward's, same kernel, same input.
+                let f = layernorm_fwd(
+                    self.engine,
+                    &x,
+                    &self.params[gi],
+                    &self.params[bi],
+                    bs,
+                    h,
+                    LN_EPS,
+                );
+                let g = std::mem::take(&mut self.gcur);
+                let b = layernorm_bwd(
+                    self.engine,
+                    &g,
+                    &y,
+                    &self.params[gi],
+                    &self.params[bi],
+                    &f.rstd,
+                    bs,
+                    h,
+                );
+                self.add_grad(gi, &b.dgamma);
+                self.add_grad(bi, &b.dbeta);
+                self.gcur = b.dx;
+            }
+            "emb.sum" => {
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.leaf("embeddings.word")?;
+                let pi = self.leaf("embeddings.position")?;
+                let ti = self.leaf("embeddings.token_type")?;
+                let mut dword = vec![0f32; self.grads[wi].len()];
+                let mut dpos = vec![0f32; self.grads[pi].len()];
+                let mut dtok = vec![0f32; self.grads[ti].len()];
+                let tv = (dtok.len() / h) as i32;
+                for row in 0..bs {
+                    let id = self.batch.input_ids[row].rem_euclid(self.vocab as i32) as usize;
+                    let s = row % self.seq;
+                    let tt = self.batch.token_type_ids[row].rem_euclid(tv) as usize;
+                    let gr = &g[row * h..(row + 1) * h];
+                    for (j, &gv) in gr.iter().enumerate() {
+                        dword[id * h + j] += gv;
+                        dpos[s * h + j] += gv;
+                        dtok[tt * h + j] += gv;
+                    }
+                }
+                self.add_grad(wi, &dword);
+                self.add_grad(pi, &dpos);
+                self.add_grad(ti, &dtok);
+            }
+            _ => {
+                return Err(Error::Backend(format!(
+                    "kernel backend: unknown embedding backward op {name}"
+                )))
+            }
+        }
+        self.free_op(seg, name);
+        Ok(())
+    }
+
+    fn bwd_head(&mut self, name: &'static str) -> Result<()> {
+        let seg = Segment::Head;
+        let (bs, h, v) = (self.bsz * self.seq, self.hid, self.vocab);
+        match name {
+            "head.loss" => {
+                let ls = self.store_f(seg, "head.loss", "head.log_softmax")?;
+                let labels = &self.batch.labels;
+                let cnt = labels.iter().filter(|&&x| x >= 0).count().max(1) as f32;
+                self.gcur = fill_rows(self.engine, bs, v, |row, out| {
+                    let label = labels[row];
+                    if label >= 0 {
+                        let idx = label.rem_euclid(v as i32) as usize;
+                        let lr = &ls[row * v..(row + 1) * v];
+                        for (j, o) in out.iter_mut().enumerate() {
+                            let p = f64::from(lr[j]).exp() as f32;
+                            *o = (p - if j == idx { 1.0 } else { 0.0 }) / cnt;
+                        }
+                    }
+                });
+            }
+            "head.decoder" => {
+                let x = self.store_f(seg, "head.ln", "head.ln_output")?;
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.leaf("embeddings.word")?;
+                let bi = self.leaf("mlm.decoder_bias")?;
+                let dh = matmul(self.engine, &g, &self.params[wi], bs, v, h);
+                let dword = matmul_at(self.engine, &g, &x, bs, v, h);
+                let db = bias_grad(&g, bs, v);
+                self.add_grad(wi, &dword);
+                self.add_grad(bi, &db);
+                self.gcur = dh;
+            }
+            "head.ln" => {
+                let y = self.store_f(seg, "head.ln", "head.ln_output")?;
+                let x = self.store_f(seg, "head.gelu", "head.gelu_output")?;
+                let gi = self.leaf("mlm.ln.gamma")?;
+                let bi = self.leaf("mlm.ln.beta")?;
+                let f = layernorm_fwd(
+                    self.engine,
+                    &x,
+                    &self.params[gi],
+                    &self.params[bi],
+                    bs,
+                    h,
+                    LN_EPS,
+                );
+                let g = std::mem::take(&mut self.gcur);
+                let b = layernorm_bwd(
+                    self.engine,
+                    &g,
+                    &y,
+                    &self.params[gi],
+                    &self.params[bi],
+                    &f.rstd,
+                    bs,
+                    h,
+                );
+                self.add_grad(gi, &b.dgamma);
+                self.add_grad(bi, &b.dbeta);
+                self.gcur = b.dx;
+            }
+            "head.gelu" => {
+                let g = std::mem::take(&mut self.gcur);
+                self.gcur = if self.has(seg, "head.gelu", "head.gelu_input") {
+                    let x = self.store_f(seg, "head.gelu", "head.gelu_input")?;
+                    gelu_bwd(self.engine, &g, &x)
+                } else {
+                    let y = self.store_f(seg, "head.gelu", "head.gelu_output")?;
+                    let mask = self.store_m(seg, "head.gelu", "head.gelu_mask")?;
+                    gelu_bwd_inplace(self.engine, &g, &y, &mask)
+                };
+            }
+            "head.transform" => {
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.leaf("mlm.transform_w")?;
+                let bi = self.leaf("mlm.transform_b")?;
+                let dw = matmul_at(self.engine, &self.head_input, &g, bs, h, h);
+                let db = bias_grad(&g, bs, h);
+                let dx = matmul_bt(self.engine, &g, &self.params[wi], bs, h, h);
+                self.add_grad(wi, &dw);
+                self.add_grad(bi, &db);
+                self.gcur = dx;
+                self.vcur = std::mem::take(&mut self.head_input);
+            }
+            "cls.logits" => {
+                let logits = self.store_f(seg, "cls.logits", "cls.logits")?;
+                let t = self.store_f(seg, "cls.tanh", "cls.tanh_out")?;
+                let wi = self.leaf("classifier.w")?;
+                let bi = self.leaf("classifier.b")?;
+                let classes = self.params[bi].len();
+                let ls = log_softmax_rows(self.engine, &logits, self.bsz, classes);
+                let labels = &self.batch.labels;
+                let (bsz, seq) = (self.bsz, self.seq);
+                let dlogits = fill_rows(self.engine, bsz, classes, |b, out| {
+                    let label = labels[b * seq].rem_euclid(classes as i32) as usize;
+                    let lr = &ls[b * classes..(b + 1) * classes];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        let p = f64::from(lr[j]).exp() as f32;
+                        *o = (p - if j == label { 1.0 } else { 0.0 }) / bsz as f32;
+                    }
+                });
+                let dw = matmul_at(self.engine, &t, &dlogits, bsz, h, classes);
+                let db = bias_grad(&dlogits, bsz, classes);
+                let dt = matmul_bt(self.engine, &dlogits, &self.params[wi], bsz, classes, h);
+                self.add_grad(wi, &dw);
+                self.add_grad(bi, &db);
+                self.gcur = dt;
+            }
+            "cls.tanh" => {
+                let t = self.store_f(seg, "cls.tanh", "cls.tanh_out")?;
+                let g = std::mem::take(&mut self.gcur);
+                self.gcur = map_elems(self.engine, &g, |i, gv| gv * (1.0 - t[i] * t[i]));
+            }
+            "cls.pool" => {
+                let g = std::mem::take(&mut self.gcur);
+                let wi = self.leaf("pooler.w")?;
+                let bi = self.leaf("pooler.b")?;
+                let x0 = gather_first_tokens(&self.head_input, self.bsz, self.seq, h);
+                let dw = matmul_at(self.engine, &x0, &g, self.bsz, h, h);
+                let db = bias_grad(&g, self.bsz, h);
+                let dx0 = matmul_bt(self.engine, &g, &self.params[wi], self.bsz, h, h);
+                self.add_grad(wi, &dw);
+                self.add_grad(bi, &db);
+                let mut full = vec![0f32; bs * h];
+                for b in 0..self.bsz {
+                    full[b * self.seq * h..b * self.seq * h + h]
+                        .copy_from_slice(&dx0[b * h..(b + 1) * h]);
+                }
+                self.gcur = full;
+                self.vcur = std::mem::take(&mut self.head_input);
+            }
+            _ => {
+                return Err(Error::Backend(format!(
+                    "kernel backend: unknown head backward op {name}"
+                )))
+            }
+        }
+        self.free_op(seg, name);
+        Ok(())
+    }
+
+    // -- optimizer ----------------------------------------------------------
+
+    /// Bias-corrected Adam over every leaf (β₁=0.9, β₂=0.999, ε=1e-8;
+    /// step counts from 0, so the correction uses `t = step + 1`).
+    fn adam(&mut self) {
+        let (b1, b2, eps) = ADAM;
+        let t = (self.step + 1).max(1) as i32;
+        let bc1 = 1.0 - b1.powi(t);
+        let bc2 = 1.0 - b2.powi(t);
+        let lr = f64::from(self.lr);
+        for i in 0..self.params.len() {
+            let gs = &self.grads[i];
+            let ms = &mut self.m_state[i];
+            let vs = &mut self.v_state[i];
+            let ps = &mut self.params[i];
+            for j in 0..ps.len() {
+                let g = f64::from(gs[j]);
+                let m = b1 * f64::from(ms[j]) + (1.0 - b1) * g;
+                let v = b2 * f64::from(vs[j]) + (1.0 - b2) * g * g;
+                ms[j] = m as f32;
+                vs[j] = v as f32;
+                let update = lr * (m / bc1) / ((v / bc2).sqrt() + eps);
+                ps[j] = (f64::from(ps[j]) - update) as f32;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared numeric helpers
+// ---------------------------------------------------------------------------
+
+/// Gather token 0 of every sequence: `[B·S, H] → [B, H]`.
+fn gather_first_tokens(x: &[f32], bsz: usize, seq: usize, h: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(bsz * h);
+    for b in 0..bsz {
+        out.extend_from_slice(&x[b * seq * h..b * seq * h + h]);
+    }
+    out
+}
+
+/// Row-wise log-softmax (max-subtracted, f64 log-sum-exp).
+fn log_softmax_rows(engine: &ExperimentEngine, x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    fill_rows(engine, rows, cols, |i, out| {
+        let row = &x[i * cols..(i + 1) * cols];
+        let mut m = f32::NEG_INFINITY;
+        for &v in row {
+            m = m.max(v);
+        }
+        let mut s = 0f64;
+        for &v in row {
+            s += f64::from(v - m).exp();
+        }
+        let lse = f64::from(m) + s.ln();
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o = (f64::from(v) - lse) as f32;
+        }
+    })
+}
+
+/// Leaf lookup against a prebuilt name index (eval path).
+fn lookup<'p>(
+    idx: &HashMap<&str, usize>,
+    params: &'p [Vec<f32>],
+    name: &str,
+) -> Result<&'p [f32]> {
+    idx.get(name)
+        .map(|&i| params[i].as_slice())
+        .ok_or_else(|| Error::Abi(format!("kernel backend: no parameter leaf named {name}")))
+}
+
+/// Forward-only evaluation pass: dropout disabled, attention fused
+/// (never materializing the `[B,A,S,S]` map). Returns `(loss, metric)`
+/// — masked-token perplexity `exp(−loss)` proxy for MLM, accuracy for
+/// classification.
+fn eval_forward(
+    m: &Manifest,
+    engine: &ExperimentEngine,
+    params: &[Vec<f32>],
+    batch: &StepBatch,
+) -> Result<(f64, f64)> {
+    let cfg = model_config(m);
+    if cfg.hidden % cfg.heads.max(1) != 0 {
+        return Err(Error::Invalid(format!(
+            "kernel backend: heads {} must divide hidden {}",
+            cfg.heads, cfg.hidden
+        )));
+    }
+    let leaf_idx: HashMap<&str, usize> =
+        m.params.iter().enumerate().map(|(i, s)| (s.name.as_str(), i)).collect();
+    let (bsz, seq, h, inter) = (m.batch_size, cfg.seq_len, cfg.hidden, cfg.intermediate);
+    let (bs, v) = (bsz * seq, cfg.vocab_size);
+    let dims = AttnDims { batch: bsz, heads: cfg.heads, seq, head_dim: h / cfg.heads };
+
+    // Embeddings (dropout is a no-op in eval).
+    let (word, pos, tok) = (
+        lookup(&leaf_idx, params, "embeddings.word")?,
+        lookup(&leaf_idx, params, "embeddings.position")?,
+        lookup(&leaf_idx, params, "embeddings.token_type")?,
+    );
+    let tv = (tok.len() / h) as i32;
+    let summed = fill_rows(engine, bs, h, |row, out| {
+        let id = batch.input_ids[row].rem_euclid(v as i32) as usize;
+        let s = row % seq;
+        let tt = batch.token_type_ids[row].rem_euclid(tv) as usize;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = word[id * h + j] + pos[s * h + j] + tok[tt * h + j];
+        }
+    });
+    let mut x = layernorm_fwd(
+        engine,
+        &summed,
+        lookup(&leaf_idx, params, "embeddings.ln.gamma")?,
+        lookup(&leaf_idx, params, "embeddings.ln.beta")?,
+        bs,
+        h,
+        LN_EPS,
+    )
+    .y;
+
+    for l in 0..cfg.layers {
+        let q = matmul_bias(engine, &x, lookup(&leaf_idx, params, &format!("encoder.{l}.attn.q_w"))?, Some(lookup(&leaf_idx, params, &format!("encoder.{l}.attn.q_b"))?), bs, h, h);
+        let k = matmul_bias(engine, &x, lookup(&leaf_idx, params, &format!("encoder.{l}.attn.k_w"))?, Some(lookup(&leaf_idx, params, &format!("encoder.{l}.attn.k_b"))?), bs, h, h);
+        let val = matmul_bias(engine, &x, lookup(&leaf_idx, params, &format!("encoder.{l}.attn.v_w"))?, Some(lookup(&leaf_idx, params, &format!("encoder.{l}.attn.v_b"))?), bs, h, h);
+        let ctx = attention_fwd(engine, &q, &k, &val, Some(&batch.attention_mask), dims);
+        let proj = matmul_bias(engine, &ctx, lookup(&leaf_idx, params, &format!("encoder.{l}.attn.out_w"))?, Some(lookup(&leaf_idx, params, &format!("encoder.{l}.attn.out_b"))?), bs, h, h);
+        let res1 = add(engine, &proj, &x);
+        let a = layernorm_fwd(engine, &res1, lookup(&leaf_idx, params, &format!("encoder.{l}.attn.ln.gamma"))?, lookup(&leaf_idx, params, &format!("encoder.{l}.attn.ln.beta"))?, bs, h, LN_EPS).y;
+        let fc1 = matmul_bias(engine, &a, lookup(&leaf_idx, params, &format!("encoder.{l}.ffn.in_w"))?, Some(lookup(&leaf_idx, params, &format!("encoder.{l}.ffn.in_b"))?), bs, h, inter);
+        let act = gelu_fwd(engine, &fc1).0;
+        let fc2 = matmul_bias(engine, &act, lookup(&leaf_idx, params, &format!("encoder.{l}.ffn.out_w"))?, Some(lookup(&leaf_idx, params, &format!("encoder.{l}.ffn.out_b"))?), bs, inter, h);
+        let res2 = add(engine, &fc2, &a);
+        x = layernorm_fwd(engine, &res2, lookup(&leaf_idx, params, &format!("encoder.{l}.ffn.ln.gamma"))?, lookup(&leaf_idx, params, &format!("encoder.{l}.ffn.ln.beta"))?, bs, h, LN_EPS).y;
+    }
+
+    if m.task == "cls" {
+        let x0 = gather_first_tokens(&x, bsz, seq, h);
+        let pooled = matmul_bias(engine, &x0, lookup(&leaf_idx, params, "pooler.w")?, Some(lookup(&leaf_idx, params, "pooler.b")?), bsz, h, h);
+        let t = map_elems(engine, &pooled, |_, p| f64::from(p).tanh() as f32);
+        let classes = lookup(&leaf_idx, params, "classifier.b")?.len();
+        let logits =
+            matmul_bias(engine, &t, lookup(&leaf_idx, params, "classifier.w")?, Some(lookup(&leaf_idx, params, "classifier.b")?), bsz, h, classes);
+        let ls = log_softmax_rows(engine, &logits, bsz, classes);
+        let (mut acc, mut hits) = (0f64, 0u64);
+        for b in 0..bsz {
+            let label = batch.labels[b * seq].rem_euclid(classes as i32) as usize;
+            let row = &ls[b * classes..(b + 1) * classes];
+            acc -= f64::from(row[label]);
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.total_cmp(y.1))
+                .map_or(0, |(i, _)| i);
+            hits += u64::from(argmax == label);
+        }
+        Ok((acc / bsz as f64, hits as f64 / bsz as f64))
+    } else {
+        let t = matmul_bias(
+            engine,
+            &x,
+            lookup(&leaf_idx, params, "mlm.transform_w")?,
+            Some(lookup(&leaf_idx, params, "mlm.transform_b")?),
+            bs,
+            h,
+            h,
+        );
+        let act = gelu_fwd(engine, &t).0;
+        let normed =
+            layernorm_fwd(engine, &act, lookup(&leaf_idx, params, "mlm.ln.gamma")?, lookup(&leaf_idx, params, "mlm.ln.beta")?, bs, h, LN_EPS).y;
+        let mut logits = matmul_bt(engine, &normed, lookup(&leaf_idx, params, "embeddings.word")?, bs, h, v);
+        let bias = lookup(&leaf_idx, params, "mlm.decoder_bias")?;
+        for row in logits.chunks_exact_mut(v) {
+            for (o, &b) in row.iter_mut().zip(bias) {
+                *o += b;
+            }
+        }
+        let ls = log_softmax_rows(engine, &logits, bs, v);
+        let (mut acc, mut cnt) = (0f64, 0u64);
+        for (row, &label) in batch.labels.iter().enumerate() {
+            if label >= 0 {
+                acc -= f64::from(ls[row * v + label.rem_euclid(v as i32) as usize]);
+                cnt += 1;
+            }
+        }
+        let loss = if cnt > 0 { acc / cnt as f64 } else { 0.0 };
+        Ok((loss, (-loss).exp()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, Technique};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "kern-test".into(),
+            kind: ModelKind::Bert,
+            hidden: 64,
+            layers: 2,
+            heads: 2,
+            seq_len: 16,
+            intermediate: 128,
+            vocab_size: 128,
+            max_position: 32,
+            type_vocab: 2,
+            dropout_p: 0.1,
+        }
+    }
+
+    fn tiny_manifest(task: &str, variant: &str) -> Manifest {
+        Manifest::synthetic("kern_test", task, variant, "kernel", 2, &tiny_cfg(), 3)
+    }
+
+    fn run_trace(m: &Manifest, plan: &SchedulePlan, jobs: usize) -> (StepTrace, Vec<Vec<f32>>) {
+        let engine = ExperimentEngine::new(jobs);
+        let mut params = init_params(m, 11);
+        let batch = StepBatch::synthetic(m, 5);
+        let trace = step_trace(m, plan, &engine, &mut params, &batch, 0, 21, 1e-3)
+            .expect("tiny step runs");
+        (trace, params)
+    }
+
+    #[test]
+    fn init_respects_parameter_roles() {
+        let m = tiny_manifest("mlm", "baseline");
+        let params = init_params(&m, 7);
+        for (spec, p) in m.params.iter().zip(&params) {
+            if spec.name.ends_with("gamma") {
+                assert!(p.iter().all(|&v| v == 1.0), "{} should start at 1", spec.name);
+            } else if spec.name.ends_with("beta") || spec.name.ends_with("_b") {
+                assert!(p.iter().all(|&v| v == 0.0), "{} should start at 0", spec.name);
+            }
+        }
+        let word = &params[0];
+        assert!(word.iter().any(|&v| v != 0.0));
+        assert!(word.iter().all(|&v| v.abs() < 0.5));
+        assert_eq!(init_params(&m, 7), params, "same seed, same draw");
+        assert_ne!(init_params(&m, 8), params, "seed moves the draw");
+    }
+
+    #[test]
+    fn step_is_bit_identical_across_worker_counts() {
+        let m = tiny_manifest("mlm", "tempo");
+        let cfg = tiny_cfg();
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
+        let (t1, p1) = run_trace(&m, &plan, 1);
+        let (t3, p3) = run_trace(&m, &plan, 3);
+        assert!(t1.loss.is_finite() && t1.loss > 0.0);
+        assert_eq!(t1.loss.to_bits(), t3.loss.to_bits());
+        assert_eq!(t1.grads, t3.grads);
+        assert_eq!(p1, p3);
+    }
+
+    #[test]
+    fn checkpoint_and_offload_replay_baseline_gradients_bitwise() {
+        let m = tiny_manifest("mlm", "baseline");
+        let cfg = tiny_cfg();
+        let base = SchedulePlan::uniform(&cfg, OptimizationSet::none(), true);
+        let (bt, bp) = run_trace(&m, &base, 2);
+        let overlapped = SchedulePlan::for_technique(&cfg, Technique::Checkpoint, true);
+        let serial = overlapped.clone().serial();
+        let offload = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            vec![Residency::Offload; cfg.layers],
+            true,
+        );
+        for (label, plan) in
+            [("overlapped", &overlapped), ("serial", &serial), ("offload", &offload)]
+        {
+            let (t, p) = run_trace(&m, plan, 2);
+            assert_eq!(t.loss.to_bits(), bt.loss.to_bits(), "{label} loss");
+            assert_eq!(t.grads, bt.grads, "{label} grads");
+            assert_eq!(p, bp, "{label} params");
+        }
+        assert_eq!(bt.host_peak_bytes, 0);
+        let (ot, _) = run_trace(&m, &offload, 2);
+        assert!(ot.host_peak_bytes > 0, "offload parks bytes on the host");
+    }
+
+    #[test]
+    fn program_abi_round_trips() {
+        let m = tiny_manifest("mlm", "tempo");
+        let n = m.n_param_leaves;
+        let artifact = Artifact::synthetic(m);
+        let backend = KernelBackend::with_jobs(2);
+        let init = backend.prepare(&artifact, Entry::Init).unwrap();
+        let seed = Arc::new(HostTensor::scalar_i32(7));
+        let leaves = init.run(&[&seed]).unwrap();
+        assert_eq!(leaves.len(), 3 * n);
+
+        let am = &artifact.manifest;
+        let batch = StepBatch::synthetic(am, 3);
+        let shape = vec![am.batch_size, am.config.seq_len];
+        let step = backend.prepare(&artifact, Entry::Step).unwrap();
+        let mut inputs: Vec<Arc<HostTensor>> = leaves.clone();
+        for data in [&batch.input_ids, &batch.token_type_ids, &batch.attention_mask, &batch.labels]
+        {
+            inputs.push(Arc::new(HostTensor::i32(shape.clone(), data.clone()).unwrap()));
+        }
+        inputs.push(Arc::new(HostTensor::scalar_i32(0)));
+        inputs.push(Arc::new(HostTensor::scalar_i32(9)));
+        inputs.push(Arc::new(HostTensor::scalar_f32(1e-3)));
+        let refs: Vec<&Arc<HostTensor>> = inputs.iter().collect();
+        let out = step.run(&refs).unwrap();
+        assert_eq!(out.len(), 3 * n + 1);
+        let loss = out[3 * n].first().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_ne!(out[0].as_f32().unwrap(), inputs[0].as_f32().unwrap(), "params moved");
+
+        let eval = backend.prepare(&artifact, Entry::Eval).unwrap();
+        let mut einputs: Vec<Arc<HostTensor>> = leaves[..n].to_vec();
+        for data in [&batch.input_ids, &batch.token_type_ids, &batch.attention_mask, &batch.labels]
+        {
+            einputs.push(Arc::new(HostTensor::i32(shape.clone(), data.clone()).unwrap()));
+        }
+        einputs.push(Arc::new(HostTensor::scalar_i32(9)));
+        let erefs: Vec<&Arc<HostTensor>> = einputs.iter().collect();
+        let eout = eval.run(&erefs).unwrap();
+        assert_eq!(eout.len(), 2);
+        assert!(eout[0].first().unwrap().is_finite());
+        assert!(eout[1].first().unwrap().is_finite());
+    }
+
+    #[test]
+    fn cls_head_trains() {
+        let m = tiny_manifest("cls", "tempo");
+        let cfg = tiny_cfg();
+        let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, false);
+        let (t, _) = run_trace(&m, &plan, 2);
+        assert!(t.loss.is_finite() && t.loss > 0.0);
+        let pooler = m.params.iter().position(|s| s.name == "pooler.w").unwrap();
+        assert!(t.grads[pooler].iter().any(|&g| g != 0.0));
+        let word = m.params.iter().position(|s| s.name == "embeddings.word").unwrap();
+        assert!(t.grads[word].iter().any(|&g| g != 0.0), "grad reaches the embeddings");
+
+        let engine = ExperimentEngine::new(2);
+        let params = init_params(&m, 11);
+        let batch = StepBatch::synthetic(&m, 5);
+        let (loss, acc) = eval_forward(&m, &engine, &params, &batch).unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn meter_tracks_plan_orderings() {
+        let m = tiny_manifest("mlm", "baseline");
+        let cfg = tiny_cfg();
+        let base = SchedulePlan::uniform(&cfg, OptimizationSet::none(), true);
+        let tempo = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
+        let (bt, _) = run_trace(&m, &base, 1);
+        let (tt, _) = run_trace(&m, &tempo, 1);
+        assert!(bt.measured_peak_bytes > 0 && bt.modeled_peak_bytes > 0);
+        assert!(
+            tt.measured_peak_bytes < bt.measured_peak_bytes,
+            "rewrites shrink the measured peak ({} !< {})",
+            tt.measured_peak_bytes,
+            bt.measured_peak_bytes
+        );
+    }
+}

@@ -18,6 +18,7 @@
 
 mod artifact;
 mod backend;
+mod kernel;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod sim;
@@ -27,6 +28,7 @@ pub use artifact::{
     Artifact, ArtifactIndex, IndexEntry, LeafSpec, Manifest, ManifestConfig, ManifestFiles,
 };
 pub use backend::{Backend, DeviceState, Entry, Program};
+pub use kernel::{init_params, step_trace, KernelBackend, KernelProgram, StepBatch, StepTrace};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, Executable, PjrtBackend, Runtime};
 pub use sim::{builtin_manifests, SimBackend, SimProgram, SIM_INIT_STD};

@@ -330,8 +330,9 @@ fn scalar_f32(t: &HostTensor) -> Result<f32> {
         .ok_or_else(|| Error::Abi("empty scalar input".into()))?)
 }
 
-/// Map a manifest variant onto the analytical technique.
-fn technique(m: &Manifest) -> Technique {
+/// Map a manifest variant onto the analytical technique (shared with
+/// the kernel backend, which derives its default plan the same way).
+pub(crate) fn technique(m: &Manifest) -> Technique {
     match m.variant.as_str() {
         "checkpoint" => Technique::Checkpoint,
         "tempo" => Technique::Tempo,
@@ -340,8 +341,8 @@ fn technique(m: &Manifest) -> Technique {
 }
 
 /// Reconstruct a [`ModelConfig`] from the manifest echo (for the
-/// capacity/roofline models).
-fn model_config(m: &Manifest) -> ModelConfig {
+/// capacity/roofline models; shared with the kernel backend).
+pub(crate) fn model_config(m: &Manifest) -> ModelConfig {
     let c = &m.config;
     ModelConfig {
         name: c.name.clone(),

@@ -1,0 +1,152 @@
+//! Rewrite-gradient-parity property tests for the kernel backend: every
+//! Tempo rewrite subset must reproduce the unrewritten lowering's
+//! gradients on real numerics, at tiny dims, in the default test leg
+//! (no feature flags — `cargo test -q` exercises the whole path).
+//!
+//! The contract (DESIGN.md §Kernels):
+//!
+//! * Subsets of {layernorm, dropout, softmax} are **bit-equal** to the
+//!   baseline lowering: the backward kernels are output-based or
+//!   recompute-identical regardless of the plan, so a rewrite only
+//!   changes *what is retained*, never the arithmetic.
+//! * Any subset containing the in-place GELU matches within a small
+//!   relative tolerance: its backward inverts the f32-rounded output
+//!   (exact Newton, not the paper's lossy polynomials), which perturbs
+//!   the backward factor at the rounding scale.
+//! * Residency arms (checkpoint, host offload) never change values at
+//!   all — replay uses positional op seeds and offload round-trips
+//!   buffers — so they are bit-equal to the resident plan with the
+//!   same rewrite sets.
+
+use tempo::autotempo::probe_config;
+use tempo::config::{ModelConfig, OptimizationSet};
+use tempo::coordinator::ExperimentEngine;
+use tempo::graph::{CkptStyle, Residency, SchedulePlan};
+use tempo::runtime::{init_params, step_trace, Manifest, StepBatch, StepTrace};
+
+/// In-place GELU tolerance: |a − b| ≤ REL · (1 + |b|) per grad element.
+const GELU_REL: f64 = 1e-5;
+
+fn tiny() -> ModelConfig {
+    // toy dims, full structure (the measured probe's shrink)
+    probe_config(&ModelConfig::bert_tiny())
+}
+
+fn manifest(cfg: &ModelConfig) -> Manifest {
+    Manifest::synthetic("rewrite_parity", "mlm", "tempo", "kernel", 2, cfg, 2)
+}
+
+fn run(m: &Manifest, plan: &SchedulePlan) -> StepTrace {
+    let engine = ExperimentEngine::new(2);
+    let mut params = init_params(m, 11);
+    let batch = StepBatch::synthetic(m, 5);
+    step_trace(m, plan, &engine, &mut params, &batch, 0, 21, 1e-3).unwrap()
+}
+
+fn grad_bits(t: &StepTrace) -> Vec<Vec<u32>> {
+    t.grads.iter().map(|g| g.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+fn subset(bits: u32, names: [&str; 3]) -> OptimizationSet {
+    let mut opts = OptimizationSet::none();
+    for (i, name) in names.iter().enumerate() {
+        if bits & (1 << i) != 0 {
+            opts = opts.union(OptimizationSet::only(name).expect("known rewrite"));
+        }
+    }
+    opts
+}
+
+#[test]
+fn non_gelu_rewrite_subsets_reproduce_baseline_gradients_bitwise() {
+    let cfg = tiny();
+    let m = manifest(&cfg);
+    let base = run(&m, &SchedulePlan::uniform(&cfg, OptimizationSet::none(), true));
+    let base_bits = grad_bits(&base);
+    for bits in 1u32..8 {
+        let opts = subset(bits, ["layernorm", "dropout", "softmax"]);
+        let t = run(&m, &SchedulePlan::uniform(&cfg, opts, true));
+        assert_eq!(t.loss.to_bits(), base.loss.to_bits(), "loss under {}", opts.label());
+        assert_eq!(grad_bits(&t), base_bits, "gradients under {}", opts.label());
+    }
+}
+
+#[test]
+fn gelu_bearing_subsets_match_baseline_within_rel_tolerance() {
+    let cfg = tiny();
+    let m = manifest(&cfg);
+    let base = run(&m, &SchedulePlan::uniform(&cfg, OptimizationSet::none(), true));
+    for bits in 0u32..8 {
+        let opts = subset(bits, ["layernorm", "dropout", "softmax"])
+            .union(OptimizationSet::only("gelu").expect("known rewrite"));
+        let t = run(&m, &SchedulePlan::uniform(&cfg, opts, true));
+        let label = opts.label();
+        assert!(
+            (t.loss - base.loss).abs() <= GELU_REL * (1.0 + base.loss.abs()),
+            "loss under {label}: {} vs {}",
+            t.loss,
+            base.loss
+        );
+        for (leaf, (a, b)) in t.grads.iter().zip(&base.grads).enumerate() {
+            for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+                let diff = (f64::from(x) - f64::from(y)).abs();
+                assert!(
+                    diff <= GELU_REL * (1.0 + f64::from(y).abs()),
+                    "grad[{leaf}][{i}] under {label}: {x} vs {y} (diff {diff:e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn residency_arms_reproduce_resident_gradients_bitwise() {
+    let cfg = tiny();
+    let m = manifest(&cfg);
+    // checkpointed layers replay the *unoptimized* block, so compare
+    // against the rewrite-free resident plan
+    let plain = run(&m, &SchedulePlan::uniform(&cfg, OptimizationSet::none(), true));
+    let plain_bits = grad_bits(&plain);
+    for style in [CkptStyle::Overlapped, CkptStyle::Serial] {
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            vec![Residency::Checkpoint(style); cfg.layers],
+            true,
+        );
+        let t = run(&m, &plan);
+        assert_eq!(t.loss.to_bits(), plain.loss.to_bits(), "{style:?} loss");
+        assert_eq!(grad_bits(&t), plain_bits, "{style:?} gradients");
+    }
+    // offload keeps each layer's own rewrites — bit-equal to the
+    // resident plan with the same (full) rewrite set
+    let full = run(&m, &SchedulePlan::uniform(&cfg, OptimizationSet::full(), true));
+    let offload = run(
+        &m,
+        &SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); cfg.layers],
+            vec![Residency::Offload; cfg.layers],
+            true,
+        ),
+    );
+    assert_eq!(offload.loss.to_bits(), full.loss.to_bits(), "offload loss");
+    assert_eq!(grad_bits(&offload), grad_bits(&full), "offload gradients");
+    assert!(offload.host_peak_bytes > 0, "offload must actually stage to the host");
+}
+
+#[test]
+fn rewrite_parity_holds_for_the_classification_head() {
+    // same property on the fine-tune lowering (CLS head, loss in fwd)
+    let cfg = tiny();
+    let m = Manifest::synthetic("rewrite_parity_cls", "cls", "tempo", "kernel", 2, &cfg, 3);
+    let base = run(&m, &SchedulePlan::uniform(&cfg, OptimizationSet::none(), false));
+    let t = run(
+        &m,
+        &SchedulePlan::uniform(
+            &cfg,
+            subset(0b111, ["layernorm", "dropout", "softmax"]),
+            false,
+        ),
+    );
+    assert_eq!(t.loss.to_bits(), base.loss.to_bits());
+    assert_eq!(grad_bits(&t), grad_bits(&base));
+}
