@@ -18,7 +18,9 @@
 //! ratio at ≥ 10× so a memoization, chunking or pruning regression
 //! fails the leg rather than silently multiplying sweep cost.
 
-use tempo::autotempo::{placement_search, placement_search_jobs, placement_search_with, PlacementMode};
+use tempo::autotempo::{
+    placement_search, placement_search_jobs, placement_search_with, PlacementMode, TpPolicy,
+};
 use tempo::config::{Gpu, ModelConfig, OptimizationSet};
 use tempo::coordinator::ExperimentEngine;
 use tempo::graph::{self, CkptStyle, Lowering, Residency, SchedulePlan};
@@ -124,6 +126,7 @@ fn main() {
             &large512,
             Gpu::Rtx2080Ti,
             PlacementMode::Joint,
+            TpPolicy::Fixed(1),
             None,
             true,
             &engine4,

@@ -1,0 +1,118 @@
+//! Tensor-parallel benches: the shard-degree frontier and what the TP
+//! lane adds to the hot pricing path.
+//!
+//! For the flagship config the harness records (a) the cost of pricing
+//! sharded plans through `plan_lane_times` per degree — the TP lane
+//! adds one exposure fold over the in-block collectives, and the Auto
+//! search prices shard candidates at every permitted degree — (b) the
+//! incremental-pricing pair on a sharded mixed placement: the full
+//! `lower_step` event-tape fold vs the composed segment-chunk fold
+//! that prices the same plan bit-identically (the chunk cache is keyed
+//! by shard degree, so sharded plans must keep the ISSUE 8 composed/
+//! full-fold speedup), and (c) the modeled shard-degree frontier on
+//! the A100 box: max batch and step time at max batch per degree,
+//! plus the `TpPolicy::Auto` winner — the ISSUE 10 claim in numbers.
+//! CI uploads the JSON as `BENCH_tp.json` and gates the sharded
+//! composed pricing within the ≥10× composed/full-fold ratio.
+
+use tempo::autotempo::{placement_search_tp, PlacementMode, TpPolicy};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet};
+use tempo::graph::{self, CkptStyle, Lowering, Residency, SchedulePlan};
+use tempo::memmodel::max_batch_for_plan;
+use tempo::perfmodel::{plan_lane_times, plan_step_time};
+use tempo::util::BenchHarness;
+
+fn main() {
+    let mut h = BenchHarness::new();
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let n = cfg.layers;
+    let spec = Gpu::A100.spec();
+
+    // pricing cost: the TP-lane fold per degree next to the unsharded
+    // fold (degree 1 has an empty collective list)
+    for d in [1usize, 2, 4, 8] {
+        assert!(cfg.tp_permitted(d) || d == 1, "flagship dims must divide by {d}");
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); n],
+            vec![Residency::Shard; n],
+            true,
+        )
+        .with_tp(d);
+        h.bench(&format!("tp/lane-times-tp{d}/bert-large-s512-a100"), || {
+            std::hint::black_box(plan_lane_times(&cfg, &plan, &spec, 8));
+        });
+    }
+
+    // the incremental-pricing pair on a sharded mixed placement (shard
+    // the bottom half, checkpoint the rest, rewrites everywhere): full
+    // event-tape fold vs the composed segment-chunk fold — the pair CI
+    // holds at >= 10x, same as the unsharded ISSUE 8 gate
+    let mixed = {
+        let mut residency = vec![Residency::Checkpoint(CkptStyle::Overlapped); n];
+        for arm in residency.iter_mut().take(n / 2) {
+            *arm = Residency::Shard;
+        }
+        SchedulePlan::from_placement(vec![OptimizationSet::full(); n], residency, true).with_tp(4)
+    };
+    let fullfold = h.bench("tp/price-fullfold-tp4/bert-large-s512", || {
+        std::hint::black_box(
+            graph::lower_step(&cfg, &mixed, Lowering::for_model(&cfg)).summarize_step(),
+        );
+    });
+    // re-price through the warm chunk cache: drop only the whole-plan
+    // summary each iteration, so every pass pays the O(layers)
+    // recombine — the cost of re-pricing an arm after a mutation
+    let composed = h.bench("tp/price-composed-tp4/bert-large-s512", || {
+        graph::clear_schedule_cache();
+        std::hint::black_box(graph::schedule_summary(&cfg, &mixed));
+    });
+
+    // the Auto search end to end: every permitted degree's candidate
+    // family enumerated, summarized, pruned and priced in one query
+    h.bench("tp/auto-capacity-search/bert-large-s512-a100", || {
+        std::hint::black_box(placement_search_tp(
+            &cfg,
+            Gpu::A100,
+            PlacementMode::Joint,
+            TpPolicy::Auto,
+            None,
+        ));
+    });
+
+    // the modeled shard-degree frontier: max batch and step time at max
+    // batch per degree (the numbers behind the README worked example)
+    let auto = placement_search_tp(&cfg, Gpu::A100, PlacementMode::Joint, TpPolicy::Auto, None);
+    println!("shard-degree frontier on A100 ({} layers, S=512):", n);
+    for d in [1usize, 2, 4, 8] {
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); n],
+            vec![Residency::Shard; n],
+            true,
+        )
+        .with_tp(d);
+        let fit = max_batch_for_plan(&cfg, &plan, Gpu::A100);
+        let step = if fit.max_batch > 0 {
+            plan_step_time(&cfg, &plan, &spec, fit.max_batch)
+        } else {
+            f64::INFINITY
+        };
+        println!(
+            "  uniform-shard tp {d}: max batch {:>3}, step at max {:8.1} ms",
+            fit.max_batch,
+            step * 1e3,
+        );
+    }
+    println!(
+        "  auto winner   tp {}: max batch {:>3} ({})",
+        auto.tp, auto.max_batch, auto.rationale
+    );
+    let speedup = fullfold.mean.as_secs_f64() / composed.mean.as_secs_f64();
+    println!(
+        "sharded incremental pricing: full fold {:.3?} vs composed {:.3?} — {speedup:.1}x \
+         (CI gates >= 10x)",
+        fullfold.mean, composed.mean
+    );
+
+    h.write_csv("bench_results/bench_tp.csv").unwrap();
+    h.write_json("bench_results/BENCH_tp.json").unwrap();
+}

@@ -36,8 +36,8 @@ mod probe;
 mod search;
 
 pub use placement::{
-    placement_search, placement_search_jobs, placement_search_with, PlacementDecision,
-    PlacementMode, PruneStats,
+    placement_search, placement_search_jobs, placement_search_tp, placement_search_with,
+    PlacementDecision, PlacementMode, PruneStats, TpPolicy, TP_DEGREES,
 };
 pub use probe::{
     measured_probe, probe_config, ProbeReport, ProbeRow, PROBE_BATCH, PROBE_STEPS,

@@ -39,6 +39,22 @@
 //! never return a plan worse than the best uniform one
 //! (`tests/placement_search.rs` pins this).
 //!
+//! ## Tensor-parallel degrees
+//!
+//! Under a [`TpPolicy`] the family is replicated per permitted shard
+//! degree `d ∈ {1, 2, 4, 8}` (see
+//! [`ModelConfig::tp_permitted`](crate::config::ModelConfig::tp_permitted)).
+//! At `d > 1` the per-layer arms gain [`Residency::Shard`]: **bottom-c
+//! shard plans** (Shard on the bottom `c` layers, Resident above,
+//! subset `s` on every layer — rewrites run inside sharded blocks and
+//! compose), a **shard ∘ offload composition** (Shard bottom, Offload
+//! top), and the uniform checkpoint/offload arms repriced at degree
+//! `d` — the vocab-parallel head shards at *any* resolved degree > 1,
+//! so even shard-free residency layouts change peak and census and
+//! must re-enumerate. `c == n` recovers the uniform-shard plans and
+//! `c == 0` the pure-rewrite plans at degree `d`, keeping
+//! joint ⊇ uniform per degree.
+//!
 //! ## Dominance pruning
 //!
 //! Candidates are first summarized (one memoized
@@ -68,7 +84,15 @@
 //!   is ≤ Q's at every batch and every host bandwidth. Plans with
 //!   *different* host-transfer shapes (different counts) are
 //!   incomparable and both survive, so the prune stays lossless
-//!   without modeling cross-shape exposure.
+//!   without modeling cross-shape exposure, and
+//! * equal resolved shard degree, and per TP-lane collective (tape
+//!   order) the same `(bytes ≤, cover ≥)` argument as the host lane:
+//!   at equal degree the ring factor cancels, so smaller payloads
+//!   under larger covering windows expose less collective time at
+//!   every batch and every `tp_bw`. Plans at *different* resolved
+//!   degrees are incomparable by construction (their per-device
+//!   shards, ring factors, and collective shapes all differ), so the
+//!   prune never reasons across degrees and stays lossless.
 //!
 //! Q can then never win any selection objective and pruning it is
 //! lossless (pinned against exhaustive pricing in
@@ -145,6 +169,52 @@ impl PlacementMode {
     }
 }
 
+/// The shard degrees a search may explore (`tempo placement --tp`).
+pub const TP_DEGREES: [usize; 4] = [1, 2, 4, 8];
+
+/// Which tensor-parallel shard degrees `placement_search_jobs`
+/// explores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpPolicy {
+    /// One fixed degree. `Fixed(1)` is the shard-free legacy search;
+    /// an impermissible degree normalizes to 1 (the lowering would
+    /// resolve it there anyway — see
+    /// [`SchedulePlan::resolved_tp`](crate::graph::SchedulePlan::resolved_tp)).
+    Fixed(usize),
+    /// Every degree in [`TP_DEGREES`] the model's dimensions permit.
+    Auto,
+}
+
+impl TpPolicy {
+    /// Parse a `--tp` CLI value: `auto` or a degree from
+    /// [`TP_DEGREES`].
+    pub fn parse(name: &str) -> Option<TpPolicy> {
+        if name == "auto" {
+            return Some(TpPolicy::Auto);
+        }
+        name.parse::<usize>().ok().filter(|k| TP_DEGREES.contains(k)).map(TpPolicy::Fixed)
+    }
+
+    /// The concrete degrees this policy explores on `cfg`, ascending.
+    /// Never empty: degree 1 is always permitted.
+    pub fn degrees(self, cfg: &ModelConfig) -> Vec<usize> {
+        match self {
+            TpPolicy::Fixed(k) => vec![if cfg.tp_permitted(k) { k } else { 1 }],
+            TpPolicy::Auto => {
+                TP_DEGREES.iter().copied().filter(|&d| cfg.tp_permitted(d)).collect()
+            }
+        }
+    }
+
+    /// CLI-facing name (`auto` or the degree).
+    pub fn label(self) -> String {
+        match self {
+            TpPolicy::Fixed(k) => k.to_string(),
+            TpPolicy::Auto => "auto".into(),
+        }
+    }
+}
+
 /// The search funnel: how many candidate plans were enumerated, how
 /// many the dominance prune removed before pricing, and how many were
 /// actually priced (max-batch binary search + throughput).
@@ -164,6 +234,9 @@ pub struct PruneStats {
 pub struct PlacementDecision {
     /// The chosen per-layer placement.
     pub plan: LayerPlan,
+    /// The chosen plan's *resolved* shard degree (1 on shard-free
+    /// searches).
+    pub tp: usize,
     /// Modeled max batch of the chosen plan on the target GPU.
     pub max_batch: usize,
     /// Modeled throughput (seqs/s) at [`PlacementDecision::eval_batch`].
@@ -180,29 +253,48 @@ pub struct PlacementDecision {
 /// One candidate with its schedule summary (pre-pricing state).
 struct Summarized {
     plan: LayerPlan,
+    /// Resolved shard degree (`plan.tp` gated by divisibility).
+    tp: usize,
     summary: Arc<ScheduleSummary>,
 }
 
 /// One priced survivor.
 struct Scored {
     plan: LayerPlan,
+    tp: usize,
     peak_item: u64,
     max_batch: usize,
     eval_batch: usize,
     throughput: f64,
     ckpt_layers: usize,
     offload_layers: usize,
+    shard_layers: usize,
     rewrite_surface: usize,
 }
 
-/// The canonical candidate family (see module docs). Deduplicated:
+/// The canonical candidate family (see module docs): the degree-1
+/// families plus the shard families at every other degree the policy
+/// explores. Deduplicated within each degree, and distinct across
+/// degrees (`LayerPlan::tp` participates in equality).
+fn candidates(cfg: &ModelConfig, mode: PlacementMode, tp: TpPolicy) -> Vec<LayerPlan> {
+    let mut out = Vec::new();
+    for d in tp.degrees(cfg) {
+        if d == 1 {
+            base_candidates(cfg, mode, &mut out);
+        } else {
+            shard_candidates(cfg, mode, d, &mut out);
+        }
+    }
+    out
+}
+
+/// The shard-free (degree 1) families. Deduplicated:
 /// the all-baseline plan appears once, and `c == layers` joint
 /// checkpoint plans (no plain layers left) once per checkpoint style.
-fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
+fn base_candidates(cfg: &ModelConfig, mode: PlacementMode, out: &mut Vec<LayerPlan>) {
     let n = cfg.layers;
     let subsets = OptimizationSet::all_subsets();
     let none = OptimizationSet::none();
-    let mut out = Vec::new();
     match mode {
         PlacementMode::Uniform => {
             for &s in &subsets {
@@ -246,7 +338,7 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
                         for set in per_layer.iter_mut().skip(c) {
                             *set = s;
                         }
-                        out.push(LayerPlan { per_layer, residency: residency.clone() });
+                        out.push(LayerPlan { per_layer, residency: residency.clone(), tp: 1 });
                     }
                 }
             }
@@ -260,12 +352,87 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
                     *arm = Residency::Offload;
                 }
                 for &s in &subsets {
-                    out.push(LayerPlan { per_layer: vec![s; n], residency: residency.clone() });
+                    out.push(LayerPlan {
+                        per_layer: vec![s; n],
+                        residency: residency.clone(),
+                        tp: 1,
+                    });
                 }
             }
         }
     }
-    out
+}
+
+/// The shard families at degree `d > 1` (see module docs §Tensor-
+/// parallel degrees). Every plan here carries `tp: d`; the lowering
+/// shards the vocab-parallel head regardless of the residency layout,
+/// so the shard-free arms genuinely reprice at this degree.
+fn shard_candidates(cfg: &ModelConfig, mode: PlacementMode, d: usize, out: &mut Vec<LayerPlan>) {
+    let n = cfg.layers;
+    let subsets = OptimizationSet::all_subsets();
+    match mode {
+        PlacementMode::Uniform => {
+            for &s in &subsets {
+                out.push(LayerPlan::uniform(n, s).with_tp(d));
+                out.push(LayerPlan {
+                    per_layer: vec![s; n],
+                    residency: vec![Residency::Shard; n],
+                    tp: d,
+                });
+            }
+            for style in [CkptStyle::Overlapped, CkptStyle::Serial] {
+                out.push(LayerPlan::uniform_checkpoint(n, style).with_tp(d));
+            }
+            for &s in &subsets {
+                out.push(LayerPlan::uniform_offload(n, s).with_tp(d));
+            }
+        }
+        PlacementMode::Joint => {
+            // bottom-c shard plans: Shard on the bottom c layers,
+            // Resident above, subset s on every layer (rewrites run
+            // inside sharded blocks and compose). c == 0 are the
+            // pure-rewrite plans at degree d, c == n the uniform-shard
+            // plans — keeping joint ⊇ uniform per degree.
+            for c in 0..=n {
+                let mut residency = vec![Residency::Resident; n];
+                for arm in residency.iter_mut().take(c) {
+                    *arm = Residency::Shard;
+                }
+                for &s in &subsets {
+                    out.push(LayerPlan {
+                        per_layer: vec![s; n],
+                        residency: residency.clone(),
+                        tp: d,
+                    });
+                }
+            }
+            // shard ∘ offload composition: Shard on the bottom c,
+            // Offload above — the sharded bottom keeps its backward
+            // math local while the top streams to the host. c == n
+            // (nothing left to offload) is already a bottom-c plan.
+            for c in 1..n {
+                let mut residency = vec![Residency::Offload; n];
+                for arm in residency.iter_mut().take(c) {
+                    *arm = Residency::Shard;
+                }
+                for &s in &subsets {
+                    out.push(LayerPlan {
+                        per_layer: vec![s; n],
+                        residency: residency.clone(),
+                        tp: d,
+                    });
+                }
+            }
+            // uniform checkpoint / offload layouts repriced at degree
+            // d (the sharded head shifts both their peak and census)
+            for style in [CkptStyle::Overlapped, CkptStyle::Serial] {
+                out.push(LayerPlan::uniform_checkpoint(n, style).with_tp(d));
+            }
+            for &s in &subsets {
+                out.push(LayerPlan::uniform_offload(n, s).with_tp(d));
+            }
+        }
+    }
 }
 
 /// Pre-computed dominance key of one candidate (see module docs):
@@ -276,7 +443,10 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
 /// can leave exposed than a plan with smaller pre-readiness census),
 /// and per host-link transfer its `(bytes, cover)` pair (stores then
 /// loads, in tape order) — smaller payloads under larger covering
-/// windows expose less host time at every batch and bandwidth.
+/// windows expose less host time at every batch and bandwidth. TP
+/// plans add the resolved shard degree (an equality gate: degrees
+/// never cross-compare) and the TP lane's `(bytes, cover)` pairs
+/// under the same payload/window argument.
 /// Keys hold *interned* slices: many candidates share identical
 /// readiness vectors and host-transfer shapes (every offload-free plan
 /// has the empty host slice; same-census twins share buckets), so the
@@ -285,10 +455,16 @@ fn candidates(cfg: &ModelConfig, mode: PlacementMode) -> Vec<LayerPlan> {
 /// `dominates` then short-circuits shared slices by pointer before
 /// reading a single element.
 struct DomKey {
+    /// Resolved shard degree — keys at different degrees never
+    /// compare (different per-device shards and ring factors).
+    tp: usize,
     peak_item: u64,
     eff: Census,
     pre_readiness: Arc<[Census]>,
     host: Arc<[(u64, Census)]>,
+    /// Per TP-lane collective `(bytes, cover)` in tape order — the
+    /// same shape (and the same interner map) as the host lane.
+    tp_links: Arc<[(u64, Census)]>,
 }
 
 /// Per-search deduplication of dominance-key vectors. [`Census`] holds
@@ -344,7 +520,7 @@ fn census_le(a: &Census, b: &Census) -> bool {
         && a.vector_bytes <= b.vector_bytes
 }
 
-fn dom_key(s: &ScheduleSummary, interner: &mut Interner) -> DomKey {
+fn dom_key(s: &ScheduleSummary, tp: usize, interner: &mut Interner) -> DomKey {
     let eff = census_sub(s.census, s.lanes.hidden.scale(OVERLAP_EFF));
     let pre_readiness =
         s.lanes.buckets.iter().map(|bk| census_sub(eff, bk.tail)).collect();
@@ -355,27 +531,33 @@ fn dom_key(s: &ScheduleSummary, interner: &mut Interner) -> DomKey {
         .chain(s.lanes.loads.iter())
         .map(|t| (t.bytes, t.cover))
         .collect();
+    let tp_links = s.lanes.tp_links.iter().map(|t| (t.bytes, t.cover)).collect();
     DomKey {
+        tp,
         peak_item: s.peak_item_bytes,
         eff,
         pre_readiness: interner.readiness(pre_readiness),
         host: interner.host(host),
+        tp_links: interner.host(tp_links),
     }
 }
 
-/// `true` when `a` dominates `b`: peak ≤, effective census ≤
-/// componentwise, per-bucket pre-readiness census ≤ componentwise, and
-/// per host transfer: payload ≤ with covering window ≥ componentwise.
+/// `true` when `a` dominates `b`: equal resolved shard degree, peak ≤,
+/// effective census ≤ componentwise, per-bucket pre-readiness census ≤
+/// componentwise, and per host transfer and per TP collective:
+/// payload ≤ with covering window ≥ componentwise.
 /// Together these make `a`'s priced step ≤ `b`'s at every batch on
 /// every rig (see module docs for the exposure-bound argument; both
 /// plans share the same batch-free state bytes and the same bucket
-/// bytes, so peak and collective durations need no further terms).
-/// Plans with differently-shaped host lanes (different transfer
-/// counts) are incomparable by construction.
+/// bytes, so peak and collective durations need no further terms — and
+/// at equal degree the TP ring factor cancels out of the comparison).
+/// Plans with differently-shaped host or TP lanes (different transfer
+/// counts) or different degrees are incomparable by construction.
 fn dominates(a: &DomKey, b: &DomKey) -> bool {
     // interned slices: pointer equality means element equality, and an
     // equal vector always satisfies its own componentwise conditions
-    a.peak_item <= b.peak_item
+    a.tp == b.tp
+        && a.peak_item <= b.peak_item
         && census_le(&a.eff, &b.eff)
         && a.pre_readiness.len() == b.pre_readiness.len()
         && (Arc::ptr_eq(&a.pre_readiness, &b.pre_readiness)
@@ -385,6 +567,12 @@ fn dominates(a: &DomKey, b: &DomKey) -> bool {
             || a.host
                 .iter()
                 .zip(b.host.iter())
+                .all(|((ab, ac), (bb, bc))| ab <= bb && census_le(bc, ac)))
+        && a.tp_links.len() == b.tp_links.len()
+        && (Arc::ptr_eq(&a.tp_links, &b.tp_links)
+            || a.tp_links
+                .iter()
+                .zip(b.tp_links.iter())
                 .all(|((ab, ac), (bb, bc))| ab <= bb && census_le(bc, ac)))
 }
 
@@ -403,7 +591,8 @@ fn strictly_dominates(a: &DomKey, b: &DomKey) -> bool {
 /// smaller rewrite surface, enumeration order) must see them.
 fn prune_dominated(cands: Vec<Summarized>) -> Vec<Summarized> {
     let mut interner = Interner::default();
-    let keys: Vec<DomKey> = cands.iter().map(|c| dom_key(&c.summary, &mut interner)).collect();
+    let keys: Vec<DomKey> =
+        cands.iter().map(|c| dom_key(&c.summary, c.tp, &mut interner)).collect();
     let keep: Vec<bool> = keys
         .iter()
         .map(|q| !keys.iter().any(|p| strictly_dominates(p, q)))
@@ -453,14 +642,24 @@ fn tie_break(a: &Scored, b: &Scored) -> bool {
     if a.offload_layers != b.offload_layers {
         return a.offload_layers < b.offload_layers;
     }
+    // collective traffic that buys nothing is pure interconnect risk:
+    // prefer fewer sharded layers, then the smaller shard degree
+    // (fewer GPUs burned in the scale-up domain)
+    if a.shard_layers != b.shard_layers {
+        return a.shard_layers < b.shard_layers;
+    }
+    if a.tp != b.tp {
+        return a.tp < b.tp;
+    }
     a.rewrite_surface < b.rewrite_surface
 }
 
 /// Joint placement search: pick the per-layer `(rewrites, Residency)`
 /// placement that maximizes the modeled max batch (or, given
 /// `target_batch`, reaches it at the highest modeled throughput).
-/// Dominance pruning is enabled; [`placement_search_with`] exposes the
-/// switch for the losslessness tests and benches.
+/// Shard-free (`tp = 1`); [`placement_search_tp`] takes a degree
+/// policy. Dominance pruning is enabled; [`placement_search_with`]
+/// exposes the switch for the losslessness tests and benches.
 pub fn placement_search(
     cfg: &ModelConfig,
     gpu: Gpu,
@@ -468,6 +667,18 @@ pub fn placement_search(
     target_batch: Option<usize>,
 ) -> PlacementDecision {
     placement_search_with(cfg, gpu, mode, target_batch, true)
+}
+
+/// [`placement_search`] under a tensor-parallel degree policy
+/// (`tempo placement --tp K|auto`).
+pub fn placement_search_tp(
+    cfg: &ModelConfig,
+    gpu: Gpu,
+    mode: PlacementMode,
+    tp: TpPolicy,
+    target_batch: Option<usize>,
+) -> PlacementDecision {
+    placement_search_jobs(cfg, gpu, mode, tp, target_batch, true, &ExperimentEngine::serial())
 }
 
 /// [`placement_search`] with the dominance prune switchable. Pruning
@@ -482,7 +693,15 @@ pub fn placement_search_with(
     target_batch: Option<usize>,
     prune: bool,
 ) -> PlacementDecision {
-    placement_search_jobs(cfg, gpu, mode, target_batch, prune, &ExperimentEngine::serial())
+    placement_search_jobs(
+        cfg,
+        gpu,
+        mode,
+        TpPolicy::Fixed(1),
+        target_batch,
+        prune,
+        &ExperimentEngine::serial(),
+    )
 }
 
 /// [`placement_search_with`] across an [`ExperimentEngine`] worker
@@ -499,11 +718,12 @@ pub fn placement_search_jobs(
     cfg: &ModelConfig,
     gpu: Gpu,
     mode: PlacementMode,
+    tp: TpPolicy,
     target_batch: Option<usize>,
     prune: bool,
     engine: &ExperimentEngine,
 ) -> PlacementDecision {
-    let cands = candidates(cfg, mode);
+    let cands = candidates(cfg, mode, tp);
     let enumerated = cands.len();
 
     let summaries = engine
@@ -511,9 +731,13 @@ pub fn placement_search_jobs(
     let summarized: Vec<Summarized> = cands
         .into_iter()
         .zip(summaries)
-        .map(|(plan, summary)| Summarized {
-            plan,
-            summary: summary.expect("placement summarize cell"),
+        .map(|(plan, summary)| {
+            let resolved = plan.schedule_plan().resolved_tp(cfg);
+            Summarized {
+                plan,
+                tp: resolved,
+                summary: summary.expect("placement summarize cell"),
+            }
         })
         .collect();
 
@@ -538,15 +762,17 @@ pub fn placement_search_jobs(
     });
 
     let mut best: Option<Scored> = None;
-    for (Summarized { plan, summary }, cell) in survivors.into_iter().zip(priced) {
+    for (Summarized { plan, tp, summary }, cell) in survivors.into_iter().zip(priced) {
         let (max_batch, eval_batch, throughput) = cell.expect("placement pricing cell");
         let scored = Scored {
+            tp,
             peak_item: summary.peak_item_bytes,
             max_batch,
             eval_batch,
             throughput,
             ckpt_layers: plan.checkpointed_layers(),
             offload_layers: plan.offloaded_layers(),
+            shard_layers: plan.sharded_layers(),
             rewrite_surface: plan.rewrite_surface(),
             plan,
         };
@@ -566,33 +792,39 @@ pub fn placement_search_jobs(
     );
     let rationale = match target_batch {
         Some(t) if best.max_batch >= t => format!(
-            "{} search: batch {} reachable at {:.2} seq/s with {} checkpointed + {} \
-             offloaded layer(s) + rewrites on {} ({funnel})",
+            "{} search: batch {} reachable at {:.2} seq/s at tp {} with {} checkpointed + {} \
+             offloaded + {} sharded layer(s) + rewrites on {} ({funnel})",
             mode.name(),
             t,
             best.throughput,
+            best.tp,
             best.ckpt_layers,
             best.offload_layers,
+            best.shard_layers,
             best.plan.applied_layers(),
         ),
         Some(t) => format!(
-            "{} search: target batch {t} unreachable (best max batch {}); returning the \
-             highest-capacity plan ({funnel})",
+            "{} search: target batch {t} unreachable (best max batch {} at tp {}); returning \
+             the highest-capacity plan ({funnel})",
             mode.name(),
             best.max_batch,
+            best.tp,
         ),
         None => format!(
-            "{} search: max batch {} with {} checkpointed + {} offloaded layer(s) + \
-             rewrites on {} ({funnel})",
+            "{} search: max batch {} at tp {} with {} checkpointed + {} offloaded + {} \
+             sharded layer(s) + rewrites on {} ({funnel})",
             mode.name(),
             best.max_batch,
+            best.tp,
             best.ckpt_layers,
             best.offload_layers,
+            best.shard_layers,
             best.plan.applied_layers(),
         ),
     };
     PlacementDecision {
         plan: best.plan,
+        tp: best.tp,
         max_batch: best.max_batch,
         throughput: best.throughput,
         eval_batch: best.eval_batch,
@@ -610,7 +842,7 @@ mod tests {
     #[test]
     fn uniform_candidates_cover_all_subsets_and_every_residency_arm() {
         let cfg = ModelConfig::bert_mini();
-        let c = candidates(&cfg, PlacementMode::Uniform);
+        let c = candidates(&cfg, PlacementMode::Uniform, TpPolicy::Fixed(1));
         // 16 rewrite subsets + 2 uniform checkpoint styles + 16
         // uniform-offload plans (offloaded layers keep their rewrites)
         assert_eq!(c.len(), 34);
@@ -626,14 +858,65 @@ mod tests {
     #[test]
     fn joint_candidates_contain_every_uniform_plan() {
         let cfg = ModelConfig::bert_mini();
-        let joint = candidates(&cfg, PlacementMode::Joint);
-        for u in candidates(&cfg, PlacementMode::Uniform) {
-            assert!(joint.contains(&u), "missing uniform plan {u:?}");
+        for tp in [TpPolicy::Fixed(1), TpPolicy::Auto] {
+            let joint = candidates(&cfg, PlacementMode::Joint, tp);
+            for u in candidates(&cfg, PlacementMode::Uniform, tp) {
+                assert!(joint.contains(&u), "missing uniform plan {u:?} under {tp:?}");
+            }
+            // no duplicate canonical candidates
+            for (i, a) in joint.iter().enumerate() {
+                assert!(!joint[i + 1..].contains(a), "duplicate candidate {a:?} under {tp:?}");
+            }
         }
-        // no duplicate canonical candidates
-        for (i, a) in joint.iter().enumerate() {
-            assert!(!joint[i + 1..].contains(a), "duplicate candidate {a:?}");
-        }
+    }
+
+    #[test]
+    fn tp_policies_resolve_to_the_permitted_degrees() {
+        // bert-mini: 4 heads — degree 8 does not divide and drops out
+        let mini = ModelConfig::bert_mini();
+        assert_eq!(TpPolicy::Auto.degrees(&mini), vec![1, 2, 4]);
+        assert_eq!(TpPolicy::Fixed(4).degrees(&mini), vec![4]);
+        // impermissible fixed degrees normalize to the shard-free search
+        assert_eq!(TpPolicy::Fixed(8).degrees(&mini), vec![1]);
+        let large = ModelConfig::bert_large();
+        assert_eq!(TpPolicy::Auto.degrees(&large), vec![1, 2, 4, 8]);
+        // parsing: auto, the permitted degrees, nothing else
+        assert_eq!(TpPolicy::parse("auto"), Some(TpPolicy::Auto));
+        assert_eq!(TpPolicy::parse("2"), Some(TpPolicy::Fixed(2)));
+        assert_eq!(TpPolicy::parse("3"), None);
+        assert_eq!(TpPolicy::parse("0"), None);
+        assert_eq!(TpPolicy::parse("fast"), None);
+    }
+
+    #[test]
+    fn shard_degrees_never_cross_compare_in_the_prune() {
+        // a tp=4 uniform-shard plan holds a far lower per-device peak
+        // than its tp=2 twin, but the two lower different collective
+        // schedules (different ring factors, different per-item
+        // payloads): the key's degree gate keeps them incomparable and
+        // the priced exposure decides
+        let cfg = ModelConfig::bert_mini();
+        let n = cfg.layers;
+        let mut interner = Interner::default();
+        let mut key = |p: &LayerPlan| {
+            let sp = p.schedule_plan();
+            dom_key(&graph::schedule_summary(&cfg, &sp), sp.resolved_tp(&cfg), &mut interner)
+        };
+        let shard = |d: usize| LayerPlan {
+            per_layer: vec![OptimizationSet::none(); n],
+            residency: vec![Residency::Shard; n],
+            tp: d,
+        };
+        let (k2, k4) = (key(&shard(2)), key(&shard(4)));
+        assert!(k4.peak_item < k2.peak_item, "tp=4 must shard the peak further");
+        assert!(!k2.tp_links.is_empty(), "sharded plans must expose TP collectives");
+        assert!(!strictly_dominates(&k4, &k2), "degrees must never cross-compare");
+        assert!(!strictly_dominates(&k2, &k4));
+        // same gate against the shard-free baseline
+        let k1 = key(&LayerPlan::uniform(n, OptimizationSet::none()));
+        assert!(k1.tp_links.is_empty());
+        assert!(!strictly_dominates(&k4, &k1));
+        assert!(!strictly_dominates(&k1, &k4));
     }
 
     #[test]
@@ -648,8 +931,10 @@ mod tests {
         let over = LayerPlan::uniform_checkpoint(n, CkptStyle::Overlapped);
         let serial = LayerPlan::uniform_checkpoint(n, CkptStyle::Serial);
         let mut interner = Interner::default();
-        let mut key =
-            |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()), &mut interner);
+        let mut key = |p: &LayerPlan| {
+            let sp = p.schedule_plan();
+            dom_key(&graph::schedule_summary(&cfg, &sp), sp.resolved_tp(&cfg), &mut interner)
+        };
         let (ko, ks) = (key(&over), key(&serial));
         assert!(ks.peak_item < ko.peak_item, "serial must hold the lower peak");
         assert!(
@@ -659,11 +944,11 @@ mod tests {
         assert!(!strictly_dominates(&ks, &ko), "serial no longer dominates overlap");
         assert!(!strictly_dominates(&ko, &ks), "overlap must not dominate serial either");
 
-        let summarized = candidates(&cfg, PlacementMode::Uniform)
+        let summarized = candidates(&cfg, PlacementMode::Uniform, TpPolicy::Fixed(1))
             .into_iter()
             .map(|plan| {
                 let summary = graph::schedule_summary(&cfg, &plan.schedule_plan());
-                Summarized { plan, summary }
+                Summarized { plan, tp: 1, summary }
             })
             .collect();
         let survivors = prune_dominated(summarized);
@@ -684,8 +969,10 @@ mod tests {
         let cfg = ModelConfig::bert_mini();
         let n = cfg.layers;
         let mut interner = Interner::default();
-        let mut key =
-            |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()), &mut interner);
+        let mut key = |p: &LayerPlan| {
+            let sp = p.schedule_plan();
+            dom_key(&graph::schedule_summary(&cfg, &sp), sp.resolved_tp(&cfg), &mut interner)
+        };
         let off = key(&LayerPlan::uniform_offload(n, OptimizationSet::none()));
         let serial = key(&LayerPlan::uniform_checkpoint(n, CkptStyle::Serial));
         assert_eq!(off.host.len(), 2 * n, "one store + one load per offloaded layer");
@@ -696,7 +983,7 @@ mod tests {
         let mut residency = vec![Residency::Offload; n];
         residency[n - 1] = Residency::Resident;
         let partial =
-            key(&LayerPlan { per_layer: vec![OptimizationSet::none(); n], residency });
+            key(&LayerPlan { per_layer: vec![OptimizationSet::none(); n], residency, tp: 1 });
         assert!(!strictly_dominates(&partial, &off));
         assert!(!strictly_dominates(&off, &partial));
     }
@@ -708,8 +995,10 @@ mod tests {
         let cfg = ModelConfig::bert_mini();
         let n = cfg.layers;
         let mut interner = Interner::default();
-        let mut key =
-            |p: &LayerPlan| dom_key(&graph::schedule_summary(&cfg, &p.schedule_plan()), &mut interner);
+        let mut key = |p: &LayerPlan| {
+            let sp = p.schedule_plan();
+            dom_key(&graph::schedule_summary(&cfg, &sp), sp.resolved_tp(&cfg), &mut interner)
+        };
         let plain = key(&LayerPlan::uniform_offload(n, OptimizationSet::none()));
         let rewritten = key(&LayerPlan::uniform_offload(n, OptimizationSet::full()));
         for (i, ((pb, _), (rb, _))) in plain.host.iter().zip(rewritten.host.iter()).enumerate() {

@@ -29,19 +29,27 @@ pub struct LayerPlan {
     pub per_layer: Vec<OptimizationSet>,
     /// Residency arm per encoder layer.
     pub residency: Vec<Residency>,
+    /// Tensor-parallel shard degree the plan lowers under (1 = no
+    /// sharding; impermissible degrees resolve to 1, see
+    /// [`crate::graph::SchedulePlan::resolved_tp`]).
+    pub tp: usize,
 }
 
 impl LayerPlan {
     /// Uniform rewrite plan: `set` on every layer, everything resident.
     pub fn uniform(layers: usize, set: OptimizationSet) -> Self {
-        LayerPlan { per_layer: vec![set; layers], residency: vec![Residency::Resident; layers] }
+        LayerPlan {
+            per_layer: vec![set; layers],
+            residency: vec![Residency::Resident; layers],
+            tp: 1,
+        }
     }
 
     /// Residency-free plan from per-layer rewrite sets (the legacy
     /// `LayerPlan` shape; `fine_search`'s prefix plans).
     pub fn rewrites_only(per_layer: Vec<OptimizationSet>) -> Self {
         let n = per_layer.len();
-        LayerPlan { per_layer, residency: vec![Residency::Resident; n] }
+        LayerPlan { per_layer, residency: vec![Residency::Resident; n], tp: 1 }
     }
 
     /// Uniform checkpoint placement: `style` checkpointing on every
@@ -51,13 +59,29 @@ impl LayerPlan {
         LayerPlan {
             per_layer: vec![OptimizationSet::none(); layers],
             residency: vec![Residency::Checkpoint(style); layers],
+            tp: 1,
         }
     }
 
     /// Uniform offload placement: every layer streamed to the host,
     /// with `set` rewrites shrinking what each layer ships.
     pub fn uniform_offload(layers: usize, set: OptimizationSet) -> Self {
-        LayerPlan { per_layer: vec![set; layers], residency: vec![Residency::Offload; layers] }
+        LayerPlan {
+            per_layer: vec![set; layers],
+            residency: vec![Residency::Offload; layers],
+            tp: 1,
+        }
+    }
+
+    /// Builder: set the tensor-parallel shard degree.
+    pub fn with_tp(mut self, tp: usize) -> Self {
+        self.tp = tp;
+        self
+    }
+
+    /// Number of sharded ([`Residency::Shard`]) layers.
+    pub fn sharded_layers(&self) -> usize {
+        self.residency.iter().filter(|m| m.is_shard()).count()
     }
 
     /// The residency arm layer `l` takes (missing entries pad to
@@ -102,6 +126,7 @@ impl LayerPlan {
     /// (embedding/head at the baseline inventory, as always; MLM head).
     pub fn schedule_plan(&self) -> SchedulePlan {
         SchedulePlan::from_placement(self.per_layer.clone(), self.residency.clone(), true)
+            .with_tp(self.tp)
     }
 
     /// Footprint of the plan at batch `b`: the exact peak of the

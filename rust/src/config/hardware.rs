@@ -51,6 +51,10 @@ impl Gpu {
                 // PCIe v3 x16: ~12 GB/s effective h2d/d2h with pinned
                 // buffers (the L2L offload lane).
                 host_link_bw: 12.0e9,
+                // TP collectives ride the same PCIe P2P pairs as the
+                // gradient ring, but per-pair rather than bucketed:
+                // ~10 GB/s achieved.
+                tp_bw: 10.0e9,
             },
             // V100 (SXM2 16 GB): 900 GB/s HBM2, 125 TFLOPS fp16 tensor.
             Gpu::V100 => GpuSpec {
@@ -66,6 +70,9 @@ impl Gpu {
                 // p3-class hosts feed the GPUs over PCIe v3 (NVLink is
                 // GPU↔GPU only): ~10 GB/s achieved in the h2d direction.
                 host_link_bw: 10.0e9,
+                // NVLink GPU↔GPU: ~65 GB/s effective per-collective
+                // busbw for the in-block TP all-gather/reduce-scatter.
+                tp_bw: 65.0e9,
             },
             // A100 40 GB: 1555 GB/s, 312 TFLOPS bf16 tensor.
             Gpu::A100 => GpuSpec {
@@ -81,6 +88,13 @@ impl Gpu {
                 // PCIe v4 x16 host link on the A100 box: ~25 GB/s
                 // effective.
                 host_link_bw: 25.0e9,
+                // NVLink3 (600 GB/s bidirectional peak): ~250 GB/s
+                // effective collective busbw between A100s in a
+                // hypothetical scale-up domain. `devices` stays 1 (the
+                // ablation box has no DP replica), but the TP axis is a
+                // *scale-up* domain orthogonal to DP, so `--tp` can
+                // still shard across NVLink3 peers.
+                tp_bw: 250.0e9,
             },
         }
     }
@@ -126,6 +140,14 @@ pub struct GpuSpec {
     /// its own link, so offload traffic does not contend across the
     /// rig. `TEMPO_HOST_BW` overrides it at startup.
     pub host_link_bw: f64,
+    /// Effective per-collective bandwidth (bytes/s) of the tensor-
+    /// parallel scale-up interconnect — what one in-block
+    /// all-gather/reduce-scatter achieves between shard peers. TP is a
+    /// *scale-up* domain orthogonal to [`devices`](Self::devices) (DP
+    /// replica count): sharding divides per-device activations and
+    /// compute without changing the DP gradient ring. `TEMPO_TP_BW`
+    /// overrides it at startup.
+    pub tp_bw: f64,
 }
 
 impl GpuSpec {

@@ -63,6 +63,17 @@ impl ModelConfig {
         self.hidden / self.heads
     }
 
+    /// Whether a tensor-parallel shard degree divides this model's
+    /// encoder cleanly: Megatron-style sharding splits attention by
+    /// head and the FFN by inner column, so `tp` must divide the head
+    /// count, the FFN inner size, and the hidden size (row-parallel
+    /// inputs). The vocabulary dimension is *not* required to divide —
+    /// the vocab-parallel head pads its shard (ceil division), exactly
+    /// as Megatron-LM pads the embedding table.
+    pub fn tp_permitted(&self, tp: usize) -> bool {
+        tp > 0 && self.heads % tp == 0 && self.intermediate % tp == 0 && self.hidden % tp == 0
+    }
+
     /// Total parameter count (embeddings + encoder + MLM head, fp32
     /// element count — multiply by dtype width for bytes).
     pub fn param_count(&self) -> usize {

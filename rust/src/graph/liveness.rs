@@ -113,6 +113,13 @@ pub struct LaneProfile {
     /// covered by the backward compute since the previous load (or
     /// the turnaround). Empty on offload-free schedules.
     pub loads: Vec<HostTransfer>,
+    /// Tensor-parallel collectives ([`Lane::TpLink`]) in tape order,
+    /// each with the compute-lane census since the previous collective
+    /// (the window an async collective can pipeline under before its
+    /// op-coupled issue point). `bytes` is the *full* tensor payload
+    /// per item; the exposure fold applies the `(tp−1)/tp` ring
+    /// factor. Empty at resolved `tp == 1`.
+    pub tp_links: Vec<HostTransfer>,
 }
 
 /// Batch-free fold of a schedule: peak, high-water op, per-class bytes
@@ -172,6 +179,11 @@ pub(crate) fn high_water_label(kind: EventKind) -> &'static str {
         // a Load materializes the reloaded inventory under backward
         EventKind::Store => "offload store",
         EventKind::Load => "offload load + bwd in flight",
+        // TP collectives hold no device memory (allocs/inplace empty),
+        // so they can never be the strict high-water instant; the arms
+        // exist for match exhaustiveness only
+        EventKind::AllGather => "tp all-gather",
+        EventKind::ReduceScatter => "tp reduce-scatter",
     }
 }
 
@@ -294,6 +306,11 @@ impl StepSchedule {
         let mut store_open = false;
         let mut load_cover = Census::ZERO;
         let mut past_turn = false;
+        // TP collectives pipeline under the compute since the previous
+        // collective (op-coupled issue points; no turnaround reset —
+        // the last forward collective drains under the turnaround gap)
+        let mut tp_links: Vec<HostTransfer> = Vec::new();
+        let mut tp_cover = Census::ZERO;
         for e in &self.events {
             match e.lane {
                 Lane::Prefetch => {
@@ -324,6 +341,14 @@ impl StepSchedule {
                     }
                     _ => {}
                 },
+                Lane::TpLink => {
+                    tp_links.push(HostTransfer {
+                        segment: e.segment,
+                        bytes: e.comm_item_bytes,
+                        cover: tp_cover,
+                    });
+                    tp_cover = Census::ZERO;
+                }
                 Lane::Compute => {
                     if e.kind == EventKind::Turnaround {
                         store_open = false;
@@ -337,6 +362,7 @@ impl StepSchedule {
                     if past_turn {
                         load_cover.add(e.census);
                     }
+                    tp_cover.add(e.census);
                     if let Some((seg, p)) = run.take() {
                         if let Some((_, p2, c2)) = covering.take() {
                             hidden.add(min_census(p2, c2));
@@ -377,7 +403,7 @@ impl StepSchedule {
             })
             .collect();
 
-        LaneProfile { prefetch, hidden, buckets, stores, loads }
+        LaneProfile { prefetch, hidden, buckets, stores, loads, tp_links }
     }
 }
 
@@ -473,6 +499,8 @@ mod tests {
         assert_eq!(lanes.hidden, Census::ZERO);
         // no offload arm anywhere above: the host lane is silent
         assert!(lanes.stores.is_empty() && lanes.loads.is_empty());
+        // and no shard arm: the TP lane is silent too
+        assert!(lanes.tp_links.is_empty());
     }
 
     #[test]

@@ -215,16 +215,25 @@ pub enum Lane {
     /// layer's inventory store after its forward and load before its
     /// backward ([`GpuSpec::host_link_bw`](crate::config::GpuSpec)).
     HostLink,
+    /// The tensor-parallel scale-up interconnect: in-block
+    /// [`EventKind::AllGather`]/[`EventKind::ReduceScatter`] collectives
+    /// of a [`Residency::Shard`] layer (and the vocab-parallel head),
+    /// whose readiness couples to the producing/consuming *op* events
+    /// inside the block tape — not to a segment's backward exit like
+    /// the gradient buckets
+    /// ([`GpuSpec::tp_bw`](crate::config::GpuSpec)).
+    TpLink,
 }
 
 impl Lane {
     /// Stable lane tag for tables and JSON output (`compute` /
-    /// `prefetch` / `host`).
+    /// `prefetch` / `host` / `tp`).
     pub fn label(self) -> &'static str {
         match self {
             Lane::Compute => "compute",
             Lane::Prefetch => "prefetch",
             Lane::HostLink => "host",
+            Lane::TpLink => "tp",
         }
     }
 }
@@ -255,6 +264,17 @@ pub enum EventKind {
     /// `Offload` layer's inventory right before the layer's backward;
     /// the tape position is the transfer's completion deadline.
     Load,
+    /// Tensor-parallel all-gather on [`Lane::TpLink`]: re-materializes
+    /// the full activation from its shards at a region entry (QKV
+    /// matmul in). Holds no device memory of its own
+    /// ([`ScheduleEvent::comm_item_bytes`] is the wire payload); the
+    /// tape position is the consuming op's issue point.
+    AllGather,
+    /// Tensor-parallel reduce-scatter on [`Lane::TpLink`]: reduces the
+    /// partial outputs back to shards at a region exit (attention-out,
+    /// MLP-out). Same zero-liveness payload discipline as
+    /// [`EventKind::AllGather`].
+    ReduceScatter,
 }
 
 impl EventKind {
@@ -269,6 +289,8 @@ impl EventKind {
             EventKind::Optimizer => "opt",
             EventKind::Store => "store",
             EventKind::Load => "load",
+            EventKind::AllGather => "ag",
+            EventKind::ReduceScatter => "rs",
         }
     }
 }
@@ -322,6 +344,12 @@ pub struct ScheduleEvent {
     /// Which concurrent lane the event issues on ([`Lane::Compute`]
     /// unless it is a hoisted `Overlapped` re-forward).
     pub lane: Lane,
+    /// Wire payload per batch item (bytes) of a [`Lane::TpLink`]
+    /// collective — the *full* tensor bytes; the ring factor
+    /// `(tp−1)/tp` is applied by the exposure fold. Zero on every
+    /// other event: collectives hold no device memory (the
+    /// grad-bucket discipline), so liveness never reads this field.
+    pub comm_item_bytes: u64,
 }
 
 /// The lowered step: a time-ordered event list over a tensor table,
@@ -374,6 +402,15 @@ pub enum Residency {
     /// ([`EventKind::Load`]). The rewrite subset still applies — it
     /// shrinks the bytes shipped each way.
     Offload,
+    /// Tensor-parallel sharded (Megatron-style, sequence-parallel
+    /// regions outside the matmul blocks): the layer's retained
+    /// inventory and compute census shrink by the plan's resolved
+    /// shard degree, and the lowering emits in-block
+    /// [`EventKind::AllGather`]/[`EventKind::ReduceScatter`] events on
+    /// [`Lane::TpLink`] (QKV matmul in, attention-out and MLP-out
+    /// collectives out, mirrored in the backward). Resolves to
+    /// [`Residency::Resident`] when the plan's effective `tp` is 1.
+    Shard,
 }
 
 impl Residency {
@@ -387,14 +424,20 @@ impl Residency {
         self == Residency::Offload
     }
 
+    /// Whether this arm shards the layer across the TP domain.
+    pub fn is_shard(self) -> bool {
+        self == Residency::Shard
+    }
+
     /// Short arm label for plan tables
-    /// (`-` / `overlap` / `serial` / `offload`).
+    /// (`-` / `overlap` / `serial` / `offload` / `shard`).
     pub fn label(self) -> &'static str {
         match self {
             Residency::Resident => "-",
             Residency::Checkpoint(CkptStyle::Overlapped) => "overlap",
             Residency::Checkpoint(CkptStyle::Serial) => "serial",
             Residency::Offload => "offload",
+            Residency::Shard => "shard",
         }
     }
 }
@@ -418,6 +461,15 @@ pub struct SchedulePlan {
     pub other: OptimizationSet,
     /// MLM head (pre-training, B·S·V logits) vs classification head.
     pub mlm_head: bool,
+    /// Tensor-parallel shard degree (`1`, `2`, `4` or `8`). A degree
+    /// the model's dimensions do not permit
+    /// ([`ModelConfig::tp_permitted`]) resolves to 1, and at resolved
+    /// degree 1 every [`Residency::Shard`] arm resolves to
+    /// [`Residency::Resident`] — the lowering is then bit-identical to
+    /// the pre-TP timeline. At resolved degree > 1 the head is always
+    /// vocab-parallel sharded (its logits dominate capacity), while
+    /// encoder layers shard only where their arm says `Shard`.
+    pub tp: usize,
 }
 
 impl SchedulePlan {
@@ -435,7 +487,7 @@ impl SchedulePlan {
         } else {
             Vec::new()
         };
-        SchedulePlan { per_layer: vec![opts; cfg.layers], residency, other: opts, mlm_head }
+        SchedulePlan { per_layer: vec![opts; cfg.layers], residency, other: opts, mlm_head, tp: 1 }
     }
 
     /// Uniform rewrite subset on every block (Fig 12 ablations,
@@ -446,6 +498,7 @@ impl SchedulePlan {
             residency: Vec::new(),
             other: opts,
             mlm_head,
+            tp: 1,
         }
     }
 
@@ -462,7 +515,25 @@ impl SchedulePlan {
         residency: Vec<Residency>,
         mlm_head: bool,
     ) -> SchedulePlan {
-        SchedulePlan { per_layer, residency, other: OptimizationSet::none(), mlm_head }
+        SchedulePlan { per_layer, residency, other: OptimizationSet::none(), mlm_head, tp: 1 }
+    }
+
+    /// Builder: set the tensor-parallel shard degree (1/2/4/8;
+    /// impermissible degrees resolve to 1 at lowering time).
+    pub fn with_tp(mut self, tp: usize) -> SchedulePlan {
+        self.tp = tp;
+        self
+    }
+
+    /// The shard degree the lowering actually uses: `tp` when the
+    /// model's dimensions permit it, else 1 (see
+    /// [`ModelConfig::tp_permitted`]).
+    pub fn resolved_tp(&self, cfg: &ModelConfig) -> usize {
+        if self.tp > 1 && cfg.tp_permitted(self.tp) {
+            self.tp
+        } else {
+            1
+        }
     }
 
     /// Builder: switch every overlapped layer to serial (no-prefetch)
@@ -502,6 +573,12 @@ impl SchedulePlan {
         self.residency.iter().filter(|m| m.is_offload()).count()
     }
 
+    /// Number of layers carrying the [`Residency::Shard`] arm (before
+    /// resolution — at resolved `tp == 1` they lower as resident).
+    pub fn sharded_layers(&self) -> usize {
+        self.residency.iter().filter(|m| m.is_shard()).count()
+    }
+
     /// `Some(opts)` when every layer applies the same subset (the
     /// common case; keeps the cache key small).
     fn uniform_opts(&self) -> Option<OptimizationSet> {
@@ -515,6 +592,10 @@ impl SchedulePlan {
 
     /// Human-readable plan label for reports.
     pub fn label(&self) -> String {
+        if self.tp > 1 {
+            let base = SchedulePlan { tp: 1, ..self.clone() }.label();
+            return format!("{base}, tp={}", self.tp);
+        }
         let head = if self.mlm_head { "mlm" } else { "cls" };
         let layers = self.per_layer.len().max(self.residency.len());
         let n_ckpt = self.checkpointed_layers();
@@ -590,6 +671,31 @@ impl Builder {
             frees,
             census,
             lane: Lane::Compute,
+            comm_item_bytes: 0,
+        });
+    }
+
+    /// One TP collective on [`Lane::TpLink`]: zero device memory, zero
+    /// compute census — only the wire payload (full-tensor bytes per
+    /// item; the exposure fold applies the ring factor). The tape
+    /// position is the producing/consuming op's issue point.
+    fn tp_collective(
+        &mut self,
+        kind: EventKind,
+        segment: Segment,
+        name: &'static str,
+        item_bytes: u64,
+    ) {
+        self.events.push(ScheduleEvent {
+            kind,
+            segment,
+            name,
+            allocs: Vec::new(),
+            inplace: Vec::new(),
+            frees: Vec::new(),
+            census: Census::ZERO,
+            lane: Lane::TpLink,
+            comm_item_bytes: item_bytes,
         });
     }
 
@@ -694,6 +800,7 @@ impl Builder {
                 frees: Vec::new(),
                 census: op.fwd.scale(1.25),
                 lane,
+                comm_item_bytes: 0,
             });
             per_op.push(allocs);
         }
@@ -716,6 +823,7 @@ impl Builder {
             frees,
             census: Census::ZERO,
             lane: Lane::HostLink,
+            comm_item_bytes: 0,
         });
     }
 
@@ -741,8 +849,106 @@ impl Builder {
             frees: Vec::new(),
             census: Census::ZERO,
             lane: Lane::HostLink,
+            comm_item_bytes: 0,
         });
         per_op
+    }
+
+    /// Forward pass of one tensor-parallel sharded block: like
+    /// [`Builder::forward_block`] with every retained/in-place tensor
+    /// ceil-divided by the shard degree and every op census scaled by
+    /// `1/tp` (exact: `tp` is a power of two, so census terms stay
+    /// multiples of 1/32 below 2⁵³). With `collectives`, the
+    /// sequence-parallel region boundaries emit TpLink events at the
+    /// ops that produce/consume the full tensor: an all-gather feeding
+    /// the QKV matmul, reduce-scatters draining the attention-out and
+    /// MLP-out projections (the head's allreduce pair lives in its
+    /// backward instead).
+    fn forward_block_shard(
+        &mut self,
+        g: &BlockGraph,
+        segment: Segment,
+        opts: OptimizationSet,
+        class: MemClass,
+        tp: u64,
+        collectives: bool,
+    ) -> Vec<Vec<u32>> {
+        let inv = 1.0 / tp as f64;
+        let payload = g.input_elems * 4;
+        let mut per_op = Vec::with_capacity(g.ops.len());
+        for op in &g.ops {
+            if collectives && op.name == "attn.qkv" {
+                self.tp_collective(EventKind::AllGather, segment, "tp.allgather", payload);
+            }
+            let mut allocs = Vec::new();
+            let mut inplace = Vec::new();
+            for t in &op.retained {
+                let item = (t.bytes_per_item() + tp - 1) / tp;
+                if t.live(&opts) {
+                    allocs.push(self.tensor(t.name, 0, item, class));
+                } else if t.removed_by.is_some() {
+                    inplace.push(self.tensor(t.name, 0, item, MemClass::Workspace));
+                }
+            }
+            self.event(
+                EventKind::Forward,
+                segment,
+                op.name,
+                allocs.clone(),
+                inplace,
+                Vec::new(),
+                op.fwd.scale(inv),
+            );
+            per_op.push(allocs);
+            if collectives && (op.name == "attn.proj_dropout" || op.name == "ffn.fc2_dropout") {
+                self.tp_collective(EventKind::ReduceScatter, segment, "tp.reducescatter", payload);
+            }
+        }
+        per_op
+    }
+
+    /// Backward pass of one sharded block: reverse op order at `2/tp ×`
+    /// forward work (rewrite overheads shard too). With `collectives`
+    /// the forward's region boundaries are mirrored (conjugate
+    /// collective, reverse order): all-gathers feeding the MLP-out and
+    /// attention-out backward, a reduce-scatter draining the QKV
+    /// backward. Without (the vocab-parallel head), the input-gradient
+    /// allreduce is emitted as a reduce-scatter + all-gather pair after
+    /// the block's last backward op.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_block_shard(
+        &mut self,
+        g: &BlockGraph,
+        segment: Segment,
+        opts: OptimizationSet,
+        per_op: Vec<Vec<u32>>,
+        tp: u64,
+        collectives: bool,
+    ) {
+        let inv = 1.0 / tp as f64;
+        let payload = g.input_elems * 4;
+        for (op, ids) in g.ops.iter().zip(per_op).rev() {
+            if collectives && (op.name == "ffn.fc2_dropout" || op.name == "attn.proj_dropout") {
+                self.tp_collective(EventKind::AllGather, segment, "tp.allgather", payload);
+            }
+            let mut census = op.fwd.scale(2.0 * inv);
+            if let Some((rw, c)) = op.overhead {
+                if rw.enabled(&opts) {
+                    census.add(c.scale(inv));
+                }
+            }
+            self.event(EventKind::Backward, segment, op.name, Vec::new(), Vec::new(), ids, census);
+            if collectives && op.name == "attn.qkv" {
+                self.tp_collective(EventKind::ReduceScatter, segment, "tp.reducescatter", payload);
+            }
+        }
+        if !collectives {
+            // vocab-parallel head: each shard holds a partial input
+            // gradient; the ring allreduce is a reduce-scatter followed
+            // by an all-gather of the block input
+            self.tp_collective(EventKind::ReduceScatter, segment, "tp.reducescatter", payload);
+            self.tp_collective(EventKind::AllGather, segment, "tp.allgather", payload);
+        }
     }
 
     /// Backward of a checkpointed block over its recomputed inventory;
@@ -777,12 +983,19 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
         Plain(Vec<Vec<u32>>),
         Ckpt(u32),
         Offload(Vec<Vec<(&'static str, u64)>>),
+        Shard(Vec<Vec<u32>>),
     }
 
     let mut b = Builder::default();
+    let tp = plan.resolved_tp(cfg) as u64;
     let layer_opts =
         |l: usize| plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none);
-    let mode = |l: usize| plan.residency(l);
+    // at resolved tp == 1 a Shard arm lowers as Resident — the
+    // bit-identity contract tests/tp_equivalence.rs pins
+    let mode = |l: usize| match plan.residency(l) {
+        Residency::Shard if tp == 1 => Residency::Resident,
+        m => m,
+    };
 
     // model states: resident for the whole step
     let p_bytes = cfg.param_count() as u64 * 4;
@@ -830,6 +1043,16 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
                 b.offload_store(Segment::Encoder(l), &per_op);
                 fwd_ids.push(LayerFwd::Offload(specs));
             }
+            Residency::Shard => {
+                fwd_ids.push(LayerFwd::Shard(b.forward_block_shard(
+                    &enc,
+                    Segment::Encoder(l),
+                    layer_opts(l),
+                    MemClass::EncoderAct,
+                    tp,
+                    true,
+                )));
+            }
             Residency::Resident => {
                 fwd_ids.push(LayerFwd::Plain(b.forward_block(
                     &enc,
@@ -841,8 +1064,15 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
         }
     }
 
+    // at resolved tp > 1 the head is always vocab-parallel sharded —
+    // its B·S·V logits dominate capacity, so an unsharded head would
+    // cap every TP plan at the tp=1 frontier
     let head = if plan.mlm_head { mlm_head_block(cfg) } else { cls_head_block(cfg) };
-    let head_ids = b.forward_block(&head, Segment::Head, plan.other, MemClass::OtherAct);
+    let head_ids = if tp > 1 {
+        b.forward_block_shard(&head, Segment::Head, plan.other, MemClass::OtherAct, tp, false)
+    } else {
+        b.forward_block(&head, Segment::Head, plan.other, MemClass::OtherAct)
+    };
 
     // turnaround: the backward workspace appears while everything is
     // still retained — the high-water instant of a plain step
@@ -879,7 +1109,11 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
     }
 
     // backward
-    b.backward_block(&head, Segment::Head, plan.other, head_ids);
+    if tp > 1 {
+        b.backward_block_shard(&head, Segment::Head, plan.other, head_ids, tp, false);
+    } else {
+        b.backward_block(&head, Segment::Head, plan.other, head_ids);
+    }
     for l in (0..cfg.layers).rev() {
         match fwd_ids.pop().expect("per-layer forward ids") {
             LayerFwd::Plain(ids) => {
@@ -893,6 +1127,19 @@ pub fn lower_step(cfg: &ModelConfig, plan: &SchedulePlan, lowering: Lowering) ->
                         Some((l - 1, b.recompute_block(&enc, Segment::Encoder(l - 1), Lane::Prefetch)));
                 }
                 b.backward_block(&enc, Segment::Encoder(l), layer_opts(l), ids);
+            }
+            LayerFwd::Shard(ids) => {
+                // a sharded layer's backward is an ordinary compute-lane
+                // run, so it hosts an Overlapped prefetch below exactly
+                // like a plain layer
+                if l > 0
+                    && mode(l - 1) == Residency::Checkpoint(CkptStyle::Overlapped)
+                    && pending.is_none()
+                {
+                    pending =
+                        Some((l - 1, b.recompute_block(&enc, Segment::Encoder(l - 1), Lane::Prefetch)));
+                }
+                b.backward_block_shard(&enc, Segment::Encoder(l), layer_opts(l), ids, tp, true);
             }
             LayerFwd::Offload(specs) => {
                 // the load's tape position is its completion deadline:
@@ -981,6 +1228,9 @@ struct ScheduleKey {
     plan: PlanKey,
     other: OptimizationSet,
     mlm_head: bool,
+    /// Resolved shard degree (1 unless the plan's `tp` is permitted),
+    /// so every spelling that lowers identically shares one entry.
+    tp: usize,
 }
 
 /// Generation-bounded summary cache: placement sweeps touch thousands
@@ -1004,12 +1254,14 @@ pub fn schedule_summary_with(
     plan: &SchedulePlan,
     lowering: Lowering,
 ) -> Arc<ScheduleSummary> {
+    let tp = plan.resolved_tp(cfg);
     let resolved: Vec<(OptimizationSet, Residency)> = (0..cfg.layers)
         .map(|l| {
-            (
-                plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none),
-                plan.residency(l),
-            )
+            let m = match plan.residency(l) {
+                Residency::Shard if tp == 1 => Residency::Resident,
+                m => m,
+            };
+            (plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none), m)
         })
         .collect();
     let plan_key = match resolved.first().copied() {
@@ -1030,6 +1282,7 @@ pub fn schedule_summary_with(
         plan: plan_key,
         other: plan.other,
         mlm_head: plan.mlm_head,
+        tp,
     };
     if let Some(hit) = schedule_cache().get(&key) {
         return hit;
@@ -1038,8 +1291,14 @@ pub fn schedule_summary_with(
     // donor-sliced fold in `graph::segment`, bit-identical to
     // `lower_step(cfg, plan, lowering).summarize_step()` (the oracle
     // `tests/incremental_pricing.rs` pins) at a fraction of the cost
-    let built =
-        Arc::new(super::segment::composed_summary(cfg, &resolved, plan.other, plan.mlm_head, lowering));
+    let built = Arc::new(super::segment::composed_summary(
+        cfg,
+        &resolved,
+        plan.other,
+        plan.mlm_head,
+        tp,
+        lowering,
+    ));
     // first insert wins so racing workers share one Arc
     schedule_cache().insert(key, built)
 }
@@ -1056,7 +1315,8 @@ pub fn schedule_cache_stats() -> CacheStats {
     schedule_cache().stats(|s| {
         std::mem::size_of::<ScheduleSummary>()
             + s.lanes.buckets.len() * std::mem::size_of::<CommBucket>()
-            + (s.lanes.stores.len() + s.lanes.loads.len()) * std::mem::size_of::<HostTransfer>()
+            + (s.lanes.stores.len() + s.lanes.loads.len() + s.lanes.tp_links.len())
+                * std::mem::size_of::<HostTransfer>()
     })
 }
 

@@ -73,6 +73,9 @@ enum ChunkKind {
     EmbFwd,
     /// One resident encoder layer's forward under its rewrite set.
     LayerFwdPlain(OptimizationSet),
+    /// One tensor-parallel sharded layer's forward (inventory and
+    /// census ÷ the key's `tp`, in-block collectives on the TP lane).
+    LayerFwdShard(OptimizationSet),
     /// One checkpointed layer's forward (store input, full inventory,
     /// discard at exit). Rewrites are ignored by the transform.
     LayerFwdCkpt,
@@ -93,6 +96,8 @@ enum ChunkKind {
     HeadBwd,
     /// One resident layer's backward under its rewrite set.
     LayerBwdPlain(OptimizationSet),
+    /// One sharded layer's backward (mirrored in-block collectives).
+    LayerBwdShard(OptimizationSet),
     /// A checkpointed layer's backward consuming a prefetched
     /// re-forward (the recompute ran earlier, on the prefetch lane).
     LayerBwdCkptPrefetched,
@@ -126,6 +131,11 @@ struct ChunkKey {
     lowering: Lowering,
     other: OptimizationSet,
     mlm_head: bool,
+    /// The plan's *resolved* shard degree. Every chunk is keyed by it:
+    /// shard chunks genuinely depend on it, and at `tp > 1` the head
+    /// chunks do too (vocab-parallel lowering), so one key axis keeps
+    /// every donor slice self-consistent.
+    tp: usize,
     kind: ChunkKind,
 }
 
@@ -133,6 +143,7 @@ fn chunk_key(
     cfg: &ModelConfig,
     other: OptimizationSet,
     mlm_head: bool,
+    tp: usize,
     lowering: Lowering,
     kind: ChunkKind,
 ) -> ChunkKey {
@@ -148,6 +159,7 @@ fn chunk_key(
         lowering,
         other,
         mlm_head,
+        tp,
         kind,
     }
 }
@@ -156,7 +168,7 @@ fn chunk_key(
 /// the monoid element. All byte accounting is *relative to chunk
 /// entry* (signed: backward chunks free tensors allocated in earlier
 /// chunks), which is what makes concatenation associative.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 struct ChunkSummary {
     /// Number of schedule events in the chunk.
     events: usize,
@@ -187,6 +199,15 @@ struct ChunkSummary {
     store_bytes: u64,
     /// Host-link bytes shipped back by this chunk's `Load`s.
     load_bytes: u64,
+    /// This chunk's TP-lane collectives in tape order: per-item wire
+    /// payload and the compute-lane census accrued since the previous
+    /// in-chunk collective (the *first* entry's window is completed by
+    /// the cross-chunk carry at recombination time).
+    tp_events: Vec<(u64, Census)>,
+    /// Compute-lane census after the chunk's last TP collective — the
+    /// carry seeding the next chunk's first window. Equal to the whole
+    /// compute census when `tp_events` is empty.
+    tp_tail: Census,
 }
 
 /// Fold one contiguous event slice into its chunk summary. This is
@@ -206,6 +227,8 @@ fn fold_chunk(tensors: &[SchedTensor], events: &[ScheduleEvent]) -> ChunkSummary
     let mut census_prefetch = Census::ZERO;
     let mut store_bytes = 0u64;
     let mut load_bytes = 0u64;
+    let mut tp_events: Vec<(u64, Census)> = Vec::new();
+    let mut tp_win = Census::ZERO;
     for (i, e) in events.iter().enumerate() {
         for &id in &e.allocs {
             let t = &tensors[id as usize];
@@ -230,9 +253,16 @@ fn fold_chunk(tensors: &[SchedTensor], events: &[ScheduleEvent]) -> ChunkSummary
         }
         census_total.add(e.census);
         match e.lane {
-            Lane::Compute => census_compute.add(e.census),
+            Lane::Compute => {
+                census_compute.add(e.census);
+                tp_win.add(e.census);
+            }
             Lane::Prefetch => census_prefetch.add(e.census),
             Lane::HostLink => {}
+            Lane::TpLink => {
+                tp_events.push((e.comm_item_bytes, tp_win));
+                tp_win = Census::ZERO;
+            }
         }
         match e.kind {
             EventKind::Store => {
@@ -266,6 +296,8 @@ fn fold_chunk(tensors: &[SchedTensor], events: &[ScheduleEvent]) -> ChunkSummary
         census_prefetch,
         store_bytes,
         load_bytes,
+        tp_events,
+        tp_tail: tp_win,
     }
 }
 
@@ -327,6 +359,7 @@ fn build_pieces(layers: usize, resolved: &[(OptimizationSet, Residency)]) -> Vec
             Residency::Checkpoint(_) => ChunkKind::LayerFwdCkpt,
             Residency::Offload => ChunkKind::LayerFwdOffload(opts(l)),
             Residency::Resident => ChunkKind::LayerFwdPlain(opts(l)),
+            Residency::Shard => ChunkKind::LayerFwdShard(opts(l)),
         };
         pieces.push(Piece { kind, role: Role::LayerFwd(l) });
     }
@@ -342,7 +375,10 @@ fn build_pieces(layers: usize, resolved: &[(OptimizationSet, Residency)]) -> Vec
     pieces.push(Piece { kind: ChunkKind::HeadBwd, role: Role::HeadBwd });
     for l in (0..layers).rev() {
         match mode(l) {
-            Residency::Resident => {
+            // a sharded layer hosts a neighbour's prefetch exactly like
+            // a resident one: its backward runs on the compute lane and
+            // holds no checkpoint/offload machinery of its own
+            Residency::Resident | Residency::Shard => {
                 if l > 0
                     && mode(l - 1) == Residency::Checkpoint(CkptStyle::Overlapped)
                     && pending.is_none()
@@ -353,7 +389,12 @@ fn build_pieces(layers: usize, resolved: &[(OptimizationSet, Residency)]) -> Vec
                     });
                     pending = Some(l - 1);
                 }
-                pieces.push(Piece { kind: ChunkKind::LayerBwdPlain(opts(l)), role: Role::LayerBwd(l) });
+                let kind = if mode(l) == Residency::Shard {
+                    ChunkKind::LayerBwdShard(opts(l))
+                } else {
+                    ChunkKind::LayerBwdPlain(opts(l))
+                };
+                pieces.push(Piece { kind, role: Role::LayerBwd(l) });
             }
             Residency::Offload => {
                 pieces
@@ -431,6 +472,7 @@ fn donor_arm(kind: ChunkKind) -> (OptimizationSet, Residency) {
         }
         ChunkKind::LayerBwdCkptInPlace => (none, Residency::Checkpoint(CkptStyle::Serial)),
         ChunkKind::LayerFwdOffload(s) | ChunkKind::LayerBwdOffload(s) => (s, Residency::Offload),
+        ChunkKind::LayerFwdShard(s) | ChunkKind::LayerBwdShard(s) => (s, Residency::Shard),
     }
 }
 
@@ -459,10 +501,11 @@ fn chunk(
     cfg: &ModelConfig,
     other: OptimizationSet,
     mlm_head: bool,
+    tp: usize,
     lowering: Lowering,
     kind: ChunkKind,
 ) -> Arc<ChunkSummary> {
-    let key = chunk_key(cfg, other, mlm_head, lowering, kind);
+    let key = chunk_key(cfg, other, mlm_head, tp, lowering, kind);
     if let Some(hit) = cache().get(&key) {
         return hit;
     }
@@ -472,6 +515,7 @@ fn chunk(
         residency: vec![res; cfg.layers],
         other,
         mlm_head,
+        tp,
     };
     let donor_resolved: Vec<(OptimizationSet, Residency)> =
         (0..cfg.layers).map(|_| (opts, res)).collect();
@@ -480,8 +524,8 @@ fn chunk(
     let sliced = slice_step(&lowered, &donor_pieces);
     let mut wanted: Option<Arc<ChunkSummary>> = None;
     for (p, c) in donor_pieces.iter().zip(sliced) {
-        let k = chunk_key(cfg, other, mlm_head, lowering, p.kind);
-        let shared = cache().insert(k, Arc::new(c));
+        let k = chunk_key(cfg, other, mlm_head, tp, lowering, p.kind);
+        let shared = cache().insert(k, Arc::new(c.clone()));
         // same-kind chunks are byte-identical wherever they appear
         debug_assert_eq!(*shared, c, "duplicate chunk diverged: {:?}", p.kind);
         if p.kind == kind {
@@ -500,11 +544,12 @@ pub(crate) fn composed_summary(
     resolved: &[(OptimizationSet, Residency)],
     other: OptimizationSet,
     mlm_head: bool,
+    tp: usize,
     lowering: Lowering,
 ) -> ScheduleSummary {
     let pieces = build_pieces(cfg.layers, resolved);
     let chunks: Vec<Arc<ChunkSummary>> =
-        pieces.iter().map(|p| chunk(cfg, other, mlm_head, lowering, p.kind)).collect();
+        pieces.iter().map(|p| chunk(cfg, other, mlm_head, tp, lowering, p.kind)).collect();
 
     // --- peak / classes / census / events (summarize_step replay) ---
     let mut base_item = [0i64; MEM_CLASS_COUNT];
@@ -675,7 +720,35 @@ fn compose_lanes(
         }
     }
 
-    LaneProfile { prefetch, hidden, buckets, stores, loads }
+    // TP collectives: a chunk carries its collectives' *within-chunk*
+    // covering prefixes plus a compute tail; recombination completes
+    // each chunk's first window with the compute carried since the
+    // previous collective anywhere in the step (the full fold never
+    // resets at the turnaround, and neither do we)
+    let mut tp_links: Vec<HostTransfer> = Vec::new();
+    let mut tp_carry = Census::ZERO;
+    for (i, p) in pieces.iter().enumerate() {
+        let c = &chunks[i];
+        if c.tp_events.is_empty() {
+            tp_carry.add(c.census_compute);
+        } else {
+            let segment = match p.role {
+                Role::LayerFwd(l) | Role::LayerBwd(l) => Segment::Encoder(l),
+                Role::HeadFwd | Role::HeadBwd => Segment::Head,
+                _ => unreachable!("TP collectives only appear in layer/head chunks"),
+            };
+            for (j, &(bytes, cover)) in c.tp_events.iter().enumerate() {
+                let mut window = cover;
+                if j == 0 {
+                    window.add(tp_carry);
+                }
+                tp_links.push(HostTransfer { segment, bytes, cover: window });
+            }
+            tp_carry = c.tp_tail;
+        }
+    }
+
+    LaneProfile { prefetch, hidden, buckets, stores, loads, tp_links }
 }
 
 #[cfg(test)]
@@ -683,21 +756,24 @@ mod tests {
     use super::*;
     use crate::config::Technique;
 
-    fn resolve(plan: &SchedulePlan, layers: usize) -> Vec<(OptimizationSet, Residency)> {
-        (0..layers)
+    fn resolve(plan: &SchedulePlan, cfg: &ModelConfig) -> Vec<(OptimizationSet, Residency)> {
+        let tp = plan.resolved_tp(cfg);
+        (0..cfg.layers)
             .map(|l| {
-                (
-                    plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none),
-                    plan.residency(l),
-                )
+                let mode = match plan.residency(l) {
+                    Residency::Shard if tp == 1 => Residency::Resident,
+                    m => m,
+                };
+                (plan.per_layer.get(l).copied().unwrap_or_else(OptimizationSet::none), mode)
             })
             .collect()
     }
 
     fn assert_composed_matches(cfg: &ModelConfig, plan: &SchedulePlan) {
         let lowering = Lowering::for_model(cfg);
-        let resolved = resolve(plan, cfg.layers);
-        let composed = composed_summary(cfg, &resolved, plan.other, plan.mlm_head, lowering);
+        let resolved = resolve(plan, cfg);
+        let tp = plan.resolved_tp(cfg);
+        let composed = composed_summary(cfg, &resolved, plan.other, plan.mlm_head, tp, lowering);
         let full = lower_step(cfg, plan, lowering).summarize_step();
         assert_eq!(composed, full, "composed summary diverged for {}", plan.label());
     }
@@ -745,14 +821,50 @@ mod tests {
     }
 
     #[test]
+    fn composed_matches_full_fold_on_sharded_plans() {
+        // every permitted degree, uniform Shard
+        let cfg = ModelConfig::bert_mini();
+        for tp in [2usize, 4] {
+            assert!(cfg.tp_permitted(tp), "tp={tp}");
+            let plan = SchedulePlan::from_placement(
+                vec![OptimizationSet::full(); cfg.layers],
+                vec![Residency::Shard; cfg.layers],
+                true,
+            )
+            .with_tp(tp);
+            assert_composed_matches(&cfg, &plan);
+        }
+        // mixed residency around sharded layers, incl. a prefetch
+        // hosted by a sharded backward
+        let mut residency = vec![Residency::Shard; cfg.layers];
+        residency[1] = Residency::Checkpoint(CkptStyle::Overlapped);
+        residency[3] = Residency::Offload;
+        let plan = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            residency,
+            true,
+        )
+        .with_tp(2);
+        assert_composed_matches(&cfg, &plan);
+        // impermissible degree resolves to 1: Shard lowers as Resident
+        let odd = SchedulePlan::from_placement(
+            vec![OptimizationSet::none(); cfg.layers],
+            vec![Residency::Shard; cfg.layers],
+            true,
+        )
+        .with_tp(3);
+        assert_composed_matches(&cfg, &odd);
+    }
+
+    #[test]
     fn chunk_cache_serves_repeat_compositions() {
         let cfg = ModelConfig::bert_tiny();
         let plan = SchedulePlan::for_technique(&cfg, Technique::Tempo, true);
-        let resolved = resolve(&plan, cfg.layers);
+        let resolved = resolve(&plan, &cfg);
         let lowering = Lowering::for_model(&cfg);
-        let a = composed_summary(&cfg, &resolved, plan.other, plan.mlm_head, lowering);
+        let a = composed_summary(&cfg, &resolved, plan.other, plan.mlm_head, 1, lowering);
         let before = chunk_cache_stats();
-        let b = composed_summary(&cfg, &resolved, plan.other, plan.mlm_head, lowering);
+        let b = composed_summary(&cfg, &resolved, plan.other, plan.mlm_head, 1, lowering);
         let after = chunk_cache_stats();
         assert_eq!(a, b);
         assert!(after.entries >= 1);

@@ -52,16 +52,18 @@ USAGE:
   tempo max-batch --model NAME [--seq N] [--gpu 2080ti|v100|a100]
   tempo memory-report --model NAME [--seq N] [--batch N] [--finetune]
   tempo autotempo --model NAME [--seq N] [--gpu NAME] [--target-batch N]
-                  [--placement uniform|joint]
+                  [--placement uniform|joint] [--tp 1|2|4|8|auto]
                   [--probe measured] [--top K] [--seed N]
   tempo placement [MODEL] [--seq N] [--gpu NAME] [--target-batch N]
-                  [--placement uniform|joint] [--jobs N|auto] [--stats] [--json]
+                  [--placement uniform|joint] [--tp 1|2|4|8|auto]
+                  [--jobs N|auto] [--stats] [--json]
   tempo graph [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
               [--opts gelu,layernorm,dropout,softmax] [--pre-ln] [--causal] [--unfused]
               [--json]
   tempo schedule [MODEL] [--seq N] [--batch N] [--technique baseline|tempo|checkpoint]
               [--opts gelu,layernorm,dropout,softmax] [--finetune] [--serial-checkpoint]
-              [--pre-ln] [--causal] [--unfused] [--gpu NAME] [--devices N] [--json]
+              [--pre-ln] [--causal] [--unfused] [--gpu NAME] [--devices N] [--tp N]
+              [--json]
   tempo artifacts [--dir DIR]
 
 Common options:
@@ -472,6 +474,17 @@ fn parse_placement(name: &str) -> tempo::Result<tempo::autotempo::PlacementMode>
     })
 }
 
+/// Parse the shared `--tp 1|2|4|8|auto` tensor-parallel degree policy
+/// (default: the shard-free search).
+fn parse_tp_policy(args: &Args) -> tempo::Result<tempo::autotempo::TpPolicy> {
+    match args.get("tp") {
+        None => Ok(tempo::autotempo::TpPolicy::Fixed(1)),
+        Some(v) => tempo::autotempo::TpPolicy::parse(v).ok_or_else(|| {
+            tempo::Error::Invalid(format!("--tp expects one of 1|2|4|8|auto, got '{v}'"))
+        }),
+    }
+}
+
 /// Parse the shared optional `--target-batch N`.
 fn parse_target_batch(args: &Args) -> tempo::Result<Option<usize>> {
     match args.get("target-batch") {
@@ -546,17 +559,20 @@ fn cmd_autotempo(args: &Args) -> tempo::Result<()> {
     if let Some(mode_name) = args.get("placement") {
         // joint (rewrite ∪ checkpoint) placement search — §Placement
         let mode = parse_placement(mode_name)?;
+        let tp = parse_tp_policy(args)?;
         let target = parse_target_batch(args)?;
         let engine = engine_from_args(args)?;
-        let d = tempo::autotempo::placement_search_jobs(&cfg, gpu, mode, target, true, &engine);
+        let d = tempo::autotempo::placement_search_jobs(&cfg, gpu, mode, tp, target, true, &engine);
         println!("placement search: {}", d.rationale);
         println!(
-            "  plan: rewrites on {}/{} layers, {} checkpointed, {} offloaded, max batch {}, \
-             {:.2} seq/s at B={}",
+            "  plan: rewrites on {}/{} layers, {} checkpointed, {} offloaded, {} sharded \
+             (tp {}), max batch {}, {:.2} seq/s at B={}",
             d.plan.applied_layers(),
             cfg.layers,
             d.plan.checkpointed_layers(),
             d.plan.offloaded_layers(),
+            d.plan.sharded_layers(),
+            d.tp,
             d.max_batch,
             d.throughput,
             d.eval_batch,
@@ -615,6 +631,7 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
     let cfg = parse_model(&args)?;
     let gpu = parse_gpu(&args.get_or("gpu", "2080ti"))?;
     let target = parse_target_batch(&args)?;
+    let tp = parse_tp_policy(&args)?;
     let engine = engine_from_args(&args)?;
     let mode = match args.get("placement") {
         None => PlacementMode::Joint,
@@ -624,7 +641,7 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
     // snapshot the plan-pricing cache counters so --stats reports this
     // search's hits/misses, not the process-lifetime totals
     let cache_baseline = want_stats.then(tempo::graph::cache_stats);
-    let d = placement_search_jobs(&cfg, gpu, mode, target, true, &engine);
+    let d = placement_search_jobs(&cfg, gpu, mode, tp, target, true, &engine);
     let mut t = Table::new(
         format!(
             "Placement — {} @ S={} on {} ({} search)",
@@ -664,11 +681,15 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
             // per device; only the comm lane couples the devices
             ("devices", Json::num(gpu.spec().devices as f64)),
             ("mode", Json::str(mode.name())),
+            // resolved shard degree of the winner (scale-up domain,
+            // orthogonal to the data-parallel `devices` above)
+            ("tp", Json::num(d.tp as f64)),
             ("max_batch", Json::num(d.max_batch as f64)),
             ("eval_batch", Json::num(d.eval_batch as f64)),
             ("throughput_seqs_per_s", Json::num(d.throughput)),
             ("checkpointed_layers", Json::num(d.plan.checkpointed_layers() as f64)),
             ("offloaded_layers", Json::num(d.plan.offloaded_layers() as f64)),
+            ("sharded_layers", Json::num(d.plan.sharded_layers() as f64)),
             ("applied_layers", Json::num(d.plan.applied_layers() as f64)),
             ("candidates", Json::num(d.stats.enumerated as f64)),
             ("pruned_dominated", Json::num(d.stats.pruned as f64)),
@@ -702,9 +723,10 @@ fn cmd_placement(args: &Args) -> tempo::Result<()> {
     println!("{}", t.render());
     println!("{}", d.rationale);
     println!(
-        "max batch {} per device ({:.2} seq/s at B={}); per-device peak {:.3} GB at B={} \
+        "max batch {} per device at tp {} ({:.2} seq/s at B={}); per-device peak {:.3} GB at B={} \
          on {} ×{}, high water: {}",
         d.max_batch,
+        d.tp,
         d.throughput,
         d.eval_batch,
         bd.total() as f64 / 1e9,
@@ -872,7 +894,9 @@ fn cmd_graph(args: &Args) -> tempo::Result<()> {
 /// live against the capacity model's fold.
 fn cmd_schedule(args: &Args) -> tempo::Result<()> {
     use tempo::config::OptimizationSet;
-    use tempo::graph::{lower_step, schedule_summary_with, Lowering, SchedulePlan, Topology};
+    use tempo::graph::{
+        lower_step, schedule_summary_with, Lowering, Residency, SchedulePlan, Topology,
+    };
     use tempo::memmodel::ModelFootprint;
     use tempo::report::Table;
     use tempo::util::Json;
@@ -928,6 +952,28 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
     if want_serial {
         plan = plan.serial();
     }
+    let tp = args.get_usize("tp", 1)?;
+    if tp != 1 {
+        plan = plan.with_tp(tp);
+        if plan.resolved_tp(&cfg) > 1 {
+            // shard every resident encoder layer so the timeline shows
+            // the in-block collectives; checkpointed/offloaded layers
+            // keep their residency arm
+            plan.residency.resize(cfg.layers, Residency::Resident);
+            for m in &mut plan.residency {
+                if *m == Residency::Resident {
+                    *m = Residency::Shard;
+                }
+            }
+        } else {
+            eprintln!(
+                "note: tp {tp} does not divide {}'s heads/hidden/intermediate — \
+                 lowering the unsharded timeline",
+                cfg.name
+            );
+        }
+    }
+    let resolved_tp = plan.resolved_tp(&cfg);
 
     // lowering rules: model defaults, overridable from the CLI
     let mut lowering = Lowering::for_model(&cfg);
@@ -1002,6 +1048,8 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
             ("gpu", Json::str(gpu.name())),
             // per-device peak: every replica holds the full state
             ("devices", Json::num(spec.devices as f64)),
+            // resolved shard degree (scale-up domain within a replica)
+            ("tp", Json::num(resolved_tp as f64)),
             ("grad_buckets", Json::num(schedule.grad_buckets.len() as f64)),
             ("peak_bytes", Json::num(tl.peak_bytes as f64)),
             ("peak_event", Json::num(tl.peak_event as f64)),
@@ -1021,6 +1069,8 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
             fields.push(("hidden_recompute_s", Json::num(lt.hidden_recompute)));
             fields.push(("host_total_s", Json::num(lt.host_total)));
             fields.push(("host_exposed_s", Json::num(lt.host_exposed)));
+            fields.push(("tp_total_s", Json::num(lt.tp_total)));
+            fields.push(("tp_exposed_s", Json::num(lt.tp_exposed)));
         }
         fields.push(("table", t.to_json()));
         let doc = Json::obj(fields);
@@ -1037,7 +1087,14 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
         schedule.events[tl.peak_event].name,
         summary.high_water,
     );
-    if default_lowering {
+    if default_lowering && resolved_tp > 1 {
+        // the capacity model's static fold prices the unsharded plan;
+        // a sharded timeline's per-device peak legitimately undercuts it
+        println!(
+            "note: tensor-parallel timeline (tp {resolved_tp}); the capacity model's fold \
+             prices the unsharded plan"
+        );
+    } else if default_lowering {
         if serial_divergence {
             // the enumerated divergence: serial checkpointing never
             // holds the head activations and a recompute inventory at
@@ -1098,6 +1155,15 @@ fn cmd_schedule(args: &Args) -> tempo::Result<()> {
                 gpu.name(),
                 lt.host_total * 1e3,
                 lt.host_exposed * 1e3,
+            );
+        }
+        if lt.tp_total > 0.0 {
+            println!(
+                "tp lane ×{}: {:.2} ms of all-gather/reduce-scatter per step, \
+                 {:.2} ms exposed beyond the covering compute windows",
+                resolved_tp,
+                lt.tp_total * 1e3,
+                lt.tp_exposed * 1e3,
             );
         }
     }

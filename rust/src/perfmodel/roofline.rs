@@ -22,6 +22,15 @@
 //!   step always pays at least its tail; larger batches grow the lags
 //!   and amortize the rest — the paper's §4.2 argument for why bigger
 //!   batches win on the PCIe rig.
+//! * **TP lane** — the in-block all-gather/reduce-scatter collectives a
+//!   sharded plan emits ([`crate::graph::LaneProfile::tp_links`]) over
+//!   [`crate::config::GpuSpec::tp_bw`]. Unlike gradient buckets, a TP
+//!   collective's readiness couples to an individual op inside the
+//!   block tape, so each one pipelines under the compute accrued since
+//!   the previous collective and pays only its own unhidden tail:
+//!   `tp_exposed = Σᵢ max(0, dᵢ − coverᵢ)` with
+//!   `dᵢ = ((tp−1)/tp)·bytesᵢ·B / tp_bw` (ring factor on the full
+//!   tensor payload). Zero on unsharded plans.
 //! * **Host lane** — L2L offload traffic
 //!   ([`crate::graph::LaneProfile::stores`]/`loads`) over
 //!   [`crate::config::GpuSpec::host_link_bw`]. A store's deadline is
@@ -78,15 +87,23 @@ const HOST_BW_SPEC: KnobSpec = KnobSpec {
     accepts: "a finite bandwidth in bytes/s > 0",
     ok: |x| x.is_finite() && x > 0.0,
 };
+/// `TEMPO_TP_BW`: tensor-parallel interconnect bandwidth override
+/// (bytes/s).
+const TP_BW_SPEC: KnobSpec = KnobSpec {
+    name: "TEMPO_TP_BW",
+    accepts: "a finite bandwidth in bytes/s > 0",
+    ok: |x| x.is_finite() && x > 0.0,
+};
 
 /// Every knob spec, in one place — [`validate_env_knobs`] iterates this
 /// list and the `OnceLock` getters parse through the same entries.
-const KNOB_SPECS: [KnobSpec; 3] = [UTIL_K_SPEC, AR_EXPOSE_SPEC, HOST_BW_SPEC];
+const KNOB_SPECS: [KnobSpec; 4] = [UTIL_K_SPEC, AR_EXPOSE_SPEC, HOST_BW_SPEC, TP_BW_SPEC];
 
 /// The calibration env knobs, in one place: [`validate_env_knobs`] and
 /// the `OnceLock` getters iterate/name this same list, so a knob cannot
 /// be validated under one name and parsed under another.
-pub const KNOBS: [&str; 3] = [UTIL_K_SPEC.name, AR_EXPOSE_SPEC.name, HOST_BW_SPEC.name];
+pub const KNOBS: [&str; 4] =
+    [UTIL_K_SPEC.name, AR_EXPOSE_SPEC.name, HOST_BW_SPEC.name, TP_BW_SPEC.name];
 
 /// Parse an optional f64 env knob once; malformed or out-of-range
 /// values are a hard error (panic naming the knob and its accepted
@@ -121,6 +138,13 @@ fn legacy_exposure() -> Option<f64> {
 fn host_bw_override() -> Option<f64> {
     static H: OnceLock<Option<f64>> = OnceLock::new();
     *H.get_or_init(|| parse_knob(&HOST_BW_SPEC))
+}
+
+/// `TEMPO_TP_BW` (TP interconnect bandwidth override, bytes/s), parsed
+/// once per process. `None` = unset = the rig's `tp_bw`.
+fn tp_bw_override() -> Option<f64> {
+    static T: OnceLock<Option<f64>> = OnceLock::new();
+    *T.get_or_init(|| parse_knob(&TP_BW_SPEC))
 }
 
 /// Validate the calibration env knobs ([`KNOBS`]) without touching the
@@ -208,8 +232,16 @@ pub struct LaneTimes {
     /// load's unhidden tail. In `[0, host_total]`; exactly zero as
     /// `host_link_bw → ∞`.
     pub host_exposed: f64,
+    /// Total TP-lane collective seconds (every in-block all-gather /
+    /// reduce-scatter at the ring rate over `tp_bw`). Zero on unsharded
+    /// plans.
+    pub tp_total: f64,
+    /// TP-lane seconds *not* hidden under the compute since the
+    /// previous collective — the per-collective unhidden tails. In
+    /// `[0, tp_total]`; monotone non-increasing in `tp_bw`.
+    pub tp_exposed: f64,
     /// End-to-end step seconds (`compute + comm_exposed +
-    /// host_exposed`).
+    /// host_exposed + tp_exposed`).
     pub step: f64,
 }
 
@@ -271,6 +303,8 @@ pub fn plan_lane_times(
             comm_exposed,
             host_total: 0.0,
             host_exposed: 0.0,
+            tp_total: 0.0,
+            tp_exposed: 0.0,
             step: compute + comm_exposed,
         };
     }
@@ -325,6 +359,24 @@ pub fn plan_lane_times(
     }
     let host_exposed = store_lag + load_exposed;
 
+    // TP lane: each in-block collective pipelines under the compute
+    // accrued since the previous one (op-coupled readiness, so there is
+    // no cross-collective serialization like the gradient ring's) and
+    // pays only its own unhidden tail. The wire payload is the full
+    // tensor; the ring factor (tp−1)/tp is what one shard actually
+    // moves. Unsharded plans have an empty tp_links list → (0.0, 0.0).
+    let tp = plan.resolved_tp(cfg);
+    let tp_bw = tp_bw_override().unwrap_or(spec.tp_bw);
+    let ring_tp = (tp.saturating_sub(1)) as f64 / tp.max(1) as f64;
+    let mut tp_total = 0.0f64;
+    let mut tp_exposed = 0.0f64;
+    for t in &summary.lanes.tp_links {
+        let d = ring_tp * t.bytes as f64 * b / tp_bw;
+        let c = census_seconds(t.cover.scale(b), spec, util);
+        tp_total += d;
+        tp_exposed += (d - c).max(0.0);
+    }
+
     LaneTimes {
         compute,
         hidden_recompute: hidden_s,
@@ -332,7 +384,9 @@ pub fn plan_lane_times(
         comm_exposed,
         host_total,
         host_exposed,
-        step: compute + comm_exposed + host_exposed,
+        tp_total,
+        tp_exposed,
+        step: compute + comm_exposed + host_exposed + tp_exposed,
     }
 }
 
@@ -438,11 +492,18 @@ mod tests {
         let plan = SchedulePlan::for_technique(&cfg, Technique::Baseline, true);
         for gpu in Gpu::all() {
             let lt = plan_lane_times(&cfg, &plan, &gpu.spec(), 4);
-            assert_eq!(lt.step, lt.compute + lt.comm_exposed + lt.host_exposed, "{}", gpu.name());
+            assert_eq!(
+                lt.step,
+                lt.compute + lt.comm_exposed + lt.host_exposed + lt.tp_exposed,
+                "{}",
+                gpu.name()
+            );
             assert!(lt.comm_exposed >= 0.0 && lt.comm_exposed <= lt.comm_total, "{}", gpu.name());
             assert_eq!(lt.hidden_recompute, 0.0, "no prefetches in a plain plan");
             assert_eq!(lt.host_total, 0.0, "no offload arms in a plain plan");
             assert_eq!(lt.host_exposed, 0.0, "no offload arms in a plain plan");
+            assert_eq!(lt.tp_total, 0.0, "no collectives in an unsharded plan");
+            assert_eq!(lt.tp_exposed, 0.0, "no collectives in an unsharded plan");
         }
         // the single-GPU box has an empty comm lane
         let solo = plan_lane_times(&cfg, &plan, &Gpu::A100.spec(), 4);
@@ -500,6 +561,34 @@ mod tests {
         assert!(
             plan_step_time(&cfg, &over, &spec, 4) < plan_step_time(&cfg, &serial, &spec, 4)
         );
+    }
+
+    #[test]
+    fn tp_exposure_is_bounded_and_the_collective_total_is_physical() {
+        let cfg = ModelConfig::bert_large().with_seq_len(512);
+        let plan = SchedulePlan::from_placement(
+            vec![crate::config::OptimizationSet::none(); cfg.layers],
+            vec![Residency::Shard; cfg.layers],
+            true,
+        )
+        .with_tp(8);
+        let spec = Gpu::A100.spec();
+        let lt = plan_lane_times(&cfg, &plan, &spec, 4);
+        assert!(lt.tp_total > 0.0);
+        assert!(lt.tp_exposed >= 0.0 && lt.tp_exposed <= lt.tp_total);
+        assert_eq!(lt.step, lt.compute + lt.comm_exposed + lt.host_exposed + lt.tp_exposed);
+        // the total is the ring share of the full-tensor payloads over
+        // the TP link, at batch 4
+        let summary = schedule_summary(&cfg, &plan);
+        assert!(!summary.lanes.tp_links.is_empty());
+        let shipped: u64 = summary.lanes.tp_links.iter().map(|t| t.bytes).sum();
+        let expect = (7.0 / 8.0) * shipped as f64 * 4.0 / spec.tp_bw;
+        assert!((lt.tp_total - expect).abs() < 1e-12 * expect.max(1.0));
+        // a faster scale-up link never raises exposure
+        let mut fast = spec;
+        fast.tp_bw *= 10.0;
+        let lt_fast = plan_lane_times(&cfg, &plan, &fast, 4);
+        assert!(lt_fast.tp_exposed <= lt.tp_exposed);
     }
 
     #[test]

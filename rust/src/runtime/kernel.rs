@@ -753,6 +753,13 @@ impl<'a> Interp<'a> {
                 Ok(())
             }
             EventKind::Backward => self.backward_op(e.segment, e.name),
+            // the numeric backend is single-shard: TP collectives model
+            // interconnect traffic the CPU interpreter has no peers for
+            EventKind::AllGather | EventKind::ReduceScatter => Err(Error::Backend(
+                "kernel backend: tensor-parallel plans (tp > 1) are model-only; \
+                 run the kernel backend on an unsharded plan"
+                    .into(),
+            )),
             EventKind::Optimizer => {
                 self.adam();
                 Ok(())

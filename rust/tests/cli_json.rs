@@ -107,6 +107,35 @@ fn schedule_json_reports_the_host_lane() {
 }
 
 #[test]
+fn schedule_json_reports_the_tp_lane() {
+    // --tp 2 on bert-tiny (2 heads): a sharded timeline with in-block
+    // all-gather/reduce-scatter events on the tp lane
+    let text = run(&["schedule", "bert-tiny", "--json", "--batch", "4", "--tp", "2"]);
+    let doc = Json::parse(&text).expect("schedule --json emits one JSON document");
+    assert_eq!(doc.req("tp").unwrap().as_usize().unwrap(), 2);
+    let total = doc.req("tp_total_s").unwrap().as_f64().unwrap();
+    let exposed = doc.req("tp_exposed_s").unwrap().as_f64().unwrap();
+    assert!(total > 0.0, "sharded timeline must pay collective time");
+    assert!((0.0..=total).contains(&exposed), "exposed {exposed} ∉ [0, {total}]");
+    let table = Table::from_json(doc.req("table").unwrap()).unwrap();
+    assert!(
+        table.rows.iter().any(|r| r[2] == "tp" && r[1] == "ag"),
+        "expected all-gather events on the tp lane"
+    );
+    assert!(
+        table.rows.iter().any(|r| r[2] == "tp" && r[1] == "rs"),
+        "expected reduce-scatter events on the tp lane"
+    );
+
+    // the unsharded default reports degree 1 and a zero tp lane
+    let text = run(&["schedule", "bert-tiny", "--json", "--batch", "4"]);
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.req("tp").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(doc.req("tp_total_s").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(doc.req("tp_exposed_s").unwrap().as_f64().unwrap(), 0.0);
+}
+
+#[test]
 fn placement_json_round_trips_and_matches_the_search() {
     let text = run(&["placement", "bert-tiny", "--json", "--gpu", "2080ti"]);
     let doc = Json::parse(&text).expect("placement --json emits one JSON document");
@@ -135,6 +164,10 @@ fn placement_json_round_trips_and_matches_the_search() {
         doc.req("candidates").unwrap().as_usize().unwrap(),
         d.stats.enumerated
     );
+    // shard-free default: degree 1, no sharded layers
+    assert_eq!(doc.req("tp").unwrap().as_usize().unwrap(), d.tp);
+    assert_eq!(d.tp, 1);
+    assert_eq!(doc.req("sharded_layers").unwrap().as_usize().unwrap(), 0);
 }
 
 #[test]

@@ -1,0 +1,152 @@
+//! Shared fixtures for the equivalence and search suites.
+//!
+//! The preset lists and the pre-refactor closed-form byte oracles were
+//! copy-pasted across `schedule_equivalence.rs`, `graph_equivalence.rs`,
+//! `residency_equivalence.rs` and `placement_search.rs`; they live here
+//! once. The oracles are **golden**: they are the pre-graph-refactor
+//! `memmodel` closed forms verbatim, and the equivalence suites compare
+//! the lowered folds against them bit-identically — do not "simplify"
+//! an expression here without re-deriving why every consumer still
+//! pins the same bits.
+
+// Each integration-test crate includes this module separately and uses
+// its own slice of the fixtures.
+#![allow(dead_code)]
+
+use tempo::config::{ModelConfig, ModelKind, OptimizationSet};
+
+pub const F32: u64 = 4;
+pub const MASK: u64 = 1;
+
+/// The batch grid every bit-identity suite sweeps.
+pub const BATCHES: [usize; 3] = [1, 4, 32];
+
+/// All paper presets plus the Fig 7/8 ablation shapes (widened/long
+/// variants) — the grid the closed-form equivalence suites sweep.
+pub fn presets_full() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large(),
+        ModelConfig::gpt2(),
+        ModelConfig::roberta_large(),
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+        // the Fig 7/8 ablation shapes exercise widened/long variants
+        ModelConfig::bert_base().with_hidden(2048).unwrap(),
+        ModelConfig::bert_large().with_layers(12).with_seq_len(1024),
+        ModelConfig::bert_large().with_seq_len(512),
+    ]
+}
+
+/// The lane-pricing grid: the small shapes plus the flagship and the
+/// GPT-2 special case — every plan family gets priced on each.
+pub fn presets_pricing() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large().with_seq_len(512),
+        ModelConfig::gpt2(),
+    ]
+}
+
+/// The placement-search grid: small enough that the joint family stays
+/// enumerable, plus the paper's memory-bound flagship.
+pub fn presets_search() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::bert_tiny(),
+        ModelConfig::bert_mini(),
+        ModelConfig::bert_base(),
+        ModelConfig::bert_large().with_seq_len(512),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Golden oracles: the pre-schedule closed forms, verbatim.
+// ---------------------------------------------------------------------------
+
+/// Per-encoder-layer (float, mask, stat) bytes — the pre-refactor
+/// `memmodel::layer` closed form.
+pub fn oracle_layer_bytes(
+    cfg: &ModelConfig,
+    batch: usize,
+    opts: OptimizationSet,
+) -> (u64, u64, u64) {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let a = cfg.heads as u64;
+    let i = cfg.intermediate as u64;
+    let bsh = b * s * h;
+    let bsi = b * s * i;
+    let bass = b * a * s * s;
+
+    let mut float_elems: u64 = 0;
+    let mut mask_bytes: u64 = 0;
+    let mut stat_bytes: u64 = 0;
+
+    float_elems += bsh; // x
+    float_elems += 3 * bsh; // Q, K, V
+    if !opts.softmax_outonly {
+        float_elems += bass; // scores
+        if cfg.kind == ModelKind::Gpt2 {
+            float_elems += 2 * bass; // HF unfused-attention copies
+        }
+    }
+    float_elems += bass; // softmax output
+    mask_bytes += bass * MASK; // attention dropout mask
+    if !opts.dropout_recompute {
+        float_elems += bass; // dropped probs
+    }
+    float_elems += bsh; // context
+    mask_bytes += bsh * MASK; // hidden dropout mask (proj)
+    if !opts.inplace_layernorm {
+        float_elems += bsh; // LN1 input
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    float_elems += bsh; // LN1 output
+    if opts.inplace_gelu {
+        mask_bytes += bsi * MASK;
+    } else {
+        float_elems += bsi; // GELU input
+    }
+    float_elems += bsi; // GELU output
+    mask_bytes += bsh * MASK; // hidden dropout mask (FC2)
+    if !opts.inplace_layernorm {
+        float_elems += bsh; // LN2 input
+        stat_bytes += 2 * b * s * F32;
+    } else {
+        stat_bytes += b * s * F32;
+    }
+    (float_elems * F32, mask_bytes, stat_bytes)
+}
+
+/// Embedding-block activation bytes (pre-refactor closed form).
+pub fn oracle_embedding_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize) -> u64 {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h };
+    (b * s * h + ln_in + b * s * h) * F32 + b * s * h * MASK
+}
+
+/// Head activation bytes (pre-refactor closed form; MLM vs fine-tune).
+pub fn oracle_head_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize, mlm: bool) -> u64 {
+    let b = batch as u64;
+    let s = cfg.seq_len as u64;
+    let h = cfg.hidden as u64;
+    if !mlm {
+        return 3 * b * h * F32;
+    }
+    let v = cfg.vocab_size as u64;
+    let gelu_in = if opts.inplace_gelu { b * s * h * MASK } else { b * s * h * F32 };
+    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h * F32 };
+    (3 * b * s * h + 2 * b * s * v) * F32 + gelu_in + ln_in
+}
+
+/// fp32 params + fp32 grads + Adam (m, v).
+pub fn oracle_states(cfg: &ModelConfig) -> u64 {
+    4 * cfg.param_count() as u64 * F32
+}

@@ -1,7 +1,7 @@
 //! Environment-knob contract (DESIGN.md §Lanes): `TEMPO_UTIL_K`,
-//! `TEMPO_AR_EXPOSE` and `TEMPO_HOST_BW` are parsed **once per
-//! process** (`OnceLock`), a malformed value is a startup error
-//! rather than a per-call panic,
+//! `TEMPO_AR_EXPOSE`, `TEMPO_HOST_BW` and `TEMPO_TP_BW` are parsed
+//! **once per process** (`OnceLock`), a malformed value is a startup
+//! error rather than a per-call panic,
 //! and `TEMPO_AR_EXPOSE` reproduces the legacy latency-blind pricing
 //! exactly.
 //!
@@ -61,7 +61,8 @@ fn tempo_cmd() -> Command {
     let mut c = Command::new(env!("CARGO_BIN_EXE_tempo"));
     c.env_remove("TEMPO_UTIL_K")
         .env_remove("TEMPO_AR_EXPOSE")
-        .env_remove("TEMPO_HOST_BW");
+        .env_remove("TEMPO_HOST_BW")
+        .env_remove("TEMPO_TP_BW");
     c
 }
 
@@ -78,6 +79,9 @@ fn malformed_knob_is_a_startup_error() {
         ("TEMPO_AR_EXPOSE", "-0.1"),
         ("TEMPO_HOST_BW", "-1e9"),
         ("TEMPO_HOST_BW", "NaN"),
+        ("TEMPO_TP_BW", "slow"),
+        ("TEMPO_TP_BW", "0"),
+        ("TEMPO_TP_BW", "-inf"),
     ] {
         let out = tempo_cmd()
             .args(["max-batch", "--model", "bert-tiny"])

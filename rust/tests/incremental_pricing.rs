@@ -14,7 +14,7 @@
 //! serial search at any worker count (parallel summarize/price cells,
 //! serial prune + selection fold in enumeration order).
 
-use tempo::autotempo::{placement_search_jobs, PlacementMode};
+use tempo::autotempo::{placement_search_jobs, PlacementMode, TpPolicy};
 use tempo::config::{Gpu, ModelConfig, OptimizationSet};
 use tempo::coordinator::ExperimentEngine;
 use tempo::graph::{self, CkptStyle, Lowering, Residency, SchedulePlan};
@@ -27,12 +27,15 @@ fn lcg(state: &mut u64) -> u64 {
     *state >> 33
 }
 
-/// Every per-layer residency arm the joint family places.
-const ARMS: [Residency; 4] = [
+/// Every per-layer residency arm the joint family places (the Shard
+/// arm resolves to Resident at shard degree 1, so it participates in
+/// the walk at every degree).
+const ARMS: [Residency; 5] = [
     Residency::Resident,
     Residency::Checkpoint(CkptStyle::Overlapped),
     Residency::Checkpoint(CkptStyle::Serial),
     Residency::Offload,
+    Residency::Shard,
 ];
 
 fn random_plan(layers: usize, rng: &mut u64) -> (Vec<OptimizationSet>, Vec<Residency>) {
@@ -47,31 +50,46 @@ fn random_plan(layers: usize, rng: &mut u64) -> (Vec<OptimizationSet>, Vec<Resid
 fn composed_pricing_matches_the_full_fold_under_random_arm_mutations() {
     for cfg in [ModelConfig::bert_tiny(), ModelConfig::bert_mini()] {
         let lowering = Lowering::for_model(&cfg);
+        // the shard degrees this model's dimensions divide by, plus 1
+        let degrees: Vec<usize> =
+            [1usize, 2, 4, 8].into_iter().filter(|&d| cfg.tp_permitted(d)).collect();
         let mut rng: u64 = 0x7e3b_0a11 + cfg.layers as u64;
         let (mut per_layer, mut residency) = random_plan(cfg.layers, &mut rng);
+        let mut tp = 1usize;
         for step in 0..40 {
-            let plan = SchedulePlan::from_placement(per_layer.clone(), residency.clone(), true);
+            let plan = SchedulePlan::from_placement(per_layer.clone(), residency.clone(), true)
+                .with_tp(tp);
             let composed = graph::schedule_summary(&cfg, &plan);
             let full = graph::lower_step(&cfg, &plan, lowering).summarize_step();
             // full PartialEq: peak/high-water/class vectors/census/
             // events/lanes — everything `plan_lane_times` and the
             // dominance keys are computed from
-            assert_eq!(*composed, full, "{} walk step {step}: composed != full fold", cfg.name);
+            assert_eq!(
+                *composed, full,
+                "{} walk step {step} tp {tp}: composed != full fold",
+                cfg.name
+            );
             for b in [1usize, 4, 32] {
                 assert_eq!(
                     composed.peak_bytes(b),
                     full.peak_bytes(b),
-                    "{} walk step {step}: peak diverges at B={b}",
+                    "{} walk step {step} tp {tp}: peak diverges at B={b}",
                     cfg.name
                 );
             }
-            // mutate ONE layer's arm — the O(Δ-layer) re-pricing shape
-            let l = (lcg(&mut rng) as usize) % cfg.layers;
-            if lcg(&mut rng) % 2 == 0 {
-                let subsets = OptimizationSet::all_subsets();
-                per_layer[l] = subsets[(lcg(&mut rng) as usize) % subsets.len()];
-            } else {
-                residency[l] = ARMS[(lcg(&mut rng) as usize) % ARMS.len()];
+            // mutate ONE layer's arm (or the plan-wide shard degree) —
+            // the O(Δ-layer) re-pricing shape
+            match lcg(&mut rng) % 3 {
+                0 => {
+                    let l = (lcg(&mut rng) as usize) % cfg.layers;
+                    let subsets = OptimizationSet::all_subsets();
+                    per_layer[l] = subsets[(lcg(&mut rng) as usize) % subsets.len()];
+                }
+                1 => {
+                    let l = (lcg(&mut rng) as usize) % cfg.layers;
+                    residency[l] = ARMS[(lcg(&mut rng) as usize) % ARMS.len()];
+                }
+                _ => tp = degrees[(lcg(&mut rng) as usize) % degrees.len()],
             }
         }
     }
@@ -94,7 +112,7 @@ fn lane_pricing_through_the_composed_summary_is_deterministic() {
                 assert!(lt.step.is_finite(), "{} x{devices} B={b}", gpu.name());
                 assert_eq!(
                     lt.step,
-                    lt.compute + lt.comm_exposed + lt.host_exposed,
+                    lt.compute + lt.comm_exposed + lt.host_exposed + lt.tp_exposed,
                     "{} x{devices} B={b}: lanes must decompose the step",
                     gpu.name()
                 );
@@ -110,14 +128,15 @@ fn parallel_placement_search_is_bit_identical_to_serial() {
     let cfg = ModelConfig::bert_mini();
     let serial = ExperimentEngine::new(1);
     let par = ExperimentEngine::new(4);
-    for (mode, target) in [
-        (PlacementMode::Uniform, None),
-        (PlacementMode::Joint, None),
-        (PlacementMode::Joint, Some(8)),
+    for (mode, tp, target) in [
+        (PlacementMode::Uniform, TpPolicy::Fixed(1), None),
+        (PlacementMode::Joint, TpPolicy::Fixed(1), None),
+        (PlacementMode::Joint, TpPolicy::Fixed(1), Some(8)),
+        (PlacementMode::Joint, TpPolicy::Auto, None),
     ] {
-        let a = placement_search_jobs(&cfg, Gpu::Rtx2080Ti, mode, target, true, &serial);
-        let b = placement_search_jobs(&cfg, Gpu::Rtx2080Ti, mode, target, true, &par);
-        let what = format!("{} target={target:?}", mode.name());
+        let a = placement_search_jobs(&cfg, Gpu::Rtx2080Ti, mode, tp, target, true, &serial);
+        let b = placement_search_jobs(&cfg, Gpu::Rtx2080Ti, mode, tp, target, true, &par);
+        let what = format!("{} tp={tp:?} target={target:?}", mode.name());
         assert_eq!(a.plan, b.plan, "{what}: winners diverged");
         assert_eq!(a.max_batch, b.max_batch, "{what}");
         assert_eq!(a.eval_batch, b.eval_batch, "{what}");

@@ -24,20 +24,25 @@
 //!    checkpointing peaks exactly `min(head, inventory)` below the
 //!    overlapped schedule; the same delta shows through the uniform
 //!    plans the search enumerates.
+//! 5. **Tensor-parallel degrees win the big-card capacity query** —
+//!    on the A100 box every shard degree divides the per-device
+//!    inventory and the vocab-parallel head's B·S·V logits, so
+//!    `TpPolicy::Auto` must select a degree > 1 whose max batch
+//!    strictly exceeds the best tp=1 plan's — the ISSUE 10 acceptance
+//!    pin. The dominance prune stays lossless with the shard axis in
+//!    the family (degrees never cross-compare).
 
-use tempo::autotempo::{placement_search, placement_search_with, LayerPlan, PlacementMode};
+use tempo::autotempo::{
+    placement_search, placement_search_jobs, placement_search_tp, placement_search_with,
+    LayerPlan, PlacementMode, TpPolicy,
+};
 use tempo::config::{Gpu, ModelConfig, OptimizationSet};
+use tempo::coordinator::ExperimentEngine;
 use tempo::graph::{encoder_summary, head_summary, CkptStyle, Residency};
 use tempo::memmodel::{max_batch, max_batch_for_plan};
 
-fn presets() -> Vec<ModelConfig> {
-    vec![
-        ModelConfig::bert_tiny(),
-        ModelConfig::bert_mini(),
-        ModelConfig::bert_base(),
-        ModelConfig::bert_large().with_seq_len(512),
-    ]
-}
+mod common;
+use common::presets_search as presets;
 
 const TARGETS: [usize; 3] = [1, 4, 32];
 
@@ -159,6 +164,96 @@ fn memory_bound_capacity_query_is_won_by_an_offload_arm() {
     // ... and ≥ every single-technique plan
     for t in tempo::config::Technique::all() {
         assert!(d.max_batch >= max_batch(&cfg, t, gpu).max_batch, "{t:?}");
+    }
+}
+
+#[test]
+fn tp_auto_wins_the_a100_capacity_query() {
+    // ISSUE 10 acceptance pin: bert-large @ S=512 on the 40 GB A100.
+    // Sharding divides both the encoder inventory and the vocab-
+    // parallel head's B·S·V logits by the degree, while the best tp=1
+    // plan is floored by its unshardable head activations — Auto must
+    // pick a degree > 1 and strictly beat the tp=1 capacity winner.
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let tp1 = placement_search(&cfg, Gpu::A100, PlacementMode::Joint, None);
+    assert_eq!(tp1.tp, 1, "the legacy entry point must stay shard-free");
+    let auto = placement_search_tp(&cfg, Gpu::A100, PlacementMode::Joint, TpPolicy::Auto, None);
+    assert!(auto.tp > 1, "auto capacity winner stayed at tp 1: {}", auto.rationale);
+    assert!(
+        auto.max_batch > tp1.max_batch,
+        "tp {} max batch {} !> tp 1 max batch {}  ({})",
+        auto.tp,
+        auto.max_batch,
+        tp1.max_batch,
+        auto.rationale
+    );
+    // the winner really lowers sharded: its plan resolves to the
+    // reported degree, and the degree is one the model's dims divide
+    let sp = auto.plan.schedule_plan();
+    assert_eq!(sp.resolved_tp(&cfg), auto.tp);
+    assert!(cfg.tp_permitted(auto.tp));
+}
+
+#[test]
+fn tp_auto_never_below_the_fixed_degree_searches() {
+    // Auto explores the union of the per-degree families, so its
+    // capacity can never fall below any fixed degree's
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let auto = placement_search_tp(&cfg, Gpu::A100, PlacementMode::Joint, TpPolicy::Auto, None);
+    for d in [1usize, 2, 4, 8] {
+        let fixed =
+            placement_search_tp(&cfg, Gpu::A100, PlacementMode::Joint, TpPolicy::Fixed(d), None);
+        assert!(
+            auto.max_batch >= fixed.max_batch,
+            "auto {} < fixed tp {d} {}",
+            auto.max_batch,
+            fixed.max_batch
+        );
+    }
+}
+
+#[test]
+fn dominance_pruning_is_lossless_at_auto_shard_degrees() {
+    // the shard axis adds per-degree families to the prune; degrees
+    // never cross-compare (the DomKey carries the resolved degree), so
+    // the pruned Auto search must still reach the exhaustive decision
+    let cfg = ModelConfig::bert_mini();
+    let engine = ExperimentEngine::new(1);
+    for target in [None, Some(4), Some(100_000)] {
+        let pruned = placement_search_jobs(
+            &cfg,
+            Gpu::A100,
+            PlacementMode::Joint,
+            TpPolicy::Auto,
+            target,
+            true,
+            &engine,
+        );
+        let full = placement_search_jobs(
+            &cfg,
+            Gpu::A100,
+            PlacementMode::Joint,
+            TpPolicy::Auto,
+            target,
+            false,
+            &engine,
+        );
+        assert_eq!(
+            pruned.plan, full.plan,
+            "target {target:?}: pruned and exhaustive disagree\n  pruned: {}\n  full:   {}",
+            pruned.rationale, full.rationale
+        );
+        assert_eq!(pruned.max_batch, full.max_batch, "target {target:?}");
+        assert_eq!(pruned.tp, full.tp, "target {target:?}");
+        assert!(
+            (pruned.throughput - full.throughput).abs() == 0.0,
+            "target {target:?}: throughput drifted"
+        );
+        assert!(pruned.stats.pruned > 0, "target {target:?}");
+        assert_eq!(
+            pruned.stats.enumerated, full.stats.enumerated,
+            "same candidate family either way"
+        );
     }
 }
 

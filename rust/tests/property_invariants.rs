@@ -256,7 +256,7 @@ fn prop_exposure_bounded_by_collective_total() {
         );
         assert_eq!(
             lt.step,
-            lt.compute + lt.comm_exposed + lt.host_exposed,
+            lt.compute + lt.comm_exposed + lt.host_exposed + lt.tp_exposed,
             "case {i}: lanes must sum to the step"
         );
         assert!(lt.hidden_recompute >= 0.0, "case {i}");
@@ -462,6 +462,139 @@ fn prop_offload_free_plans_price_a_zero_host_lane() {
             }
         }
     }
+}
+
+/// The shard degrees `cfg`'s dimensions divide by (always includes 1).
+fn permitted_degrees(cfg: &ModelConfig) -> Vec<usize> {
+    [1usize, 2, 4, 8].into_iter().filter(|&d| cfg.tp_permitted(d)).collect()
+}
+
+#[test]
+fn prop_peak_monotone_non_increasing_in_shard_degree() {
+    // a higher permitted degree shards every per-item inventory and the
+    // vocab-parallel head by a larger factor while the unsharded model
+    // states stay fixed, so the per-device timeline peak can never grow
+    // as the degree rises
+    let check = |cfg: &ModelConfig, b: u64| {
+        let n = cfg.layers;
+        let mut prev = u64::MAX;
+        for d in permitted_degrees(cfg) {
+            let plan = residency_plan(cfg, vec![Residency::Shard; n]).with_tp(d);
+            assert_eq!(plan.resolved_tp(cfg), d);
+            let peak = schedule_summary(cfg, &plan).peak_bytes(b);
+            assert!(
+                peak <= prev,
+                "{} B={b}: tp {d} raised the peak {prev} -> {peak}",
+                cfg.name
+            );
+            prev = peak;
+        }
+    };
+    for cfg in [ModelConfig::bert_mini(), ModelConfig::bert_large().with_seq_len(512)] {
+        for b in [1u64, 4, 32] {
+            check(&cfg, b);
+        }
+    }
+    cases(40, 12, |rng, _| {
+        let cfg = random_config(rng);
+        check(&cfg, rng.range(1, 17) as u64);
+    });
+}
+
+#[test]
+fn prop_tp_exposure_monotone_in_link_slowness() {
+    // a faster TP link shortens every collective, so the lane total
+    // strictly falls and the per-collective unhidden tails never grow
+    // (the covering compute windows are bandwidth-free)
+    let cfg = ModelConfig::bert_large().with_seq_len(512);
+    let n = cfg.layers;
+    let plan = residency_plan(&cfg, vec![Residency::Shard; n]).with_tp(8);
+    for b in [1usize, 4] {
+        let mut prev_total = f64::INFINITY;
+        let mut prev_exposed = f64::INFINITY;
+        for bw in [10.0e9, 65.0e9, 250.0e9, 600.0e9, 2.4e12] {
+            let mut spec = Gpu::A100.spec();
+            spec.tp_bw = bw;
+            let lt = plan_lane_times(&cfg, &plan, &spec, b);
+            assert!(lt.tp_total < prev_total, "bw {bw} B={b}: total not strictly decreasing");
+            assert!(
+                lt.tp_exposed <= prev_exposed,
+                "bw {bw} B={b}: exposure grew as the link sped up"
+            );
+            prev_total = lt.tp_total;
+            prev_exposed = lt.tp_exposed;
+        }
+    }
+}
+
+#[test]
+fn prop_tp_exposure_bounded_by_the_collective_total() {
+    // each collective pays max(0, d − cover): never negative, never
+    // more than its own raw transfer time — so the lane sum is bounded
+    // by the raw total, and the four lanes decompose the step exactly
+    cases(60, 13, |rng, i| {
+        let cfg = random_config(rng);
+        let degrees = permitted_degrees(&cfg);
+        let d = degrees[rng.below(degrees.len())];
+        let gpu = Gpu::all()[rng.below(3)];
+        let b = rng.range(1, 16);
+        let n = cfg.layers;
+        let plan = residency_plan(&cfg, vec![Residency::Shard; n]).with_tp(d);
+        let lt = plan_lane_times(&cfg, &plan, &gpu.spec(), b);
+        assert!(
+            lt.tp_exposed >= 0.0 && lt.tp_exposed <= lt.tp_total,
+            "case {i}: exposed {} ∉ [0, {}]",
+            lt.tp_exposed,
+            lt.tp_total
+        );
+        assert_eq!(
+            lt.step,
+            lt.compute + lt.comm_exposed + lt.host_exposed + lt.tp_exposed,
+            "case {i}: lanes must sum to the step"
+        );
+        if d > 1 {
+            assert!(lt.tp_total > 0.0, "case {i}: sharded plan priced a silent tp lane");
+        } else {
+            assert_eq!(lt.tp_total, 0.0, "case {i}: unsharded plan priced a tp lane");
+        }
+    });
+}
+
+#[test]
+fn prop_degree_one_pricing_is_the_pre_tp_fold() {
+    // random mixed plans at shard degree 1 (Shard arms resolve to
+    // Resident) price with a zero TP lane and the pre-TP three-lane
+    // step decomposition, and an explicit with_tp(1) is bit-identical
+    // to the default (the verbatim-oracle pin is
+    // tests/tp_equivalence.rs; this is its random-plan closure)
+    let arms = [
+        Residency::Resident,
+        Residency::Checkpoint(CkptStyle::Overlapped),
+        Residency::Checkpoint(CkptStyle::Serial),
+        Residency::Offload,
+        Residency::Shard,
+    ];
+    cases(60, 14, |rng, i| {
+        let cfg = random_config(rng);
+        let subsets = OptimizationSet::all_subsets();
+        let per_layer: Vec<OptimizationSet> =
+            (0..cfg.layers).map(|_| subsets[rng.below(subsets.len())]).collect();
+        let residency: Vec<Residency> =
+            (0..cfg.layers).map(|_| arms[rng.below(arms.len())]).collect();
+        let plan = SchedulePlan::from_placement(per_layer, residency, true);
+        let b = rng.range(1, 16);
+        let gpu = Gpu::all()[rng.below(3)];
+        let lt = plan_lane_times(&cfg, &plan, &gpu.spec(), b);
+        assert_eq!(lt.tp_total, 0.0, "case {i}");
+        assert_eq!(lt.tp_exposed, 0.0, "case {i}");
+        assert_eq!(
+            lt.step,
+            lt.compute + lt.comm_exposed + lt.host_exposed,
+            "case {i}: degree-1 step must decompose over three lanes"
+        );
+        let explicit = plan_lane_times(&cfg, &plan.clone().with_tp(1), &gpu.spec(), b);
+        assert_eq!(lt, explicit, "case {i}: with_tp(1) diverged from the default");
+    });
 }
 
 #[test]

@@ -15,6 +15,9 @@ use tempo::config::{Gpu, GpuSpec, ModelConfig, OptimizationSet, Technique};
 use tempo::graph::{schedule_summary, Census, CkptStyle, Residency, SchedulePlan};
 use tempo::perfmodel::{plan_census, plan_lane_times, utilization, OpCensus, OVERLAP_EFF};
 
+mod common;
+use common::presets_pricing as presets;
+
 /// PR 6 compute-lane core: seconds of a batch-scaled census.
 fn census_seconds(c: Census, spec: &GpuSpec, util: f64) -> f64 {
     c.matmul_flops / (spec.peak_matmul_flops * util)
@@ -71,16 +74,6 @@ fn pr6_lane_times(
     };
 
     (compute, hidden_s, comm_total, comm_exposed, compute + comm_exposed)
-}
-
-fn presets() -> Vec<ModelConfig> {
-    vec![
-        ModelConfig::bert_tiny(),
-        ModelConfig::bert_mini(),
-        ModelConfig::bert_base(),
-        ModelConfig::bert_large().with_seq_len(512),
-        ModelConfig::gpt2(),
-    ]
 }
 
 /// Every offload-free plan family: the three technique plans, their

@@ -31,113 +31,15 @@
 //! untouched. `calibration_paper.rs` remains green unchanged.
 
 use tempo::autotempo::LayerPlan;
-use tempo::config::{Gpu, ModelConfig, ModelKind, OptimizationSet, Technique};
+use tempo::config::{Gpu, ModelConfig, OptimizationSet, Technique};
 use tempo::graph::{lower_step, schedule_summary, EventKind, Lowering, MemClass, SchedulePlan};
 use tempo::memmodel::{max_batch, ModelFootprint};
 
-const F32: u64 = 4;
-const MASK: u64 = 1;
-
-fn presets() -> Vec<ModelConfig> {
-    vec![
-        ModelConfig::bert_base(),
-        ModelConfig::bert_large(),
-        ModelConfig::gpt2(),
-        ModelConfig::roberta_large(),
-        ModelConfig::bert_tiny(),
-        ModelConfig::bert_mini(),
-        // the Fig 7/8 ablation shapes exercise widened/long variants
-        ModelConfig::bert_base().with_hidden(2048).unwrap(),
-        ModelConfig::bert_large().with_layers(12).with_seq_len(1024),
-        ModelConfig::bert_large().with_seq_len(512),
-    ]
-}
-
-const BATCHES: [usize; 3] = [1, 4, 32];
-
-// ---------------------------------------------------------------------------
-// Golden oracles: the pre-schedule closed forms, verbatim.
-// ---------------------------------------------------------------------------
-
-/// Per-encoder-layer (float, mask, stat) bytes — the pre-refactor
-/// `memmodel::layer` closed form.
-fn oracle_layer_bytes(cfg: &ModelConfig, batch: usize, opts: OptimizationSet) -> (u64, u64, u64) {
-    let b = batch as u64;
-    let s = cfg.seq_len as u64;
-    let h = cfg.hidden as u64;
-    let a = cfg.heads as u64;
-    let i = cfg.intermediate as u64;
-    let bsh = b * s * h;
-    let bsi = b * s * i;
-    let bass = b * a * s * s;
-
-    let mut float_elems: u64 = 0;
-    let mut mask_bytes: u64 = 0;
-    let mut stat_bytes: u64 = 0;
-
-    float_elems += bsh; // x
-    float_elems += 3 * bsh; // Q, K, V
-    if !opts.softmax_outonly {
-        float_elems += bass; // scores
-        if cfg.kind == ModelKind::Gpt2 {
-            float_elems += 2 * bass; // HF unfused-attention copies
-        }
-    }
-    float_elems += bass; // softmax output
-    mask_bytes += bass * MASK; // attention dropout mask
-    if !opts.dropout_recompute {
-        float_elems += bass; // dropped probs
-    }
-    float_elems += bsh; // context
-    mask_bytes += bsh * MASK; // hidden dropout mask (proj)
-    if !opts.inplace_layernorm {
-        float_elems += bsh; // LN1 input
-        stat_bytes += 2 * b * s * F32;
-    } else {
-        stat_bytes += b * s * F32;
-    }
-    float_elems += bsh; // LN1 output
-    if opts.inplace_gelu {
-        mask_bytes += bsi * MASK;
-    } else {
-        float_elems += bsi; // GELU input
-    }
-    float_elems += bsi; // GELU output
-    mask_bytes += bsh * MASK; // hidden dropout mask (FC2)
-    if !opts.inplace_layernorm {
-        float_elems += bsh; // LN2 input
-        stat_bytes += 2 * b * s * F32;
-    } else {
-        stat_bytes += b * s * F32;
-    }
-    (float_elems * F32, mask_bytes, stat_bytes)
-}
-
-fn oracle_embedding_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize) -> u64 {
-    let b = batch as u64;
-    let s = cfg.seq_len as u64;
-    let h = cfg.hidden as u64;
-    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h };
-    (b * s * h + ln_in + b * s * h) * F32 + b * s * h * MASK
-}
-
-fn oracle_head_bytes(cfg: &ModelConfig, opts: OptimizationSet, batch: usize, mlm: bool) -> u64 {
-    let b = batch as u64;
-    let s = cfg.seq_len as u64;
-    let h = cfg.hidden as u64;
-    if !mlm {
-        return 3 * b * h * F32;
-    }
-    let v = cfg.vocab_size as u64;
-    let gelu_in = if opts.inplace_gelu { b * s * h * MASK } else { b * s * h * F32 };
-    let ln_in = if opts.inplace_layernorm { 0 } else { b * s * h * F32 };
-    (3 * b * s * h + 2 * b * s * v) * F32 + gelu_in + ln_in
-}
-
-/// fp32 params + fp32 grads + Adam (m, v).
-fn oracle_states(cfg: &ModelConfig) -> u64 {
-    4 * cfg.param_count() as u64 * F32
-}
+mod common;
+use common::{
+    oracle_embedding_bytes, oracle_head_bytes, oracle_layer_bytes, oracle_states,
+    presets_full as presets, BATCHES, F32,
+};
 
 /// The pre-schedule `Breakdown::total()` for Baseline/Tempo/subsets:
 /// static sum with the hand-written `2 × widest` transient.

@@ -1,0 +1,253 @@
+//! ISSUE 10 tentpole pin: the tensor-parallel lane is **invisible** at
+//! shard degree 1. This file embeds the pre-TP `plan_lane_times` fold
+//! verbatim as a golden oracle — the PR 8/9 model with compute, comm
+//! and host lanes but no TP lane; same expressions, same association
+//! order, so equality below is float *bit*-identity, not tolerance —
+//! and checks every degree-1 plan family the search can produce
+//! against it across presets × techniques × residency arms × rigs ×
+//! batches. A plan that resolves to shard degree 1 (the default, an
+//! explicit `with_tp(1)`, an impermissible degree, or `Residency::
+//! Shard` arms resolving to `Resident`) must price exactly as it did
+//! before the TP lane existed, and its lowered timeline must carry no
+//! all-gather/reduce-scatter event the old lowering would not have
+//! emitted.
+//!
+//! (The style of `tests/residency_equivalence.rs`: an independently
+//! written model of the old behavior, not a snapshot of numbers.)
+
+use tempo::config::{Gpu, GpuSpec, ModelConfig, OptimizationSet, Technique};
+use tempo::graph::{schedule_summary, Census, CkptStyle, EventKind, Lowering, Residency, SchedulePlan};
+use tempo::perfmodel::{plan_census, plan_lane_times, utilization, OpCensus, OVERLAP_EFF};
+
+mod common;
+use common::presets_pricing as presets;
+
+/// Pre-TP compute-lane core: seconds of a batch-scaled census.
+fn census_seconds(c: Census, spec: &GpuSpec, util: f64) -> f64 {
+    c.matmul_flops / (spec.peak_matmul_flops * util)
+        + c.vector_flops / (spec.peak_vector_flops * 0.6)
+        + c.vector_bytes / (spec.bandwidth * 0.75)
+}
+
+/// Pre-TP full-step census fold (matmul + vector + state streams).
+fn opcensus_seconds(census: &OpCensus, spec: &GpuSpec, util: f64) -> f64 {
+    let t_matmul = census.matmul_flops / (spec.peak_matmul_flops * util);
+    let t_vector = census.vector_flops / (spec.peak_vector_flops * 0.6)
+        + census.vector_bytes / (spec.bandwidth * 0.75);
+    let t_state = census.state_bytes / (spec.bandwidth * 0.75);
+    t_matmul + t_vector + t_state
+}
+
+/// The PR 8/9 lane fold, verbatim: compute lane with the
+/// prefetch-hidden credit, bucketed ring all-reduce with the carrying
+/// exposure fold, host lane with the store-lag/load-tail fold — and no
+/// TP lane, because it did not exist. Returns
+/// `(compute, hidden, comm_total, comm_exposed, host_total,
+/// host_exposed, step)`.
+#[allow(clippy::type_complexity)]
+fn pre_tp_lane_times(
+    cfg: &ModelConfig,
+    plan: &SchedulePlan,
+    spec: &GpuSpec,
+    batch: usize,
+) -> (f64, f64, f64, f64, f64, f64, f64) {
+    let b = batch as f64;
+    let tokens = b * cfg.seq_len as f64;
+    let util = utilization(spec, tokens);
+    let total = plan_census(cfg, plan, batch);
+    let total_s = opcensus_seconds(&total, spec, util);
+    let t_fixed = 0.7e-3 + cfg.layers as f64 * 60.0e-6;
+
+    let summary = schedule_summary(cfg, plan);
+    let hidden_s = OVERLAP_EFF * census_seconds(summary.lanes.hidden.scale(b), spec, util);
+    let compute = total_s - hidden_s + t_fixed;
+
+    let (comm_total, comm_exposed) = match spec.allreduce_bw {
+        Some(bw) if spec.devices > 1 => {
+            let ring = 2.0 * (spec.devices as f64 - 1.0) / spec.devices as f64;
+            let durs: Vec<f64> =
+                summary.lanes.buckets.iter().map(|bk| ring * bk.bytes as f64 / bw).collect();
+            let total_comm: f64 = durs.iter().sum();
+            let mut exposed = 0.0f64;
+            let mut remaining = total_comm;
+            for (bk, d) in summary.lanes.buckets.iter().zip(&durs) {
+                let lag = census_seconds(bk.tail.scale(b), spec, util);
+                exposed = exposed.max(remaining - lag);
+                remaining -= d;
+            }
+            (total_comm, exposed.max(0.0))
+        }
+        _ => (0.0, 0.0),
+    };
+
+    let host_bw = spec.host_link_bw;
+    let mut host_total = 0.0f64;
+    let mut store_lag = 0.0f64;
+    for t in &summary.lanes.stores {
+        let d = t.bytes as f64 * b / host_bw;
+        let c = census_seconds(t.cover.scale(b), spec, util);
+        host_total += d;
+        store_lag = (store_lag + d - c).max(0.0);
+    }
+    let mut load_exposed = 0.0f64;
+    for t in &summary.lanes.loads {
+        let d = t.bytes as f64 * b / host_bw;
+        let c = census_seconds(t.cover.scale(b), spec, util);
+        host_total += d;
+        load_exposed += (d - c).max(0.0);
+    }
+    let host_exposed = store_lag + load_exposed;
+
+    (
+        compute,
+        hidden_s,
+        comm_total,
+        comm_exposed,
+        host_total,
+        host_exposed,
+        compute + comm_exposed + host_exposed,
+    )
+}
+
+/// Every plan family that resolves to shard degree 1: the technique
+/// plans and their serial twins, uniform rewrite plans, mixed
+/// checkpoint placements, offload placements, `Shard` arms at the
+/// default degree (they resolve to `Resident`), an explicit
+/// `with_tp(1)`, and an impermissible degree (resolves to 1).
+fn degree_one_plans(cfg: &ModelConfig) -> Vec<(String, SchedulePlan)> {
+    let n = cfg.layers;
+    let mut plans: Vec<(String, SchedulePlan)> = Vec::new();
+    for t in Technique::all() {
+        let p = SchedulePlan::for_technique(cfg, t, true);
+        plans.push((format!("{t:?}/serial"), p.clone().serial()));
+        plans.push((format!("{t:?}"), p));
+    }
+    plans.push(("none".into(), SchedulePlan::uniform(cfg, OptimizationSet::none(), true)));
+    // mixed residency: every arm family in one placement
+    let mut residency = vec![Residency::Resident; n];
+    for (l, arm) in residency.iter_mut().enumerate() {
+        *arm = match l % 4 {
+            0 => Residency::Checkpoint(CkptStyle::Overlapped),
+            1 => Residency::Offload,
+            2 => Residency::Checkpoint(CkptStyle::Serial),
+            _ => Residency::Resident,
+        };
+    }
+    plans.push((
+        "mixed".into(),
+        SchedulePlan::from_placement(vec![OptimizationSet::full(); n], residency, true),
+    ));
+    // Shard arms at degree 1 resolve to Resident
+    plans.push((
+        "shard-arms-tp1".into(),
+        SchedulePlan::from_placement(
+            vec![OptimizationSet::full(); n],
+            vec![Residency::Shard; n],
+            true,
+        ),
+    ));
+    // explicit degree 1, and a degree the model's dims do not divide
+    // (7 divides no preset's head count) — both resolve to 1
+    let base = SchedulePlan::uniform(cfg, OptimizationSet::full(), true);
+    plans.push(("with-tp-1".into(), base.clone().with_tp(1)));
+    plans.push(("with-tp-7".into(), base.with_tp(7)));
+    plans
+}
+
+#[test]
+fn degree_one_plans_price_bit_identically_to_the_pre_tp_fold() {
+    for cfg in presets() {
+        for (label, plan) in degree_one_plans(&cfg) {
+            assert_eq!(plan.resolved_tp(&cfg), 1, "{}: fixture must resolve unsharded", label);
+            for gpu in Gpu::all() {
+                let spec = gpu.spec();
+                for b in [1usize, 4, 32] {
+                    let lt = plan_lane_times(&cfg, &plan, &spec, b);
+                    let (compute, hidden, comm_total, comm_exposed, host_total, host_exposed, step) =
+                        pre_tp_lane_times(&cfg, &plan, &spec, b);
+                    let ctx = format!("{} {} B={b} plan={label}", cfg.name, gpu.name());
+                    assert_eq!(lt.compute, compute, "{ctx}");
+                    assert_eq!(lt.hidden_recompute, hidden, "{ctx}");
+                    assert_eq!(lt.comm_total, comm_total, "{ctx}");
+                    assert_eq!(lt.comm_exposed, comm_exposed, "{ctx}");
+                    assert_eq!(lt.host_total, host_total, "{ctx}");
+                    assert_eq!(lt.host_exposed, host_exposed, "{ctx}");
+                    assert_eq!(lt.tp_total, 0.0, "{ctx}");
+                    assert_eq!(lt.tp_exposed, 0.0, "{ctx}");
+                    assert_eq!(lt.step, step, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn degree_one_timelines_have_no_tp_lane_events() {
+    // the lowering side of the same pin: a plan that resolves to shard
+    // degree 1 produces a schedule whose TP collective list is empty
+    // and whose event tape carries no all-gather/reduce-scatter — there
+    // is no event the pre-TP lowering would not have emitted
+    for cfg in presets() {
+        for (label, plan) in degree_one_plans(&cfg) {
+            let s = schedule_summary(&cfg, &plan);
+            assert!(s.lanes.tp_links.is_empty(), "{} {label}", cfg.name);
+            let schedule = tempo::graph::lower_step(&cfg, &plan, Lowering::for_model(&cfg));
+            assert!(
+                !schedule
+                    .events
+                    .iter()
+                    .any(|e| matches!(e.kind, EventKind::AllGather | EventKind::ReduceScatter)),
+                "{} {label}: tp collectives in an unsharded tape",
+                cfg.name
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_arms_at_degree_one_are_resident_bit_identically() {
+    // `Residency::Shard` is meaningful only under a resolved degree;
+    // at degree 1 the whole summary (peak, classes, census, lanes) must
+    // equal the all-Resident plan's — this is what lets the search keep
+    // the Shard arm in the walk at every degree
+    for cfg in presets() {
+        for subset in [OptimizationSet::none(), OptimizationSet::full()] {
+            let n = cfg.layers;
+            let shard = SchedulePlan::from_placement(
+                vec![subset; n],
+                vec![Residency::Shard; n],
+                true,
+            );
+            let resident = SchedulePlan::from_placement(
+                vec![subset; n],
+                vec![Residency::Resident; n],
+                true,
+            );
+            let a = schedule_summary(&cfg, &shard);
+            let b = schedule_summary(&cfg, &resident);
+            assert_eq!(*a, *b, "{} {subset:?}", cfg.name);
+            for batch in [1u64, 4, 32] {
+                assert_eq!(a.peak_bytes(batch), b.peak_bytes(batch), "{} B={batch}", cfg.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn impermissible_degrees_price_as_the_unsharded_plan() {
+    // bert-tiny has 2 heads: degrees 4 and 8 do not divide, so the
+    // resolved degree is 1 and pricing is bit-identical to the default
+    let cfg = ModelConfig::bert_tiny();
+    let base = SchedulePlan::uniform(&cfg, OptimizationSet::full(), true);
+    for d in [4usize, 8] {
+        let forced = base.clone().with_tp(d);
+        assert_eq!(forced.resolved_tp(&cfg), 1);
+        assert_eq!(*schedule_summary(&cfg, &forced), *schedule_summary(&cfg, &base));
+        for gpu in Gpu::all() {
+            let spec = gpu.spec();
+            let lt = plan_lane_times(&cfg, &forced, &spec, 4);
+            let lt_base = plan_lane_times(&cfg, &base, &spec, 4);
+            assert_eq!(lt, lt_base, "{} tp {d}", gpu.name());
+        }
+    }
+}
